@@ -1,0 +1,115 @@
+"""AOT lowering: jax (L2+L1) -> HLO *text* artifacts for the rust runtime.
+
+Interchange format is HLO text, NOT a serialized HloModuleProto: jax >= 0.5
+emits protos with 64-bit instruction ids which the published xla crate's
+xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``). The text parser
+reassigns ids, so text round-trips cleanly (see /opt/xla-example/README.md).
+
+Each artifact is a fixed-shape variant; the rust side (runtime/artifacts.rs)
+reads ``artifacts/manifest.tsv`` to discover what was built and pads its
+batches to fit. ``make artifacts`` is the only time python runs — nothing
+here is on the request path.
+
+Usage: python -m compile.aot --out-dir ../artifacts
+"""
+
+import argparse
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+# (P pairs, N instances, B bins, row-tile) variants to build. The defaults
+# cover: the big tile the hp/vp hot path uses, a small tile so short batches
+# don't pay 32x padding, and a tiny tile for integration tests.
+VARIANTS = [
+    # (P,  N,    B,  block_n)
+    (32, 8192, 32, 2048),
+    (8, 8192, 32, 2048),
+    (32, 1024, 32, 1024),
+    (8, 1024, 32, 1024),
+    (4, 256, 16, 256),
+]
+
+
+def to_hlo_text(lowered) -> str:
+    """stablehlo -> XlaComputation -> HLO text (return_tuple for rust)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_variant(p, n, b, block_n):
+    """Lower the three entry points for one (P, N, B) shape variant.
+
+    Returns a list of (artifact_name, kind, hlo_text) tuples.
+    """
+    xs = jax.ShapeDtypeStruct((p, n), jnp.int32)
+    vs = jax.ShapeDtypeStruct((n,), jnp.float32)
+    cs = jax.ShapeDtypeStruct((p, b, b), jnp.float32)
+
+    out = []
+
+    ctable = jax.jit(
+        lambda x, y, v: (model.partition_ctables(x, y, v, num_bins=b, block_n=block_n),)
+    )
+    out.append(
+        (f"ctable_p{p}_n{n}_b{b}", "ctable", to_hlo_text(ctable.lower(xs, xs, vs)))
+    )
+
+    fused = jax.jit(
+        lambda x, y, v: (model.ctable_su_fused(x, y, v, num_bins=b, block_n=block_n),)
+    )
+    out.append(
+        (f"ctable_su_p{p}_n{n}_b{b}", "fused", to_hlo_text(fused.lower(xs, xs, vs)))
+    )
+
+    su = jax.jit(lambda ct: (model.su_from_ctables(ct),))
+    out.append((f"su_p{p}_b{b}", "su", to_hlo_text(su.lower(cs))))
+
+    return out
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument(
+        "--variants",
+        default=None,
+        help="comma list of P:N:B:block_n overriding the defaults",
+    )
+    args = ap.parse_args()
+
+    variants = VARIANTS
+    if args.variants:
+        variants = [
+            tuple(int(t) for t in v.split(":")) for v in args.variants.split(",")
+        ]
+
+    os.makedirs(args.out_dir, exist_ok=True)
+    manifest = {}  # name -> (kind, p, n, b) ; su artifacts dedupe across N
+    for p, n, b, block_n in variants:
+        for name, kind, text in lower_variant(p, n, b, block_n):
+            if name in manifest:
+                continue
+            path = os.path.join(args.out_dir, f"{name}.hlo.txt")
+            with open(path, "w") as f:
+                f.write(text)
+            manifest[name] = (kind, p, n if kind != "su" else 0, b)
+            print(f"wrote {path} ({len(text)} chars)")
+
+    mpath = os.path.join(args.out_dir, "manifest.tsv")
+    with open(mpath, "w") as f:
+        f.write("# name\tkind\tpairs\trows\tbins\n")
+        for name, (kind, p, n, b) in sorted(manifest.items()):
+            f.write(f"{name}\t{kind}\t{p}\t{n}\t{b}\n")
+    print(f"wrote {mpath} ({len(manifest)} artifacts)")
+
+
+if __name__ == "__main__":
+    main()

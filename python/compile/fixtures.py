@@ -1,0 +1,120 @@
+"""Golden cross-language fixtures: python computes, rust verifies.
+
+Emits deterministic (inputs, expected outputs) pairs into
+``artifacts/fixtures/`` so the rust NativeEngine and PjrtEngine can both be
+asserted against the *python* oracle, closing the three-layer loop:
+
+    pallas kernel == jnp oracle   (python/tests)
+    rust native  == golden file   (rust tests)
+    rust pjrt    == golden file   (rust tests)
+    => rust native == rust pjrt == pallas kernel
+
+The generator is a tiny xorshift64* PRNG implemented identically in
+rust/src/util/rng.rs, so both sides can regenerate inputs from the seed and
+only expected outputs travel through the file.
+
+Usage: python -m compile.fixtures --out-dir ../artifacts/fixtures
+"""
+
+import argparse
+import os
+
+import numpy as np
+
+from .kernels import ref
+
+MASK64 = (1 << 64) - 1
+
+
+class XorShift64Star:
+    """Mirror of rust/src/util/rng.rs — keep both in lockstep."""
+
+    def __init__(self, seed):
+        self.state = (seed or 0x9E3779B97F4A7C15) & MASK64
+
+    def next_u64(self):
+        x = self.state
+        x ^= (x >> 12) & MASK64
+        x = (x ^ (x << 25)) & MASK64
+        x ^= (x >> 27) & MASK64
+        self.state = x
+        return (x * 0x2545F4914F6CDD1D) & MASK64
+
+    def next_below(self, n):
+        return self.next_u64() % n
+
+    def next_f64(self):
+        return (self.next_u64() >> 11) / float(1 << 53)
+
+
+def gen_case(seed, p, n, b, mask_frac):
+    rng = XorShift64Star(seed)
+    x = np.empty((p, n), np.int32)
+    y = np.empty((p, n), np.int32)
+    for i in range(p):
+        for j in range(n):
+            x[i, j] = rng.next_below(b)
+    for i in range(p):
+        for j in range(n):
+            y[i, j] = rng.next_below(b)
+    valid = np.empty(n, np.float32)
+    for j in range(n):
+        valid[j] = 0.0 if rng.next_f64() < mask_frac else 1.0
+    return x, y, valid
+
+
+CASES = [
+    # (seed, P, N, B, mask_frac)
+    (1, 4, 256, 16, 0.0),
+    (2, 4, 256, 16, 0.25),
+    (3, 8, 1024, 32, 0.0),
+    (4, 8, 1024, 32, 0.5),
+    (5, 32, 8192, 32, 0.1),
+    (6, 1, 256, 2, 0.0),  # binary features
+    (7, 2, 512, 4, 0.9),  # nearly fully masked
+]
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts/fixtures")
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    path = os.path.join(args.out_dir, "su_golden.tsv")
+    with open(path, "w") as f:
+        f.write("# seed\tpairs\trows\tbins\tmask_frac\tsu_values(csv)\n")
+        for seed, p, n, b, mask_frac in CASES:
+            x, y, valid = gen_case(seed, p, n, b, mask_frac)
+            su = np.asarray(ref.su_ref(x, y, valid, b), dtype=np.float64)
+            vals = ",".join(f"{v:.9f}" for v in su)
+            f.write(f"{seed}\t{p}\t{n}\t{b}\t{mask_frac}\t{vals}\n")
+    print(f"wrote {path} ({len(CASES)} cases)")
+
+    # Entropy golden values too, for the rust entropy unit tests.
+    epath = os.path.join(args.out_dir, "entropy_golden.tsv")
+    with open(epath, "w") as f:
+        f.write("# seed\tpairs\trows\tbins\thx(csv)\thy(csv)\thxy(csv)\n")
+        for seed, p, n, b, mask_frac in CASES[:4]:
+            x, y, valid = gen_case(seed, p, n, b, mask_frac)
+            ct = ref.ctable_ref(x, y, valid, b)
+            hx, hy, hxy = ref.entropies_ref(ct)
+            f.write(
+                "\t".join(
+                    [
+                        str(seed),
+                        str(p),
+                        str(n),
+                        str(b),
+                        ",".join(f"{v:.9f}" for v in np.asarray(hx)),
+                        ",".join(f"{v:.9f}" for v in np.asarray(hy)),
+                        ",".join(f"{v:.9f}" for v in np.asarray(hxy)),
+                    ]
+                )
+                + "\n"
+            )
+    print(f"wrote {epath}")
+
+
+if __name__ == "__main__":
+    main()

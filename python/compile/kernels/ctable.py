@@ -1,0 +1,92 @@
+"""L1 Pallas kernel: batched pairwise contingency tables.
+
+This is the compute hot-spot of the paper (Algorithm 2, ``localCTables``):
+for every requested feature pair ``(x, y)`` count, over the instances of a
+partition, how often each ``(x_bin, y_bin)`` combination occurs.
+
+Hardware adaptation (DESIGN.md §Hardware-Adaptation): the paper's inner loop
+is a scatter-increment per instance, which is hostile to a systolic array.
+We restate it as a dense one-hot matmul so the MXU does the counting:
+
+    ctable(x, y) = onehot(x)^T . diag(valid) . onehot(y)   # [B,N].[N,B]
+
+The Pallas grid is (pairs, row-tiles): each program builds the one-hot
+blocks for one pair over one tile of ``block_n`` instances in VMEM and
+accumulates the [B, B] partial product into the output block (revisited
+across the row-tile axis — the classic accumulate-over-grid pattern).
+``BlockSpec`` over the instance axis expresses the HBM->VMEM schedule that
+Spark partitions expressed in the paper.
+
+interpret=True always: the CPU PJRT plugin cannot execute Mosaic
+custom-calls; real-TPU efficiency is estimated in DESIGN.md §7.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _ctable_kernel(x_ref, y_ref, valid_ref, out_ref, *, num_bins):
+    """One (pair, row-tile) grid step: accumulate a [B, B] partial table."""
+    j = pl.program_id(1)
+
+    x = x_ref[0, :]  # int32[block_n]
+    y = y_ref[0, :]
+    v = valid_ref[0, :]  # f32[block_n]
+
+    bins = jax.lax.broadcasted_iota(jnp.int32, (1, num_bins), 1)
+    # one-hot encodings; the validity mask folds into x's side so padded
+    # rows contribute zero to the product.
+    ox = (x[:, None] == bins).astype(jnp.float32) * v[:, None]  # [n, B]
+    oy = (y[:, None] == bins).astype(jnp.float32)  # [n, B]
+    partial = jax.lax.dot_general(
+        ox,
+        oy,
+        dimension_numbers=(((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )  # [B, B]
+
+    @pl.when(j == 0)
+    def _init():
+        out_ref[0, :, :] = partial
+
+    @pl.when(j != 0)
+    def _accumulate():
+        out_ref[0, :, :] += partial
+
+
+@functools.partial(jax.jit, static_argnames=("num_bins", "block_n"))
+def ctable_pallas(x, y, valid, *, num_bins, block_n=2048):
+    """Batched contingency tables via the Pallas kernel.
+
+    Args:
+      x: int32[P, N] bin indices, first feature of each pair.
+      y: int32[P, N] bin indices, second feature of each pair.
+      valid: f32[N] instance mask (0.0 = padding row).
+      num_bins: static bin count B; indices must lie in [0, B).
+      block_n: instance-axis tile size (VMEM block).
+
+    Returns:
+      f32[P, B, B] counts.
+    """
+    num_pairs, n = x.shape
+    if n % block_n != 0:
+        # Static shapes only (AOT artifacts are fixed-shape); callers pad.
+        raise ValueError(f"n={n} must be a multiple of block_n={block_n}")
+    grid = (num_pairs, n // block_n)
+    valid2d = valid[None, :]  # [1, N] so the row-tile BlockSpec can slice it
+
+    return pl.pallas_call(
+        functools.partial(_ctable_kernel, num_bins=num_bins),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, block_n), lambda p, j: (p, j)),
+            pl.BlockSpec((1, block_n), lambda p, j: (p, j)),
+            pl.BlockSpec((1, block_n), lambda p, j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((1, num_bins, num_bins), lambda p, j: (p, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((num_pairs, num_bins, num_bins), jnp.float32),
+        interpret=True,
+    )(x, y, valid2d)

@@ -1,0 +1,82 @@
+"""Pure-jnp correctness oracles for the DiCFS numeric path.
+
+These are the ground truth the Pallas kernels (ctable.py, su.py) are tested
+against, and the same math the rust NativeEngine re-implements. Everything is
+expressed over *discretized* features: a feature value is a bin index in
+``[0, num_bins)`` stored as int32.
+
+Conventions (mirrored by rust/src/correlation/):
+  * contingency table ``ct[i, j]`` counts instances with ``x == i`` and
+    ``y == j``; masked instances (``valid == 0``) contribute nothing.
+  * symmetrical uncertainty ``SU = 2 * (H(X) + H(Y) - H(X,Y)) / (H(X) + H(Y))``
+    with ``SU = 0`` when ``H(X) + H(Y) == 0`` (both features constant) and
+    when the table is empty — matching WEKA's
+    ``ContingencyTables.symmetricalUncertainty``.
+  * entropies are base-2.
+"""
+
+import jax.numpy as jnp
+
+
+def ctable_ref(x, y, valid, num_bins):
+    """Batched contingency tables.
+
+    Args:
+      x: int32[P, N] bin indices of the first feature of each pair.
+      y: int32[P, N] bin indices of the second feature of each pair.
+      valid: f32[N] mask; 0.0 rows are padding and are not counted.
+      num_bins: static bin count B.
+
+    Returns:
+      f32[P, B, B] counts.
+    """
+    bins = jnp.arange(num_bins, dtype=jnp.int32)
+    # one-hot along a new trailing axis: [P, N, B]
+    ox = (x[:, :, None] == bins[None, None, :]).astype(jnp.float32)
+    oy = (y[:, :, None] == bins[None, None, :]).astype(jnp.float32)
+    ox = ox * valid[None, :, None]
+    # [P, B, N] @ [P, N, B] -> [P, B, B]
+    return jnp.einsum("pnb,pnc->pbc", ox, oy)
+
+
+def entropies_ref(ct):
+    """Marginal and joint base-2 entropies of a batch of tables.
+
+    Args:
+      ct: f32[P, B, B] contingency tables.
+
+    Returns:
+      (hx, hy, hxy): three f32[P] arrays. Empty tables yield 0 entropies.
+    """
+    total = jnp.sum(ct, axis=(1, 2))
+    safe = jnp.where(total > 0, total, 1.0)
+    pxy = ct / safe[:, None, None]
+    px = jnp.sum(pxy, axis=2)
+    py = jnp.sum(pxy, axis=1)
+
+    def ent(p, axes):
+        plogp = jnp.where(p > 0, p * jnp.log2(jnp.where(p > 0, p, 1.0)), 0.0)
+        return -jnp.sum(plogp, axis=axes)
+
+    return ent(px, (1,)), ent(py, (1,)), ent(pxy, (1, 2))
+
+
+def su_from_ctable_ref(ct):
+    """Batched symmetrical uncertainty from contingency tables.
+
+    Args:
+      ct: f32[P, B, B].
+
+    Returns:
+      f32[P] SU values in [0, 1].
+    """
+    hx, hy, hxy = entropies_ref(ct)
+    denom = hx + hy
+    su = 2.0 * (hx + hy - hxy) / jnp.where(denom > 0, denom, 1.0)
+    total = jnp.sum(ct, axis=(1, 2))
+    return jnp.where((denom > 0) & (total > 0), su, 0.0)
+
+
+def su_ref(x, y, valid, num_bins):
+    """Fused oracle: SU of each feature pair directly from bin indices."""
+    return su_from_ctable_ref(ctable_ref(x, y, valid, num_bins))

@@ -1,0 +1,74 @@
+"""L1 Pallas kernel: symmetrical uncertainty from contingency tables.
+
+Small reduction kernel, one grid step per pair: normalize the [B, B] table,
+take the row/column marginals, and combine base-2 entropies into
+
+    SU = 2 * (H(X) + H(Y) - H(X,Y)) / (H(X) + H(Y))
+
+with the WEKA edge conventions: SU = 0 when H(X)+H(Y) == 0 (both features
+constant) or when the table is empty (fully masked partition).
+
+interpret=True always — see ctable.py.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _plogp(p):
+    """Elementwise p*log2(p) with the 0*log(0)=0 convention."""
+    return jnp.where(p > 0, p * jnp.log2(jnp.where(p > 0, p, 1.0)), 0.0)
+
+
+def _su_kernel(ct_ref, su_ref):
+    ct = ct_ref[0, :, :]  # f32[B, B]
+    total = jnp.sum(ct)
+    safe = jnp.where(total > 0, total, 1.0)
+    pxy = ct / safe
+    px = jnp.sum(pxy, axis=1)
+    py = jnp.sum(pxy, axis=0)
+
+    hx = -jnp.sum(_plogp(px))
+    hy = -jnp.sum(_plogp(py))
+    hxy = -jnp.sum(_plogp(pxy))
+
+    denom = hx + hy
+    su = 2.0 * (hx + hy - hxy) / jnp.where(denom > 0, denom, 1.0)
+    ok = (denom > 0) & (total > 0)
+    su_ref[0] = jnp.where(ok, su, 0.0)
+
+
+@jax.jit
+def su_pallas(ct):
+    """Batched SU via the Pallas kernel.
+
+    Args:
+      ct: f32[P, B, B] contingency tables.
+
+    Returns:
+      f32[P] SU values in [0, 1].
+    """
+    num_pairs, num_bins, _ = ct.shape
+    return pl.pallas_call(
+        _su_kernel,
+        grid=(num_pairs,),
+        in_specs=[pl.BlockSpec((1, num_bins, num_bins), lambda p: (p, 0, 0))],
+        out_specs=pl.BlockSpec((1,), lambda p: (p,)),
+        out_shape=jax.ShapeDtypeStruct((num_pairs,), jnp.float32),
+        interpret=True,
+    )(ct)
+
+
+@functools.partial(jax.jit, static_argnames=("num_bins", "block_n"))
+def ctable_su_pallas(x, y, valid, *, num_bins, block_n=2048):
+    """Fused single-partition path: bin indices -> SU, both kernels chained.
+
+    Used by the rust fast path when a dataset fits one partition so the
+    [P, B, B] intermediate never round-trips through the coordinator.
+    """
+    from .ctable import ctable_pallas
+
+    return su_pallas(ctable_pallas(x, y, valid, num_bins=num_bins, block_n=block_n))

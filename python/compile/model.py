@@ -1,0 +1,43 @@
+"""L2: the DiCFS numeric graph, composed from the L1 Pallas kernels.
+
+Three entry points, matching the three AOT artifacts the rust coordinator
+loads (see aot.py and rust/src/runtime/):
+
+  * ``partition_ctables``  — what a worker runs per partition in the
+    horizontal scheme (Algorithm 2 of the paper): bin indices for a tile of
+    pairs -> partial contingency tables. The element-wise merge across
+    partitions (``reduceByKey``) happens in rust.
+  * ``su_from_ctables``    — what the driver runs on merged tables to turn
+    them into symmetrical-uncertainty correlations.
+  * ``ctable_su_fused``    — single-partition fast path (also the vertical
+    scheme's per-worker computation, where a worker owns whole columns and
+    can produce final SU locally).
+
+All shapes are static: (P pairs, N instances, B bins) are fixed per artifact
+variant and the rust side pads/masks to fit (runtime/tiling.rs).
+"""
+
+import functools
+
+import jax
+
+from .kernels.ctable import ctable_pallas
+from .kernels.su import su_pallas
+
+
+@functools.partial(jax.jit, static_argnames=("num_bins", "block_n"))
+def partition_ctables(x, y, valid, *, num_bins, block_n=2048):
+    """Worker-side partial tables: int32[P,N] x2, f32[N] -> f32[P,B,B]."""
+    return ctable_pallas(x, y, valid, num_bins=num_bins, block_n=block_n)
+
+
+@jax.jit
+def su_from_ctables(ct):
+    """Driver-side correlation finish: f32[P,B,B] -> f32[P]."""
+    return su_pallas(ct)
+
+
+@functools.partial(jax.jit, static_argnames=("num_bins", "block_n"))
+def ctable_su_fused(x, y, valid, *, num_bins, block_n=2048):
+    """Fused bin-indices -> SU path: int32[P,N] x2, f32[N] -> f32[P]."""
+    return su_pallas(ctable_pallas(x, y, valid, num_bins=num_bins, block_n=block_n))

@@ -1,0 +1,14 @@
+//! Ablation for the paper's §5 claim: on-demand correlation computation
+//! touches only a small fraction of the full C(m+1,2) matrix and is
+//! roughly two orders of magnitude cheaper on high-dimensional data.
+//!
+//! Output: table + `bench_out/ablation_ondemand.csv`.
+
+use dicfs::harness::{ablation, bench_scale};
+
+fn main() {
+    let scale = bench_scale();
+    println!("== Ablation: on-demand vs full correlation matrix (scale {scale}) ==\n");
+    let rows = ablation::run_ondemand(scale);
+    ablation::emit_ondemand(&rows);
+}

@@ -1,0 +1,14 @@
+//! Ablation for the paper's §6 observation: DiCFS-vp's default of m
+//! partitions is not optimal — on EPSILON, reducing 2000 → 100 partitions
+//! cut execution time, and reducing further raised it again.
+//!
+//! Output: chart + `bench_out/ablation_partitions.csv`.
+
+use dicfs::harness::{ablation, bench_scale};
+
+fn main() {
+    let scale = bench_scale();
+    println!("== Ablation: DiCFS-vp partition count on EPSILON (scale {scale}) ==\n");
+    let rows = ablation::run_partitions(scale, &[25, 50, 100, 250, 500, 1000, 2000], 10);
+    ablation::emit_partitions(&rows);
+}

@@ -1,0 +1,20 @@
+//! Regenerates paper Figure 3: execution time vs % of instances for
+//! DiCFS-hp, DiCFS-vp (10 virtual nodes) and the sequential WEKA baseline,
+//! across all four dataset families.
+//!
+//! Output: ASCII charts + `bench_out/fig3_instances.csv`.
+//! Scale with `DICFS_BENCH_SCALE` (default 1.0).
+
+use dicfs::harness::{bench_scale, fig3};
+
+fn main() {
+    let scale = bench_scale();
+    println!("== Figure 3: time vs %instances (scale {scale}) ==\n");
+    let rows = fig3::run(scale, &[25, 50, 75, 100, 150, 200], 10);
+    fig3::emit(&rows);
+    assert!(
+        rows.iter().all(|r| r.selections_equal),
+        "equivalence violated"
+    );
+    println!("all selections equal across WEKA/hp/vp: OK");
+}

@@ -1,0 +1,18 @@
+//! Regenerates paper Figure 4: execution time vs % of features for
+//! DiCFS-hp vs DiCFS-vp (10 virtual nodes).
+//!
+//! Output: ASCII charts + `bench_out/fig4_features.csv`.
+
+use dicfs::harness::{bench_scale, fig4};
+
+fn main() {
+    let scale = bench_scale();
+    println!("== Figure 4: time vs %features (scale {scale}) ==\n");
+    let rows = fig4::run(scale, &[50, 100, 200, 400], 10);
+    fig4::emit(&rows);
+    assert!(
+        rows.iter().all(|r| r.selections_equal),
+        "hp/vp equivalence violated"
+    );
+    println!("hp == vp selections everywhere: OK");
+}

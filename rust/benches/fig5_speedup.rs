@@ -1,0 +1,13 @@
+//! Regenerates paper Figure 5: speed-up (Eq. 5, relative to 2 nodes) vs
+//! cluster size for DiCFS-hp and DiCFS-vp on all four families.
+//!
+//! Output: ASCII charts + `bench_out/fig5_speedup.csv`.
+
+use dicfs::harness::{bench_scale, fig5};
+
+fn main() {
+    let scale = bench_scale();
+    println!("== Figure 5: speed-up vs nodes (scale {scale}) ==\n");
+    let curves = fig5::run(scale, &[2, 3, 4, 5, 6, 7, 8, 9, 10], 10);
+    fig5::emit(&curves);
+}

@@ -1,0 +1,100 @@
+//! L1 kernel throughput: the PJRT-executed Pallas artifacts (ctable, su,
+//! fused) vs the native engine, in pairs/second and cells/second.
+//!
+//! This is the §Perf microbenchmark for the numeric hot path — see
+//! EXPERIMENTS.md §Perf. The native engine is the practical roofline for
+//! a CPU host (dense u64 scatter-count); the PJRT numbers measure the
+//! one-hot-matmul formulation executed through XLA (compiled from the
+//! interpret=True Pallas lowering — *structure*, not TPU performance).
+//!
+//! Output: table + `bench_out/kernel_throughput.csv`.
+
+use std::time::Instant;
+
+use dicfs::harness::report;
+use dicfs::runtime::{ColumnPair, NativeEngine, SuEngine};
+use dicfs::util::XorShift64Star;
+
+fn bench_engine(engine: &dyn SuEngine, pairs: &[ColumnPair<'_>], reps: usize) -> (f64, f64) {
+    // warmup (PJRT compiles lazily on first call)
+    let _ = engine.su_from_column_pairs(&pairs[..1.min(pairs.len())]);
+    let t0 = Instant::now();
+    for _ in 0..reps {
+        let su = engine.su_from_column_pairs(pairs);
+        assert_eq!(su.len(), pairs.len());
+    }
+    let secs = t0.elapsed().as_secs_f64() / reps as f64;
+    let n = pairs[0].x.len();
+    let pairs_per_s = pairs.len() as f64 / secs;
+    let cells_per_s = (pairs.len() * n) as f64 / secs;
+    (pairs_per_s, cells_per_s)
+}
+
+fn main() {
+    println!("== L1 kernel throughput: native vs PJRT (Pallas artifacts) ==\n");
+    let mut rng = XorShift64Star::new(2024);
+    let configs = [(32usize, 8192usize, 32u64), (32, 2048, 8), (8, 1024, 16)];
+
+    let mut csv = Vec::new();
+    let mut table_rows = Vec::new();
+    for &(p, n, bins) in &configs {
+        let xs: Vec<Vec<u8>> = (0..p)
+            .map(|_| (0..n).map(|_| rng.next_below(bins) as u8).collect())
+            .collect();
+        let ys: Vec<Vec<u8>> = (0..p)
+            .map(|_| (0..n).map(|_| rng.next_below(bins) as u8).collect())
+            .collect();
+        let pairs: Vec<ColumnPair> = xs
+            .iter()
+            .zip(&ys)
+            .map(|(x, y)| ColumnPair {
+                x,
+                bins_x: bins as u16,
+                y,
+                bins_y: bins as u16,
+            })
+            .collect();
+
+        let mut engines: Vec<(&str, Box<dyn SuEngine>)> =
+            vec![("native", Box::new(NativeEngine))];
+        #[cfg(feature = "pjrt")]
+        {
+            match dicfs::runtime::pjrt::PjrtEngine::from_default_dir() {
+                Ok(e) => engines.push(("pjrt", Box::new(e))),
+                Err(e) => eprintln!("skipping pjrt engine: {e}"),
+            }
+        }
+
+        for (name, engine) in &engines {
+            let (pps, cps) = bench_engine(engine.as_ref(), &pairs, 5);
+            table_rows.push(vec![
+                format!("P={p} N={n} B={bins}"),
+                name.to_string(),
+                format!("{pps:.0}"),
+                format!("{:.1}", cps / 1e6),
+            ]);
+            csv.push(vec![
+                p.to_string(),
+                n.to_string(),
+                bins.to_string(),
+                name.to_string(),
+                format!("{pps:.1}"),
+                format!("{cps:.1}"),
+            ]);
+        }
+    }
+
+    let path = report::write_csv(
+        "kernel_throughput.csv",
+        &["pairs", "rows", "bins", "engine", "pairs_per_s", "cells_per_s"],
+        &csv,
+    );
+    println!(
+        "{}",
+        dicfs::util::chart::table(
+            &["shape", "engine", "pairs/s", "Mcells/s"],
+            &table_rows
+        )
+    );
+    println!("  data: {}", path.display());
+}

@@ -1,0 +1,15 @@
+//! Regenerates paper Table 2: DiCFS-hp (classification, SU) vs the
+//! regression CFS of Eiras-Franco et al. (RegCFS/RegWEKA, Pearson) on the
+//! EPSILON/HIGGS size variants, with speed-ups vs the sequential
+//! versions.
+//!
+//! Output: table + `bench_out/table2_regression.csv`.
+
+use dicfs::harness::{bench_scale, table2};
+
+fn main() {
+    let scale = bench_scale();
+    println!("== Table 2: DiCFS-hp vs RegCFS (scale {scale}) ==\n");
+    let rows = table2::run(scale, 10);
+    table2::emit(&rows);
+}

@@ -1,0 +1,294 @@
+//! Best-first search over feature subsets — the paper's Algorithm 1.
+//!
+//! Key fidelity points:
+//! * the queue is a *bounded* priority queue (capacity 5, the paper's
+//!   `Queue.setCapacity(5)`),
+//! * the stop criterion is five *consecutive* fails to improve on the
+//!   best merit seen,
+//! * correlations are fetched **on demand, batched per expansion** — the
+//!   paper's §5 observation that makes the distributed versions one Spark
+//!   job per search step. Every correlation flows through a
+//!   [`CorrelationCache`], whose statistics feed the on-demand ablation.
+//! * the ordering is fully deterministic (merit desc, then lexicographic
+//!   feature list), so sequential/hp/vp runs traverse identical states.
+
+use std::collections::HashSet;
+
+use crate::cfs::locally_predictive::add_locally_predictive;
+use crate::cfs::subset::SearchState;
+use crate::cfs::Correlator;
+use crate::core::{FeatureId, SelectionResult, CLASS_ID};
+use crate::correlation::CorrelationCache;
+
+/// Search configuration (defaults = the paper's experimental setup).
+#[derive(Debug, Clone, Copy)]
+pub struct CfsConfig {
+    /// Consecutive non-improving iterations before stopping (paper: 5).
+    pub max_fails: usize,
+    /// Priority-queue capacity (paper: 5).
+    pub queue_capacity: usize,
+    /// Run the locally-predictive post-step (paper experiments: true).
+    pub locally_predictive: bool,
+}
+
+impl Default for CfsConfig {
+    fn default() -> Self {
+        Self {
+            max_fails: 5,
+            queue_capacity: 5,
+            locally_predictive: true,
+        }
+    }
+}
+
+/// The best-first search driver, generic over the correlation source.
+pub struct BestFirstSearch {
+    /// Configuration in effect.
+    pub config: CfsConfig,
+}
+
+impl BestFirstSearch {
+    /// Search with the given configuration.
+    pub fn new(config: CfsConfig) -> Self {
+        Self { config }
+    }
+
+    /// Run CFS over `m` features, pulling correlations from `correlator`.
+    ///
+    /// This is the single entry point used by SequentialCfs, DiCFS-hp,
+    /// DiCFS-vp and RegCFS — they differ only in the `correlator`.
+    pub fn run(&self, m: usize, correlator: &mut dyn Correlator) -> SelectionResult {
+        let mut cache = CorrelationCache::new();
+        let result = self.run_with_cache(m, correlator, &mut cache);
+        result
+    }
+
+    /// [`Self::run`] with an externally owned cache (exposes hit/miss
+    /// statistics to the ablation harness).
+    pub fn run_with_cache(
+        &self,
+        m: usize,
+        correlator: &mut dyn Correlator,
+        cache: &mut CorrelationCache,
+    ) -> SelectionResult {
+        let mut queue: Vec<SearchState> = vec![SearchState::empty()];
+        let mut visited: HashSet<Vec<FeatureId>> = HashSet::new();
+        visited.insert(vec![]);
+        let mut best = SearchState::empty();
+        let mut fails = 0usize;
+        let mut iterations = 0usize;
+
+        while fails < self.config.max_fails {
+            // Dequeue the head (Algorithm 1 line 7); empty queue → done.
+            if queue.is_empty() {
+                break;
+            }
+            let head = queue.remove(0);
+            iterations += 1;
+
+            // Expand (line 8): all single-feature additions, evaluated in
+            // one batched correlation request.
+            let candidates: Vec<FeatureId> =
+                (0..m).filter(|&f| !head.contains(f)).collect();
+            let new_states =
+                expand_batch(&head, &candidates, correlator, cache, &mut visited);
+
+            // Enqueue (line 9) into the bounded priority queue.
+            for s in new_states {
+                let pos = queue
+                    .binary_search_by(|q| q.cmp_priority(&s))
+                    .unwrap_or_else(|p| p);
+                queue.insert(pos, s);
+            }
+            queue.truncate(self.config.queue_capacity);
+
+            if queue.is_empty() {
+                break; // line 10-11: expansion exhausted the space
+            }
+
+            // Lines 13-19: compare the new queue head against the best.
+            let local_best = &queue[0];
+            if local_best.merit > best.merit + 1e-12 {
+                best = local_best.clone();
+                fails = 0;
+            } else {
+                fails += 1;
+            }
+        }
+
+        let mut selected = best.features.clone();
+        let mut locally_added = vec![];
+        if self.config.locally_predictive && !selected.is_empty() {
+            locally_added = add_locally_predictive(m, &mut selected, correlator, cache);
+        }
+
+        SelectionResult {
+            selected,
+            merit: best.merit,
+            iterations,
+            correlations_computed: cache.stats().computed,
+            locally_predictive_added: locally_added,
+        }
+    }
+}
+
+/// Evaluate all expansions of `head` by `candidates`, requesting the
+/// missing correlations in a single batch (the paper's `nc` pairs).
+fn expand_batch(
+    head: &SearchState,
+    candidates: &[FeatureId],
+    correlator: &mut dyn Correlator,
+    cache: &mut CorrelationCache,
+    visited: &mut HashSet<Vec<FeatureId>>,
+) -> Vec<SearchState> {
+    // Pair list: per candidate, (candidate, class) then (candidate, member)
+    // for each current member.
+    let mut pairs: Vec<(FeatureId, FeatureId)> = Vec::new();
+    for &c in candidates {
+        pairs.push((c, CLASS_ID));
+        for &g in &head.features {
+            pairs.push((c, g));
+        }
+    }
+    let values = cache.get_or_compute_batch(&pairs, |missing| correlator.compute(missing));
+
+    let stride = 1 + head.features.len();
+    let mut out = Vec::with_capacity(candidates.len());
+    for (i, &c) in candidates.iter().enumerate() {
+        let base = i * stride;
+        let rcf = values[base];
+        let rffs = &values[base + 1..base + stride];
+        let state = head.expanded(c, rcf, rffs);
+        if visited.insert(state.features.clone()) {
+            out.push(state);
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::collections::HashMap;
+
+    /// Correlator over a fixed SU matrix, counting batch calls.
+    struct TableCorrelator {
+        su: HashMap<(FeatureId, FeatureId), f64>,
+        calls: usize,
+    }
+
+    impl TableCorrelator {
+        fn new(m: usize, rcf: &[f64], rff: &[(usize, usize, f64)]) -> Self {
+            let mut su = HashMap::new();
+            for (f, &v) in rcf.iter().enumerate() {
+                su.insert(crate::core::pair_key(f, CLASS_ID), v);
+            }
+            for f in 0..m {
+                for g in 0..m {
+                    if f < g {
+                        su.insert((f, g), 0.0);
+                    }
+                }
+            }
+            for &(a, b, v) in rff {
+                su.insert(crate::core::pair_key(a, b), v);
+            }
+            Self { su, calls: 0 }
+        }
+    }
+
+    impl Correlator for TableCorrelator {
+        fn compute(&mut self, pairs: &[(FeatureId, FeatureId)]) -> Vec<f64> {
+            self.calls += 1;
+            pairs.iter().map(|&(a, b)| self.su[&crate::core::pair_key(a, b)]).collect()
+        }
+    }
+
+    fn cfg_no_lp() -> CfsConfig {
+        CfsConfig {
+            locally_predictive: false,
+            ..CfsConfig::default()
+        }
+    }
+
+    #[test]
+    fn selects_relevant_uncorrelated_features() {
+        // f0, f1 strongly class-correlated & independent; f2 weak; f3 a
+        // near-copy of f0 (redundant).
+        let mut corr = TableCorrelator::new(
+            4,
+            &[0.8, 0.7, 0.1, 0.75],
+            &[(0, 3, 0.95), (0, 1, 0.05), (1, 3, 0.05)],
+        );
+        let r = BestFirstSearch::new(cfg_no_lp()).run(4, &mut corr);
+        assert_eq!(r.selected, vec![0, 1], "redundant f3 and weak f2 rejected");
+        assert!(r.merit > 0.9);
+    }
+
+    #[test]
+    fn single_strong_feature() {
+        let mut corr = TableCorrelator::new(3, &[0.9, 0.0, 0.0], &[]);
+        let r = BestFirstSearch::new(cfg_no_lp()).run(3, &mut corr);
+        assert_eq!(r.selected, vec![0]);
+        assert!((r.merit - 0.9).abs() < 1e-9);
+    }
+
+    #[test]
+    fn all_zero_correlations_select_nothing() {
+        let mut corr = TableCorrelator::new(5, &[0.0; 5], &[]);
+        let r = BestFirstSearch::new(cfg_no_lp()).run(5, &mut corr);
+        assert!(r.selected.is_empty());
+        assert_eq!(r.merit, 0.0);
+    }
+
+    #[test]
+    fn one_batch_per_iteration() {
+        let mut corr = TableCorrelator::new(6, &[0.5, 0.4, 0.3, 0.2, 0.1, 0.0], &[]);
+        let r = BestFirstSearch::new(cfg_no_lp()).run(6, &mut corr);
+        // on-demand batching: number of correlator calls == iterations
+        // that had at least one cache miss ≤ iterations.
+        assert!(corr.calls <= r.iterations);
+        assert!(r.correlations_computed <= 6 * 7 / 2 + 6);
+    }
+
+    #[test]
+    fn respects_max_fails_stop() {
+        // Only f0 matters: after selecting it, expansions can't improve,
+        // so the search must stop after max_fails iterations.
+        let mut corr = TableCorrelator::new(10, &[0.9, 0.0, 0.0, 0.0, 0.0, 0.0, 0.0, 0.0, 0.0, 0.0], &[]);
+        let r = BestFirstSearch::new(cfg_no_lp()).run(10, &mut corr);
+        assert_eq!(r.selected, vec![0]);
+        assert!(r.iterations <= 1 + 5 + 1, "iterations: {}", r.iterations);
+    }
+
+    #[test]
+    fn deterministic_across_runs() {
+        let build = || {
+            TableCorrelator::new(
+                8,
+                &[0.6, 0.6, 0.5, 0.5, 0.3, 0.3, 0.0, 0.0],
+                &[(0, 1, 0.9), (2, 3, 0.8)],
+            )
+        };
+        let a = BestFirstSearch::new(cfg_no_lp()).run(8, &mut build());
+        let b = BestFirstSearch::new(cfg_no_lp()).run(8, &mut build());
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn zero_features_empty_result() {
+        let mut corr = TableCorrelator::new(0, &[], &[]);
+        let r = BestFirstSearch::new(cfg_no_lp()).run(0, &mut corr);
+        assert!(r.selected.is_empty());
+    }
+
+    #[test]
+    fn cache_stats_reported() {
+        let mut corr = TableCorrelator::new(4, &[0.5, 0.4, 0.3, 0.2], &[]);
+        let search = BestFirstSearch::new(cfg_no_lp());
+        let mut cache = CorrelationCache::new();
+        let r = search.run_with_cache(4, &mut corr, &mut cache);
+        assert_eq!(r.correlations_computed, cache.stats().computed);
+        assert!(cache.stats().requested >= cache.stats().computed);
+    }
+}

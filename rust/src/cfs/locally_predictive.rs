@@ -1,0 +1,160 @@
+//! The locally-predictive post-step (paper §3, Hall's thesis §Appendix).
+//!
+//! After the search, features that are *locally predictive* — strongly
+//! class-correlated in a small region of the instance space — may have
+//! been excluded by the global merit. The heuristic re-admits a feature
+//! when its class correlation exceeds its correlation with every feature
+//! already selected (i.e. it brings information no selected feature
+//! carries). Candidates are visited in descending class-correlation order
+//! and the selected set grows as features are admitted — matching WEKA's
+//! `CfsSubsetEval` with `-L`.
+
+use crate::cfs::Correlator;
+use crate::core::{FeatureId, CLASS_ID};
+use crate::correlation::CorrelationCache;
+
+/// Extend `selected` in place; returns the features added, in admission
+/// order. Correlations flow through the same cache as the search (they
+/// are priced identically in the distributed versions — the paper notes
+/// this step as the second place where distributed work happens).
+pub fn add_locally_predictive(
+    m: usize,
+    selected: &mut Vec<FeatureId>,
+    correlator: &mut dyn Correlator,
+    cache: &mut CorrelationCache,
+) -> Vec<FeatureId> {
+    let outside: Vec<FeatureId> = (0..m).filter(|f| !selected.contains(f)).collect();
+    if outside.is_empty() {
+        return vec![];
+    }
+
+    // Class correlations of every outside feature (almost always cached
+    // already — the first expansion computed all of them).
+    let class_pairs: Vec<(FeatureId, FeatureId)> =
+        outside.iter().map(|&f| (f, CLASS_ID)).collect();
+    let rcf = cache.get_or_compute_batch(&class_pairs, |miss| correlator.compute(miss));
+
+    // Descending class correlation, deterministic tie-break on id.
+    let mut order: Vec<(f64, FeatureId)> =
+        rcf.iter().copied().zip(outside.iter().copied()).collect();
+    order.sort_by(|a, b| b.0.partial_cmp(&a.0).unwrap().then(a.1.cmp(&b.1)));
+
+    let mut added = vec![];
+    for (f_rcf, f) in order {
+        if f_rcf <= 0.0 {
+            break; // no class information at all — nor in anything below
+        }
+        // One batch: f against every currently selected feature.
+        let pairs: Vec<(FeatureId, FeatureId)> =
+            selected.iter().map(|&g| (f, g)).collect();
+        let rff = cache.get_or_compute_batch(&pairs, |miss| correlator.compute(miss));
+        let max_rff = rff.iter().cloned().fold(0.0f64, f64::max);
+        if f_rcf > max_rff {
+            let pos = selected.partition_point(|&g| g < f);
+            selected.insert(pos, f);
+            added.push(f);
+        }
+    }
+    added
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::collections::HashMap;
+
+    struct MapCorrelator(HashMap<(FeatureId, FeatureId), f64>);
+
+    impl Correlator for MapCorrelator {
+        fn compute(&mut self, pairs: &[(FeatureId, FeatureId)]) -> Vec<f64> {
+            pairs
+                .iter()
+                .map(|&(a, b)| *self.0.get(&crate::core::pair_key(a, b)).unwrap_or(&0.0))
+                .collect()
+        }
+    }
+
+    fn correlator(entries: &[((FeatureId, FeatureId), f64)]) -> MapCorrelator {
+        MapCorrelator(
+            entries
+                .iter()
+                .map(|&((a, b), v)| (crate::core::pair_key(a, b), v))
+                .collect(),
+        )
+    }
+
+    #[test]
+    fn admits_feature_with_unique_information() {
+        // selected = [0]; f1 has class corr 0.4 and low corr to f0 → admit.
+        let mut c = correlator(&[((0, CLASS_ID), 0.9), ((1, CLASS_ID), 0.4), ((0, 1), 0.1)]);
+        let mut selected = vec![0];
+        let mut cache = CorrelationCache::new();
+        let added = add_locally_predictive(2, &mut selected, &mut c, &mut cache);
+        assert_eq!(added, vec![1]);
+        assert_eq!(selected, vec![0, 1]);
+    }
+
+    #[test]
+    fn rejects_feature_shadowed_by_selected() {
+        // f1's correlation to f0 exceeds its class correlation → reject.
+        let mut c = correlator(&[((0, CLASS_ID), 0.9), ((1, CLASS_ID), 0.4), ((0, 1), 0.7)]);
+        let mut selected = vec![0];
+        let mut cache = CorrelationCache::new();
+        let added = add_locally_predictive(2, &mut selected, &mut c, &mut cache);
+        assert!(added.is_empty());
+        assert_eq!(selected, vec![0]);
+    }
+
+    #[test]
+    fn admitted_features_shadow_later_candidates() {
+        // f1 (rcf .6) admitted first; f2 (rcf .5) correlates .8 with f1 →
+        // rejected *because* f1 was admitted before it.
+        let mut c = correlator(&[
+            ((0, CLASS_ID), 0.9),
+            ((1, CLASS_ID), 0.6),
+            ((2, CLASS_ID), 0.5),
+            ((0, 1), 0.1),
+            ((0, 2), 0.1),
+            ((1, 2), 0.8),
+        ]);
+        let mut selected = vec![0];
+        let mut cache = CorrelationCache::new();
+        let added = add_locally_predictive(3, &mut selected, &mut c, &mut cache);
+        assert_eq!(added, vec![1]);
+        assert_eq!(selected, vec![0, 1]);
+    }
+
+    #[test]
+    fn zero_class_correlation_never_admitted() {
+        let mut c = correlator(&[((0, CLASS_ID), 0.9), ((1, CLASS_ID), 0.0)]);
+        let mut selected = vec![0];
+        let mut cache = CorrelationCache::new();
+        let added = add_locally_predictive(2, &mut selected, &mut c, &mut cache);
+        assert!(added.is_empty());
+    }
+
+    #[test]
+    fn selected_stays_sorted() {
+        let mut c = correlator(&[
+            ((5, CLASS_ID), 0.9),
+            ((1, CLASS_ID), 0.5),
+            ((8, CLASS_ID), 0.4),
+        ]);
+        let mut selected = vec![5];
+        let mut cache = CorrelationCache::new();
+        let _ = add_locally_predictive(9, &mut selected, &mut c, &mut cache);
+        let mut sorted = selected.clone();
+        sorted.sort_unstable();
+        assert_eq!(selected, sorted);
+        assert_eq!(selected, vec![1, 5, 8]);
+    }
+
+    #[test]
+    fn nothing_outside_is_noop() {
+        let mut c = correlator(&[]);
+        let mut selected = vec![0, 1];
+        let mut cache = CorrelationCache::new();
+        let added = add_locally_predictive(2, &mut selected, &mut c, &mut cache);
+        assert!(added.is_empty());
+    }
+}

@@ -1,0 +1,85 @@
+//! The CFS merit heuristic (paper Eq. 1).
+//!
+//! `M_s = k·r̄_cf / sqrt(k + k(k−1)·r̄_ff)`. With `sum_rcf = Σ su(f, class)`
+//! and `sum_rff = Σ su(f_i, f_j)` over the C(k,2) in-subset pairs, the
+//! averages cancel into the closed form
+//!
+//! `M_s = sum_rcf / sqrt(k + 2·sum_rff)`
+//!
+//! which is what both the incremental search update and WEKA compute.
+
+/// Merit from accumulated correlation sums for a subset of size `k`.
+pub fn merit_from_sums(k: usize, sum_rcf: f64, sum_rff: f64) -> f64 {
+    if k == 0 {
+        return 0.0;
+    }
+    let denom = (k as f64 + 2.0 * sum_rff).sqrt();
+    if denom <= 0.0 {
+        return 0.0;
+    }
+    sum_rcf / denom
+}
+
+/// Reference (non-incremental) form straight from Eq. 1, used by tests to
+/// pin the closed form above.
+pub fn merit_from_averages(k: usize, avg_rcf: f64, avg_rff: f64) -> f64 {
+    if k == 0 {
+        return 0.0;
+    }
+    let kf = k as f64;
+    let denom = (kf + kf * (kf - 1.0) * avg_rff).sqrt();
+    if denom <= 0.0 {
+        return 0.0;
+    }
+    kf * avg_rcf / denom
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::XorShift64Star;
+
+    #[test]
+    fn empty_subset_zero_merit() {
+        assert_eq!(merit_from_sums(0, 0.0, 0.0), 0.0);
+    }
+
+    #[test]
+    fn single_feature_merit_is_class_correlation() {
+        // k=1: M = r_cf / sqrt(1) = r_cf
+        assert!((merit_from_sums(1, 0.73, 0.0) - 0.73).abs() < 1e-12);
+    }
+
+    #[test]
+    fn closed_form_matches_eq1() {
+        let mut rng = XorShift64Star::new(13);
+        for _ in 0..100 {
+            let k = 1 + rng.next_below(20) as usize;
+            let rcf: Vec<f64> = (0..k).map(|_| rng.next_f64()).collect();
+            let npairs = k * (k - 1) / 2;
+            let rff: Vec<f64> = (0..npairs).map(|_| rng.next_f64()).collect();
+            let sum_rcf: f64 = rcf.iter().sum();
+            let sum_rff: f64 = rff.iter().sum();
+            let avg_rcf = sum_rcf / k as f64;
+            let avg_rff = if npairs > 0 { sum_rff / npairs as f64 } else { 0.0 };
+            let a = merit_from_sums(k, sum_rcf, sum_rff);
+            let b = merit_from_averages(k, avg_rcf, avg_rff);
+            assert!((a - b).abs() < 1e-10, "k={k}: {a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn redundancy_lowers_merit() {
+        // Same class correlations; higher intra-subset correlation is worse.
+        let lo = merit_from_sums(3, 1.5, 0.1);
+        let hi = merit_from_sums(3, 1.5, 1.2);
+        assert!(lo > hi);
+    }
+
+    #[test]
+    fn relevance_raises_merit() {
+        let weak = merit_from_sums(3, 0.6, 0.5);
+        let strong = merit_from_sums(3, 1.8, 0.5);
+        assert!(strong > weak);
+    }
+}

@@ -1,0 +1,40 @@
+//! CFS — Correlation-based Feature Selection (paper §3, Hall 2000).
+//!
+//! The algorithm pieces, shared by the sequential baseline and both
+//! distributed versions:
+//! * [`merit`] — the subset quality heuristic (Eq. 1),
+//! * [`best_first`] — the search (Algorithm 1): bounded priority queue,
+//!   five consecutive fails to stop,
+//! * [`locally_predictive`] — the optional post-step, ON by default to
+//!   match the paper's experimental configuration,
+//! * [`sequential`] — `SequentialCfs`, the faithful single-node
+//!   reimplementation standing in for the WEKA baseline.
+//!
+//! The search is written against the [`Correlator`] trait: sequential CFS
+//! plugs in a local computation; DiCFS-hp/vp plug in sparklet jobs. The
+//! search itself is therefore *identical* across all variants — the
+//! paper's "exactly the same features" equivalence holds by construction
+//! as long as the correlators return identical SU values, which the
+//! integration tests assert.
+
+pub mod best_first;
+pub mod locally_predictive;
+pub mod merit;
+pub mod sequential;
+pub mod subset;
+
+pub use best_first::{BestFirstSearch, CfsConfig};
+pub use sequential::{SequentialCfs, SequentialCorrelator};
+
+use crate::core::FeatureId;
+
+/// Source of symmetrical-uncertainty correlations.
+///
+/// `pairs` uses [`crate::core::CLASS_ID`] for the class attribute. The
+/// implementation must return one value per pair, in order. Implementors:
+/// [`sequential::SequentialCorrelator`], the DiCFS hp/vp correlators in
+/// [`crate::dicfs`], and the Pearson correlators in [`crate::regcfs`].
+pub trait Correlator {
+    /// Compute correlations for a batch of attribute pairs.
+    fn compute(&mut self, pairs: &[(FeatureId, FeatureId)]) -> Vec<f64>;
+}

@@ -1,0 +1,173 @@
+//! Sequential CFS — the WEKA-baseline stand-in (DESIGN.md §2).
+//!
+//! A faithful single-node implementation of Hall's CFS: Fayyad–Irani
+//! discretization, on-demand SU correlations, best-first search with
+//! five-fail stop, locally-predictive post-step. The paper's Figure 3
+//! "WEKA" curves are regenerated with this implementation, and the
+//! equivalence invariant (`DiCFS-hp ≡ DiCFS-vp ≡ sequential`) is asserted
+//! against it.
+
+use crate::cfs::best_first::{BestFirstSearch, CfsConfig};
+use crate::cfs::Correlator;
+use crate::core::{FeatureId, SelectionResult};
+use crate::correlation::su::su_from_table;
+use crate::correlation::ContingencyTable;
+use crate::data::columnar::{Dataset, DiscreteDataset};
+use crate::discretize::discretize_dataset;
+
+/// Computes SU correlations directly from a local [`DiscreteDataset`].
+pub struct SequentialCorrelator<'a> {
+    data: &'a DiscreteDataset,
+}
+
+impl<'a> SequentialCorrelator<'a> {
+    /// Correlator over the given discretized dataset.
+    pub fn new(data: &'a DiscreteDataset) -> Self {
+        Self { data }
+    }
+}
+
+impl Correlator for SequentialCorrelator<'_> {
+    fn compute(&mut self, pairs: &[(FeatureId, FeatureId)]) -> Vec<f64> {
+        pairs
+            .iter()
+            .map(|&(a, b)| {
+                let (xa, aa) = self.data.column(a);
+                let (xb, ab) = self.data.column(b);
+                su_from_table(&ContingencyTable::from_columns(xa, aa, xb, ab))
+            })
+            .collect()
+    }
+}
+
+/// The sequential CFS algorithm (≙ WEKA's `CfsSubsetEval` + `BestFirst`).
+#[derive(Debug, Default)]
+pub struct SequentialCfs {
+    /// Search configuration.
+    pub config: CfsConfig,
+}
+
+impl SequentialCfs {
+    /// CFS with the given search configuration.
+    pub fn new(config: CfsConfig) -> Self {
+        Self { config }
+    }
+
+    /// Full pipeline: discretize then select.
+    pub fn select(&self, ds: &Dataset) -> SelectionResult {
+        let dd = discretize_dataset(ds).expect("discretization failed");
+        self.select_discrete(&dd)
+    }
+
+    /// Selection over an already-discretized dataset.
+    pub fn select_discrete(&self, dd: &DiscreteDataset) -> SelectionResult {
+        let mut correlator = SequentialCorrelator::new(dd);
+        BestFirstSearch::new(self.config).run(dd.num_features(), &mut correlator)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth::{higgs_like, with_roles, FeatureRole, SynthConfig};
+
+    #[test]
+    fn selects_signal_over_noise() {
+        let s = with_roles(
+            "higgs",
+            &SynthConfig {
+                rows: 2_000,
+                seed: 11,
+                features: Some(16),
+            },
+        );
+        let r = SequentialCfs::default().select(&s.dataset);
+        assert!(!r.selected.is_empty(), "should select something");
+        // Every selected feature must carry signal (Relevant or Redundant);
+        // pure noise features discretize to arity 1 (SU = 0).
+        for &f in &r.selected {
+            assert_ne!(
+                s.roles[f],
+                FeatureRole::Noise,
+                "selected noise feature {f}"
+            );
+        }
+    }
+
+    #[test]
+    fn merit_positive_when_signal_exists() {
+        let ds = higgs_like(&SynthConfig {
+            rows: 1_500,
+            seed: 13,
+            features: Some(12),
+        });
+        let r = SequentialCfs::default().select(&ds);
+        assert!(r.merit > 0.0);
+        assert!(r.correlations_computed > 0);
+    }
+
+    #[test]
+    fn deterministic() {
+        let ds = higgs_like(&SynthConfig {
+            rows: 1_000,
+            seed: 17,
+            features: Some(10),
+        });
+        let a = SequentialCfs::default().select(&ds);
+        let b = SequentialCfs::default().select(&ds);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn locally_predictive_flag_changes_at_most_adds() {
+        let ds = higgs_like(&SynthConfig {
+            rows: 1_500,
+            seed: 19,
+            features: Some(14),
+        });
+        let with_lp = SequentialCfs::default().select(&ds);
+        let without = SequentialCfs::new(CfsConfig {
+            locally_predictive: false,
+            ..CfsConfig::default()
+        })
+        .select(&ds);
+        // LP only ever adds features on top of the search result.
+        for f in &without.selected {
+            assert!(with_lp.selected.contains(f));
+        }
+        assert_eq!(
+            with_lp.selected.len(),
+            without.selected.len() + with_lp.locally_predictive_added.len()
+        );
+    }
+
+    #[test]
+    fn redundant_copies_are_rejected() {
+        // epsilon family has heavy redundancy; selected subset should be
+        // much smaller than the relevant+redundant pool.
+        let s = with_roles(
+            "epsilon",
+            &SynthConfig {
+                rows: 1_000,
+                seed: 23,
+                features: Some(40),
+            },
+        );
+        let r = SequentialCfs::new(CfsConfig {
+            locally_predictive: false,
+            ..CfsConfig::default()
+        })
+        .select_discrete(&crate::discretize::discretize_dataset(&s.dataset).unwrap());
+        let signal = s
+            .roles
+            .iter()
+            .filter(|r| **r != FeatureRole::Noise)
+            .count();
+        assert!(
+            r.selected.len() < signal,
+            "selected {} of {} signal features — redundancy not pruned",
+            r.selected.len(),
+            signal
+        );
+    }
+}

@@ -1,0 +1,142 @@
+//! Search states: feature subsets with incrementally-maintained
+//! correlation sums.
+//!
+//! Expanding `s ∪ {f}` reuses `Σ r_cf` and `Σ r_ff` from `s` and adds only
+//! `su(f, class)` and the k values `su(f, g), g ∈ s` — so each candidate
+//! evaluation is O(k) given cached correlations instead of O(k²) (the
+//! same trick WEKA's `CfsSubsetEval` uses).
+
+use crate::cfs::merit::merit_from_sums;
+use crate::core::FeatureId;
+
+/// One node in the best-first search space.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SearchState {
+    /// Subset members, kept sorted ascending (canonical form — used for
+    /// visited-set deduplication and deterministic tie-breaking).
+    pub features: Vec<FeatureId>,
+    /// Σ su(f, class) over members.
+    pub sum_rcf: f64,
+    /// Σ su(f_i, f_j) over member pairs.
+    pub sum_rff: f64,
+    /// Merit (Eq. 1) of this subset.
+    pub merit: f64,
+}
+
+impl SearchState {
+    /// The empty subset (merit 0) — the search root.
+    pub fn empty() -> Self {
+        Self {
+            features: vec![],
+            sum_rcf: 0.0,
+            sum_rff: 0.0,
+            merit: 0.0,
+        }
+    }
+
+    /// Number of members.
+    pub fn len(&self) -> usize {
+        self.features.len()
+    }
+
+    /// True for the empty subset.
+    pub fn is_empty(&self) -> bool {
+        self.features.is_empty()
+    }
+
+    /// Membership test (binary search on the sorted members).
+    pub fn contains(&self, f: FeatureId) -> bool {
+        self.features.binary_search(&f).is_ok()
+    }
+
+    /// Expand with feature `f` given its class correlation and its
+    /// correlations to the current members (same order as `features`).
+    pub fn expanded(&self, f: FeatureId, rcf: f64, rff_to_members: &[f64]) -> Self {
+        debug_assert_eq!(rff_to_members.len(), self.features.len());
+        debug_assert!(!self.contains(f));
+        let mut features = self.features.clone();
+        let pos = features.partition_point(|&g| g < f);
+        features.insert(pos, f);
+        let sum_rcf = self.sum_rcf + rcf;
+        let sum_rff = self.sum_rff + rff_to_members.iter().sum::<f64>();
+        let merit = merit_from_sums(features.len(), sum_rcf, sum_rff);
+        Self {
+            features,
+            sum_rcf,
+            sum_rff,
+            merit,
+        }
+    }
+
+    /// Deterministic ordering: higher merit first, then lexicographically
+    /// smaller feature list. Total order ⇒ identical search trajectories
+    /// across sequential/hp/vp runs.
+    pub fn cmp_priority(&self, other: &Self) -> std::cmp::Ordering {
+        other
+            .merit
+            .partial_cmp(&self.merit)
+            .unwrap_or(std::cmp::Ordering::Equal)
+            .then_with(|| self.features.cmp(&other.features))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn expansion_keeps_features_sorted() {
+        let s = SearchState::empty()
+            .expanded(5, 0.5, &[])
+            .expanded(2, 0.4, &[0.1])
+            .expanded(9, 0.3, &[0.0, 0.2]);
+        assert_eq!(s.features, vec![2, 5, 9]);
+        assert!(s.contains(5));
+        assert!(!s.contains(3));
+    }
+
+    #[test]
+    fn incremental_sums_match_direct() {
+        // su values: rcf = [.5, .4, .3]; rff(2,5)=.1, rff(2,9)=0, rff(5,9)=.2
+        let s = SearchState::empty()
+            .expanded(5, 0.5, &[])
+            .expanded(2, 0.4, &[0.1])
+            .expanded(9, 0.3, &[0.0, 0.2]);
+        assert!((s.sum_rcf - 1.2).abs() < 1e-12);
+        assert!((s.sum_rff - 0.3).abs() < 1e-12);
+        let direct = crate::cfs::merit::merit_from_sums(3, 1.2, 0.3);
+        assert!((s.merit - direct).abs() < 1e-12);
+    }
+
+    #[test]
+    fn priority_orders_by_merit_then_lex() {
+        let a = SearchState {
+            features: vec![1],
+            sum_rcf: 0.9,
+            sum_rff: 0.0,
+            merit: 0.9,
+        };
+        let b = SearchState {
+            features: vec![2],
+            sum_rcf: 0.5,
+            sum_rff: 0.0,
+            merit: 0.5,
+        };
+        let c = SearchState {
+            features: vec![3],
+            sum_rcf: 0.5,
+            sum_rff: 0.0,
+            merit: 0.5,
+        };
+        assert_eq!(a.cmp_priority(&b), std::cmp::Ordering::Less); // higher merit sorts first
+        assert_eq!(b.cmp_priority(&c), std::cmp::Ordering::Less); // tie → lex
+        assert_eq!(c.cmp_priority(&b), std::cmp::Ordering::Greater);
+    }
+
+    #[test]
+    fn empty_state() {
+        let e = SearchState::empty();
+        assert!(e.is_empty());
+        assert_eq!(e.merit, 0.0);
+    }
+}

@@ -1,0 +1,123 @@
+//! Shared vocabulary types for the whole stack.
+
+use std::fmt;
+
+/// Index of a feature (column) in a dataset. The class attribute is
+/// addressed separately (see [`crate::data::Dataset::class`]); feature ids
+/// always refer to predictive attributes.
+pub type FeatureId = usize;
+
+/// A pair of attributes whose correlation is requested. By convention the
+/// class attribute is encoded as `usize::MAX` via [`CLASS_ID`] so pair keys
+/// stay plain `(usize, usize)` throughout the coordinator.
+pub const CLASS_ID: FeatureId = usize::MAX;
+
+/// Canonical (unordered) key for a correlation pair: SU is symmetric, so
+/// `(a, b)` and `(b, a)` must hit the same cache entry.
+#[inline]
+pub fn pair_key(a: FeatureId, b: FeatureId) -> (FeatureId, FeatureId) {
+    if a <= b {
+        (a, b)
+    } else {
+        (b, a)
+    }
+}
+
+/// Crate-wide error type (hand-rolled: `thiserror` is not vendored here).
+#[derive(Debug)]
+pub enum Error {
+    /// Input data malformed or inconsistent (shape mismatch, bad bin, ...).
+    InvalidData(String),
+    /// Configuration outside the supported envelope.
+    InvalidConfig(String),
+    /// Artifact registry / PJRT runtime failures.
+    Runtime(String),
+    /// Filesystem / parsing failures.
+    Io(String),
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Error::InvalidData(m) => write!(f, "invalid data: {m}"),
+            Error::InvalidConfig(m) => write!(f, "invalid config: {m}"),
+            Error::Runtime(m) => write!(f, "runtime error: {m}"),
+            Error::Io(m) => write!(f, "io error: {m}"),
+        }
+    }
+}
+
+impl std::error::Error for Error {}
+
+impl From<std::io::Error> for Error {
+    fn from(e: std::io::Error) -> Self {
+        Error::Io(e.to_string())
+    }
+}
+
+/// Crate-wide result alias.
+pub type Result<T> = std::result::Result<T, Error>;
+
+/// The outcome of a feature-selection run: the paper's deliverable plus the
+/// bookkeeping the harness reports.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SelectionResult {
+    /// Selected feature ids, ascending.
+    pub selected: Vec<FeatureId>,
+    /// Merit (Eq. 1) of the selected subset *before* the locally-predictive
+    /// post-step (the post-step adds features outside the merit criterion).
+    pub merit: f64,
+    /// Number of best-first iterations executed.
+    pub iterations: usize,
+    /// Number of distinct correlations computed (the on-demand ablation
+    /// counts these against C(m+1, 2)).
+    pub correlations_computed: usize,
+    /// Features appended by the locally-predictive post-step (subset of
+    /// `selected`).
+    pub locally_predictive_added: Vec<FeatureId>,
+}
+
+impl SelectionResult {
+    /// True when both runs selected exactly the same subset — the paper's
+    /// equivalence claim ("exactly the same features were returned").
+    pub fn same_selection(&self, other: &SelectionResult) -> bool {
+        self.selected == other.selected
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pair_key_is_canonical() {
+        assert_eq!(pair_key(3, 7), (3, 7));
+        assert_eq!(pair_key(7, 3), (3, 7));
+        assert_eq!(pair_key(5, 5), (5, 5));
+        assert_eq!(pair_key(CLASS_ID, 0), (0, CLASS_ID));
+    }
+
+    #[test]
+    fn error_display_is_informative() {
+        let e = Error::InvalidData("bad bin".into());
+        assert!(e.to_string().contains("bad bin"));
+        let io: Error = std::io::Error::new(std::io::ErrorKind::NotFound, "nope").into();
+        assert!(io.to_string().contains("nope"));
+    }
+
+    #[test]
+    fn same_selection_compares_subsets_only() {
+        let a = SelectionResult {
+            selected: vec![1, 2],
+            merit: 0.5,
+            iterations: 3,
+            correlations_computed: 10,
+            locally_predictive_added: vec![],
+        };
+        let mut b = a.clone();
+        b.merit = 0.9;
+        assert!(a.same_selection(&b));
+        b.selected = vec![1, 3];
+        assert!(!a.same_selection(&b));
+    }
+}

@@ -1,0 +1,189 @@
+//! Contingency tables — the paper's Algorithm 2 data structure.
+//!
+//! A table counts co-occurrences of two discretized features' bins. It is
+//! the unit that workers compute locally and the driver merges by
+//! element-wise sum (`reduceByKey(sum)` in Eq. 4). Counts are `u64`
+//! (exact), so merges are associative/commutative and the distributed
+//! result is bit-identical to the sequential one regardless of partition
+//! order — the foundation of the hp ≡ vp ≡ sequential equivalence test.
+
+use crate::core::{Error, Result};
+
+/// Dense 2-D count table, row-major: `counts[x * bins_y + y]`.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ContingencyTable {
+    /// Arity of the first (row) variable.
+    pub bins_x: u16,
+    /// Arity of the second (column) variable.
+    pub bins_y: u16,
+    /// Row-major counts, length `bins_x * bins_y`.
+    pub counts: Vec<u64>,
+}
+
+impl ContingencyTable {
+    /// Empty table of the given shape.
+    pub fn new(bins_x: u16, bins_y: u16) -> Self {
+        Self {
+            bins_x,
+            bins_y,
+            counts: vec![0; bins_x as usize * bins_y as usize],
+        }
+    }
+
+    /// Count one co-occurrence.
+    #[inline]
+    pub fn bump(&mut self, x: u8, y: u8) {
+        debug_assert!(u16::from(x) < self.bins_x && u16::from(y) < self.bins_y);
+        self.counts[x as usize * self.bins_y as usize + y as usize] += 1;
+    }
+
+    /// Build from two aligned columns — the sequential Algorithm 2.
+    ///
+    /// This is the L3 numeric hot loop (EXPERIMENTS.md §Perf): a dense
+    /// scatter-count. Bin indices are validated against the arity by
+    /// `DiscreteDataset::new`, so the unchecked indexing below cannot go
+    /// out of bounds for any dataset constructed through the public API;
+    /// a debug assertion still guards test builds.
+    pub fn from_columns(x: &[u8], bins_x: u16, y: &[u8], bins_y: u16) -> Self {
+        debug_assert_eq!(x.len(), y.len());
+        let mut t = Self::new(bins_x, bins_y);
+        let by = bins_y as usize;
+        let counts = &mut t.counts[..];
+        for (&xv, &yv) in x.iter().zip(y.iter()) {
+            let idx = xv as usize * by + yv as usize;
+            debug_assert!(idx < counts.len());
+            // SAFETY: xv < bins_x and yv < bins_y are dataset invariants
+            // (checked at construction), so idx < bins_x*bins_y = len.
+            unsafe { *counts.get_unchecked_mut(idx) += 1 };
+        }
+        t
+    }
+
+    /// Build from a row range of two columns (one partition's share).
+    pub fn from_columns_range(
+        x: &[u8],
+        bins_x: u16,
+        y: &[u8],
+        bins_y: u16,
+        range: std::ops::Range<usize>,
+    ) -> Self {
+        Self::from_columns(&x[range.clone()], bins_x, &y[range], bins_y)
+    }
+
+    /// Element-wise merge (the `reduceByKey` combiner). Errors on shape
+    /// mismatch — merging tables of different pairs is a coordinator bug.
+    pub fn merge(&mut self, other: &ContingencyTable) -> Result<()> {
+        if self.bins_x != other.bins_x || self.bins_y != other.bins_y {
+            return Err(Error::InvalidData(format!(
+                "merge shape mismatch: {}x{} vs {}x{}",
+                self.bins_x, self.bins_y, other.bins_x, other.bins_y
+            )));
+        }
+        for (a, b) in self.counts.iter_mut().zip(&other.counts) {
+            *a += b;
+        }
+        Ok(())
+    }
+
+    /// Total count (number of contributing instances).
+    pub fn total(&self) -> u64 {
+        self.counts.iter().sum()
+    }
+
+    /// Row marginals (counts of the first variable).
+    pub fn row_marginals(&self) -> Vec<u64> {
+        let by = self.bins_y as usize;
+        (0..self.bins_x as usize)
+            .map(|x| self.counts[x * by..(x + 1) * by].iter().sum())
+            .collect()
+    }
+
+    /// Column marginals (counts of the second variable).
+    pub fn col_marginals(&self) -> Vec<u64> {
+        let by = self.bins_y as usize;
+        let mut m = vec![0u64; by];
+        for x in 0..self.bins_x as usize {
+            for y in 0..by {
+                m[y] += self.counts[x * by + y];
+            }
+        }
+        m
+    }
+
+    /// Transposed table (SU symmetry tests).
+    pub fn transposed(&self) -> Self {
+        let mut t = Self::new(self.bins_y, self.bins_x);
+        let by = self.bins_y as usize;
+        let bx = self.bins_x as usize;
+        for x in 0..bx {
+            for y in 0..by {
+                t.counts[y * bx + x] = self.counts[x * by + y];
+            }
+        }
+        t
+    }
+
+    /// Serialized size in bytes when shipped through a (simulated) shuffle:
+    /// shape header + one u64 per cell. The sparklet cost model charges
+    /// this amount per table per network hop.
+    pub fn wire_bytes(&self) -> usize {
+        4 + self.counts.len() * 8
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn from_columns_counts_correctly() {
+        let x = [0u8, 0, 1, 1, 1];
+        let y = [0u8, 1, 0, 1, 1];
+        let t = ContingencyTable::from_columns(&x, 2, &y, 2);
+        assert_eq!(t.counts, vec![1, 1, 1, 2]);
+        assert_eq!(t.total(), 5);
+    }
+
+    #[test]
+    fn marginals() {
+        let t = ContingencyTable::from_columns(&[0, 0, 1, 2], 3, &[1, 0, 1, 1], 2);
+        assert_eq!(t.row_marginals(), vec![2, 1, 1]);
+        assert_eq!(t.col_marginals(), vec![1, 3]);
+    }
+
+    #[test]
+    fn merge_equals_whole() {
+        // Partition-wise tables merged == whole-column table: the exact
+        // property Eq. 4 relies on.
+        let x = [0u8, 1, 0, 1, 1, 0, 0, 1];
+        let y = [1u8, 1, 0, 0, 1, 1, 0, 0];
+        let whole = ContingencyTable::from_columns(&x, 2, &y, 2);
+        let mut merged = ContingencyTable::from_columns_range(&x, 2, &y, 2, 0..3);
+        merged
+            .merge(&ContingencyTable::from_columns_range(&x, 2, &y, 2, 3..8))
+            .unwrap();
+        assert_eq!(whole, merged);
+    }
+
+    #[test]
+    fn merge_rejects_shape_mismatch() {
+        let mut a = ContingencyTable::new(2, 2);
+        let b = ContingencyTable::new(2, 3);
+        assert!(a.merge(&b).is_err());
+    }
+
+    #[test]
+    fn transpose_swaps_marginals() {
+        let t = ContingencyTable::from_columns(&[0, 0, 1, 2], 3, &[1, 0, 1, 1], 2);
+        let tt = t.transposed();
+        assert_eq!(tt.row_marginals(), t.col_marginals());
+        assert_eq!(tt.col_marginals(), t.row_marginals());
+        assert_eq!(tt.total(), t.total());
+    }
+
+    #[test]
+    fn wire_bytes_tracks_shape() {
+        assert_eq!(ContingencyTable::new(2, 2).wire_bytes(), 4 + 4 * 8);
+        assert_eq!(ContingencyTable::new(32, 32).wire_bytes(), 4 + 1024 * 8);
+    }
+}

@@ -1,0 +1,113 @@
+//! Base-2 entropies from contingency tables (paper Eq. 3).
+//!
+//! All computation is in f64 over exact u64 counts, so results are
+//! deterministic and independent of partition order. Mirrors
+//! `entropies_ref` in python/compile/kernels/ref.py (pinned by
+//! `artifacts/fixtures/entropy_golden.tsv`).
+
+use crate::correlation::ctable::ContingencyTable;
+use crate::util::stats::plogp;
+
+/// Marginal and joint entropies of a table: `(H(X), H(Y), H(X,Y))`.
+/// An empty table yields `(0, 0, 0)`.
+pub fn entropies(t: &ContingencyTable) -> (f64, f64, f64) {
+    let total = t.total();
+    if total == 0 {
+        return (0.0, 0.0, 0.0);
+    }
+    let tf = total as f64;
+
+    let hx = -t
+        .row_marginals()
+        .iter()
+        .map(|&c| plogp(c as f64 / tf))
+        .sum::<f64>();
+    let hy = -t
+        .col_marginals()
+        .iter()
+        .map(|&c| plogp(c as f64 / tf))
+        .sum::<f64>();
+    let hxy = -t.counts.iter().map(|&c| plogp(c as f64 / tf)).sum::<f64>();
+    (hx, hy, hxy)
+}
+
+/// Entropy of a single discretized column (used by the MDL discretizer).
+pub fn column_entropy(col: &[u8], arity: u16) -> f64 {
+    if col.is_empty() {
+        return 0.0;
+    }
+    let mut counts = vec![0u64; arity as usize];
+    for &v in col {
+        counts[v as usize] += 1;
+    }
+    entropy_of_counts(&counts)
+}
+
+/// Entropy of a count histogram.
+pub fn entropy_of_counts(counts: &[u64]) -> f64 {
+    let total: u64 = counts.iter().sum();
+    if total == 0 {
+        return 0.0;
+    }
+    let tf = total as f64;
+    -counts.iter().map(|&c| plogp(c as f64 / tf)).sum::<f64>()
+}
+
+/// Conditional entropy `H(X|Y) = H(X,Y) − H(Y)` from a table.
+pub fn conditional_entropy(t: &ContingencyTable) -> f64 {
+    let (_, hy, hxy) = entropies(t);
+    hxy - hy
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn uniform_binary_entropy_is_one() {
+        let t = ContingencyTable::from_columns(&[0, 1, 0, 1], 2, &[0, 0, 1, 1], 2);
+        let (hx, hy, hxy) = entropies(&t);
+        assert!((hx - 1.0).abs() < 1e-12);
+        assert!((hy - 1.0).abs() < 1e-12);
+        assert!((hxy - 2.0).abs() < 1e-12); // independent uniform
+    }
+
+    #[test]
+    fn deterministic_relation_has_hxy_eq_hx() {
+        // y == x: joint entropy equals marginal entropy.
+        let x = [0u8, 1, 0, 1, 1, 0];
+        let t = ContingencyTable::from_columns(&x, 2, &x, 2);
+        let (hx, hy, hxy) = entropies(&t);
+        assert!((hx - hy).abs() < 1e-12);
+        assert!((hxy - hx).abs() < 1e-12);
+        assert!(conditional_entropy(&t).abs() < 1e-12);
+    }
+
+    #[test]
+    fn empty_table_zero_entropies() {
+        let t = ContingencyTable::new(4, 4);
+        assert_eq!(entropies(&t), (0.0, 0.0, 0.0));
+    }
+
+    #[test]
+    fn constant_column_zero_entropy() {
+        assert_eq!(column_entropy(&[2, 2, 2, 2], 4), 0.0);
+    }
+
+    #[test]
+    fn column_entropy_matches_histogram() {
+        let col = [0u8, 0, 1, 2, 2, 2];
+        let h = column_entropy(&col, 3);
+        let expect = entropy_of_counts(&[2, 1, 3]);
+        assert!((h - expect).abs() < 1e-12);
+    }
+
+    #[test]
+    fn entropy_bounds() {
+        // H ≤ log2(arity)
+        let col: Vec<u8> = (0..100).map(|i| (i % 8) as u8).collect();
+        let h = column_entropy(&col, 8);
+        assert!(h <= 3.0 + 1e-12);
+        assert!(h > 2.9); // near-uniform
+    }
+}

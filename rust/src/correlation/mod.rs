@@ -1,0 +1,17 @@
+//! Information-theoretic and statistical correlation measures.
+//!
+//! This is the numeric core of CFS (paper §3): contingency tables →
+//! entropies → symmetrical uncertainty (Eq. 2–3), plus Pearson correlation
+//! for the RegCFS comparison (Table 2). The math here mirrors
+//! `python/compile/kernels/ref.py` exactly — the golden fixtures in
+//! `artifacts/fixtures/` pin both sides together.
+
+pub mod cache;
+pub mod ctable;
+pub mod entropy;
+pub mod pearson;
+pub mod su;
+
+pub use cache::CorrelationCache;
+pub use ctable::ContingencyTable;
+pub use su::{su_from_table, symmetrical_uncertainty};

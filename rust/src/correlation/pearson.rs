@@ -1,0 +1,142 @@
+//! Pearson correlation via distributable sufficient statistics.
+//!
+//! Used by the RegCFS comparison (paper Table 2, after Eiras-Franco et
+//! al.): for regression problems all attributes are numeric and CFS merit
+//! uses `|pearson|`. The sufficient-statistics form makes the distributed
+//! version a single `reduce` — each partition contributes
+//! `(n, Σx, Σy, Σx², Σy², Σxy)` and merge is component-wise addition.
+
+/// Accumulated sufficient statistics for one (x, y) pair.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct PearsonStats {
+    /// Count of accumulated observations.
+    pub n: u64,
+    /// Σx
+    pub sx: f64,
+    /// Σy
+    pub sy: f64,
+    /// Σx²
+    pub sxx: f64,
+    /// Σy²
+    pub syy: f64,
+    /// Σxy
+    pub sxy: f64,
+}
+
+impl PearsonStats {
+    /// Accumulate one observation.
+    #[inline]
+    pub fn push(&mut self, x: f64, y: f64) {
+        self.n += 1;
+        self.sx += x;
+        self.sy += y;
+        self.sxx += x * x;
+        self.syy += y * y;
+        self.sxy += x * y;
+    }
+
+    /// Accumulate a pair of aligned slices.
+    pub fn from_slices(x: &[f32], y: &[f32]) -> Self {
+        debug_assert_eq!(x.len(), y.len());
+        let mut s = Self::default();
+        for (&a, &b) in x.iter().zip(y) {
+            s.push(f64::from(a), f64::from(b));
+        }
+        s
+    }
+
+    /// Merge another partition's statistics (commutative, associative).
+    pub fn merge(&mut self, o: &PearsonStats) {
+        self.n += o.n;
+        self.sx += o.sx;
+        self.sy += o.sy;
+        self.sxx += o.sxx;
+        self.syy += o.syy;
+        self.sxy += o.sxy;
+    }
+
+    /// Finish: Pearson r in [-1, 1]; 0 when either variable is constant.
+    pub fn correlation(&self) -> f64 {
+        if self.n == 0 {
+            return 0.0;
+        }
+        let n = self.n as f64;
+        let cov = self.sxy - self.sx * self.sy / n;
+        let vx = self.sxx - self.sx * self.sx / n;
+        let vy = self.syy - self.sy * self.sy / n;
+        if vx <= 0.0 || vy <= 0.0 {
+            return 0.0;
+        }
+        (cov / (vx.sqrt() * vy.sqrt())).clamp(-1.0, 1.0)
+    }
+
+    /// Bytes shipped per stats record in the simulated shuffle.
+    pub const WIRE_BYTES: usize = 8 * 6;
+}
+
+/// Direct Pearson correlation of two slices.
+pub fn pearson(x: &[f32], y: &[f32]) -> f64 {
+    PearsonStats::from_slices(x, y).correlation()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::XorShift64Star;
+
+    #[test]
+    fn perfect_positive_and_negative() {
+        let x: Vec<f32> = (0..50).map(|i| i as f32).collect();
+        let y: Vec<f32> = x.iter().map(|v| 2.0 * v + 1.0).collect();
+        let z: Vec<f32> = x.iter().map(|v| -0.5 * v).collect();
+        assert!((pearson(&x, &y) - 1.0).abs() < 1e-9);
+        assert!((pearson(&x, &z) + 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn constant_input_is_zero() {
+        let x = vec![3.0f32; 10];
+        let y: Vec<f32> = (0..10).map(|i| i as f32).collect();
+        assert_eq!(pearson(&x, &y), 0.0);
+        assert_eq!(pearson(&y, &x), 0.0);
+    }
+
+    #[test]
+    fn empty_is_zero() {
+        assert_eq!(pearson(&[], &[]), 0.0);
+    }
+
+    #[test]
+    fn merge_equals_whole() {
+        let mut rng = XorShift64Star::new(3);
+        let x: Vec<f32> = (0..1000).map(|_| rng.next_gaussian() as f32).collect();
+        let y: Vec<f32> = x
+            .iter()
+            .map(|v| v * 0.7 + rng.next_gaussian() as f32 * 0.3)
+            .collect();
+        let whole = PearsonStats::from_slices(&x, &y);
+        let mut merged = PearsonStats::from_slices(&x[..400], &y[..400]);
+        merged.merge(&PearsonStats::from_slices(&x[400..], &y[400..]));
+        assert!((whole.correlation() - merged.correlation()).abs() < 1e-12);
+        assert_eq!(whole.n, merged.n);
+    }
+
+    #[test]
+    fn noise_decorrelates() {
+        let mut rng = XorShift64Star::new(5);
+        let x: Vec<f32> = (0..5000).map(|_| rng.next_gaussian() as f32).collect();
+        let y: Vec<f32> = (0..5000).map(|_| rng.next_gaussian() as f32).collect();
+        assert!(pearson(&x, &y).abs() < 0.05);
+    }
+
+    #[test]
+    fn clamped_to_unit_range() {
+        let mut rng = XorShift64Star::new(7);
+        for _ in 0..20 {
+            let x: Vec<f32> = (0..100).map(|_| rng.next_gaussian() as f32).collect();
+            let y: Vec<f32> = (0..100).map(|_| rng.next_gaussian() as f32).collect();
+            let r = pearson(&x, &y);
+            assert!((-1.0..=1.0).contains(&r));
+        }
+    }
+}

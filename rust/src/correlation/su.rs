@@ -1,0 +1,121 @@
+//! Symmetrical uncertainty (paper Eq. 2) — the CFS correlation measure.
+//!
+//! `SU(X, Y) = 2·(H(X) + H(Y) − H(X,Y)) / (H(X) + H(Y))`, i.e.
+//! `2·(H(X) − H(X|Y)) / (H(X) + H(Y))` as in the paper. Conventions match
+//! WEKA's `ContingencyTables.symmetricalUncertainty` and the python oracle:
+//! SU = 0 when the denominator is 0 (both variables constant) or the table
+//! is empty.
+
+use crate::correlation::ctable::ContingencyTable;
+use crate::correlation::entropy::entropies;
+
+/// SU from a contingency table.
+pub fn su_from_table(t: &ContingencyTable) -> f64 {
+    let total = t.total();
+    if total == 0 {
+        return 0.0;
+    }
+    let (hx, hy, hxy) = entropies(t);
+    let denom = hx + hy;
+    if denom <= 0.0 {
+        return 0.0;
+    }
+    // Clamp tiny negative gains from float rounding: information gain
+    // hx + hy − hxy is mathematically ≥ 0.
+    (2.0 * (hx + hy - hxy) / denom).max(0.0)
+}
+
+/// SU of two aligned discretized columns.
+pub fn symmetrical_uncertainty(x: &[u8], bins_x: u16, y: &[u8], bins_y: u16) -> f64 {
+    su_from_table(&ContingencyTable::from_columns(x, bins_x, y, bins_y))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::XorShift64Star;
+
+    #[test]
+    fn identical_columns_su_one() {
+        let x = [0u8, 1, 2, 0, 1, 2, 1, 1];
+        assert!((symmetrical_uncertainty(&x, 3, &x, 3) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn independent_uniform_su_zero() {
+        // Exactly balanced product table.
+        let mut x = Vec::new();
+        let mut y = Vec::new();
+        for a in 0..4u8 {
+            for b in 0..4u8 {
+                x.push(a);
+                y.push(b);
+            }
+        }
+        assert!(symmetrical_uncertainty(&x, 4, &y, 4).abs() < 1e-12);
+    }
+
+    #[test]
+    fn constant_column_su_zero() {
+        let x = [1u8; 10];
+        let y = [0u8, 1, 0, 1, 0, 1, 0, 1, 0, 1];
+        assert_eq!(symmetrical_uncertainty(&x, 2, &y, 2), 0.0);
+        assert_eq!(symmetrical_uncertainty(&y, 2, &x, 2), 0.0);
+    }
+
+    #[test]
+    fn both_constant_su_zero() {
+        let x = [0u8; 5];
+        assert_eq!(symmetrical_uncertainty(&x, 1, &x, 1), 0.0);
+    }
+
+    #[test]
+    fn empty_table_su_zero() {
+        assert_eq!(su_from_table(&ContingencyTable::new(3, 3)), 0.0);
+    }
+
+    #[test]
+    fn su_is_symmetric() {
+        let mut rng = XorShift64Star::new(17);
+        for _ in 0..20 {
+            let x: Vec<u8> = (0..200).map(|_| rng.next_below(5) as u8).collect();
+            let y: Vec<u8> = (0..200).map(|_| rng.next_below(3) as u8).collect();
+            let a = symmetrical_uncertainty(&x, 5, &y, 3);
+            let b = symmetrical_uncertainty(&y, 3, &x, 5);
+            assert!((a - b).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn su_in_unit_interval() {
+        let mut rng = XorShift64Star::new(29);
+        for _ in 0..50 {
+            let x: Vec<u8> = (0..100).map(|_| rng.next_below(8) as u8).collect();
+            let y: Vec<u8> = (0..100).map(|_| rng.next_below(8) as u8).collect();
+            let su = symmetrical_uncertainty(&x, 8, &y, 8);
+            assert!((0.0..=1.0 + 1e-12).contains(&su), "su={su}");
+        }
+    }
+
+    #[test]
+    fn noisy_copy_su_decreases_with_noise() {
+        let mut rng = XorShift64Star::new(31);
+        let x: Vec<u8> = (0..2000).map(|_| rng.next_below(4) as u8).collect();
+        let flip = |noise: f64, rng: &mut XorShift64Star| -> Vec<u8> {
+            x.iter()
+                .map(|&v| {
+                    if rng.next_f64() < noise {
+                        rng.next_below(4) as u8
+                    } else {
+                        v
+                    }
+                })
+                .collect()
+        };
+        let y_low = flip(0.05, &mut rng);
+        let y_high = flip(0.5, &mut rng);
+        let su_low = symmetrical_uncertainty(&x, 4, &y_low, 4);
+        let su_high = symmetrical_uncertainty(&x, 4, &y_high, 4);
+        assert!(su_low > su_high, "{su_low} should exceed {su_high}");
+    }
+}

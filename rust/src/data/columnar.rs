@@ -1,0 +1,286 @@
+//! Column-major dataset storage.
+//!
+//! Two representations:
+//! * [`Dataset`] — raw mixed-type data as generated/loaded (numeric f32
+//!   columns + categorical u8 columns). This is what the discretizer
+//!   consumes.
+//! * [`DiscreteDataset`] — everything binned to `u8` indices with known
+//!   per-column arity. This is the *only* representation the CFS search
+//!   and both DiCFS partitioning schemes touch; bin count is capped at
+//!   [`DiscreteDataset::MAX_BINS`] to match the AOT kernel tile (B = 32).
+
+use crate::core::{Error, Result};
+use crate::data::schema::{FeatureKind, Schema};
+
+/// One raw feature column.
+#[derive(Debug, Clone)]
+pub enum Column {
+    /// Real-valued feature.
+    Numeric(Vec<f32>),
+    /// Categorical feature: value indices plus arity.
+    Categorical { values: Vec<u8>, arity: u16 },
+}
+
+impl Column {
+    /// Number of rows in the column.
+    pub fn len(&self) -> usize {
+        match self {
+            Column::Numeric(v) => v.len(),
+            Column::Categorical { values, .. } => values.len(),
+        }
+    }
+
+    /// True when the column has no rows.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// The schema kind of this column.
+    pub fn kind(&self) -> FeatureKind {
+        match self {
+            Column::Numeric(_) => FeatureKind::Numeric,
+            Column::Categorical { arity, .. } => FeatureKind::Categorical { arity: *arity },
+        }
+    }
+}
+
+/// A raw (pre-discretization) dataset: mixed columns + class labels.
+#[derive(Debug, Clone)]
+pub struct Dataset {
+    /// Human-readable name (used by the harness reports).
+    pub name: String,
+    /// Predictive feature columns, all the same length.
+    pub features: Vec<Column>,
+    /// Class labels, one per row.
+    pub class: Vec<u8>,
+    /// Number of distinct class labels.
+    pub class_arity: u16,
+}
+
+impl Dataset {
+    /// Validate internal consistency and build.
+    pub fn new(
+        name: impl Into<String>,
+        features: Vec<Column>,
+        class: Vec<u8>,
+        class_arity: u16,
+    ) -> Result<Self> {
+        let n = class.len();
+        for (i, c) in features.iter().enumerate() {
+            if c.len() != n {
+                return Err(Error::InvalidData(format!(
+                    "column {i} has {} rows, class has {n}",
+                    c.len()
+                )));
+            }
+        }
+        if let Some(&mx) = class.iter().max() {
+            if u16::from(mx) >= class_arity {
+                return Err(Error::InvalidData(format!(
+                    "class label {mx} >= arity {class_arity}"
+                )));
+            }
+        }
+        Ok(Self {
+            name: name.into(),
+            features,
+            class,
+            class_arity,
+        })
+    }
+
+    /// Number of rows (instances).
+    pub fn num_rows(&self) -> usize {
+        self.class.len()
+    }
+
+    /// Number of predictive features.
+    pub fn num_features(&self) -> usize {
+        self.features.len()
+    }
+
+    /// Derive the schema of this dataset.
+    pub fn schema(&self) -> Schema {
+        Schema::new(
+            self.features.iter().map(|c| c.kind()).collect(),
+            self.class_arity,
+        )
+    }
+}
+
+/// A fully discretized dataset: the CFS working representation.
+///
+/// `cols[f][r]` is the bin index of feature `f` at row `r`; `arities[f]`
+/// is its bin count. All arities are ≤ [`Self::MAX_BINS`].
+#[derive(Debug, Clone)]
+pub struct DiscreteDataset {
+    /// Dataset name, carried through from the raw dataset.
+    pub name: String,
+    /// Bin indices, column-major.
+    pub cols: Vec<Vec<u8>>,
+    /// Bin count per feature column.
+    pub arities: Vec<u16>,
+    /// Class labels.
+    pub class: Vec<u8>,
+    /// Number of class labels.
+    pub class_arity: u16,
+}
+
+impl DiscreteDataset {
+    /// Maximum bins per feature — matches the AOT kernel tile (B = 32).
+    /// The MDL discretizer rarely produces more than ~10 cut points; the
+    /// cap only bites on high-arity categorical features, which are
+    /// re-binned by frequency (see `discretize::cap_arity`).
+    pub const MAX_BINS: u16 = 32;
+
+    /// Validate and build.
+    pub fn new(
+        name: impl Into<String>,
+        cols: Vec<Vec<u8>>,
+        arities: Vec<u16>,
+        class: Vec<u8>,
+        class_arity: u16,
+    ) -> Result<Self> {
+        if cols.len() != arities.len() {
+            return Err(Error::InvalidData(format!(
+                "{} columns but {} arities",
+                cols.len(),
+                arities.len()
+            )));
+        }
+        let n = class.len();
+        for (f, col) in cols.iter().enumerate() {
+            if col.len() != n {
+                return Err(Error::InvalidData(format!(
+                    "column {f}: {} rows vs class {n}",
+                    col.len()
+                )));
+            }
+            let a = arities[f];
+            if a == 0 || a > Self::MAX_BINS {
+                return Err(Error::InvalidData(format!(
+                    "column {f}: arity {a} outside 1..={}",
+                    Self::MAX_BINS
+                )));
+            }
+            if let Some(&mx) = col.iter().max() {
+                if u16::from(mx) >= a {
+                    return Err(Error::InvalidData(format!(
+                        "column {f}: bin {mx} >= arity {a}"
+                    )));
+                }
+            }
+        }
+        if u16::from(class.iter().copied().max().unwrap_or(0)) >= class_arity {
+            return Err(Error::InvalidData("class label >= class arity".into()));
+        }
+        Ok(Self {
+            name: name.into(),
+            cols,
+            arities,
+            class,
+            class_arity,
+        })
+    }
+
+    /// Number of rows.
+    pub fn num_rows(&self) -> usize {
+        self.class.len()
+    }
+
+    /// Number of predictive features.
+    pub fn num_features(&self) -> usize {
+        self.cols.len()
+    }
+
+    /// Column accessor that treats [`crate::core::CLASS_ID`] as the class
+    /// column — the correlation path addresses class/feature uniformly.
+    pub fn column(&self, id: usize) -> (&[u8], u16) {
+        if id == crate::core::CLASS_ID {
+            (&self.class, self.class_arity)
+        } else {
+            (&self.cols[id], self.arities[id])
+        }
+    }
+
+    /// Rough in-memory footprint in bytes (used by harness reports).
+    pub fn footprint_bytes(&self) -> usize {
+        self.cols.iter().map(|c| c.len()).sum::<usize>() + self.class.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny() -> DiscreteDataset {
+        DiscreteDataset::new(
+            "t",
+            vec![vec![0, 1, 1, 0], vec![2, 0, 1, 2]],
+            vec![2, 3],
+            vec![0, 1, 1, 0],
+            2,
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn dataset_validates_row_counts() {
+        let err = Dataset::new(
+            "x",
+            vec![Column::Numeric(vec![1.0, 2.0])],
+            vec![0, 1, 0],
+            2,
+        );
+        assert!(err.is_err());
+    }
+
+    #[test]
+    fn dataset_validates_class_labels() {
+        let err = Dataset::new("x", vec![], vec![0, 5], 2);
+        assert!(err.is_err());
+    }
+
+    #[test]
+    fn discrete_validates_bins_against_arity() {
+        let err = DiscreteDataset::new("t", vec![vec![0, 3]], vec![2], vec![0, 0], 1);
+        assert!(err.is_err());
+    }
+
+    #[test]
+    fn discrete_rejects_oversized_arity() {
+        let err = DiscreteDataset::new("t", vec![vec![0]], vec![33], vec![0], 1);
+        assert!(err.is_err());
+    }
+
+    #[test]
+    fn column_accessor_handles_class_id() {
+        let d = tiny();
+        let (c, a) = d.column(crate::core::CLASS_ID);
+        assert_eq!(c, &[0, 1, 1, 0]);
+        assert_eq!(a, 2);
+        let (f1, a1) = d.column(1);
+        assert_eq!(f1, &[2, 0, 1, 2]);
+        assert_eq!(a1, 3);
+    }
+
+    #[test]
+    fn schema_roundtrip() {
+        let ds = Dataset::new(
+            "x",
+            vec![
+                Column::Numeric(vec![1.0]),
+                Column::Categorical {
+                    values: vec![0],
+                    arity: 4,
+                },
+            ],
+            vec![0],
+            2,
+        )
+        .unwrap();
+        let s = ds.schema();
+        assert_eq!(s.num_features(), 2);
+        assert_eq!(s.kinds[1], FeatureKind::Categorical { arity: 4 });
+    }
+}

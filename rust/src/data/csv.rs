@@ -1,0 +1,240 @@
+//! Minimal CSV reader/writer for [`Dataset`].
+//!
+//! Format: header row `f0,f1,...,class`; numeric cells parse as f32,
+//! categorical columns are declared by a `#types` comment line
+//! (`n` = numeric, `cN` = categorical with arity N), e.g.
+//!
+//! ```text
+//! #types n,c3,n
+//! f0,f1,f2,class
+//! 0.5,2,1.25,0
+//! ```
+//!
+//! This exists so users can run the selector on their own data
+//! (`dicfs select --csv file.csv`); the harness itself uses the synthetic
+//! generators.
+
+use std::io::{BufRead, BufReader, Write};
+use std::path::Path;
+
+use crate::core::{Error, Result};
+use crate::data::columnar::{Column, Dataset};
+
+/// Parse a dataset from CSV (see module docs for the format).
+pub fn read_csv(path: &Path) -> Result<Dataset> {
+    let f = std::fs::File::open(path)?;
+    let mut lines = BufReader::new(f).lines();
+
+    let types_line = lines
+        .next()
+        .ok_or_else(|| Error::Io("empty csv".into()))??;
+    let types = parse_types(&types_line)?;
+
+    let _header = lines
+        .next()
+        .ok_or_else(|| Error::Io("missing header".into()))??;
+
+    let mut numeric: Vec<Vec<f32>> = Vec::new();
+    let mut categorical: Vec<Vec<u8>> = Vec::new();
+    for t in &types {
+        match t {
+            TypeSpec::Numeric => numeric.push(Vec::new()),
+            TypeSpec::Categorical(_) => categorical.push(Vec::new()),
+        }
+    }
+    let mut class: Vec<u8> = Vec::new();
+    let mut class_max = 0u8;
+
+    for (lineno, line) in lines.enumerate() {
+        let line = line?;
+        if line.trim().is_empty() {
+            continue;
+        }
+        let cells: Vec<&str> = line.split(',').collect();
+        if cells.len() != types.len() + 1 {
+            return Err(Error::InvalidData(format!(
+                "line {}: {} cells, expected {}",
+                lineno + 3,
+                cells.len(),
+                types.len() + 1
+            )));
+        }
+        let (mut ni, mut ci) = (0usize, 0usize);
+        for (cell, t) in cells[..types.len()].iter().zip(&types) {
+            match t {
+                TypeSpec::Numeric => {
+                    let v: f32 = cell.trim().parse().map_err(|e| {
+                        Error::InvalidData(format!("line {}: bad f32 {cell:?}: {e}", lineno + 3))
+                    })?;
+                    numeric[ni].push(v);
+                    ni += 1;
+                }
+                TypeSpec::Categorical(arity) => {
+                    let v: u8 = cell.trim().parse().map_err(|e| {
+                        Error::InvalidData(format!("line {}: bad label {cell:?}: {e}", lineno + 3))
+                    })?;
+                    if u16::from(v) >= *arity {
+                        return Err(Error::InvalidData(format!(
+                            "line {}: category {v} >= arity {arity}",
+                            lineno + 3
+                        )));
+                    }
+                    categorical[ci].push(v);
+                    ci += 1;
+                }
+            }
+        }
+        let c: u8 = cells[types.len()].trim().parse().map_err(|e| {
+            Error::InvalidData(format!("line {}: bad class: {e}", lineno + 3))
+        })?;
+        class_max = class_max.max(c);
+        class.push(c);
+    }
+
+    let (mut ni, mut ci) = (0usize, 0usize);
+    let features = types
+        .iter()
+        .map(|t| match t {
+            TypeSpec::Numeric => {
+                let c = Column::Numeric(std::mem::take(&mut numeric[ni]));
+                ni += 1;
+                c
+            }
+            TypeSpec::Categorical(arity) => {
+                let c = Column::Categorical {
+                    values: std::mem::take(&mut categorical[ci]),
+                    arity: *arity,
+                };
+                ci += 1;
+                c
+            }
+        })
+        .collect();
+
+    let name = path
+        .file_stem()
+        .map(|s| s.to_string_lossy().into_owned())
+        .unwrap_or_else(|| "csv".into());
+    Dataset::new(name, features, class, u16::from(class_max) + 1)
+}
+
+/// Write a dataset to CSV in the format [`read_csv`] accepts.
+pub fn write_csv(ds: &Dataset, path: &Path) -> Result<()> {
+    let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
+    let types: Vec<String> = ds
+        .features
+        .iter()
+        .map(|c| match c {
+            Column::Numeric(_) => "n".to_string(),
+            Column::Categorical { arity, .. } => format!("c{arity}"),
+        })
+        .collect();
+    writeln!(f, "#types {}", types.join(","))?;
+    let header: Vec<String> = (0..ds.num_features())
+        .map(|i| format!("f{i}"))
+        .chain(std::iter::once("class".into()))
+        .collect();
+    writeln!(f, "{}", header.join(","))?;
+    for r in 0..ds.num_rows() {
+        let mut cells: Vec<String> = Vec::with_capacity(ds.num_features() + 1);
+        for c in &ds.features {
+            cells.push(match c {
+                Column::Numeric(v) => format!("{}", v[r]),
+                Column::Categorical { values, .. } => format!("{}", values[r]),
+            });
+        }
+        cells.push(format!("{}", ds.class[r]));
+        writeln!(f, "{}", cells.join(","))?;
+    }
+    Ok(())
+}
+
+enum TypeSpec {
+    Numeric,
+    Categorical(u16),
+}
+
+fn parse_types(line: &str) -> Result<Vec<TypeSpec>> {
+    let body = line
+        .strip_prefix("#types")
+        .ok_or_else(|| Error::InvalidData("first line must be '#types ...'".into()))?;
+    body.trim()
+        .split(',')
+        .map(|t| {
+            let t = t.trim();
+            if t == "n" {
+                Ok(TypeSpec::Numeric)
+            } else if let Some(a) = t.strip_prefix('c') {
+                let arity: u16 = a
+                    .parse()
+                    .map_err(|e| Error::InvalidData(format!("bad type {t:?}: {e}")))?;
+                Ok(TypeSpec::Categorical(arity))
+            } else {
+                Err(Error::InvalidData(format!("bad type {t:?}")))
+            }
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth::{kddcup99_like, SynthConfig};
+
+    #[test]
+    fn roundtrip_mixed_dataset() {
+        let ds = kddcup99_like(&SynthConfig {
+            rows: 50,
+            seed: 8,
+            features: Some(8),
+        });
+        let dir = std::env::temp_dir().join("dicfs_csv_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("roundtrip.csv");
+        write_csv(&ds, &path).unwrap();
+        let back = read_csv(&path).unwrap();
+        assert_eq!(back.num_rows(), 50);
+        assert_eq!(back.num_features(), 8);
+        assert_eq!(back.class, ds.class);
+        for (a, b) in ds.features.iter().zip(&back.features) {
+            match (a, b) {
+                (Column::Numeric(x), Column::Numeric(y)) => assert_eq!(x, y),
+                (
+                    Column::Categorical { values: x, arity: ax },
+                    Column::Categorical { values: y, arity: ay },
+                ) => {
+                    assert_eq!(x, y);
+                    assert_eq!(ax, ay);
+                }
+                _ => panic!("kind mismatch"),
+            }
+        }
+    }
+
+    #[test]
+    fn rejects_malformed_rows() {
+        let dir = std::env::temp_dir().join("dicfs_csv_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("bad.csv");
+        std::fs::write(&path, "#types n,n\nf0,f1,class\n1.0,2.0,0\n1.0,0\n").unwrap();
+        assert!(read_csv(&path).is_err());
+    }
+
+    #[test]
+    fn rejects_out_of_arity_category() {
+        let dir = std::env::temp_dir().join("dicfs_csv_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("bad_cat.csv");
+        std::fs::write(&path, "#types c2\nf0,class\n5,0\n").unwrap();
+        assert!(read_csv(&path).is_err());
+    }
+
+    #[test]
+    fn rejects_missing_types_line() {
+        let dir = std::env::temp_dir().join("dicfs_csv_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("no_types.csv");
+        std::fs::write(&path, "f0,class\n1.0,0\n").unwrap();
+        assert!(read_csv(&path).is_err());
+    }
+}

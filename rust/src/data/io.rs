@@ -1,0 +1,142 @@
+//! Compact binary cache for [`DiscreteDataset`].
+//!
+//! Generating + discretizing the large synthetic workloads costs seconds;
+//! the bench harness caches the discretized form on disk so repeated
+//! sweeps (Fig. 3/4/5 regenerate dozens of configurations) pay it once.
+//!
+//! Format (little-endian):
+//! ```text
+//! magic "DCF1" | u32 name_len | name bytes
+//! u64 n_rows | u32 n_features | u16 class_arity
+//! per feature: u16 arity
+//! class bytes (n_rows)
+//! per feature: column bytes (n_rows)
+//! ```
+
+use std::io::{BufReader, BufWriter, Read, Write};
+use std::path::Path;
+
+use crate::core::{Error, Result};
+use crate::data::columnar::DiscreteDataset;
+
+const MAGIC: &[u8; 4] = b"DCF1";
+
+/// Serialize to the binary cache format.
+pub fn write_discrete(ds: &DiscreteDataset, path: &Path) -> Result<()> {
+    let mut w = BufWriter::new(std::fs::File::create(path)?);
+    w.write_all(MAGIC)?;
+    let name = ds.name.as_bytes();
+    w.write_all(&(name.len() as u32).to_le_bytes())?;
+    w.write_all(name)?;
+    w.write_all(&(ds.num_rows() as u64).to_le_bytes())?;
+    w.write_all(&(ds.num_features() as u32).to_le_bytes())?;
+    w.write_all(&ds.class_arity.to_le_bytes())?;
+    for &a in &ds.arities {
+        w.write_all(&a.to_le_bytes())?;
+    }
+    w.write_all(&ds.class)?;
+    for col in &ds.cols {
+        w.write_all(col)?;
+    }
+    Ok(())
+}
+
+/// Deserialize from the binary cache format.
+pub fn read_discrete(path: &Path) -> Result<DiscreteDataset> {
+    let mut r = BufReader::new(std::fs::File::open(path)?);
+    let mut magic = [0u8; 4];
+    r.read_exact(&mut magic)?;
+    if &magic != MAGIC {
+        return Err(Error::Io(format!("bad magic {magic:?}")));
+    }
+    let name_len = read_u32(&mut r)? as usize;
+    let mut name = vec![0u8; name_len];
+    r.read_exact(&mut name)?;
+    let name = String::from_utf8(name).map_err(|e| Error::Io(e.to_string()))?;
+    let n = read_u64(&mut r)? as usize;
+    let m = read_u32(&mut r)? as usize;
+    let class_arity = read_u16(&mut r)?;
+    let mut arities = Vec::with_capacity(m);
+    for _ in 0..m {
+        arities.push(read_u16(&mut r)?);
+    }
+    let mut class = vec![0u8; n];
+    r.read_exact(&mut class)?;
+    let mut cols = Vec::with_capacity(m);
+    for _ in 0..m {
+        let mut col = vec![0u8; n];
+        r.read_exact(&mut col)?;
+        cols.push(col);
+    }
+    DiscreteDataset::new(name, cols, arities, class, class_arity)
+}
+
+fn read_u16(r: &mut impl Read) -> Result<u16> {
+    let mut b = [0u8; 2];
+    r.read_exact(&mut b)?;
+    Ok(u16::from_le_bytes(b))
+}
+
+fn read_u32(r: &mut impl Read) -> Result<u32> {
+    let mut b = [0u8; 4];
+    r.read_exact(&mut b)?;
+    Ok(u32::from_le_bytes(b))
+}
+
+fn read_u64(r: &mut impl Read) -> Result<u64> {
+    let mut b = [0u8; 8];
+    r.read_exact(&mut b)?;
+    Ok(u64::from_le_bytes(b))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> DiscreteDataset {
+        DiscreteDataset::new(
+            "bin_test",
+            vec![vec![0, 1, 2, 1], vec![1, 1, 0, 0]],
+            vec![3, 2],
+            vec![0, 1, 0, 1],
+            2,
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn roundtrip() {
+        let ds = sample();
+        let dir = std::env::temp_dir().join("dicfs_io_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("rt.dcf");
+        write_discrete(&ds, &path).unwrap();
+        let back = read_discrete(&path).unwrap();
+        assert_eq!(back.name, ds.name);
+        assert_eq!(back.cols, ds.cols);
+        assert_eq!(back.arities, ds.arities);
+        assert_eq!(back.class, ds.class);
+        assert_eq!(back.class_arity, ds.class_arity);
+    }
+
+    #[test]
+    fn rejects_bad_magic() {
+        let dir = std::env::temp_dir().join("dicfs_io_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("bad.dcf");
+        std::fs::write(&path, b"NOPE....").unwrap();
+        assert!(read_discrete(&path).is_err());
+    }
+
+    #[test]
+    fn rejects_truncated_file() {
+        let ds = sample();
+        let dir = std::env::temp_dir().join("dicfs_io_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("trunc.dcf");
+        write_discrete(&ds, &path).unwrap();
+        let bytes = std::fs::read(&path).unwrap();
+        std::fs::write(&path, &bytes[..bytes.len() - 3]).unwrap();
+        assert!(read_discrete(&path).is_err());
+    }
+}

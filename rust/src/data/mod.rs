@@ -1,0 +1,23 @@
+//! Dataset representation and workload generation.
+//!
+//! The paper evaluates on four large public datasets (ECBDL14, HIGGS,
+//! KDDCUP99, EPSILON). Those exact files are not available here (repro
+//! gate), so [`synth`] provides seeded generators with the same *shape
+//! signature* — feature count, feature types, class structure, and a
+//! controlled relevant/redundant/noise decomposition, which is what CFS
+//! behaviour actually depends on. [`oversize`] reproduces the paper's
+//! %-instances / %-features scaling by duplication (§6).
+//!
+//! Layout is column-major ([`Dataset`]): CFS is a column algorithm — every
+//! hot loop walks one or two whole columns — and the vertical partitioning
+//! scheme (DiCFS-vp) distributes columns, so rows are never materialized.
+
+pub mod columnar;
+pub mod csv;
+pub mod io;
+pub mod oversize;
+pub mod schema;
+pub mod synth;
+
+pub use columnar::{Column, Dataset, DiscreteDataset};
+pub use schema::{FeatureKind, Schema};

@@ -1,0 +1,120 @@
+//! Dataset scaling by duplication — the paper's §6 protocol.
+//!
+//! "with the aim of offering a comprehensive view of execution time
+//! behaviour, Figure 3 shows results for sizes larger than the 100% of the
+//! datasets. To achieve these sizes, the instances in each dataset were
+//! duplicated as many times as necessary" — and Figure 4 does the same for
+//! features. Percentages below 100 take a prefix sample.
+
+use crate::data::columnar::{Column, Dataset};
+
+/// Scale the number of instances to `pct`% of the original by prefix
+/// sampling (< 100) or whole-dataset duplication + prefix (> 100).
+pub fn scale_instances(ds: &Dataset, pct: usize) -> Dataset {
+    let n = ds.num_rows();
+    let target = (n * pct).div_ceil(100);
+    let take = |col_len: usize| -> Vec<usize> {
+        (0..target).map(|i| i % col_len).collect()
+    };
+    let idx = take(n);
+    let features = ds
+        .features
+        .iter()
+        .map(|c| match c {
+            Column::Numeric(v) => Column::Numeric(idx.iter().map(|&i| v[i]).collect()),
+            Column::Categorical { values, arity } => Column::Categorical {
+                values: idx.iter().map(|&i| values[i]).collect(),
+                arity: *arity,
+            },
+        })
+        .collect();
+    let class = idx.iter().map(|&i| ds.class[i]).collect();
+    Dataset::new(
+        format!("{}_{}i", ds.name, pct),
+        features,
+        class,
+        ds.class_arity,
+    )
+    .expect("scaling preserves consistency")
+}
+
+/// Scale the number of features to `pct`% by column duplication (> 100) or
+/// prefix selection (< 100). Duplicated columns are exact copies, as in the
+/// paper — CFS sees them as perfectly redundant.
+pub fn scale_features(ds: &Dataset, pct: usize) -> Dataset {
+    let m = ds.num_features();
+    let target = (m * pct).div_ceil(100).max(1);
+    let features: Vec<Column> = (0..target).map(|i| ds.features[i % m].clone()).collect();
+    Dataset::new(
+        format!("{}_{}f", ds.name, pct),
+        features,
+        ds.class.clone(),
+        ds.class_arity,
+    )
+    .expect("scaling preserves consistency")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth::{higgs_like, SynthConfig};
+
+    fn base() -> Dataset {
+        higgs_like(&SynthConfig {
+            rows: 100,
+            seed: 4,
+            features: Some(6),
+        })
+    }
+
+    #[test]
+    fn upscale_instances_duplicates() {
+        let ds = base();
+        let big = scale_instances(&ds, 250);
+        assert_eq!(big.num_rows(), 250);
+        assert_eq!(big.num_features(), 6);
+        // rows 0..100 repeat at 100..200
+        assert_eq!(big.class[0], big.class[100]);
+        assert_eq!(big.class[50], big.class[150]);
+    }
+
+    #[test]
+    fn downscale_instances_prefix() {
+        let ds = base();
+        let small = scale_instances(&ds, 25);
+        assert_eq!(small.num_rows(), 25);
+        assert_eq!(&small.class[..], &ds.class[..25]);
+    }
+
+    #[test]
+    fn upscale_features_copies_columns() {
+        let ds = base();
+        let wide = scale_features(&ds, 300);
+        assert_eq!(wide.num_features(), 18);
+        match (&wide.features[0], &wide.features[6]) {
+            (Column::Numeric(a), Column::Numeric(b)) => assert_eq!(a, b),
+            _ => panic!("expected numeric copies"),
+        }
+    }
+
+    #[test]
+    fn downscale_features_prefix() {
+        let ds = base();
+        let narrow = scale_features(&ds, 50);
+        assert_eq!(narrow.num_features(), 3);
+    }
+
+    #[test]
+    fn scale_100_is_identity_shape() {
+        let ds = base();
+        assert_eq!(scale_instances(&ds, 100).num_rows(), ds.num_rows());
+        assert_eq!(scale_features(&ds, 100).num_features(), ds.num_features());
+    }
+
+    #[test]
+    fn names_record_scaling() {
+        let ds = base();
+        assert_eq!(scale_instances(&ds, 200).name, "higgs_200i");
+        assert_eq!(scale_features(&ds, 200).name, "higgs_200f");
+    }
+}

@@ -1,0 +1,66 @@
+//! Dataset schema: per-feature kind plus class metadata.
+
+/// The kind of a predictive attribute.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FeatureKind {
+    /// Real-valued; must be discretized (Fayyad–Irani) before CFS.
+    Numeric,
+    /// Categorical with the given number of distinct values.
+    Categorical { arity: u16 },
+}
+
+/// Schema of a dataset: feature kinds, names and class arity.
+#[derive(Debug, Clone)]
+pub struct Schema {
+    /// One entry per predictive feature.
+    pub kinds: Vec<FeatureKind>,
+    /// Feature names (same length as `kinds`); generated names if absent.
+    pub names: Vec<String>,
+    /// Number of class labels (2 = binary, >2 = multiclass).
+    pub class_arity: u16,
+}
+
+impl Schema {
+    /// Build a schema with auto-generated names (`f0`, `f1`, ...).
+    pub fn new(kinds: Vec<FeatureKind>, class_arity: u16) -> Self {
+        let names = (0..kinds.len()).map(|i| format!("f{i}")).collect();
+        Self {
+            kinds,
+            names,
+            class_arity,
+        }
+    }
+
+    /// Number of predictive features.
+    pub fn num_features(&self) -> usize {
+        self.kinds.len()
+    }
+
+    /// Count of numeric features (those the discretizer must process).
+    pub fn num_numeric(&self) -> usize {
+        self.kinds
+            .iter()
+            .filter(|k| matches!(k, FeatureKind::Numeric))
+            .count()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn auto_names_and_counts() {
+        let s = Schema::new(
+            vec![
+                FeatureKind::Numeric,
+                FeatureKind::Categorical { arity: 3 },
+                FeatureKind::Numeric,
+            ],
+            2,
+        );
+        assert_eq!(s.num_features(), 3);
+        assert_eq!(s.num_numeric(), 2);
+        assert_eq!(s.names[1], "f1");
+    }
+}

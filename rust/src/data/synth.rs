@@ -1,0 +1,457 @@
+//! Seeded synthetic workload generators.
+//!
+//! One generator per dataset family from the paper's Table 1, each
+//! reproducing the family's *shape signature*: feature count, feature
+//! types, class structure, class imbalance — plus a controlled
+//! relevant / redundant / noise decomposition, which is the structure CFS
+//! actually responds to (its heuristic selects class-correlated,
+//! mutually-uncorrelated features).
+//!
+//! | family        | paper dataset | m    | types            | classes |
+//! |---------------|---------------|------|------------------|---------|
+//! | `ecbdl14_like`| ECBDL14       | 631  | numeric + categ. | 2 (98/2)|
+//! | `higgs_like`  | HIGGS         | 28   | numeric          | 2       |
+//! | `kddcup99_like`| KDDCUP99     | 41   | numeric + categ. | 5       |
+//! | `epsilon_like`| EPSILON       | 2000 | numeric          | 2       |
+//!
+//! Row counts are scaled to this host (the paper's 0.5M–33.6M rows are a
+//! hardware gate — see DESIGN.md §2); `SynthConfig::rows` sets the 100%
+//! size and `oversize` reproduces the paper's duplication scaling.
+
+use crate::data::columnar::{Column, Dataset};
+use crate::util::XorShift64Star;
+
+/// Generation parameters shared by all families.
+#[derive(Debug, Clone)]
+pub struct SynthConfig {
+    /// Number of instances at the 100% scale.
+    pub rows: usize,
+    /// RNG seed; equal seeds give bit-identical datasets.
+    pub seed: u64,
+    /// Override the family's feature count (used by Fig. 4 feature
+    /// scaling and by small unit-test datasets).
+    pub features: Option<usize>,
+}
+
+impl Default for SynthConfig {
+    fn default() -> Self {
+        Self {
+            rows: 10_000,
+            seed: 1,
+            features: None,
+        }
+    }
+}
+
+/// Internal family description driving [`generate`].
+struct FamilySpec {
+    name: &'static str,
+    features: usize,
+    /// Fraction of features that are numeric (rest categorical).
+    numeric_frac: f64,
+    /// Arity range for categorical features.
+    cat_arity: (u16, u16),
+    class_arity: u16,
+    /// Class prior (must sum to 1).
+    class_prior: Vec<f64>,
+    /// Number of class-informative features.
+    relevant: usize,
+    /// Number of (noisy) copies of relevant features.
+    redundant: usize,
+}
+
+/// Role assigned to each generated feature (exposed for tests/ablations).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FeatureRole {
+    /// Class-informative: class-conditional distribution shift.
+    Relevant,
+    /// Noisy copy of a relevant feature.
+    Redundant,
+    /// Independent of the class.
+    Noise,
+}
+
+/// A generated dataset plus its ground-truth feature roles.
+pub struct SynthDataset {
+    /// The dataset itself.
+    pub dataset: Dataset,
+    /// Ground-truth role of every feature (parallel to columns).
+    pub roles: Vec<FeatureRole>,
+}
+
+fn sample_class(rng: &mut XorShift64Star, prior: &[f64]) -> u8 {
+    let u = rng.next_f64();
+    let mut acc = 0.0;
+    for (i, p) in prior.iter().enumerate() {
+        acc += p;
+        if u < acc {
+            return i as u8;
+        }
+    }
+    (prior.len() - 1) as u8
+}
+
+fn generate(spec: &FamilySpec, cfg: &SynthConfig) -> SynthDataset {
+    let m = cfg.features.unwrap_or(spec.features);
+    let n = cfg.rows;
+    let mut rng = XorShift64Star::new(cfg.seed ^ 0xD1CF_5000);
+
+    // Scale the relevant/redundant counts if the feature count is overridden.
+    let scale = m as f64 / spec.features as f64;
+    let relevant = ((spec.relevant as f64 * scale).round() as usize).clamp(1, m);
+    let redundant = ((spec.redundant as f64 * scale).round() as usize).min(m - relevant);
+
+    // Class labels first; every informative column conditions on them.
+    let mut class_rng = rng.fork(0xC1A5);
+    let class: Vec<u8> = (0..n).map(|_| sample_class(&mut class_rng, &spec.class_prior)).collect();
+
+    // Assign roles to feature slots, then shuffle so roles are spread over
+    // the index space (mirrors real datasets where relevant features are
+    // not contiguous).
+    let mut roles: Vec<FeatureRole> = Vec::with_capacity(m);
+    roles.extend(std::iter::repeat(FeatureRole::Relevant).take(relevant));
+    roles.extend(std::iter::repeat(FeatureRole::Redundant).take(redundant));
+    roles.extend(std::iter::repeat(FeatureRole::Noise).take(m - relevant - redundant));
+    rng.fork(0x5471).shuffle(&mut roles);
+
+    let relevant_ids: Vec<usize> = roles
+        .iter()
+        .enumerate()
+        .filter(|(_, r)| **r == FeatureRole::Relevant)
+        .map(|(i, _)| i)
+        .collect();
+
+    let mut features: Vec<Column> = Vec::with_capacity(m);
+    // Relevant columns must exist before redundant copies; generate in two
+    // passes keyed by stable per-column RNG forks so output is order-free.
+    let mut col_cache: Vec<Option<Column>> = vec![None; m];
+
+    for (f, role) in roles.iter().enumerate() {
+        if *role != FeatureRole::Relevant {
+            continue;
+        }
+        let mut crng = XorShift64Star::new(cfg.seed ^ (f as u64).wrapping_mul(0x9E37) ^ 0x8E1E);
+        col_cache[f] = Some(gen_relevant(spec, m, &class, f, &mut crng));
+    }
+    for (f, role) in roles.iter().enumerate() {
+        match role {
+            FeatureRole::Relevant => {}
+            FeatureRole::Redundant => {
+                let mut crng =
+                    XorShift64Star::new(cfg.seed ^ (f as u64).wrapping_mul(0x7F4A) ^ 0x0DD);
+                let parent = relevant_ids[crng.next_below(relevant_ids.len() as u64) as usize];
+                let parent_col = col_cache[parent].as_ref().expect("parent generated");
+                col_cache[f] = Some(gen_redundant(parent_col, &mut crng));
+            }
+            FeatureRole::Noise => {
+                let mut crng =
+                    XorShift64Star::new(cfg.seed ^ (f as u64).wrapping_mul(0x2545) ^ 0x401);
+                col_cache[f] = Some(gen_noise(spec, m, n, f, &mut crng));
+            }
+        }
+    }
+    for c in col_cache {
+        features.push(c.expect("all columns generated"));
+    }
+
+    let dataset = Dataset::new(spec.name, features, class, spec.class_arity)
+        .expect("generator produces consistent data");
+    SynthDataset { dataset, roles }
+}
+
+/// Class-informative column: numeric → class-shifted gaussian; categorical
+/// → class-biased multinomial. Signal strength varies per feature so the
+/// CFS ranking has structure.
+fn gen_relevant(
+    spec: &FamilySpec,
+    m: usize,
+    class: &[u8],
+    f: usize,
+    rng: &mut XorShift64Star,
+) -> Column {
+    let numeric =
+        (f as f64 / m.max(1) as f64) < spec.numeric_frac || spec.numeric_frac >= 1.0;
+    // separation in [0.8, 2.4] std-devs — strong enough to survive MDL
+    // discretization, weak enough that not everything is selected
+    let sep = rng.next_range(0.8, 2.4);
+    if numeric {
+        let v: Vec<f32> = class
+            .iter()
+            .map(|&c| (f64::from(c) * sep + rng.next_gaussian()) as f32)
+            .collect();
+        Column::Numeric(v)
+    } else {
+        let arity = rng.next_below((spec.cat_arity.1 - spec.cat_arity.0 + 1) as u64) as u16
+            + spec.cat_arity.0;
+        // Each class prefers a different subset of categories.
+        let bias = rng.next_range(0.5, 0.85);
+        let v: Vec<u8> = class
+            .iter()
+            .map(|&c| {
+                if rng.next_f64() < bias {
+                    (u16::from(c) % arity) as u8
+                } else {
+                    rng.next_below(arity as u64) as u8
+                }
+            })
+            .collect();
+        Column::Categorical { values: v, arity }
+    }
+}
+
+/// Noisy copy of a parent column (the redundancy CFS must reject).
+fn gen_redundant(parent: &Column, rng: &mut XorShift64Star) -> Column {
+    let noise = rng.next_range(0.05, 0.35);
+    match parent {
+        Column::Numeric(v) => Column::Numeric(
+            v.iter()
+                .map(|&x| x + (rng.next_gaussian() * noise) as f32)
+                .collect(),
+        ),
+        Column::Categorical { values, arity } => {
+            let v = values
+                .iter()
+                .map(|&x| {
+                    if rng.next_f64() < noise {
+                        rng.next_below(*arity as u64) as u8
+                    } else {
+                        x
+                    }
+                })
+                .collect();
+            Column::Categorical {
+                values: v,
+                arity: *arity,
+            }
+        }
+    }
+}
+
+/// Class-independent column.
+fn gen_noise(
+    spec: &FamilySpec,
+    m: usize,
+    n: usize,
+    f: usize,
+    rng: &mut XorShift64Star,
+) -> Column {
+    let numeric =
+        (f as f64 / m.max(1) as f64) < spec.numeric_frac || spec.numeric_frac >= 1.0;
+    if numeric {
+        Column::Numeric((0..n).map(|_| rng.next_gaussian() as f32).collect())
+    } else {
+        let arity = rng.next_below((spec.cat_arity.1 - spec.cat_arity.0 + 1) as u64) as u16
+            + spec.cat_arity.0;
+        Column::Categorical {
+            values: (0..n).map(|_| rng.next_below(arity as u64) as u8).collect(),
+            arity,
+        }
+    }
+}
+
+/// ECBDL14-like: 631 mixed features, heavily imbalanced binary class.
+pub fn ecbdl14_like(cfg: &SynthConfig) -> Dataset {
+    with_roles("ecbdl14", cfg).dataset
+}
+
+/// HIGGS-like: 28 numeric features, near-balanced binary class.
+pub fn higgs_like(cfg: &SynthConfig) -> Dataset {
+    with_roles("higgs", cfg).dataset
+}
+
+/// KDDCUP99-like: 41 mixed features, skewed 5-class problem.
+pub fn kddcup99_like(cfg: &SynthConfig) -> Dataset {
+    with_roles("kddcup99", cfg).dataset
+}
+
+/// EPSILON-like: 2000 numeric features, balanced binary class.
+pub fn epsilon_like(cfg: &SynthConfig) -> Dataset {
+    with_roles("epsilon", cfg).dataset
+}
+
+/// Generate with ground-truth roles exposed (tests and ablations).
+pub fn with_roles(family: &str, cfg: &SynthConfig) -> SynthDataset {
+    let spec = match family {
+        "ecbdl14" => FamilySpec {
+            name: "ecbdl14",
+            features: 631,
+            numeric_frac: 0.9,
+            cat_arity: (2, 8),
+            class_arity: 2,
+            class_prior: vec![0.98, 0.02],
+            relevant: 40,
+            redundant: 80,
+        },
+        "higgs" => FamilySpec {
+            name: "higgs",
+            features: 28,
+            numeric_frac: 1.0,
+            cat_arity: (2, 2),
+            class_arity: 2,
+            class_prior: vec![0.53, 0.47],
+            relevant: 10,
+            redundant: 6,
+        },
+        "kddcup99" => FamilySpec {
+            name: "kddcup99",
+            features: 41,
+            numeric_frac: 0.75,
+            cat_arity: (2, 32),
+            class_arity: 5,
+            class_prior: vec![0.57, 0.22, 0.17, 0.03, 0.01],
+            relevant: 12,
+            redundant: 10,
+        },
+        "epsilon" => FamilySpec {
+            name: "epsilon",
+            features: 2000,
+            numeric_frac: 1.0,
+            cat_arity: (2, 2),
+            class_arity: 2,
+            class_prior: vec![0.5, 0.5],
+            relevant: 50,
+            redundant: 200,
+        },
+        other => panic!("unknown family {other}"),
+    };
+    generate(&spec, cfg)
+}
+
+/// Generate a family by name (harness entry point).
+pub fn by_name(family: &str, cfg: &SynthConfig) -> Dataset {
+    with_roles(family, cfg).dataset
+}
+
+/// All family names, in the paper's Table 1 order.
+pub const FAMILIES: [&str; 4] = ["ecbdl14", "higgs", "kddcup99", "epsilon"];
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn small(family: &str) -> SynthDataset {
+        with_roles(
+            family,
+            &SynthConfig {
+                rows: 500,
+                seed: 3,
+                features: Some(24),
+            },
+        )
+    }
+
+    #[test]
+    fn shapes_match_table1_signature() {
+        let cfg = SynthConfig {
+            rows: 200,
+            seed: 1,
+            features: None,
+        };
+        assert_eq!(higgs_like(&cfg).num_features(), 28);
+        assert_eq!(kddcup99_like(&cfg).num_features(), 41);
+        assert_eq!(ecbdl14_like(&cfg).num_features(), 631);
+        assert_eq!(kddcup99_like(&cfg).class_arity, 5);
+    }
+
+    #[test]
+    fn determinism_same_seed() {
+        let cfg = SynthConfig {
+            rows: 300,
+            seed: 9,
+            features: Some(12),
+        };
+        let a = higgs_like(&cfg);
+        let b = higgs_like(&cfg);
+        assert_eq!(a.class, b.class);
+        for (ca, cb) in a.features.iter().zip(&b.features) {
+            match (ca, cb) {
+                (Column::Numeric(x), Column::Numeric(y)) => assert_eq!(x, y),
+                (
+                    Column::Categorical { values: x, .. },
+                    Column::Categorical { values: y, .. },
+                ) => assert_eq!(x, y),
+                _ => panic!("kind mismatch"),
+            }
+        }
+    }
+
+    #[test]
+    fn different_seeds_differ() {
+        let a = higgs_like(&SynthConfig {
+            rows: 300,
+            seed: 1,
+            features: Some(8),
+        });
+        let b = higgs_like(&SynthConfig {
+            rows: 300,
+            seed: 2,
+            features: Some(8),
+        });
+        assert_ne!(a.class, b.class);
+    }
+
+    #[test]
+    fn class_prior_is_respected() {
+        let ds = ecbdl14_like(&SynthConfig {
+            rows: 20_000,
+            seed: 5,
+            features: Some(10),
+        });
+        let pos = ds.class.iter().filter(|&&c| c == 1).count() as f64 / 20_000.0;
+        assert!((pos - 0.02).abs() < 0.01, "positive rate {pos}");
+    }
+
+    #[test]
+    fn roles_partition_features() {
+        let s = small("kddcup99");
+        assert_eq!(s.roles.len(), 24);
+        assert!(s.roles.iter().any(|r| *r == FeatureRole::Relevant));
+        assert!(s.roles.iter().any(|r| *r == FeatureRole::Noise));
+    }
+
+    #[test]
+    fn relevant_columns_carry_signal() {
+        // Mean of a relevant numeric column should differ across classes.
+        let s = small("higgs");
+        let ds = &s.dataset;
+        let rel = s
+            .roles
+            .iter()
+            .position(|r| *r == FeatureRole::Relevant)
+            .unwrap();
+        if let Column::Numeric(v) = &ds.features[rel] {
+            let (mut s0, mut n0, mut s1, mut n1) = (0.0f64, 0, 0.0f64, 0);
+            for (x, &c) in v.iter().zip(&ds.class) {
+                if c == 0 {
+                    s0 += *x as f64;
+                    n0 += 1;
+                } else {
+                    s1 += *x as f64;
+                    n1 += 1;
+                }
+            }
+            let gap = (s0 / n0 as f64 - s1 / n1 as f64).abs();
+            assert!(gap > 0.4, "class separation too small: {gap}");
+        } else {
+            panic!("higgs columns are numeric");
+        }
+    }
+
+    #[test]
+    fn by_name_matches_direct() {
+        let cfg = SynthConfig {
+            rows: 100,
+            seed: 2,
+            features: Some(6),
+        };
+        let a = by_name("epsilon", &cfg);
+        let b = epsilon_like(&cfg);
+        assert_eq!(a.class, b.class);
+    }
+
+    #[test]
+    #[should_panic(expected = "unknown family")]
+    fn unknown_family_panics() {
+        by_name("nope", &SynthConfig::default());
+    }
+}

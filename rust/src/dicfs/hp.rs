@@ -1,0 +1,198 @@
+//! DiCFS-hp — horizontal partitioning (paper §5.1).
+//!
+//! Rows are split into contiguous ranges, one per partition. Each
+//! correlation batch is one Spark-shaped job:
+//!
+//! 1. broadcast the requested pair list,
+//! 2. `mapPartitions(localCTables)` — Algorithm 2: every worker counts
+//!    its rows into per-pair partial contingency tables. The counting
+//!    itself runs through the [`SuEngine`] — i.e. the L1 Pallas ctable
+//!    kernel when the PJRT engine is plugged in,
+//! 3. `reduceByKey(sum)` — Eq. 4: element-wise merge of partial tables,
+//! 4. `collect` + driver-side SU finish (L1 su kernel under PJRT).
+//!
+//! Exactness: tables carry u64 counts, merge is associative/commutative,
+//! so the merged tables — and hence the SU values and the whole search —
+//! are bit-identical to the sequential run on the native engine.
+
+use std::ops::Range;
+use std::sync::Arc;
+
+use crate::cfs::Correlator;
+use crate::core::FeatureId;
+use crate::correlation::ContingencyTable;
+use crate::data::columnar::DiscreteDataset;
+use crate::runtime::{ColumnPair, SuEngine};
+use crate::sparklet::{Rdd, SparkletContext};
+
+/// Distributed SU correlator over row partitions.
+pub struct HorizontalCorrelator {
+    data: Arc<DiscreteDataset>,
+    engine: Arc<dyn SuEngine>,
+    ctx: Arc<SparkletContext>,
+    /// One contiguous row range per partition.
+    ranges: Rdd<Range<usize>>,
+}
+
+impl HorizontalCorrelator {
+    /// Partition `data`'s rows into `num_partitions` ranges.
+    pub fn new(
+        ctx: &Arc<SparkletContext>,
+        data: Arc<DiscreteDataset>,
+        engine: Arc<dyn SuEngine>,
+        num_partitions: usize,
+    ) -> Self {
+        let n = data.num_rows();
+        let parts = num_partitions.clamp(1, n.max(1));
+        let chunk = n.div_ceil(parts);
+        let ranges: Vec<Range<usize>> = (0..parts)
+            .map(|p| (p * chunk).min(n)..((p + 1) * chunk).min(n))
+            .collect();
+        let count = ranges.len();
+        Self {
+            data,
+            engine,
+            ctx: Arc::clone(ctx),
+            ranges: ctx.parallelize(ranges, count),
+        }
+    }
+
+    /// Resolve a pair id to borrowed columns.
+    fn column_pair<'a>(data: &'a DiscreteDataset, a: FeatureId, b: FeatureId) -> ColumnPair<'a> {
+        let (x, bins_x) = data.column(a);
+        let (y, bins_y) = data.column(b);
+        ColumnPair {
+            x,
+            bins_x,
+            y,
+            bins_y,
+        }
+    }
+}
+
+impl Correlator for HorizontalCorrelator {
+    fn compute(&mut self, pairs: &[(FeatureId, FeatureId)]) -> Vec<f64> {
+        if pairs.is_empty() {
+            return vec![];
+        }
+        // 1. Broadcast the pair list (16 bytes per pair on the wire).
+        let pairs_bc = self.ctx.broadcast(pairs.to_vec(), pairs.len() * 16);
+
+        // 2. mapPartitions(localCTables): per-range partial tables.
+        let data = Arc::clone(&self.data);
+        let engine = Arc::clone(&self.engine);
+        let partials: Rdd<(usize, ContingencyTable)> =
+            self.ranges.map_partitions("localCTables", move |_, ranges| {
+                let mut out = Vec::new();
+                for range in ranges {
+                    let cps: Vec<ColumnPair> = pairs_bc
+                        .iter()
+                        .map(|&(a, b)| Self::column_pair(&data, a, b))
+                        .collect();
+                    let tables = engine.ctables(&cps, range.clone());
+                    out.extend(tables.into_iter().enumerate());
+                }
+                out
+            });
+
+        // 3. reduceByKey(sum): merge partials per pair (Eq. 4).
+        let reduce_parts = pairs.len().min(self.ctx.cluster.total_slots()).max(1);
+        let merged = partials.reduce_by_key(
+            "mergeCTables",
+            reduce_parts,
+            ContingencyTable::wire_bytes,
+            |a, b| a.merge(&b).expect("pair tables share shape"),
+        );
+
+        // 4. SU finish *in parallel on the CTables RDD* (paper §5.1: "this
+        // calculation can therefore be performed in parallel by processing
+        // the local rows of this RDD"), then collect only the scalars.
+        let engine = Arc::clone(&self.engine);
+        let sus = merged.map_partitions("computeSU", move |_, tables| {
+            let ts: Vec<ContingencyTable> = tables.iter().map(|(_, t)| t.clone()).collect();
+            let values = engine.su_from_tables(&ts);
+            tables
+                .iter()
+                .map(|(i, _)| *i)
+                .zip(values)
+                .collect::<Vec<(usize, f64)>>()
+        });
+        let mut collected = sus.collect_sized(|_| 8);
+        collected.sort_by_key(|(i, _)| *i);
+        debug_assert_eq!(collected.len(), pairs.len());
+        collected.into_iter().map(|(_, v)| v).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::CLASS_ID;
+    use crate::correlation::su::symmetrical_uncertainty;
+    use crate::data::synth::{kddcup99_like, SynthConfig};
+    use crate::discretize::discretize_dataset;
+    use crate::runtime::NativeEngine;
+    use crate::sparklet::ClusterConfig;
+
+    fn setup(parts: usize) -> (Arc<SparkletContext>, HorizontalCorrelator, Arc<DiscreteDataset>) {
+        let ds = kddcup99_like(&SynthConfig {
+            rows: 900,
+            seed: 33,
+            features: Some(10),
+        });
+        let dd = Arc::new(discretize_dataset(&ds).unwrap());
+        let ctx = SparkletContext::new(ClusterConfig::with_nodes(3));
+        let corr =
+            HorizontalCorrelator::new(&ctx, Arc::clone(&dd), Arc::new(NativeEngine), parts);
+        (ctx, corr, dd)
+    }
+
+    #[test]
+    fn matches_direct_su_exactly() {
+        let (_ctx, mut corr, dd) = setup(7);
+        let pairs = vec![(0, CLASS_ID), (1, CLASS_ID), (0, 1), (2, 5)];
+        let got = corr.compute(&pairs);
+        for (i, &(a, b)) in pairs.iter().enumerate() {
+            let (x, bx) = dd.column(a);
+            let (y, by) = dd.column(b);
+            let want = symmetrical_uncertainty(x, bx, y, by);
+            assert_eq!(got[i], want, "pair {:?}", (a, b));
+        }
+    }
+
+    #[test]
+    fn partition_count_does_not_change_results() {
+        let pairs = vec![(0, CLASS_ID), (3, 4), (7, CLASS_ID)];
+        let (_c1, mut one, _) = setup(1);
+        let (_c2, mut many, _) = setup(64);
+        assert_eq!(one.compute(&pairs), many.compute(&pairs));
+    }
+
+    #[test]
+    fn records_spark_shaped_stages() {
+        let (ctx, mut corr, _) = setup(5);
+        let _ = corr.compute(&[(0, 1), (2, CLASS_ID)]);
+        let m = ctx.metrics();
+        let labels: Vec<&str> = m.stages.iter().map(|s| s.label.as_str()).collect();
+        assert!(labels.contains(&"localCTables"));
+        assert!(labels.contains(&"mergeCTables"));
+        assert!(labels.contains(&"collect"));
+        assert_eq!(m.broadcast_bytes.len(), 1); // the pair list
+        assert!(m.total_shuffle_bytes() > 0);
+    }
+
+    #[test]
+    fn empty_batch() {
+        let (_ctx, mut corr, _) = setup(3);
+        assert!(corr.compute(&[]).is_empty());
+    }
+
+    #[test]
+    fn more_partitions_than_rows_clamped() {
+        let (_ctx, mut corr, dd) = setup(10_000);
+        let got = corr.compute(&[(0, CLASS_ID)]);
+        let (x, bx) = dd.column(0);
+        let (y, by) = dd.column(CLASS_ID);
+        assert_eq!(got[0], symmetrical_uncertainty(x, bx, y, by));
+    }
+}

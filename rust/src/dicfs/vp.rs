@@ -1,0 +1,265 @@
+//! DiCFS-vp — vertical partitioning (paper §5.2, after fast-mRMR).
+//!
+//! Construction performs the *columnar transformation* (paper Fig. 2): a
+//! full shuffle that redistributes the dataset by features, so each
+//! partition owns whole columns. The class column is broadcast once.
+//!
+//! Each correlation batch then:
+//! 1. picks, per pair, a *reference* side (the class, else the
+//!    most-shared feature — in CFS searches this is exactly the paper's
+//!    "most recently added feature"),
+//! 2. broadcasts the reference columns (the per-step data transmission
+//!    the paper lists as disadvantage (ii)),
+//! 3. `mapPartitions(localSU)`: the partition owning the non-reference
+//!    column builds the complete contingency table and finishes SU
+//!    locally (via the engine — the fused L1 kernel under PJRT),
+//! 4. collects the scalar SU values (8 bytes each — the upside of vp: no
+//!    table shuffle at all).
+//!
+//! The fixed per-batch cost of broadcasting and the m-partition default
+//! are what the paper's §6 experiments probe (EPSILON partition tuning).
+
+use std::collections::HashMap;
+use std::sync::Arc;
+
+use crate::cfs::Correlator;
+use crate::core::{FeatureId, CLASS_ID};
+use crate::data::columnar::DiscreteDataset;
+use crate::runtime::{ColumnPair, SuEngine};
+use crate::sparklet::{Rdd, SparkletContext};
+
+/// Distributed SU correlator over feature partitions.
+pub struct VerticalCorrelator {
+    data: Arc<DiscreteDataset>,
+    engine: Arc<dyn SuEngine>,
+    ctx: Arc<SparkletContext>,
+    /// Feature ids, hash-distributed by the columnar transformation.
+    columns: Rdd<(FeatureId, Vec<u8>)>,
+}
+
+impl VerticalCorrelator {
+    /// Build via the columnar transformation into `num_partitions`
+    /// feature partitions (paper default: one per feature).
+    pub fn new(
+        ctx: &Arc<SparkletContext>,
+        data: Arc<DiscreteDataset>,
+        engine: Arc<dyn SuEngine>,
+        num_partitions: usize,
+    ) -> Self {
+        let m = data.num_features();
+        let num_partitions = num_partitions.clamp(1, m.max(1));
+
+        // The dataset starts row-partitioned (as Spark reads it); the
+        // columnar transformation is a real shuffle of every cell. We
+        // model the initial layout as `slots` row-blocks each carrying
+        // m column fragments; the reduceByKey concatenation prices the
+        // full n×m bytes through the shuffle, like Fig. 2.
+        let entries: Vec<(FeatureId, Vec<u8>)> = (0..m).map(|f| (f, data.cols[f].clone())).collect();
+        let initial = ctx.parallelize(entries, ctx.cluster.total_slots().min(m).max(1));
+        let columns = initial.reduce_by_key(
+            "columnarTransformation",
+            num_partitions,
+            Vec::len, // every cell crosses the wire
+            |_a, _b| unreachable!("feature keys are unique"),
+        );
+
+        // The class column is broadcast once (every worker needs it for
+        // every class-correlation).
+        let _class_bc = ctx.broadcast((), data.class.len());
+
+        Self {
+            data,
+            engine,
+            ctx: Arc::clone(ctx),
+            columns,
+        }
+    }
+
+    /// Choose the reference (broadcast) side of each pair: the class if
+    /// present, else the id that appears most often in this batch (the
+    /// search's last-added feature). Returns per-pair (owner, reference).
+    fn assign_sides(pairs: &[(FeatureId, FeatureId)]) -> Vec<(FeatureId, FeatureId)> {
+        let mut freq: HashMap<FeatureId, usize> = HashMap::new();
+        for &(a, b) in pairs {
+            *freq.entry(a).or_default() += 1;
+            *freq.entry(b).or_default() += 1;
+        }
+        pairs
+            .iter()
+            .map(|&(a, b)| {
+                if b == CLASS_ID {
+                    (a, b)
+                } else if a == CLASS_ID {
+                    (b, a)
+                } else {
+                    let (fa, fb) = (freq[&a], freq[&b]);
+                    // owner = rarer side; tie-break to the smaller id as
+                    // owner for determinism
+                    if fa > fb || (fa == fb && a > b) {
+                        (b, a)
+                    } else {
+                        (a, b)
+                    }
+                }
+            })
+            .collect()
+    }
+}
+
+impl Correlator for VerticalCorrelator {
+    fn compute(&mut self, pairs: &[(FeatureId, FeatureId)]) -> Vec<f64> {
+        if pairs.is_empty() {
+            return vec![];
+        }
+        let sides = Self::assign_sides(pairs);
+
+        // Broadcast the non-class reference columns for this batch.
+        let mut ref_ids: Vec<FeatureId> = sides
+            .iter()
+            .map(|&(_, r)| r)
+            .filter(|&r| r != CLASS_ID)
+            .collect();
+        ref_ids.sort_unstable();
+        ref_ids.dedup();
+        let ref_bytes: usize = ref_ids.iter().map(|&r| self.data.cols[r].len()).sum();
+        let refs_bc = self.ctx.broadcast(ref_ids, ref_bytes);
+
+        // Owner → list of (pair index, original pair). The owner decides
+        // *where* the pair is computed; the pair itself is always built in
+        // its canonical (a, b) orientation so the f64 SU value is
+        // bit-identical to the sequential/hp computation — transposing the
+        // table permutes the entropy summation order, which can differ in
+        // the last ulp and flip merit ties.
+        let mut work: HashMap<FeatureId, Vec<(usize, (FeatureId, FeatureId))>> = HashMap::new();
+        for (i, (&(owner, _), &pair)) in sides.iter().zip(pairs).enumerate() {
+            work.entry(owner).or_default().push((i, pair));
+        }
+        let work = Arc::new(work);
+
+        // localSU: each partition computes SU for the pairs whose owner
+        // column it holds, in one engine batch.
+        let data = Arc::clone(&self.data);
+        let engine = Arc::clone(&self.engine);
+        let w2 = Arc::clone(&work);
+        let sus: Rdd<(usize, f64)> = self.columns.map_partitions("localSU", move |_, cols| {
+            let _ = &refs_bc; // broadcast lifetime mirrors Spark semantics
+            let mut idx: Vec<usize> = Vec::new();
+            let mut batch: Vec<ColumnPair> = Vec::new();
+            for (fid, _col) in cols {
+                let Some(items) = w2.get(fid) else { continue };
+                for &(pair_idx, (a, b)) in items {
+                    let (x, bins_x) = data.column(a);
+                    let (y, bins_y) = data.column(b);
+                    idx.push(pair_idx);
+                    batch.push(ColumnPair {
+                        x,
+                        bins_x,
+                        y,
+                        bins_y,
+                    });
+                }
+            }
+            let values = engine.su_from_column_pairs(&batch);
+            idx.into_iter().zip(values).collect()
+        });
+
+        // Collect the scalars (8 bytes each) and restore request order.
+        let mut collected = sus.collect_sized(|_| 8);
+        collected.sort_by_key(|(i, _)| *i);
+        debug_assert_eq!(collected.len(), pairs.len());
+        collected.into_iter().map(|(_, v)| v).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::correlation::su::symmetrical_uncertainty;
+    use crate::data::synth::{epsilon_like, SynthConfig};
+    use crate::discretize::discretize_dataset;
+    use crate::runtime::NativeEngine;
+    use crate::sparklet::ClusterConfig;
+
+    fn setup(parts: usize) -> (Arc<SparkletContext>, VerticalCorrelator, Arc<DiscreteDataset>) {
+        let ds = epsilon_like(&SynthConfig {
+            rows: 600,
+            seed: 55,
+            features: Some(14),
+        });
+        let dd = Arc::new(discretize_dataset(&ds).unwrap());
+        let ctx = SparkletContext::new(ClusterConfig::with_nodes(3));
+        let corr = VerticalCorrelator::new(&ctx, Arc::clone(&dd), Arc::new(NativeEngine), parts);
+        (ctx, corr, dd)
+    }
+
+    #[test]
+    fn matches_direct_su_exactly() {
+        let (_ctx, mut corr, dd) = setup(14);
+        let pairs = vec![(0, CLASS_ID), (3, CLASS_ID), (0, 3), (5, 9), (13, 2)];
+        let got = corr.compute(&pairs);
+        for (i, &(a, b)) in pairs.iter().enumerate() {
+            let (x, bx) = dd.column(a);
+            let (y, by) = dd.column(b);
+            assert_eq!(
+                got[i],
+                symmetrical_uncertainty(x, bx, y, by),
+                "pair {:?}",
+                (a, b)
+            );
+        }
+    }
+
+    #[test]
+    fn partition_count_does_not_change_results() {
+        let pairs = vec![(0, CLASS_ID), (1, 2), (3, CLASS_ID), (1, 7)];
+        let (_c1, mut few, _) = setup(2);
+        let (_c2, mut many, _) = setup(14);
+        assert_eq!(few.compute(&pairs), many.compute(&pairs));
+    }
+
+    #[test]
+    fn columnar_transformation_prices_whole_dataset() {
+        let (ctx, _corr, dd) = setup(7);
+        let m = ctx.metrics();
+        let stage = m
+            .stages
+            .iter()
+            .find(|s| s.label == "columnarTransformation")
+            .expect("transformation stage");
+        let data_bytes: usize = dd.cols.iter().map(Vec::len).sum();
+        assert_eq!(stage.shuffle_bytes, data_bytes);
+    }
+
+    #[test]
+    fn reference_side_prefers_class_and_shared_feature() {
+        let sides = VerticalCorrelator::assign_sides(&[
+            (4, CLASS_ID),
+            (CLASS_ID, 7),
+            (1, 9),
+            (2, 9),
+            (3, 9),
+        ]);
+        assert_eq!(sides[0], (4, CLASS_ID));
+        assert_eq!(sides[1], (7, CLASS_ID));
+        // 9 appears three times → it is the broadcast reference
+        assert_eq!(sides[2], (1, 9));
+        assert_eq!(sides[3], (2, 9));
+        assert_eq!(sides[4], (3, 9));
+    }
+
+    #[test]
+    fn broadcast_bytes_grow_with_reference_columns() {
+        let (ctx, mut corr, dd) = setup(14);
+        let before = ctx.metrics().total_broadcast_bytes();
+        let _ = corr.compute(&[(0, 5), (1, 5), (2, 5)]);
+        let after = ctx.metrics().total_broadcast_bytes();
+        // one reference column (feature 5) of n rows was broadcast
+        assert_eq!(after - before, dd.num_rows());
+    }
+
+    #[test]
+    fn empty_batch() {
+        let (_ctx, mut corr, _) = setup(3);
+        assert!(corr.compute(&[]).is_empty());
+    }
+}

@@ -1,0 +1,65 @@
+//! Equal-width binning — simple fallback discretizer for tests/ablations.
+
+/// Bin `values` into `bins` equal-width intervals over their observed
+/// range. Constant columns collapse to a single bin.
+pub fn equal_width(values: &[f32], bins: u16) -> (Vec<u8>, u16) {
+    assert!(bins >= 1 && bins <= 32, "bins must be 1..=32");
+    if values.is_empty() {
+        return (vec![], 1);
+    }
+    let (mut lo, mut hi) = (f32::INFINITY, f32::NEG_INFINITY);
+    for &v in values {
+        lo = lo.min(v);
+        hi = hi.max(v);
+    }
+    if !(hi > lo) {
+        return (vec![0; values.len()], 1);
+    }
+    let w = (hi - lo) / bins as f32;
+    let out = values
+        .iter()
+        .map(|&v| (((v - lo) / w) as u16).min(bins - 1) as u8)
+        .collect();
+    (out, bins)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bins_cover_range() {
+        let v: Vec<f32> = (0..100).map(|i| i as f32).collect();
+        let (b, arity) = equal_width(&v, 4);
+        assert_eq!(arity, 4);
+        assert_eq!(b[0], 0);
+        assert_eq!(b[99], 3);
+        assert!(b.iter().all(|&x| x < 4));
+    }
+
+    #[test]
+    fn constant_column_single_bin() {
+        let (b, arity) = equal_width(&[2.5; 10], 8);
+        assert_eq!(arity, 1);
+        assert!(b.iter().all(|&x| x == 0));
+    }
+
+    #[test]
+    fn empty_column() {
+        let (b, arity) = equal_width(&[], 4);
+        assert!(b.is_empty());
+        assert_eq!(arity, 1);
+    }
+
+    #[test]
+    fn max_value_in_last_bin() {
+        let (b, _) = equal_width(&[0.0, 10.0], 3);
+        assert_eq!(b, vec![0, 2]);
+    }
+
+    #[test]
+    #[should_panic(expected = "bins must be")]
+    fn rejects_zero_bins() {
+        equal_width(&[1.0], 0);
+    }
+}

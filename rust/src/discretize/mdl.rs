@@ -1,0 +1,236 @@
+//! Fayyad–Irani MDL discretization (multi-interval via recursive binary
+//! splitting with the MDLP stopping criterion).
+//!
+//! Reference: Fayyad & Irani, "Multi-Interval Discretization of
+//! Continuous-Valued Attributes for Classification Learning" (1993) — the
+//! algorithm WEKA's CFS applies by default and the one the paper names as
+//! its discretizer.
+//!
+//! Implementation notes:
+//! * Candidate cuts are restricted to *boundary points* (midpoints between
+//!   adjacent values with differing class distributions) — Fayyad's
+//!   theorem guarantees the entropy-minimal cut is always a boundary.
+//! * The recursion stops when the information gain of the best cut fails
+//!   the MDL test, or when [`MAX_DEPTH`] is reached (which caps the bin
+//!   count at `2^MAX_DEPTH = 32 = DiscreteDataset::MAX_BINS`).
+//! * Columns where no cut is ever accepted become single-bin (arity 1):
+//!   constant after discretization, hence SU = 0, hence invisible to CFS —
+//!   exactly WEKA's behaviour for uninformative numeric features.
+
+use crate::correlation::entropy::entropy_of_counts;
+
+/// Recursion depth cap: 2^5 = 32 bins = `DiscreteDataset::MAX_BINS`.
+const MAX_DEPTH: u32 = 5;
+
+/// Compute MDL-accepted cut points for one numeric column, ascending.
+pub fn mdl_cut_points(values: &[f32], class: &[u8], class_arity: u16) -> Vec<f32> {
+    debug_assert_eq!(values.len(), class.len());
+    if values.is_empty() {
+        return vec![];
+    }
+    // Sort (value, class) once; recursion works on index ranges.
+    let mut order: Vec<usize> = (0..values.len()).collect();
+    order.sort_by(|&a, &b| values[a].partial_cmp(&values[b]).unwrap());
+    let sorted: Vec<(f32, u8)> = order.iter().map(|&i| (values[i], class[i])).collect();
+
+    let mut cuts = Vec::new();
+    split(&sorted, class_arity, 0, &mut cuts);
+    cuts.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    cuts
+}
+
+/// Recursive MDLP split of `sorted[(value, class)]`.
+fn split(sorted: &[(f32, u8)], class_arity: u16, depth: u32, cuts: &mut Vec<f32>) {
+    if depth >= MAX_DEPTH || sorted.len() < 4 {
+        return;
+    }
+    let n = sorted.len();
+    let k = class_arity as usize;
+
+    // Whole-range class histogram and entropy.
+    let mut total_counts = vec![0u64; k];
+    for &(_, c) in sorted {
+        total_counts[c as usize] += 1;
+    }
+    let ent_total = entropy_of_counts(&total_counts);
+    let k_total = total_counts.iter().filter(|&&c| c > 0).count();
+    if k_total <= 1 {
+        return; // pure segment: nothing to gain
+    }
+
+    // Scan boundary points, tracking the entropy-minimal cut.
+    let mut left_counts = vec![0u64; k];
+    let mut best: Option<(usize, f64, f64, f64)> = None; // (idx, went, e1, e2)
+    for i in 0..n - 1 {
+        left_counts[sorted[i].1 as usize] += 1;
+        // candidate only between distinct values AND differing classes
+        // nearby (boundary-point condition; class check is conservative —
+        // equal adjacent classes can't host the optimum).
+        if sorted[i].0 == sorted[i + 1].0 {
+            continue;
+        }
+        let nl = (i + 1) as f64;
+        let nr = (n - i - 1) as f64;
+        let e1 = entropy_of_counts(&left_counts);
+        let right_counts: Vec<u64> = total_counts
+            .iter()
+            .zip(&left_counts)
+            .map(|(&t, &l)| t - l)
+            .collect();
+        let e2 = entropy_of_counts(&right_counts);
+        let went = (nl * e1 + nr * e2) / n as f64;
+        if best.map_or(true, |(_, w, _, _)| went < w) {
+            best = Some((i, went, e1, e2));
+        }
+    }
+
+    let Some((idx, went, e1, e2)) = best else {
+        return;
+    };
+
+    // MDL acceptance test (Fayyad & Irani Eq. 9):
+    //   gain > ( log2(n−1) + log2(3^k − 2) − [k·E − k1·E1 − k2·E2] ) / n
+    let gain = ent_total - went;
+    let left: Vec<u64> = {
+        let mut lc = vec![0u64; k];
+        for &(_, c) in &sorted[..=idx] {
+            lc[c as usize] += 1;
+        }
+        lc
+    };
+    let right: Vec<u64> = total_counts
+        .iter()
+        .zip(&left)
+        .map(|(&t, &l)| t - l)
+        .collect();
+    let k1 = left.iter().filter(|&&c| c > 0).count() as f64;
+    let k2 = right.iter().filter(|&&c| c > 0).count() as f64;
+    let kf = k_total as f64;
+    let delta = (3f64.powf(kf) - 2.0).log2() - (kf * ent_total - k1 * e1 - k2 * e2);
+    let threshold = ((n as f64 - 1.0).log2() + delta) / n as f64;
+    if gain <= threshold {
+        return;
+    }
+
+    let cut = 0.5 * (sorted[idx].0 + sorted[idx + 1].0);
+    cuts.push(cut);
+    split(&sorted[..=idx], class_arity, depth + 1, cuts);
+    split(&sorted[idx + 1..], class_arity, depth + 1, cuts);
+}
+
+/// Bin a column by ascending cut points: bin = number of cuts ≤ value.
+/// Returns `(bins, arity)`; arity is `cuts.len() + 1` (≥ 1).
+pub fn apply_cuts(values: &[f32], cuts: &[f32]) -> (Vec<u8>, u16) {
+    let arity = (cuts.len() + 1) as u16;
+    let bins = values
+        .iter()
+        .map(|&v| cuts.partition_point(|&c| c < v) as u8)
+        .collect();
+    (bins, arity)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::XorShift64Star;
+
+    #[test]
+    fn separable_classes_get_one_cut() {
+        // class 0 clustered near 0, class 1 near 10: one obvious boundary.
+        let mut values = Vec::new();
+        let mut class = Vec::new();
+        let mut rng = XorShift64Star::new(2);
+        for _ in 0..200 {
+            values.push(rng.next_gaussian() as f32);
+            class.push(0u8);
+            values.push(10.0 + rng.next_gaussian() as f32);
+            class.push(1u8);
+        }
+        let cuts = mdl_cut_points(&values, &class, 2);
+        assert!(!cuts.is_empty(), "expected at least one cut");
+        assert!(cuts.iter().any(|&c| (2.0..8.0).contains(&c)), "{cuts:?}");
+    }
+
+    #[test]
+    fn pure_noise_gets_no_cut() {
+        let mut rng = XorShift64Star::new(4);
+        let values: Vec<f32> = (0..500).map(|_| rng.next_gaussian() as f32).collect();
+        let class: Vec<u8> = (0..500).map(|_| rng.next_below(2) as u8).collect();
+        let cuts = mdl_cut_points(&values, &class, 2);
+        assert!(cuts.is_empty(), "noise should not be cut: {cuts:?}");
+    }
+
+    #[test]
+    fn arity_capped_at_32() {
+        // Deterministic y = class staircase with 64 levels: lots of
+        // possible cuts, depth cap must bound the bins.
+        let mut values = Vec::new();
+        let mut class = Vec::new();
+        for level in 0..64u32 {
+            for _ in 0..20 {
+                values.push(level as f32);
+                class.push((level % 2) as u8);
+            }
+        }
+        let cuts = mdl_cut_points(&values, &class, 2);
+        assert!(cuts.len() + 1 <= 32, "{} bins", cuts.len() + 1);
+    }
+
+    #[test]
+    fn apply_cuts_bins_correctly() {
+        let (bins, arity) = apply_cuts(&[0.0, 1.0, 2.0, 3.0], &[0.5, 2.5]);
+        assert_eq!(arity, 3);
+        assert_eq!(bins, vec![0, 1, 1, 2]);
+    }
+
+    #[test]
+    fn apply_no_cuts_single_bin() {
+        let (bins, arity) = apply_cuts(&[1.0, -5.0, 3.0], &[]);
+        assert_eq!(arity, 1);
+        assert!(bins.iter().all(|&b| b == 0));
+    }
+
+    #[test]
+    fn empty_column() {
+        assert!(mdl_cut_points(&[], &[], 2).is_empty());
+    }
+
+    #[test]
+    fn constant_column_no_cuts() {
+        let values = vec![5.0f32; 100];
+        let class: Vec<u8> = (0..100).map(|i| (i % 2) as u8).collect();
+        assert!(mdl_cut_points(&values, &class, 2).is_empty());
+    }
+
+    #[test]
+    fn three_cluster_multiclass() {
+        // Three classes at -10 / 0 / +10 need two cuts.
+        let mut values = Vec::new();
+        let mut class = Vec::new();
+        let mut rng = XorShift64Star::new(8);
+        for _ in 0..150 {
+            for (c, center) in [(0u8, -10.0), (1, 0.0), (2, 10.0)] {
+                values.push((center + rng.next_gaussian()) as f32);
+                class.push(c);
+            }
+        }
+        let cuts = mdl_cut_points(&values, &class, 3);
+        assert!(cuts.len() >= 2, "{cuts:?}");
+    }
+
+    #[test]
+    fn cuts_are_sorted_ascending() {
+        let mut rng = XorShift64Star::new(10);
+        let mut values = Vec::new();
+        let mut class = Vec::new();
+        for _ in 0..300 {
+            let c = rng.next_below(2) as u8;
+            values.push((f64::from(c) * 2.0 + rng.next_gaussian()) as f32);
+            class.push(c);
+        }
+        let cuts = mdl_cut_points(&values, &class, 2);
+        for w in cuts.windows(2) {
+            assert!(w[0] < w[1]);
+        }
+    }
+}

@@ -1,0 +1,119 @@
+//! Figure 3: execution time vs % of instances, per dataset family —
+//! DiCFS-hp and DiCFS-vp on a 10-node virtual cluster vs the sequential
+//! (WEKA) baseline on one node.
+
+use crate::cfs::SequentialCfs;
+use crate::dicfs::{DiCfs, DiCfsConfig, Partitioning};
+use crate::harness::report;
+use crate::harness::workload::WORKLOADS;
+use crate::util::timer::timed;
+
+/// One measured cell of the figure.
+#[derive(Debug, Clone)]
+pub struct Fig3Row {
+    /// Dataset family.
+    pub family: String,
+    /// Instance percentage (100 = base size).
+    pub pct: usize,
+    /// Sequential baseline, measured seconds (NaN = not run).
+    pub weka_secs: f64,
+    /// DiCFS-hp simulated seconds on the virtual cluster.
+    pub hp_secs: f64,
+    /// DiCFS-vp simulated seconds.
+    pub vp_secs: f64,
+    /// Selected-subset agreement across the three runs.
+    pub selections_equal: bool,
+}
+
+/// Run the sweep. `scale` shrinks the base workloads (smoke runs);
+/// `nodes` is the virtual cluster size (paper: 10).
+pub fn run(scale: f64, pcts: &[usize], nodes: usize) -> Vec<Fig3Row> {
+    let mut rows = Vec::new();
+    for w in WORKLOADS {
+        for &pct in pcts {
+            let dd = w.discretized(pct, 100, scale);
+            let (weka, weka_secs) = timed(|| SequentialCfs::default().select_discrete(&dd));
+            let hp = DiCfs::native(DiCfsConfig::for_scheme(Partitioning::Horizontal, nodes))
+                .select(&dd);
+            let vp =
+                DiCfs::native(DiCfsConfig::for_scheme(Partitioning::Vertical, nodes)).select(&dd);
+            rows.push(Fig3Row {
+                family: w.family.to_string(),
+                pct,
+                weka_secs,
+                hp_secs: hp.sim.total(),
+                vp_secs: vp.sim.total(),
+                selections_equal: hp.result.selected == weka.selected
+                    && vp.result.selected == weka.selected,
+            });
+            eprintln!(
+                "fig3 {:>8} {:>4}%: weka {:>8} hp {:>8} vp {:>8} equal={}",
+                w.family,
+                pct,
+                report::fmt_secs(weka_secs),
+                report::fmt_secs(hp.sim.total()),
+                report::fmt_secs(vp.sim.total()),
+                rows.last().unwrap().selections_equal
+            );
+        }
+    }
+    rows
+}
+
+/// Write the CSV and print one chart per family.
+pub fn emit(rows: &[Fig3Row]) {
+    let csv_rows: Vec<Vec<String>> = rows
+        .iter()
+        .map(|r| {
+            vec![
+                r.family.clone(),
+                r.pct.to_string(),
+                format!("{:.4}", r.weka_secs),
+                format!("{:.4}", r.hp_secs),
+                format!("{:.4}", r.vp_secs),
+                r.selections_equal.to_string(),
+            ]
+        })
+        .collect();
+    let path = report::write_csv(
+        "fig3_instances.csv",
+        &["family", "pct_instances", "weka_secs", "hp_secs", "vp_secs", "selections_equal"],
+        &csv_rows,
+    );
+    for w in WORKLOADS {
+        let fam: Vec<&Fig3Row> = rows.iter().filter(|r| r.family == w.family).collect();
+        if fam.is_empty() {
+            continue;
+        }
+        let to_pts = |f: &dyn Fn(&Fig3Row) -> f64| -> Vec<(f64, f64)> {
+            fam.iter().map(|r| (r.pct as f64, f(r))).collect()
+        };
+        report::emit_figure(
+            &format!("Fig 3 — {} : execution time vs % instances ({} base rows)",
+                w.family.to_uppercase(), w.base_rows),
+            "% instances",
+            "seconds",
+            &[
+                ("DiCFS-hp".to_string(), to_pts(&|r| r.hp_secs)),
+                ("DiCFS-vp".to_string(), to_pts(&|r| r.vp_secs)),
+                ("WEKA".to_string(), to_pts(&|r| r.weka_secs)),
+            ],
+            &path,
+        );
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn smoke_run_preserves_equivalence_and_monotonicity() {
+        let rows = run(0.02, &[50, 100], 10);
+        assert_eq!(rows.len(), 8);
+        for r in &rows {
+            assert!(r.selections_equal, "{} {}%", r.family, r.pct);
+            assert!(r.hp_secs > 0.0 && r.vp_secs > 0.0 && r.weka_secs > 0.0);
+        }
+    }
+}

@@ -1,0 +1,185 @@
+//! Figure 5: speed-up vs number of nodes — DiCFS-hp vs DiCFS-vp.
+//!
+//! Speed-up uses the paper's Eq. 5: `time(2 nodes) / time(m nodes)`.
+//!
+//! Method: each scheme runs *once* per family with a fixed partition
+//! count (partitions come from the data layout — HDFS blocks for hp, m
+//! for vp — and do not change with cluster size). The measured task set
+//! is then replayed on every virtual topology via the sparklet cost
+//! model. This mirrors Spark exactly: the same tasks get spread over
+//! more executors.
+
+use crate::dicfs::{DiCfs, DiCfsConfig, Partitioning};
+use crate::harness::report;
+use crate::harness::workload::WORKLOADS;
+use crate::sparklet::{simulate_job_time, ClusterConfig};
+
+/// Speed-up curve of one (family, scheme).
+#[derive(Debug, Clone)]
+pub struct Fig5Curve {
+    /// Dataset family.
+    pub family: String,
+    /// "hp" or "vp".
+    pub scheme: &'static str,
+    /// (nodes, simulated seconds, speed-up vs 2 nodes).
+    pub points: Vec<(usize, f64, f64)>,
+}
+
+/// Run both schemes per family and replay over `node_counts`.
+pub fn run(scale: f64, node_counts: &[usize], max_nodes: usize) -> Vec<Fig5Curve> {
+    let mut curves = Vec::new();
+    for w in WORKLOADS {
+        let dd = w.discretized(100, 100, scale);
+        for (scheme, partitioning) in [
+            ("hp", Partitioning::Horizontal),
+            ("vp", Partitioning::Vertical),
+        ] {
+            // Fixed partitions: hp = 2× the *largest* cluster's slots
+            // (block count is a property of the data, not the cluster);
+            // vp = m (the paper's default).
+            let mut cfg = DiCfsConfig::for_scheme(partitioning, max_nodes);
+            if partitioning == Partitioning::Horizontal {
+                cfg.num_partitions = Some(2 * ClusterConfig::with_nodes(max_nodes).total_slots());
+            }
+            let run = DiCfs::native(cfg).select(&dd);
+
+            let times: Vec<(usize, f64)> = node_counts
+                .iter()
+                .map(|&n| {
+                    let sim = simulate_job_time(
+                        &run.metrics,
+                        &ClusterConfig::with_nodes(n),
+                        run.sim.driver_secs,
+                    );
+                    (n, sim.total())
+                })
+                .collect();
+            let t2 = times
+                .iter()
+                .find(|(n, _)| *n == 2)
+                .map(|(_, t)| *t)
+                .unwrap_or(times[0].1);
+            let points = times
+                .into_iter()
+                .map(|(n, t)| (n, t, t2 / t))
+                .collect::<Vec<_>>();
+            eprintln!(
+                "fig5 {:>8} {}: {}",
+                w.family,
+                scheme,
+                points
+                    .iter()
+                    .map(|(n, _, s)| format!("{n}n×{s:.2}"))
+                    .collect::<Vec<_>>()
+                    .join(" ")
+            );
+            curves.push(Fig5Curve {
+                family: w.family.to_string(),
+                scheme,
+                points,
+            });
+        }
+    }
+    curves
+}
+
+/// Write the CSV and print one chart per family.
+pub fn emit(curves: &[Fig5Curve]) {
+    let mut csv_rows = Vec::new();
+    for c in curves {
+        for &(n, secs, speedup) in &c.points {
+            csv_rows.push(vec![
+                c.family.clone(),
+                c.scheme.to_string(),
+                n.to_string(),
+                format!("{secs:.4}"),
+                format!("{speedup:.4}"),
+            ]);
+        }
+    }
+    let path = report::write_csv(
+        "fig5_speedup.csv",
+        &["family", "scheme", "nodes", "sim_secs", "speedup_vs_2nodes"],
+        &csv_rows,
+    );
+    for w in WORKLOADS {
+        let series: Vec<(String, Vec<(f64, f64)>)> = curves
+            .iter()
+            .filter(|c| c.family == w.family)
+            .map(|c| {
+                (
+                    format!("DiCFS-{}", c.scheme),
+                    c.points
+                        .iter()
+                        .map(|&(n, _, s)| (n as f64, s))
+                        .collect(),
+                )
+            })
+            .collect();
+        if series.is_empty() {
+            continue;
+        }
+        report::emit_figure(
+            &format!("Fig 5 — {} : speed-up vs nodes (Eq. 5)", w.family.to_uppercase()),
+            "nodes",
+            "speed-up",
+            &series,
+            &path,
+        );
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn speedup_definition_and_shape() {
+        let curves = run(0.02, &[2, 4, 10], 10);
+        assert_eq!(curves.len(), 8);
+        for c in &curves {
+            // speed-up at 2 nodes is 1 by Eq. 5
+            let s2 = c.points.iter().find(|(n, _, _)| *n == 2).unwrap().2;
+            assert!((s2 - 1.0).abs() < 1e-9, "{} {}", c.family, c.scheme);
+            // At this smoke scale (2% workloads) compute is tiny and
+            // broadcast hop latency grows with log(nodes), so adding
+            // nodes may not pay — the paper's flat HIGGS/KDDCUP curves,
+            // exaggerated. Bound the regression: more nodes must never
+            // cost more than the hop-latency growth itself.
+            let t2 = c.points[0].1;
+            for &(_, t, _) in &c.points {
+                assert!(
+                    t <= t2 * 1.6,
+                    "{} {}: scaling blew past hop-latency growth {:?}",
+                    c.family,
+                    c.scheme,
+                    c.points
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn hp_scales_at_least_as_well_as_vp_on_low_m() {
+        // HIGGS (28 features): vp has only m=28 partitions, hp has
+        // hundreds — hp must reach a higher 10-node speed-up (the paper's
+        // central Fig. 5 observation).
+        let curves = run(0.02, &[2, 10], 10);
+        let get = |scheme: &str| {
+            curves
+                .iter()
+                .find(|c| c.family == "higgs" && c.scheme == scheme)
+                .unwrap()
+                .points
+                .last()
+                .unwrap()
+                .2
+        };
+        assert!(
+            get("hp") >= get("vp") * 0.95,
+            "hp {} vs vp {}",
+            get("hp"),
+            get("vp")
+        );
+    }
+}

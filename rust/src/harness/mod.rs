@@ -1,0 +1,33 @@
+//! Bench harness: regenerates every table and figure of the paper's
+//! evaluation (§6) on the synthetic workloads + virtual cluster.
+//!
+//! | paper item | module | bench target |
+//! |---|---|---|
+//! | Table 1 | [`workload`] | `dicfs generate --describe` |
+//! | Fig. 3 (time vs %instances) | [`fig3`] | `cargo bench --bench fig3_instances` |
+//! | Fig. 4 (time vs %features) | [`fig4`] | `cargo bench --bench fig4_features` |
+//! | Fig. 5 (speed-up vs nodes) | [`fig5`] | `cargo bench --bench fig5_speedup` |
+//! | Table 2 (vs RegCFS) | [`table2`] | `cargo bench --bench table2_regression` |
+//! | §5 on-demand claim | [`ablation`] | `cargo bench --bench ablation_ondemand` |
+//! | §6 vp partition tuning | [`ablation`] | `cargo bench --bench ablation_partitions` |
+//!
+//! Each run writes a CSV under `bench_out/` and prints an ASCII chart, so
+//! `cargo bench` output is the full reproduction report.
+
+pub mod ablation;
+pub mod fig3;
+pub mod fig4;
+pub mod fig5;
+pub mod report;
+pub mod table2;
+pub mod workload;
+
+/// Scale factor for bench workloads: `DICFS_BENCH_SCALE` (default 1.0).
+/// Set below 1 for smoke runs (CI), above for longer, higher-fidelity
+/// sweeps.
+pub fn bench_scale() -> f64 {
+    std::env::var("DICFS_BENCH_SCALE")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(1.0)
+}

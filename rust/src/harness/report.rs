@@ -1,0 +1,84 @@
+//! Report sink: CSV files under `bench_out/` + ASCII charts on stdout.
+
+use std::io::Write;
+use std::path::PathBuf;
+
+use crate::util::chart::{line_chart, Series};
+
+/// Where bench outputs land (`DICFS_BENCH_OUT` or `bench_out/`).
+pub fn out_dir() -> PathBuf {
+    let dir = std::env::var_os("DICFS_BENCH_OUT")
+        .map(PathBuf::from)
+        .unwrap_or_else(|| PathBuf::from("bench_out"));
+    std::fs::create_dir_all(&dir).expect("create bench_out");
+    dir
+}
+
+/// Write a CSV (header + rows) into the bench output directory.
+pub fn write_csv(name: &str, header: &[&str], rows: &[Vec<String>]) -> PathBuf {
+    let path = out_dir().join(name);
+    let mut f = std::io::BufWriter::new(std::fs::File::create(&path).expect("csv create"));
+    writeln!(f, "{}", header.join(",")).unwrap();
+    for r in rows {
+        writeln!(f, "{}", r.join(",")).unwrap();
+    }
+    path
+}
+
+/// Print a titled chart of several series and report where the CSV went.
+pub fn emit_figure(
+    title: &str,
+    xlabel: &str,
+    ylabel: &str,
+    series: &[(String, Vec<(f64, f64)>)],
+    csv_path: &std::path::Path,
+) {
+    let views: Vec<Series> = series
+        .iter()
+        .map(|(name, pts)| Series {
+            name,
+            points: pts,
+        })
+        .collect();
+    println!("{}", line_chart(title, xlabel, ylabel, &views, 64, 18));
+    println!("  data: {}\n", csv_path.display());
+}
+
+/// Format seconds with sensible precision for tables.
+pub fn fmt_secs(s: f64) -> String {
+    if s.is_nan() {
+        "-".to_string()
+    } else if s >= 100.0 {
+        format!("{s:.0}")
+    } else if s >= 1.0 {
+        format!("{s:.2}")
+    } else {
+        format!("{s:.4}")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn csv_roundtrip() {
+        std::env::set_var("DICFS_BENCH_OUT", std::env::temp_dir().join("dicfs_bench_test"));
+        let p = write_csv(
+            "t.csv",
+            &["a", "b"],
+            &[vec!["1".into(), "2".into()]],
+        );
+        let text = std::fs::read_to_string(p).unwrap();
+        assert_eq!(text, "a,b\n1,2\n");
+        std::env::remove_var("DICFS_BENCH_OUT");
+    }
+
+    #[test]
+    fn fmt_secs_ranges() {
+        assert_eq!(fmt_secs(123.4), "123");
+        assert_eq!(fmt_secs(1.234), "1.23");
+        assert_eq!(fmt_secs(0.01234), "0.0123");
+        assert_eq!(fmt_secs(f64::NAN), "-");
+    }
+}

@@ -1,0 +1,166 @@
+//! Table 2: classification DiCFS-hp vs the regression CFS of
+//! Eiras-Franco et al. — execution times and speed-ups on the
+//! EPSILON/HIGGS variants.
+//!
+//! Rows follow the paper: `<DATASET>_<pct><i|f>` where `i` scales
+//! instances and `f` scales features. Speed-up is WEKA-time divided by
+//! the corresponding Spark-version time (the paper's definition);
+//! distributed times are simulated on the 10-node virtual cluster.
+
+use std::sync::Arc;
+
+use crate::cfs::SequentialCfs;
+use crate::dicfs::{DiCfs, DiCfsConfig, Partitioning};
+use crate::harness::report;
+use crate::harness::workload::workload;
+use crate::regcfs::{RegCfs, RegDataset, RegWeka};
+use crate::util::timer::timed;
+
+/// One Table-2 row.
+#[derive(Debug, Clone)]
+pub struct Table2Row {
+    /// Variant label, e.g. `EPSILON_25i`.
+    pub label: String,
+    /// Sequential classification CFS (measured).
+    pub weka_secs: f64,
+    /// Sequential regression CFS (measured).
+    pub regweka_secs: f64,
+    /// Distributed classification CFS (simulated, 10 nodes).
+    pub dicfs_hp_secs: f64,
+    /// Distributed regression CFS (simulated, 10 nodes).
+    pub regcfs_secs: f64,
+}
+
+impl Table2Row {
+    /// RegCFS speed-up = RegWEKA / RegCFS.
+    pub fn regcfs_speedup(&self) -> f64 {
+        self.regweka_secs / self.regcfs_secs
+    }
+
+    /// DiCFS-hp speed-up = WEKA / DiCFS-hp.
+    pub fn dicfs_speedup(&self) -> f64 {
+        self.weka_secs / self.dicfs_hp_secs
+    }
+}
+
+/// The paper's six variants: (family, pct, instance-or-feature axis).
+pub const VARIANTS: [(&str, usize, char); 6] = [
+    ("epsilon", 25, 'i'),
+    ("epsilon", 25, 'f'),
+    ("epsilon", 50, 'i'),
+    ("higgs", 100, 'i'),
+    ("higgs", 200, 'i'),
+    ("higgs", 200, 'f'),
+];
+
+/// Run all variants.
+pub fn run(scale: f64, nodes: usize) -> Vec<Table2Row> {
+    VARIANTS
+        .iter()
+        .map(|&(family, pct, axis)| {
+            let w = workload(family);
+            let (pct_rows, pct_feats) = if axis == 'i' { (pct, 100) } else { (100, pct) };
+            let raw = w.generate(pct_rows, pct_feats, scale);
+            let label = format!("{}_{}{}", family.to_uppercase(), pct, axis);
+
+            // Classification side (SU, discretized).
+            let dd = Arc::new(crate::discretize::discretize_dataset(&raw).unwrap());
+            let (_, weka_secs) = timed(|| SequentialCfs::default().select_discrete(&dd));
+            let hp = DiCfs::native(DiCfsConfig::for_scheme(Partitioning::Horizontal, nodes))
+                .select(&dd);
+
+            // Regression side (|Pearson| on the raw numeric data).
+            let reg = Arc::new(RegDataset::from_dataset(&raw).unwrap());
+            let (_, regweka_secs) = timed(|| RegWeka::default().select(&reg));
+            let regcfs = RegCfs::with_nodes(nodes).select(&reg);
+
+            let row = Table2Row {
+                label,
+                weka_secs,
+                regweka_secs,
+                dicfs_hp_secs: hp.sim.total(),
+                regcfs_secs: regcfs.sim.total(),
+            };
+            eprintln!(
+                "table2 {:>12}: weka {:>8} regweka {:>8} hp {:>8} regcfs {:>8} | speedups hp {:>6.2} reg {:>6.2}",
+                row.label,
+                report::fmt_secs(row.weka_secs),
+                report::fmt_secs(row.regweka_secs),
+                report::fmt_secs(row.dicfs_hp_secs),
+                report::fmt_secs(row.regcfs_secs),
+                row.dicfs_speedup(),
+                row.regcfs_speedup(),
+            );
+            row
+        })
+        .collect()
+}
+
+/// Write the CSV and print the table.
+pub fn emit(rows: &[Table2Row]) {
+    let csv_rows: Vec<Vec<String>> = rows
+        .iter()
+        .map(|r| {
+            vec![
+                r.label.clone(),
+                format!("{:.4}", r.weka_secs),
+                format!("{:.4}", r.regweka_secs),
+                format!("{:.4}", r.dicfs_hp_secs),
+                format!("{:.4}", r.regcfs_secs),
+                format!("{:.3}", r.regcfs_speedup()),
+                format!("{:.3}", r.dicfs_speedup()),
+            ]
+        })
+        .collect();
+    let path = report::write_csv(
+        "table2_regression.csv",
+        &[
+            "dataset",
+            "weka_secs",
+            "regweka_secs",
+            "dicfs_hp_secs",
+            "regcfs_secs",
+            "regcfs_speedup",
+            "dicfs_hp_speedup",
+        ],
+        &csv_rows,
+    );
+    let table_rows: Vec<Vec<String>> = rows
+        .iter()
+        .map(|r| {
+            vec![
+                r.label.clone(),
+                report::fmt_secs(r.weka_secs),
+                report::fmt_secs(r.regweka_secs),
+                report::fmt_secs(r.dicfs_hp_secs),
+                report::fmt_secs(r.regcfs_secs),
+                format!("{:.2}", r.regcfs_speedup()),
+                format!("{:.2}", r.dicfs_speedup()),
+            ]
+        })
+        .collect();
+    println!(
+        "{}",
+        crate::util::chart::table(
+            &["Dataset", "WEKA", "RegWEKA", "DiCFS-hp", "RegCFS", "SU RegCFS", "SU DiCFS-hp"],
+            &table_rows
+        )
+    );
+    println!("  data: {}\n", path.display());
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn smoke_run_produces_positive_speedups() {
+        let rows = run(0.02, 10);
+        assert_eq!(rows.len(), 6);
+        for r in &rows {
+            assert!(r.weka_secs > 0.0 && r.regweka_secs > 0.0);
+            assert!(r.dicfs_speedup() > 0.0);
+            assert!(r.regcfs_speedup() > 0.0);
+        }
+    }
+}

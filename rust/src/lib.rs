@@ -1,0 +1,39 @@
+//! # DiCFS — Distributed Correlation-Based Feature Selection
+//!
+//! Reproduction of Palma-Mendoza et al., *"Distributed Correlation-Based
+//! Feature Selection in Spark"* (Information Sciences, 2019) as a
+//! Rust + JAX + Pallas three-layer stack. See `DESIGN.md` for the paper →
+//! architecture mapping and `EXPERIMENTS.md` for measured results.
+//!
+//! Layer map:
+//! * **L3 (this crate)** — the paper's contribution: the distributed CFS
+//!   coordinator ([`dicfs`]) with horizontal ([`dicfs::hp`]) and vertical
+//!   ([`dicfs::vp`]) partitioning, driven over [`sparklet`], an in-process
+//!   mini-Spark substrate (RDDs, shuffle, broadcast, simulated cluster).
+//! * **L2/L1 (python/, build-time)** — the numeric graph (contingency
+//!   tables → entropies → symmetrical uncertainty) as Pallas kernels,
+//!   AOT-lowered to `artifacts/*.hlo.txt`.
+//! * **Runtime** — [`runtime`] loads those artifacts through PJRT and also
+//!   provides a bit-exact native engine used for equivalence testing.
+//!
+//! Quick start (see `examples/quickstart.rs`):
+//! ```no_run
+//! use dicfs::data::synth::{higgs_like, SynthConfig};
+//! use dicfs::cfs::SequentialCfs;
+//!
+//! let ds = higgs_like(&SynthConfig { rows: 10_000, seed: 7, ..Default::default() });
+//! let result = SequentialCfs::default().select(&ds);
+//! println!("selected {:?}", result.selected);
+//! ```
+
+pub mod cfs;
+pub mod core;
+pub mod correlation;
+pub mod data;
+pub mod dicfs;
+pub mod discretize;
+pub mod harness;
+pub mod regcfs;
+pub mod runtime;
+pub mod sparklet;
+pub mod util;

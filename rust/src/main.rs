@@ -1,0 +1,289 @@
+//! `dicfs` — the DiCFS command-line launcher (L3 leader entrypoint).
+//!
+//! Subcommands:
+//! * `select`   — run feature selection (sequential / DiCFS-hp / DiCFS-vp)
+//!                on a synthetic family or a CSV file.
+//! * `generate` — emit a synthetic workload as CSV, or `--describe` to
+//!                print the Table-1 reproduction.
+//! * `compare`  — run all three variants, verify the paper's equivalence
+//!                claim, and print timings + cluster metrics.
+//! * `bench`    — regenerate a paper figure/table (also available via
+//!                `cargo bench`).
+//!
+//! Argument parsing is hand-rolled (`--key value` pairs) since only the
+//! `xla` crate closure is vendored in this environment.
+
+use std::collections::HashMap;
+use std::process::ExitCode;
+use std::sync::Arc;
+
+use dicfs::cfs::SequentialCfs;
+use dicfs::data::synth::{by_name, SynthConfig, FAMILIES};
+use dicfs::dicfs::{DiCfs, DiCfsConfig, Partitioning};
+use dicfs::discretize::discretize_dataset;
+use dicfs::harness;
+use dicfs::runtime::{NativeEngine, SuEngine};
+use dicfs::util::timer::timed;
+
+const USAGE: &str = "\
+dicfs — Distributed Correlation-Based Feature Selection (paper reproduction)
+
+USAGE:
+  dicfs select   [--family NAME | --csv FILE] [--scheme seq|hp|vp]
+                 [--nodes N] [--engine native|pjrt] [--partitions P]
+                 [--rows N] [--features M] [--seed S]
+  dicfs generate --family NAME --rows N [--features M] [--seed S] --out FILE
+  dicfs generate --describe
+  dicfs compare  [--family NAME] [--rows N] [--features M] [--nodes N]
+  dicfs bench    --target fig3|fig4|fig5|table2|ondemand|partitions [--scale X]
+
+FAMILIES: ecbdl14, higgs, kddcup99, epsilon (Table 1 of the paper)
+";
+
+fn parse_flags(args: &[String]) -> Result<HashMap<String, String>, String> {
+    let mut flags = HashMap::new();
+    let mut i = 0;
+    while i < args.len() {
+        let k = args[i]
+            .strip_prefix("--")
+            .ok_or_else(|| format!("expected --flag, got {:?}", args[i]))?;
+        if k == "describe" {
+            flags.insert(k.to_string(), "true".to_string());
+            i += 1;
+            continue;
+        }
+        let v = args
+            .get(i + 1)
+            .ok_or_else(|| format!("--{k} needs a value"))?;
+        flags.insert(k.to_string(), v.clone());
+        i += 2;
+    }
+    Ok(flags)
+}
+
+fn get_usize(flags: &HashMap<String, String>, key: &str, default: usize) -> usize {
+    flags
+        .get(key)
+        .map(|v| v.parse().unwrap_or_else(|_| panic!("--{key} must be an integer")))
+        .unwrap_or(default)
+}
+
+fn load_dataset(flags: &HashMap<String, String>) -> dicfs::data::Dataset {
+    if let Some(path) = flags.get("csv") {
+        dicfs::data::csv::read_csv(std::path::Path::new(path)).expect("csv load")
+    } else {
+        let family = flags.get("family").map(String::as_str).unwrap_or("higgs");
+        assert!(FAMILIES.contains(&family), "unknown family {family}");
+        by_name(
+            family,
+            &SynthConfig {
+                rows: get_usize(flags, "rows", 10_000),
+                seed: get_usize(flags, "seed", 1) as u64,
+                features: flags.get("features").map(|v| v.parse().expect("--features")),
+            },
+        )
+    }
+}
+
+fn make_engine(flags: &HashMap<String, String>) -> Arc<dyn SuEngine> {
+    match flags.get("engine").map(String::as_str).unwrap_or("native") {
+        "native" => Arc::new(NativeEngine),
+        #[cfg(feature = "pjrt")]
+        "pjrt" => Arc::new(
+            dicfs::runtime::pjrt::PjrtEngine::from_default_dir()
+                .expect("pjrt engine (run `make artifacts`?)"),
+        ),
+        other => panic!("unknown engine {other} (build with --features pjrt?)"),
+    }
+}
+
+fn cmd_select(flags: &HashMap<String, String>) {
+    let ds = load_dataset(flags);
+    println!(
+        "dataset: {} ({} rows x {} features, {} classes)",
+        ds.name,
+        ds.num_rows(),
+        ds.num_features(),
+        ds.class_arity
+    );
+    let (dd, disc_secs) = timed(|| Arc::new(discretize_dataset(&ds).unwrap()));
+    println!("discretized in {disc_secs:.2}s");
+
+    let scheme = flags.get("scheme").map(String::as_str).unwrap_or("hp");
+    let nodes = get_usize(flags, "nodes", 10);
+    match scheme {
+        "seq" => {
+            let (r, secs) = timed(|| SequentialCfs::default().select_discrete(&dd));
+            print_result(&r, secs, None);
+        }
+        "hp" | "vp" => {
+            let partitioning = if scheme == "hp" {
+                Partitioning::Horizontal
+            } else {
+                Partitioning::Vertical
+            };
+            let mut cfg = DiCfsConfig::for_scheme(partitioning, nodes);
+            if let Some(p) = flags.get("partitions") {
+                cfg.num_partitions = Some(p.parse().expect("--partitions"));
+            }
+            let run = DiCfs::new(cfg, make_engine(flags)).select(&dd);
+            print_result(&run.result, run.wall_secs, Some(&run));
+        }
+        other => panic!("unknown scheme {other}"),
+    }
+}
+
+fn print_result(
+    r: &dicfs::core::SelectionResult,
+    wall: f64,
+    run: Option<&dicfs::dicfs::DiCfsRun>,
+) {
+    println!("\nselected {} features: {:?}", r.selected.len(), r.selected);
+    println!("merit: {:.6}", r.merit);
+    println!(
+        "iterations: {}, correlations computed: {}, locally-predictive added: {:?}",
+        r.iterations, r.correlations_computed, r.locally_predictive_added
+    );
+    println!("wall: {wall:.3}s");
+    if let Some(run) = run {
+        println!(
+            "cluster sim ({} tasks, {} stages): compute {:.3}s + network {:.3}s + driver {:.3}s = {:.3}s",
+            run.metrics.total_tasks(),
+            run.metrics.stages.len(),
+            run.sim.compute_secs,
+            run.sim.network_secs,
+            run.sim.driver_secs,
+            run.sim.total()
+        );
+        println!(
+            "shuffle {} B, broadcast {} B, retries {}",
+            run.metrics.total_shuffle_bytes(),
+            run.metrics.total_broadcast_bytes(),
+            run.metrics.total_retries()
+        );
+    }
+}
+
+fn cmd_generate(flags: &HashMap<String, String>) {
+    if flags.contains_key("describe") {
+        println!("{}", harness::workload::table1());
+        return;
+    }
+    let ds = load_dataset(flags);
+    let out = flags.get("out").expect("--out FILE required");
+    dicfs::data::csv::write_csv(&ds, std::path::Path::new(out)).expect("csv write");
+    println!(
+        "wrote {} ({} rows x {} features)",
+        out,
+        ds.num_rows(),
+        ds.num_features()
+    );
+}
+
+fn cmd_compare(flags: &HashMap<String, String>) {
+    let ds = load_dataset(flags);
+    let dd = Arc::new(discretize_dataset(&ds).unwrap());
+    let nodes = get_usize(flags, "nodes", 10);
+
+    let (seq, seq_secs) = timed(|| SequentialCfs::default().select_discrete(&dd));
+    let hp = DiCfs::native(DiCfsConfig::for_scheme(Partitioning::Horizontal, nodes)).select(&dd);
+    let vp = DiCfs::native(DiCfsConfig::for_scheme(Partitioning::Vertical, nodes)).select(&dd);
+
+    let rows = vec![
+        vec![
+            "sequential (WEKA)".to_string(),
+            format!("{seq_secs:.3}"),
+            "-".to_string(),
+            format!("{:?}", seq.selected),
+        ],
+        vec![
+            "DiCFS-hp".to_string(),
+            format!("{:.3}", hp.wall_secs),
+            format!("{:.3}", hp.sim.total()),
+            format!("{:?}", hp.result.selected),
+        ],
+        vec![
+            "DiCFS-vp".to_string(),
+            format!("{:.3}", vp.wall_secs),
+            format!("{:.3}", vp.sim.total()),
+            format!("{:?}", vp.result.selected),
+        ],
+    ];
+    println!(
+        "{}",
+        dicfs::util::chart::table(
+            &["variant", "wall s", &format!("sim s ({nodes} nodes)"), "selected"],
+            &rows
+        )
+    );
+    let ok = hp.result.selected == seq.selected && vp.result.selected == seq.selected;
+    println!(
+        "equivalence (paper's quality claim): {}",
+        if ok { "EXACT MATCH" } else { "MISMATCH!" }
+    );
+    assert!(ok);
+}
+
+fn cmd_bench(flags: &HashMap<String, String>) {
+    let scale: f64 = flags
+        .get("scale")
+        .map(|v| v.parse().expect("--scale"))
+        .unwrap_or_else(harness::bench_scale);
+    match flags.get("target").map(String::as_str) {
+        Some("fig3") => {
+            let rows = harness::fig3::run(scale, &[25, 50, 75, 100, 150, 200], 10);
+            harness::fig3::emit(&rows);
+        }
+        Some("fig4") => {
+            let rows = harness::fig4::run(scale, &[50, 100, 200, 400], 10);
+            harness::fig4::emit(&rows);
+        }
+        Some("fig5") => {
+            let curves = harness::fig5::run(scale, &[2, 3, 4, 5, 6, 7, 8, 9, 10], 10);
+            harness::fig5::emit(&curves);
+        }
+        Some("table2") => {
+            let rows = harness::table2::run(scale, 10);
+            harness::table2::emit(&rows);
+        }
+        Some("ondemand") => {
+            let rows = harness::ablation::run_ondemand(scale);
+            harness::ablation::emit_ondemand(&rows);
+        }
+        Some("partitions") => {
+            let rows =
+                harness::ablation::run_partitions(scale, &[25, 50, 100, 250, 500, 1000, 2000], 10);
+            harness::ablation::emit_partitions(&rows);
+        }
+        other => panic!(
+            "--target must be one of fig3/fig4/fig5/table2/ondemand/partitions, got {other:?}"
+        ),
+    }
+}
+
+fn main() -> ExitCode {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let Some((cmd, rest)) = args.split_first() else {
+        eprint!("{USAGE}");
+        return ExitCode::FAILURE;
+    };
+    let flags = match parse_flags(rest) {
+        Ok(f) => f,
+        Err(e) => {
+            eprintln!("error: {e}\n\n{USAGE}");
+            return ExitCode::FAILURE;
+        }
+    };
+    match cmd.as_str() {
+        "select" => cmd_select(&flags),
+        "generate" => cmd_generate(&flags),
+        "compare" => cmd_compare(&flags),
+        "bench" => cmd_bench(&flags),
+        "help" | "--help" | "-h" => print!("{USAGE}"),
+        other => {
+            eprintln!("unknown command {other:?}\n\n{USAGE}");
+            return ExitCode::FAILURE;
+        }
+    }
+    ExitCode::SUCCESS
+}

@@ -1,0 +1,295 @@
+//! RegCFS — CFS for regression problems (Eiras-Franco et al. 2016), the
+//! comparison point of the paper's Table 2.
+//!
+//! For regression, all attributes (including the target) are numeric and
+//! correlations are absolute Pearson coefficients; the merit formula and
+//! the best-first search are unchanged. Two implementations mirror the
+//! paper's Table 2 columns:
+//! * [`RegWeka`] — sequential (the `RegWEKA` baseline),
+//! * [`RegCfs`] — distributed over sparklet via sufficient-statistics
+//!   reduction (the Spark `RegCFS` of Eiras-Franco et al.): each
+//!   partition emits `(n, Σx, Σy, Σx², Σy², Σxy)` per pair, merged by a
+//!   single `reduceByKey`.
+
+use std::sync::Arc;
+
+use crate::cfs::best_first::{BestFirstSearch, CfsConfig};
+use crate::cfs::Correlator;
+use crate::core::{Error, FeatureId, Result, SelectionResult, CLASS_ID};
+use crate::correlation::pearson::PearsonStats;
+use crate::data::columnar::{Column, Dataset};
+use crate::sparklet::simtime::SimTime;
+use crate::sparklet::{simulate_job_time, ClusterConfig, JobMetrics, Rdd, SparkletContext};
+use crate::util::timer::timed;
+
+/// A regression dataset: numeric features + numeric target.
+#[derive(Debug, Clone)]
+pub struct RegDataset {
+    /// Dataset name.
+    pub name: String,
+    /// Numeric feature columns.
+    pub cols: Vec<Vec<f32>>,
+    /// Numeric target.
+    pub target: Vec<f32>,
+}
+
+impl RegDataset {
+    /// Treat a classification dataset as regression (Table 2's protocol
+    /// for HIGGS/EPSILON: all-numeric datasets, class label as numeric
+    /// target). Categorical features are rejected.
+    pub fn from_dataset(ds: &Dataset) -> Result<Self> {
+        let mut cols = Vec::with_capacity(ds.num_features());
+        for (i, c) in ds.features.iter().enumerate() {
+            match c {
+                Column::Numeric(v) => cols.push(v.clone()),
+                Column::Categorical { .. } => {
+                    return Err(Error::InvalidData(format!(
+                        "feature {i} is categorical; RegCFS needs numeric data"
+                    )))
+                }
+            }
+        }
+        Ok(Self {
+            name: ds.name.clone(),
+            cols,
+            target: ds.class.iter().map(|&c| f32::from(c)).collect(),
+        })
+    }
+
+    /// Number of rows.
+    pub fn num_rows(&self) -> usize {
+        self.target.len()
+    }
+
+    /// Number of features.
+    pub fn num_features(&self) -> usize {
+        self.cols.len()
+    }
+
+    fn column(&self, id: FeatureId) -> &[f32] {
+        if id == CLASS_ID {
+            &self.target
+        } else {
+            &self.cols[id]
+        }
+    }
+}
+
+/// Sequential Pearson correlator (the RegWEKA numeric path).
+pub struct SeqPearsonCorrelator<'a> {
+    data: &'a RegDataset,
+}
+
+impl Correlator for SeqPearsonCorrelator<'_> {
+    fn compute(&mut self, pairs: &[(FeatureId, FeatureId)]) -> Vec<f64> {
+        pairs
+            .iter()
+            .map(|&(a, b)| {
+                PearsonStats::from_slices(self.data.column(a), self.data.column(b))
+                    .correlation()
+                    .abs()
+            })
+            .collect()
+    }
+}
+
+/// Sequential regression CFS (Table 2's "RegWEKA").
+#[derive(Debug, Default)]
+pub struct RegWeka {
+    /// Search configuration.
+    pub config: CfsConfig,
+}
+
+impl RegWeka {
+    /// Run selection.
+    pub fn select(&self, data: &RegDataset) -> SelectionResult {
+        let mut corr = SeqPearsonCorrelator { data };
+        BestFirstSearch::new(self.config).run(data.num_features(), &mut corr)
+    }
+}
+
+/// Distributed Pearson correlator over row partitions.
+struct DistPearsonCorrelator {
+    ctx: Arc<SparkletContext>,
+    data: Arc<RegDataset>,
+    ranges: Rdd<std::ops::Range<usize>>,
+}
+
+impl Correlator for DistPearsonCorrelator {
+    fn compute(&mut self, pairs: &[(FeatureId, FeatureId)]) -> Vec<f64> {
+        if pairs.is_empty() {
+            return vec![];
+        }
+        let pairs_bc = self.ctx.broadcast(pairs.to_vec(), pairs.len() * 16);
+        let data = Arc::clone(&self.data);
+        let partials: Rdd<(usize, PearsonStats)> =
+            self.ranges.map_partitions("localPearson", move |_, ranges| {
+                let mut out = Vec::new();
+                for range in ranges {
+                    for (i, &(a, b)) in pairs_bc.iter().enumerate() {
+                        let x = &data.column(a)[range.clone()];
+                        let y = &data.column(b)[range.clone()];
+                        out.push((i, PearsonStats::from_slices(x, y)));
+                    }
+                }
+                out
+            });
+        let merged = partials.reduce_by_key(
+            "mergePearson",
+            pairs.len().min(self.ctx.cluster.total_slots()).max(1),
+            |_| PearsonStats::WIRE_BYTES,
+            |a, b| a.merge(&b),
+        );
+        let mut collected = merged.collect_sized(|_| PearsonStats::WIRE_BYTES);
+        collected.sort_by_key(|(i, _)| *i);
+        collected
+            .into_iter()
+            .map(|(_, s)| s.correlation().abs())
+            .collect()
+    }
+}
+
+/// Result bundle of a distributed regression-CFS run (mirrors
+/// [`crate::dicfs::DiCfsRun`]).
+#[derive(Debug, Clone)]
+pub struct RegCfsRun {
+    /// Selected features.
+    pub result: SelectionResult,
+    /// Sparklet metrics.
+    pub metrics: JobMetrics,
+    /// Simulated cluster time.
+    pub sim: SimTime,
+    /// Real wall-clock.
+    pub wall_secs: f64,
+}
+
+/// Distributed regression CFS (Table 2's "RegCFS").
+pub struct RegCfs {
+    /// Search configuration.
+    pub config: CfsConfig,
+    /// Virtual cluster topology.
+    pub cluster: ClusterConfig,
+    /// Row-partition count (default 2 × slots, as DiCFS-hp).
+    pub num_partitions: Option<usize>,
+}
+
+impl RegCfs {
+    /// Distributed RegCFS on `nodes` nodes with paper-default search.
+    pub fn with_nodes(nodes: usize) -> Self {
+        Self {
+            config: CfsConfig::default(),
+            cluster: ClusterConfig::with_nodes(nodes),
+            num_partitions: None,
+        }
+    }
+
+    /// Run distributed selection.
+    pub fn select(&self, data: &Arc<RegDataset>) -> RegCfsRun {
+        let ctx = SparkletContext::new(self.cluster);
+        let n = data.num_rows();
+        // Block-based default, matching DiCfs: ≥64 rows per partition,
+        // capped at 2× slots (see dicfs::DiCfs::select).
+        let parts = self
+            .num_partitions
+            .unwrap_or_else(|| n.div_ceil(64).clamp(1, 2 * self.cluster.total_slots()))
+            .clamp(1, n.max(1));
+        let chunk = n.div_ceil(parts);
+        let ranges: Vec<std::ops::Range<usize>> = (0..parts)
+            .map(|p| (p * chunk).min(n)..((p + 1) * chunk).min(n))
+            .collect();
+        let count = ranges.len();
+
+        let cluster_secs = std::rc::Rc::new(std::cell::Cell::new(0.0f64));
+        let (result, wall_secs) = timed(|| {
+            let corr = DistPearsonCorrelator {
+                ctx: Arc::clone(&ctx),
+                data: Arc::clone(data),
+                ranges: ctx.parallelize(ranges, count),
+            };
+            let mut timed_corr = crate::dicfs::TimedCorrelator::new(Box::new(corr));
+            let r = BestFirstSearch::new(self.config).run(data.num_features(), &mut timed_corr);
+            cluster_secs.set(timed_corr.total_secs());
+            r
+        });
+
+        let metrics = ctx.metrics();
+        // driver = search bookkeeping outside the distributed jobs (same
+        // attribution as DiCfs::select).
+        let driver_secs = (wall_secs - cluster_secs.get()).max(0.0);
+        let sim = simulate_job_time(&metrics, &self.cluster, driver_secs);
+        RegCfsRun {
+            result,
+            metrics,
+            sim,
+            wall_secs,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth::{epsilon_like, higgs_like, SynthConfig};
+
+    fn regdata() -> Arc<RegDataset> {
+        let ds = higgs_like(&SynthConfig {
+            rows: 1_500,
+            seed: 77,
+            features: Some(12),
+        });
+        Arc::new(RegDataset::from_dataset(&ds).unwrap())
+    }
+
+    #[test]
+    fn distributed_equals_sequential() {
+        let data = regdata();
+        let seq = RegWeka::default().select(&data);
+        let dist = RegCfs::with_nodes(4).select(&data);
+        assert_eq!(dist.result.selected, seq.selected);
+        assert!((dist.result.merit - seq.merit).abs() < 1e-9);
+    }
+
+    #[test]
+    fn selects_informative_features() {
+        let data = regdata();
+        let r = RegWeka::default().select(&data);
+        assert!(!r.selected.is_empty());
+        assert!(r.merit > 0.0);
+    }
+
+    #[test]
+    fn rejects_categorical_input() {
+        let ds = crate::data::synth::kddcup99_like(&SynthConfig {
+            rows: 100,
+            seed: 1,
+            features: Some(8),
+        });
+        assert!(RegDataset::from_dataset(&ds).is_err());
+    }
+
+    #[test]
+    fn epsilon_regression_runs() {
+        let ds = epsilon_like(&SynthConfig {
+            rows: 400,
+            seed: 3,
+            features: Some(30),
+        });
+        let data = Arc::new(RegDataset::from_dataset(&ds).unwrap());
+        let run = RegCfs::with_nodes(10).select(&data);
+        assert!(run.metrics.total_tasks() > 0);
+        assert!(run.sim.total() > 0.0);
+    }
+
+    #[test]
+    fn partition_invariance() {
+        let data = regdata();
+        let mut a = RegCfs::with_nodes(2);
+        a.num_partitions = Some(1);
+        let mut b = RegCfs::with_nodes(2);
+        b.num_partitions = Some(37);
+        assert_eq!(
+            a.select(&data).result.selected,
+            b.select(&data).result.selected
+        );
+    }
+}

@@ -1,0 +1,204 @@
+//! AOT artifact registry: discovers what `make artifacts` built.
+//!
+//! `artifacts/manifest.tsv` (written by `python/compile/aot.py`) lists one
+//! fixed-shape HLO module per line. The registry parses it and answers
+//! "which variant should serve this request" — smallest padding waste
+//! first (see [`Registry::best_ctable`] / [`Registry::best_su`]).
+
+use std::path::{Path, PathBuf};
+
+use crate::core::{Error, Result};
+
+/// Kind of lowered entry point.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ArtifactKind {
+    /// `(x, y, valid) → ctables` — worker-side partial tables.
+    Ctable,
+    /// `(ctables) → su` — driver-side finish.
+    Su,
+    /// `(x, y, valid) → su` — fused single-call path.
+    Fused,
+}
+
+/// One fixed-shape artifact.
+#[derive(Debug, Clone)]
+pub struct ArtifactSpec {
+    /// Artifact stem (file is `<name>.hlo.txt`).
+    pub name: String,
+    /// Entry-point kind.
+    pub kind: ArtifactKind,
+    /// Pair-batch dimension P.
+    pub pairs: usize,
+    /// Row dimension N (0 for `su` artifacts, which take tables).
+    pub rows: usize,
+    /// Bin dimension B.
+    pub bins: usize,
+    /// Absolute path to the HLO text.
+    pub path: PathBuf,
+}
+
+/// Parsed artifact manifest.
+#[derive(Debug, Clone, Default)]
+pub struct Registry {
+    /// All artifacts, as listed.
+    pub specs: Vec<ArtifactSpec>,
+}
+
+impl Registry {
+    /// Load `<dir>/manifest.tsv`.
+    pub fn load(dir: &Path) -> Result<Self> {
+        let manifest = dir.join("manifest.tsv");
+        let text = std::fs::read_to_string(&manifest)
+            .map_err(|e| Error::Io(format!("{}: {e}", manifest.display())))?;
+        let mut specs = Vec::new();
+        for line in text.lines() {
+            if line.starts_with('#') || line.trim().is_empty() {
+                continue;
+            }
+            let cols: Vec<&str> = line.split('\t').collect();
+            if cols.len() != 5 {
+                return Err(Error::Io(format!("bad manifest line: {line:?}")));
+            }
+            let kind = match cols[1] {
+                "ctable" => ArtifactKind::Ctable,
+                "su" => ArtifactKind::Su,
+                "fused" => ArtifactKind::Fused,
+                other => return Err(Error::Io(format!("unknown artifact kind {other:?}"))),
+            };
+            let parse = |s: &str| -> Result<usize> {
+                s.parse().map_err(|e| Error::Io(format!("bad manifest int {s:?}: {e}")))
+            };
+            specs.push(ArtifactSpec {
+                name: cols[0].to_string(),
+                kind,
+                pairs: parse(cols[2])?,
+                rows: parse(cols[3])?,
+                bins: parse(cols[4])?,
+                path: dir.join(format!("{}.hlo.txt", cols[0])),
+            });
+        }
+        if specs.is_empty() {
+            return Err(Error::Io(format!("empty manifest {}", manifest.display())));
+        }
+        Ok(Self { specs })
+    }
+
+    /// Default artifacts directory: `$DICFS_ARTIFACTS` or `./artifacts`.
+    pub fn default_dir() -> PathBuf {
+        std::env::var_os("DICFS_ARTIFACTS")
+            .map(PathBuf::from)
+            .unwrap_or_else(|| PathBuf::from("artifacts"))
+    }
+
+    /// Pick the ctable variant (bins ≥ `min_bins`) that minimizes padding
+    /// waste for a batch of `num_pairs` pairs over `num_rows` rows:
+    /// prefer the largest row tile ≤ `num_rows` (fewest kernel calls),
+    /// falling back to the smallest tile overall; same policy for pairs.
+    pub fn best_ctable(&self, num_pairs: usize, num_rows: usize, min_bins: usize)
+        -> Option<&ArtifactSpec> {
+        self.pick(ArtifactKind::Ctable, num_pairs, num_rows, min_bins)
+    }
+
+    /// Pick the su variant for `num_pairs` tables of `min_bins` bins.
+    pub fn best_su(&self, num_pairs: usize, min_bins: usize) -> Option<&ArtifactSpec> {
+        self.specs
+            .iter()
+            .filter(|s| s.kind == ArtifactKind::Su && s.bins >= min_bins)
+            .min_by_key(|s| {
+                // fewest calls first, then least pair padding
+                let calls = num_pairs.div_ceil(s.pairs);
+                (calls, s.pairs * s.bins)
+            })
+    }
+
+    /// Pick the fused variant.
+    pub fn best_fused(&self, num_pairs: usize, num_rows: usize, min_bins: usize)
+        -> Option<&ArtifactSpec> {
+        self.pick(ArtifactKind::Fused, num_pairs, num_rows, min_bins)
+    }
+
+    fn pick(&self, kind: ArtifactKind, num_pairs: usize, num_rows: usize, min_bins: usize)
+        -> Option<&ArtifactSpec> {
+        self.specs
+            .iter()
+            .filter(|s| s.kind == kind && s.bins >= min_bins)
+            .min_by_key(|s| {
+                let row_calls = num_rows.max(1).div_ceil(s.rows.max(1));
+                let pair_calls = num_pairs.max(1).div_ceil(s.pairs);
+                // total kernel invocations, then padded cell count as the
+                // waste tiebreaker
+                (row_calls * pair_calls, s.pairs * s.rows)
+            })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn registry() -> Registry {
+        // mirror of the default aot.py variants
+        let mk = |name: &str, kind: ArtifactKind, p: usize, n: usize, b: usize| ArtifactSpec {
+            name: name.into(),
+            kind,
+            pairs: p,
+            rows: n,
+            bins: b,
+            path: PathBuf::from(format!("/tmp/{name}.hlo.txt")),
+        };
+        Registry {
+            specs: vec![
+                mk("ctable_p32_n8192_b32", ArtifactKind::Ctable, 32, 8192, 32),
+                mk("ctable_p8_n8192_b32", ArtifactKind::Ctable, 8, 8192, 32),
+                mk("ctable_p32_n1024_b32", ArtifactKind::Ctable, 32, 1024, 32),
+                mk("ctable_p8_n1024_b32", ArtifactKind::Ctable, 8, 1024, 32),
+                mk("su_p32_b32", ArtifactKind::Su, 32, 0, 32),
+                mk("su_p8_b32", ArtifactKind::Su, 8, 0, 32),
+                mk("fused_p32_n8192_b32", ArtifactKind::Fused, 32, 8192, 32),
+            ],
+        }
+    }
+
+    #[test]
+    fn big_batches_use_big_tiles() {
+        let r = registry();
+        let s = r.best_ctable(600, 100_000, 32).unwrap();
+        assert_eq!((s.pairs, s.rows), (32, 8192));
+    }
+
+    #[test]
+    fn small_batches_use_small_tiles() {
+        let r = registry();
+        let s = r.best_ctable(4, 500, 16).unwrap();
+        assert_eq!((s.pairs, s.rows), (8, 1024));
+    }
+
+    #[test]
+    fn su_variant_minimizes_calls_then_padding() {
+        let r = registry();
+        assert_eq!(r.best_su(5, 32).unwrap().pairs, 8);
+        assert_eq!(r.best_su(100, 32).unwrap().pairs, 32);
+    }
+
+    #[test]
+    fn bins_requirement_filters() {
+        let r = registry();
+        assert!(r.best_ctable(8, 1000, 64).is_none());
+    }
+
+    #[test]
+    fn load_real_manifest_if_present() {
+        // Integration-lite: if `make artifacts` ran, the real manifest
+        // must parse and contain all three kinds.
+        let dir = Registry::default_dir();
+        if dir.join("manifest.tsv").exists() {
+            let r = Registry::load(&dir).unwrap();
+            assert!(r.specs.iter().any(|s| s.kind == ArtifactKind::Ctable));
+            assert!(r.specs.iter().any(|s| s.kind == ArtifactKind::Su));
+            assert!(r.specs.iter().any(|s| s.kind == ArtifactKind::Fused));
+            for s in &r.specs {
+                assert!(s.path.exists(), "missing {}", s.path.display());
+            }
+        }
+    }
+}

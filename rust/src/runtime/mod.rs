@@ -1,0 +1,68 @@
+//! Execution engines for the SU numeric path.
+//!
+//! Two interchangeable implementations of [`SuEngine`]:
+//! * [`native::NativeEngine`] — exact u64/f64 arithmetic in rust. This is
+//!   the engine the equivalence tests run on (bit-deterministic) and the
+//!   default for the harness.
+//! * [`pjrt::PjrtEngine`] *(feature `pjrt`)* — loads the AOT artifacts
+//!   produced by `python/compile/aot.py` (`artifacts/*.hlo.txt`, the
+//!   Pallas kernels lowered through L2) and executes them on the PJRT CPU
+//!   client via the `xla` crate. Python never runs here — the artifacts
+//!   are build-time outputs (`make artifacts`).
+//!
+//! Both engines satisfy the same contract; `rust/tests/pjrt_runtime.rs`
+//! asserts PJRT ≈ native ≈ the python golden fixtures to 1e-5, closing
+//! the three-layer loop described in `python/compile/fixtures.py`.
+
+pub mod artifacts;
+pub mod native;
+#[cfg(feature = "pjrt")]
+pub mod pjrt;
+pub mod tiling;
+
+pub use native::NativeEngine;
+
+use crate::correlation::ContingencyTable;
+
+/// A borrowed pair of discretized columns whose correlation is wanted.
+#[derive(Debug, Clone, Copy)]
+pub struct ColumnPair<'a> {
+    /// First column's bin indices.
+    pub x: &'a [u8],
+    /// First column's arity.
+    pub bins_x: u16,
+    /// Second column's bin indices (same length as `x`).
+    pub y: &'a [u8],
+    /// Second column's arity.
+    pub bins_y: u16,
+}
+
+/// The numeric backend contract shared by every DiCFS variant.
+///
+/// All three methods are *pure* with respect to the engine (the PJRT
+/// engine only mutates its executable cache), so engines can be shared
+/// across worker tasks.
+pub trait SuEngine: Send + Sync {
+    /// Engine label for reports.
+    fn name(&self) -> &'static str;
+
+    /// Contingency tables for `pairs` over the row range `rows` — the
+    /// worker-side computation of Algorithm 2 / the L1 ctable kernel.
+    fn ctables(&self, pairs: &[ColumnPair<'_>], rows: std::ops::Range<usize>)
+        -> Vec<ContingencyTable>;
+
+    /// SU from merged tables — the driver-side finish (hp scheme) / the
+    /// L1 su kernel.
+    fn su_from_tables(&self, tables: &[ContingencyTable]) -> Vec<f64>;
+
+    /// Fused: SU per column pair over all rows (vp worker-side path).
+    /// Default implementation composes the two halves.
+    fn su_from_column_pairs(&self, pairs: &[ColumnPair<'_>]) -> Vec<f64> {
+        if pairs.is_empty() {
+            return vec![];
+        }
+        let n = pairs[0].x.len();
+        let tables = self.ctables(pairs, 0..n);
+        self.su_from_tables(&tables)
+    }
+}

@@ -1,0 +1,110 @@
+//! Exact native engine: u64 counts, f64 entropies.
+//!
+//! This is the deterministic reference the equivalence invariant runs on,
+//! and the same math as `python/compile/kernels/ref.py` (pinned by the
+//! golden fixtures). It is also heavily optimized — see DESIGN.md §7: the
+//! ctable inner loop is the L3 hot path when PJRT is disabled.
+
+use crate::correlation::su::su_from_table;
+use crate::correlation::ContingencyTable;
+use crate::runtime::{ColumnPair, SuEngine};
+
+/// Pure-rust engine (default).
+#[derive(Debug, Default, Clone, Copy)]
+pub struct NativeEngine;
+
+impl SuEngine for NativeEngine {
+    fn name(&self) -> &'static str {
+        "native"
+    }
+
+    fn ctables(
+        &self,
+        pairs: &[ColumnPair<'_>],
+        rows: std::ops::Range<usize>,
+    ) -> Vec<ContingencyTable> {
+        pairs
+            .iter()
+            .map(|p| {
+                ContingencyTable::from_columns_range(
+                    p.x,
+                    p.bins_x,
+                    p.y,
+                    p.bins_y,
+                    rows.clone(),
+                )
+            })
+            .collect()
+    }
+
+    fn su_from_tables(&self, tables: &[ContingencyTable]) -> Vec<f64> {
+        tables.iter().map(su_from_table).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::XorShift64Star;
+
+    fn random_cols(seed: u64, n: usize, bins: u16) -> Vec<u8> {
+        let mut rng = XorShift64Star::new(seed);
+        (0..n).map(|_| rng.next_below(bins as u64) as u8).collect()
+    }
+
+    #[test]
+    fn fused_matches_two_phase() {
+        let x = random_cols(1, 500, 8);
+        let y = random_cols(2, 500, 4);
+        let pair = ColumnPair {
+            x: &x,
+            bins_x: 8,
+            y: &y,
+            bins_y: 4,
+        };
+        let e = NativeEngine;
+        let fused = e.su_from_column_pairs(&[pair]);
+        let two = e.su_from_tables(&e.ctables(&[pair], 0..500));
+        assert_eq!(fused, two);
+    }
+
+    #[test]
+    fn row_ranges_partition_the_work() {
+        let x = random_cols(3, 1000, 4);
+        let y = random_cols(4, 1000, 4);
+        let pair = ColumnPair {
+            x: &x,
+            bins_x: 4,
+            y: &y,
+            bins_y: 4,
+        };
+        let e = NativeEngine;
+        let whole = e.ctables(&[pair], 0..1000).remove(0);
+        let mut a = e.ctables(&[pair], 0..300).remove(0);
+        let b = e.ctables(&[pair], 300..1000).remove(0);
+        a.merge(&b).unwrap();
+        assert_eq!(whole, a);
+    }
+
+    #[test]
+    fn matches_direct_su() {
+        let x = random_cols(5, 400, 6);
+        let y = random_cols(6, 400, 6);
+        let e = NativeEngine;
+        let got = e.su_from_column_pairs(&[ColumnPair {
+            x: &x,
+            bins_x: 6,
+            y: &y,
+            bins_y: 6,
+        }])[0];
+        let want = crate::correlation::su::symmetrical_uncertainty(&x, 6, &y, 6);
+        assert_eq!(got, want);
+    }
+
+    #[test]
+    fn empty_pairs() {
+        let e = NativeEngine;
+        assert!(e.su_from_column_pairs(&[]).is_empty());
+        assert!(e.su_from_tables(&[]).is_empty());
+    }
+}

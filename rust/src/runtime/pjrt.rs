@@ -1,0 +1,249 @@
+//! PJRT execution engine: runs the AOT-compiled Pallas/JAX artifacts.
+//!
+//! Wiring follows `/opt/xla-example/load_hlo.rs`: HLO *text* →
+//! `HloModuleProto::from_text_file` → `XlaComputation::from_proto` →
+//! `PjRtClient::cpu().compile` → `execute`. Executables are compiled once
+//! per artifact variant and cached for the life of the engine.
+//!
+//! ## Thread safety
+//!
+//! The published `xla` crate wraps its handles in `Rc`, making them
+//! `!Send`/`!Sync`, although the underlying PJRT CPU client is
+//! thread-safe. Every touch of an xla object here happens strictly under
+//! the single `inner` mutex — the `Rc` reference counts are therefore
+//! never accessed concurrently, which makes the manual `Send`/`Sync`
+//! impls sound. Callers (hp driver finish, vp worker tasks) simply
+//! serialize at the engine — acceptable because kernel execution, not
+//! dispatch, dominates.
+
+use std::collections::HashMap;
+use std::ops::Range;
+use std::path::Path;
+use std::sync::Mutex;
+
+use crate::core::{Error, Result};
+use crate::correlation::ContingencyTable;
+use crate::runtime::artifacts::{ArtifactSpec, Registry};
+use crate::runtime::tiling::{pack_columns, pack_tables, unpack_table};
+use crate::runtime::{ColumnPair, SuEngine};
+
+struct Inner {
+    client: xla::PjRtClient,
+    exes: HashMap<String, xla::PjRtLoadedExecutable>,
+}
+
+/// Engine executing the `artifacts/*.hlo.txt` modules on the PJRT CPU
+/// client.
+pub struct PjrtEngine {
+    registry: Registry,
+    inner: Mutex<Inner>,
+}
+
+// SAFETY: all xla objects live behind `inner: Mutex<_>` and are only used
+// while the lock is held, so the non-atomic Rc refcounts inside the xla
+// crate are never touched from two threads at once. See module docs.
+unsafe impl Send for PjrtEngine {}
+unsafe impl Sync for PjrtEngine {}
+
+fn xe(e: impl std::fmt::Display) -> Error {
+    Error::Runtime(format!("pjrt: {e}"))
+}
+
+impl PjrtEngine {
+    /// Engine over the artifacts in `dir` (see [`Registry::default_dir`]).
+    pub fn new(dir: &Path) -> Result<Self> {
+        let registry = Registry::load(dir)?;
+        let client = xla::PjRtClient::cpu().map_err(xe)?;
+        Ok(Self {
+            registry,
+            inner: Mutex::new(Inner {
+                client,
+                exes: HashMap::new(),
+            }),
+        })
+    }
+
+    /// Engine over the default artifacts directory.
+    pub fn from_default_dir() -> Result<Self> {
+        Self::new(&Registry::default_dir())
+    }
+
+    /// The artifact registry in use.
+    pub fn registry(&self) -> &Registry {
+        &self.registry
+    }
+
+    fn ensure_compiled(inner: &mut Inner, spec: &ArtifactSpec) -> Result<()> {
+        if inner.exes.contains_key(&spec.name) {
+            return Ok(());
+        }
+        let path = spec
+            .path
+            .to_str()
+            .ok_or_else(|| Error::Runtime(format!("non-utf8 path {:?}", spec.path)))?;
+        let proto = xla::HloModuleProto::from_text_file(path).map_err(xe)?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = inner.client.compile(&comp).map_err(xe)?;
+        inner.exes.insert(spec.name.clone(), exe);
+        Ok(())
+    }
+
+    /// Run one ctable-kernel invocation, returning the raw `f32[P*B*B]`.
+    fn run_ctable_tile(
+        inner: &mut Inner,
+        spec: &ArtifactSpec,
+        x: &[i32],
+        y: &[i32],
+        valid: &[f32],
+    ) -> Result<Vec<f32>> {
+        Self::ensure_compiled(inner, spec)?;
+        let (p, n) = (spec.pairs as i64, spec.rows as i64);
+        let lx = xla::Literal::vec1(x).reshape(&[p, n]).map_err(xe)?;
+        let ly = xla::Literal::vec1(y).reshape(&[p, n]).map_err(xe)?;
+        let lv = xla::Literal::vec1(valid);
+        let exe = &inner.exes[&spec.name];
+        let out = exe.execute::<xla::Literal>(&[lx, ly, lv]).map_err(xe)?[0][0]
+            .to_literal_sync()
+            .map_err(xe)?;
+        out.to_tuple1().map_err(xe)?.to_vec::<f32>().map_err(xe)
+    }
+
+    /// Run one su-kernel invocation over packed tables → `f32[P]`.
+    fn run_su_tile(inner: &mut Inner, spec: &ArtifactSpec, tables: &[f32]) -> Result<Vec<f32>> {
+        Self::ensure_compiled(inner, spec)?;
+        let (p, b) = (spec.pairs as i64, spec.bins as i64);
+        let lt = xla::Literal::vec1(tables).reshape(&[p, b, b]).map_err(xe)?;
+        let exe = &inner.exes[&spec.name];
+        let out = exe.execute::<xla::Literal>(&[lt]).map_err(xe)?[0][0]
+            .to_literal_sync()
+            .map_err(xe)?;
+        out.to_tuple1().map_err(xe)?.to_vec::<f32>().map_err(xe)
+    }
+
+    /// Run one fused-kernel invocation → `f32[P]` SU values.
+    fn run_fused_tile(
+        inner: &mut Inner,
+        spec: &ArtifactSpec,
+        x: &[i32],
+        y: &[i32],
+        valid: &[f32],
+    ) -> Result<Vec<f32>> {
+        // same parameter layout as the ctable kernel, scalar SU output
+        Self::ensure_compiled(inner, spec)?;
+        let (p, n) = (spec.pairs as i64, spec.rows as i64);
+        let lx = xla::Literal::vec1(x).reshape(&[p, n]).map_err(xe)?;
+        let ly = xla::Literal::vec1(y).reshape(&[p, n]).map_err(xe)?;
+        let lv = xla::Literal::vec1(valid);
+        let exe = &inner.exes[&spec.name];
+        let out = exe.execute::<xla::Literal>(&[lx, ly, lv]).map_err(xe)?[0][0]
+            .to_literal_sync()
+            .map_err(xe)?;
+        out.to_tuple1().map_err(xe)?.to_vec::<f32>().map_err(xe)
+    }
+
+    fn max_bins(pairs: &[ColumnPair<'_>]) -> usize {
+        pairs
+            .iter()
+            .map(|p| p.bins_x.max(p.bins_y) as usize)
+            .max()
+            .unwrap_or(1)
+    }
+}
+
+impl SuEngine for PjrtEngine {
+    fn name(&self) -> &'static str {
+        "pjrt"
+    }
+
+    fn ctables(&self, pairs: &[ColumnPair<'_>], rows: Range<usize>) -> Vec<ContingencyTable> {
+        if pairs.is_empty() {
+            return vec![];
+        }
+        let bins = Self::max_bins(pairs);
+        let nrows = rows.len();
+        let spec = self
+            .registry
+            .best_ctable(pairs.len(), nrows, bins)
+            .unwrap_or_else(|| panic!("no ctable artifact for bins={bins}"))
+            .clone();
+        let mut inner = self.inner.lock().unwrap();
+
+        let mut out = Vec::with_capacity(pairs.len());
+        let bb = spec.bins * spec.bins;
+        for offset in (0..pairs.len()).step_by(spec.pairs) {
+            // Accumulate f32 tile outputs across row windows in f64.
+            let mut acc = vec![0f64; spec.pairs * bb];
+            let mut row = rows.start;
+            while row < rows.end {
+                let packed = pack_columns(pairs, offset, spec.pairs, row, rows.end, spec.rows);
+                let tile = Self::run_ctable_tile(&mut inner, &spec, &packed.x, &packed.y, &packed.valid)
+                    .unwrap_or_else(|e| panic!("{e}"));
+                for (a, t) in acc.iter_mut().zip(&tile) {
+                    *a += f64::from(*t);
+                }
+                row += spec.rows;
+            }
+            let live = (pairs.len() - offset).min(spec.pairs);
+            for p in 0..live {
+                let pair = &pairs[offset + p];
+                let slab: Vec<f32> = acc[p * bb..(p + 1) * bb].iter().map(|&v| v as f32).collect();
+                out.push(unpack_table(&slab, spec.bins, pair.bins_x, pair.bins_y));
+            }
+        }
+        out
+    }
+
+    fn su_from_tables(&self, tables: &[ContingencyTable]) -> Vec<f64> {
+        if tables.is_empty() {
+            return vec![];
+        }
+        let bins = tables
+            .iter()
+            .map(|t| t.bins_x.max(t.bins_y) as usize)
+            .max()
+            .unwrap();
+        let spec = self
+            .registry
+            .best_su(tables.len(), bins)
+            .unwrap_or_else(|| panic!("no su artifact for bins={bins}"))
+            .clone();
+        let mut inner = self.inner.lock().unwrap();
+
+        let mut out = Vec::with_capacity(tables.len());
+        for offset in (0..tables.len()).step_by(spec.pairs) {
+            let (packed, live) = pack_tables(tables, offset, spec.pairs, spec.bins);
+            let su = Self::run_su_tile(&mut inner, &spec, &packed)
+                .unwrap_or_else(|e| panic!("{e}"));
+            out.extend(su[..live].iter().map(|&v| f64::from(v)));
+        }
+        out
+    }
+
+    fn su_from_column_pairs(&self, pairs: &[ColumnPair<'_>]) -> Vec<f64> {
+        if pairs.is_empty() {
+            return vec![];
+        }
+        let n = pairs[0].x.len();
+        let bins = Self::max_bins(pairs);
+        // Fused artifact only fits when one row tile covers the data —
+        // SU is not mergeable across row tiles, unlike ctables.
+        if let Some(spec) = self.registry.best_fused(pairs.len(), n, bins) {
+            if spec.rows >= n {
+                let spec = spec.clone();
+                let mut inner = self.inner.lock().unwrap();
+                let mut out = Vec::with_capacity(pairs.len());
+                for offset in (0..pairs.len()).step_by(spec.pairs) {
+                    let packed = pack_columns(pairs, offset, spec.pairs, 0, n, spec.rows);
+                    let su =
+                        Self::run_fused_tile(&mut inner, &spec, &packed.x, &packed.y, &packed.valid)
+                            .unwrap_or_else(|e| panic!("{e}"));
+                    out.extend(su[..packed.live_pairs].iter().map(|&v| f64::from(v)));
+                }
+                return out;
+            }
+        }
+        // General path: tiled ctables + su kernel.
+        let tables = self.ctables(pairs, 0..n);
+        self.su_from_tables(&tables)
+    }
+}

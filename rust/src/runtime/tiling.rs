@@ -1,0 +1,174 @@
+//! Padding/packing of dynamic batches into the fixed AOT tile shapes.
+//!
+//! PJRT executables are compiled for static `(P, N, B)` shapes; the
+//! coordinator's batches are ragged. This module packs column pairs into
+//! `i32[P, N]` buffers with an `f32[N]` validity mask (padding rows are
+//! masked out; padding pairs are discarded on output) and contingency
+//! tables into `f32[P, B, B]` — matching exactly what
+//! `python/compile/aot.py` lowered.
+
+use crate::correlation::ContingencyTable;
+use crate::runtime::ColumnPair;
+
+/// One packed ctable-kernel invocation.
+#[derive(Debug, Clone)]
+pub struct PackedColumns {
+    /// `i32[P*N]` row-major first-feature bins.
+    pub x: Vec<i32>,
+    /// `i32[P*N]` row-major second-feature bins.
+    pub y: Vec<i32>,
+    /// `f32[N]` validity mask (shared across the pair axis).
+    pub valid: Vec<f32>,
+    /// How many of the P slots hold real pairs.
+    pub live_pairs: usize,
+}
+
+/// Pack up to `tile_p` of `pairs` (starting at `offset`) over the logical
+/// row window `row_start..row_end`, into a `tile_n`-row tile (rows past
+/// the window are masked invalid).
+///
+/// All pairs in one call must share the same column length.
+pub fn pack_columns(
+    pairs: &[ColumnPair<'_>],
+    offset: usize,
+    tile_p: usize,
+    row_start: usize,
+    row_end: usize,
+    tile_n: usize,
+) -> PackedColumns {
+    let live = (pairs.len() - offset).min(tile_p);
+    let n_total = pairs[offset].x.len();
+    debug_assert!(row_end <= n_total);
+    let mut x = vec![0i32; tile_p * tile_n];
+    let mut y = vec![0i32; tile_p * tile_n];
+    let live_rows = row_end.saturating_sub(row_start).min(tile_n);
+    let mut valid = vec![0f32; tile_n];
+    for v in valid.iter_mut().take(live_rows) {
+        *v = 1.0;
+    }
+    for p in 0..live {
+        let pair = &pairs[offset + p];
+        debug_assert_eq!(pair.x.len(), n_total, "ragged pair batch");
+        let xs = &pair.x[row_start..row_start + live_rows];
+        let ys = &pair.y[row_start..row_start + live_rows];
+        let dst = p * tile_n;
+        for (i, (&a, &b)) in xs.iter().zip(ys).enumerate() {
+            x[dst + i] = i32::from(a);
+            y[dst + i] = i32::from(b);
+        }
+    }
+    PackedColumns {
+        x,
+        y,
+        valid,
+        live_pairs: live,
+    }
+}
+
+/// Pack up to `tile_p` contingency tables (starting at `offset`) into an
+/// `f32[P*B*B]` buffer, zero-padding each table into the `B × B` corner.
+pub fn pack_tables(
+    tables: &[ContingencyTable],
+    offset: usize,
+    tile_p: usize,
+    tile_b: usize,
+) -> (Vec<f32>, usize) {
+    let live = (tables.len() - offset).min(tile_p);
+    let mut out = vec![0f32; tile_p * tile_b * tile_b];
+    for p in 0..live {
+        let t = &tables[offset + p];
+        debug_assert!(
+            t.bins_x as usize <= tile_b && t.bins_y as usize <= tile_b,
+            "table {}x{} exceeds tile {tile_b}",
+            t.bins_x,
+            t.bins_y
+        );
+        let base = p * tile_b * tile_b;
+        for bx in 0..t.bins_x as usize {
+            for by in 0..t.bins_y as usize {
+                out[base + bx * tile_b + by] =
+                    t.counts[bx * t.bins_y as usize + by] as f32;
+            }
+        }
+    }
+    (out, live)
+}
+
+/// Convert one `f32[B, B]` kernel output slab back into a
+/// [`ContingencyTable`] of logical shape `bins_x × bins_y` (counts are
+/// exact integers ≤ 2²⁴, so the f32 → u64 round-trip is lossless for any
+/// partition this system processes).
+pub fn unpack_table(slab: &[f32], tile_b: usize, bins_x: u16, bins_y: u16) -> ContingencyTable {
+    let mut t = ContingencyTable::new(bins_x, bins_y);
+    for bx in 0..bins_x as usize {
+        for by in 0..bins_y as usize {
+            t.counts[bx * bins_y as usize + by] = slab[bx * tile_b + by].round() as u64;
+        }
+    }
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn pair_of<'a>(x: &'a [u8], y: &'a [u8], bins: u16) -> ColumnPair<'a> {
+        ColumnPair {
+            x,
+            bins_x: bins,
+            y,
+            bins_y: bins,
+        }
+    }
+
+    #[test]
+    fn pack_pads_rows_and_masks() {
+        let x = [1u8, 2, 3];
+        let y = [3u8, 2, 1];
+        let p = pack_columns(&[pair_of(&x, &y, 4)], 0, 2, 0, 3, 8);
+        assert_eq!(p.live_pairs, 1);
+        assert_eq!(&p.x[..3], &[1, 2, 3]);
+        assert_eq!(&p.x[3..8], &[0; 5]); // padded
+        assert_eq!(&p.valid[..], &[1.0, 1.0, 1.0, 0.0, 0.0, 0.0, 0.0, 0.0]);
+        assert_eq!(&p.y[8..16], &[0; 8]); // dead pair slot zeroed
+    }
+
+    #[test]
+    fn pack_row_window() {
+        let x: Vec<u8> = (0..10).map(|i| (i % 4) as u8).collect();
+        let p = pack_columns(&[pair_of(&x, &x, 4)], 0, 1, 8, 10, 4);
+        // rows 8..10 live, 2 padding
+        assert_eq!(&p.x[..2], &[0, 1]);
+        assert_eq!(&p.valid[..], &[1.0, 1.0, 0.0, 0.0]);
+    }
+
+    #[test]
+    fn pack_tables_roundtrip() {
+        let t = ContingencyTable::from_columns(&[0, 1, 1, 2], 3, &[1, 0, 1, 1], 2);
+        let (buf, live) = pack_tables(&[t.clone()], 0, 4, 8);
+        assert_eq!(live, 1);
+        let back = unpack_table(&buf[..64], 8, 3, 2);
+        assert_eq!(back, t);
+    }
+
+    #[test]
+    fn pack_tables_multiple_offsets() {
+        let a = ContingencyTable::from_columns(&[0, 0], 2, &[1, 1], 2);
+        let b = ContingencyTable::from_columns(&[1, 1], 2, &[0, 1], 2);
+        let (buf, live) = pack_tables(&[a.clone(), b.clone()], 1, 2, 4);
+        assert_eq!(live, 1);
+        let back = unpack_table(&buf[..16], 4, 2, 2);
+        assert_eq!(back, b);
+    }
+
+    #[test]
+    fn chunked_pack_covers_all_pairs() {
+        let x = [0u8, 1];
+        let y = [1u8, 0];
+        let pairs: Vec<ColumnPair> = (0..5).map(|_| pair_of(&x, &y, 2)).collect();
+        let first = pack_columns(&pairs, 0, 2, 0, 2, 2);
+        let last = pack_columns(&pairs, 4, 2, 0, 2, 2);
+        assert_eq!(first.live_pairs, 2);
+        assert_eq!(last.live_pairs, 1);
+    }
+}

@@ -1,0 +1,32 @@
+//! `sparklet` — an in-process mini-Spark substrate.
+//!
+//! The paper's algorithms are expressed against the Spark primitives of
+//! §4: RDDs with `mapPartitions` / `reduceByKey` / `collect`, driver-side
+//! coordination, read-only broadcast, and shuffle. This module rebuilds
+//! exactly that programming model in-process so DiCFS can be written the
+//! way the paper writes it (see `dicfs::hp`, `dicfs::vp`).
+//!
+//! Two clocks:
+//! * **Real execution** — every stage actually runs on a thread pool and
+//!   produces real results (the selected features are never simulated).
+//! * **Simulated cluster time** — every task is wall-clock timed; per-stage
+//!   metrics (task times, shuffle bytes, broadcast bytes) feed
+//!   [`simtime`], which schedules the measured tasks onto an
+//!   `nodes × cores` virtual cluster (LPT) plus a network cost model.
+//!   This is how Fig. 3/4/5's multi-node scaling is reproduced on a
+//!   single-core host (DESIGN.md §2 — the substitution for the CESGA
+//!   cluster).
+//!
+//! Fault tolerance: like Spark, failed tasks are retried ([`pool`];
+//! `TaskOptions::max_retries`), which the failure-injection tests use.
+
+pub mod config;
+pub mod metrics;
+pub mod pool;
+pub mod rdd;
+pub mod simtime;
+
+pub use config::{ClusterConfig, NetworkModel};
+pub use metrics::{JobMetrics, StageKind, StageMetrics};
+pub use rdd::{Broadcast, Rdd, SparkletContext};
+pub use simtime::simulate_job_time;

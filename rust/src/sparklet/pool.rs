@@ -1,0 +1,185 @@
+//! Scatter-gather task execution with per-task timing and Spark-style
+//! retry of failed (panicking) tasks.
+//!
+//! std-only (no rayon in this environment): a `std::thread::scope` fans
+//! the task indices out over worker threads via an atomic cursor; results
+//! land in slot order so output order always matches input order.
+
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+use std::time::Instant;
+
+/// Options controlling one scatter-gather run.
+#[derive(Debug, Clone, Copy)]
+pub struct TaskOptions {
+    /// Worker threads to use (clamped to task count; 0 → inline).
+    pub threads: usize,
+    /// Retries per failed task before giving up (Spark default: 3).
+    pub max_retries: usize,
+}
+
+impl Default for TaskOptions {
+    fn default() -> Self {
+        Self {
+            threads: std::thread::available_parallelism()
+                .map(|n| n.get())
+                .unwrap_or(1),
+            max_retries: 3,
+        }
+    }
+}
+
+/// Per-task outcome: duration and how many attempts it took.
+#[derive(Debug, Clone, Copy)]
+pub struct TaskReport {
+    /// Wall-clock seconds of the *successful* attempt.
+    pub secs: f64,
+    /// Total attempts (1 = no retry).
+    pub attempts: usize,
+}
+
+/// Run `f(i)` for every `i in 0..count`, returning results in index order
+/// plus per-task reports. Panicking tasks are retried up to
+/// `opts.max_retries` times; if a task keeps failing the whole run
+/// returns `Err` with the task index (stage failure, like Spark aborting
+/// a job after repeated task failures).
+pub fn run_tasks<U: Send>(
+    count: usize,
+    opts: TaskOptions,
+    f: impl Fn(usize) -> U + Sync,
+) -> Result<(Vec<U>, Vec<TaskReport>), usize> {
+    if count == 0 {
+        return Ok((vec![], vec![]));
+    }
+    let results: Vec<Mutex<Option<U>>> = (0..count).map(|_| Mutex::new(None)).collect();
+    let reports: Vec<Mutex<Option<TaskReport>>> = (0..count).map(|_| Mutex::new(None)).collect();
+    let cursor = AtomicUsize::new(0);
+    let failed = AtomicUsize::new(usize::MAX);
+
+    let worker = |_wid: usize| {
+        loop {
+            if failed.load(Ordering::Relaxed) != usize::MAX {
+                return; // another worker hit a hard failure — bail out
+            }
+            let i = cursor.fetch_add(1, Ordering::Relaxed);
+            if i >= count {
+                return;
+            }
+            let mut attempts = 0;
+            loop {
+                attempts += 1;
+                let t0 = Instant::now();
+                match catch_unwind(AssertUnwindSafe(|| f(i))) {
+                    Ok(v) => {
+                        *results[i].lock().unwrap() = Some(v);
+                        *reports[i].lock().unwrap() = Some(TaskReport {
+                            secs: t0.elapsed().as_secs_f64(),
+                            attempts,
+                        });
+                        break;
+                    }
+                    Err(_) if attempts <= opts.max_retries => continue,
+                    Err(_) => {
+                        failed.store(i, Ordering::Relaxed);
+                        return;
+                    }
+                }
+            }
+        }
+    };
+
+    let threads = opts.threads.clamp(1, count);
+    if threads == 1 {
+        worker(0);
+    } else {
+        std::thread::scope(|s| {
+            for w in 0..threads {
+                s.spawn(move || worker(w));
+            }
+        });
+    }
+
+    let fi = failed.load(Ordering::Relaxed);
+    if fi != usize::MAX {
+        return Err(fi);
+    }
+    let out: Vec<U> = results
+        .into_iter()
+        .map(|m| m.into_inner().unwrap().expect("all tasks completed"))
+        .collect();
+    let reps: Vec<TaskReport> = reports
+        .into_iter()
+        .map(|m| m.into_inner().unwrap().expect("all tasks reported"))
+        .collect();
+    Ok((out, reps))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU32;
+
+    fn opts(threads: usize) -> TaskOptions {
+        TaskOptions {
+            threads,
+            max_retries: 3,
+        }
+    }
+
+    #[test]
+    fn results_in_index_order() {
+        let (out, reps) = run_tasks(16, opts(4), |i| i * i).unwrap();
+        assert_eq!(out, (0..16).map(|i| i * i).collect::<Vec<_>>());
+        assert_eq!(reps.len(), 16);
+        assert!(reps.iter().all(|r| r.attempts == 1));
+    }
+
+    #[test]
+    fn empty_run() {
+        let (out, reps) = run_tasks(0, opts(2), |i| i).unwrap();
+        assert!(out.is_empty() && reps.is_empty());
+    }
+
+    #[test]
+    fn single_threaded_inline() {
+        let (out, _) = run_tasks(5, opts(1), |i| i + 1).unwrap();
+        assert_eq!(out, vec![1, 2, 3, 4, 5]);
+    }
+
+    #[test]
+    fn retries_flaky_task() {
+        // Task 3 panics on its first two attempts, then succeeds.
+        let failures = AtomicU32::new(0);
+        let (out, reps) = run_tasks(8, opts(2), |i| {
+            if i == 3 && failures.fetch_add(1, Ordering::SeqCst) < 2 {
+                panic!("injected failure");
+            }
+            i
+        })
+        .unwrap();
+        assert_eq!(out, (0..8).collect::<Vec<_>>());
+        assert_eq!(reps[3].attempts, 3);
+        assert!(reps.iter().enumerate().all(|(i, r)| i == 3 || r.attempts == 1));
+    }
+
+    #[test]
+    fn permanent_failure_aborts_stage() {
+        let err = run_tasks(4, opts(2), |i| {
+            if i == 2 {
+                panic!("always fails");
+            }
+            i
+        });
+        assert_eq!(err.unwrap_err(), 2);
+    }
+
+    #[test]
+    fn task_times_are_recorded() {
+        let (_, reps) = run_tasks(3, opts(1), |_| {
+            std::thread::sleep(std::time::Duration::from_millis(3));
+        })
+        .unwrap();
+        assert!(reps.iter().all(|r| r.secs >= 0.002));
+    }
+}

@@ -1,0 +1,437 @@
+//! RDDs, the driver context, and broadcast variables (paper §4).
+//!
+//! An [`Rdd<T>`] is an immutable partitioned collection; transformations
+//! launch real tasks on the host thread pool and record [`StageMetrics`]
+//! into the owning [`SparkletContext`] for virtual-cluster replay. The
+//! subset of the Spark API implemented is exactly what the paper uses:
+//! `parallelize`, `mapPartitions`, `reduceByKey`, `collect`, broadcast.
+
+use std::collections::HashMap;
+use std::hash::{Hash, Hasher};
+use std::ops::Deref;
+use std::sync::{Arc, Mutex};
+
+use crate::sparklet::config::ClusterConfig;
+use crate::sparklet::metrics::{JobMetrics, StageKind, StageMetrics};
+use crate::sparklet::pool::{run_tasks, TaskOptions};
+
+/// Driver context: owns the cluster topology, the metrics log and the
+/// real execution options.
+pub struct SparkletContext {
+    /// Virtual topology used for simulated-time replay.
+    pub cluster: ClusterConfig,
+    /// Real execution options (host threads, retries).
+    pub task_options: TaskOptions,
+    metrics: Mutex<JobMetrics>,
+}
+
+impl SparkletContext {
+    /// New context over the given virtual topology.
+    pub fn new(cluster: ClusterConfig) -> Arc<Self> {
+        Arc::new(Self {
+            cluster,
+            task_options: TaskOptions::default(),
+            metrics: Mutex::new(JobMetrics::default()),
+        })
+    }
+
+    /// Distribute `data` into `num_partitions` contiguous chunks.
+    pub fn parallelize<T: Send + Sync>(
+        self: &Arc<Self>,
+        data: Vec<T>,
+        num_partitions: usize,
+    ) -> Rdd<T> {
+        let num_partitions = num_partitions.max(1);
+        let n = data.len();
+        let base = n / num_partitions;
+        let extra = n % num_partitions;
+        let mut parts: Vec<Vec<T>> = Vec::with_capacity(num_partitions);
+        let mut it = data.into_iter();
+        for p in 0..num_partitions {
+            let take = base + usize::from(p < extra);
+            parts.push(it.by_ref().take(take).collect());
+        }
+        Rdd {
+            ctx: Arc::clone(self),
+            parts: Arc::new(parts),
+        }
+    }
+
+    /// Wrap pre-built partitions (used by the vp columnar transformation).
+    pub fn from_partitions<T: Send + Sync>(self: &Arc<Self>, parts: Vec<Vec<T>>) -> Rdd<T> {
+        Rdd {
+            ctx: Arc::clone(self),
+            parts: Arc::new(parts),
+        }
+    }
+
+    /// Broadcast a read-only value to all (virtual) workers, charging
+    /// `bytes` to the network model.
+    pub fn broadcast<T>(self: &Arc<Self>, value: T, bytes: usize) -> Broadcast<T> {
+        self.metrics.lock().unwrap().broadcast_bytes.push(bytes);
+        Broadcast {
+            value: Arc::new(value),
+        }
+    }
+
+    /// Snapshot of the accumulated job metrics.
+    pub fn metrics(&self) -> JobMetrics {
+        self.metrics.lock().unwrap().clone()
+    }
+
+    /// Reset the metrics log (between harness repetitions).
+    pub fn reset_metrics(&self) {
+        *self.metrics.lock().unwrap() = JobMetrics::default();
+    }
+
+    fn record_stage(&self, stage: StageMetrics) {
+        self.metrics.lock().unwrap().stages.push(stage);
+    }
+}
+
+/// A read-only value shared with every task (Spark broadcast variable).
+#[derive(Clone)]
+pub struct Broadcast<T> {
+    value: Arc<T>,
+}
+
+impl<T> Deref for Broadcast<T> {
+    type Target = T;
+    fn deref(&self) -> &T {
+        &self.value
+    }
+}
+
+/// Immutable partitioned collection.
+pub struct Rdd<T> {
+    ctx: Arc<SparkletContext>,
+    parts: Arc<Vec<Vec<T>>>,
+}
+
+impl<T> Clone for Rdd<T> {
+    fn clone(&self) -> Self {
+        Self {
+            ctx: Arc::clone(&self.ctx),
+            parts: Arc::clone(&self.parts),
+        }
+    }
+}
+
+impl<T: Send + Sync> Rdd<T> {
+    /// Number of partitions.
+    pub fn num_partitions(&self) -> usize {
+        self.parts.len()
+    }
+
+    /// Total element count.
+    pub fn count(&self) -> usize {
+        self.parts.iter().map(|p| p.len()).sum()
+    }
+
+    /// Borrow a partition (driver-side inspection; no task launched).
+    pub fn partition(&self, i: usize) -> &[T] {
+        &self.parts[i]
+    }
+
+    /// The owning context.
+    pub fn context(&self) -> &Arc<SparkletContext> {
+        &self.ctx
+    }
+
+    /// `mapPartitions`: run `f(partition_index, elements)` per partition
+    /// as one task each.
+    ///
+    /// Panics (after retries) abort the stage, as in Spark.
+    pub fn map_partitions<U: Send + Sync>(
+        &self,
+        label: &str,
+        f: impl Fn(usize, &[T]) -> Vec<U> + Sync,
+    ) -> Rdd<U> {
+        let parts = &self.parts;
+        let (out, reports) = run_tasks(parts.len(), self.ctx.task_options, |i| f(i, &parts[i]))
+            .unwrap_or_else(|t| panic!("stage {label}: task {t} failed permanently"));
+        let retries = reports.iter().map(|r| r.attempts - 1).sum();
+        self.ctx.record_stage(StageMetrics {
+            label: label.to_string(),
+            kind: StageKind::Map,
+            task_secs: reports.iter().map(|r| r.secs).collect(),
+            retries,
+            shuffle_bytes: 0,
+            collect_bytes: 0,
+        });
+        Rdd {
+            ctx: Arc::clone(&self.ctx),
+            parts: Arc::new(out),
+        }
+    }
+
+    /// Element-wise `map` (implemented over `mapPartitions`).
+    pub fn map<U: Send + Sync>(&self, label: &str, f: impl Fn(&T) -> U + Sync) -> Rdd<U> {
+        self.map_partitions(label, |_, xs| xs.iter().map(&f).collect())
+    }
+
+    /// `filter` (implemented over `mapPartitions`).
+    pub fn filter(&self, label: &str, f: impl Fn(&T) -> bool + Sync) -> Rdd<T>
+    where
+        T: Clone,
+    {
+        self.map_partitions(label, |_, xs| xs.iter().filter(|x| f(x)).cloned().collect())
+    }
+
+    /// `collect`: gather all elements to the driver in partition order,
+    /// charging `wire(elem)` bytes each to the network model.
+    pub fn collect_sized(&self, wire: impl Fn(&T) -> usize) -> Vec<T>
+    where
+        T: Clone,
+    {
+        let mut out = Vec::with_capacity(self.count());
+        let mut bytes = 0usize;
+        for p in self.parts.iter() {
+            for e in p {
+                bytes += wire(e);
+                out.push(e.clone());
+            }
+        }
+        self.ctx.record_stage(StageMetrics {
+            label: "collect".to_string(),
+            kind: StageKind::Collect,
+            task_secs: vec![],
+            retries: 0,
+            shuffle_bytes: 0,
+            collect_bytes: bytes,
+        });
+        out
+    }
+
+    /// `collect` with a flat `size_of::<T>()` per-element estimate.
+    pub fn collect(&self) -> Vec<T>
+    where
+        T: Clone,
+    {
+        self.collect_sized(|_| std::mem::size_of::<T>())
+    }
+}
+
+impl<K, V> Rdd<(K, V)>
+where
+    K: Eq + Hash + Clone + Send + Sync,
+    V: Send + Sync + Clone,
+{
+    /// `reduceByKey`: map-side combine per partition, hash shuffle into
+    /// `num_out` partitions, reduce-side merge. `wire(v)` prices the
+    /// map-output records for the shuffle cost model; `merge(a, b)` must
+    /// be commutative + associative (the u64-count tables are — that is
+    /// what makes the distributed result bit-exact).
+    pub fn reduce_by_key(
+        &self,
+        label: &str,
+        num_out: usize,
+        wire: impl Fn(&V) -> usize + Sync,
+        merge: impl Fn(&mut V, V) + Sync,
+    ) -> Rdd<(K, V)> {
+        let num_out = num_out.max(1);
+        let parts = &self.parts;
+
+        // Map side: per-partition combine + hash bucketing, one task per
+        // input partition — bucketing happens *inside* the map task, as
+        // Spark's shuffle writers do, so its cost lands in (parallel)
+        // task time, not on the serial driver.
+        let (combined, map_reports) = run_tasks(parts.len(), self.ctx.task_options, |i| {
+            let mut acc: HashMap<K, V> = HashMap::new();
+            for (k, v) in &parts[i] {
+                match acc.get_mut(k) {
+                    Some(a) => merge(a, v.clone()),
+                    None => {
+                        acc.insert(k.clone(), v.clone());
+                    }
+                }
+            }
+            let mut bytes = 0usize;
+            let mut buckets: Vec<Vec<(K, V)>> = (0..num_out).map(|_| Vec::new()).collect();
+            for (k, v) in acc {
+                bytes += wire(&v);
+                let mut h = std::collections::hash_map::DefaultHasher::new();
+                k.hash(&mut h);
+                buckets[(h.finish() as usize) % num_out].push((k, v));
+            }
+            (buckets, bytes)
+        })
+        .unwrap_or_else(|t| panic!("stage {label}/map: task {t} failed permanently"));
+
+        // Shuffle: concatenate the per-task buckets (pure moves).
+        let mut shuffle_bytes = 0usize;
+        let mut buckets: Vec<Vec<(K, V)>> = (0..num_out).map(|_| Vec::new()).collect();
+        for (task_buckets, bytes) in combined {
+            shuffle_bytes += bytes;
+            for (b, mut chunk) in task_buckets.into_iter().enumerate() {
+                buckets[b].append(&mut chunk);
+            }
+        }
+
+        // Reduce side: merge within each output partition (one task each).
+        let buckets = Arc::new(buckets);
+        let b2 = Arc::clone(&buckets);
+        let (reduced, red_reports) = run_tasks(num_out, self.ctx.task_options, move |i| {
+            let mut acc: HashMap<K, V> = HashMap::new();
+            for (k, v) in &b2[i] {
+                match acc.get_mut(k) {
+                    Some(a) => merge(a, v.clone()),
+                    None => {
+                        acc.insert(k.clone(), v.clone());
+                    }
+                }
+            }
+            acc.into_iter().collect::<Vec<(K, V)>>()
+        })
+        .unwrap_or_else(|t| panic!("stage {label}/reduce: task {t} failed permanently"));
+
+        let mut task_secs: Vec<f64> = map_reports.iter().map(|r| r.secs).collect();
+        task_secs.extend(red_reports.iter().map(|r| r.secs));
+        let retries = map_reports
+            .iter()
+            .chain(&red_reports)
+            .map(|r| r.attempts - 1)
+            .sum();
+        self.ctx.record_stage(StageMetrics {
+            label: label.to_string(),
+            kind: StageKind::Shuffle,
+            task_secs,
+            retries,
+            shuffle_bytes,
+            collect_bytes: 0,
+        });
+
+        Rdd {
+            ctx: Arc::clone(&self.ctx),
+            parts: Arc::new(reduced),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ctx() -> Arc<SparkletContext> {
+        SparkletContext::new(ClusterConfig::with_nodes(2))
+    }
+
+    #[test]
+    fn parallelize_balances_partitions() {
+        let c = ctx();
+        let rdd = c.parallelize((0..10).collect::<Vec<i32>>(), 3);
+        assert_eq!(rdd.num_partitions(), 3);
+        let sizes: Vec<usize> = (0..3).map(|i| rdd.partition(i).len()).collect();
+        assert_eq!(sizes, vec![4, 3, 3]);
+        assert_eq!(rdd.count(), 10);
+    }
+
+    #[test]
+    fn map_partitions_preserves_order() {
+        let c = ctx();
+        let rdd = c.parallelize((0..100).collect::<Vec<i32>>(), 7);
+        let doubled = rdd.map_partitions("dbl", |_, xs| xs.iter().map(|x| x * 2).collect());
+        assert_eq!(doubled.collect(), (0..100).map(|x| x * 2).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn map_and_filter() {
+        let c = ctx();
+        let rdd = c.parallelize((0..20).collect::<Vec<i32>>(), 4);
+        let odd_sq = rdd.filter("odd", |x| x % 2 == 1).map("sq", |x| x * x);
+        assert_eq!(
+            odd_sq.collect(),
+            (0..20).filter(|x| x % 2 == 1).map(|x| x * x).collect::<Vec<_>>()
+        );
+    }
+
+    #[test]
+    fn reduce_by_key_sums() {
+        let c = ctx();
+        let pairs: Vec<(u32, u64)> = (0..100).map(|i| (i % 5, 1u64)).collect();
+        let rdd = c.parallelize(pairs, 8);
+        let reduced = rdd.reduce_by_key("sum", 3, |_| 8, |a, b| *a += b);
+        let mut out = reduced.collect();
+        out.sort();
+        assert_eq!(out, vec![(0, 20), (1, 20), (2, 20), (3, 20), (4, 20)]);
+    }
+
+    #[test]
+    fn reduce_by_key_records_shuffle_bytes() {
+        let c = ctx();
+        let pairs: Vec<(u32, u64)> = (0..16).map(|i| (i % 4, 1u64)).collect();
+        let rdd = c.parallelize(pairs, 4);
+        let _ = rdd.reduce_by_key("sum", 2, |_| 100, |a, b| *a += b);
+        let m = c.metrics();
+        let stage = m.stages.last().unwrap();
+        assert_eq!(stage.kind, StageKind::Shuffle);
+        // map-side combine: ≤ 4 keys per partition survive
+        assert!(stage.shuffle_bytes <= 16 * 100);
+        assert!(stage.shuffle_bytes >= 4 * 100);
+    }
+
+    #[test]
+    fn metrics_accumulate_per_stage() {
+        let c = ctx();
+        let rdd = c.parallelize((0..10).collect::<Vec<i32>>(), 2);
+        let _ = rdd.map("a", |x| x + 1);
+        let _ = rdd.map("b", |x| x + 2);
+        let m = c.metrics();
+        assert_eq!(m.stages.len(), 2);
+        assert_eq!(m.stages[0].label, "a");
+        assert_eq!(m.total_tasks(), 4);
+        c.reset_metrics();
+        assert_eq!(c.metrics().stages.len(), 0);
+    }
+
+    #[test]
+    fn broadcast_is_shared_and_priced() {
+        let c = ctx();
+        let b = c.broadcast(vec![1u8, 2, 3], 3);
+        let rdd = c.parallelize((0..4).collect::<Vec<i32>>(), 2);
+        let bc = b.clone();
+        let out = rdd.map("use-bc", move |x| bc[0] as i32 + x);
+        assert_eq!(out.collect(), vec![1, 2, 3, 4]);
+        assert_eq!(c.metrics().total_broadcast_bytes(), 3);
+    }
+
+    #[test]
+    fn collect_sized_charges_bytes() {
+        let c = ctx();
+        let rdd = c.parallelize(vec![vec![0u8; 10], vec![0u8; 20]], 2);
+        let _ = rdd.collect_sized(|v| v.len());
+        let m = c.metrics();
+        assert_eq!(m.stages.last().unwrap().collect_bytes, 30);
+    }
+
+    #[test]
+    fn from_partitions_keeps_layout() {
+        let c = ctx();
+        let rdd = c.from_partitions(vec![vec![1, 2], vec![], vec![3]]);
+        assert_eq!(rdd.num_partitions(), 3);
+        assert_eq!(rdd.collect(), vec![1, 2, 3]);
+    }
+
+    #[test]
+    #[should_panic(expected = "failed permanently")]
+    fn permanent_task_failure_aborts() {
+        let c = ctx();
+        let rdd = c.parallelize((0..4).collect::<Vec<i32>>(), 4);
+        // silence the expected panic spam from retries
+        let prev = std::panic::take_hook();
+        std::panic::set_hook(Box::new(|_| {}));
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            rdd.map_partitions("boom", |i, xs| {
+                if i == 2 {
+                    panic!("injected");
+                }
+                xs.to_vec()
+            })
+        }));
+        std::panic::set_hook(prev);
+        match result {
+            Ok(_) => (),
+            Err(e) => std::panic::resume_unwind(e),
+        }
+    }
+}

@@ -1,0 +1,186 @@
+//! ASCII tables and line charts for the bench harness.
+//!
+//! Every paper figure is regenerated as (a) a CSV under `bench_out/` and
+//! (b) an ASCII chart printed to stdout so `cargo bench` output is
+//! self-contained (criterion is not available in this environment).
+
+/// Render a fixed-width table: `header` row plus aligned data rows.
+pub fn table(headers: &[&str], rows: &[Vec<String>]) -> String {
+    let mut widths: Vec<usize> = headers.iter().map(|h| h.len()).collect();
+    for row in rows {
+        for (i, cell) in row.iter().enumerate() {
+            if i < widths.len() {
+                widths[i] = widths[i].max(cell.len());
+            }
+        }
+    }
+    let sep: String = widths
+        .iter()
+        .map(|w| "-".repeat(w + 2))
+        .collect::<Vec<_>>()
+        .join("+");
+    let fmt_row = |cells: &[String]| -> String {
+        cells
+            .iter()
+            .enumerate()
+            .map(|(i, c)| format!(" {:<width$} ", c, width = widths[i]))
+            .collect::<Vec<_>>()
+            .join("|")
+    };
+    let mut out = String::new();
+    out.push_str(&fmt_row(
+        &headers.iter().map(|s| s.to_string()).collect::<Vec<_>>(),
+    ));
+    out.push('\n');
+    out.push_str(&sep);
+    out.push('\n');
+    for row in rows {
+        out.push_str(&fmt_row(row));
+        out.push('\n');
+    }
+    out
+}
+
+/// A named series for [`line_chart`].
+pub struct Series<'a> {
+    pub name: &'a str,
+    /// (x, y) points; y = NaN marks "did not run" (e.g. WEKA OOM) gaps.
+    pub points: &'a [(f64, f64)],
+}
+
+/// Render multiple series as an ASCII scatter/line chart with axes.
+///
+/// The chart is `width x height` characters; each series gets a distinct
+/// glyph. NaN y-values are skipped (the paper's missing WEKA/vp points).
+pub fn line_chart(title: &str, xlabel: &str, ylabel: &str, series: &[Series], width: usize, height: usize) -> String {
+    const GLYPHS: [char; 6] = ['o', '*', '+', 'x', '#', '@'];
+    let pts: Vec<(f64, f64)> = series
+        .iter()
+        .flat_map(|s| s.points.iter().copied())
+        .filter(|(_, y)| y.is_finite())
+        .collect();
+    if pts.is_empty() {
+        return format!("{title}\n  (no data)\n");
+    }
+    let (mut xmin, mut xmax) = (f64::INFINITY, f64::NEG_INFINITY);
+    let (mut ymin, mut ymax) = (f64::INFINITY, f64::NEG_INFINITY);
+    for &(x, y) in &pts {
+        xmin = xmin.min(x);
+        xmax = xmax.max(x);
+        ymin = ymin.min(y);
+        ymax = ymax.max(y);
+    }
+    if (xmax - xmin).abs() < 1e-12 {
+        xmax = xmin + 1.0;
+    }
+    if (ymax - ymin).abs() < 1e-12 {
+        ymax = ymin + 1.0;
+    }
+    ymin = ymin.min(0.0); // anchor at zero like the paper's plots
+
+    let mut grid = vec![vec![' '; width]; height];
+    for (si, s) in series.iter().enumerate() {
+        let g = GLYPHS[si % GLYPHS.len()];
+        let mut prev: Option<(usize, usize)> = None;
+        for &(x, y) in s.points {
+            if !y.is_finite() {
+                prev = None;
+                continue;
+            }
+            let cx = (((x - xmin) / (xmax - xmin)) * (width as f64 - 1.0)).round() as usize;
+            let cy = (((y - ymin) / (ymax - ymin)) * (height as f64 - 1.0)).round() as usize;
+            let cy = height - 1 - cy.min(height - 1);
+            let cx = cx.min(width - 1);
+            // connect with a crude line of '.' between consecutive points
+            if let Some((px, py)) = prev {
+                let steps = px.abs_diff(cx).max(py.abs_diff(cy)).max(1);
+                for t in 1..steps {
+                    let ix = px as f64 + (cx as f64 - px as f64) * t as f64 / steps as f64;
+                    let iy = py as f64 + (cy as f64 - py as f64) * t as f64 / steps as f64;
+                    let (ix, iy) = (ix.round() as usize, iy.round() as usize);
+                    if grid[iy][ix] == ' ' {
+                        grid[iy][ix] = '.';
+                    }
+                }
+            }
+            grid[cy][cx] = g;
+            prev = Some((cx, cy));
+        }
+    }
+
+    let mut out = format!("{title}\n");
+    out.push_str(&format!("  {ylabel}\n"));
+    for (i, row) in grid.iter().enumerate() {
+        let yv = ymax - (ymax - ymin) * i as f64 / (height as f64 - 1.0);
+        out.push_str(&format!("  {yv:>9.2} |{}\n", row.iter().collect::<String>()));
+    }
+    out.push_str(&format!("  {:>9} +{}\n", "", "-".repeat(width)));
+    out.push_str(&format!(
+        "  {:>9}  {:<w2$.2}{:>w2$.2}  ({xlabel})\n",
+        "",
+        xmin,
+        xmax,
+        w2 = width / 2
+    ));
+    let legend = series
+        .iter()
+        .enumerate()
+        .map(|(i, s)| format!("{} {}", GLYPHS[i % GLYPHS.len()], s.name))
+        .collect::<Vec<_>>()
+        .join("   ");
+    out.push_str(&format!("  legend: {legend}\n"));
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table_aligns_columns() {
+        let t = table(
+            &["name", "value"],
+            &[
+                vec!["a".into(), "1".into()],
+                vec!["long-name".into(), "2".into()],
+            ],
+        );
+        let lines: Vec<&str> = t.lines().collect();
+        assert_eq!(lines.len(), 4);
+        assert!(lines[0].contains("name") && lines[0].contains("value"));
+        // all rows equal width
+        assert_eq!(lines[2].len(), lines[3].len());
+    }
+
+    #[test]
+    fn chart_renders_all_series_glyphs() {
+        let s1 = [(1.0, 1.0), (2.0, 2.0)];
+        let s2 = [(1.0, 2.0), (2.0, 4.0)];
+        let c = line_chart(
+            "t",
+            "x",
+            "y",
+            &[
+                Series { name: "a", points: &s1 },
+                Series { name: "b", points: &s2 },
+            ],
+            40,
+            10,
+        );
+        assert!(c.contains('o') && c.contains('*'));
+        assert!(c.contains("legend"));
+    }
+
+    #[test]
+    fn chart_skips_nan_points() {
+        let s = [(1.0, 1.0), (2.0, f64::NAN), (3.0, 3.0)];
+        let c = line_chart("t", "x", "y", &[Series { name: "a", points: &s }], 30, 8);
+        assert!(c.contains('o'));
+    }
+
+    #[test]
+    fn chart_handles_empty() {
+        let c = line_chart("t", "x", "y", &[Series { name: "a", points: &[] }], 30, 8);
+        assert!(c.contains("no data"));
+    }
+}

@@ -1,0 +1,10 @@
+//! Small self-contained utilities (the crate builds on std + `xla` only,
+//! so RNG, charts, timing and stats helpers live in-tree).
+
+pub mod chart;
+pub mod rng;
+pub mod stats;
+pub mod timer;
+
+pub use rng::XorShift64Star;
+pub use timer::Stopwatch;

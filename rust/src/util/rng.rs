@@ -1,0 +1,176 @@
+//! Deterministic xorshift64* PRNG.
+//!
+//! This generator is mirrored bit-for-bit by `python/compile/fixtures.py`
+//! (`XorShift64Star`), which is how the golden cross-language fixtures in
+//! `artifacts/fixtures/` regenerate identical inputs on both sides. Keep
+//! the two implementations in lockstep.
+
+/// xorshift64* with the standard multiplier; state is never zero.
+#[derive(Debug, Clone)]
+pub struct XorShift64Star {
+    state: u64,
+}
+
+impl XorShift64Star {
+    /// Seed the generator. A zero seed is remapped to a fixed odd constant
+    /// (xorshift state must be non-zero).
+    pub fn new(seed: u64) -> Self {
+        Self {
+            state: if seed == 0 { 0x9E37_79B9_7F4A_7C15 } else { seed },
+        }
+    }
+
+    /// Next raw 64-bit value.
+    pub fn next_u64(&mut self) -> u64 {
+        let mut x = self.state;
+        x ^= x >> 12;
+        x ^= x << 25;
+        x ^= x >> 27;
+        self.state = x;
+        x.wrapping_mul(0x2545_F491_4F6C_DD1D)
+    }
+
+    /// Uniform integer in `[0, n)`.
+    ///
+    /// Plain modulo, matching the python mirror — the bias at n ≪ 2^64 is
+    /// irrelevant for data generation and lockstep matters more.
+    pub fn next_below(&mut self, n: u64) -> u64 {
+        self.next_u64() % n
+    }
+
+    /// Uniform f64 in `[0, 1)` (53-bit mantissa path, mirrors python).
+    pub fn next_f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 / (1u64 << 53) as f64
+    }
+
+    /// Uniform f64 in `[lo, hi)`.
+    pub fn next_range(&mut self, lo: f64, hi: f64) -> f64 {
+        lo + (hi - lo) * self.next_f64()
+    }
+
+    /// Standard normal via Box–Muller (not mirrored in python; used only by
+    /// the synthetic data generators).
+    pub fn next_gaussian(&mut self) -> f64 {
+        let u1 = self.next_f64().max(1e-300);
+        let u2 = self.next_f64();
+        (-2.0 * u1.ln()).sqrt() * (std::f64::consts::TAU * u2).cos()
+    }
+
+    /// Fisher–Yates shuffle.
+    pub fn shuffle<T>(&mut self, xs: &mut [T]) {
+        for i in (1..xs.len()).rev() {
+            let j = self.next_below(i as u64 + 1) as usize;
+            xs.swap(i, j);
+        }
+    }
+
+    /// Sample `k` distinct indices from `[0, n)` (k ≤ n).
+    pub fn sample_indices(&mut self, n: usize, k: usize) -> Vec<usize> {
+        assert!(k <= n, "sample_indices: k={k} > n={n}");
+        let mut idx: Vec<usize> = (0..n).collect();
+        self.shuffle(&mut idx);
+        idx.truncate(k);
+        idx
+    }
+
+    /// Derive an independent child generator (for per-partition streams).
+    pub fn fork(&mut self, salt: u64) -> Self {
+        Self::new(self.next_u64() ^ salt.wrapping_mul(0x9E37_79B9_7F4A_7C15) | 1)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_sequence() {
+        let mut a = XorShift64Star::new(42);
+        let mut b = XorShift64Star::new(42);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn matches_python_mirror() {
+        // First value for seed=42, computed by python/compile/fixtures.py:
+        //   x=42; x^=x>>12; x^=(x<<25)&M; x^=x>>27; x*0x2545F4914F6CDD1D mod 2^64
+        let mut r = XorShift64Star::new(42);
+        let first = r.next_u64();
+        // recompute by hand to pin the algorithm itself
+        let mut x: u64 = 42;
+        x ^= x >> 12;
+        x ^= x << 25;
+        x ^= x >> 27;
+        assert_eq!(first, x.wrapping_mul(0x2545_F491_4F6C_DD1D));
+    }
+
+    #[test]
+    fn zero_seed_is_remapped() {
+        let mut r = XorShift64Star::new(0);
+        assert_ne!(r.next_u64(), 0);
+    }
+
+    #[test]
+    fn next_below_bounds_and_coverage() {
+        let mut r = XorShift64Star::new(7);
+        let mut seen = [false; 16];
+        for _ in 0..1000 {
+            let v = r.next_below(16) as usize;
+            assert!(v < 16);
+            seen[v] = true;
+        }
+        assert!(seen.iter().all(|&s| s), "all bins should be hit");
+    }
+
+    #[test]
+    fn next_f64_in_unit_interval() {
+        let mut r = XorShift64Star::new(9);
+        for _ in 0..1000 {
+            let v = r.next_f64();
+            assert!((0.0..1.0).contains(&v));
+        }
+    }
+
+    #[test]
+    fn gaussian_moments() {
+        let mut r = XorShift64Star::new(21);
+        let n = 20_000;
+        let xs: Vec<f64> = (0..n).map(|_| r.next_gaussian()).collect();
+        let mean = xs.iter().sum::<f64>() / n as f64;
+        let var = xs.iter().map(|x| (x - mean).powi(2)).sum::<f64>() / n as f64;
+        assert!(mean.abs() < 0.05, "mean={mean}");
+        assert!((var - 1.0).abs() < 0.1, "var={var}");
+    }
+
+    #[test]
+    fn shuffle_is_permutation() {
+        let mut r = XorShift64Star::new(5);
+        let mut v: Vec<usize> = (0..100).collect();
+        r.shuffle(&mut v);
+        let mut sorted = v.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..100).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn sample_indices_distinct() {
+        let mut r = XorShift64Star::new(3);
+        let s = r.sample_indices(50, 20);
+        assert_eq!(s.len(), 20);
+        let mut d = s.clone();
+        d.sort_unstable();
+        d.dedup();
+        assert_eq!(d.len(), 20);
+    }
+
+    #[test]
+    fn forked_streams_diverge() {
+        let mut base = XorShift64Star::new(11);
+        let mut a = base.fork(1);
+        let mut b = base.fork(2);
+        let same = (0..32).filter(|_| a.next_u64() == b.next_u64()).count();
+        assert_eq!(same, 0);
+    }
+}

@@ -1,0 +1,103 @@
+//! Wall-clock measurement helpers for the harness and the perf pass.
+
+use std::time::{Duration, Instant};
+
+/// A restartable stopwatch accumulating elapsed wall-clock time.
+#[derive(Debug, Clone)]
+pub struct Stopwatch {
+    started: Option<Instant>,
+    accumulated: Duration,
+}
+
+impl Default for Stopwatch {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Stopwatch {
+    /// A stopped stopwatch with zero accumulated time.
+    pub fn new() -> Self {
+        Self {
+            started: None,
+            accumulated: Duration::ZERO,
+        }
+    }
+
+    /// A running stopwatch started now.
+    pub fn started() -> Self {
+        let mut s = Self::new();
+        s.start();
+        s
+    }
+
+    /// Start (or resume) timing; no-op if already running.
+    pub fn start(&mut self) {
+        if self.started.is_none() {
+            self.started = Some(Instant::now());
+        }
+    }
+
+    /// Stop timing, folding the current run into the accumulator.
+    pub fn stop(&mut self) {
+        if let Some(t) = self.started.take() {
+            self.accumulated += t.elapsed();
+        }
+    }
+
+    /// Total accumulated time (including the current run if running).
+    pub fn elapsed(&self) -> Duration {
+        self.accumulated
+            + self
+                .started
+                .map(|t| t.elapsed())
+                .unwrap_or(Duration::ZERO)
+    }
+
+    /// Accumulated seconds as f64 (the unit the harness reports).
+    pub fn secs(&self) -> f64 {
+        self.elapsed().as_secs_f64()
+    }
+}
+
+/// Time a closure, returning `(result, seconds)`.
+pub fn timed<T>(f: impl FnOnce() -> T) -> (T, f64) {
+    let t0 = Instant::now();
+    let out = f();
+    (out, t0.elapsed().as_secs_f64())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn accumulates_across_runs() {
+        let mut sw = Stopwatch::new();
+        sw.start();
+        std::thread::sleep(Duration::from_millis(5));
+        sw.stop();
+        let first = sw.elapsed();
+        assert!(first >= Duration::from_millis(4));
+        sw.start();
+        std::thread::sleep(Duration::from_millis(5));
+        sw.stop();
+        assert!(sw.elapsed() > first);
+    }
+
+    #[test]
+    fn timed_returns_value_and_duration() {
+        let (v, secs) = timed(|| 41 + 1);
+        assert_eq!(v, 42);
+        assert!(secs >= 0.0);
+    }
+
+    #[test]
+    fn stopped_watch_is_stable() {
+        let mut sw = Stopwatch::started();
+        sw.stop();
+        let a = sw.elapsed();
+        std::thread::sleep(Duration::from_millis(2));
+        assert_eq!(a, sw.elapsed());
+    }
+}

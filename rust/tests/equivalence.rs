@@ -1,0 +1,171 @@
+//! THE paper invariant: DiCFS-hp ≡ DiCFS-vp ≡ sequential CFS — "exactly
+//! the same features were returned" — across randomized datasets,
+//! partition counts, cluster sizes and search configurations.
+
+use std::sync::Arc;
+
+use dicfs::cfs::best_first::CfsConfig;
+use dicfs::cfs::SequentialCfs;
+use dicfs::data::synth::{by_name, SynthConfig, FAMILIES};
+use dicfs::dicfs::{DiCfs, DiCfsConfig, Partitioning};
+use dicfs::discretize::discretize_dataset;
+use dicfs::util::XorShift64Star;
+
+fn check_equivalence(dd: &Arc<dicfs::data::DiscreteDataset>, cfg: CfsConfig, nodes: usize) {
+    let seq = SequentialCfs::new(cfg).select_discrete(dd);
+    let mut hp_cfg = DiCfsConfig::for_scheme(Partitioning::Horizontal, nodes);
+    hp_cfg.cfs = cfg;
+    let mut vp_cfg = DiCfsConfig::for_scheme(Partitioning::Vertical, nodes);
+    vp_cfg.cfs = cfg;
+    let hp = DiCfs::native(hp_cfg).select(dd);
+    let vp = DiCfs::native(vp_cfg).select(dd);
+    assert_eq!(
+        hp.result.selected, seq.selected,
+        "hp != seq on {} ({} feats)",
+        dd.name,
+        dd.num_features()
+    );
+    assert_eq!(
+        vp.result.selected, seq.selected,
+        "vp != seq on {} ({} feats)",
+        dd.name,
+        dd.num_features()
+    );
+    assert!((hp.result.merit - seq.merit).abs() < 1e-12);
+    assert!((vp.result.merit - seq.merit).abs() < 1e-12);
+    assert_eq!(hp.result.iterations, seq.iterations, "search trajectories diverged");
+    assert_eq!(
+        hp.result.locally_predictive_added,
+        seq.locally_predictive_added
+    );
+}
+
+#[test]
+fn equivalence_all_families() {
+    for family in FAMILIES {
+        let ds = by_name(
+            family,
+            &SynthConfig {
+                rows: 800,
+                seed: 0xE0,
+                features: Some(20),
+            },
+        );
+        let dd = Arc::new(discretize_dataset(&ds).unwrap());
+        check_equivalence(&dd, CfsConfig::default(), 5);
+    }
+}
+
+#[test]
+fn equivalence_randomized_property() {
+    // Randomized sweep: 12 random (family, rows, features, seed, nodes)
+    // configurations — the hand-rolled property harness for the headline
+    // invariant.
+    let mut rng = XorShift64Star::new(0xD1CF5);
+    for round in 0..12 {
+        let family = FAMILIES[rng.next_below(4) as usize];
+        let rows = 200 + rng.next_below(800) as usize;
+        let features = 6 + rng.next_below(24) as usize;
+        let nodes = 2 + rng.next_below(9) as usize;
+        let ds = by_name(
+            family,
+            &SynthConfig {
+                rows,
+                seed: rng.next_u64(),
+                features: Some(features),
+            },
+        );
+        let dd = Arc::new(discretize_dataset(&ds).unwrap());
+        eprintln!("round {round}: {family} {rows}x{features}, {nodes} nodes");
+        check_equivalence(&dd, CfsConfig::default(), nodes);
+    }
+}
+
+#[test]
+fn equivalence_without_locally_predictive() {
+    let ds = by_name(
+        "kddcup99",
+        &SynthConfig {
+            rows: 600,
+            seed: 3,
+            features: Some(16),
+        },
+    );
+    let dd = Arc::new(discretize_dataset(&ds).unwrap());
+    check_equivalence(
+        &dd,
+        CfsConfig {
+            locally_predictive: false,
+            ..CfsConfig::default()
+        },
+        4,
+    );
+}
+
+#[test]
+fn equivalence_across_partition_counts() {
+    let ds = by_name(
+        "epsilon",
+        &SynthConfig {
+            rows: 500,
+            seed: 9,
+            features: Some(30),
+        },
+    );
+    let dd = Arc::new(discretize_dataset(&ds).unwrap());
+    let seq = SequentialCfs::default().select_discrete(&dd);
+    for parts in [1, 3, 7, 30, 100] {
+        for scheme in [Partitioning::Horizontal, Partitioning::Vertical] {
+            let mut cfg = DiCfsConfig::for_scheme(scheme, 4);
+            cfg.num_partitions = Some(parts);
+            let run = DiCfs::native(cfg).select(&dd);
+            assert_eq!(
+                run.result.selected, seq.selected,
+                "{scheme:?} with {parts} partitions"
+            );
+        }
+    }
+}
+
+#[test]
+fn equivalence_on_oversized_datasets() {
+    // The Fig 3/4 protocol: duplicated instances/features must preserve
+    // equivalence too (duplicated features are perfectly redundant).
+    let ds = by_name(
+        "higgs",
+        &SynthConfig {
+            rows: 400,
+            seed: 17,
+            features: Some(10),
+        },
+    );
+    for scaled in [
+        dicfs::data::oversize::scale_instances(&ds, 250),
+        dicfs::data::oversize::scale_features(&ds, 300),
+    ] {
+        let dd = Arc::new(discretize_dataset(&scaled).unwrap());
+        check_equivalence(&dd, CfsConfig::default(), 6);
+    }
+}
+
+#[test]
+fn degenerate_datasets() {
+    // All-noise dataset: nothing selectable; all variants agree on empty.
+    let mut cols = Vec::new();
+    let mut rng = XorShift64Star::new(5);
+    for _ in 0..8 {
+        cols.push((0..300).map(|_| rng.next_below(4) as u8).collect::<Vec<u8>>());
+    }
+    let class: Vec<u8> = (0..300).map(|_| rng.next_below(2) as u8).collect();
+    let dd = Arc::new(
+        dicfs::data::DiscreteDataset::new("noise", cols, vec![4; 8], class, 2).unwrap(),
+    );
+    check_equivalence(&dd, CfsConfig::default(), 3);
+
+    // Single-feature dataset.
+    let col: Vec<u8> = (0..100).map(|i| (i % 2) as u8).collect();
+    let dd = Arc::new(
+        dicfs::data::DiscreteDataset::new("single", vec![col.clone()], vec![2], col, 2).unwrap(),
+    );
+    check_equivalence(&dd, CfsConfig::default(), 2);
+}

@@ -1,0 +1,184 @@
+//! Cross-module pipeline integration: CSV round-trips into selection,
+//! binary dataset cache, RegCFS vs classification CFS, engine swapping,
+//! and the Table-2 workload protocol.
+
+use std::sync::Arc;
+
+use dicfs::cfs::SequentialCfs;
+use dicfs::data::csv::{read_csv, write_csv};
+use dicfs::data::io::{read_discrete, write_discrete};
+use dicfs::data::synth::{by_name, SynthConfig};
+use dicfs::dicfs::{DiCfs, DiCfsConfig, Partitioning};
+use dicfs::discretize::discretize_dataset;
+use dicfs::regcfs::{RegCfs, RegDataset, RegWeka};
+
+fn tmp(name: &str) -> std::path::PathBuf {
+    let dir = std::env::temp_dir().join("dicfs_pipeline_tests");
+    std::fs::create_dir_all(&dir).unwrap();
+    dir.join(name)
+}
+
+#[test]
+fn csv_roundtrip_preserves_selection() {
+    let ds = by_name(
+        "kddcup99",
+        &SynthConfig {
+            rows: 500,
+            seed: 41,
+            features: Some(12),
+        },
+    );
+    let direct = SequentialCfs::default().select(&ds);
+
+    let path = tmp("roundtrip_sel.csv");
+    write_csv(&ds, &path).unwrap();
+    let loaded = read_csv(&path).unwrap();
+    let via_csv = SequentialCfs::default().select(&loaded);
+
+    assert_eq!(direct.selected, via_csv.selected);
+    assert_eq!(direct.merit, via_csv.merit);
+}
+
+#[test]
+fn binary_cache_preserves_selection() {
+    let ds = by_name(
+        "higgs",
+        &SynthConfig {
+            rows: 600,
+            seed: 43,
+            features: Some(10),
+        },
+    );
+    let dd = discretize_dataset(&ds).unwrap();
+    let direct = SequentialCfs::default().select_discrete(&dd);
+
+    let path = tmp("cache.dcf");
+    write_discrete(&dd, &path).unwrap();
+    let loaded = read_discrete(&path).unwrap();
+    let via_cache = SequentialCfs::default().select_discrete(&loaded);
+    assert_eq!(direct, via_cache);
+}
+
+#[test]
+fn regression_and_classification_both_find_signal() {
+    // Table-2 protocol: the same all-numeric dataset treated both ways.
+    let ds = by_name(
+        "higgs",
+        &SynthConfig {
+            rows: 1_000,
+            seed: 47,
+            features: Some(14),
+        },
+    );
+    let dd = Arc::new(discretize_dataset(&ds).unwrap());
+    let classif = SequentialCfs::default().select_discrete(&dd);
+
+    let reg = Arc::new(RegDataset::from_dataset(&ds).unwrap());
+    let regression = RegWeka::default().select(&reg);
+
+    assert!(!classif.selected.is_empty());
+    assert!(!regression.selected.is_empty());
+    // Both views must agree on at least one informative feature — they
+    // measure the same underlying signal with different statistics.
+    assert!(
+        classif.selected.iter().any(|f| regression.selected.contains(f)),
+        "no overlap: {:?} vs {:?}",
+        classif.selected,
+        regression.selected
+    );
+}
+
+#[test]
+fn distributed_regression_equals_sequential_regression() {
+    let ds = by_name(
+        "epsilon",
+        &SynthConfig {
+            rows: 500,
+            seed: 53,
+            features: Some(24),
+        },
+    );
+    let reg = Arc::new(RegDataset::from_dataset(&ds).unwrap());
+    let seq = RegWeka::default().select(&reg);
+    let dist = RegCfs::with_nodes(6).select(&reg);
+    assert_eq!(seq.selected, dist.result.selected);
+}
+
+#[test]
+fn selection_nonempty_and_within_bounds_on_all_families() {
+    for family in dicfs::data::synth::FAMILIES {
+        let ds = by_name(
+            family,
+            &SynthConfig {
+                rows: 700,
+                seed: 59,
+                features: Some(18),
+            },
+        );
+        let dd = Arc::new(discretize_dataset(&ds).unwrap());
+        let run =
+            DiCfs::native(DiCfsConfig::for_scheme(Partitioning::Horizontal, 4)).select(&dd);
+        assert!(
+            !run.result.selected.is_empty(),
+            "{family}: selected nothing"
+        );
+        assert!(run.result.selected.iter().all(|&f| f < 18));
+        assert!(run.result.merit > 0.0);
+        // on-demand: computed pairs bounded by requested universe
+        let full = 19 * 18 / 2;
+        assert!(run.result.correlations_computed <= full);
+    }
+}
+
+#[test]
+fn run_metrics_are_consistent() {
+    let ds = by_name(
+        "higgs",
+        &SynthConfig {
+            rows: 800,
+            seed: 61,
+            features: Some(12),
+        },
+    );
+    let dd = Arc::new(discretize_dataset(&ds).unwrap());
+    let run = DiCfs::native(DiCfsConfig::for_scheme(Partitioning::Horizontal, 4)).select(&dd);
+    let m = &run.metrics;
+    // every search iteration launches localCTables/mergeCTables/computeSU
+    let ctable_stages = m.stages.iter().filter(|s| s.label == "localCTables").count();
+    let merge_stages = m.stages.iter().filter(|s| s.label == "mergeCTables").count();
+    let su_stages = m.stages.iter().filter(|s| s.label == "computeSU").count();
+    assert_eq!(ctable_stages, merge_stages);
+    assert_eq!(merge_stages, su_stages);
+    assert!(ctable_stages >= run.result.iterations.min(1));
+    assert!(run.sim.total() > 0.0);
+    assert!(run.wall_secs >= run.sim.driver_secs);
+}
+
+#[cfg(feature = "pjrt")]
+#[test]
+fn pjrt_engine_full_pipeline_matches_native() {
+    // The whole coordinator over the PJRT engine (AOT Pallas kernels on
+    // the hot path) must select the same subset as the native engine.
+    let dir = dicfs::runtime::artifacts::Registry::default_dir();
+    if !dir.join("manifest.tsv").exists() {
+        eprintln!("SKIP: run `make artifacts` first");
+        return;
+    }
+    let ds = by_name(
+        "higgs",
+        &SynthConfig {
+            rows: 400,
+            seed: 67,
+            features: Some(8),
+        },
+    );
+    let dd = Arc::new(discretize_dataset(&ds).unwrap());
+    let native = DiCfs::native(DiCfsConfig::for_scheme(Partitioning::Horizontal, 2)).select(&dd);
+
+    let engine = Arc::new(dicfs::runtime::pjrt::PjrtEngine::new(&dir).unwrap());
+    let mut cfg = DiCfsConfig::for_scheme(Partitioning::Horizontal, 2);
+    cfg.num_partitions = Some(4); // kernel-sized partitions
+    let pjrt = DiCfs::new(cfg, engine).select(&dd);
+
+    assert_eq!(pjrt.result.selected, native.result.selected);
+}

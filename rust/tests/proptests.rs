@@ -1,0 +1,232 @@
+//! Hand-rolled property tests (proptest is not vendored in this
+//! environment): randomized invariants over the numeric core, the
+//! discretizer, the cache, and the scheduler — seeded, many iterations,
+//! shrink-free but reproducible.
+
+use dicfs::correlation::cache::CorrelationCache;
+use dicfs::correlation::ctable::ContingencyTable;
+use dicfs::correlation::entropy::entropies;
+use dicfs::correlation::pearson::PearsonStats;
+use dicfs::correlation::su::{su_from_table, symmetrical_uncertainty};
+use dicfs::discretize::mdl::{apply_cuts, mdl_cut_points};
+use dicfs::sparklet::metrics::lpt_makespan;
+use dicfs::util::XorShift64Star;
+
+fn random_column(rng: &mut XorShift64Star, n: usize, bins: u16) -> Vec<u8> {
+    (0..n).map(|_| rng.next_below(bins as u64) as u8).collect()
+}
+
+#[test]
+fn prop_su_symmetry_range_and_identity() {
+    let mut rng = XorShift64Star::new(101);
+    for _ in 0..200 {
+        let n = 20 + rng.next_below(400) as usize;
+        let bx = 2 + rng.next_below(14) as u16;
+        let by = 2 + rng.next_below(14) as u16;
+        let x = random_column(&mut rng, n, bx);
+        let y = random_column(&mut rng, n, by);
+        let su_xy = symmetrical_uncertainty(&x, bx, &y, by);
+        let su_yx = symmetrical_uncertainty(&y, by, &x, bx);
+        // symmetry (to fp tolerance — summation order differs)
+        assert!((su_xy - su_yx).abs() < 1e-10);
+        // range
+        assert!((0.0..=1.0 + 1e-9).contains(&su_xy), "su={su_xy}");
+        // self-correlation of a non-constant column is 1
+        if x.iter().any(|&v| v != x[0]) {
+            let su_xx = symmetrical_uncertainty(&x, bx, &x, bx);
+            assert!((su_xx - 1.0).abs() < 1e-9);
+        }
+    }
+}
+
+#[test]
+fn prop_entropy_information_inequalities() {
+    let mut rng = XorShift64Star::new(103);
+    for _ in 0..200 {
+        let n = 10 + rng.next_below(300) as usize;
+        let bx = 2 + rng.next_below(8) as u16;
+        let by = 2 + rng.next_below(8) as u16;
+        let t = ContingencyTable::from_columns(
+            &random_column(&mut rng, n, bx),
+            bx,
+            &random_column(&mut rng, n, by),
+            by,
+        );
+        let (hx, hy, hxy) = entropies(&t);
+        // joint bounds: max(H(X), H(Y)) ≤ H(X,Y) ≤ H(X)+H(Y)
+        assert!(hxy + 1e-9 >= hx.max(hy), "{hxy} vs {hx},{hy}");
+        assert!(hxy <= hx + hy + 1e-9);
+        // entropy bounds: 0 ≤ H ≤ log2(bins)
+        assert!(hx >= -1e-12 && hx <= f64::from(bx).log2() + 1e-9);
+        assert!(hy >= -1e-12 && hy <= f64::from(by).log2() + 1e-9);
+    }
+}
+
+#[test]
+fn prop_ctable_merge_associative_commutative() {
+    let mut rng = XorShift64Star::new(107);
+    for _ in 0..100 {
+        let n = 90 + rng.next_below(300) as usize;
+        let bins = 2 + rng.next_below(10) as u16;
+        let x = random_column(&mut rng, n, bins);
+        let y = random_column(&mut rng, n, bins);
+        // three random split points
+        let mut cuts: Vec<usize> = (0..2).map(|_| rng.next_below(n as u64) as usize).collect();
+        cuts.push(0);
+        cuts.push(n);
+        cuts.sort_unstable();
+        let parts: Vec<ContingencyTable> = cuts
+            .windows(2)
+            .map(|w| ContingencyTable::from_columns_range(&x, bins, &y, bins, w[0]..w[1]))
+            .collect();
+        // merge in forward and reverse orders
+        let mut fwd = ContingencyTable::new(bins, bins);
+        for p in &parts {
+            fwd.merge(p).unwrap();
+        }
+        let mut rev = ContingencyTable::new(bins, bins);
+        for p in parts.iter().rev() {
+            rev.merge(p).unwrap();
+        }
+        let whole = ContingencyTable::from_columns(&x, bins, &y, bins);
+        assert_eq!(fwd, whole);
+        assert_eq!(rev, whole);
+        // SU from merged == SU from whole, exactly
+        assert_eq!(su_from_table(&fwd), su_from_table(&whole));
+    }
+}
+
+#[test]
+fn prop_pearson_merge_and_invariance() {
+    let mut rng = XorShift64Star::new(109);
+    for _ in 0..100 {
+        let n = 30 + rng.next_below(200) as usize;
+        let x: Vec<f32> = (0..n).map(|_| rng.next_gaussian() as f32).collect();
+        let y: Vec<f32> = x
+            .iter()
+            .map(|v| v * 0.5 + rng.next_gaussian() as f32)
+            .collect();
+        let whole = PearsonStats::from_slices(&x, &y);
+        let k = 1 + rng.next_below((n - 1) as u64) as usize;
+        let mut merged = PearsonStats::from_slices(&x[..k], &y[..k]);
+        merged.merge(&PearsonStats::from_slices(&x[k..], &y[k..]));
+        assert!((whole.correlation() - merged.correlation()).abs() < 1e-9);
+        // |r| ≤ 1 and correlation is scale-invariant
+        let scaled: Vec<f32> = x.iter().map(|v| v * 3.0 + 7.0).collect();
+        let r1 = PearsonStats::from_slices(&x, &y).correlation();
+        let r2 = PearsonStats::from_slices(&scaled, &y).correlation();
+        assert!((r1 - r2).abs() < 1e-6, "{r1} vs {r2}");
+    }
+}
+
+#[test]
+fn prop_mdl_cuts_partition_the_range() {
+    let mut rng = XorShift64Star::new(113);
+    for _ in 0..60 {
+        let n = 100 + rng.next_below(500) as usize;
+        let sep = rng.next_range(0.0, 3.0);
+        let class: Vec<u8> = (0..n).map(|_| rng.next_below(3) as u8).collect();
+        let values: Vec<f32> = class
+            .iter()
+            .map(|&c| (f64::from(c) * sep + rng.next_gaussian()) as f32)
+            .collect();
+        let cuts = mdl_cut_points(&values, &class, 3);
+        // sorted, distinct, within the data range
+        for w in cuts.windows(2) {
+            assert!(w[0] < w[1]);
+        }
+        if let (Some(first), Some(last)) = (cuts.first(), cuts.last()) {
+            let lo = values.iter().cloned().fold(f32::INFINITY, f32::min);
+            let hi = values.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+            assert!(*first >= lo && *last <= hi);
+        }
+        // binning is total and within arity
+        let (bins, arity) = apply_cuts(&values, &cuts);
+        assert_eq!(arity as usize, cuts.len() + 1);
+        assert!(arity <= 32);
+        assert!(bins.iter().all(|&b| u16::from(b) < arity));
+        // bins are monotone in the value
+        let mut idx: Vec<usize> = (0..n).collect();
+        idx.sort_by(|&a, &b| values[a].partial_cmp(&values[b]).unwrap());
+        for w in idx.windows(2) {
+            assert!(bins[w[0]] <= bins[w[1]]);
+        }
+    }
+}
+
+#[test]
+fn prop_cache_single_flight_per_pair() {
+    let mut rng = XorShift64Star::new(127);
+    for _ in 0..50 {
+        let mut cache = CorrelationCache::new();
+        let universe = 2 + rng.next_below(20) as usize;
+        let mut total_computed = 0usize;
+        for _batch in 0..10 {
+            let len = 1 + rng.next_below(30) as usize;
+            let pairs: Vec<(usize, usize)> = (0..len)
+                .map(|_| {
+                    let a = rng.next_below(universe as u64) as usize;
+                    let b = rng.next_below(universe as u64) as usize;
+                    (a, b)
+                })
+                .collect();
+            let vals = cache.get_or_compute_batch(&pairs, |missing| {
+                total_computed += missing.len();
+                missing.iter().map(|&(a, b)| (a * 31 + b) as f64).collect()
+            });
+            // returned values always match the canonical computation
+            for (&(a, b), v) in pairs.iter().zip(&vals) {
+                let (ca, cb) = dicfs::core::pair_key(a, b);
+                assert_eq!(*v, (ca * 31 + cb) as f64);
+            }
+        }
+        // no pair computed twice
+        assert_eq!(cache.stats().computed, total_computed);
+        assert_eq!(cache.len(), total_computed);
+        assert!(cache.stats().requested >= cache.stats().computed + cache.stats().hits);
+    }
+}
+
+#[test]
+fn prop_lpt_bounds() {
+    let mut rng = XorShift64Star::new(131);
+    for _ in 0..100 {
+        let n = 1 + rng.next_below(60) as usize;
+        let slots = 1 + rng.next_below(16) as usize;
+        let tasks: Vec<f64> = (0..n).map(|_| rng.next_range(0.001, 1.0)).collect();
+        let total: f64 = tasks.iter().sum();
+        let maxt = tasks.iter().cloned().fold(0.0, f64::max);
+        let makespan = lpt_makespan(&tasks, slots);
+        // lower bounds: perfect parallelism and the longest task
+        assert!(makespan + 1e-9 >= total / slots as f64);
+        assert!(makespan + 1e-9 >= maxt);
+        // upper bound: LPT is within (4/3 − 1/3m) of optimal ≤ lower bounds
+        let lower = (total / slots as f64).max(maxt);
+        assert!(makespan <= lower * 4.0 / 3.0 + 1e-9, "{makespan} vs {lower}");
+        // never worse than serial
+        assert!(makespan <= total + 1e-9);
+    }
+}
+
+#[test]
+fn prop_oversize_preserves_column_content() {
+    let mut rng = XorShift64Star::new(137);
+    for _ in 0..30 {
+        let rows = 50 + rng.next_below(200) as usize;
+        let ds = dicfs::data::synth::by_name(
+            "kddcup99",
+            &dicfs::data::synth::SynthConfig {
+                rows,
+                seed: rng.next_u64(),
+                features: Some(6),
+            },
+        );
+        let pct = 110 + rng.next_below(290) as usize;
+        let big = dicfs::data::oversize::scale_instances(&ds, pct);
+        let target = (rows * pct).div_ceil(100);
+        assert_eq!(big.num_rows(), target);
+        for r in 0..big.num_rows() {
+            assert_eq!(big.class[r], ds.class[r % rows]);
+        }
+    }
+}

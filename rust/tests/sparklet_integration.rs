@@ -1,0 +1,157 @@
+//! sparklet substrate integration: multi-stage jobs, shuffle semantics,
+//! failure injection + retry, metrics faithfulness, topology replay.
+
+use std::sync::atomic::{AtomicU32, Ordering};
+use std::sync::Arc;
+
+use dicfs::sparklet::{
+    simulate_job_time, ClusterConfig, SparkletContext, StageKind,
+};
+
+#[test]
+fn word_count_pipeline() {
+    // The canonical Spark smoke test, end to end over sparklet.
+    let ctx = SparkletContext::new(ClusterConfig::with_nodes(3));
+    let text: Vec<&str> = "a b c a b a d e c a"
+        .split_whitespace()
+        .collect();
+    let words = ctx.parallelize(text, 4);
+    let counts = words
+        .map("pair", |w| (w.to_string(), 1u64))
+        .reduce_by_key("count", 2, |_| 16, |a, b| *a += b);
+    let mut out = counts.collect();
+    out.sort();
+    assert_eq!(
+        out,
+        vec![
+            ("a".into(), 4),
+            ("b".into(), 2),
+            ("c".into(), 2),
+            ("d".into(), 1),
+            ("e".into(), 1)
+        ]
+    );
+    let m = ctx.metrics();
+    assert_eq!(m.stages.len(), 3); // map, shuffle, collect
+    assert_eq!(m.stages[1].kind, StageKind::Shuffle);
+}
+
+#[test]
+fn flaky_tasks_are_retried_and_reported() {
+    let ctx = SparkletContext::new(ClusterConfig::with_nodes(2));
+    let rdd = ctx.parallelize((0..16).collect::<Vec<u32>>(), 8);
+    let attempts = Arc::new(AtomicU32::new(0));
+    let a2 = Arc::clone(&attempts);
+
+    // silence expected panic output from the injected failures
+    let prev = std::panic::take_hook();
+    std::panic::set_hook(Box::new(|_| {}));
+    let out = rdd.map_partitions("flaky", move |i, xs| {
+        // partition 3 fails twice before succeeding
+        if i == 3 && a2.fetch_add(1, Ordering::SeqCst) < 2 {
+            panic!("injected fault");
+        }
+        xs.iter().map(|x| x * 10).collect()
+    });
+    std::panic::set_hook(prev);
+
+    assert_eq!(out.count(), 16);
+    let m = ctx.metrics();
+    assert_eq!(m.total_retries(), 2, "both injected failures retried");
+    // results are still complete and correct
+    let collected = out.collect();
+    assert!(collected.contains(&150));
+}
+
+#[test]
+fn shuffle_failure_injection_in_reduce() {
+    let ctx = SparkletContext::new(ClusterConfig::with_nodes(2));
+    let rdd = ctx.parallelize((0..40).map(|i| (i % 4, 1u64)).collect::<Vec<_>>(), 4);
+    let attempts = Arc::new(AtomicU32::new(0));
+    let a2 = Arc::clone(&attempts);
+
+    let prev = std::panic::take_hook();
+    std::panic::set_hook(Box::new(|_| {}));
+    let reduced = rdd.reduce_by_key(
+        "flaky-reduce",
+        2,
+        |_| 8,
+        move |a, b| {
+            // fail the very first merge attempt only
+            if a2.fetch_add(1, Ordering::SeqCst) == 0 {
+                panic!("injected merge fault");
+            }
+            *a += b;
+        },
+    );
+    std::panic::set_hook(prev);
+
+    let mut out = reduced.collect();
+    out.sort();
+    assert_eq!(out, vec![(0, 10), (1, 10), (2, 10), (3, 10)]);
+    assert!(ctx.metrics().total_retries() >= 1);
+}
+
+#[test]
+fn empty_and_single_element_rdds() {
+    let ctx = SparkletContext::new(ClusterConfig::with_nodes(2));
+    let empty: Vec<u32> = vec![];
+    let rdd = ctx.parallelize(empty, 4);
+    assert_eq!(rdd.count(), 0);
+    assert!(rdd.map("x", |v| v + 1).collect().is_empty());
+
+    let one = ctx.parallelize(vec![7u32], 4);
+    assert_eq!(one.collect(), vec![7]);
+}
+
+#[test]
+fn topology_replay_is_monotone_in_slots() {
+    // Build a real job, then replay its measured metrics across
+    // topologies: compute time must be non-increasing in cluster size.
+    let ctx = SparkletContext::new(ClusterConfig::with_nodes(2));
+    let rdd = ctx.parallelize((0..240u64).collect::<Vec<_>>(), 240);
+    let _ = rdd.map_partitions("work", |_, xs| {
+        // measurable per-task work
+        let mut acc = 0u64;
+        for x in xs {
+            for i in 0..20_000 {
+                acc = acc.wrapping_add(x * i);
+            }
+        }
+        vec![acc]
+    });
+    let metrics = ctx.metrics();
+    let mut last = f64::INFINITY;
+    for nodes in [1, 2, 4, 8, 10] {
+        let sim = simulate_job_time(&metrics, &ClusterConfig::with_nodes(nodes), 0.0);
+        assert!(
+            sim.compute_secs <= last + 1e-9,
+            "compute not monotone at {nodes} nodes"
+        );
+        last = sim.compute_secs;
+    }
+}
+
+#[test]
+fn broadcast_value_visible_in_all_partitions() {
+    let ctx = SparkletContext::new(ClusterConfig::with_nodes(2));
+    let lookup = ctx.broadcast(vec![10u32, 20, 30], 12);
+    let rdd = ctx.parallelize(vec![0usize, 1, 2, 0, 1], 3);
+    let bc = lookup.clone();
+    let out = rdd.map("lookup", move |i| bc[*i]);
+    assert_eq!(out.collect(), vec![10, 20, 30, 10, 20]);
+}
+
+#[test]
+fn stage_metrics_capture_work_not_just_counts() {
+    let ctx = SparkletContext::new(ClusterConfig::with_nodes(2));
+    let rdd = ctx.parallelize((0..4u32).collect::<Vec<_>>(), 2);
+    let _ = rdd.map_partitions("sleepy", |_, xs| {
+        std::thread::sleep(std::time::Duration::from_millis(10));
+        xs.to_vec()
+    });
+    let m = ctx.metrics();
+    let stage = &m.stages[0];
+    assert_eq!(stage.task_secs.len(), 2);
+    assert!(stage.total_task_secs() >= 0.018, "measured {}", stage.total_task_secs());
+}
