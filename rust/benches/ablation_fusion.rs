@@ -1,0 +1,121 @@
+//! Ablation — eager vs lazy (stage-fused) execution of narrow
+//! transformation chains on the sparklet substrate.
+//!
+//! The original substrate ran every `map`/`filter`/`mapPartitions` as its
+//! own `thread::scope` stage and materialized each intermediate RDD. The
+//! lazy DAG scheduler fuses the whole narrow chain into one stage on the
+//! persistent executor pool. This bench measures that win on a
+//! search-shaped workload (the normalize → mask → pack chain every DiCFS
+//! correlation batch performs before its shuffle): "eager" mode forces
+//! materialization after every transformation (the old execution
+//! semantics, expressed via actions), "lazy" lets the scheduler fuse.
+//!
+//! Output: table + `bench_out/ablation_fusion.csv`.
+
+use std::time::Instant;
+
+use dicfs::harness::report;
+use dicfs::sparklet::{ClusterConfig, Rdd, SparkletContext, StageKind};
+
+/// The measured narrow chain. In eager mode an action after every
+/// transformation forces the intermediate RDD to materialize, which is
+/// exactly what the pre-DAG substrate always did.
+fn build_chain(rdd: &Rdd<u64>, eager: bool) -> Rdd<u64> {
+    let a = rdd.map("normalize", |x| x ^ (x >> 7));
+    if eager {
+        let _ = a.count();
+    }
+    let b = a.filter("mask", |x| x % 3 != 0);
+    if eager {
+        let _ = b.count();
+    }
+    let c = b.map_partitions("pack", |_, xs| {
+        xs.iter()
+            .map(|x| x.wrapping_mul(0x9E37_79B9_7F4A_7C15))
+            .collect()
+    });
+    if eager {
+        let _ = c.count();
+    }
+    c
+}
+
+/// Run one (rows, partitions, mode) cell; returns (best secs, map stages,
+/// total tasks) over `reps` repetitions.
+fn run_mode(rows: usize, partitions: usize, eager: bool, reps: usize) -> (f64, usize, usize) {
+    let mut best = f64::INFINITY;
+    let mut map_stages = 0;
+    let mut tasks = 0;
+    for _ in 0..reps {
+        let ctx = SparkletContext::new(ClusterConfig::with_nodes(10));
+        let data: Vec<u64> = (0..rows as u64).collect();
+        let rdd = ctx.parallelize(data, partitions);
+        let t0 = Instant::now();
+        let out = build_chain(&rdd, eager);
+        let n = out.count();
+        let secs = t0.elapsed().as_secs_f64();
+        assert!(n > 0 && n <= rows);
+        best = best.min(secs);
+        let m = ctx.metrics();
+        map_stages = m.stages_of_kind(StageKind::Map);
+        tasks = m.total_tasks();
+    }
+    (best, map_stages, tasks)
+}
+
+fn main() {
+    println!("== Ablation: eager vs lazy/fused narrow-chain execution ==\n");
+    let scale = dicfs::harness::bench_scale();
+    let configs: [(usize, usize); 3] = [
+        ((400_000f64 * scale) as usize + 1_000, 16),
+        ((1_600_000f64 * scale) as usize + 1_000, 64),
+        ((1_600_000f64 * scale) as usize + 1_000, 240),
+    ];
+    let reps = 3;
+
+    let mut csv = Vec::new();
+    let mut table_rows = Vec::new();
+    for &(rows, partitions) in &configs {
+        let (eager_secs, eager_stages, eager_tasks) = run_mode(rows, partitions, true, reps);
+        let (lazy_secs, lazy_stages, lazy_tasks) = run_mode(rows, partitions, false, reps);
+        let speedup = eager_secs / lazy_secs.max(1e-12);
+        table_rows.push(vec![
+            format!("{rows} x {partitions}p"),
+            format!("{:.1} ms ({eager_stages} stages, {eager_tasks} tasks)", eager_secs * 1e3),
+            format!("{:.1} ms ({lazy_stages} stage, {lazy_tasks} tasks)", lazy_secs * 1e3),
+            format!("{speedup:.2}x"),
+        ]);
+        for (mode, secs, stages, tasks) in [
+            ("eager", eager_secs, eager_stages, eager_tasks),
+            ("lazy", lazy_secs, lazy_stages, lazy_tasks),
+        ] {
+            csv.push(vec![
+                rows.to_string(),
+                partitions.to_string(),
+                mode.to_string(),
+                format!("{secs:.6}"),
+                stages.to_string(),
+                tasks.to_string(),
+            ]);
+        }
+        eprintln!(
+            "rows {rows:>8} parts {partitions:>4}: eager {:.1} ms / lazy {:.1} ms ({speedup:.2}x)",
+            eager_secs * 1e3,
+            lazy_secs * 1e3
+        );
+    }
+
+    let path = report::write_csv(
+        "ablation_fusion.csv",
+        &["rows", "partitions", "mode", "secs", "map_stages", "tasks"],
+        &csv,
+    );
+    println!(
+        "{}",
+        dicfs::util::chart::table(
+            &["workload", "eager (per-op stages)", "lazy (fused)", "speedup"],
+            &table_rows
+        )
+    );
+    println!("  data: {}", path.display());
+}

@@ -8,8 +8,12 @@
 //!    its rows into per-pair partial contingency tables. The counting
 //!    itself runs through the [`SuEngine`] — i.e. the L1 Pallas ctable
 //!    kernel when the PJRT engine is plugged in,
-//! 3. `reduceByKey(sum)` — Eq. 4: element-wise merge of partial tables,
-//! 4. `collect` + driver-side SU finish (L1 su kernel under PJRT).
+//! 3. `reduceByKey(sum)` — Eq. 4: element-wise merge of partial tables.
+//!    The lazy scheduler fuses steps 2+3 into a single shuffle stage
+//!    (`localCTables+mergeCTables`), exactly like Spark's
+//!    ShuffleMapStage,
+//! 4. `mapPartitions(computeSU)` + `collect` of the scalar SU values
+//!    (L1 su kernel under PJRT).
 //!
 //! Exactness: tables carry u64 counts, merge is associative/commutative,
 //! so the merged tables — and hence the SU values and the whole search —
@@ -83,12 +87,15 @@ impl Correlator for HorizontalCorrelator {
         let engine = Arc::clone(&self.engine);
         let partials: Rdd<(usize, ContingencyTable)> =
             self.ranges.map_partitions("localCTables", move |_, ranges| {
+                // The pair → column resolution does not depend on the
+                // range: build the ColumnPair list once per task, not
+                // once per range.
+                let cps: Vec<ColumnPair> = pairs_bc
+                    .iter()
+                    .map(|&(a, b)| Self::column_pair(&data, a, b))
+                    .collect();
                 let mut out = Vec::new();
                 for range in ranges {
-                    let cps: Vec<ColumnPair> = pairs_bc
-                        .iter()
-                        .map(|&(a, b)| Self::column_pair(&data, a, b))
-                        .collect();
                     let tables = engine.ctables(&cps, range.clone());
                     out.extend(tables.into_iter().enumerate());
                 }
@@ -109,8 +116,9 @@ impl Correlator for HorizontalCorrelator {
         // the local rows of this RDD"), then collect only the scalars.
         let engine = Arc::clone(&self.engine);
         let sus = merged.map_partitions("computeSU", move |_, tables| {
-            let ts: Vec<ContingencyTable> = tables.iter().map(|(_, t)| t.clone()).collect();
-            let values = engine.su_from_tables(&ts);
+            // Borrow the merged tables in place — no clone per table.
+            let refs: Vec<&ContingencyTable> = tables.iter().map(|(_, t)| t).collect();
+            let values = engine.su_from_tables(&refs);
             tables
                 .iter()
                 .map(|(i, _)| *i)
@@ -170,12 +178,22 @@ mod tests {
 
     #[test]
     fn records_spark_shaped_stages() {
+        use crate::sparklet::StageKind;
+
         let (ctx, mut corr, _) = setup(5);
         let _ = corr.compute(&[(0, 1), (2, CLASS_ID)]);
         let m = ctx.metrics();
+        // The scheduler fuses localCTables into the mergeCTables shuffle
+        // stage; computeSU runs as its own map stage at collect time.
+        let fused = m
+            .stages
+            .iter()
+            .find(|s| s.label == "localCTables+mergeCTables")
+            .expect("fused shuffle stage");
+        assert_eq!(fused.kind, StageKind::Shuffle);
+        assert_eq!(fused.fused_ops, 2);
         let labels: Vec<&str> = m.stages.iter().map(|s| s.label.as_str()).collect();
-        assert!(labels.contains(&"localCTables"));
-        assert!(labels.contains(&"mergeCTables"));
+        assert!(labels.contains(&"computeSU"));
         assert!(labels.contains(&"collect"));
         assert_eq!(m.broadcast_bytes.len(), 1); // the pair list
         assert!(m.total_shuffle_bytes() > 0);

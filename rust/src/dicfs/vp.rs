@@ -26,7 +26,7 @@ use crate::cfs::Correlator;
 use crate::core::{FeatureId, CLASS_ID};
 use crate::data::columnar::DiscreteDataset;
 use crate::runtime::{ColumnPair, SuEngine};
-use crate::sparklet::{Rdd, SparkletContext};
+use crate::sparklet::{Broadcast, Rdd, SparkletContext};
 
 /// Distributed SU correlator over feature partitions.
 pub struct VerticalCorrelator {
@@ -35,6 +35,10 @@ pub struct VerticalCorrelator {
     ctx: Arc<SparkletContext>,
     /// Feature ids, hash-distributed by the columnar transformation.
     columns: Rdd<(FeatureId, Vec<u8>)>,
+    /// The class column (values + arity), broadcast once at construction;
+    /// `localSU` workers read it from here instead of reaching into the
+    /// driver-side dataset.
+    class_bc: Broadcast<(Vec<u8>, u16)>,
 }
 
 impl VerticalCorrelator {
@@ -64,14 +68,16 @@ impl VerticalCorrelator {
         );
 
         // The class column is broadcast once (every worker needs it for
-        // every class-correlation).
-        let _class_bc = ctx.broadcast((), data.class.len());
+        // every class-correlation): the actual values plus arity, priced
+        // at one byte per row.
+        let class_bc = ctx.broadcast((data.class.clone(), data.class_arity), data.class.len());
 
         Self {
             data,
             engine,
             ctx: Arc::clone(ctx),
             columns,
+            class_bc,
         }
     }
 
@@ -106,6 +112,27 @@ impl VerticalCorrelator {
     }
 }
 
+/// Resolve one side of a pair to its column data inside a `localSU`
+/// task: the class comes from its broadcast, the partition-owned column
+/// (`fid`) from the partition itself, and any other (reference) column
+/// from the dataset — one definition for both pair orientations, so the
+/// resolution rules cannot drift apart.
+fn resolve_side<'a>(
+    id: FeatureId,
+    fid: FeatureId,
+    col: &'a [u8],
+    class: (&'a [u8], u16),
+    data: &'a DiscreteDataset,
+) -> (&'a [u8], u16) {
+    if id == CLASS_ID {
+        class
+    } else if id == fid {
+        (col, data.arities[id])
+    } else {
+        data.column(id)
+    }
+}
+
 impl Correlator for VerticalCorrelator {
     fn compute(&mut self, pairs: &[(FeatureId, FeatureId)]) -> Vec<f64> {
         if pairs.is_empty() {
@@ -137,19 +164,26 @@ impl Correlator for VerticalCorrelator {
         let work = Arc::new(work);
 
         // localSU: each partition computes SU for the pairs whose owner
-        // column it holds, in one engine batch.
+        // column it holds, in one engine batch. Worker-side data paths:
+        // the owner column comes from the partition itself (what the
+        // columnar shuffle delivered), the class column from its
+        // broadcast; only non-class *reference* columns are resolved from
+        // the driver dataset (their transmission is priced by `refs_bc`).
         let data = Arc::clone(&self.data);
         let engine = Arc::clone(&self.engine);
         let w2 = Arc::clone(&work);
+        let class_bc = self.class_bc.clone();
         let sus: Rdd<(usize, f64)> = self.columns.map_partitions("localSU", move |_, cols| {
             let _ = &refs_bc; // broadcast lifetime mirrors Spark semantics
+            let (class_col, class_arity) = (&class_bc.0, class_bc.1);
             let mut idx: Vec<usize> = Vec::new();
             let mut batch: Vec<ColumnPair> = Vec::new();
-            for (fid, _col) in cols {
+            for (fid, col) in cols {
                 let Some(items) = w2.get(fid) else { continue };
                 for &(pair_idx, (a, b)) in items {
-                    let (x, bins_x) = data.column(a);
-                    let (y, bins_y) = data.column(b);
+                    let class = (class_col.as_slice(), class_arity);
+                    let (x, bins_x) = resolve_side(a, *fid, col, class, &data);
+                    let (y, bins_y) = resolve_side(b, *fid, col, class, &data);
                     idx.push(pair_idx);
                     batch.push(ColumnPair {
                         x,

@@ -10,6 +10,7 @@
 //! | Table 2 (vs RegCFS) | [`table2`] | `cargo bench --bench table2_regression` |
 //! | §5 on-demand claim | [`ablation`] | `cargo bench --bench ablation_ondemand` |
 //! | §6 vp partition tuning | [`ablation`] | `cargo bench --bench ablation_partitions` |
+//! | scheduler fusion (DESIGN.md §3) | — | `cargo bench --bench ablation_fusion` |
 //!
 //! Each run writes a CSV under `bench_out/` and prints an ASCII chart, so
 //! `cargo bench` output is the full reproduction report.

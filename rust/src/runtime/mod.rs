@@ -51,9 +51,11 @@ pub trait SuEngine: Send + Sync {
     fn ctables(&self, pairs: &[ColumnPair<'_>], rows: std::ops::Range<usize>)
         -> Vec<ContingencyTable>;
 
-    /// SU from merged tables — the driver-side finish (hp scheme) / the
-    /// L1 su kernel.
-    fn su_from_tables(&self, tables: &[ContingencyTable]) -> Vec<f64>;
+    /// SU from merged tables — the worker-side finish of the hp scheme /
+    /// the L1 su kernel. Takes table *references* so callers holding
+    /// tables inside larger structures (e.g. the `(pair, table)` records
+    /// of the hp computeSU stage) never have to clone them.
+    fn su_from_tables(&self, tables: &[&ContingencyTable]) -> Vec<f64>;
 
     /// Fused: SU per column pair over all rows (vp worker-side path).
     /// Default implementation composes the two halves.
@@ -63,6 +65,7 @@ pub trait SuEngine: Send + Sync {
         }
         let n = pairs[0].x.len();
         let tables = self.ctables(pairs, 0..n);
-        self.su_from_tables(&tables)
+        let refs: Vec<&ContingencyTable> = tables.iter().collect();
+        self.su_from_tables(&refs)
     }
 }

@@ -37,8 +37,8 @@ impl SuEngine for NativeEngine {
             .collect()
     }
 
-    fn su_from_tables(&self, tables: &[ContingencyTable]) -> Vec<f64> {
-        tables.iter().map(su_from_table).collect()
+    fn su_from_tables(&self, tables: &[&ContingencyTable]) -> Vec<f64> {
+        tables.iter().map(|&t| su_from_table(t)).collect()
     }
 }
 
@@ -64,7 +64,8 @@ mod tests {
         };
         let e = NativeEngine;
         let fused = e.su_from_column_pairs(&[pair]);
-        let two = e.su_from_tables(&e.ctables(&[pair], 0..500));
+        let tables = e.ctables(&[pair], 0..500);
+        let two = e.su_from_tables(&tables.iter().collect::<Vec<_>>());
         assert_eq!(fused, two);
     }
 

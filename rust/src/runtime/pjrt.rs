@@ -193,7 +193,7 @@ impl SuEngine for PjrtEngine {
         out
     }
 
-    fn su_from_tables(&self, tables: &[ContingencyTable]) -> Vec<f64> {
+    fn su_from_tables(&self, tables: &[&ContingencyTable]) -> Vec<f64> {
         if tables.is_empty() {
             return vec![];
         }
@@ -244,6 +244,7 @@ impl SuEngine for PjrtEngine {
         }
         // General path: tiled ctables + su kernel.
         let tables = self.ctables(pairs, 0..n);
-        self.su_from_tables(&tables)
+        let refs: Vec<&ContingencyTable> = tables.iter().collect();
+        self.su_from_tables(&refs)
     }
 }

@@ -68,7 +68,7 @@ pub fn pack_columns(
 /// Pack up to `tile_p` contingency tables (starting at `offset`) into an
 /// `f32[P*B*B]` buffer, zero-padding each table into the `B × B` corner.
 pub fn pack_tables(
-    tables: &[ContingencyTable],
+    tables: &[&ContingencyTable],
     offset: usize,
     tile_p: usize,
     tile_b: usize,
@@ -76,7 +76,7 @@ pub fn pack_tables(
     let live = (tables.len() - offset).min(tile_p);
     let mut out = vec![0f32; tile_p * tile_b * tile_b];
     for p in 0..live {
-        let t = &tables[offset + p];
+        let t = tables[offset + p];
         debug_assert!(
             t.bins_x as usize <= tile_b && t.bins_y as usize <= tile_b,
             "table {}x{} exceeds tile {tile_b}",
@@ -145,7 +145,7 @@ mod tests {
     #[test]
     fn pack_tables_roundtrip() {
         let t = ContingencyTable::from_columns(&[0, 1, 1, 2], 3, &[1, 0, 1, 1], 2);
-        let (buf, live) = pack_tables(&[t.clone()], 0, 4, 8);
+        let (buf, live) = pack_tables(&[&t], 0, 4, 8);
         assert_eq!(live, 1);
         let back = unpack_table(&buf[..64], 8, 3, 2);
         assert_eq!(back, t);
@@ -155,7 +155,7 @@ mod tests {
     fn pack_tables_multiple_offsets() {
         let a = ContingencyTable::from_columns(&[0, 0], 2, &[1, 1], 2);
         let b = ContingencyTable::from_columns(&[1, 1], 2, &[0, 1], 2);
-        let (buf, live) = pack_tables(&[a.clone(), b.clone()], 1, 2, 4);
+        let (buf, live) = pack_tables(&[&a, &b], 1, 2, 4);
         assert_eq!(live, 1);
         let back = unpack_table(&buf[..16], 4, 2, 2);
         assert_eq!(back, b);

@@ -20,12 +20,25 @@ pub enum StageKind {
 /// Metrics of one executed stage.
 #[derive(Debug, Clone)]
 pub struct StageMetrics {
-    /// Stage label (for harness debug output).
+    /// Stage label. Fused stages join the labels of every narrow
+    /// transformation that ran inside them with `+` (e.g. `"map+filter"`).
     pub label: String,
     /// Stage kind.
     pub kind: StageKind,
+    /// Number of logical operations the scheduler fused into this stage
+    /// (1 when nothing was fused). This is how tests observe that a
+    /// narrow chain executed as a single stage.
+    pub fused_ops: usize,
     /// Measured wall-clock seconds of each task's successful attempt.
+    /// For a `Shuffle` stage these are the map-side tasks (including any
+    /// fused narrow chain); the reduce wave is in [`Self::reduce_task_secs`].
     pub task_secs: Vec<f64>,
+    /// Reduce-side task times of a `Shuffle` stage (empty for other
+    /// kinds). Kept separate from [`Self::task_secs`] because the
+    /// shuffle is a barrier: the virtual-cluster replay must not
+    /// schedule a reduce task concurrently with the map tasks it
+    /// depends on.
+    pub reduce_task_secs: Vec<f64>,
     /// Total retry attempts beyond the first, across tasks.
     pub retries: usize,
     /// Bytes that would cross the shuffle (map-output size).
@@ -35,9 +48,14 @@ pub struct StageMetrics {
 }
 
 impl StageMetrics {
-    /// Total measured compute across tasks.
+    /// Total measured compute across tasks (both shuffle waves).
     pub fn total_task_secs(&self) -> f64 {
-        self.task_secs.iter().sum()
+        self.task_secs.iter().sum::<f64>() + self.reduce_task_secs.iter().sum::<f64>()
+    }
+
+    /// Total tasks launched by this stage (both shuffle waves).
+    pub fn total_tasks(&self) -> usize {
+        self.task_secs.len() + self.reduce_task_secs.len()
     }
 }
 
@@ -58,7 +76,7 @@ impl JobMetrics {
 
     /// Total tasks launched.
     pub fn total_tasks(&self) -> usize {
-        self.stages.iter().map(|s| s.task_secs.len()).sum()
+        self.stages.iter().map(StageMetrics::total_tasks).sum()
     }
 
     /// Total shuffle bytes across stages.
@@ -74,6 +92,12 @@ impl JobMetrics {
     /// Total retries (failure-injection observability).
     pub fn total_retries(&self) -> usize {
         self.stages.iter().map(|s| s.retries).sum()
+    }
+
+    /// Count stages of the given kind (fusion observability: a fused
+    /// narrow chain contributes exactly one `Map` stage).
+    pub fn stages_of_kind(&self, kind: StageKind) -> usize {
+        self.stages.iter().filter(|s| s.kind == kind).count()
     }
 }
 
@@ -146,7 +170,9 @@ mod tests {
         jm.stages.push(StageMetrics {
             label: "a".into(),
             kind: StageKind::Map,
+            fused_ops: 2,
             task_secs: vec![0.1, 0.2],
+            reduce_task_secs: vec![],
             retries: 1,
             shuffle_bytes: 100,
             collect_bytes: 10,
@@ -154,16 +180,21 @@ mod tests {
         jm.stages.push(StageMetrics {
             label: "b".into(),
             kind: StageKind::Shuffle,
+            fused_ops: 1,
             task_secs: vec![0.3],
+            reduce_task_secs: vec![0.1],
             retries: 0,
             shuffle_bytes: 50,
             collect_bytes: 0,
         });
         jm.broadcast_bytes.push(1000);
-        assert!((jm.total_task_secs() - 0.6).abs() < 1e-12);
-        assert_eq!(jm.total_tasks(), 3);
+        assert!((jm.total_task_secs() - 0.7).abs() < 1e-12);
+        assert_eq!(jm.total_tasks(), 4);
         assert_eq!(jm.total_shuffle_bytes(), 150);
         assert_eq!(jm.total_broadcast_bytes(), 1000);
         assert_eq!(jm.total_retries(), 1);
+        assert_eq!(jm.stages_of_kind(StageKind::Map), 1);
+        assert_eq!(jm.stages_of_kind(StageKind::Shuffle), 1);
+        assert_eq!(jm.stages_of_kind(StageKind::Collect), 0);
     }
 }

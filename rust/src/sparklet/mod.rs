@@ -6,11 +6,23 @@
 //! exactly that programming model in-process so DiCFS can be written the
 //! way the paper writes it (see `dicfs::hp`, `dicfs::vp`).
 //!
+//! Execution model (DESIGN.md §3): like Spark itself, the engine is
+//! **lazy and DAG-scheduled** — narrow transformations only record
+//! lineage, and at action time consecutive narrow operations are fused
+//! into a single stage (one task per partition, one [`StageMetrics`]
+//! entry, no intermediate RDD materialization). Stages run on a
+//! **persistent executor pool** ([`pool::ExecutorPool`]) owned by the
+//! [`SparkletContext`]: workers are spawned once and stages are
+//! dispatched to them over a channel, mirroring Spark's long-lived
+//! executors. `reduceByKey` parallelizes its reducer-side bucket
+//! gathering on the same pool.
+//!
 //! Two clocks:
-//! * **Real execution** — every stage actually runs on a thread pool and
-//!   produces real results (the selected features are never simulated).
-//! * **Simulated cluster time** — every task is wall-clock timed; per-stage
-//!   metrics (task times, shuffle bytes, broadcast bytes) feed
+//! * **Real execution** — every stage actually runs on the executor pool
+//!   and produces real results (the selected features are never
+//!   simulated).
+//! * **Simulated cluster time** — every task is wall-clock timed;
+//!   per-stage metrics (task times, shuffle bytes, broadcast bytes) feed
 //!   [`simtime`], which schedules the measured tasks onto an
 //!   `nodes × cores` virtual cluster (LPT) plus a network cost model.
 //!   This is how Fig. 3/4/5's multi-node scaling is reproduced on a
@@ -28,5 +40,6 @@ pub mod simtime;
 
 pub use config::{ClusterConfig, NetworkModel};
 pub use metrics::{JobMetrics, StageKind, StageMetrics};
+pub use pool::{ExecutorPool, TaskOptions};
 pub use rdd::{Broadcast, Rdd, SparkletContext};
 pub use simtime::simulate_job_time;

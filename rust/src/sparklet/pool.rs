@@ -1,19 +1,29 @@
-//! Scatter-gather task execution with per-task timing and Spark-style
-//! retry of failed (panicking) tasks.
+//! The persistent executor pool: worker threads are spawned once per
+//! [`crate::sparklet::SparkletContext`] and every stage is dispatched to
+//! them over a channel — the in-process analogue of Spark's long-lived
+//! executors (tasks are shipped to already-running workers instead of
+//! paying a thread-spawn per stage, which is what `std::thread::scope`
+//! per transformation used to cost).
 //!
-//! std-only (no rayon in this environment): a `std::thread::scope` fans
-//! the task indices out over worker threads via an atomic cursor; results
-//! land in slot order so output order always matches input order.
+//! std-only (no rayon in this environment): jobs travel through an
+//! `mpsc` channel shared by the workers; results land in index-ordered
+//! slots so output order always matches input order regardless of thread
+//! count. Panicking tasks are retried Spark-style
+//! ([`TaskOptions::max_retries`]), which the failure-injection tests use;
+//! a task that keeps failing aborts the whole stage, like Spark aborting
+//! a job after repeated task failures.
 
 use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::Mutex;
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
 use std::time::Instant;
 
-/// Options controlling one scatter-gather run.
+/// Options controlling real task execution on the host.
 #[derive(Debug, Clone, Copy)]
 pub struct TaskOptions {
-    /// Worker threads to use (clamped to task count; 0 → inline).
+    /// Worker threads in the executor pool (0 is clamped to 1).
     pub threads: usize,
     /// Retries per failed task before giving up (Spark default: 3).
     pub max_retries: usize,
@@ -30,6 +40,16 @@ impl Default for TaskOptions {
     }
 }
 
+impl TaskOptions {
+    /// Default options with an explicit worker count.
+    pub fn with_threads(threads: usize) -> Self {
+        Self {
+            threads,
+            ..Self::default()
+        }
+    }
+}
+
 /// Per-task outcome: duration and how many attempts it took.
 #[derive(Debug, Clone, Copy)]
 pub struct TaskReport {
@@ -39,80 +59,170 @@ pub struct TaskReport {
     pub attempts: usize,
 }
 
-/// Run `f(i)` for every `i in 0..count`, returning results in index order
-/// plus per-task reports. Panicking tasks are retried up to
-/// `opts.max_retries` times; if a task keeps failing the whole run
-/// returns `Err` with the task index (stage failure, like Spark aborting
-/// a job after repeated task failures).
-pub fn run_tasks<U: Send>(
-    count: usize,
-    opts: TaskOptions,
-    f: impl Fn(usize) -> U + Sync,
-) -> Result<(Vec<U>, Vec<TaskReport>), usize> {
-    if count == 0 {
-        return Ok((vec![], vec![]));
-    }
-    let results: Vec<Mutex<Option<U>>> = (0..count).map(|_| Mutex::new(None)).collect();
-    let reports: Vec<Mutex<Option<TaskReport>>> = (0..count).map(|_| Mutex::new(None)).collect();
-    let cursor = AtomicUsize::new(0);
-    let failed = AtomicUsize::new(usize::MAX);
+type Job = Box<dyn FnOnce() + Send + 'static>;
 
-    let worker = |_wid: usize| {
-        loop {
-            if failed.load(Ordering::Relaxed) != usize::MAX {
-                return; // another worker hit a hard failure — bail out
-            }
-            let i = cursor.fetch_add(1, Ordering::Relaxed);
-            if i >= count {
-                return;
-            }
-            let mut attempts = 0;
-            loop {
-                attempts += 1;
-                let t0 = Instant::now();
-                match catch_unwind(AssertUnwindSafe(|| f(i))) {
-                    Ok(v) => {
-                        *results[i].lock().unwrap() = Some(v);
-                        *reports[i].lock().unwrap() = Some(TaskReport {
-                            secs: t0.elapsed().as_secs_f64(),
-                            attempts,
-                        });
-                        break;
+/// One result slot per task: the value plus its report.
+type Slot<U> = Mutex<Option<(U, TaskReport)>>;
+
+/// A fixed set of long-lived worker threads executing submitted stages.
+///
+/// Created once by the driver context; dropped when the context drops
+/// (the channel closes and the workers exit cleanly).
+///
+/// Stages must be submitted from the driver only: a task closure must
+/// never invoke an RDD action (which would submit a nested stage), since
+/// with a fixed worker count the outer task would block the slot its
+/// sub-stage needs — the same restriction Spark places on nesting
+/// actions inside tasks.
+pub struct ExecutorPool {
+    sender: Mutex<Option<Sender<Job>>>,
+    workers: Vec<JoinHandle<()>>,
+    opts: TaskOptions,
+}
+
+impl ExecutorPool {
+    /// Spawn `opts.threads` workers (at least one).
+    pub fn new(opts: TaskOptions) -> Self {
+        let threads = opts.threads.max(1);
+        let (tx, rx) = channel::<Job>();
+        let rx = Arc::new(Mutex::new(rx));
+        let workers = (0..threads)
+            .map(|w| {
+                let rx = Arc::clone(&rx);
+                std::thread::Builder::new()
+                    .name(format!("sparklet-worker-{w}"))
+                    .spawn(move || worker_loop(&rx))
+                    .expect("spawn executor worker")
+            })
+            .collect();
+        Self {
+            sender: Mutex::new(Some(tx)),
+            workers,
+            opts,
+        }
+    }
+
+    /// Number of live worker threads (the clamped thread count).
+    pub fn threads(&self) -> usize {
+        self.workers.len()
+    }
+
+    /// Run `f(i)` for every `i in 0..count` as one stage, returning the
+    /// results in index order plus per-task reports. Panicking tasks are
+    /// retried up to `max_retries` times; a task that keeps failing
+    /// returns `Err` with its index after the stage drains.
+    pub fn run_stage<U: Send + 'static>(
+        &self,
+        count: usize,
+        f: impl Fn(usize) -> U + Send + Sync + 'static,
+    ) -> Result<(Vec<U>, Vec<TaskReport>), usize> {
+        self.run_stage_arc(count, Arc::new(f))
+    }
+
+    /// [`Self::run_stage`] over an already-shared task function (the form
+    /// the lazy scheduler hands in: a fused narrow-chain closure).
+    pub fn run_stage_arc<U: Send + 'static>(
+        &self,
+        count: usize,
+        f: Arc<dyn Fn(usize) -> U + Send + Sync>,
+    ) -> Result<(Vec<U>, Vec<TaskReport>), usize> {
+        if count == 0 {
+            return Ok((vec![], vec![]));
+        }
+        let max_retries = self.opts.max_retries;
+        let slots: Arc<Vec<Slot<U>>> = Arc::new((0..count).map(|_| Mutex::new(None)).collect());
+        let failed = Arc::new(AtomicUsize::new(usize::MAX));
+        let pending = Arc::new((Mutex::new(count), Condvar::new()));
+
+        {
+            let guard = self.sender.lock().unwrap();
+            let tx = guard.as_ref().expect("executor pool shut down");
+            for i in 0..count {
+                let f = Arc::clone(&f);
+                let slots = Arc::clone(&slots);
+                let failed = Arc::clone(&failed);
+                let pending = Arc::clone(&pending);
+                let job: Job = Box::new(move || {
+                    // Skip the work (but still check in) once a sibling
+                    // task of this stage has failed permanently.
+                    if failed.load(Ordering::Relaxed) == usize::MAX {
+                        let mut attempts = 0;
+                        loop {
+                            attempts += 1;
+                            let t0 = Instant::now();
+                            let task = f.as_ref();
+                            match catch_unwind(AssertUnwindSafe(|| task(i))) {
+                                Ok(v) => {
+                                    let report = TaskReport {
+                                        secs: t0.elapsed().as_secs_f64(),
+                                        attempts,
+                                    };
+                                    *slots[i].lock().unwrap() = Some((v, report));
+                                    break;
+                                }
+                                Err(_) if attempts <= max_retries => continue,
+                                Err(_) => {
+                                    failed.store(i, Ordering::Relaxed);
+                                    break;
+                                }
+                            }
+                        }
                     }
-                    Err(_) if attempts <= opts.max_retries => continue,
-                    Err(_) => {
-                        failed.store(i, Ordering::Relaxed);
-                        return;
+                    let (lock, cv) = &*pending;
+                    let mut left = lock.lock().unwrap();
+                    *left -= 1;
+                    if *left == 0 {
+                        cv.notify_all();
                     }
-                }
+                });
+                tx.send(job).expect("executor pool hung up");
             }
         }
-    };
 
-    let threads = opts.threads.clamp(1, count);
-    if threads == 1 {
-        worker(0);
-    } else {
-        std::thread::scope(|s| {
-            for w in 0..threads {
-                s.spawn(move || worker(w));
+        // Stage barrier: wait for every task to check in.
+        {
+            let (lock, cv) = &*pending;
+            let mut left = lock.lock().unwrap();
+            while *left > 0 {
+                left = cv.wait(left).unwrap();
             }
-        });
-    }
+        }
 
-    let fi = failed.load(Ordering::Relaxed);
-    if fi != usize::MAX {
-        return Err(fi);
+        let fi = failed.load(Ordering::Relaxed);
+        if fi != usize::MAX {
+            return Err(fi);
+        }
+        let mut out = Vec::with_capacity(count);
+        let mut reports = Vec::with_capacity(count);
+        for slot in slots.iter() {
+            let (v, r) = slot.lock().unwrap().take().expect("all tasks completed");
+            out.push(v);
+            reports.push(r);
+        }
+        Ok((out, reports))
     }
-    let out: Vec<U> = results
-        .into_iter()
-        .map(|m| m.into_inner().unwrap().expect("all tasks completed"))
-        .collect();
-    let reps: Vec<TaskReport> = reports
-        .into_iter()
-        .map(|m| m.into_inner().unwrap().expect("all tasks reported"))
-        .collect();
-    Ok((out, reps))
+}
+
+impl Drop for ExecutorPool {
+    fn drop(&mut self) {
+        // Closing the channel wakes every idle worker with `Err`.
+        drop(self.sender.lock().unwrap().take());
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+fn worker_loop(rx: &Mutex<Receiver<Job>>) {
+    loop {
+        // The lock is held only while *receiving*; it is released before
+        // the job runs, so other workers drain the queue concurrently.
+        let job = rx.lock().unwrap().recv();
+        match job {
+            Ok(job) => job(),
+            Err(_) => return, // pool dropped
+        }
+    }
 }
 
 #[cfg(test)]
@@ -129,35 +239,60 @@ mod tests {
 
     #[test]
     fn results_in_index_order() {
-        let (out, reps) = run_tasks(16, opts(4), |i| i * i).unwrap();
+        let pool = ExecutorPool::new(opts(4));
+        let (out, reps) = pool.run_stage(16, |i| i * i).unwrap();
         assert_eq!(out, (0..16).map(|i| i * i).collect::<Vec<_>>());
         assert_eq!(reps.len(), 16);
         assert!(reps.iter().all(|r| r.attempts == 1));
     }
 
     #[test]
-    fn empty_run() {
-        let (out, reps) = run_tasks(0, opts(2), |i| i).unwrap();
+    fn empty_stage() {
+        let pool = ExecutorPool::new(opts(2));
+        let (out, reps) = pool.run_stage(0, |i| i).unwrap();
         assert!(out.is_empty() && reps.is_empty());
     }
 
     #[test]
-    fn single_threaded_inline() {
-        let (out, _) = run_tasks(5, opts(1), |i| i + 1).unwrap();
+    fn single_worker_runs_in_order() {
+        let pool = ExecutorPool::new(opts(1));
+        let (out, _) = pool.run_stage(5, |i| i + 1).unwrap();
         assert_eq!(out, vec![1, 2, 3, 4, 5]);
+    }
+
+    #[test]
+    fn zero_threads_clamped_to_one() {
+        let pool = ExecutorPool::new(opts(0));
+        assert_eq!(pool.threads(), 1);
+        let (out, _) = pool.run_stage(3, |i| i).unwrap();
+        assert_eq!(out, vec![0, 1, 2]);
+    }
+
+    #[test]
+    fn pool_persists_across_stages() {
+        // One pool, many stages: workers are reused, not respawned.
+        let pool = ExecutorPool::new(opts(4));
+        for s in 0..10usize {
+            let (out, _) = pool.run_stage(8, move |i| i + s).unwrap();
+            assert_eq!(out, (s..8 + s).collect::<Vec<_>>());
+        }
+        assert_eq!(pool.threads(), 4);
     }
 
     #[test]
     fn retries_flaky_task() {
         // Task 3 panics on its first two attempts, then succeeds.
-        let failures = AtomicU32::new(0);
-        let (out, reps) = run_tasks(8, opts(2), |i| {
-            if i == 3 && failures.fetch_add(1, Ordering::SeqCst) < 2 {
-                panic!("injected failure");
-            }
-            i
-        })
-        .unwrap();
+        let pool = ExecutorPool::new(opts(2));
+        let failures = Arc::new(AtomicU32::new(0));
+        let f2 = Arc::clone(&failures);
+        let (out, reps) = pool
+            .run_stage(8, move |i| {
+                if i == 3 && f2.fetch_add(1, Ordering::SeqCst) < 2 {
+                    panic!("injected failure");
+                }
+                i
+            })
+            .unwrap();
         assert_eq!(out, (0..8).collect::<Vec<_>>());
         assert_eq!(reps[3].attempts, 3);
         assert!(reps.iter().enumerate().all(|(i, r)| i == 3 || r.attempts == 1));
@@ -165,7 +300,8 @@ mod tests {
 
     #[test]
     fn permanent_failure_aborts_stage() {
-        let err = run_tasks(4, opts(2), |i| {
+        let pool = ExecutorPool::new(opts(2));
+        let err = pool.run_stage(4, |i| {
             if i == 2 {
                 panic!("always fails");
             }
@@ -175,11 +311,28 @@ mod tests {
     }
 
     #[test]
+    fn pool_survives_a_failed_stage() {
+        // A permanently failing stage must not poison the workers.
+        let pool = ExecutorPool::new(opts(2));
+        let err = pool.run_stage(4, |i| {
+            if i == 1 {
+                panic!("boom");
+            }
+            i
+        });
+        assert!(err.is_err());
+        let (out, _) = pool.run_stage(4, |i| i * 2).unwrap();
+        assert_eq!(out, vec![0, 2, 4, 6]);
+    }
+
+    #[test]
     fn task_times_are_recorded() {
-        let (_, reps) = run_tasks(3, opts(1), |_| {
-            std::thread::sleep(std::time::Duration::from_millis(3));
-        })
-        .unwrap();
+        let pool = ExecutorPool::new(opts(1));
+        let (_, reps) = pool
+            .run_stage(3, |_| {
+                std::thread::sleep(std::time::Duration::from_millis(3));
+            })
+            .unwrap();
         assert!(reps.iter().all(|r| r.secs >= 0.002));
     }
 }

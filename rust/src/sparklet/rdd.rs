@@ -1,10 +1,28 @@
 //! RDDs, the driver context, and broadcast variables (paper §4).
 //!
-//! An [`Rdd<T>`] is an immutable partitioned collection; transformations
-//! launch real tasks on the host thread pool and record [`StageMetrics`]
-//! into the owning [`SparkletContext`] for virtual-cluster replay. The
-//! subset of the Spark API implemented is exactly what the paper uses:
-//! `parallelize`, `mapPartitions`, `reduceByKey`, `collect`, broadcast.
+//! An [`Rdd<T>`] is an immutable partitioned collection. Like Spark — and
+//! unlike the first eager version of this substrate — narrow
+//! transformations (`map`, `filter`, `mapPartitions`) are **lazy**: they
+//! only extend a lineage plan. When an action runs (`collect*`, `count`,
+//! `reduceByKey`), the pending narrow chain is *fused* into a single
+//! stage — one task per partition applies the whole chain in one pass, so
+//! a `map → filter → mapPartitions` pipeline records exactly one
+//! [`StageMetrics`] entry and never materializes the intermediate RDDs.
+//! `reduceByKey` additionally fuses the pending chain into its shuffle-map
+//! tasks, exactly as Spark's `ShuffleMapStage` does.
+//!
+//! Stages execute on the context's persistent [`ExecutorPool`] (workers
+//! spawned once, stages dispatched over a channel) and record
+//! [`StageMetrics`] into the owning [`SparkletContext`] for
+//! virtual-cluster replay. A forced RDD memoizes its partitions, so
+//! repeated actions do not recompute the lineage, and a task resolves
+//! its parent's plan at execution time — a child derived before the
+//! parent was forced still reads the memoized partitions (`cache()`
+//! semantics for free, checked at runtime like Spark's block manager).
+//!
+//! The subset of the Spark API implemented is exactly what the paper
+//! uses: `parallelize`, `mapPartitions`, `reduceByKey`, `collect`,
+//! broadcast.
 
 use std::collections::HashMap;
 use std::hash::{Hash, Hasher};
@@ -13,30 +31,45 @@ use std::sync::{Arc, Mutex};
 
 use crate::sparklet::config::ClusterConfig;
 use crate::sparklet::metrics::{JobMetrics, StageKind, StageMetrics};
-use crate::sparklet::pool::{run_tasks, TaskOptions};
+use crate::sparklet::pool::{ExecutorPool, TaskOptions};
 
-/// Driver context: owns the cluster topology, the metrics log and the
-/// real execution options.
+/// Driver context: owns the cluster topology, the persistent executor
+/// pool, the metrics log and the real execution options.
 pub struct SparkletContext {
     /// Virtual topology used for simulated-time replay.
     pub cluster: ClusterConfig,
-    /// Real execution options (host threads, retries).
+    /// Real execution options (host threads, retries) the pool was built
+    /// with.
     pub task_options: TaskOptions,
+    pool: ExecutorPool,
     metrics: Mutex<JobMetrics>,
 }
 
 impl SparkletContext {
-    /// New context over the given virtual topology.
+    /// New context over the given virtual topology, with default host
+    /// execution options.
     pub fn new(cluster: ClusterConfig) -> Arc<Self> {
+        Self::with_options(cluster, TaskOptions::default())
+    }
+
+    /// New context with explicit host execution options (the worker pool
+    /// is spawned here, once, and reused by every stage).
+    pub fn with_options(cluster: ClusterConfig, task_options: TaskOptions) -> Arc<Self> {
         Arc::new(Self {
             cluster,
-            task_options: TaskOptions::default(),
+            task_options,
+            pool: ExecutorPool::new(task_options),
             metrics: Mutex::new(JobMetrics::default()),
         })
     }
 
+    /// The persistent executor pool stages run on.
+    pub fn pool(&self) -> &ExecutorPool {
+        &self.pool
+    }
+
     /// Distribute `data` into `num_partitions` contiguous chunks.
-    pub fn parallelize<T: Send + Sync>(
+    pub fn parallelize<T: Send + Sync + 'static>(
         self: &Arc<Self>,
         data: Vec<T>,
         num_partitions: usize,
@@ -51,18 +84,15 @@ impl SparkletContext {
             let take = base + usize::from(p < extra);
             parts.push(it.by_ref().take(take).collect());
         }
-        Rdd {
-            ctx: Arc::clone(self),
-            parts: Arc::new(parts),
-        }
+        Rdd::materialized(Arc::clone(self), parts)
     }
 
     /// Wrap pre-built partitions (used by the vp columnar transformation).
-    pub fn from_partitions<T: Send + Sync>(self: &Arc<Self>, parts: Vec<Vec<T>>) -> Rdd<T> {
-        Rdd {
-            ctx: Arc::clone(self),
-            parts: Arc::new(parts),
-        }
+    pub fn from_partitions<T: Send + Sync + 'static>(
+        self: &Arc<Self>,
+        parts: Vec<Vec<T>>,
+    ) -> Rdd<T> {
+        Rdd::materialized(Arc::clone(self), parts)
     }
 
     /// Broadcast a read-only value to all (virtual) workers, charging
@@ -102,91 +132,213 @@ impl<T> Deref for Broadcast<T> {
     }
 }
 
-/// Immutable partitioned collection.
+/// The lineage state of an RDD: either its partitions exist (source data
+/// or a computed stage output) or a chain of narrow transformations is
+/// still pending, fused into a single per-partition closure rooted at a
+/// materialized ancestor.
+enum Plan<T> {
+    /// Partitions are materialized.
+    Materialized(Arc<Vec<Vec<T>>>),
+    /// Pending fused narrow chain: `compute(i)` produces partition `i`
+    /// by applying every recorded transformation in one pass.
+    Narrow {
+        /// Labels of the fused transformations, in application order.
+        labels: Vec<String>,
+        /// The fused per-partition computation.
+        compute: Arc<dyn Fn(usize) -> Vec<T> + Send + Sync>,
+    },
+}
+
+impl<T> Clone for Plan<T> {
+    fn clone(&self) -> Self {
+        match self {
+            Plan::Materialized(parts) => Plan::Materialized(Arc::clone(parts)),
+            Plan::Narrow { labels, compute } => Plan::Narrow {
+                labels: labels.clone(),
+                compute: Arc::clone(compute),
+            },
+        }
+    }
+}
+
+/// Immutable partitioned collection with lazy narrow lineage.
 pub struct Rdd<T> {
     ctx: Arc<SparkletContext>,
-    parts: Arc<Vec<Vec<T>>>,
+    plan: Arc<Mutex<Plan<T>>>,
+    num_parts: usize,
 }
 
 impl<T> Clone for Rdd<T> {
     fn clone(&self) -> Self {
         Self {
             ctx: Arc::clone(&self.ctx),
-            parts: Arc::clone(&self.parts),
+            plan: Arc::clone(&self.plan),
+            num_parts: self.num_parts,
         }
     }
 }
 
-impl<T: Send + Sync> Rdd<T> {
-    /// Number of partitions.
+impl<T> Rdd<T> {
+    /// Number of partitions (narrow transformations preserve it).
     pub fn num_partitions(&self) -> usize {
-        self.parts.len()
-    }
-
-    /// Total element count.
-    pub fn count(&self) -> usize {
-        self.parts.iter().map(|p| p.len()).sum()
-    }
-
-    /// Borrow a partition (driver-side inspection; no task launched).
-    pub fn partition(&self, i: usize) -> &[T] {
-        &self.parts[i]
+        self.num_parts
     }
 
     /// The owning context.
     pub fn context(&self) -> &Arc<SparkletContext> {
         &self.ctx
     }
+}
 
-    /// `mapPartitions`: run `f(partition_index, elements)` per partition
-    /// as one task each.
+impl<T: Send + Sync + 'static> Rdd<T> {
+    fn materialized(ctx: Arc<SparkletContext>, parts: Vec<Vec<T>>) -> Self {
+        let num_parts = parts.len();
+        Self {
+            ctx,
+            plan: Arc::new(Mutex::new(Plan::Materialized(Arc::new(parts)))),
+            num_parts,
+        }
+    }
+
+    /// Fuse `step` onto this RDD's pending narrow chain (if any),
+    /// producing the stage's label list and one per-partition task
+    /// closure. This is the single place fusion semantics live: both
+    /// `map_partitions` (step = the user function) and `reduce_by_key`
+    /// (step = map-side combine) compose through it.
     ///
-    /// Panics (after retries) abort the stage, as in Spark.
-    pub fn map_partitions<U: Send + Sync>(
+    /// The parent's plan is consulted at *execution* time, not captured
+    /// as a snapshot: if the parent gets forced (memoized) between this
+    /// transformation and the action, tasks read the memoized partitions
+    /// instead of recomputing the parent's chain — the same runtime check
+    /// Spark's block manager performs. The label list is the lineage as
+    /// recorded at transformation time; when an ancestor was forced in
+    /// between, the measured task times already exclude its work.
+    fn fuse_with<U: Send + 'static>(
         &self,
         label: &str,
-        f: impl Fn(usize, &[T]) -> Vec<U> + Sync,
-    ) -> Rdd<U> {
-        let parts = &self.parts;
-        let (out, reports) = run_tasks(parts.len(), self.ctx.task_options, |i| f(i, &parts[i]))
+        step: impl Fn(usize, &[T]) -> U + Send + Sync + 'static,
+    ) -> (Vec<String>, Arc<dyn Fn(usize) -> U + Send + Sync>) {
+        let labels = {
+            let guard = self.plan.lock().unwrap();
+            match &*guard {
+                Plan::Materialized(_) => vec![label.to_string()],
+                Plan::Narrow { labels, .. } => {
+                    let mut all = labels.clone();
+                    all.push(label.to_string());
+                    all
+                }
+            }
+        };
+        let parent = Arc::clone(&self.plan);
+        let compute: Arc<dyn Fn(usize) -> U + Send + Sync> = Arc::new(move |i| {
+            let plan = parent.lock().unwrap().clone();
+            match plan {
+                Plan::Materialized(parts) => step(i, &parts[i]),
+                Plan::Narrow { compute, .. } => {
+                    let part = compute.as_ref()(i);
+                    step(i, &part)
+                }
+            }
+        });
+        (labels, compute)
+    }
+
+    /// Force this RDD: if a narrow chain is pending, run it as one fused
+    /// stage on the executor pool (one task per partition, one
+    /// [`StageMetrics`] entry), memoize the result, and return the
+    /// partitions.
+    fn force(&self) -> Arc<Vec<Vec<T>>> {
+        let plan = self.plan.lock().unwrap().clone();
+        let (labels, compute) = match plan {
+            Plan::Materialized(parts) => return parts,
+            Plan::Narrow { labels, compute } => (labels, compute),
+        };
+        let fused_ops = labels.len();
+        let label = labels.join("+");
+        let (out, reports) = self
+            .ctx
+            .pool()
+            .run_stage_arc(self.num_parts, compute)
             .unwrap_or_else(|t| panic!("stage {label}: task {t} failed permanently"));
         let retries = reports.iter().map(|r| r.attempts - 1).sum();
         self.ctx.record_stage(StageMetrics {
-            label: label.to_string(),
+            label,
             kind: StageKind::Map,
+            fused_ops,
             task_secs: reports.iter().map(|r| r.secs).collect(),
+            reduce_task_secs: vec![],
             retries,
             shuffle_bytes: 0,
             collect_bytes: 0,
         });
+        let parts = Arc::new(out);
+        *self.plan.lock().unwrap() = Plan::Materialized(Arc::clone(&parts));
+        parts
+    }
+
+    /// Total element count. This is an action: it forces any pending
+    /// narrow chain.
+    pub fn count(&self) -> usize {
+        self.force().iter().map(Vec::len).sum()
+    }
+
+    /// Materialized partitions (driver-side inspection). This is an
+    /// action: it forces any pending narrow chain.
+    pub fn partitions(&self) -> Arc<Vec<Vec<T>>> {
+        self.force()
+    }
+
+    /// `mapPartitions`: record `f(partition_index, elements)` in the
+    /// lineage plan. Lazy — no task runs until an action; consecutive
+    /// narrow transformations fuse into one stage.
+    ///
+    /// Task panics (after retries) abort the stage at action time, as in
+    /// Spark.
+    pub fn map_partitions<U: Send + Sync + 'static>(
+        &self,
+        label: &str,
+        f: impl Fn(usize, &[T]) -> Vec<U> + Send + Sync + 'static,
+    ) -> Rdd<U> {
+        let (labels, compute) = self.fuse_with(label, f);
         Rdd {
             ctx: Arc::clone(&self.ctx),
-            parts: Arc::new(out),
+            plan: Arc::new(Mutex::new(Plan::Narrow { labels, compute })),
+            num_parts: self.num_parts,
         }
     }
 
-    /// Element-wise `map` (implemented over `mapPartitions`).
-    pub fn map<U: Send + Sync>(&self, label: &str, f: impl Fn(&T) -> U + Sync) -> Rdd<U> {
-        self.map_partitions(label, |_, xs| xs.iter().map(&f).collect())
+    /// Element-wise `map` (implemented over `mapPartitions`, so it fuses
+    /// like any other narrow transformation).
+    pub fn map<U: Send + Sync + 'static>(
+        &self,
+        label: &str,
+        f: impl Fn(&T) -> U + Send + Sync + 'static,
+    ) -> Rdd<U> {
+        self.map_partitions(label, move |_, xs| xs.iter().map(&f).collect())
     }
 
     /// `filter` (implemented over `mapPartitions`).
-    pub fn filter(&self, label: &str, f: impl Fn(&T) -> bool + Sync) -> Rdd<T>
+    pub fn filter(&self, label: &str, f: impl Fn(&T) -> bool + Send + Sync + 'static) -> Rdd<T>
     where
         T: Clone,
     {
-        self.map_partitions(label, |_, xs| xs.iter().filter(|x| f(x)).cloned().collect())
+        self.map_partitions(label, move |_, xs| {
+            xs.iter().filter(|x| f(x)).cloned().collect()
+        })
     }
 
-    /// `collect`: gather all elements to the driver in partition order,
-    /// charging `wire(elem)` bytes each to the network model.
+    /// `collect`: force the lineage, then gather all elements to the
+    /// driver in partition order, charging `wire(elem)` bytes each to the
+    /// network model.
     pub fn collect_sized(&self, wire: impl Fn(&T) -> usize) -> Vec<T>
     where
         T: Clone,
     {
-        let mut out = Vec::with_capacity(self.count());
+        let parts = self.force();
+        let total: usize = parts.iter().map(Vec::len).sum();
+        let mut out = Vec::with_capacity(total);
         let mut bytes = 0usize;
-        for p in self.parts.iter() {
+        for p in parts.iter() {
             for e in p {
                 bytes += wire(e);
                 out.push(e.clone());
@@ -195,7 +347,9 @@ impl<T: Send + Sync> Rdd<T> {
         self.ctx.record_stage(StageMetrics {
             label: "collect".to_string(),
             kind: StageKind::Collect,
+            fused_ops: 1,
             task_secs: vec![],
+            reduce_task_secs: vec![],
             retries: 0,
             shuffle_bytes: 0,
             collect_bytes: bytes,
@@ -212,99 +366,145 @@ impl<T: Send + Sync> Rdd<T> {
     }
 }
 
+/// Map-side half of the shuffle: per-partition combine, then hash
+/// bucketing into `num_out` reducer buckets. Runs *inside* the map task,
+/// as Spark's shuffle writers do, so its cost lands in (parallel) task
+/// time, not on the serial driver. Returns the buckets plus the wire
+/// bytes of the combined map output.
+fn map_side_combine<K, V, M, W>(
+    part: &[(K, V)],
+    num_out: usize,
+    merge: &M,
+    wire: &W,
+) -> (Vec<Vec<(K, V)>>, usize)
+where
+    K: Eq + Hash + Clone,
+    V: Clone,
+    M: Fn(&mut V, V) + ?Sized,
+    W: Fn(&V) -> usize + ?Sized,
+{
+    let mut acc: HashMap<K, V> = HashMap::new();
+    for (k, v) in part {
+        match acc.get_mut(k) {
+            Some(a) => merge(a, v.clone()),
+            None => {
+                acc.insert(k.clone(), v.clone());
+            }
+        }
+    }
+    let mut bytes = 0usize;
+    let mut buckets: Vec<Vec<(K, V)>> = (0..num_out).map(|_| Vec::new()).collect();
+    for (k, v) in acc {
+        bytes += wire(&v);
+        let mut h = std::collections::hash_map::DefaultHasher::new();
+        k.hash(&mut h);
+        buckets[(h.finish() as usize) % num_out].push((k, v));
+    }
+    (buckets, bytes)
+}
+
 impl<K, V> Rdd<(K, V)>
 where
-    K: Eq + Hash + Clone + Send + Sync,
-    V: Send + Sync + Clone,
+    K: Eq + Hash + Clone + Send + Sync + 'static,
+    V: Send + Sync + Clone + 'static,
 {
     /// `reduceByKey`: map-side combine per partition, hash shuffle into
     /// `num_out` partitions, reduce-side merge. `wire(v)` prices the
     /// map-output records for the shuffle cost model; `merge(a, b)` must
     /// be commutative + associative (the u64-count tables are — that is
     /// what makes the distributed result bit-exact).
+    ///
+    /// This is a stage boundary: any pending narrow chain is fused into
+    /// the shuffle-map tasks (one `Shuffle` stage records both halves),
+    /// and the reducer-side bucket gathering runs as tasks on the pool,
+    /// not as a serial driver loop.
     pub fn reduce_by_key(
         &self,
         label: &str,
         num_out: usize,
-        wire: impl Fn(&V) -> usize + Sync,
-        merge: impl Fn(&mut V, V) + Sync,
+        wire: impl Fn(&V) -> usize + Send + Sync + 'static,
+        merge: impl Fn(&mut V, V) + Send + Sync + 'static,
     ) -> Rdd<(K, V)> {
         let num_out = num_out.max(1);
-        let parts = &self.parts;
+        let merge: Arc<dyn Fn(&mut V, V) + Send + Sync> = Arc::new(merge);
+        let wire: Arc<dyn Fn(&V) -> usize + Send + Sync> = Arc::new(wire);
 
-        // Map side: per-partition combine + hash bucketing, one task per
-        // input partition — bucketing happens *inside* the map task, as
-        // Spark's shuffle writers do, so its cost lands in (parallel)
-        // task time, not on the serial driver.
-        let (combined, map_reports) = run_tasks(parts.len(), self.ctx.task_options, |i| {
-            let mut acc: HashMap<K, V> = HashMap::new();
-            for (k, v) in &parts[i] {
-                match acc.get_mut(k) {
-                    Some(a) => merge(a, v.clone()),
-                    None => {
-                        acc.insert(k.clone(), v.clone());
-                    }
-                }
-            }
-            let mut bytes = 0usize;
-            let mut buckets: Vec<Vec<(K, V)>> = (0..num_out).map(|_| Vec::new()).collect();
-            for (k, v) in acc {
-                bytes += wire(&v);
-                let mut h = std::collections::hash_map::DefaultHasher::new();
-                k.hash(&mut h);
-                buckets[(h.finish() as usize) % num_out].push((k, v));
-            }
-            (buckets, bytes)
-        })
-        .unwrap_or_else(|t| panic!("stage {label}/map: task {t} failed permanently"));
+        // Map side (+ any fused narrow ancestors), through the same
+        // fusion path as map_partitions.
+        let m1 = Arc::clone(&merge);
+        let w1 = Arc::clone(&wire);
+        let (labels, map_stage) = self.fuse_with(label, move |_, part| {
+            map_side_combine(part, num_out, m1.as_ref(), w1.as_ref())
+        });
+        let fused_ops = labels.len();
+        let stage_label = labels.join("+");
+        let (combined, map_reports) = self
+            .ctx
+            .pool()
+            .run_stage_arc(self.num_parts, map_stage)
+            .unwrap_or_else(|t| panic!("stage {stage_label}/map: task {t} failed permanently"));
 
-        // Shuffle: concatenate the per-task buckets (pure moves).
-        let mut shuffle_bytes = 0usize;
-        let mut buckets: Vec<Vec<(K, V)>> = (0..num_out).map(|_| Vec::new()).collect();
-        for (task_buckets, bytes) in combined {
-            shuffle_bytes += bytes;
-            for (b, mut chunk) in task_buckets.into_iter().enumerate() {
-                buckets[b].append(&mut chunk);
+        let shuffle_bytes: usize = combined.iter().map(|(_, b)| *b).sum();
+
+        // Route each map task's bucket `b` to reducer `b`. This is pure
+        // Vec-handle moves on the driver (no element is copied); the
+        // per-reducer chunk lists stay in map-task order so the merge
+        // order (and hence the u64 sums) is deterministic.
+        let mut routed: Vec<Vec<Vec<(K, V)>>> = (0..num_out).map(|_| Vec::new()).collect();
+        for (task_buckets, _) in combined {
+            for (b, chunk) in task_buckets.into_iter().enumerate() {
+                routed[b].push(chunk);
             }
         }
+        let routed = Arc::new(routed);
 
-        // Reduce side: merge within each output partition (one task each).
-        let buckets = Arc::new(buckets);
-        let b2 = Arc::clone(&buckets);
-        let (reduced, red_reports) = run_tasks(num_out, self.ctx.task_options, move |i| {
-            let mut acc: HashMap<K, V> = HashMap::new();
-            for (k, v) in &b2[i] {
-                match acc.get_mut(k) {
-                    Some(a) => merge(a, v.clone()),
-                    None => {
-                        acc.insert(k.clone(), v.clone());
+        // Reduce side: each output partition merges its routed chunks —
+        // one pool task per reducer, so the gathering parallelizes
+        // instead of running on the driver. The routed chunks stay
+        // shared and read-only (records are cloned into the accumulator)
+        // for the same reason Spark keeps shuffle files until the stage
+        // commits: a retried reducer must be able to re-read its input
+        // after a mid-merge panic.
+        let m2 = Arc::clone(&merge);
+        let (reduced, red_reports) = self
+            .ctx
+            .pool()
+            .run_stage(num_out, move |i| {
+                let merge = m2.as_ref();
+                let mut acc: HashMap<K, V> = HashMap::new();
+                for chunk in &routed[i] {
+                    for (k, v) in chunk {
+                        match acc.get_mut(k) {
+                            Some(a) => merge(a, v.clone()),
+                            None => {
+                                acc.insert(k.clone(), v.clone());
+                            }
+                        }
                     }
                 }
-            }
-            acc.into_iter().collect::<Vec<(K, V)>>()
-        })
-        .unwrap_or_else(|t| panic!("stage {label}/reduce: task {t} failed permanently"));
+                acc.into_iter().collect::<Vec<(K, V)>>()
+            })
+            .unwrap_or_else(|t| panic!("stage {stage_label}/reduce: task {t} failed permanently"));
 
-        let mut task_secs: Vec<f64> = map_reports.iter().map(|r| r.secs).collect();
-        task_secs.extend(red_reports.iter().map(|r| r.secs));
         let retries = map_reports
             .iter()
             .chain(&red_reports)
             .map(|r| r.attempts - 1)
             .sum();
         self.ctx.record_stage(StageMetrics {
-            label: label.to_string(),
+            label: stage_label,
             kind: StageKind::Shuffle,
-            task_secs,
+            fused_ops,
+            // The two waves are recorded separately so the virtual-cluster
+            // replay keeps the map → reduce barrier.
+            task_secs: map_reports.iter().map(|r| r.secs).collect(),
+            reduce_task_secs: red_reports.iter().map(|r| r.secs).collect(),
             retries,
             shuffle_bytes,
             collect_bytes: 0,
         });
 
-        Rdd {
-            ctx: Arc::clone(&self.ctx),
-            parts: Arc::new(reduced),
-        }
+        Rdd::materialized(Arc::clone(&self.ctx), reduced)
     }
 }
 
@@ -321,7 +521,8 @@ mod tests {
         let c = ctx();
         let rdd = c.parallelize((0..10).collect::<Vec<i32>>(), 3);
         assert_eq!(rdd.num_partitions(), 3);
-        let sizes: Vec<usize> = (0..3).map(|i| rdd.partition(i).len()).collect();
+        let parts = rdd.partitions();
+        let sizes: Vec<usize> = parts.iter().map(Vec::len).collect();
         assert_eq!(sizes, vec![4, 3, 3]);
         assert_eq!(rdd.count(), 10);
     }
@@ -343,6 +544,96 @@ mod tests {
             odd_sq.collect(),
             (0..20).filter(|x| x % 2 == 1).map(|x| x * x).collect::<Vec<_>>()
         );
+    }
+
+    #[test]
+    fn transformations_are_lazy_until_action() {
+        let c = ctx();
+        let rdd = c.parallelize((0..10).collect::<Vec<i32>>(), 2);
+        let mapped = rdd.map("inc", |x| x + 1);
+        assert_eq!(c.metrics().stages.len(), 0, "no action, no stage");
+        let _ = mapped.collect();
+        let m = c.metrics();
+        assert_eq!(m.stages_of_kind(StageKind::Map), 1);
+        assert_eq!(m.stages_of_kind(StageKind::Collect), 1);
+    }
+
+    #[test]
+    fn narrow_chain_fuses_into_one_stage() {
+        let c = ctx();
+        let rdd = c.parallelize((0..50).collect::<Vec<i32>>(), 5);
+        let out = rdd
+            .map("inc", |x| x + 1)
+            .filter("odd", |x| x % 2 == 1)
+            .map_partitions("sq", |_, xs| xs.iter().map(|x| x * x).collect());
+        assert_eq!(c.metrics().stages.len(), 0, "transformations are lazy");
+        let got = out.collect();
+        let want: Vec<i32> = (0..50)
+            .map(|x| x + 1)
+            .filter(|x| x % 2 == 1)
+            .map(|x| x * x)
+            .collect();
+        assert_eq!(got, want);
+        let m = c.metrics();
+        assert_eq!(m.stages_of_kind(StageKind::Map), 1, "chain fused into one stage");
+        let stage = m.stages.iter().find(|s| s.kind == StageKind::Map).unwrap();
+        assert_eq!(stage.label, "inc+odd+sq");
+        assert_eq!(stage.fused_ops, 3);
+        assert_eq!(stage.task_secs.len(), 5, "one task per partition");
+    }
+
+    #[test]
+    fn forced_rdd_is_memoized_not_recomputed() {
+        let c = ctx();
+        let rdd = c.parallelize((0..10).collect::<Vec<i32>>(), 2).map("m", |x| x * 3);
+        assert_eq!(rdd.count(), 10);
+        let _ = rdd.collect();
+        let _ = rdd.collect();
+        let m = c.metrics();
+        assert_eq!(m.stages_of_kind(StageKind::Map), 1, "stage ran exactly once");
+    }
+
+    #[test]
+    fn derived_rdd_reads_memoized_parent() {
+        // A child built *before* its parent is forced must still pick up
+        // the parent's memoized partitions at action time instead of
+        // re-running the parent's closures.
+        use std::sync::atomic::{AtomicUsize, Ordering};
+
+        let c = ctx();
+        let calls = Arc::new(AtomicUsize::new(0));
+        let c2 = Arc::clone(&calls);
+        let x = c
+            .parallelize((0..8).collect::<Vec<i32>>(), 2)
+            .map_partitions("m", move |_, xs| {
+                c2.fetch_add(1, Ordering::SeqCst);
+                xs.to_vec()
+            });
+        let y = x.map("g", |v| v + 1);
+        assert_eq!(x.count(), 8); // force x: "m" runs once per partition
+        assert_eq!(y.collect(), (1..9).collect::<Vec<i32>>());
+        assert_eq!(
+            calls.load(Ordering::SeqCst),
+            2,
+            "parent closures re-ran instead of reading memoized partitions"
+        );
+    }
+
+    #[test]
+    fn narrow_chain_fuses_into_shuffle_map_side() {
+        let c = ctx();
+        let red = c
+            .parallelize((0..40).collect::<Vec<u32>>(), 4)
+            .map("key", |x| (x % 4, 1u64))
+            .reduce_by_key("sum", 2, |_| 8, |a, b| *a += b);
+        let m = c.metrics();
+        assert_eq!(m.stages.len(), 1, "map fused into the shuffle stage");
+        assert_eq!(m.stages[0].kind, StageKind::Shuffle);
+        assert_eq!(m.stages[0].label, "key+sum");
+        assert_eq!(m.stages[0].fused_ops, 2);
+        let mut out = red.collect();
+        out.sort();
+        assert_eq!(out, vec![(0, 10), (1, 10), (2, 10), (3, 10)]);
     }
 
     #[test]
@@ -374,11 +665,13 @@ mod tests {
     fn metrics_accumulate_per_stage() {
         let c = ctx();
         let rdd = c.parallelize((0..10).collect::<Vec<i32>>(), 2);
-        let _ = rdd.map("a", |x| x + 1);
-        let _ = rdd.map("b", |x| x + 2);
+        let a = rdd.map("a", |x| x + 1);
+        let b = rdd.map("b", |x| x + 2);
+        assert_eq!(a.count() + b.count(), 20);
         let m = c.metrics();
         assert_eq!(m.stages.len(), 2);
         assert_eq!(m.stages[0].label, "a");
+        assert_eq!(m.stages[1].label, "b");
         assert_eq!(m.total_tasks(), 4);
         c.reset_metrics();
         assert_eq!(c.metrics().stages.len(), 0);
@@ -390,7 +683,7 @@ mod tests {
         let b = c.broadcast(vec![1u8, 2, 3], 3);
         let rdd = c.parallelize((0..4).collect::<Vec<i32>>(), 2);
         let bc = b.clone();
-        let out = rdd.map("use-bc", move |x| bc[0] as i32 + x);
+        let out = rdd.map("use-bc", move |x| i32::from(bc[0]) + x);
         assert_eq!(out.collect(), vec![1, 2, 3, 4]);
         assert_eq!(c.metrics().total_broadcast_bytes(), 3);
     }
@@ -413,6 +706,28 @@ mod tests {
     }
 
     #[test]
+    fn identical_results_across_thread_counts() {
+        // Same pipeline, 1-thread vs many-thread pool: bit-identical
+        // output (slot-ordered results + deterministic merge order).
+        let run = |threads: usize| {
+            let c = SparkletContext::with_options(
+                ClusterConfig::with_nodes(2),
+                TaskOptions::with_threads(threads),
+            );
+            let mut out = c
+                .parallelize((0..200).collect::<Vec<u64>>(), 16)
+                .map("key", |x| (x % 7, x * x))
+                .reduce_by_key("sum", 3, |_| 8, |a, b| *a += b)
+                .collect();
+            out.sort();
+            out
+        };
+        let one = run(1);
+        assert_eq!(one, run(4));
+        assert_eq!(one, run(13));
+    }
+
+    #[test]
     #[should_panic(expected = "failed permanently")]
     fn permanent_task_failure_aborts() {
         let c = ctx();
@@ -427,6 +742,7 @@ mod tests {
                 }
                 xs.to_vec()
             })
+            .count() // transformations are lazy: the action triggers the failure
         }));
         std::panic::set_hook(prev);
         match result {

@@ -43,13 +43,23 @@ pub fn simulate_job_time(
 
     for stage in &metrics.stages {
         // Each task pays the launch overhead; stages are barriers (Spark
-        // stage boundaries), so makespans add across stages.
+        // stage boundaries), so makespans add across stages. Within a
+        // shuffle stage the map → reduce hand-off is itself a barrier:
+        // the two waves are scheduled separately, never overlapped.
         let with_overhead: Vec<f64> = stage
             .task_secs
             .iter()
             .map(|t| t + cluster.task_overhead_s)
             .collect();
         compute += lpt_makespan(&with_overhead, slots);
+        if !stage.reduce_task_secs.is_empty() {
+            let reduce_wave: Vec<f64> = stage
+                .reduce_task_secs
+                .iter()
+                .map(|t| t + cluster.task_overhead_s)
+                .collect();
+            compute += lpt_makespan(&reduce_wave, slots);
+        }
 
         match stage.kind {
             StageKind::Map => {}
@@ -88,7 +98,9 @@ mod tests {
             stages: vec![StageMetrics {
                 label: "s".into(),
                 kind,
+                fused_ops: 1,
                 task_secs,
+                reduce_task_secs: vec![],
                 retries: 0,
                 shuffle_bytes: shuffle,
                 collect_bytes: 0,
@@ -113,6 +125,16 @@ mod tests {
         let t2 = simulate_job_time(&jm, &ClusterConfig::with_nodes(2), 0.0);
         let t10 = simulate_job_time(&jm, &ClusterConfig::with_nodes(10), 0.0);
         assert!((t2.total() - t10.total()).abs() < 1e-9);
+    }
+
+    #[test]
+    fn shuffle_waves_do_not_overlap() {
+        // The map → reduce hand-off is a barrier: with plenty of slots,
+        // 1s map tasks + 1s reduce tasks must replay as ~2s, never ~1s.
+        let mut jm = job_with_tasks(vec![1.0; 4], StageKind::Shuffle, 0);
+        jm.stages[0].reduce_task_secs = vec![1.0; 4];
+        let sim = simulate_job_time(&jm, &ClusterConfig::with_nodes(10), 0.0);
+        assert!(sim.compute_secs >= 2.0, "waves overlapped: {}", sim.compute_secs);
     }
 
     #[test]

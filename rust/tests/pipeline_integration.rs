@@ -143,13 +143,21 @@ fn run_metrics_are_consistent() {
     let dd = Arc::new(discretize_dataset(&ds).unwrap());
     let run = DiCfs::native(DiCfsConfig::for_scheme(Partitioning::Horizontal, 4)).select(&dd);
     let m = &run.metrics;
-    // every search iteration launches localCTables/mergeCTables/computeSU
-    let ctable_stages = m.stages.iter().filter(|s| s.label == "localCTables").count();
-    let merge_stages = m.stages.iter().filter(|s| s.label == "mergeCTables").count();
+    // every search iteration launches one fused localCTables+mergeCTables
+    // shuffle stage plus a computeSU map stage
+    let shuffle_stages = m
+        .stages
+        .iter()
+        .filter(|s| s.label == "localCTables+mergeCTables")
+        .count();
     let su_stages = m.stages.iter().filter(|s| s.label == "computeSU").count();
-    assert_eq!(ctable_stages, merge_stages);
-    assert_eq!(merge_stages, su_stages);
-    assert!(ctable_stages >= run.result.iterations.min(1));
+    assert_eq!(shuffle_stages, su_stages);
+    assert!(shuffle_stages >= run.result.iterations.min(1));
+    assert!(m
+        .stages
+        .iter()
+        .filter(|s| s.label == "localCTables+mergeCTables")
+        .all(|s| s.fused_ops == 2));
     assert!(run.sim.total() > 0.0);
     assert!(run.wall_secs >= run.sim.driver_secs);
 }

@@ -1,11 +1,12 @@
-//! sparklet substrate integration: multi-stage jobs, shuffle semantics,
-//! failure injection + retry, metrics faithfulness, topology replay.
+//! sparklet substrate integration: multi-stage jobs, lazy scheduling +
+//! stage fusion, shuffle semantics, failure injection + retry, metrics
+//! faithfulness, determinism across pool sizes, topology replay.
 
 use std::sync::atomic::{AtomicU32, Ordering};
 use std::sync::Arc;
 
 use dicfs::sparklet::{
-    simulate_job_time, ClusterConfig, SparkletContext, StageKind,
+    simulate_job_time, ClusterConfig, SparkletContext, StageKind, TaskOptions,
 };
 
 #[test]
@@ -32,8 +33,94 @@ fn word_count_pipeline() {
         ]
     );
     let m = ctx.metrics();
-    assert_eq!(m.stages.len(), 3); // map, shuffle, collect
-    assert_eq!(m.stages[1].kind, StageKind::Shuffle);
+    // The lazy scheduler fuses `pair` into the shuffle-map side, so the
+    // job is two stages: the fused shuffle and the collect.
+    assert_eq!(m.stages.len(), 2);
+    assert_eq!(m.stages[0].kind, StageKind::Shuffle);
+    assert_eq!(m.stages[0].label, "pair+count");
+    assert_eq!(m.stages[0].fused_ops, 2);
+    assert_eq!(m.stages[1].kind, StageKind::Collect);
+}
+
+#[test]
+fn chained_narrow_ops_record_exactly_one_map_stage() {
+    // The fusion acceptance check: map → filter → mapPartitions →
+    // collect is ONE Map stage in the metrics, plus the collect.
+    let ctx = SparkletContext::new(ClusterConfig::with_nodes(2));
+    let rdd = ctx.parallelize((0..300).collect::<Vec<i64>>(), 6);
+    let out = rdd
+        .map("shift", |x| x + 7)
+        .filter("keep", |x| x % 5 != 0)
+        .map_partitions("pack", |_, xs| xs.iter().map(|x| x * 2).collect());
+    assert!(ctx.metrics().stages.is_empty(), "lazy until the action");
+    let got = out.collect();
+    let want: Vec<i64> = (0..300)
+        .map(|x| x + 7)
+        .filter(|x| x % 5 != 0)
+        .map(|x| x * 2)
+        .collect();
+    assert_eq!(got, want);
+    let m = ctx.metrics();
+    assert_eq!(m.stages_of_kind(StageKind::Map), 1, "exactly one Map stage");
+    assert_eq!(m.stages_of_kind(StageKind::Collect), 1);
+    let stage = m.stages.iter().find(|s| s.kind == StageKind::Map).unwrap();
+    assert_eq!(stage.label, "shift+keep+pack");
+    assert_eq!(stage.fused_ops, 3);
+    assert_eq!(stage.task_secs.len(), 6, "one fused task per partition");
+}
+
+#[test]
+fn fused_and_unfused_runs_agree() {
+    // Forcing every intermediate step (eager mode) must give the same
+    // collected output as the fused lazy run — fusion is an optimization,
+    // never a semantic change.
+    let fused_ctx = SparkletContext::new(ClusterConfig::with_nodes(2));
+    let fused = fused_ctx
+        .parallelize((0..500).collect::<Vec<u64>>(), 9)
+        .map("a", |x| x * 3)
+        .filter("b", |x| x % 2 == 1)
+        .map_partitions("c", |_, xs| xs.iter().map(|x| x + 1).collect());
+    let fused_out = fused.collect();
+
+    let eager_ctx = SparkletContext::new(ClusterConfig::with_nodes(2));
+    let s1 = eager_ctx
+        .parallelize((0..500).collect::<Vec<u64>>(), 9)
+        .map("a", |x| x * 3);
+    let _ = s1.count(); // force: materialize the intermediate
+    let s2 = s1.filter("b", |x| x % 2 == 1);
+    let _ = s2.count();
+    let s3 = s2.map_partitions("c", |_, xs| xs.iter().map(|x| x + 1).collect());
+    let eager_out = s3.collect();
+
+    assert_eq!(fused_out, eager_out);
+    // ...but the stage log shows the difference: 1 fused Map stage vs 3.
+    assert_eq!(fused_ctx.metrics().stages_of_kind(StageKind::Map), 1);
+    assert_eq!(eager_ctx.metrics().stages_of_kind(StageKind::Map), 3);
+}
+
+#[test]
+fn deterministic_across_pool_sizes() {
+    // The full pipeline shape (narrow chain + shuffle + collect) must be
+    // invariant to TaskOptions::threads.
+    let run = |threads: usize| {
+        let ctx = SparkletContext::with_options(
+            ClusterConfig::with_nodes(3),
+            TaskOptions::with_threads(threads),
+        );
+        let mut out = ctx
+            .parallelize((0..1000).collect::<Vec<u64>>(), 24)
+            .map("mix", |x| x ^ (x << 3))
+            .filter("odd", |x| x % 2 == 1)
+            .map("key", |x| (x % 11, *x))
+            .reduce_by_key("max", 4, |_| 8, |a, b| *a = (*a).max(b))
+            .collect();
+        out.sort();
+        out
+    };
+    let base = run(1);
+    for threads in [2, 5, 16] {
+        assert_eq!(base, run(threads), "{threads} threads diverged");
+    }
 }
 
 #[test]
@@ -43,9 +130,6 @@ fn flaky_tasks_are_retried_and_reported() {
     let attempts = Arc::new(AtomicU32::new(0));
     let a2 = Arc::clone(&attempts);
 
-    // silence expected panic output from the injected failures
-    let prev = std::panic::take_hook();
-    std::panic::set_hook(Box::new(|_| {}));
     let out = rdd.map_partitions("flaky", move |i, xs| {
         // partition 3 fails twice before succeeding
         if i == 3 && a2.fetch_add(1, Ordering::SeqCst) < 2 {
@@ -53,14 +137,20 @@ fn flaky_tasks_are_retried_and_reported() {
         }
         xs.iter().map(|x| x * 10).collect()
     });
+
+    // silence expected panic output while the action forces the stage
+    let prev = std::panic::take_hook();
+    std::panic::set_hook(Box::new(|_| {}));
+    let n = out.count();
     std::panic::set_hook(prev);
 
-    assert_eq!(out.count(), 16);
+    assert_eq!(n, 16);
     let m = ctx.metrics();
     assert_eq!(m.total_retries(), 2, "both injected failures retried");
-    // results are still complete and correct
+    // results are still complete and correct (memoized, not recomputed)
     let collected = out.collect();
     assert!(collected.contains(&150));
+    assert_eq!(ctx.metrics().stages_of_kind(StageKind::Map), 1);
 }
 
 #[test]
@@ -110,7 +200,7 @@ fn topology_replay_is_monotone_in_slots() {
     // topologies: compute time must be non-increasing in cluster size.
     let ctx = SparkletContext::new(ClusterConfig::with_nodes(2));
     let rdd = ctx.parallelize((0..240u64).collect::<Vec<_>>(), 240);
-    let _ = rdd.map_partitions("work", |_, xs| {
+    let work = rdd.map_partitions("work", |_, xs| {
         // measurable per-task work
         let mut acc = 0u64;
         for x in xs {
@@ -120,7 +210,9 @@ fn topology_replay_is_monotone_in_slots() {
         }
         vec![acc]
     });
+    assert_eq!(work.count(), 240); // action: run the fused stage
     let metrics = ctx.metrics();
+    assert_eq!(metrics.stages_of_kind(StageKind::Map), 1);
     let mut last = f64::INFINITY;
     for nodes in [1, 2, 4, 8, 10] {
         let sim = simulate_job_time(&metrics, &ClusterConfig::with_nodes(nodes), 0.0);
@@ -146,10 +238,11 @@ fn broadcast_value_visible_in_all_partitions() {
 fn stage_metrics_capture_work_not_just_counts() {
     let ctx = SparkletContext::new(ClusterConfig::with_nodes(2));
     let rdd = ctx.parallelize((0..4u32).collect::<Vec<_>>(), 2);
-    let _ = rdd.map_partitions("sleepy", |_, xs| {
+    let slept = rdd.map_partitions("sleepy", |_, xs| {
         std::thread::sleep(std::time::Duration::from_millis(10));
         xs.to_vec()
     });
+    let _ = slept.count(); // action: run the stage
     let m = ctx.metrics();
     let stage = &m.stages[0];
     assert_eq!(stage.task_secs.len(), 2);
