@@ -1,0 +1,261 @@
+//! Ablation for the multi-query service (DESIGN.md §10): cold vs warm
+//! query cost and cross-query SU reuse.
+//!
+//! Workload: two tenant datasets × four query configurations each.
+//! * **cold** — every query gets a fresh service (empty cache): the
+//!   per-search on-demand baseline.
+//! * **warm** — one shared service; all queries run concurrently and
+//!   share each dataset's SU cache (misses coalesce in the scheduler).
+//! * **re-warm** — the same specs replayed against the now-hot service:
+//!   every query must compute zero pairs.
+//!
+//! The equivalence invariant (selected features identical to an isolated
+//! sequential run) is asserted for **every** query in every phase, and
+//! the warm workload must compute strictly fewer distinct SU pairs than
+//! the cold one.
+//!
+//! Output: table + `bench_out/ablation_service.csv`.
+
+use std::sync::Arc;
+
+use dicfs::cfs::best_first::CfsConfig;
+use dicfs::cfs::SequentialCfs;
+use dicfs::data::columnar::DiscreteDataset;
+use dicfs::data::synth::{by_name, SynthConfig};
+use dicfs::discretize::discretize_dataset;
+use dicfs::harness::{bench_scale, report};
+use dicfs::serve::{DicfsService, QuerySpec, ServeScheme, ServiceConfig};
+use dicfs::sparklet::ClusterConfig;
+use dicfs::util::chart::table;
+
+struct Tenant {
+    name: &'static str,
+    scheme: ServeScheme,
+    data: Arc<DiscreteDataset>,
+}
+
+fn tenants(scale: f64) -> Vec<Tenant> {
+    let rows = |base: usize| ((base as f64 * scale) as usize).max(300);
+    let higgs = by_name(
+        "higgs",
+        &SynthConfig {
+            rows: rows(2_000),
+            seed: 17,
+            features: Some(14),
+        },
+    );
+    let epsilon = by_name(
+        "epsilon",
+        &SynthConfig {
+            rows: rows(1_200),
+            seed: 29,
+            features: Some(24),
+        },
+    );
+    vec![
+        Tenant {
+            name: "higgs-hp",
+            scheme: ServeScheme::Horizontal,
+            data: Arc::new(discretize_dataset(&higgs).unwrap()),
+        },
+        Tenant {
+            name: "epsilon-vp",
+            scheme: ServeScheme::Vertical,
+            data: Arc::new(discretize_dataset(&epsilon).unwrap()),
+        },
+    ]
+}
+
+/// The per-tenant query mix: distinct configs exercise overlapping but
+/// not identical search trajectories.
+fn query_mix() -> Vec<(&'static str, CfsConfig)> {
+    let d = CfsConfig::default();
+    vec![
+        ("default", d),
+        ("fails3", CfsConfig { max_fails: 3, ..d }),
+        (
+            "no-lp",
+            CfsConfig {
+                locally_predictive: false,
+                ..d
+            },
+        ),
+        (
+            "queue3",
+            CfsConfig {
+                queue_capacity: 3,
+                ..d
+            },
+        ),
+    ]
+}
+
+fn service(max_inflight: usize) -> DicfsService {
+    DicfsService::new(ServiceConfig {
+        cluster: ClusterConfig::with_nodes(4),
+        max_inflight_jobs: max_inflight,
+    })
+}
+
+fn main() {
+    let scale = bench_scale();
+    println!("== Ablation: multi-query service, cold vs warm (scale {scale}) ==\n");
+
+    let tenants = tenants(scale);
+    let mix = query_mix();
+
+    // Isolated sequential baselines — the ground truth every phase's
+    // selections are checked against.
+    let baselines: Vec<Vec<Vec<usize>>> = tenants
+        .iter()
+        .map(|t| {
+            mix.iter()
+                .map(|(_, cfs)| SequentialCfs::new(*cfs).select_discrete(&t.data).selected)
+                .collect()
+        })
+        .collect();
+
+    // COLD: a fresh service (empty cache) per query.
+    let mut cold = Vec::new(); // (computed, secs) per (tenant, config)
+    for (ti, t) in tenants.iter().enumerate() {
+        let mut per_tenant = Vec::new();
+        for (qi, (_, cfs)) in mix.iter().enumerate() {
+            let svc = service(2);
+            let id = svc.register_discrete(t.name, Arc::clone(&t.data), t.scheme, None);
+            let r = svc.query(&QuerySpec {
+                dataset: id,
+                cfs: *cfs,
+            });
+            assert_eq!(
+                r.result.selected, baselines[ti][qi],
+                "cold equivalence broken: {} {}",
+                t.name, mix[qi].0
+            );
+            per_tenant.push((r.cache.computed, r.wall_secs));
+        }
+        cold.push(per_tenant);
+    }
+
+    // WARM: one service, datasets registered once, all queries at once.
+    let svc = service(2);
+    let ids: Vec<usize> = tenants
+        .iter()
+        .map(|t| svc.register_discrete(t.name, Arc::clone(&t.data), t.scheme, None))
+        .collect();
+    let specs: Vec<QuerySpec> = ids
+        .iter()
+        .flat_map(|&id| {
+            mix.iter().map(move |(_, cfs)| QuerySpec {
+                dataset: id,
+                cfs: *cfs,
+            })
+        })
+        .collect();
+    let warm = svc.run_concurrent(&specs);
+    for (i, r) in warm.iter().enumerate() {
+        let (ti, qi) = (i / mix.len(), i % mix.len());
+        assert_eq!(
+            r.result.selected, baselines[ti][qi],
+            "warm equivalence broken: {} {}",
+            tenants[ti].name, mix[qi].0
+        );
+    }
+
+    // RE-WARM: same specs against the hot cache — all hits, no compute.
+    let rewarm = svc.run_concurrent(&specs);
+    for (i, r) in rewarm.iter().enumerate() {
+        let (ti, qi) = (i / mix.len(), i % mix.len());
+        assert_eq!(
+            r.result.selected, baselines[ti][qi],
+            "re-warm equivalence broken: {} {}",
+            tenants[ti].name, mix[qi].0
+        );
+        assert_eq!(r.cache.computed, 0, "re-warm query computed pairs");
+    }
+
+    // The headline numbers: distinct SU pairs computed per workload.
+    let cold_distinct: usize = cold.iter().flatten().map(|&(c, _)| c).sum();
+    let warm_distinct: usize = ids
+        .iter()
+        .map(|&id| svc.cache_report(id).unwrap().distinct_pairs)
+        .sum();
+    assert!(
+        warm_distinct < cold_distinct,
+        "cache sharing must compute strictly fewer distinct pairs \
+         (warm {warm_distinct} vs cold {cold_distinct})"
+    );
+
+    let mut trows = Vec::new();
+    let mut csv = Vec::new();
+    for (i, spec_r) in warm.iter().enumerate() {
+        let (ti, qi) = (i / mix.len(), i % mix.len());
+        let (cold_c, cold_s) = cold[ti][qi];
+        let re = &rewarm[i];
+        trows.push(vec![
+            tenants[ti].name.to_string(),
+            mix[qi].0.to_string(),
+            cold_c.to_string(),
+            spec_r.cache.computed.to_string(),
+            spec_r.cache.hits.to_string(),
+            re.cache.hits.to_string(),
+            format!(
+                "{:.1}x",
+                cold_s / re.wall_secs.max(1e-9)
+            ),
+        ]);
+        csv.push(vec![
+            tenants[ti].name.to_string(),
+            mix[qi].0.to_string(),
+            cold_c.to_string(),
+            format!("{cold_s:.5}"),
+            spec_r.cache.computed.to_string(),
+            spec_r.cache.hits.to_string(),
+            format!("{:.5}", spec_r.wall_secs),
+            re.cache.computed.to_string(),
+            format!("{:.5}", re.wall_secs),
+        ]);
+    }
+    let path = report::write_csv(
+        "ablation_service.csv",
+        &[
+            "dataset",
+            "config",
+            "cold_computed",
+            "cold_secs",
+            "warm_computed",
+            "warm_hits",
+            "warm_secs",
+            "rewarm_computed",
+            "rewarm_secs",
+        ],
+        &csv,
+    );
+    println!(
+        "{}",
+        table(
+            &[
+                "dataset",
+                "config",
+                "cold computed",
+                "warm computed",
+                "warm hits",
+                "re-warm hits",
+                "cold/re-warm speedup"
+            ],
+            &trows
+        )
+    );
+
+    let jobs = svc.job_log();
+    let coalesced = jobs.iter().filter(|j| j.coalesced_requests > 1).count();
+    println!(
+        "distinct SU pairs: cold {} vs shared {} ({:.1}% saved); {} jobs, {} coalesced >1 request",
+        cold_distinct,
+        warm_distinct,
+        100.0 * (1.0 - warm_distinct as f64 / cold_distinct as f64),
+        jobs.len(),
+        coalesced
+    );
+    println!("equivalence: every query matched its isolated sequential run (asserted)");
+    println!("  data: {}\n", path.display());
+}

@@ -18,7 +18,7 @@ use crate::cfs::locally_predictive::add_locally_predictive;
 use crate::cfs::subset::SearchState;
 use crate::cfs::Correlator;
 use crate::core::{FeatureId, SelectionResult, CLASS_ID};
-use crate::correlation::CorrelationCache;
+use crate::correlation::{CorrelationCache, SuCache};
 
 /// Search configuration (defaults = the paper's experimental setup).
 #[derive(Debug, Clone, Copy)]
@@ -63,13 +63,16 @@ impl BestFirstSearch {
         result
     }
 
-    /// [`Self::run`] with an externally owned cache (exposes hit/miss
-    /// statistics to the ablation harness).
+    /// [`Self::run`] with an external [`SuCache`] — an owned
+    /// [`CorrelationCache`] (exposes hit/miss statistics to the ablation
+    /// harness) or a per-query handle over a shared cache (the
+    /// multi-query service, where concurrent searches reuse each other's
+    /// correlations).
     pub fn run_with_cache(
         &self,
         m: usize,
         correlator: &mut dyn Correlator,
-        cache: &mut CorrelationCache,
+        cache: &mut dyn SuCache,
     ) -> SelectionResult {
         let mut queue: Vec<SearchState> = vec![SearchState::empty()];
         let mut visited: HashSet<Vec<FeatureId>> = HashSet::new();
@@ -138,7 +141,7 @@ fn expand_batch(
     head: &SearchState,
     candidates: &[FeatureId],
     correlator: &mut dyn Correlator,
-    cache: &mut CorrelationCache,
+    cache: &mut dyn SuCache,
     visited: &mut HashSet<Vec<FeatureId>>,
 ) -> Vec<SearchState> {
     // Pair list: per candidate, (candidate, class) then (candidate, member)
@@ -150,7 +153,7 @@ fn expand_batch(
             pairs.push((c, g));
         }
     }
-    let values = cache.get_or_compute_batch(&pairs, |missing| correlator.compute(missing));
+    let values = cache.batch(&pairs, &mut |missing| correlator.compute(missing));
 
     let stride = 1 + head.features.len();
     let mut out = Vec::with_capacity(candidates.len());

@@ -11,7 +11,7 @@
 
 use crate::cfs::Correlator;
 use crate::core::{FeatureId, CLASS_ID};
-use crate::correlation::CorrelationCache;
+use crate::correlation::SuCache;
 
 /// Extend `selected` in place; returns the features added, in admission
 /// order. Correlations flow through the same cache as the search (they
@@ -21,7 +21,7 @@ pub fn add_locally_predictive(
     m: usize,
     selected: &mut Vec<FeatureId>,
     correlator: &mut dyn Correlator,
-    cache: &mut CorrelationCache,
+    cache: &mut dyn SuCache,
 ) -> Vec<FeatureId> {
     let outside: Vec<FeatureId> = (0..m).filter(|f| !selected.contains(f)).collect();
     if outside.is_empty() {
@@ -32,7 +32,7 @@ pub fn add_locally_predictive(
     // already — the first expansion computed all of them).
     let class_pairs: Vec<(FeatureId, FeatureId)> =
         outside.iter().map(|&f| (f, CLASS_ID)).collect();
-    let rcf = cache.get_or_compute_batch(&class_pairs, |miss| correlator.compute(miss));
+    let rcf = cache.batch(&class_pairs, &mut |miss| correlator.compute(miss));
 
     // Descending class correlation, deterministic tie-break on id.
     let mut order: Vec<(f64, FeatureId)> =
@@ -47,7 +47,7 @@ pub fn add_locally_predictive(
         // One batch: f against every currently selected feature.
         let pairs: Vec<(FeatureId, FeatureId)> =
             selected.iter().map(|&g| (f, g)).collect();
-        let rff = cache.get_or_compute_batch(&pairs, |miss| correlator.compute(miss));
+        let rff = cache.batch(&pairs, &mut |miss| correlator.compute(miss));
         let max_rff = rff.iter().cloned().fold(0.0f64, f64::max);
         if f_rcf > max_rff {
             let pos = selected.partition_point(|&g| g < f);
@@ -61,6 +61,7 @@ pub fn add_locally_predictive(
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::correlation::CorrelationCache;
     use std::collections::HashMap;
 
     struct MapCorrelator(HashMap<(FeatureId, FeatureId), f64>);

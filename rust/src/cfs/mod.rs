@@ -16,6 +16,11 @@
 //! paper's "exactly the same features" equivalence holds by construction
 //! as long as the correlators return identical SU values, which the
 //! integration tests assert.
+//!
+//! [`SharedCorrelator`] is the `&self` (thread-safe) form of the same
+//! contract: the hp/vp correlators implement it so one instance can
+//! serve many concurrent searches in the multi-query service
+//! ([`crate::serve`]).
 
 pub mod best_first;
 pub mod locally_predictive;
@@ -37,4 +42,17 @@ use crate::core::FeatureId;
 pub trait Correlator {
     /// Compute correlations for a batch of attribute pairs.
     fn compute(&mut self, pairs: &[(FeatureId, FeatureId)]) -> Vec<f64>;
+}
+
+/// A thread-safe correlation service: the same contract as [`Correlator`]
+/// but through `&self`, so one instance can serve many concurrent
+/// searches over `Arc` state.
+///
+/// The DiCFS hp/vp correlators implement this (their distributed jobs
+/// never mutate driver-side state), which is what lets the multi-query
+/// service ([`crate::serve`]) keep one correlator per registered dataset
+/// and coalesce cache misses from concurrent queries into shared jobs.
+pub trait SharedCorrelator: Send + Sync {
+    /// Compute correlations for a batch of attribute pairs.
+    fn compute_batch(&self, pairs: &[(FeatureId, FeatureId)]) -> Vec<f64>;
 }

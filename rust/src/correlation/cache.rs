@@ -1,34 +1,59 @@
-//! On-demand correlation cache — the paper's §5 key optimization.
+//! On-demand correlation caches — the paper's §5 key optimization.
 //!
 //! "trying to calculate all correlations in any dataset with a high number
 //! of features and instances is prohibitive; [...] a very low percentage of
 //! correlations is actually used during the search and on-demand
 //! correlation calculation is around 100 times faster".
 //!
-//! The best-first driver asks the cache for a *batch* of pairs at each
+//! The best-first driver asks a cache for a *batch* of pairs at each
 //! expansion; only the misses are forwarded (still batched) to the
 //! underlying correlator — which is what makes a single distributed job per
-//! search step possible. Hit/miss counters feed the `ablation_ondemand`
-//! bench that reproduces the claim.
+//! search step possible. Two implementations of the [`SuCache`] funnel:
+//!
+//! * [`CorrelationCache`] — the single-search cache every standalone
+//!   `select` run owns. Hit/miss counters feed the `ablation_ondemand`
+//!   bench that reproduces the claim.
+//! * [`SharedSuCache`] — the thread-safe, interior-mutability variant the
+//!   multi-query service (`crate::serve`) keeps alive per registered
+//!   dataset, so concurrent searches hit each other's correlations.
+//!   Statistics are **per query handle** ([`SuCacheHandle`]): `requested`
+//!   / `hits` / `computed` describe one search, never the union of every
+//!   search that ever touched the shared map (see
+//!   [`CacheStats::fraction_of_full_matrix`]). The number of distinct
+//!   pairs in the shared map is reported separately by
+//!   [`SharedSuCache::len`].
 
-use std::collections::HashMap;
+use std::collections::{HashMap, HashSet};
+use std::sync::{Arc, RwLock};
 
 use crate::core::{pair_key, FeatureId};
 
-/// Cache statistics for the on-demand ablation.
+/// Cache statistics for the on-demand ablation and per-query reporting.
+///
+/// Under cache *sharing* these counters are scoped to one query handle:
+/// `requested` counts the pairs one search asked for, `hits` the pairs it
+/// was served without computation (whether warmed by itself or by another
+/// query), `computed` the misses it forwarded to a correlator. Summing
+/// handles therefore never double-counts a query's traffic into another
+/// query's statistics.
 #[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
 pub struct CacheStats {
     /// Pairs requested by the search (including repeats).
     pub requested: usize,
     /// Pairs served from the cache.
     pub hits: usize,
-    /// Distinct pairs actually computed.
+    /// Distinct pairs this search forwarded to its correlator.
     pub computed: usize,
 }
 
 impl CacheStats {
-    /// Fraction of the full `C(m+1, 2)` correlation matrix that was
-    /// actually computed for a dataset with `m` features (+ class).
+    /// Fraction of the full `C(m+1, 2)` correlation matrix that this
+    /// search computed for a dataset with `m` features (+ class).
+    ///
+    /// The statistics are per search (per query handle when the cache is
+    /// shared), so the fraction stays meaningful under the multi-query
+    /// service: a warm query that hit everything reports `0.0` here even
+    /// though the shared map already holds many pairs.
     pub fn fraction_of_full_matrix(&self, m: usize) -> f64 {
         let full = (m + 1) * m / 2;
         if full == 0 {
@@ -37,9 +62,40 @@ impl CacheStats {
             self.computed as f64 / full as f64
         }
     }
+
+    /// Hit rate over all requests (`0.0` when nothing was requested).
+    pub fn hit_rate(&self) -> f64 {
+        if self.requested == 0 {
+            0.0
+        } else {
+            self.hits as f64 / self.requested as f64
+        }
+    }
 }
 
-/// Symmetric, on-demand correlation cache.
+/// The single funnel through which every correlation in the system flows.
+///
+/// Sequential CFS, DiCFS-hp, DiCFS-vp and the multi-query service differ
+/// only in the `compute` callback they plug in and in which implementor
+/// backs the funnel: [`CorrelationCache`] (one search, owned) or
+/// [`SuCacheHandle`] (one query over a [`SharedSuCache`]).
+pub trait SuCache {
+    /// Serve `pairs`, calling `compute` at most once with the
+    /// (deduplicated, insertion-ordered, canonically-keyed) list of
+    /// misses. `compute` must return one value per missing pair, in
+    /// order.
+    fn batch(
+        &mut self,
+        pairs: &[(FeatureId, FeatureId)],
+        compute: &mut dyn FnMut(&[(FeatureId, FeatureId)]) -> Vec<f64>,
+    ) -> Vec<f64>;
+
+    /// Statistics of the requests served through this cache (per query
+    /// handle when the backing store is shared).
+    fn stats(&self) -> CacheStats;
+}
+
+/// Symmetric, on-demand correlation cache owned by a single search.
 #[derive(Debug, Default)]
 pub struct CorrelationCache {
     map: HashMap<(FeatureId, FeatureId), f64>,
@@ -64,11 +120,8 @@ impl CorrelationCache {
 
     /// Serve `pairs`, calling `compute` once with the (deduplicated,
     /// insertion-ordered) list of misses. `compute` must return one value
-    /// per missing pair, in order.
-    ///
-    /// This is the single funnel through which every correlation in the
-    /// system flows — sequential CFS, DiCFS-hp and DiCFS-vp only differ in
-    /// the `compute` they plug in.
+    /// per missing pair, in order. See [`SuCache::batch`] for the
+    /// dyn-friendly form the search drivers use.
     pub fn get_or_compute_batch(
         &mut self,
         pairs: &[(FeatureId, FeatureId)],
@@ -77,10 +130,10 @@ impl CorrelationCache {
         self.stats.requested += pairs.len();
 
         let mut missing: Vec<(FeatureId, FeatureId)> = Vec::new();
-        let mut seen: HashMap<(FeatureId, FeatureId), ()> = HashMap::new();
+        let mut seen: HashSet<(FeatureId, FeatureId)> = HashSet::new();
         for &(a, b) in pairs {
             let k = pair_key(a, b);
-            if !self.map.contains_key(&k) && seen.insert(k, ()).is_none() {
+            if !self.map.contains_key(&k) && seen.insert(k) {
                 missing.push(k);
             }
         }
@@ -120,6 +173,188 @@ impl CorrelationCache {
     /// True when nothing is cached.
     pub fn is_empty(&self) -> bool {
         self.map.is_empty()
+    }
+}
+
+impl SuCache for CorrelationCache {
+    fn batch(
+        &mut self,
+        pairs: &[(FeatureId, FeatureId)],
+        compute: &mut dyn FnMut(&[(FeatureId, FeatureId)]) -> Vec<f64>,
+    ) -> Vec<f64> {
+        self.get_or_compute_batch(pairs, |missing| compute(missing))
+    }
+
+    fn stats(&self) -> CacheStats {
+        self.stats
+    }
+}
+
+/// Thread-safe SU cache shared by every query on one registered dataset.
+///
+/// Values are held behind an `RwLock`; queries interact through
+/// [`SuCacheHandle`]s, which carry the per-query statistics. Inserting the
+/// same pair twice is harmless by construction: SU is a pure function of
+/// the dataset and every engine in this repo computes it bit-identically
+/// (DESIGN.md §5), so concurrent writers can only agree.
+#[derive(Debug, Clone, Default)]
+pub struct SharedSuCache {
+    map: Arc<RwLock<HashMap<(FeatureId, FeatureId), f64>>>,
+}
+
+impl SharedSuCache {
+    /// Empty shared cache.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// A fresh per-query handle over this shared map (statistics start at
+    /// zero for each handle).
+    pub fn handle(&self) -> SuCacheHandle {
+        SuCacheHandle {
+            shared: self.clone(),
+            stats: CacheStats::default(),
+        }
+    }
+
+    /// Look up a single pair (symmetric).
+    pub fn get(&self, a: FeatureId, b: FeatureId) -> Option<f64> {
+        self.map.read().unwrap().get(&pair_key(a, b)).copied()
+    }
+
+    /// Look up a batch under a single read guard (one lock acquisition
+    /// however long the batch). Returns `None` if any pair is missing.
+    pub fn get_batch(&self, pairs: &[(FeatureId, FeatureId)]) -> Option<Vec<f64>> {
+        let map = self.map.read().unwrap();
+        pairs
+            .iter()
+            .map(|&(a, b)| map.get(&pair_key(a, b)).copied())
+            .collect()
+    }
+
+    /// Insert a batch of computed values under canonical keys. `pairs`
+    /// and `values` must be the same length.
+    ///
+    /// Skips the write lock entirely when every pair is already present —
+    /// the common case for query handles whose misses were published by a
+    /// coalesced scheduler job moments earlier — so publishing never
+    /// blocks other queries' read-guard hot path without need.
+    pub fn insert_batch(&self, pairs: &[(FeatureId, FeatureId)], values: &[f64]) {
+        assert_eq!(pairs.len(), values.len(), "pair/value length mismatch");
+        {
+            let map = self.map.read().unwrap();
+            if pairs
+                .iter()
+                .all(|&(a, b)| map.contains_key(&pair_key(a, b)))
+            {
+                return;
+            }
+        }
+        let mut map = self.map.write().unwrap();
+        for (&(a, b), &v) in pairs.iter().zip(values) {
+            map.insert(pair_key(a, b), v);
+        }
+    }
+
+    /// Of the given pairs, return those not yet cached (canonical keys,
+    /// input order) — one read-guard acquisition for the whole scan.
+    pub fn missing_of(&self, pairs: &[(FeatureId, FeatureId)]) -> Vec<(FeatureId, FeatureId)> {
+        let map = self.map.read().unwrap();
+        pairs
+            .iter()
+            .map(|&(a, b)| pair_key(a, b))
+            .filter(|k| !map.contains_key(k))
+            .collect()
+    }
+
+    /// Number of distinct pairs ever computed into this cache — the
+    /// service-level "distinct SU pairs" metric (per-query `computed`
+    /// lives on the handles).
+    pub fn len(&self) -> usize {
+        self.map.read().unwrap().len()
+    }
+
+    /// True when no pair has been computed yet.
+    pub fn is_empty(&self) -> bool {
+        self.map.read().unwrap().is_empty()
+    }
+}
+
+/// One query's view of a [`SharedSuCache`]: shares the value map with
+/// every other handle, owns its own [`CacheStats`].
+#[derive(Debug)]
+pub struct SuCacheHandle {
+    shared: SharedSuCache,
+    stats: CacheStats,
+}
+
+impl SuCacheHandle {
+    /// The shared cache this handle draws from.
+    pub fn shared(&self) -> &SharedSuCache {
+        &self.shared
+    }
+}
+
+impl SuCache for SuCacheHandle {
+    fn batch(
+        &mut self,
+        pairs: &[(FeatureId, FeatureId)],
+        compute: &mut dyn FnMut(&[(FeatureId, FeatureId)]) -> Vec<f64>,
+    ) -> Vec<f64> {
+        self.stats.requested += pairs.len();
+
+        // One pass under one read guard: collect found values and the
+        // deduplicated miss list together, so a fully-warm batch (the
+        // service's hot path) costs a single lock acquisition and one
+        // hash lookup per pair. The lock is released before `compute`,
+        // which may block on a coalesced distributed job.
+        let mut found: Vec<Option<f64>> = Vec::with_capacity(pairs.len());
+        let mut missing: Vec<(FeatureId, FeatureId)> = Vec::new();
+        {
+            let map = self.shared.map.read().unwrap();
+            let mut seen: HashSet<(FeatureId, FeatureId)> = HashSet::new();
+            for &(a, b) in pairs {
+                let k = pair_key(a, b);
+                let v = map.get(&k).copied();
+                if v.is_none() && seen.insert(k) {
+                    missing.push(k);
+                }
+                found.push(v);
+            }
+        }
+        self.stats.hits += pairs.len() - missing.len();
+
+        if missing.is_empty() {
+            return found.into_iter().map(|v| v.expect("all hits")).collect();
+        }
+
+        let values = compute(&missing);
+        assert_eq!(
+            values.len(),
+            missing.len(),
+            "correlator returned {} values for {} pairs",
+            values.len(),
+            missing.len()
+        );
+        self.stats.computed += missing.len();
+        // Another query may have inserted some of these pairs while we
+        // computed; the values are identical (pure function of the
+        // dataset), so overwriting is benign.
+        self.shared.insert_batch(&missing, &values);
+
+        // Patch the holes from the just-computed values — no second trip
+        // through the shared map.
+        let patch: HashMap<(FeatureId, FeatureId), f64> =
+            missing.into_iter().zip(values).collect();
+        pairs
+            .iter()
+            .zip(found)
+            .map(|(&(a, b), v)| v.unwrap_or_else(|| patch[&pair_key(a, b)]))
+            .collect()
+    }
+
+    fn stats(&self) -> CacheStats {
+        self.stats
     }
 }
 
@@ -195,5 +430,107 @@ mod tests {
     fn mismatched_correlator_output_panics() {
         let mut c = CorrelationCache::new();
         c.get_or_compute_batch(&[(0, 1)], |_| vec![]);
+    }
+
+    #[test]
+    fn trait_batch_matches_inherent_behavior() {
+        let mut c = CorrelationCache::new();
+        let v = SuCache::batch(&mut c, &[(0, 1), (2, 3)], &mut |miss| {
+            miss.iter().map(|&(a, b)| (a * 10 + b) as f64).collect()
+        });
+        assert_eq!(v, vec![1.0, 23.0]);
+        assert_eq!(SuCache::stats(&c).computed, 2);
+    }
+
+    #[test]
+    fn shared_cache_serves_second_handle_from_first_handle_work() {
+        let shared = SharedSuCache::new();
+        let mut a = shared.handle();
+        let mut b = shared.handle();
+
+        let va = a.batch(&[(0, 1), (0, 2)], &mut |miss| {
+            miss.iter().map(|&(x, y)| (x + y) as f64).collect()
+        });
+        assert_eq!(va, vec![1.0, 2.0]);
+
+        // b requests an overlapping set: the overlap is a hit with no
+        // computation, only the new pair is forwarded.
+        let vb = b.batch(&[(0, 1), (1, 2)], &mut |miss| {
+            assert_eq!(miss, &[(1, 2)]);
+            vec![3.0]
+        });
+        assert_eq!(vb, vec![1.0, 3.0]);
+
+        assert_eq!(a.stats().computed, 2);
+        assert_eq!(b.stats().hits, 1);
+        assert_eq!(b.stats().computed, 1);
+        assert_eq!(shared.len(), 3);
+    }
+
+    /// Regression: per-query statistics must not double-count traffic
+    /// from other queries on the same shared cache —
+    /// `fraction_of_full_matrix` stays a per-search number.
+    #[test]
+    fn shared_stats_are_per_handle_not_global() {
+        let m = 4; // full matrix: C(5, 2) = 10 pairs
+        let shared = SharedSuCache::new();
+
+        let mut warmup = shared.handle();
+        let all: Vec<(FeatureId, FeatureId)> = (0..m)
+            .flat_map(|a| (a + 1..=m).map(move |b| (a, b)))
+            .collect();
+        assert_eq!(all.len(), 10);
+        let _ = warmup.batch(&all, &mut |miss| vec![0.5; miss.len()]);
+        assert!((warmup.stats().fraction_of_full_matrix(m) - 1.0).abs() < 1e-12);
+
+        // A warm query that only hits must report 0 computed — before the
+        // per-handle split, the single embedded CacheStats would have
+        // reported the warm query's `requested` on top of the warmup's
+        // and its fraction as if it had computed the matrix itself.
+        let mut warm = shared.handle();
+        let _ = warm.batch(&all[..4], &mut |_| panic!("warm query must not compute"));
+        let s = warm.stats();
+        assert_eq!(s.requested, 4);
+        assert_eq!(s.hits, 4);
+        assert_eq!(s.computed, 0);
+        assert_eq!(s.fraction_of_full_matrix(m), 0.0);
+
+        // The warmup handle's view is unchanged by the warm query.
+        assert_eq!(warmup.stats().requested, 10);
+        assert_eq!(shared.len(), 10);
+    }
+
+    #[test]
+    fn missing_of_scans_under_one_guard() {
+        let shared = SharedSuCache::new();
+        shared.insert_batch(&[(0, 1), (2, 3)], &[0.1, 0.2]);
+        assert_eq!(shared.missing_of(&[(1, 0), (4, 5), (2, 3)]), vec![(4, 5)]);
+        assert!(shared.missing_of(&[(0, 1)]).is_empty());
+        // insert_batch over already-present pairs is a read-only no-op.
+        shared.insert_batch(&[(1, 0)], &[0.1]);
+        assert_eq!(shared.len(), 2);
+    }
+
+    #[test]
+    fn shared_cache_concurrent_handles_agree() {
+        let shared = SharedSuCache::new();
+        let pairs: Vec<(FeatureId, FeatureId)> =
+            (0..16).flat_map(|a| (a + 1..16).map(move |b| (a, b))).collect();
+        std::thread::scope(|s| {
+            for _ in 0..4 {
+                let shared = shared.clone();
+                let pairs = pairs.clone();
+                s.spawn(move || {
+                    let mut h = shared.handle();
+                    let v = h.batch(&pairs, &mut |miss| {
+                        miss.iter().map(|&(a, b)| (a * 100 + b) as f64).collect()
+                    });
+                    let want: Vec<f64> =
+                        pairs.iter().map(|&(a, b)| (a * 100 + b) as f64).collect();
+                    assert_eq!(v, want);
+                });
+            }
+        });
+        assert_eq!(shared.len(), pairs.len());
     }
 }

@@ -12,6 +12,6 @@ pub mod entropy;
 pub mod pearson;
 pub mod su;
 
-pub use cache::CorrelationCache;
+pub use cache::{CacheStats, CorrelationCache, SharedSuCache, SuCache, SuCacheHandle};
 pub use ctable::ContingencyTable;
 pub use su::{su_from_table, symmetrical_uncertainty};

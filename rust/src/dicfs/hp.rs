@@ -22,7 +22,7 @@
 use std::ops::Range;
 use std::sync::Arc;
 
-use crate::cfs::Correlator;
+use crate::cfs::{Correlator, SharedCorrelator};
 use crate::core::FeatureId;
 use crate::correlation::ContingencyTable;
 use crate::data::columnar::DiscreteDataset;
@@ -74,8 +74,12 @@ impl HorizontalCorrelator {
     }
 }
 
-impl Correlator for HorizontalCorrelator {
-    fn compute(&mut self, pairs: &[(FeatureId, FeatureId)]) -> Vec<f64> {
+/// The hp job is stateless on the driver side (it only reads the shared
+/// dataset, engine and partition layout), so one correlator instance can
+/// serve any number of concurrent searches — the multi-query service
+/// relies on this to run one hp job per coalesced miss batch.
+impl SharedCorrelator for HorizontalCorrelator {
+    fn compute_batch(&self, pairs: &[(FeatureId, FeatureId)]) -> Vec<f64> {
         if pairs.is_empty() {
             return vec![];
         }
@@ -129,6 +133,12 @@ impl Correlator for HorizontalCorrelator {
         collected.sort_by_key(|(i, _)| *i);
         debug_assert_eq!(collected.len(), pairs.len());
         collected.into_iter().map(|(_, v)| v).collect()
+    }
+}
+
+impl Correlator for HorizontalCorrelator {
+    fn compute(&mut self, pairs: &[(FeatureId, FeatureId)]) -> Vec<f64> {
+        self.compute_batch(pairs)
     }
 }
 
@@ -203,6 +213,30 @@ mod tests {
     fn empty_batch() {
         let (_ctx, mut corr, _) = setup(3);
         assert!(corr.compute(&[]).is_empty());
+    }
+
+    #[test]
+    fn correlator_is_shareable_across_threads() {
+        fn assert_send_sync<T: Send + Sync>() {}
+        assert_send_sync::<HorizontalCorrelator>();
+
+        // Concurrent batches through one &self correlator agree with the
+        // direct computation — the property the service scheduler uses.
+        let (_ctx, corr, dd) = setup(4);
+        let (corr, dd) = (&corr, &dd);
+        std::thread::scope(|s| {
+            for offset in 0..3usize {
+                s.spawn(move || {
+                    let pairs = vec![(offset, CLASS_ID), (offset, offset + 1)];
+                    let got = corr.compute_batch(&pairs);
+                    for (i, &(a, b)) in pairs.iter().enumerate() {
+                        let (x, bx) = dd.column(a);
+                        let (y, by) = dd.column(b);
+                        assert_eq!(got[i], symmetrical_uncertainty(x, bx, y, by));
+                    }
+                });
+            }
+        });
     }
 
     #[test]

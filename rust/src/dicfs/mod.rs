@@ -122,15 +122,8 @@ impl DiCfs {
                     &ctx,
                     Arc::clone(data),
                     Arc::clone(&self.engine),
-                    // Default partitioning is block-based, like Spark's
-                    // (partitions = input blocks, capped at 2× slots):
-                    // rows_per_block is calibrated so per-task compute
-                    // stays well above the launch overhead at host scale
-                    // (see ClusterConfig::task_overhead_s).
                     self.config.num_partitions.unwrap_or_else(|| {
-                        data.num_rows()
-                            .div_ceil(64)
-                            .clamp(1, 2 * self.config.cluster.total_slots())
+                        self.config.cluster.default_row_partitions(data.num_rows())
                     }),
                 )),
                 Partitioning::Vertical => Box::new(vp::VerticalCorrelator::new(

@@ -22,7 +22,7 @@
 use std::collections::HashMap;
 use std::sync::Arc;
 
-use crate::cfs::Correlator;
+use crate::cfs::{Correlator, SharedCorrelator};
 use crate::core::{FeatureId, CLASS_ID};
 use crate::data::columnar::DiscreteDataset;
 use crate::runtime::{ColumnPair, SuEngine};
@@ -133,8 +133,14 @@ fn resolve_side<'a>(
     }
 }
 
-impl Correlator for VerticalCorrelator {
-    fn compute(&mut self, pairs: &[(FeatureId, FeatureId)]) -> Vec<f64> {
+/// Like hp, the vp batch job only reads shared state (the columnar RDD,
+/// the class broadcast, the dataset), so one instance serves concurrent
+/// searches. Note the reference-side choice depends on the *batch*
+/// composition, but the SU value of every pair is computed in canonical
+/// orientation regardless — coalescing batches across queries cannot
+/// change any value.
+impl SharedCorrelator for VerticalCorrelator {
+    fn compute_batch(&self, pairs: &[(FeatureId, FeatureId)]) -> Vec<f64> {
         if pairs.is_empty() {
             return vec![];
         }
@@ -202,6 +208,12 @@ impl Correlator for VerticalCorrelator {
         collected.sort_by_key(|(i, _)| *i);
         debug_assert_eq!(collected.len(), pairs.len());
         collected.into_iter().map(|(_, v)| v).collect()
+    }
+}
+
+impl Correlator for VerticalCorrelator {
+    fn compute(&mut self, pairs: &[(FeatureId, FeatureId)]) -> Vec<f64> {
+        self.compute_batch(pairs)
     }
 }
 
@@ -295,5 +307,27 @@ mod tests {
     fn empty_batch() {
         let (_ctx, mut corr, _) = setup(3);
         assert!(corr.compute(&[]).is_empty());
+    }
+
+    #[test]
+    fn correlator_is_shareable_across_threads() {
+        fn assert_send_sync<T: Send + Sync>() {}
+        assert_send_sync::<VerticalCorrelator>();
+
+        let (_ctx, corr, dd) = setup(7);
+        let (corr, dd) = (&corr, &dd);
+        std::thread::scope(|s| {
+            for offset in 0..3usize {
+                s.spawn(move || {
+                    let pairs = vec![(offset, CLASS_ID), (offset, offset + 4)];
+                    let got = corr.compute_batch(&pairs);
+                    for (i, &(a, b)) in pairs.iter().enumerate() {
+                        let (x, bx) = dd.column(a);
+                        let (y, by) = dd.column(b);
+                        assert_eq!(got[i], symmetrical_uncertainty(x, bx, y, by));
+                    }
+                });
+            }
+        });
     }
 }

@@ -11,6 +11,7 @@
 //! | §5 on-demand claim | [`ablation`] | `cargo bench --bench ablation_ondemand` |
 //! | §6 vp partition tuning | [`ablation`] | `cargo bench --bench ablation_partitions` |
 //! | scheduler fusion (DESIGN.md §3) | — | `cargo bench --bench ablation_fusion` |
+//! | multi-query service (DESIGN.md §10) | — | `cargo bench --bench ablation_service` |
 //!
 //! Each run writes a CSV under `bench_out/` and prints an ASCII chart, so
 //! `cargo bench` output is the full reproduction report.

@@ -25,6 +25,13 @@
 //! let result = SequentialCfs::default().select(&ds);
 //! println!("selected {:?}", result.selected);
 //! ```
+//!
+//! For many queries over the same data, use the multi-query service
+//! ([`serve::DicfsService`]): registered datasets keep their
+//! discretization, partition layout and a shared SU cache alive, so warm
+//! queries skip recomputation entirely.
+
+#![warn(missing_docs)]
 
 pub mod cfs;
 pub mod core;
@@ -35,5 +42,6 @@ pub mod discretize;
 pub mod harness;
 pub mod regcfs;
 pub mod runtime;
+pub mod serve;
 pub mod sparklet;
 pub mod util;

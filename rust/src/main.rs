@@ -7,6 +7,9 @@
 //!                print the Table-1 reproduction.
 //! * `compare`  — run all three variants, verify the paper's equivalence
 //!                claim, and print timings + cluster metrics.
+//! * `queries`  — multi-query service driver: replay a multi-tenant
+//!                workload script against one long-lived service with
+//!                cross-query SU caching (see `dicfs::serve::script`).
 //! * `bench`    — regenerate a paper figure/table (also available via
 //!                `cargo bench`).
 //!
@@ -35,9 +38,18 @@ USAGE:
   dicfs generate --family NAME --rows N [--features M] [--seed S] --out FILE
   dicfs generate --describe
   dicfs compare  [--family NAME] [--rows N] [--features M] [--nodes N]
+  dicfs queries  --script FILE [--nodes N] [--concurrency C]
+                 [--max-inflight J] [--engine native|pjrt] [--verify]
   dicfs bench    --target fig3|fig4|fig5|table2|ondemand|partitions [--scale X]
 
 FAMILIES: ecbdl14, higgs, kddcup99, epsilon (Table 1 of the paper)
+
+A `queries` script declares tenant datasets and the query traffic over
+them, e.g.:
+
+  dataset logs family=kddcup99 rows=4000 features=20 seed=7 scheme=hp
+  query logs repeat=3
+  query logs max_fails=3 locally_predictive=false
 ";
 
 fn parse_flags(args: &[String]) -> Result<HashMap<String, String>, String> {
@@ -47,7 +59,7 @@ fn parse_flags(args: &[String]) -> Result<HashMap<String, String>, String> {
         let k = args[i]
             .strip_prefix("--")
             .ok_or_else(|| format!("expected --flag, got {:?}", args[i]))?;
-        if k == "describe" {
+        if k == "describe" || k == "verify" {
             flags.insert(k.to_string(), "true".to_string());
             i += 1;
             continue;
@@ -224,6 +236,30 @@ fn cmd_compare(flags: &HashMap<String, String>) {
     assert!(ok);
 }
 
+fn cmd_queries(flags: &HashMap<String, String>) {
+    let path = flags.get("script").expect("--script FILE required");
+    let text = std::fs::read_to_string(path)
+        .unwrap_or_else(|e| panic!("cannot read script {path:?}: {e}"));
+    let script = match dicfs::serve::script::parse(&text) {
+        Ok(s) => s,
+        Err(e) => panic!("script error: {e}"),
+    };
+    let opts = dicfs::serve::script::ReplayOptions {
+        nodes: get_usize(flags, "nodes", 10),
+        max_inflight_jobs: get_usize(flags, "max-inflight", 2),
+        concurrency: get_usize(flags, "concurrency", 4),
+        verify: flags.contains_key("verify"),
+    };
+    println!(
+        "replaying {} dataset(s), {} query line(s) (concurrency {}, max in-flight jobs {})\n",
+        script.datasets.len(),
+        script.queries.len(),
+        opts.concurrency,
+        opts.max_inflight_jobs
+    );
+    let _ = dicfs::serve::script::replay(&script, &opts, make_engine(flags));
+}
+
 fn cmd_bench(flags: &HashMap<String, String>) {
     let scale: f64 = flags
         .get("scale")
@@ -278,6 +314,7 @@ fn main() -> ExitCode {
         "select" => cmd_select(&flags),
         "generate" => cmd_generate(&flags),
         "compare" => cmd_compare(&flags),
+        "queries" => cmd_queries(&flags),
         "bench" => cmd_bench(&flags),
         "help" | "--help" | "-h" => print!("{USAGE}"),
         other => {

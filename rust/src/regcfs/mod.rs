@@ -187,11 +187,9 @@ impl RegCfs {
     pub fn select(&self, data: &Arc<RegDataset>) -> RegCfsRun {
         let ctx = SparkletContext::new(self.cluster);
         let n = data.num_rows();
-        // Block-based default, matching DiCfs: ≥64 rows per partition,
-        // capped at 2× slots (see dicfs::DiCfs::select).
         let parts = self
             .num_partitions
-            .unwrap_or_else(|| n.div_ceil(64).clamp(1, 2 * self.cluster.total_slots()))
+            .unwrap_or_else(|| self.cluster.default_row_partitions(n))
             .clamp(1, n.max(1));
         let chunk = n.div_ceil(parts);
         let ranges: Vec<std::ops::Range<usize>> = (0..parts)

@@ -1,0 +1,518 @@
+//! Multi-query DiCFS service: one long-lived context, many tenants,
+//! cross-query SU caching.
+//!
+//! The paper's §5 on-demand optimization is per search: a single `select`
+//! run computes only the correlations its own trajectory touches, then
+//! throws them away. A production service answering many feature-selection
+//! queries over the same registered datasets (cf. the cross-run reuse
+//! arguments of Ramírez-Gallego et al., arXiv:1610.04154, and BELIEF,
+//! arXiv:1804.05774) can do much better — almost everything a new query
+//! needs has already been computed by an earlier one. This module extends
+//! the optimization across queries:
+//!
+//! * [`DicfsService`] owns **one** persistent [`SparkletContext`] (and
+//!   thus one executor pool) for its whole lifetime.
+//! * Registering a dataset ([`DicfsService::register_discrete`]) builds
+//!   its partitioning layout once — for vp, the columnar shuffle and the
+//!   class broadcast — and attaches a shared, thread-safe
+//!   [`SharedSuCache`](crate::correlation::SharedSuCache); see
+//!   [`registry`].
+//! * Queries run the ordinary best-first search, each through its own
+//!   [`SuCacheHandle`](crate::correlation::SuCacheHandle) (per-query
+//!   statistics) over the dataset's shared cache. Only cache *misses*
+//!   become distributed work.
+//! * Misses flow through the [`scheduler`]: a FIFO job queue with
+//!   admission control (bounded in-flight jobs) that coalesces the
+//!   misses of concurrent queries on the same dataset into one hp/vp
+//!   batch job per scheduling tick, and records a [`SuJobReport`] per
+//!   job.
+//!
+//! Exactness is preserved under sharing: SU is a pure function of the
+//! dataset, every engine computes it bit-identically in canonical pair
+//! orientation (DESIGN.md §5), so a query through a warm shared cache
+//! selects exactly the features its isolated run would (asserted by
+//! `tests/service_integration.rs` and `benches/ablation_service.rs`).
+//!
+//! The batch driver for this module is `dicfs queries --script FILE`
+//! (see [`script`]), which replays a multi-tenant workload.
+
+pub mod registry;
+pub mod scheduler;
+pub mod script;
+
+pub use registry::{DatasetId, RegisteredDataset};
+pub use scheduler::SuJobReport;
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::mpsc::channel;
+use std::sync::Arc;
+use std::time::Instant;
+
+use crate::cfs::best_first::{BestFirstSearch, CfsConfig};
+use crate::cfs::Correlator;
+use crate::core::{FeatureId, SelectionResult};
+use crate::correlation::{CacheStats, SuCache};
+use crate::data::columnar::{Dataset, DiscreteDataset};
+use crate::discretize::discretize_dataset;
+use crate::runtime::{NativeEngine, SuEngine};
+use crate::serve::registry::DatasetRegistry;
+use crate::serve::scheduler::{MissRequest, MissScheduler};
+use crate::sparklet::{ClusterConfig, SparkletContext};
+use crate::util::timer::timed;
+
+/// Which correlation backend a registered dataset uses.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ServeScheme {
+    /// Driver-local SU (no sparklet job) — small tenants. Misses are
+    /// computed inline on the query thread, bypassing the job scheduler
+    /// (there is no distributed work to admission-control); the shared
+    /// cache still carries cross-query reuse.
+    Sequential,
+    /// DiCFS-hp: row-partitioned distributed jobs.
+    Horizontal,
+    /// DiCFS-vp: feature-partitioned jobs (columnar shuffle at
+    /// registration).
+    Vertical,
+}
+
+impl ServeScheme {
+    /// Parse the CLI spelling (`seq` / `hp` / `vp`).
+    pub fn parse(s: &str) -> Option<Self> {
+        match s {
+            "seq" | "sequential" => Some(Self::Sequential),
+            "hp" | "horizontal" => Some(Self::Horizontal),
+            "vp" | "vertical" => Some(Self::Vertical),
+            _ => None,
+        }
+    }
+
+    /// Canonical CLI spelling.
+    pub fn label(&self) -> &'static str {
+        match self {
+            Self::Sequential => "seq",
+            Self::Horizontal => "hp",
+            Self::Vertical => "vp",
+        }
+    }
+}
+
+/// Service configuration.
+#[derive(Debug, Clone, Copy)]
+pub struct ServiceConfig {
+    /// Virtual cluster topology the shared context simulates.
+    pub cluster: ClusterConfig,
+    /// Admission control: distributed SU jobs allowed in flight at once.
+    pub max_inflight_jobs: usize,
+}
+
+impl Default for ServiceConfig {
+    fn default() -> Self {
+        Self {
+            cluster: ClusterConfig::default(),
+            max_inflight_jobs: 2,
+        }
+    }
+}
+
+/// One feature-selection query against a registered dataset.
+#[derive(Debug, Clone, Copy)]
+pub struct QuerySpec {
+    /// The registered dataset to search over.
+    pub dataset: DatasetId,
+    /// Search parameters (vary per tenant; defaults = the paper's).
+    pub cfs: CfsConfig,
+}
+
+/// What one query returns: the selection plus its cache profile.
+#[derive(Debug, Clone)]
+pub struct QueryReport {
+    /// Service-wide query id (admission order).
+    pub query: usize,
+    /// Dataset the query ran against.
+    pub dataset: DatasetId,
+    /// Dataset name at registration.
+    pub dataset_name: String,
+    /// The selected features (identical to an isolated run).
+    pub result: SelectionResult,
+    /// This query's cache statistics: `hits` includes pairs warmed by
+    /// *other* queries; `computed` counts only misses this query
+    /// forwarded.
+    pub cache: CacheStats,
+    /// Wall-clock of the query on this host, in seconds.
+    pub wall_secs: f64,
+}
+
+/// Cache state of one registered dataset, service-wide.
+#[derive(Debug, Clone)]
+pub struct DatasetCacheReport {
+    /// Registry id.
+    pub dataset: DatasetId,
+    /// Registration name.
+    pub name: String,
+    /// Distinct SU pairs ever computed for this dataset.
+    pub distinct_pairs: usize,
+    /// Full correlation matrix size `C(m+1, 2)`.
+    pub full_matrix: usize,
+}
+
+impl DatasetCacheReport {
+    /// Fraction of the full matrix the whole service has computed.
+    pub fn fraction(&self) -> f64 {
+        if self.full_matrix == 0 {
+            0.0
+        } else {
+            self.distinct_pairs as f64 / self.full_matrix as f64
+        }
+    }
+}
+
+/// The long-running multi-query DiCFS service.
+///
+/// ```
+/// use std::sync::Arc;
+/// use dicfs::data::synth::{higgs_like, SynthConfig};
+/// use dicfs::discretize::discretize_dataset;
+/// use dicfs::serve::{DicfsService, QuerySpec, ServeScheme, ServiceConfig};
+///
+/// let service = DicfsService::new(ServiceConfig::default());
+/// let raw = higgs_like(&SynthConfig { rows: 400, seed: 3, features: Some(8) });
+/// let data = Arc::new(discretize_dataset(&raw).unwrap());
+/// let id = service.register_discrete("tenant-a", data, ServeScheme::Horizontal, None);
+///
+/// let spec = QuerySpec { dataset: id, cfs: Default::default() };
+/// let cold = service.query(&spec);
+/// let warm = service.query(&spec);
+/// assert_eq!(warm.result.selected, cold.result.selected);
+/// assert_eq!(warm.cache.computed, 0); // served entirely from the shared cache
+/// assert!(warm.cache.hits > 0);
+/// ```
+pub struct DicfsService {
+    config: ServiceConfig,
+    ctx: Arc<SparkletContext>,
+    engine: Arc<dyn SuEngine>,
+    registry: DatasetRegistry,
+    scheduler: MissScheduler,
+    next_query: AtomicUsize,
+}
+
+impl DicfsService {
+    /// Service with the native engine.
+    pub fn new(config: ServiceConfig) -> Self {
+        Self::with_engine(config, Arc::new(NativeEngine))
+    }
+
+    /// Service with an explicit engine (native or PJRT).
+    pub fn with_engine(config: ServiceConfig, engine: Arc<dyn SuEngine>) -> Self {
+        Self {
+            config,
+            ctx: SparkletContext::new(config.cluster),
+            engine,
+            registry: DatasetRegistry::default(),
+            scheduler: MissScheduler::new(config.max_inflight_jobs),
+            next_query: AtomicUsize::new(0),
+        }
+    }
+
+    /// The configuration the service was built with.
+    pub fn config(&self) -> &ServiceConfig {
+        &self.config
+    }
+
+    /// The shared context every distributed job runs on.
+    pub fn context(&self) -> &Arc<SparkletContext> {
+        &self.ctx
+    }
+
+    /// Register a raw dataset: discretize once, then keep discretization,
+    /// layout and SU cache alive for every future query.
+    pub fn register(
+        &self,
+        name: &str,
+        data: &Dataset,
+        scheme: ServeScheme,
+        partitions: Option<usize>,
+    ) -> crate::core::Result<DatasetId> {
+        let dd = Arc::new(discretize_dataset(data)?);
+        Ok(self.register_discrete(name, dd, scheme, partitions))
+    }
+
+    /// Register an already-discretized dataset. `partitions` overrides
+    /// the scheme's default partition count (hp: block-based; vp: one
+    /// per feature).
+    pub fn register_discrete(
+        &self,
+        name: &str,
+        data: Arc<DiscreteDataset>,
+        scheme: ServeScheme,
+        partitions: Option<usize>,
+    ) -> DatasetId {
+        self.registry
+            .insert(name, data, scheme, partitions, &self.ctx, &self.engine)
+            .id
+    }
+
+    /// Look up a registered dataset by id.
+    pub fn dataset(&self, id: DatasetId) -> Option<Arc<RegisteredDataset>> {
+        self.registry.get(id)
+    }
+
+    /// Look up a registered dataset by registration name.
+    pub fn dataset_by_name(&self, name: &str) -> Option<Arc<RegisteredDataset>> {
+        self.registry.by_name(name)
+    }
+
+    /// Run one query to completion on the calling thread.
+    ///
+    /// Safe to call from many threads at once (that is the point): the
+    /// search runs locally, cache misses are forwarded to the shared
+    /// scheduler and coalesce with other queries' misses.
+    pub fn query(&self, spec: &QuerySpec) -> QueryReport {
+        let reg = self
+            .registry
+            .get(spec.dataset)
+            .unwrap_or_else(|| panic!("unknown dataset id {}", spec.dataset));
+        let query = self.next_query.fetch_add(1, Ordering::SeqCst);
+        let mut handle = reg.cache().handle();
+        // Driver-local (seq) tenants compute misses inline on the query
+        // thread — there is no distributed job to admission-control, so
+        // they must not occupy scheduler slots or serialize behind the
+        // per-dataset job lock. They still share the dataset's cache.
+        let mut correlator: Box<dyn Correlator + '_> = match reg.scheme {
+            ServeScheme::Sequential => Box::new(DirectCorrelator {
+                dataset: Arc::clone(&reg),
+            }),
+            ServeScheme::Horizontal | ServeScheme::Vertical => Box::new(MissForwarder {
+                dataset: Arc::clone(&reg),
+                scheduler: &self.scheduler,
+            }),
+        };
+        let m = reg.data.num_features();
+        let search = BestFirstSearch::new(spec.cfs);
+        let (result, wall_secs) =
+            timed(|| search.run_with_cache(m, correlator.as_mut(), &mut handle));
+        QueryReport {
+            query,
+            dataset: reg.id,
+            dataset_name: reg.name.clone(),
+            result,
+            cache: handle.stats(),
+            wall_secs,
+        }
+    }
+
+    /// Run a batch of queries concurrently (one thread each), returning
+    /// reports in input order. Queries over the same dataset share its
+    /// cache and coalesce their misses.
+    pub fn run_concurrent(&self, specs: &[QuerySpec]) -> Vec<QueryReport> {
+        std::thread::scope(|s| {
+            let handles: Vec<_> = specs
+                .iter()
+                .map(|spec| s.spawn(move || self.query(spec)))
+                .collect();
+            handles
+                .into_iter()
+                .map(|h| h.join().expect("query thread panicked"))
+                .collect()
+        })
+    }
+
+    /// Every SU job the scheduler has completed, in completion order.
+    pub fn job_log(&self) -> Vec<SuJobReport> {
+        self.scheduler.job_log()
+    }
+
+    /// Cache report for one dataset.
+    pub fn cache_report(&self, id: DatasetId) -> Option<DatasetCacheReport> {
+        self.registry.get(id).map(|reg| DatasetCacheReport {
+            dataset: reg.id,
+            name: reg.name.clone(),
+            distinct_pairs: reg.cache().len(),
+            full_matrix: reg.full_matrix(),
+        })
+    }
+
+    /// Cache reports for every registered dataset.
+    pub fn cache_reports(&self) -> Vec<DatasetCacheReport> {
+        self.registry
+            .all()
+            .iter()
+            .map(|reg| DatasetCacheReport {
+                dataset: reg.id,
+                name: reg.name.clone(),
+                distinct_pairs: reg.cache().len(),
+                full_matrix: reg.full_matrix(),
+            })
+            .collect()
+    }
+}
+
+/// Query-side miss funnel for driver-local (seq) tenants: computes the
+/// misses inline through the dataset's provider. No scheduler involved —
+/// cache sharing alone carries the cross-query reuse.
+struct DirectCorrelator {
+    dataset: Arc<RegisteredDataset>,
+}
+
+impl Correlator for DirectCorrelator {
+    fn compute(&mut self, pairs: &[(FeatureId, FeatureId)]) -> Vec<f64> {
+        self.dataset.provider.compute_batch(pairs)
+    }
+}
+
+/// Query-side miss funnel: implements the ordinary [`Correlator`]
+/// contract by shipping misses to the shared scheduler and blocking until
+/// the coalesced job answers.
+struct MissForwarder<'a> {
+    dataset: Arc<RegisteredDataset>,
+    scheduler: &'a MissScheduler,
+}
+
+impl Correlator for MissForwarder<'_> {
+    fn compute(&mut self, pairs: &[(FeatureId, FeatureId)]) -> Vec<f64> {
+        let (reply, rx) = channel();
+        self.scheduler.submit(MissRequest {
+            dataset: Arc::clone(&self.dataset),
+            pairs: pairs.to_vec(),
+            reply,
+            enqueued: Instant::now(),
+        });
+        // The sender side closing without an answer means the coalesced
+        // SU job for this batch panicked: this query fails, the service
+        // (scheduler, other datasets, other queries) keeps running.
+        rx.recv()
+            .expect("SU job failed before answering this query's miss batch")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cfs::SequentialCfs;
+    use crate::data::synth::{higgs_like, kddcup99_like, SynthConfig};
+
+    fn discrete(rows: usize, features: usize, seed: u64) -> Arc<DiscreteDataset> {
+        let ds = higgs_like(&SynthConfig {
+            rows,
+            seed,
+            features: Some(features),
+        });
+        Arc::new(discretize_dataset(&ds).unwrap())
+    }
+
+    fn small_service() -> DicfsService {
+        DicfsService::new(ServiceConfig {
+            cluster: ClusterConfig::with_nodes(2),
+            max_inflight_jobs: 2,
+        })
+    }
+
+    #[test]
+    fn query_matches_isolated_sequential_run() {
+        let service = small_service();
+        let dd = discrete(900, 10, 5);
+        let id = service.register_discrete("a", Arc::clone(&dd), ServeScheme::Horizontal, None);
+        let report = service.query(&QuerySpec {
+            dataset: id,
+            cfs: CfsConfig::default(),
+        });
+        let seq = SequentialCfs::default().select_discrete(&dd);
+        assert_eq!(report.result.selected, seq.selected);
+        assert!((report.result.merit - seq.merit).abs() < 1e-12);
+    }
+
+    #[test]
+    fn second_query_is_served_from_cache() {
+        let service = small_service();
+        let id =
+            service.register_discrete("a", discrete(700, 8, 11), ServeScheme::Vertical, None);
+        let spec = QuerySpec {
+            dataset: id,
+            cfs: CfsConfig::default(),
+        };
+        let cold = service.query(&spec);
+        let warm = service.query(&spec);
+        assert_eq!(cold.result.selected, warm.result.selected);
+        assert!(cold.cache.computed > 0);
+        assert_eq!(warm.cache.computed, 0, "warm query recomputed pairs");
+        assert!(warm.cache.hits > 0);
+    }
+
+    #[test]
+    fn datasets_are_isolated_from_each_other() {
+        let service = small_service();
+        let a = service.register_discrete("a", discrete(600, 8, 1), ServeScheme::Sequential, None);
+        let kdd = kddcup99_like(&SynthConfig {
+            rows: 600,
+            seed: 2,
+            features: Some(9),
+        });
+        let b = service
+            .register("b", &kdd, ServeScheme::Sequential, None)
+            .unwrap();
+        let ra = service.query(&QuerySpec {
+            dataset: a,
+            cfs: CfsConfig::default(),
+        });
+        let rb = service.query(&QuerySpec {
+            dataset: b,
+            cfs: CfsConfig::default(),
+        });
+        assert!(ra.cache.computed > 0 && rb.cache.computed > 0);
+        let ca = service.cache_report(a).unwrap();
+        let cb = service.cache_report(b).unwrap();
+        assert_eq!(ca.distinct_pairs, ra.cache.computed);
+        assert_eq!(cb.distinct_pairs, rb.cache.computed);
+        assert!(ca.fraction() <= 1.0 && cb.fraction() > 0.0);
+    }
+
+    #[test]
+    fn job_log_records_every_job() {
+        let service = small_service();
+        let id =
+            service.register_discrete("a", discrete(500, 6, 9), ServeScheme::Horizontal, None);
+        let r = service.query(&QuerySpec {
+            dataset: id,
+            cfs: CfsConfig::default(),
+        });
+        // Every computed pair went through exactly one logged job.
+        let log = service.job_log();
+        assert!(!log.is_empty());
+        let job_pairs: usize = log.iter().map(|j| j.computed_pairs).sum();
+        assert_eq!(job_pairs, r.cache.computed);
+        assert!(log.iter().all(|j| j.dataset == id));
+    }
+
+    #[test]
+    fn concurrent_queries_on_one_dataset_stay_exact() {
+        let service = small_service();
+        let dd = discrete(800, 9, 21);
+        let id = service.register_discrete("a", Arc::clone(&dd), ServeScheme::Horizontal, None);
+        let specs = vec![
+            QuerySpec {
+                dataset: id,
+                cfs: CfsConfig::default()
+            };
+            4
+        ];
+        let reports = service.run_concurrent(&specs);
+        let seq = SequentialCfs::default().select_discrete(&dd);
+        for r in &reports {
+            assert_eq!(r.result.selected, seq.selected, "query {} diverged", r.query);
+        }
+        // Identical queries share one trajectory: the distinct pairs in
+        // the shared cache equal one isolated run's computation.
+        assert_eq!(
+            service.cache_report(id).unwrap().distinct_pairs,
+            seq.correlations_computed
+        );
+    }
+
+    #[test]
+    fn unknown_scheme_spellings_rejected() {
+        assert_eq!(ServeScheme::parse("hp"), Some(ServeScheme::Horizontal));
+        assert_eq!(ServeScheme::parse("vertical"), Some(ServeScheme::Vertical));
+        assert_eq!(ServeScheme::parse("seq"), Some(ServeScheme::Sequential));
+        assert!(ServeScheme::parse("rows").is_none());
+        assert_eq!(ServeScheme::Horizontal.label(), "hp");
+    }
+}

@@ -1,0 +1,473 @@
+//! The shared job scheduler: admission control + per-dataset miss
+//! coalescing.
+//!
+//! Every cache miss batch a query produces becomes a [`MissRequest`] on
+//! the scheduler's FIFO queue. Each scheduling tick the scheduler drains
+//! its channel, then dispatches jobs while capacity allows
+//! (`max_inflight_jobs` bounds the number of distributed SU jobs running
+//! at once — the admission control):
+//!
+//! * the **oldest** pending request whose dataset has no job in flight
+//!   picks the dataset (FIFO fairness),
+//! * every queued request for that dataset joins the same job
+//!   (per-dataset batching): their pair lists are deduplicated into one
+//!   canonical union, already-cached pairs are dropped, and the remainder
+//!   runs as **one** hp/vp batch through the dataset's shared correlator,
+//! * at most one job per dataset runs at a time — misses arriving while
+//!   a dataset's job is in flight wait (and keep coalescing), so a pair
+//!   is never computed twice and every computed pair is attributable to
+//!   exactly one [`SuJobReport`],
+//! * the job inserts results into the dataset's
+//!   [`SharedSuCache`](crate::correlation::SharedSuCache) and answers
+//!   every coalesced request from it.
+//!
+//! Coalescing is value-safe: SU per pair is a pure function of the
+//! dataset and both correlators compute each pair in canonical
+//! orientation, so batch composition cannot change any value (DESIGN.md
+//! §5, §10).
+
+use std::collections::{HashSet, VecDeque};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::Instant;
+
+use crate::core::{pair_key, FeatureId};
+use crate::serve::registry::{DatasetId, RegisteredDataset};
+
+/// One query's forwarded cache misses, waiting for a coalesced job.
+pub(crate) struct MissRequest {
+    /// The dataset the pairs belong to (carries provider + cache).
+    pub dataset: Arc<RegisteredDataset>,
+    /// Requested pairs, in the query's order (the reply preserves it).
+    pub pairs: Vec<(FeatureId, FeatureId)>,
+    /// Where the values go once the job completes.
+    pub reply: Sender<Vec<f64>>,
+    /// When the request entered the queue (feeds `queue_secs`).
+    pub enqueued: Instant,
+}
+
+/// What one coalesced SU job did — the service's per-job metrics record.
+#[derive(Debug, Clone)]
+pub struct SuJobReport {
+    /// Monotonic job id within the service.
+    pub job_id: usize,
+    /// Dataset the job ran against.
+    pub dataset: DatasetId,
+    /// Dataset name (for human-readable logs).
+    pub dataset_name: String,
+    /// How many queries' miss batches were coalesced into this job.
+    pub coalesced_requests: usize,
+    /// Total pairs across the coalesced requests (with duplicates).
+    pub requested_pairs: usize,
+    /// Distinct uncached pairs the distributed job actually computed.
+    pub computed_pairs: usize,
+    /// Oldest coalesced request's queue wait, in seconds.
+    pub queue_secs: f64,
+    /// Wall-clock of the correlator batch, in seconds.
+    pub compute_secs: f64,
+}
+
+pub(crate) enum SchedMsg {
+    Miss(MissRequest),
+    /// A job runner for the given dataset finished (frees an admission
+    /// slot and the dataset). The job itself publishes its
+    /// [`SuJobReport`] to the log *before* replying to its queries, so
+    /// `job_log()` is always complete from a query's point of view.
+    JobDone(DatasetId),
+    Shutdown,
+}
+
+/// The scheduler: one driver-side thread owning the FIFO queue, plus up
+/// to `max_inflight_jobs` short-lived job runners.
+pub(crate) struct MissScheduler {
+    tx: Mutex<Sender<SchedMsg>>,
+    handle: Option<JoinHandle<()>>,
+    log: Arc<Mutex<Vec<SuJobReport>>>,
+}
+
+impl MissScheduler {
+    pub(crate) fn new(max_inflight_jobs: usize) -> Self {
+        let (tx, rx) = channel::<SchedMsg>();
+        let log = Arc::new(Mutex::new(Vec::new()));
+        let loop_tx = tx.clone();
+        let loop_log = Arc::clone(&log);
+        let handle = std::thread::Builder::new()
+            .name("dicfs-scheduler".to_string())
+            .spawn(move || scheduler_loop(rx, loop_tx, max_inflight_jobs.max(1), loop_log))
+            .expect("spawn scheduler thread");
+        Self {
+            tx: Mutex::new(tx),
+            handle: Some(handle),
+            log,
+        }
+    }
+
+    /// Enqueue a miss batch (called from query threads).
+    pub(crate) fn submit(&self, req: MissRequest) {
+        self.tx
+            .lock()
+            .unwrap()
+            .send(SchedMsg::Miss(req))
+            .expect("scheduler thread alive");
+    }
+
+    /// Snapshot of every job the scheduler has completed so far.
+    pub(crate) fn job_log(&self) -> Vec<SuJobReport> {
+        self.log.lock().unwrap().clone()
+    }
+}
+
+impl Drop for MissScheduler {
+    fn drop(&mut self) {
+        // Queries are synchronous, so by the time the service drops no
+        // request can still be in flight; the scheduler drains whatever
+        // is queued, waits for running jobs, then exits.
+        let _ = self.tx.lock().unwrap().send(SchedMsg::Shutdown);
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+fn scheduler_loop(
+    rx: Receiver<SchedMsg>,
+    tx: Sender<SchedMsg>,
+    max_inflight: usize,
+    log: Arc<Mutex<Vec<SuJobReport>>>,
+) {
+    let mut pending: VecDeque<MissRequest> = VecDeque::new();
+    let mut busy: HashSet<DatasetId> = HashSet::new();
+    let mut inflight = 0usize;
+    let mut next_job = 0usize;
+    let mut shutting_down = false;
+
+    loop {
+        // One scheduling tick: block for a message, then drain whatever
+        // else already arrived — concurrent queries that missed within
+        // the same tick coalesce below.
+        let first = match rx.recv() {
+            Ok(m) => m,
+            Err(_) => break,
+        };
+        let mut msgs = vec![first];
+        while let Ok(m) = rx.try_recv() {
+            msgs.push(m);
+        }
+        for m in msgs {
+            match m {
+                SchedMsg::Miss(r) => pending.push_back(r),
+                SchedMsg::JobDone(ds_id) => {
+                    inflight -= 1;
+                    busy.remove(&ds_id);
+                }
+                SchedMsg::Shutdown => shutting_down = true,
+            }
+        }
+
+        // Admission control: dispatch while a job slot is free. The
+        // oldest request whose dataset is idle picks the dataset; all of
+        // that dataset's queued misses join the job. Datasets with a job
+        // in flight stay queued (their misses keep coalescing).
+        while inflight < max_inflight {
+            let Some(pos) = pending.iter().position(|r| !busy.contains(&r.dataset.id)) else {
+                break;
+            };
+            let ds_id = pending[pos].dataset.id;
+            let mut batch = Vec::new();
+            let mut rest = VecDeque::with_capacity(pending.len());
+            for r in pending.drain(..) {
+                if r.dataset.id == ds_id {
+                    batch.push(r);
+                } else {
+                    rest.push_back(r);
+                }
+            }
+            pending = rest;
+            busy.insert(ds_id);
+            inflight += 1;
+            let job_id = next_job;
+            next_job += 1;
+            let done = tx.clone();
+            let job_log = Arc::clone(&log);
+            std::thread::Builder::new()
+                .name(format!("dicfs-su-job-{job_id}"))
+                .spawn(move || {
+                    // JobDone must reach the scheduler even when the job
+                    // panics (e.g. a sparklet stage failing permanently),
+                    // or the dataset would stay busy and the admission
+                    // slot would leak forever. A panicked job drops its
+                    // batch, so the waiting queries observe their reply
+                    // channels closing and fail individually — the
+                    // service itself keeps serving.
+                    let outcome = std::panic::catch_unwind(std::panic::AssertUnwindSafe(
+                        || run_su_job(job_id, &batch, &job_log),
+                    ));
+                    let _ = done.send(SchedMsg::JobDone(ds_id));
+                    drop(outcome);
+                })
+                .expect("spawn job runner");
+        }
+
+        if shutting_down && inflight == 0 && pending.is_empty() {
+            break;
+        }
+    }
+}
+
+/// Execute one coalesced job: union the batch's pairs (canonical keys,
+/// first-seen order), drop already-cached ones, run a single correlator
+/// batch, publish into the shared cache, log the report, answer every
+/// request — in that order, so the job log never trails a served reply.
+pub(crate) fn run_su_job(
+    job_id: usize,
+    batch: &[MissRequest],
+    log: &Mutex<Vec<SuJobReport>>,
+) -> SuJobReport {
+    let ds = &batch[0].dataset;
+    let requested_pairs: usize = batch.iter().map(|r| r.pairs.len()).sum();
+    let queue_secs = batch
+        .iter()
+        .map(|r| r.enqueued.elapsed().as_secs_f64())
+        .fold(0.0, f64::max);
+
+    let mut candidates: Vec<(FeatureId, FeatureId)> = Vec::new();
+    let mut seen: HashSet<(FeatureId, FeatureId)> = HashSet::new();
+    for r in batch {
+        debug_assert_eq!(r.dataset.id, ds.id, "batch spans datasets");
+        for &(a, b) in &r.pairs {
+            let k = pair_key(a, b);
+            if seen.insert(k) {
+                candidates.push(k);
+            }
+        }
+    }
+    // One read-guard scan for the whole union, not one lock per pair.
+    let union = ds.cache.missing_of(&candidates);
+
+    let t0 = Instant::now();
+    if !union.is_empty() {
+        let values = ds.provider.compute_batch(&union);
+        ds.cache.insert_batch(&union, &values);
+    }
+    let compute_secs = t0.elapsed().as_secs_f64();
+
+    let report = SuJobReport {
+        job_id,
+        dataset: ds.id,
+        dataset_name: ds.name.clone(),
+        coalesced_requests: batch.len(),
+        requested_pairs,
+        computed_pairs: union.len(),
+        queue_secs,
+        compute_secs,
+    };
+    log.lock().unwrap().push(report.clone());
+
+    for r in batch {
+        // One read-guard acquisition per request, not per pair.
+        let values = ds.cache.get_batch(&r.pairs).expect("job computed every pair");
+        // A query abandoned mid-run (its receiver dropped) is not an
+        // error for the job; the cache still keeps the values.
+        let _ = r.reply.send(values);
+    }
+
+    report
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    use crate::cfs::SharedCorrelator;
+    use crate::data::columnar::DiscreteDataset;
+    use crate::serve::ServeScheme;
+
+    /// Provider that returns `a*1000 + b` and counts pairs computed.
+    struct CountingProvider {
+        pairs_computed: AtomicUsize,
+        batches: AtomicUsize,
+    }
+
+    impl SharedCorrelator for CountingProvider {
+        fn compute_batch(&self, pairs: &[(FeatureId, FeatureId)]) -> Vec<f64> {
+            self.batches.fetch_add(1, Ordering::SeqCst);
+            self.pairs_computed.fetch_add(pairs.len(), Ordering::SeqCst);
+            pairs.iter().map(|&(a, b)| (a * 1000 + b) as f64).collect()
+        }
+    }
+
+    fn tiny_dataset() -> Arc<DiscreteDataset> {
+        Arc::new(
+            DiscreteDataset::new(
+                "tiny",
+                vec![vec![0, 1, 1, 0], vec![1, 0, 1, 0], vec![0, 0, 1, 1]],
+                vec![2, 2, 2],
+                vec![0, 1, 1, 0],
+                2,
+            )
+            .unwrap(),
+        )
+    }
+
+    fn registered(provider: Box<dyn SharedCorrelator>) -> Arc<RegisteredDataset> {
+        Arc::new(RegisteredDataset::with_provider(
+            0,
+            "tiny",
+            tiny_dataset(),
+            ServeScheme::Sequential,
+            provider,
+        ))
+    }
+
+    fn request(
+        ds: &Arc<RegisteredDataset>,
+        pairs: Vec<(FeatureId, FeatureId)>,
+    ) -> (MissRequest, Receiver<Vec<f64>>) {
+        let (tx, rx) = channel();
+        (
+            MissRequest {
+                dataset: Arc::clone(ds),
+                pairs,
+                reply: tx,
+                enqueued: Instant::now(),
+            },
+            rx,
+        )
+    }
+
+    #[test]
+    fn coalesced_job_computes_overlap_once_and_answers_all() {
+        let counting = Box::new(CountingProvider {
+            pairs_computed: AtomicUsize::new(0),
+            batches: AtomicUsize::new(0),
+        });
+        let ds = registered(counting);
+        // Two concurrent queries with overlapping misses (and one pair in
+        // both orientations).
+        let log = Mutex::new(Vec::new());
+        let (r1, rx1) = request(&ds, vec![(0, 1), (0, 2)]);
+        let (r2, rx2) = request(&ds, vec![(1, 0), (1, 2)]);
+        let report = run_su_job(7, &[r1, r2], &log);
+
+        assert_eq!(report.job_id, 7);
+        assert_eq!(report.coalesced_requests, 2);
+        assert_eq!(report.requested_pairs, 4);
+        // union = {(0,1), (0,2), (1,2)} — the shared (0,1)/(1,0) pair
+        // computed once.
+        assert_eq!(report.computed_pairs, 3);
+        assert_eq!(ds.cache().len(), 3);
+
+        assert_eq!(rx1.recv().unwrap(), vec![1.0, 2.0]);
+        assert_eq!(rx2.recv().unwrap(), vec![1.0, 1002.0]);
+        assert_eq!(log.lock().unwrap().len(), 1, "job logged itself");
+    }
+
+    #[test]
+    fn cached_pairs_are_not_recomputed_by_later_jobs() {
+        let counting = CountingProvider {
+            pairs_computed: AtomicUsize::new(0),
+            batches: AtomicUsize::new(0),
+        };
+        let counts: &'static CountingProvider = Box::leak(Box::new(counting));
+        struct Fwd(&'static CountingProvider);
+        impl SharedCorrelator for Fwd {
+            fn compute_batch(&self, pairs: &[(FeatureId, FeatureId)]) -> Vec<f64> {
+                self.0.compute_batch(pairs)
+            }
+        }
+        let ds = registered(Box::new(Fwd(counts)));
+        let log = Mutex::new(Vec::new());
+
+        let (r1, rx1) = request(&ds, vec![(0, 1), (0, 2)]);
+        let _ = run_su_job(0, &[r1], &log);
+        assert_eq!(rx1.recv().unwrap().len(), 2);
+
+        // Second job re-requests a cached pair plus a new one.
+        let (r2, rx2) = request(&ds, vec![(0, 1), (1, 2)]);
+        let report = run_su_job(1, &[r2], &log);
+        assert_eq!(report.computed_pairs, 1, "only the new pair computed");
+        assert_eq!(rx2.recv().unwrap(), vec![1.0, 1002.0]);
+        assert_eq!(counts.pairs_computed.load(Ordering::SeqCst), 3);
+        assert_eq!(counts.batches.load(Ordering::SeqCst), 2);
+    }
+
+    #[test]
+    fn scheduler_round_trips_and_logs_jobs() {
+        let sched = MissScheduler::new(2);
+        let counting = Box::new(CountingProvider {
+            pairs_computed: AtomicUsize::new(0),
+            batches: AtomicUsize::new(0),
+        });
+        let ds = registered(counting);
+
+        let (r1, rx1) = request(&ds, vec![(0, 1)]);
+        sched.submit(r1);
+        assert_eq!(rx1.recv().unwrap(), vec![1.0]);
+
+        let (r2, rx2) = request(&ds, vec![(0, 1), (0, 2)]);
+        sched.submit(r2);
+        assert_eq!(rx2.recv().unwrap(), vec![1.0, 2.0]);
+
+        // Jobs publish their report before replying, so once both
+        // replies arrived the log is complete.
+        let log = sched.job_log();
+        assert_eq!(log.len(), 2);
+        assert!(log.iter().all(|j| j.dataset == 0));
+        assert_eq!(log[1].computed_pairs, 1, "cached pair skipped");
+    }
+
+    #[test]
+    fn panicking_job_fails_its_queries_but_not_the_scheduler() {
+        struct PanickingProvider;
+        impl SharedCorrelator for PanickingProvider {
+            fn compute_batch(&self, _pairs: &[(FeatureId, FeatureId)]) -> Vec<f64> {
+                panic!("injected job failure");
+            }
+        }
+
+        // Silence the expected panic spam from the job thread.
+        let prev = std::panic::take_hook();
+        std::panic::set_hook(Box::new(|_| {}));
+
+        let sched = MissScheduler::new(1);
+        let bad = registered(Box::new(PanickingProvider));
+        let (r, rx) = request(&bad, vec![(0, 1)]);
+        sched.submit(r);
+        // The job panicked before replying: the reply channel closes.
+        assert!(rx.recv().is_err(), "failed job must not answer");
+
+        // The dataset slot was freed: the scheduler still serves other
+        // work (a healthy dataset) and can be dropped without hanging.
+        let good = Arc::new(RegisteredDataset::with_provider(
+            1,
+            "good",
+            tiny_dataset(),
+            ServeScheme::Sequential,
+            Box::new(CountingProvider {
+                pairs_computed: AtomicUsize::new(0),
+                batches: AtomicUsize::new(0),
+            }),
+        ));
+        let (r2, rx2) = request(&good, vec![(0, 2)]);
+        sched.submit(r2);
+        assert_eq!(rx2.recv().unwrap(), vec![2.0]);
+        drop(sched);
+
+        std::panic::set_hook(prev);
+    }
+
+    #[test]
+    fn shutdown_drains_cleanly() {
+        let sched = MissScheduler::new(1);
+        let ds = registered(Box::new(CountingProvider {
+            pairs_computed: AtomicUsize::new(0),
+            batches: AtomicUsize::new(0),
+        }));
+        let (r, rx) = request(&ds, vec![(0, 2)]);
+        sched.submit(r);
+        drop(sched); // Drop waits for the in-flight job
+        assert_eq!(rx.recv().unwrap(), vec![2.0]);
+    }
+}

@@ -1,0 +1,530 @@
+//! Multi-tenant workload scripts for `dicfs queries --script FILE`.
+//!
+//! A script is a line-based description of a service workload — the
+//! batch-mode stand-in for a network listener, sufficient to replay the
+//! traffic pattern the service is built for (many users, overlapping
+//! queries, several datasets):
+//!
+//! ```text
+//! # tenant datasets: registered once, cached across every query
+//! dataset logs   family=kddcup99 rows=4000 features=20 seed=7  scheme=hp
+//! dataset wide   family=epsilon  rows=1500 features=40 seed=3  scheme=vp
+//!
+//! # queries: executed concurrently; repeats model repeated traffic
+//! query logs repeat=3
+//! query logs max_fails=3 locally_predictive=false
+//! query wide repeat=2 queue_capacity=3
+//! ```
+//!
+//! `dataset` lines take `family=` (one of the Table-1 families), `rows=`,
+//! `features=`, `seed=`, `scheme=seq|hp|vp`, `partitions=`. `query` lines
+//! reference a dataset by name and accept `max_fails=`,
+//! `queue_capacity=`, `locally_predictive=true|false`, `repeat=`. Blank
+//! lines and `#` comments are ignored.
+
+use std::collections::HashMap;
+use std::sync::Arc;
+
+use crate::cfs::best_first::CfsConfig;
+use crate::cfs::SequentialCfs;
+use crate::core::{Error, Result};
+use crate::data::synth::{by_name, SynthConfig, FAMILIES};
+use crate::harness::report::fmt_secs;
+use crate::runtime::SuEngine;
+use crate::serve::{
+    DatasetCacheReport, DicfsService, QueryReport, QuerySpec, ServeScheme, ServiceConfig,
+    SuJobReport,
+};
+use crate::sparklet::ClusterConfig;
+use crate::util::chart::table;
+
+/// One `dataset` declaration.
+#[derive(Debug, Clone)]
+pub struct DatasetDecl {
+    /// Registration name queries refer to.
+    pub name: String,
+    /// Synthetic family (Table 1).
+    pub family: String,
+    /// Row count.
+    pub rows: usize,
+    /// Feature count override.
+    pub features: Option<usize>,
+    /// Generator seed.
+    pub seed: u64,
+    /// Correlation backend.
+    pub scheme: ServeScheme,
+    /// Partition-count override.
+    pub partitions: Option<usize>,
+}
+
+/// One `query` declaration (expanded `repeat` times at replay).
+#[derive(Debug, Clone)]
+pub struct QueryDecl {
+    /// Name of the dataset the query targets.
+    pub dataset: String,
+    /// Search configuration.
+    pub cfs: CfsConfig,
+    /// How many identical queries this line contributes (0 disables the
+    /// line).
+    pub repeat: usize,
+}
+
+/// A parsed workload script.
+#[derive(Debug, Clone, Default)]
+pub struct WorkloadScript {
+    /// Datasets to register, in declaration order.
+    pub datasets: Vec<DatasetDecl>,
+    /// Queries to run, in declaration order.
+    pub queries: Vec<QueryDecl>,
+}
+
+fn kv_pairs(
+    tokens: &[&str],
+    allowed: &[&str],
+    line_no: usize,
+) -> Result<HashMap<String, String>> {
+    let mut kv = HashMap::new();
+    for t in tokens {
+        let (k, v) = t.split_once('=').ok_or_else(|| {
+            Error::InvalidConfig(format!("line {line_no}: expected key=value, got {t:?}"))
+        })?;
+        if !allowed.contains(&k) {
+            return Err(Error::InvalidConfig(format!(
+                "line {line_no}: unknown key {k:?} (expected one of {allowed:?})"
+            )));
+        }
+        if kv.insert(k.to_string(), v.to_string()).is_some() {
+            return Err(Error::InvalidConfig(format!(
+                "line {line_no}: duplicate key {k:?}"
+            )));
+        }
+    }
+    Ok(kv)
+}
+
+fn parse_num<T: std::str::FromStr>(
+    kv: &HashMap<String, String>,
+    key: &str,
+    line_no: usize,
+) -> Result<Option<T>> {
+    match kv.get(key) {
+        None => Ok(None),
+        Some(v) => v.parse().map(Some).map_err(|_| {
+            Error::InvalidConfig(format!("line {line_no}: {key}={v:?} is not a number"))
+        }),
+    }
+}
+
+/// Parse a workload script. Errors name the offending line.
+pub fn parse(text: &str) -> Result<WorkloadScript> {
+    let mut script = WorkloadScript::default();
+    for (i, raw) in text.lines().enumerate() {
+        let line_no = i + 1;
+        let line = raw.split('#').next().unwrap_or("").trim();
+        if line.is_empty() {
+            continue;
+        }
+        let tokens: Vec<&str> = line.split_whitespace().collect();
+        match tokens[0] {
+            "dataset" => {
+                let name = tokens
+                    .get(1)
+                    .filter(|t| !t.contains('='))
+                    .ok_or_else(|| {
+                        Error::InvalidConfig(format!("line {line_no}: dataset needs a name"))
+                    })?
+                    .to_string();
+                if script.datasets.iter().any(|d| d.name == name) {
+                    return Err(Error::InvalidConfig(format!(
+                        "line {line_no}: dataset {name:?} declared twice"
+                    )));
+                }
+                let kv = kv_pairs(
+                    &tokens[2..],
+                    &["family", "rows", "features", "seed", "scheme", "partitions"],
+                    line_no,
+                )?;
+                let family = kv.get("family").cloned().unwrap_or_else(|| "higgs".into());
+                if !FAMILIES.contains(&family.as_str()) {
+                    return Err(Error::InvalidConfig(format!(
+                        "line {line_no}: unknown family {family:?} (expected one of {FAMILIES:?})"
+                    )));
+                }
+                let scheme = match kv.get("scheme") {
+                    None => ServeScheme::Horizontal,
+                    Some(s) => ServeScheme::parse(s).ok_or_else(|| {
+                        Error::InvalidConfig(format!(
+                            "line {line_no}: unknown scheme {s:?} (seq|hp|vp)"
+                        ))
+                    })?,
+                };
+                script.datasets.push(DatasetDecl {
+                    name,
+                    family,
+                    rows: parse_num(&kv, "rows", line_no)?.unwrap_or(2_000),
+                    features: parse_num(&kv, "features", line_no)?,
+                    seed: parse_num(&kv, "seed", line_no)?.unwrap_or(1),
+                    scheme,
+                    partitions: parse_num(&kv, "partitions", line_no)?,
+                });
+            }
+            "query" => {
+                let dataset = tokens
+                    .get(1)
+                    .filter(|t| !t.contains('='))
+                    .ok_or_else(|| {
+                        Error::InvalidConfig(format!("line {line_no}: query needs a dataset name"))
+                    })?
+                    .to_string();
+                let kv = kv_pairs(
+                    &tokens[2..],
+                    &["max_fails", "queue_capacity", "locally_predictive", "repeat"],
+                    line_no,
+                )?;
+                let mut cfs = CfsConfig::default();
+                if let Some(v) = parse_num(&kv, "max_fails", line_no)? {
+                    cfs.max_fails = v;
+                }
+                if let Some(v) = parse_num(&kv, "queue_capacity", line_no)? {
+                    cfs.queue_capacity = v;
+                }
+                if let Some(v) = kv.get("locally_predictive") {
+                    cfs.locally_predictive = match v.as_str() {
+                        "true" => true,
+                        "false" => false,
+                        other => {
+                            return Err(Error::InvalidConfig(format!(
+                                "line {line_no}: locally_predictive={other:?} (true|false)"
+                            )))
+                        }
+                    };
+                }
+                script.queries.push(QueryDecl {
+                    dataset,
+                    cfs,
+                    repeat: parse_num(&kv, "repeat", line_no)?.unwrap_or(1),
+                });
+            }
+            other => {
+                return Err(Error::InvalidConfig(format!(
+                    "line {line_no}: unknown directive {other:?} (dataset|query)"
+                )))
+            }
+        }
+    }
+    for q in &script.queries {
+        if !script.datasets.iter().any(|d| d.name == q.dataset) {
+            return Err(Error::InvalidConfig(format!(
+                "query references undeclared dataset {:?}",
+                q.dataset
+            )));
+        }
+    }
+    Ok(script)
+}
+
+/// Replay knobs (the `dicfs queries` flags).
+#[derive(Debug, Clone, Copy)]
+pub struct ReplayOptions {
+    /// Virtual cluster nodes.
+    pub nodes: usize,
+    /// Admission control: max distributed SU jobs in flight.
+    pub max_inflight_jobs: usize,
+    /// Concurrent query threads per wave.
+    pub concurrency: usize,
+    /// Re-run every distinct (dataset, config) sequentially and assert
+    /// the equivalence invariant.
+    pub verify: bool,
+}
+
+impl Default for ReplayOptions {
+    fn default() -> Self {
+        Self {
+            nodes: 10,
+            max_inflight_jobs: 2,
+            concurrency: 4,
+            verify: false,
+        }
+    }
+}
+
+/// Everything a replay produced (the printable service session).
+#[derive(Debug, Clone)]
+pub struct ReplaySummary {
+    /// Per-query reports, in completion-wave order.
+    pub reports: Vec<QueryReport>,
+    /// Final per-dataset cache state.
+    pub datasets: Vec<DatasetCacheReport>,
+    /// Per-job scheduler log.
+    pub jobs: Vec<SuJobReport>,
+    /// `Some(true)` when `verify` ran and every query matched its
+    /// isolated sequential run.
+    pub equivalence: Option<bool>,
+}
+
+/// Build a service, register the script's datasets, replay its queries
+/// in waves of `concurrency`, and return the session summary.
+///
+/// Panics on a verify mismatch — the equivalence invariant is the
+/// correctness contract of the whole service.
+pub fn replay(
+    script: &WorkloadScript,
+    opts: &ReplayOptions,
+    engine: Arc<dyn SuEngine>,
+) -> ReplaySummary {
+    let service = DicfsService::with_engine(
+        ServiceConfig {
+            cluster: ClusterConfig::with_nodes(opts.nodes),
+            max_inflight_jobs: opts.max_inflight_jobs,
+        },
+        engine,
+    );
+
+    let mut ids = HashMap::new();
+    for d in &script.datasets {
+        let raw = by_name(
+            &d.family,
+            &SynthConfig {
+                rows: d.rows,
+                seed: d.seed,
+                features: d.features,
+            },
+        );
+        let id = service
+            .register(&d.name, &raw, d.scheme, d.partitions)
+            .expect("register dataset");
+        ids.insert(d.name.clone(), id);
+        eprintln!(
+            "registered {:>10} [{}] {} rows x {} features (dataset {})",
+            d.name,
+            d.scheme.label(),
+            raw.num_rows(),
+            raw.num_features(),
+            id
+        );
+    }
+
+    let mut specs: Vec<QuerySpec> = Vec::new();
+    for q in &script.queries {
+        let id = *ids
+            .get(&q.dataset)
+            .unwrap_or_else(|| panic!("query references unknown dataset {:?}", q.dataset));
+        // repeat=0 disables the line (parse accepts it; replay honors it).
+        for _ in 0..q.repeat {
+            specs.push(QuerySpec {
+                dataset: id,
+                cfs: q.cfs,
+            });
+        }
+    }
+
+    let mut reports = Vec::with_capacity(specs.len());
+    for wave in specs.chunks(opts.concurrency.max(1)) {
+        reports.extend(service.run_concurrent(wave));
+    }
+
+    let equivalence = opts.verify.then(|| {
+        let mut baselines: HashMap<(usize, usize, usize, bool), Vec<usize>> = HashMap::new();
+        let mut ok = true;
+        // Baseline each distinct (dataset, config) once; reports are in
+        // spec order wave by wave, so the two lists line up.
+        for (spec, r) in specs.iter().zip(&reports) {
+            let key = (
+                spec.dataset,
+                spec.cfs.max_fails,
+                spec.cfs.queue_capacity,
+                spec.cfs.locally_predictive,
+            );
+            let baseline = baselines.entry(key).or_insert_with(|| {
+                let reg = service.dataset(spec.dataset).expect("registered");
+                SequentialCfs::new(spec.cfs)
+                    .select_discrete(&reg.data)
+                    .selected
+            });
+            if &r.result.selected != baseline {
+                eprintln!(
+                    "MISMATCH: query {} on dataset {} selected {:?}, sequential selected {:?}",
+                    r.query, r.dataset_name, r.result.selected, baseline
+                );
+                ok = false;
+            }
+        }
+        assert!(ok, "equivalence invariant violated under cache sharing");
+        ok
+    });
+
+    let summary = ReplaySummary {
+        reports,
+        datasets: service.cache_reports(),
+        jobs: service.job_log(),
+        equivalence,
+    };
+    print_summary(&summary);
+    summary
+}
+
+fn print_summary(s: &ReplaySummary) {
+    let qrows: Vec<Vec<String>> = s
+        .reports
+        .iter()
+        .map(|r| {
+            vec![
+                r.query.to_string(),
+                r.dataset_name.clone(),
+                r.result.selected.len().to_string(),
+                r.cache.requested.to_string(),
+                r.cache.hits.to_string(),
+                r.cache.computed.to_string(),
+                format!("{:.0}%", 100.0 * r.cache.hit_rate()),
+                fmt_secs(r.wall_secs),
+            ]
+        })
+        .collect();
+    println!(
+        "{}",
+        table(
+            &["query", "dataset", "selected", "requested", "hits", "computed", "hit rate", "wall s"],
+            &qrows
+        )
+    );
+
+    let drows: Vec<Vec<String>> = s
+        .datasets
+        .iter()
+        .map(|d| {
+            vec![
+                d.name.clone(),
+                d.distinct_pairs.to_string(),
+                d.full_matrix.to_string(),
+                format!("{:.2}%", 100.0 * d.fraction()),
+            ]
+        })
+        .collect();
+    println!(
+        "{}",
+        table(
+            &["dataset", "distinct SU pairs", "full matrix", "% of matrix"],
+            &drows
+        )
+    );
+
+    let coalesced = s.jobs.iter().filter(|j| j.coalesced_requests > 1).count();
+    let computed: usize = s.jobs.iter().map(|j| j.computed_pairs).sum();
+    let max_queue = s.jobs.iter().map(|j| j.queue_secs).fold(0.0, f64::max);
+    println!(
+        "jobs: {} ({} coalesced >1 request), {} pairs computed, max queue wait {}s",
+        s.jobs.len(),
+        coalesced,
+        computed,
+        fmt_secs(max_queue)
+    );
+    if let Some(ok) = s.equivalence {
+        println!(
+            "equivalence vs sequential: {}",
+            if ok { "EXACT MATCH" } else { "MISMATCH!" }
+        );
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::NativeEngine;
+
+    const SCRIPT: &str = "\
+# two tenants
+dataset a family=higgs rows=500 features=8 seed=5 scheme=hp
+dataset b family=kddcup99 rows=400 features=9 seed=6 scheme=seq
+
+query a repeat=2
+query a max_fails=3 locally_predictive=false
+query b queue_capacity=3
+";
+
+    #[test]
+    fn parses_datasets_and_queries() {
+        let s = parse(SCRIPT).unwrap();
+        assert_eq!(s.datasets.len(), 2);
+        assert_eq!(s.datasets[0].name, "a");
+        assert_eq!(s.datasets[0].scheme, ServeScheme::Horizontal);
+        assert_eq!(s.datasets[1].scheme, ServeScheme::Sequential);
+        assert_eq!(s.queries.len(), 3);
+        assert_eq!(s.queries[0].repeat, 2);
+        assert_eq!(s.queries[1].cfs.max_fails, 3);
+        assert!(!s.queries[1].cfs.locally_predictive);
+        assert_eq!(s.queries[2].cfs.queue_capacity, 3);
+    }
+
+    #[test]
+    fn parse_errors_name_the_line() {
+        let err = parse("dataset x family=nope\n").unwrap_err();
+        assert!(err.to_string().contains("line 1"));
+        let err = parse("query\n").unwrap_err();
+        assert!(err.to_string().contains("line 1"));
+        let err = parse("frobnicate a\n").unwrap_err();
+        assert!(err.to_string().contains("frobnicate"));
+        let err = parse("dataset a family=higgs\nquery a max_fails=soon\n").unwrap_err();
+        assert!(err.to_string().contains("not a number"));
+    }
+
+    #[test]
+    fn unknown_keys_are_rejected_and_repeat_zero_disables() {
+        // A typo'd key must not silently fall back to a default.
+        let err = parse("dataset a family=higgs row=500\n").unwrap_err();
+        assert!(err.to_string().contains("unknown key"), "{err}");
+        let err = parse("dataset a family=higgs\nquery a max_fail=3\n").unwrap_err();
+        assert!(err.to_string().contains("unknown key"), "{err}");
+
+        let s = parse("dataset a family=higgs\nquery a repeat=0\n").unwrap();
+        assert_eq!(s.queries[0].repeat, 0, "repeat=0 is a valid declaration");
+
+        // Duplicate keys on one line are an error, not last-one-wins.
+        let err = parse("dataset a family=higgs\nquery a repeat=3 repeat=0\n").unwrap_err();
+        assert!(err.to_string().contains("duplicate key"), "{err}");
+    }
+
+    #[test]
+    fn parse_rejects_duplicate_and_undeclared_datasets() {
+        let err =
+            parse("dataset a family=higgs\ndataset a family=kddcup99\n").unwrap_err();
+        assert!(err.to_string().contains("line 2"), "{err}");
+        assert!(err.to_string().contains("declared twice"));
+
+        let err = parse("dataset a family=higgs\nquery b\n").unwrap_err();
+        assert!(err.to_string().contains("undeclared dataset"));
+    }
+
+    #[test]
+    fn comments_and_blanks_ignored() {
+        let s = parse("# nothing\n\n   \ndataset a family=higgs rows=100 # inline\n").unwrap();
+        assert_eq!(s.datasets.len(), 1);
+        assert!(s.queries.is_empty());
+    }
+
+    #[test]
+    fn replay_runs_and_verifies_equivalence() {
+        let script = parse(SCRIPT).unwrap();
+        let summary = replay(
+            &script,
+            &ReplayOptions {
+                nodes: 2,
+                max_inflight_jobs: 2,
+                concurrency: 2,
+                verify: true,
+            },
+            Arc::new(NativeEngine),
+        );
+        assert_eq!(summary.reports.len(), 4); // 2 + 1 + 1
+        assert_eq!(summary.equivalence, Some(true));
+        // The repeated query pair shares dataset a's cache: at least one
+        // of the queries on `a` must have been served hits.
+        let a_hits: usize = summary
+            .reports
+            .iter()
+            .filter(|r| r.dataset_name == "a")
+            .map(|r| r.cache.hits)
+            .sum();
+        assert!(a_hits > 0, "no cross-query hits on dataset a");
+        assert!(!summary.jobs.is_empty());
+    }
+}

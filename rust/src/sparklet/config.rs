@@ -100,6 +100,16 @@ impl ClusterConfig {
         (self.nodes * self.cores_per_node).max(1)
     }
 
+    /// Spark's block-count heuristic for row-partitioned inputs: one
+    /// partition per 64-row block, capped at 2× the cluster's slots.
+    /// The block size is calibrated so per-task compute stays well above
+    /// the launch overhead at host scale (see
+    /// [`ClusterConfig::task_overhead_s`]). Shared by DiCFS-hp, RegCFS
+    /// and the multi-query service so their defaults cannot drift apart.
+    pub fn default_row_partitions(&self, rows: usize) -> usize {
+        rows.div_ceil(64).clamp(1, 2 * self.total_slots())
+    }
+
     /// Single-node, single-core "cluster" (the WEKA baseline topology).
     pub fn single_node() -> Self {
         Self {

@@ -31,6 +31,11 @@
 //!
 //! Fault tolerance: like Spark, failed tasks are retried ([`pool`];
 //! `TaskOptions::max_retries`), which the failure-injection tests use.
+//!
+//! The context is shared-by-design: actions may be submitted from many
+//! driver threads at once (DESIGN.md §3), which is how the multi-query
+//! service ([`crate::serve`]) runs concurrent correlation jobs over one
+//! long-lived context and executor pool.
 
 pub mod config;
 pub mod metrics;

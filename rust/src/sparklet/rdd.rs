@@ -35,6 +35,26 @@ use crate::sparklet::pool::{ExecutorPool, TaskOptions};
 
 /// Driver context: owns the cluster topology, the persistent executor
 /// pool, the metrics log and the real execution options.
+///
+/// The context is thread-safe: actions may be submitted from many driver
+/// threads at once (each stage's tasks get their own result slots; the
+/// metrics log is a mutex), which is how the multi-query service
+/// (`crate::serve`) runs concurrent correlation jobs over one shared
+/// context. The only restriction is Spark's own: a *task closure* must
+/// never invoke an action (see [`ExecutorPool`]).
+///
+/// ```
+/// use dicfs::sparklet::{ClusterConfig, SparkletContext};
+///
+/// let ctx = SparkletContext::new(ClusterConfig::with_nodes(2));
+/// let squares = ctx
+///     .parallelize((0..100).collect::<Vec<i64>>(), 8)
+///     .map("square", |x| x * x)        // lazy: records lineage only
+///     .filter("even", |x| x % 2 == 0); // fuses with the map
+/// let out = squares.collect();         // one fused stage of 8 tasks
+/// assert_eq!(out.len(), 50);
+/// assert_eq!(ctx.metrics().stages_of_kind(dicfs::sparklet::StageKind::Map), 1);
+/// ```
 pub struct SparkletContext {
     /// Virtual topology used for simulated-time replay.
     pub cluster: ClusterConfig,
@@ -725,6 +745,35 @@ mod tests {
         let one = run(1);
         assert_eq!(one, run(4));
         assert_eq!(one, run(13));
+    }
+
+    #[test]
+    fn concurrent_actions_on_one_context() {
+        // Many driver threads submitting stages to one context (the
+        // multi-query service's usage pattern): results stay correct and
+        // every stage is accounted for in the shared metrics log.
+        let c = SparkletContext::with_options(
+            ClusterConfig::with_nodes(2),
+            TaskOptions::with_threads(4),
+        );
+        let c = &c;
+        std::thread::scope(|s| {
+            for t in 0..6usize {
+                s.spawn(move || {
+                    let base = (t * 100) as i64;
+                    let mut out = c
+                        .parallelize((base..base + 50).collect::<Vec<i64>>(), 4)
+                        .map("key", |x| (*x % 5, 1u64))
+                        .reduce_by_key("sum", 2, |_| 8, |a, b| *a += b)
+                        .collect();
+                    out.sort();
+                    assert_eq!(out.iter().map(|(_, n)| n).sum::<u64>(), 50);
+                });
+            }
+        });
+        let m = c.metrics();
+        assert_eq!(m.stages_of_kind(StageKind::Shuffle), 6);
+        assert_eq!(m.stages_of_kind(StageKind::Collect), 6);
     }
 
     #[test]

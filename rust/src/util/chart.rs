@@ -43,6 +43,7 @@ pub fn table(headers: &[&str], rows: &[Vec<String>]) -> String {
 
 /// A named series for [`line_chart`].
 pub struct Series<'a> {
+    /// Legend label.
     pub name: &'a str,
     /// (x, y) points; y = NaN marks "did not run" (e.g. WEKA OOM) gaps.
     pub points: &'a [(f64, f64)],

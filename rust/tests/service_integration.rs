@@ -1,0 +1,195 @@
+//! Integration tests for the multi-query service (DESIGN.md §10): the
+//! exactness invariant must survive cache sharing, and sharing must
+//! actually happen (warm queries see hits, the shared map never exceeds
+//! the union of isolated computations).
+
+use std::sync::Arc;
+
+use dicfs::cfs::best_first::CfsConfig;
+use dicfs::cfs::SequentialCfs;
+use dicfs::data::columnar::DiscreteDataset;
+use dicfs::data::synth::{by_name, SynthConfig};
+use dicfs::discretize::discretize_dataset;
+use dicfs::serve::{DicfsService, QuerySpec, ServeScheme, ServiceConfig};
+use dicfs::sparklet::ClusterConfig;
+
+fn discrete(family: &str, rows: usize, features: usize, seed: u64) -> Arc<DiscreteDataset> {
+    let ds = by_name(
+        family,
+        &SynthConfig {
+            rows,
+            seed,
+            features: Some(features),
+        },
+    );
+    Arc::new(discretize_dataset(&ds).unwrap())
+}
+
+fn service(nodes: usize, max_inflight: usize) -> DicfsService {
+    DicfsService::new(ServiceConfig {
+        cluster: ClusterConfig::with_nodes(nodes),
+        max_inflight_jobs: max_inflight,
+    })
+}
+
+/// Two concurrent searches on one registered dataset select exactly the
+/// features their isolated runs select, for both hp and vp backends.
+#[test]
+fn concurrent_queries_match_isolated_runs() {
+    for scheme in [ServeScheme::Horizontal, ServeScheme::Vertical] {
+        let dd = discrete("higgs", 900, 11, 41);
+        let svc = service(3, 2);
+        let id = svc.register_discrete("tenant", Arc::clone(&dd), scheme, None);
+
+        let configs = [
+            CfsConfig::default(),
+            CfsConfig {
+                locally_predictive: false,
+                ..CfsConfig::default()
+            },
+        ];
+        let specs: Vec<QuerySpec> = configs
+            .iter()
+            .map(|&cfs| QuerySpec { dataset: id, cfs })
+            .collect();
+        let reports = svc.run_concurrent(&specs);
+
+        for (cfs, r) in configs.iter().zip(&reports) {
+            let iso = SequentialCfs::new(*cfs).select_discrete(&dd);
+            assert_eq!(
+                r.result.selected, iso.selected,
+                "selection diverged under sharing ({scheme:?})"
+            );
+        }
+
+        // Sharing can only reduce work: the shared map holds at most the
+        // sum of what the isolated runs would have computed, and at
+        // least what the biggest single run needed.
+        let distinct = svc.cache_report(id).unwrap().distinct_pairs;
+        let iso_counts: Vec<usize> = configs
+            .iter()
+            .map(|&cfs| {
+                SequentialCfs::new(cfs)
+                    .select_discrete(&dd)
+                    .correlations_computed
+            })
+            .collect();
+        assert!(distinct <= iso_counts.iter().sum::<usize>());
+        assert!(distinct >= *iso_counts.iter().max().unwrap());
+    }
+}
+
+/// A second query on a registered dataset is served from the cache the
+/// first query filled: hits > 0 and nothing recomputed.
+#[test]
+fn second_query_sees_cross_query_hits() {
+    let svc = service(2, 1);
+    let id = svc.register_discrete(
+        "tenant",
+        discrete("kddcup99", 800, 10, 7),
+        ServeScheme::Horizontal,
+        None,
+    );
+    let spec = QuerySpec {
+        dataset: id,
+        cfs: CfsConfig::default(),
+    };
+    let first = svc.query(&spec);
+    assert!(first.cache.computed > 0);
+
+    let second = svc.query(&spec);
+    assert!(second.cache.hits > 0, "second query saw no shared hits");
+    assert_eq!(second.cache.computed, 0, "second query recomputed pairs");
+    assert_eq!(second.result.selected, first.result.selected);
+
+    // Per-query stats are split: both queries traverse the same
+    // trajectory, so they request the same pairs — but only the first
+    // reports them as computed, and the warm query's share of the full
+    // matrix is zero (the regression `fraction_of_full_matrix` guards).
+    assert_eq!(second.cache.requested, first.cache.requested);
+    let m = 10;
+    assert!(first.cache.fraction_of_full_matrix(m) > 0.0);
+    assert_eq!(second.cache.fraction_of_full_matrix(m), 0.0);
+    let report = svc.cache_report(id).unwrap();
+    assert_eq!(report.distinct_pairs, first.cache.computed);
+}
+
+/// A differently-configured warm query still benefits: its first
+/// expansion asks for the same class correlations.
+#[test]
+fn different_config_still_shares() {
+    let svc = service(2, 2);
+    let dd = discrete("epsilon", 600, 16, 13);
+    let id = svc.register_discrete("tenant", Arc::clone(&dd), ServeScheme::Vertical, None);
+    let _ = svc.query(&QuerySpec {
+        dataset: id,
+        cfs: CfsConfig::default(),
+    });
+    let other = svc.query(&QuerySpec {
+        dataset: id,
+        cfs: CfsConfig {
+            max_fails: 3,
+            queue_capacity: 3,
+            locally_predictive: false,
+        },
+    });
+    let iso = SequentialCfs::new(CfsConfig {
+        max_fails: 3,
+        queue_capacity: 3,
+        locally_predictive: false,
+    })
+    .select_discrete(&dd);
+    assert_eq!(other.result.selected, iso.selected);
+    assert!(other.cache.hits > 0, "no reuse across configs");
+}
+
+/// Heavier multi-tenant replay: many concurrent queries over two
+/// datasets, every selection equal to its isolated run, and the job log
+/// accounts for every computed pair.
+#[test]
+fn multi_tenant_replay_is_exact_and_accounted() {
+    let svc = service(4, 2);
+    let dd_a = discrete("higgs", 700, 9, 3);
+    let dd_b = discrete("kddcup99", 600, 8, 4);
+    let a = svc.register_discrete("a", Arc::clone(&dd_a), ServeScheme::Horizontal, None);
+    let b = svc.register_discrete("b", Arc::clone(&dd_b), ServeScheme::Vertical, None);
+
+    let mut specs = Vec::new();
+    for _ in 0..3 {
+        specs.push(QuerySpec {
+            dataset: a,
+            cfs: CfsConfig::default(),
+        });
+        specs.push(QuerySpec {
+            dataset: b,
+            cfs: CfsConfig::default(),
+        });
+    }
+    let reports = svc.run_concurrent(&specs);
+
+    let iso_a = SequentialCfs::default().select_discrete(&dd_a);
+    let iso_b = SequentialCfs::default().select_discrete(&dd_b);
+    for r in &reports {
+        let want = if r.dataset == a { &iso_a } else { &iso_b };
+        assert_eq!(r.result.selected, want.selected, "query {}", r.query);
+    }
+
+    // Identical concurrent queries traverse identical trajectories, so
+    // each dataset's shared map is exactly one isolated run's pair set.
+    assert_eq!(
+        svc.cache_report(a).unwrap().distinct_pairs,
+        iso_a.correlations_computed
+    );
+    assert_eq!(
+        svc.cache_report(b).unwrap().distinct_pairs,
+        iso_b.correlations_computed
+    );
+
+    // Every computed pair flowed through exactly one logged job.
+    let jobs = svc.job_log();
+    let job_pairs: usize = jobs.iter().map(|j| j.computed_pairs).sum();
+    assert_eq!(
+        job_pairs,
+        iso_a.correlations_computed + iso_b.correlations_computed
+    );
+}
