@@ -1,0 +1,56 @@
+//! Ablation for the adaptive partitioning planner (DESIGN.md §11):
+//! `--partitioning auto` vs forced hp vs forced vp across the three
+//! shape regimes (tall / wide / square), on a 10-node virtual cluster.
+//!
+//! Asserted acceptance bars:
+//! * **Never lose badly**: on every shape, auto's simulated wall-time is
+//!   within 10% of the *worse* fixed scheme (it must never be the worst
+//!   choice by a margin).
+//! * **Track the winner**: on the tall and wide shapes — where the
+//!   paper's §6 comparison separates the schemes — auto lands within
+//!   25% of the *better* fixed scheme after feedback warm-up.
+//! * **Exactness**: all three variants select identical features.
+//!
+//! Output: table + `bench_out/ablation_planner.csv` +
+//! `bench_out/BENCH_planner.json` (the machine-readable perf
+//! trajectory for this bench).
+
+use dicfs::harness::{bench_scale, planner};
+
+fn main() {
+    let scale = bench_scale();
+    eprintln!("ablation_planner: scale {scale}\n");
+    let rows = planner::run(scale, 10);
+    planner::emit(&rows);
+
+    for r in &rows {
+        assert!(
+            r.selections_equal,
+            "{}: auto/hp/vp selections diverged — exactness broken",
+            r.shape
+        );
+        assert!(
+            r.hp_batches + r.vp_batches > 0,
+            "{}: planner made no decisions",
+            r.shape
+        );
+        assert!(
+            r.auto_secs <= r.worse_fixed_secs() * 1.10,
+            "{}: auto {:.4}s lost to the worse fixed scheme ({:.4}s) by > 10%",
+            r.shape,
+            r.auto_secs,
+            r.worse_fixed_secs()
+        );
+    }
+    // Post-warm-up tracking on the shapes where the schemes separate.
+    for r in rows.iter().filter(|r| r.shape == "tall" || r.shape == "wide") {
+        assert!(
+            r.auto_secs <= r.better_fixed_secs() * 1.25,
+            "{}: auto {:.4}s failed to track the better fixed scheme ({:.4}s)",
+            r.shape,
+            r.auto_secs,
+            r.better_fixed_secs()
+        );
+    }
+    println!("ablation_planner: PASS (auto within 10% of worse everywhere, tracks better on tall+wide)");
+}

@@ -55,4 +55,32 @@ pub trait Correlator {
 pub trait SharedCorrelator: Send + Sync {
     /// Compute correlations for a batch of attribute pairs.
     fn compute_batch(&self, pairs: &[(FeatureId, FeatureId)]) -> Vec<f64>;
+
+    /// Take the partitioning-planner decisions accumulated since the
+    /// last call. Fixed hp/vp backends make no decisions (the default);
+    /// the adaptive backend
+    /// ([`AutoCorrelator`](crate::dicfs::planner::AutoCorrelator))
+    /// returns one [`PlanDecision`](crate::dicfs::plan::PlanDecision)
+    /// per batch it routed. The service's job scheduler drains this
+    /// after every coalesced job so each `SuJobReport` names the plans
+    /// that served it.
+    fn drain_plan_decisions(&self) -> Vec<crate::dicfs::plan::PlanDecision> {
+        Vec::new()
+    }
+}
+
+/// Adapter driving any [`SharedCorrelator`] through the `&mut`
+/// [`Correlator`] contract — how a single best-first search runs over
+/// an `Arc`-shared backend (e.g. the `DiCfs` driver over an
+/// [`AutoCorrelator`](crate::dicfs::planner::AutoCorrelator) it also
+/// needs to read decisions from afterwards).
+pub struct ArcCorrelator(
+    /// The shared backend every `compute` call delegates to.
+    pub std::sync::Arc<dyn SharedCorrelator>,
+);
+
+impl Correlator for ArcCorrelator {
+    fn compute(&mut self, pairs: &[(FeatureId, FeatureId)]) -> Vec<f64> {
+        self.0.compute_batch(pairs)
+    }
 }

@@ -90,6 +90,32 @@ impl ContingencyTable {
         self.counts.iter().sum()
     }
 
+    /// All marginals in a single scan of `counts`:
+    /// `(total, row_marginals, col_marginals)`.
+    ///
+    /// [`Self::total`], [`Self::row_marginals`] and
+    /// [`Self::col_marginals`] each rescan the table; the SU/entropy hot
+    /// path needs all three, so it uses this fused accumulation instead
+    /// (one pass over the cells, exact u64 sums — results are
+    /// bit-identical to the three separate scans).
+    pub fn marginals(&self) -> (u64, Vec<u64>, Vec<u64>) {
+        let bx = self.bins_x as usize;
+        let by = self.bins_y as usize;
+        let mut rows = vec![0u64; bx];
+        let mut cols = vec![0u64; by];
+        let mut total = 0u64;
+        for (x, row) in self.counts.chunks_exact(by.max(1)).take(bx).enumerate() {
+            let mut r = 0u64;
+            for (c, m) in row.iter().zip(cols.iter_mut()) {
+                r += c;
+                *m += c;
+            }
+            rows[x] = r;
+            total += r;
+        }
+        (total, rows, cols)
+    }
+
     /// Row marginals (counts of the first variable).
     pub fn row_marginals(&self) -> Vec<u64> {
         let by = self.bins_y as usize;
@@ -127,7 +153,15 @@ impl ContingencyTable {
     /// shape header + one u64 per cell. The sparklet cost model charges
     /// this amount per table per network hop.
     pub fn wire_bytes(&self) -> usize {
-        4 + self.counts.len() * 8
+        Self::wire_bytes_for_cells(self.counts.len())
+    }
+
+    /// [`Self::wire_bytes`] for a table of `cells` counts, without
+    /// building it — the partitioning planner prices hp shuffles from
+    /// arities alone, and must agree byte-for-byte with what an executed
+    /// job records.
+    pub const fn wire_bytes_for_cells(cells: usize) -> usize {
+        4 + cells * 8
     }
 }
 
@@ -149,6 +183,27 @@ mod tests {
         let t = ContingencyTable::from_columns(&[0, 0, 1, 2], 3, &[1, 0, 1, 1], 2);
         assert_eq!(t.row_marginals(), vec![2, 1, 1]);
         assert_eq!(t.col_marginals(), vec![1, 3]);
+    }
+
+    #[test]
+    fn fused_marginals_match_separate_scans() {
+        let t = ContingencyTable::from_columns(
+            &[0, 0, 1, 2, 2, 1, 0, 2],
+            3,
+            &[1, 0, 1, 1, 0, 0, 1, 1],
+            2,
+        );
+        let (total, rows, cols) = t.marginals();
+        assert_eq!(total, t.total());
+        assert_eq!(rows, t.row_marginals());
+        assert_eq!(cols, t.col_marginals());
+
+        // Empty table: zero total, zeroed marginals of the right shapes.
+        let e = ContingencyTable::new(4, 3);
+        let (total, rows, cols) = e.marginals();
+        assert_eq!(total, 0);
+        assert_eq!(rows, vec![0; 4]);
+        assert_eq!(cols, vec![0; 3]);
     }
 
     #[test]
@@ -185,5 +240,10 @@ mod tests {
     fn wire_bytes_tracks_shape() {
         assert_eq!(ContingencyTable::new(2, 2).wire_bytes(), 4 + 4 * 8);
         assert_eq!(ContingencyTable::new(32, 32).wire_bytes(), 4 + 1024 * 8);
+        // The cell-count form (used by the planner) agrees by definition.
+        assert_eq!(
+            ContingencyTable::wire_bytes_for_cells(4),
+            ContingencyTable::new(2, 2).wire_bytes()
+        );
     }
 }

@@ -11,10 +11,9 @@ use crate::correlation::entropy::entropies;
 
 /// SU from a contingency table.
 pub fn su_from_table(t: &ContingencyTable) -> f64 {
-    let total = t.total();
-    if total == 0 {
-        return 0.0;
-    }
+    // `entropies` is a single fused pass (total + marginals together);
+    // an empty table comes back as (0, 0, 0) and falls into the
+    // zero-denominator case below — no separate `total()` scan needed.
     let (hx, hy, hxy) = entropies(t);
     let denom = hx + hy;
     if denom <= 0.0 {

@@ -13,6 +13,11 @@
 //! | `higgs_like`  | HIGGS         | 28   | numeric          | 2       |
 //! | `kddcup99_like`| KDDCUP99     | 41   | numeric + categ. | 5       |
 //! | `epsilon_like`| EPSILON       | 2000 | numeric          | 2       |
+//! | `wide_like`   | *(planner)*   | 4000 | numeric + categ. | 2       |
+//!
+//! `wide_like` is not from Table 1: it is the features ≫ rows regime
+//! (skewed 2–32 categorical arities) the partitioning planner's harness
+//! and benches use to exercise the corner where DiCFS-vp wins.
 //!
 //! Row counts are scaled to this host (the paper's 0.5M–33.6M rows are a
 //! hardware gate — see DESIGN.md §2); `SynthConfig::rows` sets the 100%
@@ -269,6 +274,17 @@ pub fn epsilon_like(cfg: &SynthConfig) -> Dataset {
     with_roles("epsilon", cfg).dataset
 }
 
+/// Wide regime: features ≫ rows with heavily skewed categorical arities
+/// (2–32 bins), the shape where the paper's §6 comparison shows vp
+/// winning. Not a Table-1 family — it exists so the partitioning-planner
+/// harness and benches exercise the low-instances/high-features corner
+/// (pair batches are huge, contingency tables fat, reference columns
+/// tiny). Pair with a small `rows` (the default 100% scale is meant to
+/// sit near rows ≈ features / 20).
+pub fn wide_like(cfg: &SynthConfig) -> Dataset {
+    with_roles("wide", cfg).dataset
+}
+
 /// Generate with ground-truth roles exposed (tests and ablations).
 pub fn with_roles(family: &str, cfg: &SynthConfig) -> SynthDataset {
     let spec = match family {
@@ -312,6 +328,20 @@ pub fn with_roles(family: &str, cfg: &SynthConfig) -> SynthDataset {
             relevant: 50,
             redundant: 200,
         },
+        "wide" => FamilySpec {
+            name: "wide",
+            features: 4000,
+            // Half the columns categorical with the full 2–32 arity
+            // spread: contingency tables range from 4 to ~1024 cells, so
+            // hp's table shuffle cost is both large and heterogeneous —
+            // exactly the regime the planner has to price correctly.
+            numeric_frac: 0.5,
+            cat_arity: (2, 32),
+            class_arity: 2,
+            class_prior: vec![0.6, 0.4],
+            relevant: 60,
+            redundant: 400,
+        },
         other => panic!("unknown family {other}"),
     };
     generate(&spec, cfg)
@@ -322,8 +352,9 @@ pub fn by_name(family: &str, cfg: &SynthConfig) -> Dataset {
     with_roles(family, cfg).dataset
 }
 
-/// All family names, in the paper's Table 1 order.
-pub const FAMILIES: [&str; 4] = ["ecbdl14", "higgs", "kddcup99", "epsilon"];
+/// All family names: the paper's Table 1 order, then the extra `wide`
+/// planner-harness regime (features ≫ rows, skewed arities).
+pub const FAMILIES: [&str; 5] = ["ecbdl14", "higgs", "kddcup99", "epsilon", "wide"];
 
 #[cfg(test)]
 mod tests {
@@ -435,6 +466,36 @@ mod tests {
         } else {
             panic!("higgs columns are numeric");
         }
+    }
+
+    #[test]
+    fn wide_family_is_wide_with_skewed_arities() {
+        let cfg = SynthConfig {
+            rows: 150,
+            seed: 7,
+            features: None,
+        };
+        let ds = wide_like(&cfg);
+        assert_eq!(ds.num_features(), 4000);
+        assert!(
+            ds.num_features() > 20 * ds.num_rows(),
+            "wide family must be features ≫ rows at small row counts"
+        );
+        // Arities must actually spread across the 2–32 range (skew), not
+        // collapse to binary like epsilon.
+        let mut arities: Vec<u16> = ds
+            .features
+            .iter()
+            .filter_map(|c| match c {
+                Column::Categorical { arity, .. } => Some(*arity),
+                Column::Numeric(_) => None,
+            })
+            .collect();
+        arities.sort_unstable();
+        assert!(!arities.is_empty(), "wide family has categorical columns");
+        assert!(*arities.last().unwrap() > 8, "no high-arity columns");
+        assert!(*arities.first().unwrap() < *arities.last().unwrap());
+        assert!(FAMILIES.contains(&"wide"));
     }
 
     #[test]

@@ -26,6 +26,7 @@ use crate::cfs::{Correlator, SharedCorrelator};
 use crate::core::FeatureId;
 use crate::correlation::ContingencyTable;
 use crate::data::columnar::DiscreteDataset;
+use crate::dicfs::plan::{self, PlanSpec};
 use crate::runtime::{ColumnPair, SuEngine};
 use crate::sparklet::{Rdd, SparkletContext};
 
@@ -72,6 +73,18 @@ impl HorizontalCorrelator {
             bins_y,
         }
     }
+
+    /// Lower a pair batch to its plan IR (`pair batch → row layout →
+    /// ctable shuffle → SU collect`) without running it — what the
+    /// adaptive planner prices when deciding hp vs vp.
+    pub fn plan(&self, pairs: &[(FeatureId, FeatureId)]) -> PlanSpec {
+        plan::hp_plan(
+            &self.data,
+            pairs,
+            &self.ctx.cluster,
+            self.ranges.num_partitions(),
+        )
+    }
 }
 
 /// The hp job is stateless on the driver side (it only reads the shared
@@ -112,7 +125,7 @@ impl SharedCorrelator for HorizontalCorrelator {
             "mergeCTables",
             reduce_parts,
             ContingencyTable::wire_bytes,
-            |a, b| a.merge(&b).expect("pair tables share shape"),
+            |a, b| a.merge(b).expect("pair tables share shape"),
         );
 
         // 4. SU finish *in parallel on the CTables RDD* (paper §5.1: "this
@@ -129,10 +142,9 @@ impl SharedCorrelator for HorizontalCorrelator {
                 .zip(values)
                 .collect::<Vec<(usize, f64)>>()
         });
-        let mut collected = sus.collect_sized(|_| 8);
-        collected.sort_by_key(|(i, _)| *i);
-        debug_assert_eq!(collected.len(), pairs.len());
-        collected.into_iter().map(|(_, v)| v).collect()
+        // Shared job-assembly tail (plan.rs): collect 8 B scalars,
+        // restore request order.
+        plan::collect_su(&sus, pairs.len())
     }
 }
 
@@ -213,6 +225,28 @@ mod tests {
     fn empty_batch() {
         let (_ctx, mut corr, _) = setup(3);
         assert!(corr.compute(&[]).is_empty());
+    }
+
+    #[test]
+    fn plan_predicts_the_job_it_lowers_to() {
+        // The IR is honest: the bytes the plan promises are the bytes
+        // the executed job records.
+        let (ctx, corr, _) = setup(6);
+        let pairs = vec![(0, CLASS_ID), (1, 2), (3, CLASS_ID)];
+        let spec = corr.plan(&pairs);
+        let _ = corr.compute_batch(&pairs);
+        let m = ctx.metrics();
+        let shuffle = m
+            .stages
+            .iter()
+            .find(|s| s.label == "localCTables+mergeCTables")
+            .expect("shuffle stage");
+        let sh = spec.shuffle.expect("hp plans a shuffle");
+        assert_eq!(sh.bytes, shuffle.shuffle_bytes);
+        assert_eq!(spec.broadcast_bytes, m.broadcast_bytes[0]);
+        let collect = m.stages.iter().find(|s| s.label == "collect").unwrap();
+        assert_eq!(spec.collect_bytes, collect.collect_bytes);
+        assert_eq!(spec.num_pairs, pairs.len());
     }
 
     #[test]

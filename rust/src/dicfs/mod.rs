@@ -15,17 +15,27 @@
 //! [`DiCfs`] is the user-facing driver: it owns the cluster topology, the
 //! engine choice (native / PJRT), runs the search, and reports both real
 //! and simulated-cluster timings.
+//!
+//! Since neither scheme dominates (the paper's §6 result: the winner
+//! flips with the instances-to-features ratio), both lower to the
+//! [`plan`] correlation-plan IR and [`Partitioning::Auto`] — the default
+//! — lets the [`planner`] choose per batch from a cost model refined by
+//! measured feedback.
 
 pub mod hp;
+pub mod plan;
+pub mod planner;
 pub mod vp;
 
 use std::sync::Arc;
 
 use crate::cfs::best_first::{BestFirstSearch, CfsConfig};
-use crate::cfs::Correlator;
+use crate::cfs::{ArcCorrelator, Correlator};
 use crate::core::SelectionResult;
 use crate::correlation::CorrelationCache;
 use crate::data::columnar::DiscreteDataset;
+use crate::dicfs::plan::PlanDecision;
+use crate::dicfs::planner::AutoCorrelator;
 use crate::runtime::SuEngine;
 use crate::sparklet::simtime::SimTime;
 use crate::sparklet::{simulate_job_time, ClusterConfig, JobMetrics, SparkletContext};
@@ -38,6 +48,9 @@ pub enum Partitioning {
     Horizontal,
     /// DiCFS-vp: split features (columns) across workers.
     Vertical,
+    /// Adaptive: the [`planner`] chooses hp or vp per correlation batch
+    /// (cost model + measured feedback). The default.
+    Auto,
 }
 
 /// DiCFS driver configuration.
@@ -52,14 +65,15 @@ pub struct DiCfsConfig {
     /// Partition count override. Defaults: hp → 2 × total slots (Spark
     /// block-count heuristic); vp → the number of features m (the
     /// fast-mRMR default the paper follows, and the knob its §6
-    /// partition-tuning experiment turns).
+    /// partition-tuning experiment turns). Under [`Partitioning::Auto`]
+    /// an override applies to both lowerings.
     pub num_partitions: Option<usize>,
 }
 
 impl Default for DiCfsConfig {
     fn default() -> Self {
         Self {
-            partitioning: Partitioning::Horizontal,
+            partitioning: Partitioning::Auto,
             cfs: CfsConfig::default(),
             cluster: ClusterConfig::default(),
             num_partitions: None,
@@ -90,6 +104,9 @@ pub struct DiCfsRun {
     pub sim: SimTime,
     /// Real wall-clock of the whole run on this host.
     pub wall_secs: f64,
+    /// Planner decisions, one per correlation batch (predicted vs
+    /// observed cost). Empty for the fixed hp/vp schemes.
+    pub decisions: Vec<PlanDecision>,
 }
 
 /// The distributed CFS driver.
@@ -115,6 +132,10 @@ impl DiCfs {
         let ctx = SparkletContext::new(self.config.cluster);
         let m = data.num_features();
         let cluster_secs = std::rc::Rc::new(std::cell::Cell::new(0.0f64));
+        // Construction happens *inside* the timed window (vp pays its
+        // columnar shuffle there, as before); the handle escapes through
+        // the cell so the planner's decision log can be read afterwards.
+        let auto: std::cell::RefCell<Option<Arc<AutoCorrelator>>> = std::cell::RefCell::new(None);
 
         let (result, wall_secs) = timed(|| {
             let inner: Box<dyn Correlator> = match self.config.partitioning {
@@ -132,6 +153,16 @@ impl DiCfs {
                     Arc::clone(&self.engine),
                     self.config.num_partitions.unwrap_or(m),
                 )),
+                Partitioning::Auto => {
+                    let backend = Arc::new(AutoCorrelator::new(
+                        &ctx,
+                        Arc::clone(data),
+                        Arc::clone(&self.engine),
+                        self.config.num_partitions,
+                    ));
+                    *auto.borrow_mut() = Some(Arc::clone(&backend));
+                    Box::new(ArcCorrelator(backend))
+                }
             };
             let mut correlator = TimedCorrelator::new(inner);
             let mut cache = CorrelationCache::new();
@@ -157,6 +188,10 @@ impl DiCfs {
             metrics,
             sim,
             wall_secs,
+            decisions: auto
+                .into_inner()
+                .map(|a| a.planner().decisions())
+                .unwrap_or_default(),
         }
     }
 }
@@ -230,8 +265,32 @@ mod tests {
     }
 
     #[test]
+    fn auto_equals_sequential_and_logs_decisions() {
+        let dd = dataset();
+        let seq = SequentialCfs::default().select_discrete(&dd);
+        let auto = DiCfs::native(DiCfsConfig::for_scheme(Partitioning::Auto, 4)).select(&dd);
+        assert_eq!(auto.result.selected, seq.selected, "paper equivalence claim");
+        assert!((auto.result.merit - seq.merit).abs() < 1e-12);
+        // One decision per correlation batch, with both sides of the
+        // predicted-vs-observed comparison filled in.
+        assert!(!auto.decisions.is_empty());
+        for d in &auto.decisions {
+            assert!(d.predicted_secs > 0.0 && d.observed_secs > 0.0);
+        }
+    }
+
+    #[test]
+    fn fixed_schemes_log_no_decisions() {
+        let dd = dataset();
+        let hp = DiCfs::native(DiCfsConfig::for_scheme(Partitioning::Horizontal, 4)).select(&dd);
+        assert!(hp.decisions.is_empty());
+    }
+
+    #[test]
     fn run_reports_metrics_and_sim_time() {
         let dd = dataset();
+        // The default configuration is Partitioning::Auto.
+        assert_eq!(DiCfsConfig::default().partitioning, Partitioning::Auto);
         let run = DiCfs::native(DiCfsConfig::default()).select(&dd);
         assert!(run.metrics.total_tasks() > 0);
         assert!(run.wall_secs > 0.0);

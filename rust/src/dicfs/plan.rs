@@ -1,0 +1,551 @@
+//! The correlation-plan IR: one batch of SU pairs, described as data
+//! before it runs.
+//!
+//! Both §5 partitioning schemes execute the *same* logical job — resolve
+//! a pair batch against a partition layout, move data (broadcast and/or
+//! shuffle), and collect one scalar SU per pair. What differs is the
+//! shape of each step. [`PlanSpec`] captures that shape explicitly
+//! (pair batch → partition layout → shuffle shape → SU collect), and
+//! both [`super::hp::HorizontalCorrelator`] and
+//! [`super::vp::VerticalCorrelator`] lower their batches to it:
+//!
+//! | stage            | hp (§5.1)                        | vp (§5.2)                   |
+//! |------------------|----------------------------------|-----------------------------|
+//! | broadcast        | pair ids (16 B each)             | reference columns (n B each)|
+//! | partition layout | [`PartitionLayout::Rows`]        | [`PartitionLayout::Features`]|
+//! | shuffle shape    | partial ctables, one per pair per partition | none (the one-time columnar setup is charged separately) |
+//! | SU collect       | 8 B per pair                     | 8 B per pair                |
+//!
+//! Because the spec is pure data, it can be **costed without running**:
+//! [`PlanSpec::estimate`] prices the network steps with the exact same
+//! [`NetworkModel`](crate::sparklet::NetworkModel) formulas the
+//! virtual-cluster replay uses, and the compute steps with a per-cell
+//! rate the planner ([`super::planner`]) calibrates online from observed
+//! [`StageMetrics`](crate::sparklet::StageMetrics). That shared-formula
+//! property is what makes predicted-vs-observed comparisons meaningful.
+
+use std::collections::HashMap;
+
+use crate::core::{FeatureId, CLASS_ID};
+use crate::data::columnar::DiscreteDataset;
+use crate::sparklet::{ClusterConfig, Rdd};
+
+/// Which §5 partitioning scheme a plan lowers to.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Strategy {
+    /// DiCFS-hp: rows partitioned, tables shuffled.
+    Hp,
+    /// DiCFS-vp: features partitioned, references broadcast.
+    Vp,
+}
+
+impl Strategy {
+    /// Canonical short label (`hp` / `vp`), as used in reports.
+    pub fn label(self) -> &'static str {
+        match self {
+            Strategy::Hp => "hp",
+            Strategy::Vp => "vp",
+        }
+    }
+}
+
+/// How the table-building stage's input is partitioned.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PartitionLayout {
+    /// Contiguous row ranges (hp).
+    Rows {
+        /// Partition count (hp clamps to the row count).
+        partitions: usize,
+    },
+    /// Hash-distributed feature columns (vp).
+    Features {
+        /// Partition count (vp clamps to the feature count).
+        partitions: usize,
+    },
+}
+
+impl PartitionLayout {
+    /// Number of partitions — the width of the map wave.
+    pub fn partitions(self) -> usize {
+        match self {
+            PartitionLayout::Rows { partitions } | PartitionLayout::Features { partitions } => {
+                partitions
+            }
+        }
+    }
+}
+
+/// Shuffle shape of a plan's table-merge step (hp only).
+#[derive(Debug, Clone, Copy)]
+pub struct ShuffleSpec {
+    /// Map-output bytes crossing the wire (partial tables, post
+    /// map-side combine: one table per pair per map partition).
+    pub bytes: usize,
+    /// Reduce-side partition count.
+    pub reduce_partitions: usize,
+}
+
+/// Predicted cost of a plan on a virtual cluster, split the same way
+/// [`SimTime`](crate::sparklet::simtime::SimTime) splits observed cost.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct PlanCost {
+    /// Task compute (including launch overheads).
+    pub compute_secs: f64,
+    /// Broadcast + shuffle + collect network time.
+    pub network_secs: f64,
+}
+
+impl PlanCost {
+    /// Total predicted seconds.
+    pub fn total(&self) -> f64 {
+        self.compute_secs + self.network_secs
+    }
+}
+
+/// The IR: one correlation batch, fully described before execution.
+#[derive(Debug, Clone)]
+pub struct PlanSpec {
+    /// The strategy this spec lowers to.
+    pub strategy: Strategy,
+    /// Batch size (pairs to correlate).
+    pub num_pairs: usize,
+    /// Partition layout of the table-building map wave.
+    pub layout: PartitionLayout,
+    /// Map-wave partitions that actually carry work (hp: all of them;
+    /// vp: only the partitions owning a batch pair's owner column). This
+    /// is the effective parallel width of the wave.
+    pub busy_tasks: usize,
+    /// Driver → worker broadcast payload for this batch.
+    pub broadcast_bytes: usize,
+    /// One-time layout-construction shuffle charged to this batch (vp's
+    /// columnar transformation when the layout is not built yet; 0 once
+    /// built, and always 0 for hp).
+    pub setup_shuffle_bytes: usize,
+    /// Table-merge shuffle (hp), or `None` (vp).
+    pub shuffle: Option<ShuffleSpec>,
+    /// Scalar SU bytes collected to the driver (8 per pair).
+    pub collect_bytes: usize,
+    /// Cell scans the map wave performs: Σ over pairs of the row count —
+    /// the Algorithm-2 counting work, identical across strategies.
+    pub scan_cells: f64,
+    /// Σ over pairs of the table size `bins_x × bins_y` — the unit of
+    /// merge/entropy work downstream of the scan.
+    pub table_cells: f64,
+    /// One-time layout-construction *compute* charged to this batch
+    /// (vp's columnar transformation moves every `n × m` cell once;
+    /// 0 once built, and always 0 for hp). Priced in
+    /// [`Self::parallel_cell_units`] so that when the batch that builds
+    /// the layout is observed, the setup work sits in the calibration
+    /// denominator too — otherwise the first vp observation would imply
+    /// a wildly inflated rate and mis-price every later vp candidate.
+    pub setup_cells: f64,
+}
+
+impl PlanSpec {
+    /// Rate-scaled compute units: cell-operations already divided by each
+    /// wave's effective parallel width. Multiply by a secs-per-cell rate
+    /// to get compute seconds; [`Self::overhead_secs`] adds the
+    /// rate-independent launch overheads. The planner inverts exactly
+    /// this quantity when calibrating from observations.
+    pub fn parallel_cell_units(&self, cluster: &ClusterConfig) -> f64 {
+        let slots = cluster.total_slots();
+        let map_width = self.busy_tasks.clamp(1, slots) as f64;
+        // Map wave: every pair's rows are scanned once (hp: spread over
+        // row partitions; vp: each owner partition scans whole columns).
+        // vp also finishes the table → entropies → SU locally, priced at
+        // ~4 extra passes over the table cells.
+        let mut units = match self.strategy {
+            Strategy::Hp => (self.scan_cells + self.table_cells) / map_width,
+            Strategy::Vp => (self.scan_cells + 4.0 * self.table_cells) / map_width,
+        };
+        if let Some(sh) = &self.shuffle {
+            // Reduce wave merges one partial table per map partition per
+            // pair; the computeSU stage then makes ~3 passes (marginals +
+            // joint entropy) over the merged cells.
+            let reduce_width = sh.reduce_partitions.clamp(1, slots) as f64;
+            let merge_cells = self.table_cells * self.layout.partitions() as f64;
+            units += (merge_cells + 3.0 * self.table_cells) / reduce_width;
+        }
+        if self.setup_cells > 0.0 {
+            // Layout construction (vp's columnar shuffle) spreads over
+            // the layout's own partitions, not just the batch's busy
+            // owners.
+            let setup_width = self.layout.partitions().clamp(1, slots) as f64;
+            units += self.setup_cells / setup_width;
+        }
+        units
+    }
+
+    /// Task-launch overhead: one `task_overhead_s` per task, spread over
+    /// the cluster's slots per wave — the same accounting the simulated
+    /// replay applies to measured stages.
+    pub fn overhead_secs(&self, cluster: &ClusterConfig) -> f64 {
+        let slots = cluster.total_slots() as f64;
+        let waves = |tasks: usize| (tasks as f64 / slots).ceil();
+        let mut w = waves(self.layout.partitions());
+        if let Some(sh) = &self.shuffle {
+            // reduce wave + the computeSU map stage over the merged RDD
+            w += 2.0 * waves(sh.reduce_partitions);
+        }
+        if self.setup_cells > 0.0 {
+            // columnar-transformation shuffle: map wave + reduce wave
+            w += 2.0 * waves(self.layout.partitions());
+        }
+        w * cluster.task_overhead_s
+    }
+
+    /// Predicted cost on `cluster`, with compute priced at `rate` seconds
+    /// per cell-operation. Network steps use the cluster's own
+    /// [`NetworkModel`](crate::sparklet::NetworkModel) formulas — the
+    /// same ones the virtual-cluster replay charges for observed stages.
+    pub fn estimate(&self, cluster: &ClusterConfig, rate: f64) -> PlanCost {
+        let net = &cluster.net;
+        let mut network = net.broadcast_secs(self.broadcast_bytes, cluster.nodes)
+            + net.collect_secs(self.collect_bytes)
+            + net.shuffle_secs(self.setup_shuffle_bytes, cluster.nodes);
+        if let Some(sh) = &self.shuffle {
+            network += net.shuffle_secs(sh.bytes, cluster.nodes);
+        }
+        PlanCost {
+            compute_secs: rate * self.parallel_cell_units(cluster) + self.overhead_secs(cluster),
+            network_secs: network,
+        }
+    }
+}
+
+/// Arity of one side of a pair (the class is a column like any other).
+fn arity(data: &DiscreteDataset, id: FeatureId) -> usize {
+    if id == CLASS_ID {
+        data.class_arity as usize
+    } else {
+        data.arities[id] as usize
+    }
+}
+
+/// Σ table cells and Σ serialized table bytes over a pair batch.
+fn table_sizes(data: &DiscreteDataset, pairs: &[(FeatureId, FeatureId)]) -> (f64, usize) {
+    let mut cells = 0usize;
+    let mut wire = 0usize;
+    for &(a, b) in pairs {
+        let c = arity(data, a) * arity(data, b);
+        cells += c;
+        wire += crate::correlation::ContingencyTable::wire_bytes_for_cells(c);
+    }
+    (cells as f64, wire)
+}
+
+/// Lower a pair batch to the hp plan: row layout, pair-id broadcast,
+/// partial-table shuffle, scalar collect. `num_partitions` is clamped
+/// exactly as [`super::hp::HorizontalCorrelator::new`] clamps it.
+pub fn hp_plan(
+    data: &DiscreteDataset,
+    pairs: &[(FeatureId, FeatureId)],
+    cluster: &ClusterConfig,
+    num_partitions: usize,
+) -> PlanSpec {
+    let n = data.num_rows();
+    let parts = num_partitions.clamp(1, n.max(1));
+    let (table_cells, wire) = table_sizes(data, pairs);
+    let reduce_partitions = pairs.len().min(cluster.total_slots()).max(1);
+    PlanSpec {
+        strategy: Strategy::Hp,
+        num_pairs: pairs.len(),
+        layout: PartitionLayout::Rows { partitions: parts },
+        busy_tasks: parts,
+        broadcast_bytes: pairs.len() * 16,
+        setup_shuffle_bytes: 0,
+        shuffle: Some(ShuffleSpec {
+            bytes: wire * parts,
+            reduce_partitions,
+        }),
+        collect_bytes: pairs.len() * 8,
+        scan_cells: (pairs.len() * n) as f64,
+        table_cells,
+        setup_cells: 0.0,
+    }
+}
+
+/// Lower a pair batch to the vp plan: feature layout, reference-column
+/// broadcast, no shuffle, scalar collect. `layout_built` says whether
+/// the columnar transformation (and the one-time class broadcast) has
+/// already been paid — when false, both are charged to this batch, which
+/// is how the planner prices "switching to vp now". `num_partitions` is
+/// clamped exactly as [`super::vp::VerticalCorrelator::new`] clamps it.
+pub fn vp_plan(
+    data: &DiscreteDataset,
+    pairs: &[(FeatureId, FeatureId)],
+    cluster: &ClusterConfig,
+    num_partitions: usize,
+    layout_built: bool,
+) -> PlanSpec {
+    let n = data.num_rows();
+    let m = data.num_features();
+    let parts = num_partitions.clamp(1, m.max(1));
+    let (table_cells, _) = table_sizes(data, pairs);
+
+    let sides = assign_sides(pairs);
+    let mut owners: Vec<FeatureId> = sides.iter().map(|&(o, _)| o).collect();
+    owners.sort_unstable();
+    owners.dedup();
+    let mut refs: Vec<FeatureId> = sides
+        .iter()
+        .map(|&(_, r)| r)
+        .filter(|&r| r != CLASS_ID)
+        .collect();
+    refs.sort_unstable();
+    refs.dedup();
+
+    let mut broadcast_bytes = refs.len() * n;
+    let mut setup_shuffle_bytes = 0;
+    let mut setup_cells = 0.0;
+    if !layout_built {
+        // Fig. 2's columnar transformation shuffles every cell once (on
+        // the wire *and* through worker compute), and the class column
+        // is broadcast alongside it.
+        setup_shuffle_bytes = n * m;
+        setup_cells = (n * m) as f64;
+        broadcast_bytes += n;
+    }
+
+    PlanSpec {
+        strategy: Strategy::Vp,
+        num_pairs: pairs.len(),
+        layout: PartitionLayout::Features { partitions: parts },
+        busy_tasks: owners.len().min(parts).max(1),
+        broadcast_bytes,
+        setup_shuffle_bytes,
+        shuffle: None,
+        collect_bytes: pairs.len() * 8,
+        scan_cells: (pairs.len() * n) as f64,
+        table_cells,
+        setup_cells,
+    }
+}
+
+/// Choose the reference (broadcast) side of each vp pair: the class if
+/// present, else the id that appears most often in the batch (the
+/// search's last-added feature). Returns per-pair `(owner, reference)`.
+/// Lives in the IR because both the vp lowering and the planner's vp
+/// costing need the identical assignment — the broadcast bytes and busy
+/// width of a vp plan are functions of it.
+pub fn assign_sides(pairs: &[(FeatureId, FeatureId)]) -> Vec<(FeatureId, FeatureId)> {
+    let mut freq: HashMap<FeatureId, usize> = HashMap::new();
+    for &(a, b) in pairs {
+        *freq.entry(a).or_default() += 1;
+        *freq.entry(b).or_default() += 1;
+    }
+    pairs
+        .iter()
+        .map(|&(a, b)| {
+            if b == CLASS_ID {
+                (a, b)
+            } else if a == CLASS_ID {
+                (b, a)
+            } else {
+                let (fa, fb) = (freq[&a], freq[&b]);
+                // owner = rarer side; tie-break to the smaller id as
+                // owner for determinism
+                if fa > fb || (fa == fb && a > b) {
+                    (b, a)
+                } else {
+                    (a, b)
+                }
+            }
+        })
+        .collect()
+}
+
+/// One planner choice, with its prediction and the later observation —
+/// the record surfaced in [`SuJobReport`](crate::serve::SuJobReport) and
+/// [`DiCfsRun`](super::DiCfsRun).
+#[derive(Debug, Clone)]
+pub struct PlanDecision {
+    /// Strategy the planner picked for the batch.
+    pub strategy: Strategy,
+    /// Batch size (pairs).
+    pub pairs: usize,
+    /// Predicted simulated seconds of the chosen plan.
+    pub predicted_secs: f64,
+    /// Predicted simulated seconds of the rejected alternative.
+    pub rejected_secs: f64,
+    /// Observed simulated seconds: the virtual-cluster replay of the
+    /// stages the batch actually recorded.
+    pub observed_secs: f64,
+}
+
+impl PlanDecision {
+    /// One-line human-readable form for job logs.
+    pub fn summary(&self) -> String {
+        format!(
+            "{} ({} pairs): predicted {:.2e}s vs {:.2e}s, observed {:.2e}s",
+            self.strategy.label(),
+            self.pairs,
+            self.predicted_secs,
+            self.rejected_secs,
+            self.observed_secs
+        )
+    }
+}
+
+/// The shared tail of every lowered correlation job: collect the scalar
+/// `(pair index, SU)` records (8 wire bytes each), restore request
+/// order, and unwrap the values. Both correlators' `compute_batch` end
+/// here, so the collect pricing and ordering rules cannot drift apart.
+pub(crate) fn collect_su(sus: &Rdd<(usize, f64)>, num_pairs: usize) -> Vec<f64> {
+    let mut collected = sus.collect_sized(|_| 8);
+    collected.sort_by_key(|(i, _)| *i);
+    debug_assert_eq!(collected.len(), num_pairs);
+    collected.into_iter().map(|(_, v)| v).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Deterministic discrete dataset of the given shape (no MDL pass —
+    /// plans only read shapes and arities).
+    fn dataset(rows: usize, features: usize, arity: u16) -> DiscreteDataset {
+        let cols: Vec<Vec<u8>> = (0..features)
+            .map(|f| (0..rows).map(|r| ((r + f) % arity as usize) as u8).collect())
+            .collect();
+        let class: Vec<u8> = (0..rows).map(|r| (r % 2) as u8).collect();
+        DiscreteDataset::new("plan-test", cols, vec![arity; features], class, 2).unwrap()
+    }
+
+    fn class_batch(m: usize) -> Vec<(FeatureId, FeatureId)> {
+        (0..m).map(|f| (f, CLASS_ID)).collect()
+    }
+
+    #[test]
+    fn hp_spec_shape() {
+        let dd = dataset(1000, 8, 4);
+        let cluster = ClusterConfig::with_nodes(4);
+        let pairs = class_batch(8);
+        let spec = hp_plan(&dd, &pairs, &cluster, 10);
+        assert_eq!(spec.strategy, Strategy::Hp);
+        assert_eq!(spec.layout, PartitionLayout::Rows { partitions: 10 });
+        assert_eq!(spec.busy_tasks, 10);
+        assert_eq!(spec.broadcast_bytes, 8 * 16);
+        assert_eq!(spec.collect_bytes, 8 * 8);
+        assert_eq!(spec.setup_shuffle_bytes, 0);
+        let sh = spec.shuffle.expect("hp shuffles tables");
+        // 8 pairs × (4 + 4·2·8 B) per table, one partial per partition
+        assert_eq!(sh.bytes, 10 * 8 * (4 + 4 * 2 * 8));
+        assert_eq!(sh.reduce_partitions, 8);
+        assert_eq!(spec.scan_cells, 8.0 * 1000.0);
+        assert_eq!(spec.table_cells, 8.0 * 8.0);
+    }
+
+    #[test]
+    fn vp_spec_shape_and_setup_charging() {
+        let dd = dataset(500, 12, 4);
+        let cluster = ClusterConfig::with_nodes(4);
+        // Mixed batch: class pairs broadcast nothing, feature-feature
+        // pairs broadcast the shared reference column.
+        let mut pairs = class_batch(3);
+        pairs.push((0, 5));
+        pairs.push((1, 5));
+        let built = vp_plan(&dd, &pairs, &cluster, 12, true);
+        assert_eq!(built.strategy, Strategy::Vp);
+        assert!(built.shuffle.is_none(), "vp never shuffles tables");
+        // feature 5 is the only non-class reference → one column of n B
+        assert_eq!(built.broadcast_bytes, 500);
+        assert_eq!(built.setup_shuffle_bytes, 0);
+        // owners: 0, 1, 2 (class pairs) — 0 and 1 also own their shared
+        // pairs with 5
+        assert!(built.busy_tasks >= 3 && built.busy_tasks <= 5);
+
+        let cold = vp_plan(&dd, &pairs, &cluster, 12, false);
+        assert_eq!(cold.setup_shuffle_bytes, 500 * 12, "columnar shuffle charged");
+        assert_eq!(cold.setup_cells, (500 * 12) as f64, "setup compute charged");
+        assert_eq!(cold.broadcast_bytes, 500 + 500, "class broadcast charged");
+        assert_eq!(built.setup_cells, 0.0);
+        assert!(
+            cold.estimate(&cluster, 1e-9).total() > built.estimate(&cluster, 1e-9).total(),
+            "unbuilt layout must cost more"
+        );
+    }
+
+    #[test]
+    fn partition_clamps_mirror_correlators() {
+        let dd = dataset(5, 3, 2);
+        let cluster = ClusterConfig::with_nodes(2);
+        let pairs = class_batch(3);
+        assert_eq!(
+            hp_plan(&dd, &pairs, &cluster, 10_000).layout.partitions(),
+            5,
+            "hp clamps to rows"
+        );
+        assert_eq!(
+            vp_plan(&dd, &pairs, &cluster, 10_000, true).layout.partitions(),
+            3,
+            "vp clamps to features"
+        );
+        assert_eq!(hp_plan(&dd, &pairs, &cluster, 0).layout.partitions(), 1);
+    }
+
+    #[test]
+    fn estimate_monotone_in_rate_and_pairs() {
+        let dd = dataset(800, 20, 4);
+        let cluster = ClusterConfig::with_nodes(4);
+        let small = class_batch(5);
+        let large = class_batch(20);
+        let spec_small = hp_plan(&dd, &small, &cluster, 16);
+        let spec_large = hp_plan(&dd, &large, &cluster, 16);
+        assert!(
+            spec_large.estimate(&cluster, 1e-9).total()
+                > spec_small.estimate(&cluster, 1e-9).total()
+        );
+        assert!(
+            spec_small.estimate(&cluster, 1e-6).compute_secs
+                > spec_small.estimate(&cluster, 1e-9).compute_secs
+        );
+        // network does not depend on the rate
+        assert_eq!(
+            spec_small.estimate(&cluster, 1e-6).network_secs,
+            spec_small.estimate(&cluster, 1e-9).network_secs
+        );
+    }
+
+    #[test]
+    fn wide_shape_favors_vp_tall_shape_varies_by_table_volume() {
+        let cluster = ClusterConfig::with_nodes(10);
+        let rate = 2e-9;
+
+        // Wide: few rows, many features, fat tables → hp must ship
+        // partitions × pairs tables; vp broadcasts one tiny column.
+        let wide = dataset(200, 600, 16);
+        let batch = class_batch(600);
+        let hp = hp_plan(&wide, &batch, &cluster, cluster.default_row_partitions(200));
+        let vp = vp_plan(&wide, &batch, &cluster, 600, true);
+        assert!(
+            vp.estimate(&cluster, rate).total() < hp.estimate(&cluster, rate).total(),
+            "vp must win the wide regime: vp {:?} vs hp {:?}",
+            vp.estimate(&cluster, rate),
+            hp.estimate(&cluster, rate)
+        );
+
+        // Tall: the hp shuffle stays small while vp's map width collapses
+        // to the handful of owner columns; hp's plan must show the wider
+        // wave (more busy tasks) and the vp plan the bigger broadcast
+        // (reference columns scale with n).
+        let tall = dataset(50_000, 8, 4);
+        let mut pairs = class_batch(8);
+        pairs.extend((1..8).map(|f| (f, 0)));
+        let hp_t = hp_plan(&tall, &pairs, &cluster, cluster.default_row_partitions(50_000));
+        let vp_t = vp_plan(&tall, &pairs, &cluster, 8, true);
+        assert!(hp_t.busy_tasks > 10 * vp_t.busy_tasks);
+        assert!(vp_t.broadcast_bytes > hp_t.broadcast_bytes);
+    }
+
+    #[test]
+    fn assign_sides_prefers_class_then_shared_feature() {
+        let sides = assign_sides(&[(4, CLASS_ID), (CLASS_ID, 7), (1, 9), (2, 9), (3, 9)]);
+        assert_eq!(sides[0], (4, CLASS_ID));
+        assert_eq!(sides[1], (7, CLASS_ID));
+        // 9 appears three times → it is the broadcast reference
+        assert_eq!(sides[2], (1, 9));
+        assert_eq!(sides[3], (2, 9));
+        assert_eq!(sides[4], (3, 9));
+    }
+}

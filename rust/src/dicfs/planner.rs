@@ -1,0 +1,489 @@
+//! The adaptive partitioning planner: choose hp or vp **per correlation
+//! batch**, from an analytic cost model refined by measured feedback.
+//!
+//! The paper's central experimental result (§6, Figs. 4–5) is that
+//! neither DiCFS-hp nor DiCFS-vp dominates — the winner flips with the
+//! instances-to-features ratio. This module turns that comparison into a
+//! feature: [`Planner`] lowers every batch to both [`PlanSpec`]s
+//! (`plan::hp_plan` / `plan::vp_plan`), prices them with the cluster's
+//! own network model plus a per-strategy secs-per-cell compute rate, and
+//! picks the cheaper plan. After the batch runs, the stages it actually
+//! recorded (captured per-batch via the thread-scoped
+//! [`StageRecorder`](crate::sparklet::StageRecorder)) are replayed on
+//! the virtual cluster and the compute rate is refined by an EMA — so a
+//! planner that guessed wrong on the first batch converges onto the
+//! right strategy, and can switch strategies mid-search as best-first
+//! batches shrink (the cost balance shifts with batch size).
+//!
+//! The vp layout (columnar shuffle + class broadcast) is built lazily,
+//! on the first batch the planner routes to vp; until then every vp
+//! candidate plan carries the one-time setup cost, so "switch to vp"
+//! is priced honestly.
+//!
+//! Every choice is logged as a [`PlanDecision`] (predicted vs observed
+//! seconds); the multi-query service attaches these to its
+//! [`SuJobReport`](crate::serve::SuJobReport)s and the `DiCfs` driver
+//! returns them in [`DiCfsRun`](super::DiCfsRun).
+
+use std::sync::{Arc, Mutex};
+
+use crate::cfs::{Correlator, SharedCorrelator};
+use crate::core::FeatureId;
+use crate::data::columnar::DiscreteDataset;
+use crate::dicfs::hp::HorizontalCorrelator;
+use crate::dicfs::plan::{self, PlanCost, PlanDecision, PlanSpec, Strategy};
+use crate::dicfs::vp::VerticalCorrelator;
+use crate::runtime::SuEngine;
+use crate::sparklet::simtime::SimTime;
+use crate::sparklet::{
+    observe_stages, simulate_job_time, ClusterConfig, PlanObserver, SparkletContext, StageRecorder,
+};
+
+/// Prior secs per cell-operation before any feedback (a few hundred
+/// million u8 scatter-counts per second — the right order of magnitude
+/// for the native engine on one core). Both strategies start from the
+/// same prior, so the *first* decision reduces to the analytic model
+/// (network terms + parallel widths); feedback then separates the
+/// strategies' real constants.
+pub const DEFAULT_RATE_SECS_PER_CELL: f64 = 2e-9;
+
+/// EMA weight of a new rate observation.
+const RATE_EMA_ALPHA: f64 = 0.3;
+
+/// Floor for calibrated rates (observations of trivially small batches
+/// must not collapse the rate to zero).
+const MIN_RATE: f64 = 1e-13;
+
+/// Per-strategy calibration state.
+#[derive(Debug, Clone, Copy)]
+struct StrategyState {
+    /// Current secs-per-cell estimate.
+    rate: f64,
+    /// Number of feedback observations folded in.
+    observations: usize,
+}
+
+impl StrategyState {
+    fn fresh() -> Self {
+        Self {
+            rate: DEFAULT_RATE_SECS_PER_CELL,
+            observations: 0,
+        }
+    }
+
+    /// Fold one implied-rate observation in: the first replaces the
+    /// prior, later ones move by [`RATE_EMA_ALPHA`].
+    fn observe(&mut self, implied: f64) {
+        let implied = implied.max(MIN_RATE);
+        self.rate = if self.observations == 0 {
+            implied
+        } else {
+            (1.0 - RATE_EMA_ALPHA) * self.rate + RATE_EMA_ALPHA * implied
+        };
+        self.observations += 1;
+    }
+}
+
+struct PlannerState {
+    hp: StrategyState,
+    vp: StrategyState,
+    /// Whether the vp columnar layout has been built (stops charging the
+    /// setup shuffle to vp candidate plans).
+    vp_built: bool,
+    /// Decision log, in batch order.
+    decisions: Vec<PlanDecision>,
+}
+
+/// One planned batch: the chosen strategy, its spec, and the predictions
+/// that picked it. Hand it back to [`Planner::observe`] with the
+/// batch's replayed cost to close the feedback loop.
+pub struct PlannedBatch {
+    /// The strategy the planner chose.
+    pub strategy: Strategy,
+    /// The chosen plan's spec (IR).
+    pub spec: PlanSpec,
+    /// Predicted cost of the chosen plan.
+    pub predicted: PlanCost,
+    /// Predicted total seconds of the rejected alternative.
+    pub rejected_secs: f64,
+}
+
+/// Cost-model + feedback strategy selector for one dataset (see module
+/// docs). Thread-safe: the state sits behind a mutex, so one planner
+/// can serve the multi-query service's coalesced jobs.
+pub struct Planner {
+    data: Arc<DiscreteDataset>,
+    cluster: ClusterConfig,
+    hp_partitions: usize,
+    vp_partitions: usize,
+    state: Mutex<PlannerState>,
+}
+
+impl Planner {
+    /// Planner over `data` on `cluster`. `hp_partitions` /
+    /// `vp_partitions` default to the schemes' own defaults (Spark block
+    /// heuristic / one per feature).
+    pub fn new(
+        data: Arc<DiscreteDataset>,
+        cluster: ClusterConfig,
+        hp_partitions: Option<usize>,
+        vp_partitions: Option<usize>,
+    ) -> Self {
+        let hp_partitions =
+            hp_partitions.unwrap_or_else(|| cluster.default_row_partitions(data.num_rows()));
+        let vp_partitions = vp_partitions.unwrap_or_else(|| data.num_features());
+        Self {
+            data,
+            cluster,
+            hp_partitions,
+            vp_partitions,
+            state: Mutex::new(PlannerState {
+                hp: StrategyState::fresh(),
+                vp: StrategyState::fresh(),
+                vp_built: false,
+                decisions: Vec::new(),
+            }),
+        }
+    }
+
+    /// The cluster this planner prices against.
+    pub fn cluster(&self) -> &ClusterConfig {
+        &self.cluster
+    }
+
+    /// Whether the vp columnar layout has been marked built.
+    pub fn vp_built(&self) -> bool {
+        self.state.lock().unwrap().vp_built
+    }
+
+    /// Record that the vp layout now exists (its setup cost is sunk and
+    /// no longer charged to vp candidate plans).
+    pub fn mark_vp_built(&self) {
+        self.state.lock().unwrap().vp_built = true;
+    }
+
+    /// Lower `pairs` to both candidate plans, price them, and return the
+    /// cheaper one (ties go to hp, which needs no layout construction).
+    pub fn plan_batch(&self, pairs: &[(FeatureId, FeatureId)]) -> PlannedBatch {
+        let st = self.state.lock().unwrap();
+        let hp_spec = plan::hp_plan(&self.data, pairs, &self.cluster, self.hp_partitions);
+        let vp_spec = plan::vp_plan(
+            &self.data,
+            pairs,
+            &self.cluster,
+            self.vp_partitions,
+            st.vp_built,
+        );
+        let hp_cost = hp_spec.estimate(&self.cluster, st.hp.rate);
+        let vp_cost = vp_spec.estimate(&self.cluster, st.vp.rate);
+        drop(st);
+        if hp_cost.total() <= vp_cost.total() {
+            PlannedBatch {
+                strategy: Strategy::Hp,
+                spec: hp_spec,
+                predicted: hp_cost,
+                rejected_secs: vp_cost.total(),
+            }
+        } else {
+            PlannedBatch {
+                strategy: Strategy::Vp,
+                spec: vp_spec,
+                predicted: vp_cost,
+                rejected_secs: hp_cost.total(),
+            }
+        }
+    }
+
+    /// Close the loop on one executed batch: log the decision
+    /// (predicted vs observed) and refine the chosen strategy's compute
+    /// rate from the observed cost. `observed` is the virtual-cluster
+    /// replay of exactly the stages this batch recorded.
+    pub fn observe(&self, planned: &PlannedBatch, observed: &SimTime) {
+        let units = planned.spec.parallel_cell_units(&self.cluster);
+        let overhead = planned.spec.overhead_secs(&self.cluster);
+        let mut st = self.state.lock().unwrap();
+        if units > 0.0 {
+            let implied = (observed.compute_secs - overhead).max(0.0) / units;
+            match planned.strategy {
+                Strategy::Hp => st.hp.observe(implied),
+                Strategy::Vp => st.vp.observe(implied),
+            }
+        }
+        st.decisions.push(PlanDecision {
+            strategy: planned.strategy,
+            pairs: planned.spec.num_pairs,
+            predicted_secs: planned.predicted.total(),
+            rejected_secs: planned.rejected_secs,
+            observed_secs: observed.compute_secs + observed.network_secs,
+        });
+    }
+
+    /// Snapshot of every decision made so far, in batch order.
+    pub fn decisions(&self) -> Vec<PlanDecision> {
+        self.state.lock().unwrap().decisions.clone()
+    }
+
+    /// Take (and clear) the decision log — the multi-query service calls
+    /// this per coalesced job, so each [`SuJobReport`] carries exactly
+    /// its own batch's decisions.
+    ///
+    /// [`SuJobReport`]: crate::serve::SuJobReport
+    pub fn drain_decisions(&self) -> Vec<PlanDecision> {
+        std::mem::take(&mut self.state.lock().unwrap().decisions)
+    }
+}
+
+/// The adaptive correlation backend behind `Partitioning::Auto` and
+/// `ServeScheme::Auto`: owns an always-cheap hp lowering, a lazily
+/// built vp lowering, and a [`Planner`] that routes every batch
+/// ([`SharedCorrelator`], so one instance serves concurrent searches
+/// exactly like the hp/vp correlators it wraps — and its SU values are
+/// theirs, so the paper's exactness invariant is untouched by
+/// planning).
+pub struct AutoCorrelator {
+    ctx: Arc<SparkletContext>,
+    data: Arc<DiscreteDataset>,
+    engine: Arc<dyn SuEngine>,
+    planner: Planner,
+    hp: HorizontalCorrelator,
+    vp: Mutex<Option<Arc<VerticalCorrelator>>>,
+    vp_partitions: usize,
+}
+
+impl AutoCorrelator {
+    /// Auto backend over `data` on the context's cluster. `partitions`
+    /// overrides the partition count of *both* lowerings (each scheme's
+    /// default applies when `None`). Construction is cheap: only the hp
+    /// row layout is built; the vp columnar shuffle is deferred until
+    /// the planner first routes a batch to vp.
+    pub fn new(
+        ctx: &Arc<SparkletContext>,
+        data: Arc<DiscreteDataset>,
+        engine: Arc<dyn SuEngine>,
+        partitions: Option<usize>,
+    ) -> Self {
+        let cluster = ctx.cluster;
+        let hp_partitions =
+            partitions.unwrap_or_else(|| cluster.default_row_partitions(data.num_rows()));
+        let vp_partitions = partitions.unwrap_or_else(|| data.num_features());
+        let planner = Planner::new(
+            Arc::clone(&data),
+            cluster,
+            Some(hp_partitions),
+            Some(vp_partitions),
+        );
+        let hp = HorizontalCorrelator::new(ctx, Arc::clone(&data), Arc::clone(&engine), hp_partitions);
+        Self {
+            ctx: Arc::clone(ctx),
+            data,
+            engine,
+            planner,
+            hp,
+            vp: Mutex::new(None),
+            vp_partitions,
+        }
+    }
+
+    /// The planner (decision log, calibration state).
+    pub fn planner(&self) -> &Planner {
+        &self.planner
+    }
+
+    /// The vp lowering, built on first use. The columnar-transformation
+    /// stages run on the calling thread, so when this is called inside a
+    /// batch's observation scope the setup cost lands in that batch's
+    /// observed metrics — matching the setup charge in its plan.
+    fn vp_backend(&self) -> Arc<VerticalCorrelator> {
+        let mut guard = self.vp.lock().unwrap();
+        if let Some(v) = guard.as_ref() {
+            return Arc::clone(v);
+        }
+        let v = Arc::new(VerticalCorrelator::new(
+            &self.ctx,
+            Arc::clone(&self.data),
+            Arc::clone(&self.engine),
+            self.vp_partitions,
+        ));
+        self.planner.mark_vp_built();
+        *guard = Some(Arc::clone(&v));
+        v
+    }
+}
+
+impl SharedCorrelator for AutoCorrelator {
+    fn compute_batch(&self, pairs: &[(FeatureId, FeatureId)]) -> Vec<f64> {
+        if pairs.is_empty() {
+            return vec![];
+        }
+        let planned = self.planner.plan_batch(pairs);
+        let recorder = Arc::new(StageRecorder::new());
+        let out = {
+            let _guard = observe_stages(Arc::clone(&recorder) as Arc<dyn PlanObserver>);
+            match planned.strategy {
+                Strategy::Hp => self.hp.compute_batch(pairs),
+                Strategy::Vp => self.vp_backend().compute_batch(pairs),
+            }
+        };
+        // Replay this batch's stages (and only this batch's — the
+        // recorder is thread-scoped) on the virtual cluster: that is the
+        // observed cost in the same units as the prediction.
+        let sim = simulate_job_time(&recorder.metrics(), self.planner.cluster(), 0.0);
+        self.planner.observe(&planned, &sim);
+        out
+    }
+
+    fn drain_plan_decisions(&self) -> Vec<PlanDecision> {
+        self.planner.drain_decisions()
+    }
+}
+
+impl Correlator for AutoCorrelator {
+    fn compute(&mut self, pairs: &[(FeatureId, FeatureId)]) -> Vec<f64> {
+        self.compute_batch(pairs)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::CLASS_ID;
+    use crate::correlation::su::symmetrical_uncertainty;
+    use crate::data::synth::{higgs_like, SynthConfig};
+    use crate::discretize::discretize_dataset;
+    use crate::runtime::NativeEngine;
+
+    fn dataset(rows: usize, features: usize, seed: u64) -> Arc<DiscreteDataset> {
+        let ds = higgs_like(&SynthConfig {
+            rows,
+            seed,
+            features: Some(features),
+        });
+        Arc::new(discretize_dataset(&ds).unwrap())
+    }
+
+    fn auto(rows: usize, features: usize) -> (Arc<SparkletContext>, AutoCorrelator, Arc<DiscreteDataset>) {
+        let dd = dataset(rows, features, 23);
+        let ctx = SparkletContext::new(ClusterConfig::with_nodes(3));
+        let corr = AutoCorrelator::new(&ctx, Arc::clone(&dd), Arc::new(NativeEngine), None);
+        (ctx, corr, dd)
+    }
+
+    #[test]
+    fn auto_matches_direct_su_exactly() {
+        let (_ctx, corr, dd) = auto(700, 10);
+        let pairs = vec![(0, CLASS_ID), (3, CLASS_ID), (0, 3), (2, 7)];
+        let got = corr.compute_batch(&pairs);
+        for (i, &(a, b)) in pairs.iter().enumerate() {
+            let (x, bx) = dd.column(a);
+            let (y, by) = dd.column(b);
+            assert_eq!(got[i], symmetrical_uncertainty(x, bx, y, by), "pair {:?}", (a, b));
+        }
+    }
+
+    #[test]
+    fn decisions_are_logged_with_predictions_and_observations() {
+        let (_ctx, corr, _dd) = auto(500, 8);
+        let _ = corr.compute_batch(&[(0, CLASS_ID), (1, CLASS_ID)]);
+        let _ = corr.compute_batch(&[(2, CLASS_ID), (2, 3)]);
+        let decisions = corr.planner().decisions();
+        assert_eq!(decisions.len(), 2);
+        for d in &decisions {
+            assert!(d.pairs > 0);
+            assert!(d.predicted_secs > 0.0, "prediction missing: {d:?}");
+            assert!(d.rejected_secs > 0.0);
+            assert!(d.observed_secs > 0.0, "observation missing: {d:?}");
+            assert!(!d.summary().is_empty());
+        }
+        // drain empties the log (the per-job attribution the service uses)
+        assert_eq!(corr.drain_plan_decisions().len(), 2);
+        assert!(corr.planner().decisions().is_empty());
+    }
+
+    #[test]
+    fn feedback_flips_a_wrong_first_guess() {
+        // Feed the planner observations that make its chosen strategy
+        // look catastrophically slow; it must switch strategies.
+        let dd = dataset(600, 9, 31);
+        let planner = Planner::new(Arc::clone(&dd), ClusterConfig::with_nodes(4), None, None);
+        let pairs: Vec<(usize, usize)> = (0..9).map(|f| (f, CLASS_ID)).collect();
+
+        let first = planner.plan_batch(&pairs);
+        let first_strategy = first.strategy;
+        // Observed compute 10^4× the prediction: the chosen strategy's
+        // rate explodes.
+        for _ in 0..4 {
+            let planned = planner.plan_batch(&pairs);
+            if planned.strategy != first_strategy {
+                break;
+            }
+            let observed = SimTime {
+                compute_secs: (planned.predicted.total() + 1e-3) * 1e4,
+                network_secs: 0.0,
+                driver_secs: 0.0,
+            };
+            planner.observe(&planned, &observed);
+        }
+        let eventually = planner.plan_batch(&pairs);
+        assert_ne!(
+            eventually.strategy, first_strategy,
+            "planner never abandoned a strategy observed to be 10^4× over budget"
+        );
+        // The decision log kept every wrong-guess round.
+        assert!(!planner.decisions().is_empty());
+    }
+
+    #[test]
+    fn vp_layout_is_lazy() {
+        let (ctx, corr, _dd) = auto(400, 6);
+        // Until some batch routes to vp, the columnar transformation
+        // must not have run.
+        let ran_columnar = |ctx: &SparkletContext| {
+            ctx.metrics()
+                .stages
+                .iter()
+                .any(|s| s.label == "columnarTransformation")
+        };
+        assert!(!ran_columnar(&ctx), "vp layout built eagerly");
+        let _ = corr.compute_batch(&[(0, CLASS_ID)]);
+        let vp_used = corr
+            .planner()
+            .decisions()
+            .iter()
+            .any(|d| d.strategy == Strategy::Vp);
+        assert_eq!(
+            ran_columnar(&ctx),
+            vp_used,
+            "columnar shuffle must run iff a batch was routed to vp"
+        );
+        assert_eq!(corr.planner().vp_built(), vp_used);
+    }
+
+    #[test]
+    fn auto_is_shareable_across_threads() {
+        fn assert_send_sync<T: Send + Sync>() {}
+        assert_send_sync::<AutoCorrelator>();
+
+        let (_ctx, corr, dd) = auto(500, 8);
+        let (corr, dd) = (&corr, &dd);
+        std::thread::scope(|s| {
+            for offset in 0..3usize {
+                s.spawn(move || {
+                    let pairs = vec![(offset, CLASS_ID), (offset, offset + 1)];
+                    let got = corr.compute_batch(&pairs);
+                    for (i, &(a, b)) in pairs.iter().enumerate() {
+                        let (x, bx) = dd.column(a);
+                        let (y, by) = dd.column(b);
+                        assert_eq!(got[i], symmetrical_uncertainty(x, bx, y, by));
+                    }
+                });
+            }
+        });
+    }
+
+    #[test]
+    fn empty_batch() {
+        let (_ctx, corr, _) = auto(300, 5);
+        assert!(corr.compute_batch(&[]).is_empty());
+        assert!(corr.planner().decisions().is_empty(), "no decision for empty batch");
+    }
+}

@@ -25,6 +25,7 @@ use std::sync::Arc;
 use crate::cfs::{Correlator, SharedCorrelator};
 use crate::core::{FeatureId, CLASS_ID};
 use crate::data::columnar::DiscreteDataset;
+use crate::dicfs::plan::{self, PlanSpec};
 use crate::runtime::{ColumnPair, SuEngine};
 use crate::sparklet::{Broadcast, Rdd, SparkletContext};
 
@@ -81,34 +82,28 @@ impl VerticalCorrelator {
         }
     }
 
-    /// Choose the reference (broadcast) side of each pair: the class if
-    /// present, else the id that appears most often in this batch (the
-    /// search's last-added feature). Returns per-pair (owner, reference).
+    /// Choose the reference (broadcast) side of each pair — delegated to
+    /// [`plan::assign_sides`], the single definition both this lowering
+    /// and the planner's vp costing share (the broadcast bytes and busy
+    /// width of a vp plan are functions of the assignment, so the two
+    /// must not drift apart).
     fn assign_sides(pairs: &[(FeatureId, FeatureId)]) -> Vec<(FeatureId, FeatureId)> {
-        let mut freq: HashMap<FeatureId, usize> = HashMap::new();
-        for &(a, b) in pairs {
-            *freq.entry(a).or_default() += 1;
-            *freq.entry(b).or_default() += 1;
-        }
-        pairs
-            .iter()
-            .map(|&(a, b)| {
-                if b == CLASS_ID {
-                    (a, b)
-                } else if a == CLASS_ID {
-                    (b, a)
-                } else {
-                    let (fa, fb) = (freq[&a], freq[&b]);
-                    // owner = rarer side; tie-break to the smaller id as
-                    // owner for determinism
-                    if fa > fb || (fa == fb && a > b) {
-                        (b, a)
-                    } else {
-                        (a, b)
-                    }
-                }
-            })
-            .collect()
+        plan::assign_sides(pairs)
+    }
+
+    /// Lower a pair batch to its plan IR (`pair batch → feature layout →
+    /// reference broadcast → SU collect`) without running it — what the
+    /// adaptive planner prices when deciding hp vs vp. The columnar
+    /// layout already exists on this correlator, so the spec carries no
+    /// setup charge.
+    pub fn plan(&self, pairs: &[(FeatureId, FeatureId)]) -> PlanSpec {
+        plan::vp_plan(
+            &self.data,
+            pairs,
+            &self.ctx.cluster,
+            self.columns.num_partitions(),
+            true,
+        )
     }
 }
 
@@ -203,11 +198,9 @@ impl SharedCorrelator for VerticalCorrelator {
             idx.into_iter().zip(values).collect()
         });
 
-        // Collect the scalars (8 bytes each) and restore request order.
-        let mut collected = sus.collect_sized(|_| 8);
-        collected.sort_by_key(|(i, _)| *i);
-        debug_assert_eq!(collected.len(), pairs.len());
-        collected.into_iter().map(|(_, v)| v).collect()
+        // Shared job-assembly tail (plan.rs): collect 8 B scalars,
+        // restore request order.
+        plan::collect_su(&sus, pairs.len())
     }
 }
 
@@ -307,6 +300,29 @@ mod tests {
     fn empty_batch() {
         let (_ctx, mut corr, _) = setup(3);
         assert!(corr.compute(&[]).is_empty());
+    }
+
+    #[test]
+    fn plan_predicts_the_job_it_lowers_to() {
+        // The vp IR is honest: predicted broadcast/collect bytes are the
+        // bytes the executed batch records, and there is no table
+        // shuffle.
+        let (ctx, corr, dd) = setup(14);
+        let pairs = vec![(0, 5), (1, 5), (2, 5), (3, CLASS_ID)];
+        let spec = corr.plan(&pairs);
+        let before = ctx.metrics();
+        let _ = corr.compute_batch(&pairs);
+        let after = ctx.metrics();
+        assert!(spec.shuffle.is_none());
+        assert_eq!(spec.setup_shuffle_bytes, 0, "layout already built");
+        // one reference column (feature 5) of n rows
+        assert_eq!(spec.broadcast_bytes, dd.num_rows());
+        assert_eq!(
+            after.total_broadcast_bytes() - before.total_broadcast_bytes(),
+            spec.broadcast_bytes
+        );
+        let collect = after.stages.last().unwrap();
+        assert_eq!(collect.collect_bytes, spec.collect_bytes);
     }
 
     #[test]

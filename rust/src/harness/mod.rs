@@ -12,14 +12,18 @@
 //! | §6 vp partition tuning | [`ablation`] | `cargo bench --bench ablation_partitions` |
 //! | scheduler fusion (DESIGN.md §3) | — | `cargo bench --bench ablation_fusion` |
 //! | multi-query service (DESIGN.md §10) | — | `cargo bench --bench ablation_service` |
+//! | adaptive partitioning planner (DESIGN.md §11) | [`planner`] | `cargo bench --bench ablation_planner` |
 //!
 //! Each run writes a CSV under `bench_out/` and prints an ASCII chart, so
-//! `cargo bench` output is the full reproduction report.
+//! `cargo bench` output is the full reproduction report. The planner
+//! bench additionally writes `bench_out/BENCH_planner.json` (auto vs hp
+//! vs vp per shape) as the machine-readable perf trajectory.
 
 pub mod ablation;
 pub mod fig3;
 pub mod fig4;
 pub mod fig5;
+pub mod planner;
 pub mod report;
 pub mod table2;
 pub mod workload;

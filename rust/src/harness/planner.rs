@@ -1,0 +1,234 @@
+//! Planner ablation: `--partitioning auto` vs forced hp vs forced vp on
+//! the three shape regimes the paper's §6 comparison spans — tall
+//! (instances ≫ features), wide (features ≫ instances), and square.
+//!
+//! This is the harness behind `dicfs bench --target planner` and
+//! `cargo bench --bench ablation_planner`. The acceptance bar it
+//! enforces (in the bench): auto never loses to the **worse** fixed
+//! scheme by more than 10% simulated wall-time on any shape, and tracks
+//! the **better** one on tall and wide after feedback warm-up.
+
+use crate::data::synth::{by_name, SynthConfig};
+use crate::dicfs::plan::Strategy;
+use crate::dicfs::{DiCfs, DiCfsConfig, DiCfsRun, Partitioning};
+use crate::discretize::discretize_dataset;
+use crate::harness::report;
+use crate::util::chart::table;
+use std::sync::Arc;
+
+/// One shape's measured comparison.
+#[derive(Debug, Clone)]
+pub struct PlannerRow {
+    /// Shape regime (`tall` / `wide` / `square`).
+    pub shape: &'static str,
+    /// Instances.
+    pub rows: usize,
+    /// Features.
+    pub features: usize,
+    /// Simulated seconds with the adaptive planner.
+    pub auto_secs: f64,
+    /// Simulated seconds forced to hp.
+    pub hp_secs: f64,
+    /// Simulated seconds forced to vp.
+    pub vp_secs: f64,
+    /// Batches the planner routed to hp.
+    pub hp_batches: usize,
+    /// Batches the planner routed to vp.
+    pub vp_batches: usize,
+    /// Strategy of the planner's last batch (post warm-up state).
+    pub final_strategy: &'static str,
+    /// All three runs selected identical features.
+    pub selections_equal: bool,
+}
+
+impl PlannerRow {
+    /// The worse fixed scheme's time — the "never lose by > 10%" bar.
+    pub fn worse_fixed_secs(&self) -> f64 {
+        self.hp_secs.max(self.vp_secs)
+    }
+
+    /// The better fixed scheme's time.
+    pub fn better_fixed_secs(&self) -> f64 {
+        self.hp_secs.min(self.vp_secs)
+    }
+}
+
+/// The three shape regimes: (shape, family, rows, features). Feature
+/// counts stay fixed (they define the regime); rows scale with the
+/// bench budget.
+fn shapes(scale: f64) -> Vec<(&'static str, &'static str, usize, usize)> {
+    let r = |base: usize| ((base as f64 * scale) as usize).max(64);
+    vec![
+        ("tall", "higgs", r(20_000), 16),
+        ("wide", "wide", r(250), 1_000),
+        ("square", "epsilon", r(600), 600),
+    ]
+}
+
+/// Run the three-shape comparison on an `nodes`-node virtual cluster.
+pub fn run(scale: f64, nodes: usize) -> Vec<PlannerRow> {
+    shapes(scale)
+        .into_iter()
+        .map(|(shape, family, rows, features)| {
+            let ds = by_name(
+                family,
+                &SynthConfig {
+                    rows,
+                    seed: 0xA0 + shape.len() as u64,
+                    features: Some(features),
+                },
+            );
+            let dd = Arc::new(discretize_dataset(&ds).unwrap());
+            let select = |p: Partitioning| -> DiCfsRun {
+                DiCfs::native(DiCfsConfig::for_scheme(p, nodes)).select(&dd)
+            };
+            let hp = select(Partitioning::Horizontal);
+            let vp = select(Partitioning::Vertical);
+            let auto = select(Partitioning::Auto);
+            let hp_batches = auto
+                .decisions
+                .iter()
+                .filter(|d| d.strategy == Strategy::Hp)
+                .count();
+            let row = PlannerRow {
+                shape,
+                rows,
+                features,
+                auto_secs: auto.sim.total(),
+                hp_secs: hp.sim.total(),
+                vp_secs: vp.sim.total(),
+                hp_batches,
+                vp_batches: auto.decisions.len() - hp_batches,
+                final_strategy: auto
+                    .decisions
+                    .last()
+                    .map(|d| d.strategy.label())
+                    .unwrap_or("-"),
+                selections_equal: auto.result.selected == hp.result.selected
+                    && auto.result.selected == vp.result.selected,
+            };
+            eprintln!(
+                "planner {:>6} ({}x{}): auto {:>8} hp {:>8} vp {:>8} ({} hp / {} vp batches, final {})",
+                row.shape,
+                row.rows,
+                row.features,
+                report::fmt_secs(row.auto_secs),
+                report::fmt_secs(row.hp_secs),
+                report::fmt_secs(row.vp_secs),
+                row.hp_batches,
+                row.vp_batches,
+                row.final_strategy
+            );
+            row
+        })
+        .collect()
+}
+
+/// Emit the comparison table, `ablation_planner.csv`, and the
+/// `BENCH_planner.json` perf-trajectory record.
+pub fn emit(rows: &[PlannerRow]) {
+    let csv: Vec<Vec<String>> = rows
+        .iter()
+        .map(|r| {
+            vec![
+                r.shape.to_string(),
+                r.rows.to_string(),
+                r.features.to_string(),
+                format!("{:.6}", r.auto_secs),
+                format!("{:.6}", r.hp_secs),
+                format!("{:.6}", r.vp_secs),
+                r.hp_batches.to_string(),
+                r.vp_batches.to_string(),
+                r.final_strategy.to_string(),
+                r.selections_equal.to_string(),
+            ]
+        })
+        .collect();
+    let path = report::write_csv(
+        "ablation_planner.csv",
+        &[
+            "shape", "rows", "features", "auto_secs", "hp_secs", "vp_secs", "hp_batches",
+            "vp_batches", "final_strategy", "selections_equal",
+        ],
+        &csv,
+    );
+
+    let trows: Vec<Vec<String>> = rows
+        .iter()
+        .map(|r| {
+            vec![
+                r.shape.to_string(),
+                format!("{}x{}", r.rows, r.features),
+                report::fmt_secs(r.auto_secs),
+                report::fmt_secs(r.hp_secs),
+                report::fmt_secs(r.vp_secs),
+                format!("{} hp / {} vp", r.hp_batches, r.vp_batches),
+                r.final_strategy.to_string(),
+            ]
+        })
+        .collect();
+    println!(
+        "{}",
+        table(
+            &["shape", "n x m", "auto s", "hp s", "vp s", "auto batches", "final"],
+            &trows
+        )
+    );
+    println!("  data: {}", path.display());
+
+    // Machine-readable perf trajectory (one JSON per bench run).
+    let shapes_json: Vec<String> = rows
+        .iter()
+        .map(|r| {
+            format!(
+                concat!(
+                    "    {{\"shape\": \"{}\", \"rows\": {}, \"features\": {}, ",
+                    "\"auto_secs\": {:.6}, \"hp_secs\": {:.6}, \"vp_secs\": {:.6}, ",
+                    "\"hp_batches\": {}, \"vp_batches\": {}, \"final_strategy\": \"{}\", ",
+                    "\"selections_equal\": {}}}"
+                ),
+                r.shape,
+                r.rows,
+                r.features,
+                r.auto_secs,
+                r.hp_secs,
+                r.vp_secs,
+                r.hp_batches,
+                r.vp_batches,
+                r.final_strategy,
+                r.selections_equal
+            )
+        })
+        .collect();
+    let json = format!(
+        "{{\n  \"bench\": \"planner\",\n  \"shapes\": [\n{}\n  ]\n}}\n",
+        shapes_json.join(",\n")
+    );
+    let json_path = report::out_dir().join("BENCH_planner.json");
+    std::fs::write(&json_path, json).expect("write BENCH_planner.json");
+    println!("  perf trajectory: {}\n", json_path.display());
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn auto_never_loses_badly_and_stays_exact() {
+        // The acceptance bar at smoke scale: auto within 10% of the
+        // worse fixed scheme on every shape, selections identical.
+        let rows = run(0.05, 4);
+        assert_eq!(rows.len(), 3);
+        for r in &rows {
+            assert!(r.selections_equal, "{}: selections diverged", r.shape);
+            assert!(
+                r.auto_secs <= r.worse_fixed_secs() * 1.10,
+                "{}: auto {:.4}s lost to the worse fixed scheme {:.4}s by > 10%",
+                r.shape,
+                r.auto_secs,
+                r.worse_fixed_secs()
+            );
+            assert!(r.hp_batches + r.vp_batches > 0, "planner made no decisions");
+        }
+    }
+}

@@ -32,7 +32,7 @@ const USAGE: &str = "\
 dicfs — Distributed Correlation-Based Feature Selection (paper reproduction)
 
 USAGE:
-  dicfs select   [--family NAME | --csv FILE] [--scheme seq|hp|vp]
+  dicfs select   [--family NAME | --csv FILE] [--partitioning seq|hp|vp|auto]
                  [--nodes N] [--engine native|pjrt] [--partitions P]
                  [--rows N] [--features M] [--seed S]
   dicfs generate --family NAME --rows N [--features M] [--seed S] --out FILE
@@ -40,9 +40,15 @@ USAGE:
   dicfs compare  [--family NAME] [--rows N] [--features M] [--nodes N]
   dicfs queries  --script FILE [--nodes N] [--concurrency C]
                  [--max-inflight J] [--engine native|pjrt] [--verify]
-  dicfs bench    --target fig3|fig4|fig5|table2|ondemand|partitions [--scale X]
+  dicfs bench    --target fig3|fig4|fig5|table2|ondemand|partitions|planner
+                 [--scale X]
 
-FAMILIES: ecbdl14, higgs, kddcup99, epsilon (Table 1 of the paper)
+`--partitioning` defaults to `auto`: the adaptive planner chooses hp or
+vp per correlation batch (cost model + measured feedback) and reports
+every decision. `--scheme` is accepted as an alias.
+
+FAMILIES: ecbdl14, higgs, kddcup99, epsilon (Table 1 of the paper),
+          wide (features >> rows, for the planner harness)
 
 A `queries` script declares tenant datasets and the query traffic over
 them, e.g.:
@@ -121,18 +127,24 @@ fn cmd_select(flags: &HashMap<String, String>) {
     let (dd, disc_secs) = timed(|| Arc::new(discretize_dataset(&ds).unwrap()));
     println!("discretized in {disc_secs:.2}s");
 
-    let scheme = flags.get("scheme").map(String::as_str).unwrap_or("hp");
+    // `--partitioning` is the documented flag; `--scheme` stays as an
+    // alias for older invocations. Default: the adaptive planner.
+    let scheme = flags
+        .get("partitioning")
+        .or_else(|| flags.get("scheme"))
+        .map(String::as_str)
+        .unwrap_or("auto");
     let nodes = get_usize(flags, "nodes", 10);
     match scheme {
         "seq" => {
             let (r, secs) = timed(|| SequentialCfs::default().select_discrete(&dd));
             print_result(&r, secs, None);
         }
-        "hp" | "vp" => {
-            let partitioning = if scheme == "hp" {
-                Partitioning::Horizontal
-            } else {
-                Partitioning::Vertical
+        "hp" | "vp" | "auto" => {
+            let partitioning = match scheme {
+                "hp" => Partitioning::Horizontal,
+                "vp" => Partitioning::Vertical,
+                _ => Partitioning::Auto,
             };
             let mut cfg = DiCfsConfig::for_scheme(partitioning, nodes);
             if let Some(p) = flags.get("partitions") {
@@ -141,7 +153,7 @@ fn cmd_select(flags: &HashMap<String, String>) {
             let run = DiCfs::new(cfg, make_engine(flags)).select(&dd);
             print_result(&run.result, run.wall_secs, Some(&run));
         }
-        other => panic!("unknown scheme {other}"),
+        other => panic!("unknown partitioning {other} (seq|hp|vp|auto)"),
     }
 }
 
@@ -173,6 +185,22 @@ fn print_result(
             run.metrics.total_broadcast_bytes(),
             run.metrics.total_retries()
         );
+        if !run.decisions.is_empty() {
+            let hp = run
+                .decisions
+                .iter()
+                .filter(|d| d.strategy == dicfs::dicfs::plan::Strategy::Hp)
+                .count();
+            println!(
+                "planner: {} batches ({} hp, {} vp)",
+                run.decisions.len(),
+                hp,
+                run.decisions.len() - hp
+            );
+            for d in &run.decisions {
+                println!("  {}", d.summary());
+            }
+        }
     }
 }
 
@@ -200,7 +228,13 @@ fn cmd_compare(flags: &HashMap<String, String>) {
     let (seq, seq_secs) = timed(|| SequentialCfs::default().select_discrete(&dd));
     let hp = DiCfs::native(DiCfsConfig::for_scheme(Partitioning::Horizontal, nodes)).select(&dd);
     let vp = DiCfs::native(DiCfsConfig::for_scheme(Partitioning::Vertical, nodes)).select(&dd);
+    let auto = DiCfs::native(DiCfsConfig::for_scheme(Partitioning::Auto, nodes)).select(&dd);
 
+    let auto_hp = auto
+        .decisions
+        .iter()
+        .filter(|d| d.strategy == dicfs::dicfs::plan::Strategy::Hp)
+        .count();
     let rows = vec![
         vec![
             "sequential (WEKA)".to_string(),
@@ -220,6 +254,16 @@ fn cmd_compare(flags: &HashMap<String, String>) {
             format!("{:.3}", vp.sim.total()),
             format!("{:?}", vp.result.selected),
         ],
+        vec![
+            format!(
+                "DiCFS-auto ({}hp/{}vp)",
+                auto_hp,
+                auto.decisions.len() - auto_hp
+            ),
+            format!("{:.3}", auto.wall_secs),
+            format!("{:.3}", auto.sim.total()),
+            format!("{:?}", auto.result.selected),
+        ],
     ];
     println!(
         "{}",
@@ -228,7 +272,9 @@ fn cmd_compare(flags: &HashMap<String, String>) {
             &rows
         )
     );
-    let ok = hp.result.selected == seq.selected && vp.result.selected == seq.selected;
+    let ok = hp.result.selected == seq.selected
+        && vp.result.selected == seq.selected
+        && auto.result.selected == seq.selected;
     println!(
         "equivalence (paper's quality claim): {}",
         if ok { "EXACT MATCH" } else { "MISMATCH!" }
@@ -291,8 +337,12 @@ fn cmd_bench(flags: &HashMap<String, String>) {
                 harness::ablation::run_partitions(scale, &[25, 50, 100, 250, 500, 1000, 2000], 10);
             harness::ablation::emit_partitions(&rows);
         }
+        Some("planner") => {
+            let rows = harness::planner::run(scale, 10);
+            harness::planner::emit(&rows);
+        }
         other => panic!(
-            "--target must be one of fig3/fig4/fig5/table2/ondemand/partitions, got {other:?}"
+            "--target must be one of fig3/fig4/fig5/table2/ondemand/partitions/planner, got {other:?}"
         ),
     }
 }

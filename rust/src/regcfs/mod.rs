@@ -138,7 +138,7 @@ impl Correlator for DistPearsonCorrelator {
             "mergePearson",
             pairs.len().min(self.ctx.cluster.total_slots()).max(1),
             |_| PearsonStats::WIRE_BYTES,
-            |a, b| a.merge(&b),
+            |a, b| a.merge(b),
         );
         let mut collected = merged.collect_sized(|_| PearsonStats::WIRE_BYTES);
         collected.sort_by_key(|(i, _)| *i);

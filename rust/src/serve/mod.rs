@@ -26,6 +26,12 @@
 //!   misses of concurrent queries on the same dataset into one hp/vp
 //!   batch job per scheduling tick, and records a [`SuJobReport`] per
 //!   job.
+//! * A dataset registered with [`ServeScheme::Auto`] keeps an adaptive
+//!   [`Planner`](crate::dicfs::planner::Planner) in its registry entry:
+//!   every coalesced batch is routed to whichever partitioning the cost
+//!   model (refined by the observed cost of earlier jobs) prices
+//!   cheaper, and the job's [`SuJobReport`] names the chosen plan with
+//!   predicted vs observed seconds.
 //!
 //! Exactness is preserved under sharing: SU is a pure function of the
 //! dataset, every engine computes it bit-identically in canonical pair
@@ -73,15 +79,22 @@ pub enum ServeScheme {
     /// DiCFS-vp: feature-partitioned jobs (columnar shuffle at
     /// registration).
     Vertical,
+    /// Adaptive: the dataset keeps a
+    /// [`Planner`](crate::dicfs::planner::Planner) in the registry that
+    /// routes every coalesced miss batch to hp or vp (cost model +
+    /// measured feedback); each [`SuJobReport`] names the chosen plans
+    /// with predicted vs observed cost.
+    Auto,
 }
 
 impl ServeScheme {
-    /// Parse the CLI spelling (`seq` / `hp` / `vp`).
+    /// Parse the CLI spelling (`seq` / `hp` / `vp` / `auto`).
     pub fn parse(s: &str) -> Option<Self> {
         match s {
             "seq" | "sequential" => Some(Self::Sequential),
             "hp" | "horizontal" => Some(Self::Horizontal),
             "vp" | "vertical" => Some(Self::Vertical),
+            "auto" | "adaptive" => Some(Self::Auto),
             _ => None,
         }
     }
@@ -92,6 +105,7 @@ impl ServeScheme {
             Self::Sequential => "seq",
             Self::Horizontal => "hp",
             Self::Vertical => "vp",
+            Self::Auto => "auto",
         }
     }
 }
@@ -281,10 +295,12 @@ impl DicfsService {
             ServeScheme::Sequential => Box::new(DirectCorrelator {
                 dataset: Arc::clone(&reg),
             }),
-            ServeScheme::Horizontal | ServeScheme::Vertical => Box::new(MissForwarder {
-                dataset: Arc::clone(&reg),
-                scheduler: &self.scheduler,
-            }),
+            ServeScheme::Horizontal | ServeScheme::Vertical | ServeScheme::Auto => {
+                Box::new(MissForwarder {
+                    dataset: Arc::clone(&reg),
+                    scheduler: &self.scheduler,
+                })
+            }
         };
         let m = reg.data.num_features();
         let search = BestFirstSearch::new(spec.cfs);
@@ -512,7 +528,34 @@ mod tests {
         assert_eq!(ServeScheme::parse("hp"), Some(ServeScheme::Horizontal));
         assert_eq!(ServeScheme::parse("vertical"), Some(ServeScheme::Vertical));
         assert_eq!(ServeScheme::parse("seq"), Some(ServeScheme::Sequential));
+        assert_eq!(ServeScheme::parse("auto"), Some(ServeScheme::Auto));
+        assert_eq!(ServeScheme::parse("adaptive"), Some(ServeScheme::Auto));
         assert!(ServeScheme::parse("rows").is_none());
         assert_eq!(ServeScheme::Horizontal.label(), "hp");
+        assert_eq!(ServeScheme::Auto.label(), "auto");
+    }
+
+    #[test]
+    fn auto_dataset_routes_through_planner_and_stays_exact() {
+        let service = small_service();
+        let dd = discrete(700, 9, 13);
+        let id = service.register_discrete("a", Arc::clone(&dd), ServeScheme::Auto, None);
+        let report = service.query(&QuerySpec {
+            dataset: id,
+            cfs: CfsConfig::default(),
+        });
+        let seq = SequentialCfs::default().select_discrete(&dd);
+        assert_eq!(report.result.selected, seq.selected, "auto broke exactness");
+        // Every distributed job carries its planner decisions, with the
+        // predicted-vs-observed comparison filled in.
+        let log = service.job_log();
+        assert!(!log.is_empty());
+        let decisions: usize = log.iter().map(|j| j.plans.len()).sum();
+        assert!(decisions > 0, "auto jobs must log plan decisions");
+        for j in &log {
+            for d in &j.plans {
+                assert!(d.predicted_secs > 0.0 && d.observed_secs > 0.0);
+            }
+        }
     }
 }

@@ -15,6 +15,7 @@ use crate::cfs::SharedCorrelator;
 use crate::correlation::SharedSuCache;
 use crate::core::FeatureId;
 use crate::data::columnar::DiscreteDataset;
+use crate::dicfs::planner::AutoCorrelator;
 use crate::dicfs::{hp::HorizontalCorrelator, vp::VerticalCorrelator};
 use crate::runtime::{ColumnPair, SuEngine};
 use crate::serve::ServeScheme;
@@ -71,6 +72,16 @@ impl RegisteredDataset {
                 Arc::clone(&data),
                 Arc::clone(engine),
                 partitions.unwrap_or_else(|| data.num_features()),
+            )),
+            // The registry is where the per-dataset planner state lives:
+            // the AutoCorrelator owns a Planner (calibrated rates, vp
+            // layout flag, decision log) that persists across every
+            // query and coalesced job on this dataset.
+            ServeScheme::Auto => Box::new(AutoCorrelator::new(
+                ctx,
+                Arc::clone(&data),
+                Arc::clone(engine),
+                partitions,
             )),
         };
         Self {

@@ -33,6 +33,7 @@ use std::thread::JoinHandle;
 use std::time::Instant;
 
 use crate::core::{pair_key, FeatureId};
+use crate::dicfs::plan::PlanDecision;
 use crate::serve::registry::{DatasetId, RegisteredDataset};
 
 /// One query's forwarded cache misses, waiting for a coalesced job.
@@ -66,6 +67,10 @@ pub struct SuJobReport {
     pub queue_secs: f64,
     /// Wall-clock of the correlator batch, in seconds.
     pub compute_secs: f64,
+    /// Partitioning-planner decisions behind this job (empty for fixed
+    /// hp/vp/seq datasets): which plan served the batch, at what
+    /// predicted cost, against what observed cost.
+    pub plans: Vec<PlanDecision>,
 }
 
 pub(crate) enum SchedMsg {
@@ -251,6 +256,10 @@ pub(crate) fn run_su_job(
         ds.cache.insert_batch(&union, &values);
     }
     let compute_secs = t0.elapsed().as_secs_f64();
+    // Per-job plan attribution: the scheduler runs at most one job per
+    // dataset at a time, so draining here yields exactly this batch's
+    // decisions (fixed-scheme providers return an empty log).
+    let plans = ds.provider.drain_plan_decisions();
 
     let report = SuJobReport {
         job_id,
@@ -261,6 +270,7 @@ pub(crate) fn run_su_job(
         computed_pairs: union.len(),
         queue_secs,
         compute_secs,
+        plans,
     };
     log.lock().unwrap().push(report.clone());
 
@@ -391,6 +401,51 @@ mod tests {
         assert_eq!(rx2.recv().unwrap(), vec![1.0, 1002.0]);
         assert_eq!(counts.pairs_computed.load(Ordering::SeqCst), 3);
         assert_eq!(counts.batches.load(Ordering::SeqCst), 2);
+    }
+
+    #[test]
+    fn job_report_carries_provider_plan_decisions() {
+        use crate::dicfs::plan::Strategy;
+
+        /// Provider that logs one decision per batch, like the auto
+        /// backend does.
+        struct PlanningProvider {
+            log: Mutex<Vec<PlanDecision>>,
+        }
+        impl SharedCorrelator for PlanningProvider {
+            fn compute_batch(&self, pairs: &[(FeatureId, FeatureId)]) -> Vec<f64> {
+                self.log.lock().unwrap().push(PlanDecision {
+                    strategy: Strategy::Vp,
+                    pairs: pairs.len(),
+                    predicted_secs: 0.5,
+                    rejected_secs: 0.9,
+                    observed_secs: 0.4,
+                });
+                pairs.iter().map(|&(a, b)| (a * 1000 + b) as f64).collect()
+            }
+            fn drain_plan_decisions(&self) -> Vec<PlanDecision> {
+                std::mem::take(&mut self.log.lock().unwrap())
+            }
+        }
+
+        let ds = registered(Box::new(PlanningProvider {
+            log: Mutex::new(Vec::new()),
+        }));
+        let log = Mutex::new(Vec::new());
+        let (r, rx) = request(&ds, vec![(0, 1), (0, 2)]);
+        let report = run_su_job(0, &[r], &log);
+        assert_eq!(rx.recv().unwrap().len(), 2);
+        assert_eq!(report.plans.len(), 1);
+        assert_eq!(report.plans[0].strategy, Strategy::Vp);
+        assert_eq!(report.plans[0].pairs, 2);
+        assert!(report.plans[0].summary().contains("vp"));
+
+        // A fully-cached follow-up job never calls the provider: no
+        // stale decisions leak into its report.
+        let (r2, rx2) = request(&ds, vec![(0, 1)]);
+        let report2 = run_su_job(1, &[r2], &log);
+        assert_eq!(rx2.recv().unwrap(), vec![1.0]);
+        assert!(report2.plans.is_empty());
     }
 
     #[test]

@@ -16,9 +16,10 @@
 //! query wide repeat=2 queue_capacity=3
 //! ```
 //!
-//! `dataset` lines take `family=` (one of the Table-1 families), `rows=`,
-//! `features=`, `seed=`, `scheme=seq|hp|vp`, `partitions=`. `query` lines
-//! reference a dataset by name and accept `max_fails=`,
+//! `dataset` lines take `family=` (a synthetic family name), `rows=`,
+//! `features=`, `seed=`, `scheme=seq|hp|vp|auto` (default `auto`: the
+//! adaptive planner picks hp or vp per coalesced batch), `partitions=`.
+//! `query` lines reference a dataset by name and accept `max_fails=`,
 //! `queue_capacity=`, `locally_predictive=true|false`, `repeat=`. Blank
 //! lines and `#` comments are ignored.
 
@@ -151,10 +152,10 @@ pub fn parse(text: &str) -> Result<WorkloadScript> {
                     )));
                 }
                 let scheme = match kv.get("scheme") {
-                    None => ServeScheme::Horizontal,
+                    None => ServeScheme::Auto,
                     Some(s) => ServeScheme::parse(s).ok_or_else(|| {
                         Error::InvalidConfig(format!(
-                            "line {line_no}: unknown scheme {s:?} (seq|hp|vp)"
+                            "line {line_no}: unknown scheme {s:?} (seq|hp|vp|auto)"
                         ))
                     })?,
                 };
@@ -418,6 +419,14 @@ fn print_summary(s: &ReplaySummary) {
         computed,
         fmt_secs(max_queue)
     );
+    // Adaptive datasets: name each job's chosen plan with its
+    // predicted-vs-observed cost so a mis-calibrated model is visible in
+    // the session log.
+    for j in s.jobs.iter().filter(|j| !j.plans.is_empty()) {
+        for d in &j.plans {
+            println!("  job {} [{}] plan {}", j.job_id, j.dataset_name, d.summary());
+        }
+    }
     if let Some(ok) = s.equivalence {
         println!(
             "equivalence vs sequential: {}",
@@ -432,23 +441,30 @@ mod tests {
     use crate::runtime::NativeEngine;
 
     const SCRIPT: &str = "\
-# two tenants
+# three tenants
 dataset a family=higgs rows=500 features=8 seed=5 scheme=hp
 dataset b family=kddcup99 rows=400 features=9 seed=6 scheme=seq
+dataset c family=higgs rows=400 features=8 seed=9
 
 query a repeat=2
 query a max_fails=3 locally_predictive=false
 query b queue_capacity=3
+query c
 ";
 
     #[test]
     fn parses_datasets_and_queries() {
         let s = parse(SCRIPT).unwrap();
-        assert_eq!(s.datasets.len(), 2);
+        assert_eq!(s.datasets.len(), 3);
         assert_eq!(s.datasets[0].name, "a");
         assert_eq!(s.datasets[0].scheme, ServeScheme::Horizontal);
         assert_eq!(s.datasets[1].scheme, ServeScheme::Sequential);
-        assert_eq!(s.queries.len(), 3);
+        assert_eq!(
+            s.datasets[2].scheme,
+            ServeScheme::Auto,
+            "the adaptive planner is the default scheme"
+        );
+        assert_eq!(s.queries.len(), 4);
         assert_eq!(s.queries[0].repeat, 2);
         assert_eq!(s.queries[1].cfs.max_fails, 3);
         assert!(!s.queries[1].cfs.locally_predictive);
@@ -514,8 +530,16 @@ query b queue_capacity=3
             },
             Arc::new(NativeEngine),
         );
-        assert_eq!(summary.reports.len(), 4); // 2 + 1 + 1
+        assert_eq!(summary.reports.len(), 5); // 2 + 1 + 1 + 1
         assert_eq!(summary.equivalence, Some(true));
+        // The auto tenant's jobs name their plans.
+        let auto_plans: usize = summary
+            .jobs
+            .iter()
+            .filter(|j| j.dataset_name == "c")
+            .map(|j| j.plans.len())
+            .sum();
+        assert!(auto_plans > 0, "auto dataset logged no plan decisions");
         // The repeated query pair shares dataset a's cache: at least one
         // of the queries on `a` must have been served hits.
         let a_hits: usize = summary

@@ -36,15 +36,23 @@
 //! driver threads at once (DESIGN.md §3), which is how the multi-query
 //! service ([`crate::serve`]) runs concurrent correlation jobs over one
 //! long-lived context and executor pool.
+//!
+//! Consumers that need the measured cost of *their own* stages (rather
+//! than the context's cumulative log) register a thread-scoped
+//! [`PlanObserver`] via [`observe_stages`] — the adaptive partitioning
+//! planner ([`crate::dicfs::planner`]) uses this to compare each
+//! correlation batch's predicted cost against its observed one.
 
 pub mod config;
 pub mod metrics;
+pub mod observer;
 pub mod pool;
 pub mod rdd;
 pub mod simtime;
 
 pub use config::{ClusterConfig, NetworkModel};
 pub use metrics::{JobMetrics, StageKind, StageMetrics};
+pub use observer::{observe_stages, ObserverGuard, PlanObserver, StageRecorder};
 pub use pool::{ExecutorPool, TaskOptions};
 pub use rdd::{Broadcast, Rdd, SparkletContext};
 pub use simtime::simulate_job_time;

@@ -1,0 +1,198 @@
+//! Per-job stage observation: expose the measured costs of exactly the
+//! stages one consumer ran, even when many jobs share a context.
+//!
+//! The adaptive partitioning planner (`crate::dicfs::planner`) needs the
+//! observed cost of *one correlation batch* to refine its predictions.
+//! [`crate::sparklet::SparkletContext::metrics`] cannot provide that: the
+//! context's log is cumulative and shared — in the multi-query service
+//! many jobs interleave their stages in it.
+//!
+//! The fix exploits an execution invariant of the substrate: every stage
+//! is recorded, and every broadcast priced, on the **driver thread that
+//! submitted the action** (actions block on the executor pool; the pool
+//! runs task closures, never metric recording). So a thread-scoped
+//! observer stack gives exact attribution with zero changes to the RDD
+//! API: a consumer pushes a [`PlanObserver`] with [`observe_stages`],
+//! runs its job, drops the guard, and has seen precisely its own stages —
+//! regardless of what concurrent jobs did on the same context.
+//!
+//! [`StageRecorder`] is the standard observer: it accumulates a private
+//! [`JobMetrics`] snapshot that can be replayed on the virtual cluster
+//! (`simulate_job_time`) to get this batch's simulated cost.
+
+use std::cell::RefCell;
+use std::marker::PhantomData;
+use std::sync::{Arc, Mutex};
+
+use crate::sparklet::metrics::{JobMetrics, StageMetrics};
+
+/// Receiver of per-stage execution reports (see module docs).
+///
+/// Callbacks fire on the driver thread that ran the action, immediately
+/// after the stage's metrics are finalized (and before the action
+/// returns), so an observer sees stages in execution order.
+pub trait PlanObserver: Send + Sync {
+    /// One stage finished on the observed thread.
+    fn on_stage(&self, stage: &StageMetrics);
+    /// A broadcast of `bytes` was priced on the observed thread.
+    fn on_broadcast(&self, bytes: usize);
+}
+
+thread_local! {
+    static OBSERVERS: RefCell<Vec<Arc<dyn PlanObserver>>> = const { RefCell::new(Vec::new()) };
+}
+
+/// Scope guard returned by [`observe_stages`]; unregisters the observer
+/// when dropped. Deliberately `!Send`: the registration is thread-local,
+/// so the guard must drop on the thread that created it.
+pub struct ObserverGuard {
+    _not_send: PhantomData<*const ()>,
+}
+
+/// Register `obs` to receive every stage/broadcast the *current thread*
+/// records until the returned guard drops. Registrations nest: all
+/// active observers on the thread are notified.
+pub fn observe_stages(obs: Arc<dyn PlanObserver>) -> ObserverGuard {
+    OBSERVERS.with(|o| o.borrow_mut().push(obs));
+    ObserverGuard {
+        _not_send: PhantomData,
+    }
+}
+
+impl Drop for ObserverGuard {
+    fn drop(&mut self) {
+        OBSERVERS.with(|o| {
+            o.borrow_mut().pop();
+        });
+    }
+}
+
+/// Notify the current thread's observers of a finished stage.
+pub(crate) fn notify_stage(stage: &StageMetrics) {
+    OBSERVERS.with(|o| {
+        for obs in o.borrow().iter() {
+            obs.on_stage(stage);
+        }
+    });
+}
+
+/// Notify the current thread's observers of a priced broadcast.
+pub(crate) fn notify_broadcast(bytes: usize) {
+    OBSERVERS.with(|o| {
+        for obs in o.borrow().iter() {
+            obs.on_broadcast(bytes);
+        }
+    });
+}
+
+/// A [`PlanObserver`] that accumulates everything it sees into a private
+/// [`JobMetrics`] — the per-batch metrics capture the planner replays on
+/// the virtual cluster.
+#[derive(Default)]
+pub struct StageRecorder {
+    metrics: Mutex<JobMetrics>,
+}
+
+impl StageRecorder {
+    /// Fresh, empty recorder.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Snapshot of everything observed so far.
+    pub fn metrics(&self) -> JobMetrics {
+        self.metrics.lock().unwrap().clone()
+    }
+}
+
+impl PlanObserver for StageRecorder {
+    fn on_stage(&self, stage: &StageMetrics) {
+        self.metrics.lock().unwrap().stages.push(stage.clone());
+    }
+
+    fn on_broadcast(&self, bytes: usize) {
+        self.metrics.lock().unwrap().broadcast_bytes.push(bytes);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparklet::{ClusterConfig, SparkletContext, StageKind};
+
+    #[test]
+    fn recorder_sees_only_its_scope() {
+        let ctx = SparkletContext::new(ClusterConfig::with_nodes(2));
+        // Stage before the guard: invisible.
+        let _ = ctx.parallelize(vec![1, 2, 3], 2).map("pre", |x| x + 1).count();
+
+        let rec = Arc::new(StageRecorder::new());
+        {
+            let _guard = observe_stages(Arc::clone(&rec) as Arc<dyn PlanObserver>);
+            let _bc = ctx.broadcast(7u32, 99);
+            let _ = ctx.parallelize(vec![1, 2, 3], 3).map("inner", |x| x * 2).count();
+        }
+        // Stage after the guard: invisible.
+        let _ = ctx.parallelize(vec![4, 5], 2).map("post", |x| x + 1).count();
+
+        let jm = rec.metrics();
+        assert_eq!(jm.stages.len(), 1);
+        assert_eq!(jm.stages[0].label, "inner");
+        assert_eq!(jm.stages[0].kind, StageKind::Map);
+        assert_eq!(jm.broadcast_bytes, vec![99]);
+        // The context's cumulative log still has everything.
+        assert_eq!(ctx.metrics().stages.len(), 3);
+    }
+
+    #[test]
+    fn observers_are_per_thread() {
+        // A stage run by another thread on the same context must not leak
+        // into this thread's recorder — the attribution invariant the
+        // multi-query service relies on.
+        let ctx = SparkletContext::new(ClusterConfig::with_nodes(2));
+        let rec = Arc::new(StageRecorder::new());
+        let _guard = observe_stages(Arc::clone(&rec) as Arc<dyn PlanObserver>);
+
+        let ctx2 = Arc::clone(&ctx);
+        std::thread::spawn(move || {
+            let _ = ctx2.parallelize(vec![1, 2], 2).map("other", |x| x + 1).count();
+        })
+        .join()
+        .unwrap();
+
+        let _ = ctx.parallelize(vec![3, 4], 2).map("mine", |x| x + 1).count();
+        let jm = rec.metrics();
+        assert_eq!(jm.stages.len(), 1);
+        assert_eq!(jm.stages[0].label, "mine");
+    }
+
+    #[test]
+    fn nested_observers_both_notified() {
+        let ctx = SparkletContext::new(ClusterConfig::with_nodes(2));
+        let outer = Arc::new(StageRecorder::new());
+        let inner = Arc::new(StageRecorder::new());
+        let _g1 = observe_stages(Arc::clone(&outer) as Arc<dyn PlanObserver>);
+        {
+            let _g2 = observe_stages(Arc::clone(&inner) as Arc<dyn PlanObserver>);
+            let _ = ctx.parallelize(vec![1], 1).map("both", |x| x + 1).count();
+        }
+        let _ = ctx.parallelize(vec![2], 1).map("outer-only", |x| x + 1).count();
+        assert_eq!(inner.metrics().stages.len(), 1);
+        assert_eq!(outer.metrics().stages.len(), 2);
+    }
+
+    #[test]
+    fn shuffle_and_collect_stages_observed() {
+        let ctx = SparkletContext::new(ClusterConfig::with_nodes(2));
+        let rec = Arc::new(StageRecorder::new());
+        let _guard = observe_stages(Arc::clone(&rec) as Arc<dyn PlanObserver>);
+        let red = ctx
+            .parallelize((0..20u64).map(|i| (i % 4, 1u64)).collect::<Vec<_>>(), 4)
+            .reduce_by_key("sum", 2, |_| 8, |a, b| *a += *b);
+        let _ = red.collect();
+        let jm = rec.metrics();
+        assert_eq!(jm.stages_of_kind(StageKind::Shuffle), 1);
+        assert_eq!(jm.stages_of_kind(StageKind::Collect), 1);
+        assert!(jm.total_shuffle_bytes() > 0);
+    }
+}

@@ -118,6 +118,7 @@ impl SparkletContext {
     /// Broadcast a read-only value to all (virtual) workers, charging
     /// `bytes` to the network model.
     pub fn broadcast<T>(self: &Arc<Self>, value: T, bytes: usize) -> Broadcast<T> {
+        crate::sparklet::observer::notify_broadcast(bytes);
         self.metrics.lock().unwrap().broadcast_bytes.push(bytes);
         Broadcast {
             value: Arc::new(value),
@@ -135,6 +136,10 @@ impl SparkletContext {
     }
 
     fn record_stage(&self, stage: StageMetrics) {
+        // Observers first (thread-scoped, see `observer`): they receive
+        // exactly the stages the current driver thread records, which is
+        // how per-batch costs are attributed under concurrent jobs.
+        crate::sparklet::observer::notify_stage(&stage);
         self.metrics.lock().unwrap().stages.push(stage);
     }
 }
@@ -391,6 +396,11 @@ impl<T: Send + Sync + 'static> Rdd<T> {
 /// as Spark's shuffle writers do, so its cost lands in (parallel) task
 /// time, not on the serial driver. Returns the buckets plus the wire
 /// bytes of the combined map output.
+///
+/// The combiner merges **by reference**: only the first record seen for
+/// a key is cloned (to seed the accumulator); every further record is
+/// folded in place. Input stays pristine, so a retried task simply
+/// re-reads it.
 fn map_side_combine<K, V, M, W>(
     part: &[(K, V)],
     num_out: usize,
@@ -400,13 +410,13 @@ fn map_side_combine<K, V, M, W>(
 where
     K: Eq + Hash + Clone,
     V: Clone,
-    M: Fn(&mut V, V) + ?Sized,
+    M: Fn(&mut V, &V) + ?Sized,
     W: Fn(&V) -> usize + ?Sized,
 {
     let mut acc: HashMap<K, V> = HashMap::new();
     for (k, v) in part {
         match acc.get_mut(k) {
-            Some(a) => merge(a, v.clone()),
+            Some(a) => merge(a, v),
             None => {
                 acc.insert(k.clone(), v.clone());
             }
@@ -430,9 +440,10 @@ where
 {
     /// `reduceByKey`: map-side combine per partition, hash shuffle into
     /// `num_out` partitions, reduce-side merge. `wire(v)` prices the
-    /// map-output records for the shuffle cost model; `merge(a, b)` must
-    /// be commutative + associative (the u64-count tables are — that is
-    /// what makes the distributed result bit-exact).
+    /// map-output records for the shuffle cost model; `merge(a, b)` folds
+    /// `b` into the accumulator `a` by reference and must be commutative
+    /// + associative (the u64-count tables are — that is what makes the
+    /// distributed result bit-exact).
     ///
     /// This is a stage boundary: any pending narrow chain is fused into
     /// the shuffle-map tasks (one `Shuffle` stage records both halves),
@@ -443,10 +454,10 @@ where
         label: &str,
         num_out: usize,
         wire: impl Fn(&V) -> usize + Send + Sync + 'static,
-        merge: impl Fn(&mut V, V) + Send + Sync + 'static,
+        merge: impl Fn(&mut V, &V) + Send + Sync + 'static,
     ) -> Rdd<(K, V)> {
         let num_out = num_out.max(1);
-        let merge: Arc<dyn Fn(&mut V, V) + Send + Sync> = Arc::new(merge);
+        let merge: Arc<dyn Fn(&mut V, &V) + Send + Sync> = Arc::new(merge);
         let wire: Arc<dyn Fn(&V) -> usize + Send + Sync> = Arc::new(wire);
 
         // Map side (+ any fused narrow ancestors), through the same
@@ -481,10 +492,12 @@ where
         // Reduce side: each output partition merges its routed chunks —
         // one pool task per reducer, so the gathering parallelizes
         // instead of running on the driver. The routed chunks stay
-        // shared and read-only (records are cloned into the accumulator)
-        // for the same reason Spark keeps shuffle files until the stage
-        // commits: a retried reducer must be able to re-read its input
-        // after a mid-merge panic.
+        // shared and read-only for the same reason Spark keeps shuffle
+        // files until the stage commits: a retried reducer must be able
+        // to re-read pristine input after a mid-merge panic. Merging is
+        // by reference, so on the happy path only the first record per
+        // key is cloned (the accumulator seed) — not every record, as
+        // the first version of this reducer did.
         let m2 = Arc::clone(&merge);
         let (reduced, red_reports) = self
             .ctx
@@ -495,7 +508,7 @@ where
                 for chunk in &routed[i] {
                     for (k, v) in chunk {
                         match acc.get_mut(k) {
-                            Some(a) => merge(a, v.clone()),
+                            Some(a) => merge(a, v),
                             None => {
                                 acc.insert(k.clone(), v.clone());
                             }
@@ -645,7 +658,7 @@ mod tests {
         let red = c
             .parallelize((0..40).collect::<Vec<u32>>(), 4)
             .map("key", |x| (x % 4, 1u64))
-            .reduce_by_key("sum", 2, |_| 8, |a, b| *a += b);
+            .reduce_by_key("sum", 2, |_| 8, |a, b| *a += *b);
         let m = c.metrics();
         assert_eq!(m.stages.len(), 1, "map fused into the shuffle stage");
         assert_eq!(m.stages[0].kind, StageKind::Shuffle);
@@ -661,7 +674,7 @@ mod tests {
         let c = ctx();
         let pairs: Vec<(u32, u64)> = (0..100).map(|i| (i % 5, 1u64)).collect();
         let rdd = c.parallelize(pairs, 8);
-        let reduced = rdd.reduce_by_key("sum", 3, |_| 8, |a, b| *a += b);
+        let reduced = rdd.reduce_by_key("sum", 3, |_| 8, |a, b| *a += *b);
         let mut out = reduced.collect();
         out.sort();
         assert_eq!(out, vec![(0, 20), (1, 20), (2, 20), (3, 20), (4, 20)]);
@@ -672,7 +685,7 @@ mod tests {
         let c = ctx();
         let pairs: Vec<(u32, u64)> = (0..16).map(|i| (i % 4, 1u64)).collect();
         let rdd = c.parallelize(pairs, 4);
-        let _ = rdd.reduce_by_key("sum", 2, |_| 100, |a, b| *a += b);
+        let _ = rdd.reduce_by_key("sum", 2, |_| 100, |a, b| *a += *b);
         let m = c.metrics();
         let stage = m.stages.last().unwrap();
         assert_eq!(stage.kind, StageKind::Shuffle);
@@ -726,6 +739,50 @@ mod tests {
     }
 
     #[test]
+    fn reduce_clones_first_per_key_only() {
+        // Regression for the reducer-side cloning fix: with by-reference
+        // merging, only the accumulator seeds (one per distinct key per
+        // map partition on the map side, one per distinct key per reducer
+        // on the reduce side) are cloned — never every record.
+        use std::sync::atomic::{AtomicUsize, Ordering};
+
+        struct Counted(u64, Arc<AtomicUsize>);
+        impl Clone for Counted {
+            fn clone(&self) -> Self {
+                self.1.fetch_add(1, Ordering::SeqCst);
+                Counted(self.0, Arc::clone(&self.1))
+            }
+        }
+
+        let clones = Arc::new(AtomicUsize::new(0));
+        let c = ctx();
+        // 64 records, 4 distinct keys, 4 map partitions, 2 reducers.
+        let pairs: Vec<(u32, Counted)> = (0..64)
+            .map(|i| (i % 4, Counted(1, Arc::clone(&clones))))
+            .collect();
+        let baseline = clones.load(Ordering::SeqCst); // parallelize moved, no clones
+        let reduced = c.parallelize(pairs, 4).reduce_by_key(
+            "sum",
+            2,
+            |_| 8,
+            |a, b| a.0 += b.0,
+        );
+        let mut out: Vec<(u32, u64)> = reduced
+            .partitions()
+            .iter()
+            .flatten()
+            .map(|(k, v)| (*k, v.0))
+            .collect();
+        out.sort();
+        assert_eq!(out, vec![(0, 16), (1, 16), (2, 16), (3, 16)]);
+        let total = clones.load(Ordering::SeqCst) - baseline;
+        // map side: 4 partitions × 4 keys = 16 seeds; reduce side: 4 keys
+        // across 2 reducers = 4 seeds. Far below the 64 + 16 clones the
+        // clone-every-record reducer performed.
+        assert!(total <= 20, "expected ≤ 20 seed clones, saw {total}");
+    }
+
+    #[test]
     fn identical_results_across_thread_counts() {
         // Same pipeline, 1-thread vs many-thread pool: bit-identical
         // output (slot-ordered results + deterministic merge order).
@@ -737,7 +794,7 @@ mod tests {
             let mut out = c
                 .parallelize((0..200).collect::<Vec<u64>>(), 16)
                 .map("key", |x| (x % 7, x * x))
-                .reduce_by_key("sum", 3, |_| 8, |a, b| *a += b)
+                .reduce_by_key("sum", 3, |_| 8, |a, b| *a += *b)
                 .collect();
             out.sort();
             out
@@ -764,7 +821,7 @@ mod tests {
                     let mut out = c
                         .parallelize((base..base + 50).collect::<Vec<i64>>(), 4)
                         .map("key", |x| (*x % 5, 1u64))
-                        .reduce_by_key("sum", 2, |_| 8, |a, b| *a += b)
+                        .reduce_by_key("sum", 2, |_| 8, |a, b| *a += *b)
                         .collect();
                     out.sort();
                     assert_eq!(out.iter().map(|(_, n)| n).sum::<u64>(), 50);

@@ -63,7 +63,7 @@ fn equivalence_randomized_property() {
     // invariant.
     let mut rng = XorShift64Star::new(0xD1CF5);
     for round in 0..12 {
-        let family = FAMILIES[rng.next_below(4) as usize];
+        let family = FAMILIES[rng.next_below(FAMILIES.len() as u64) as usize];
         let rows = 200 + rng.next_below(800) as usize;
         let features = 6 + rng.next_below(24) as usize;
         let nodes = 2 + rng.next_below(9) as usize;

@@ -3,11 +3,16 @@
 //! discretizer, the cache, and the scheduler — seeded, many iterations,
 //! shrink-free but reproducible.
 
+use std::sync::Arc;
+
+use dicfs::cfs::SequentialCfs;
 use dicfs::correlation::cache::CorrelationCache;
 use dicfs::correlation::ctable::ContingencyTable;
 use dicfs::correlation::entropy::entropies;
 use dicfs::correlation::pearson::PearsonStats;
 use dicfs::correlation::su::{su_from_table, symmetrical_uncertainty};
+use dicfs::data::columnar::DiscreteDataset;
+use dicfs::dicfs::{DiCfs, DiCfsConfig, Partitioning};
 use dicfs::discretize::mdl::{apply_cuts, mdl_cut_points};
 use dicfs::sparklet::metrics::lpt_makespan;
 use dicfs::util::XorShift64Star;
@@ -205,6 +210,62 @@ fn prop_lpt_bounds() {
         assert!(makespan <= lower * 4.0 / 3.0 + 1e-9, "{makespan} vs {lower}");
         // never worse than serial
         assert!(makespan <= total + 1e-9);
+    }
+}
+
+#[test]
+fn prop_exactness_seq_hp_vp_auto_across_shapes_and_partitions() {
+    // The paper's exactness claim, as a property: on random datasets
+    // across shapes — tall, wide, and degenerate (single-bin column,
+    // plus partition counts exceeding rows/features so empty partitions
+    // occur) — sequential ≡ hp ≡ vp ≡ auto, bit-identically, for every
+    // partition count 1..8.
+    let mut rng = XorShift64Star::new(0x5EED);
+    // (rows, features): tall, wide, tiny/degenerate
+    let shapes = [(240usize, 5usize), (30, 14), (9, 3)];
+    for (round, &(rows, features)) in shapes.iter().enumerate() {
+        let mut cols = Vec::with_capacity(features);
+        let mut arities = Vec::with_capacity(features);
+        for f in 0..features {
+            if f == 1 {
+                // degenerate single-bin column in every dataset
+                cols.push(vec![0u8; rows]);
+                arities.push(1u16);
+            } else {
+                let arity = 2 + rng.next_below(6) as u16;
+                cols.push((0..rows).map(|_| rng.next_below(arity as u64) as u8).collect());
+                arities.push(arity);
+            }
+        }
+        let class: Vec<u8> = (0..rows).map(|_| rng.next_below(3) as u8).collect();
+        let dd = Arc::new(
+            DiscreteDataset::new(format!("prop-{round}"), cols, arities, class, 3).unwrap(),
+        );
+        let seq = SequentialCfs::default().select_discrete(&dd);
+        for parts in 1..=8usize {
+            for scheme in [
+                Partitioning::Horizontal,
+                Partitioning::Vertical,
+                Partitioning::Auto,
+            ] {
+                let mut cfg = DiCfsConfig::for_scheme(scheme, 3);
+                cfg.num_partitions = Some(parts);
+                let run = DiCfs::native(cfg).select(&dd);
+                assert_eq!(
+                    run.result.selected, seq.selected,
+                    "{scheme:?} diverged on shape {rows}x{features} with {parts} partitions"
+                );
+                assert_eq!(
+                    run.result.merit.to_bits(),
+                    seq.merit.to_bits(),
+                    "{scheme:?} merit not bit-identical on {rows}x{features}/{parts}"
+                );
+                assert_eq!(
+                    run.result.locally_predictive_added,
+                    seq.locally_predictive_added
+                );
+            }
+        }
     }
 }
 

@@ -19,7 +19,7 @@ fn word_count_pipeline() {
     let words = ctx.parallelize(text, 4);
     let counts = words
         .map("pair", |w| (w.to_string(), 1u64))
-        .reduce_by_key("count", 2, |_| 16, |a, b| *a += b);
+        .reduce_by_key("count", 2, |_| 16, |a, b| *a += *b);
     let mut out = counts.collect();
     out.sort();
     assert_eq!(
@@ -112,7 +112,7 @@ fn deterministic_across_pool_sizes() {
             .map("mix", |x| x ^ (x << 3))
             .filter("odd", |x| x % 2 == 1)
             .map("key", |x| (x % 11, *x))
-            .reduce_by_key("max", 4, |_| 8, |a, b| *a = (*a).max(b))
+            .reduce_by_key("max", 4, |_| 8, |a, b| *a = (*a).max(*b))
             .collect();
         out.sort();
         out
@@ -171,7 +171,7 @@ fn shuffle_failure_injection_in_reduce() {
             if a2.fetch_add(1, Ordering::SeqCst) == 0 {
                 panic!("injected merge fault");
             }
-            *a += b;
+            *a += *b;
         },
     );
     std::panic::set_hook(prev);
