@@ -1,0 +1,293 @@
+//! Ablation for incremental DiCFS (DESIGN.md §12): append-and-requery
+//! vs cold re-registration.
+//!
+//! Workload, per tenant: a stream of instances split into a base batch
+//! and a delta batch.
+//! * **incremental** — register the base, query (fills the versioned SU
+//!   cache), `append` the delta, query again: cached pairs are
+//!   *upgraded* by merging only the delta rows' counts; only genuinely
+//!   new pairs are computed over the full rows. A third, warm-restarted
+//!   query measures the search-side saving.
+//! * **cold re-registration** — a fresh service registers the merged
+//!   data from scratch and queries: every pair is computed over all
+//!   rows (what the pre-incremental service had to do after any
+//!   append).
+//!
+//! Asserted acceptance bars (the ISSUE's):
+//! * **Equal results**: the incremental post-append query selects the
+//!   same subset, with bit-identical merit, as the cold re-registration
+//!   query (and both match a from-scratch sequential run).
+//! * **Strictly fewer SU cells**: the incremental path's post-append
+//!   scan work (`delta_cells + full_cells` of its version-1 jobs) stays
+//!   strictly below the cold path's (`full_cells` of its jobs), and its
+//!   from-scratch pair computations are strictly fewer too.
+//! * **Warm restart**: the warm-restarted query expands no more search
+//!   states than the cold post-append query.
+//!
+//! Output: table + `bench_out/ablation_incremental.csv` +
+//! `bench_out/BENCH_incremental.json` (the machine-readable perf
+//! trajectory for this bench).
+
+use std::sync::Arc;
+
+use dicfs::cfs::best_first::CfsConfig;
+use dicfs::cfs::SequentialCfs;
+use dicfs::data::synth::{by_name, SynthConfig};
+use dicfs::discretize::discretize_dataset;
+use dicfs::harness::{bench_scale, report};
+use dicfs::serve::{DicfsService, QuerySpec, ServeScheme, ServiceConfig};
+use dicfs::sparklet::ClusterConfig;
+use dicfs::util::chart::table;
+
+struct Row {
+    tenant: &'static str,
+    scheme: ServeScheme,
+    base_rows: usize,
+    delta_rows: usize,
+    cold_pairs: usize,
+    cold_cells: u64,
+    incr_fresh_pairs: usize,
+    incr_upgraded_pairs: usize,
+    incr_cells: u64,
+    cold_iters: usize,
+    warm_iters: usize,
+}
+
+fn service() -> DicfsService {
+    DicfsService::new(ServiceConfig {
+        cluster: ClusterConfig::with_nodes(4),
+        max_inflight_jobs: 2,
+    })
+}
+
+fn main() {
+    let scale = bench_scale();
+    println!("== Ablation: incremental append-and-requery vs cold re-registration (scale {scale}) ==\n");
+
+    let rows = |base: usize| ((base as f64 * scale) as usize).max(400);
+    let tenants: [(&'static str, &'static str, ServeScheme, usize, u64); 2] = [
+        ("higgs-hp", "higgs", ServeScheme::Horizontal, rows(3_000), 17),
+        ("epsilon-auto", "epsilon", ServeScheme::Auto, rows(1_600), 29),
+    ];
+
+    let spec_cfs = CfsConfig::default();
+    let mut out_rows: Vec<Row> = Vec::new();
+
+    for (tenant, family, scheme, base_rows, seed) in tenants {
+        let delta_rows = (base_rows / 6).max(50);
+        let total = base_rows + delta_rows;
+        let raw = by_name(
+            family,
+            &SynthConfig {
+                rows: total,
+                seed,
+                features: Some(14),
+            },
+        );
+        let full = Arc::new(discretize_dataset(&raw).unwrap());
+        let scratch = SequentialCfs::new(spec_cfs).select_discrete(&full);
+
+        // COLD RE-REGISTRATION: merged data from scratch.
+        let cold_svc = service();
+        let cold_id = cold_svc.register_discrete(tenant, Arc::clone(&full), scheme, None);
+        let cold = cold_svc.query(&QuerySpec {
+            dataset: cold_id,
+            cfs: spec_cfs,
+        });
+        assert_eq!(cold.result.selected, scratch.selected, "{tenant}: cold run broke");
+        let cold_jobs = cold_svc.job_log();
+        let cold_pairs: usize = cold_jobs.iter().map(|j| j.computed_pairs).sum();
+        let cold_cells: u64 = cold_jobs
+            .iter()
+            .map(|j| j.full_cells + j.delta_cells)
+            .sum();
+
+        // INCREMENTAL: base → query → append → query (+ warm restart).
+        let incr_svc = service();
+        let incr_id = incr_svc.register_discrete(
+            tenant,
+            Arc::new(full.slice_rows(0..base_rows)),
+            scheme,
+            None,
+        );
+        let spec = QuerySpec {
+            dataset: incr_id,
+            cfs: spec_cfs,
+        };
+        let pre = incr_svc.query(&spec);
+        incr_svc
+            .append_discrete(incr_id, &full.slice_rows(base_rows..total))
+            .unwrap();
+        let post = incr_svc.query(&spec);
+        let warm = incr_svc.query_warm(&spec, &pre.warm);
+
+        // Equal results: incremental ≡ cold re-registration ≡ scratch.
+        assert_eq!(
+            post.result.selected, cold.result.selected,
+            "{tenant}: append-and-requery diverged from cold re-registration"
+        );
+        assert_eq!(
+            post.result.merit.to_bits(),
+            cold.result.merit.to_bits(),
+            "{tenant}: merit not bit-identical"
+        );
+
+        // Post-append work = the version-1 jobs only.
+        let incr_jobs: Vec<_> = incr_svc
+            .job_log()
+            .into_iter()
+            .filter(|j| j.version == 1)
+            .collect();
+        let incr_fresh_pairs: usize = incr_jobs
+            .iter()
+            .map(|j| j.computed_pairs - j.upgraded_pairs)
+            .sum();
+        let incr_upgraded_pairs: usize = incr_jobs.iter().map(|j| j.upgraded_pairs).sum();
+        let incr_cells: u64 = incr_jobs
+            .iter()
+            .map(|j| j.full_cells + j.delta_cells)
+            .sum();
+
+        assert!(
+            incr_upgraded_pairs > 0,
+            "{tenant}: no cached pair was delta-upgraded"
+        );
+        assert!(
+            incr_cells < cold_cells,
+            "{tenant}: incremental scanned {incr_cells} cells, cold only {cold_cells}"
+        );
+        assert!(
+            incr_fresh_pairs < cold_pairs,
+            "{tenant}: incremental computed {incr_fresh_pairs} pairs from scratch vs cold {cold_pairs}"
+        );
+        assert!(
+            warm.result.iterations <= post.result.iterations,
+            "{tenant}: warm restart expanded more states ({} vs {})",
+            warm.result.iterations,
+            post.result.iterations
+        );
+
+        out_rows.push(Row {
+            tenant,
+            scheme,
+            base_rows,
+            delta_rows,
+            cold_pairs,
+            cold_cells,
+            incr_fresh_pairs,
+            incr_upgraded_pairs,
+            incr_cells,
+            cold_iters: post.result.iterations,
+            warm_iters: warm.result.iterations,
+        });
+    }
+
+    let trows: Vec<Vec<String>> = out_rows
+        .iter()
+        .map(|r| {
+            vec![
+                r.tenant.to_string(),
+                r.scheme.label().to_string(),
+                format!("{}+{}", r.base_rows, r.delta_rows),
+                r.cold_pairs.to_string(),
+                r.cold_cells.to_string(),
+                format!("{}f/{}u", r.incr_fresh_pairs, r.incr_upgraded_pairs),
+                r.incr_cells.to_string(),
+                format!("{:.1}x", r.cold_cells as f64 / r.incr_cells.max(1) as f64),
+                format!("{}/{}", r.warm_iters, r.cold_iters),
+            ]
+        })
+        .collect();
+    println!(
+        "{}",
+        table(
+            &[
+                "tenant",
+                "scheme",
+                "rows (base+delta)",
+                "cold pairs",
+                "cold cells",
+                "incr pairs (fresh/upgraded)",
+                "incr cells",
+                "cell saving",
+                "warm/cold iters",
+            ],
+            &trows
+        )
+    );
+
+    let csv: Vec<Vec<String>> = out_rows
+        .iter()
+        .map(|r| {
+            vec![
+                r.tenant.to_string(),
+                r.scheme.label().to_string(),
+                r.base_rows.to_string(),
+                r.delta_rows.to_string(),
+                r.cold_pairs.to_string(),
+                r.cold_cells.to_string(),
+                r.incr_fresh_pairs.to_string(),
+                r.incr_upgraded_pairs.to_string(),
+                r.incr_cells.to_string(),
+                r.cold_iters.to_string(),
+                r.warm_iters.to_string(),
+            ]
+        })
+        .collect();
+    let path = report::write_csv(
+        "ablation_incremental.csv",
+        &[
+            "tenant",
+            "scheme",
+            "base_rows",
+            "delta_rows",
+            "cold_pairs",
+            "cold_cells",
+            "incr_fresh_pairs",
+            "incr_upgraded_pairs",
+            "incr_cells",
+            "cold_iters",
+            "warm_iters",
+        ],
+        &csv,
+    );
+
+    // Machine-readable perf trajectory (one JSON per bench run).
+    let tenants_json: Vec<String> = out_rows
+        .iter()
+        .map(|r| {
+            format!(
+                concat!(
+                    "    {{\"tenant\": \"{}\", \"scheme\": \"{}\", ",
+                    "\"base_rows\": {}, \"delta_rows\": {}, ",
+                    "\"cold_pairs\": {}, \"cold_cells\": {}, ",
+                    "\"incr_fresh_pairs\": {}, \"incr_upgraded_pairs\": {}, ",
+                    "\"incr_cells\": {}, \"cold_iters\": {}, \"warm_iters\": {}}}"
+                ),
+                r.tenant,
+                r.scheme.label(),
+                r.base_rows,
+                r.delta_rows,
+                r.cold_pairs,
+                r.cold_cells,
+                r.incr_fresh_pairs,
+                r.incr_upgraded_pairs,
+                r.incr_cells,
+                r.cold_iters,
+                r.warm_iters
+            )
+        })
+        .collect();
+    let json = format!(
+        "{{\n  \"bench\": \"incremental\",\n  \"tenants\": [\n{}\n  ]\n}}\n",
+        tenants_json.join(",\n")
+    );
+    let json_path = report::out_dir().join("BENCH_incremental.json");
+    std::fs::write(&json_path, json).expect("write BENCH_incremental.json");
+
+    println!(
+        "ablation_incremental: PASS (equal results, strictly fewer SU cells than cold re-registration)"
+    );
+    println!("  data: {}", path.display());
+    println!("  perf trajectory: {}\n", json_path.display());
+}

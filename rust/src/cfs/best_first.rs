@@ -15,10 +15,39 @@
 use std::collections::HashSet;
 
 use crate::cfs::locally_predictive::add_locally_predictive;
+use crate::cfs::merit::merit_from_sums;
 use crate::cfs::subset::SearchState;
 use crate::cfs::Correlator;
 use crate::core::{FeatureId, SelectionResult, CLASS_ID};
 use crate::correlation::{CorrelationCache, SuCache};
+
+/// A search-restart seed: feature subsets worth re-evaluating first —
+/// the winning subset of a previous run, followed by its final priority
+/// queue ([`BestFirstSearch::run_traced`] returns one).
+///
+/// Warm restarts are the incremental service's post-append accelerator
+/// (DESIGN.md §12): after new instances arrive, the correlations shift
+/// slightly, and re-seeding the search from where the last run ended
+/// typically converges in a fraction of the expansions. The seed is
+/// *advisory* — subsets are re-evaluated under the **current**
+/// correlations before use, invalid feature ids are dropped, and an
+/// empty seed degrades to an ordinary cold start. The warm result's
+/// merit can only match or exceed the re-evaluated seed's, but its
+/// trajectory (and thus, in principle, its subset) may differ from a
+/// cold search's; exactness-critical paths use the cold search.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct WarmStart {
+    /// Candidate subsets, best first. Order matters only as a tie-break
+    /// hint; each subset is re-scored before seeding the queue.
+    pub subsets: Vec<Vec<FeatureId>>,
+}
+
+impl WarmStart {
+    /// True when the seed carries no subsets (cold start).
+    pub fn is_empty(&self) -> bool {
+        self.subsets.is_empty()
+    }
+}
 
 /// Search configuration (defaults = the paper's experimental setup).
 #[derive(Debug, Clone, Copy)]
@@ -74,12 +103,62 @@ impl BestFirstSearch {
         correlator: &mut dyn Correlator,
         cache: &mut dyn SuCache,
     ) -> SelectionResult {
-        let mut queue: Vec<SearchState> = vec![SearchState::empty()];
+        self.run_traced(m, correlator, cache, None).0
+    }
+
+    /// [`Self::run_with_cache`], optionally **warm-restarted**, returning
+    /// the restart seed for the *next* run alongside the selection.
+    ///
+    /// With `warm = None` this is exactly the cold search (the plain
+    /// entry points delegate here). With a seed, each subset is
+    /// re-evaluated under the current correlations — one batched cache
+    /// request for all of them, so the misses coalesce into a single
+    /// distributed job — and the root is expanded eagerly (counted as
+    /// the first iteration), so every singleton is evaluated and merged
+    /// with the re-scored seeds before the bounded queue truncates: a
+    /// degraded seed can never wall off the singleton frontier. The
+    /// best resulting state is the incumbent, and the stop rule is
+    /// unchanged: five consecutive failures to improve on it. Since the
+    /// incumbent starts at the previous winner instead of merit 0, an
+    /// unchanged (or mildly shifted) optimum is confirmed after
+    /// `max_fails` expansions instead of being rebuilt feature by
+    /// feature.
+    pub fn run_traced(
+        &self,
+        m: usize,
+        correlator: &mut dyn Correlator,
+        cache: &mut dyn SuCache,
+        warm: Option<&WarmStart>,
+    ) -> (SelectionResult, WarmStart) {
         let mut visited: HashSet<Vec<FeatureId>> = HashSet::new();
         visited.insert(vec![]);
-        let mut best = SearchState::empty();
         let mut fails = 0usize;
         let mut iterations = 0usize;
+        let seeds = warm
+            .map(|w| seed_states(m, w, correlator, cache))
+            .unwrap_or_default();
+        let (mut queue, mut best) = if seeds.is_empty() {
+            (vec![SearchState::empty()], SearchState::empty())
+        } else {
+            let mut queue = seeds;
+            for s in &queue {
+                visited.insert(s.features.clone());
+            }
+            // Expand the cold root eagerly (this is the warm run's first
+            // iteration): every singleton joins the queue alongside the
+            // re-scored seeds *before* the capacity bound truncates, so
+            // a degraded seed can never wall off the singleton frontier
+            // the cold search would have started from.
+            let root = SearchState::empty();
+            iterations += 1;
+            let candidates: Vec<FeatureId> = (0..m).collect();
+            let singletons = expand_batch(&root, &candidates, correlator, cache, &mut visited);
+            queue.extend(singletons);
+            queue.sort_by(|a, b| a.cmp_priority(b));
+            queue.truncate(self.config.queue_capacity.max(1));
+            let best = queue[0].clone();
+            (queue, best)
+        };
 
         while fails < self.config.max_fails {
             // Dequeue the head (Algorithm 1 line 7); empty queue → done.
@@ -125,14 +204,88 @@ impl BestFirstSearch {
             locally_added = add_locally_predictive(m, &mut selected, correlator, cache);
         }
 
-        SelectionResult {
-            selected,
-            merit: best.merit,
-            iterations,
-            correlations_computed: cache.stats().computed,
-            locally_predictive_added: locally_added,
+        // Restart seed for the next run: the winner first, then whatever
+        // the bounded queue still held when the search stopped.
+        let mut warm_out = WarmStart::default();
+        let mut seen: HashSet<Vec<FeatureId>> = HashSet::new();
+        for features in std::iter::once(&best.features).chain(queue.iter().map(|s| &s.features)) {
+            if !features.is_empty() && seen.insert(features.clone()) {
+                warm_out.subsets.push(features.clone());
+            }
+        }
+
+        (
+            SelectionResult {
+                selected,
+                merit: best.merit,
+                iterations,
+                correlations_computed: cache.stats().computed,
+                locally_predictive_added: locally_added,
+            },
+            warm_out,
+        )
+    }
+}
+
+/// Re-evaluate a warm seed's subsets under the current correlations:
+/// sanitize (drop out-of-range ids, dedup, sort), fetch every needed
+/// correlation in **one** batched cache request (misses coalesce into a
+/// single distributed job), rebuild the [`SearchState`] sums, and return
+/// the states sorted by search priority (best first).
+fn seed_states(
+    m: usize,
+    warm: &WarmStart,
+    correlator: &mut dyn Correlator,
+    cache: &mut dyn SuCache,
+) -> Vec<SearchState> {
+    let mut subsets: Vec<Vec<FeatureId>> = Vec::new();
+    let mut seen: HashSet<Vec<FeatureId>> = HashSet::new();
+    for s in &warm.subsets {
+        let mut v: Vec<FeatureId> = s.iter().copied().filter(|&f| f < m).collect();
+        v.sort_unstable();
+        v.dedup();
+        if !v.is_empty() && seen.insert(v.clone()) {
+            subsets.push(v);
         }
     }
+    if subsets.is_empty() {
+        return vec![];
+    }
+
+    let mut pairs: Vec<(FeatureId, FeatureId)> = Vec::new();
+    for s in &subsets {
+        for (i, &f) in s.iter().enumerate() {
+            pairs.push((f, CLASS_ID));
+            for &g in &s[i + 1..] {
+                pairs.push((f, g));
+            }
+        }
+    }
+    let values = cache.batch(&pairs, &mut |missing| correlator.compute(missing));
+
+    let mut states = Vec::with_capacity(subsets.len());
+    let mut k = 0usize;
+    for s in subsets {
+        let mut sum_rcf = 0.0;
+        let mut sum_rff = 0.0;
+        for i in 0..s.len() {
+            sum_rcf += values[k];
+            k += 1;
+            for _ in i + 1..s.len() {
+                sum_rff += values[k];
+                k += 1;
+            }
+        }
+        let merit = merit_from_sums(s.len(), sum_rcf, sum_rff);
+        states.push(SearchState {
+            features: s,
+            sum_rcf,
+            sum_rff,
+            merit,
+        });
+    }
+    states.sort_by(|a, b| a.cmp_priority(b));
+    states
 }
 
 /// Evaluate all expansions of `head` by `candidates`, requesting the
@@ -283,6 +436,123 @@ mod tests {
         let mut corr = TableCorrelator::new(0, &[], &[]);
         let r = BestFirstSearch::new(cfg_no_lp()).run(0, &mut corr);
         assert!(r.selected.is_empty());
+    }
+
+    #[test]
+    fn traced_with_no_seed_is_the_cold_search() {
+        let build = || {
+            TableCorrelator::new(
+                6,
+                &[0.6, 0.5, 0.4, 0.3, 0.2, 0.1],
+                &[(0, 1, 0.7), (2, 3, 0.6)],
+            )
+        };
+        let search = BestFirstSearch::new(cfg_no_lp());
+        let cold = search.run(6, &mut build());
+        let mut cache = CorrelationCache::new();
+        let (traced, warm_out) = search.run_traced(6, &mut build(), &mut cache, None);
+        assert_eq!(traced, cold, "run_traced(None) must be the cold search");
+        // The trace names the winner first.
+        assert_eq!(warm_out.subsets.first(), Some(&cold.selected));
+        assert!(!warm_out.is_empty());
+    }
+
+    #[test]
+    fn warm_restart_confirms_unchanged_optimum_in_fewer_iterations() {
+        let build = || {
+            TableCorrelator::new(
+                4,
+                &[0.8, 0.7, 0.1, 0.75],
+                &[(0, 3, 0.95), (0, 1, 0.05), (1, 3, 0.05)],
+            )
+        };
+        let search = BestFirstSearch::new(cfg_no_lp());
+        let mut c1 = CorrelationCache::new();
+        let (cold, seed) = search.run_traced(4, &mut build(), &mut c1, None);
+        assert_eq!(cold.selected, vec![0, 1]);
+
+        // Correlations unchanged: the warm run re-confirms the winner
+        // after max_fails expansions instead of rebuilding the path.
+        let mut c2 = CorrelationCache::new();
+        let (warm, _) = search.run_traced(4, &mut build(), &mut c2, Some(&seed));
+        assert_eq!(warm.selected, cold.selected);
+        assert!((warm.merit - cold.merit).abs() < 1e-12);
+        assert!(
+            warm.iterations < cold.iterations,
+            "warm {} vs cold {} iterations",
+            warm.iterations,
+            cold.iterations
+        );
+    }
+
+    #[test]
+    fn warm_seed_is_sanitized_not_trusted() {
+        let mut corr = TableCorrelator::new(3, &[0.9, 0.1, 0.0], &[]);
+        // Out-of-range ids, duplicates, an empty subset, a duplicate
+        // subset: all must be dropped or canonicalized, never panic.
+        let seed = WarmStart {
+            subsets: vec![vec![7, 9], vec![], vec![1, 1, 0], vec![0, 1], vec![99]],
+        };
+        let mut cache = CorrelationCache::new();
+        let (r, _) = BestFirstSearch::new(cfg_no_lp()).run_traced(3, &mut corr, &mut cache, Some(&seed));
+        assert_eq!(r.selected, vec![0], "search still finds the optimum");
+
+        // A fully-invalid seed degrades to the cold search.
+        let garbage = WarmStart {
+            subsets: vec![vec![42], vec![]],
+        };
+        let mut corr2 = TableCorrelator::new(3, &[0.9, 0.1, 0.0], &[]);
+        let mut cache2 = CorrelationCache::new();
+        let (r2, _) =
+            BestFirstSearch::new(cfg_no_lp()).run_traced(3, &mut corr2, &mut cache2, Some(&garbage));
+        let cold = BestFirstSearch::new(cfg_no_lp()).run(3, &mut TableCorrelator::new(3, &[0.9, 0.1, 0.0], &[]));
+        assert_eq!(r2, cold);
+    }
+
+    /// Regression: a capacity-filling seed of mediocre multi-feature
+    /// subsets must not wall off the singleton frontier. Before the
+    /// eager root expansion, the seeds evicted the root from the bounded
+    /// queue (while poisoning `visited`), so the search could never
+    /// evaluate any singleton and returned a strictly worse subset.
+    #[test]
+    fn warm_seed_cannot_wall_off_the_singleton_frontier() {
+        let mut corr = TableCorrelator::new(3, &[0.9, 0.05, 0.04], &[]);
+        let seed = WarmStart {
+            subsets: vec![
+                vec![1, 2],
+                vec![0, 1],
+                vec![0, 2],
+                vec![0, 1, 2],
+                vec![1],
+                vec![2],
+            ],
+        };
+        let mut cache = CorrelationCache::new();
+        let (r, _) =
+            BestFirstSearch::new(cfg_no_lp()).run_traced(3, &mut corr, &mut cache, Some(&seed));
+        // The optimum is the singleton [0], reachable only from the root.
+        assert_eq!(r.selected, vec![0]);
+        assert!((r.merit - 0.9).abs() < 1e-9);
+    }
+
+    #[test]
+    fn warm_seed_correlations_fetch_in_one_batch() {
+        let mut corr = TableCorrelator::new(5, &[0.5, 0.4, 0.3, 0.2, 0.1], &[]);
+        let seed = WarmStart {
+            subsets: vec![vec![0, 1], vec![0, 2], vec![3]],
+        };
+        let mut cache = CorrelationCache::new();
+        // Drive the seeding step directly: all three subsets must be
+        // re-evaluated through exactly one batched correlator call.
+        let states = seed_states(5, &seed, &mut corr, &mut cache);
+        assert_eq!(corr.calls, 1, "seeding must batch every subset's pairs");
+        assert_eq!(states.len(), 3);
+        // Sorted best-first, with sums matching a direct evaluation:
+        // merit([0,1]) = (0.5 + 0.4) / sqrt(2) with zero rff.
+        assert_eq!(states[0].features, vec![0, 1]);
+        assert!((states[0].merit - 0.9 / 2f64.sqrt()).abs() < 1e-12);
+        assert_eq!(states[2].features, vec![3]);
+        assert!((states[2].merit - 0.2).abs() < 1e-12);
     }
 
     #[test]

@@ -28,7 +28,7 @@ pub mod merit;
 pub mod sequential;
 pub mod subset;
 
-pub use best_first::{BestFirstSearch, CfsConfig};
+pub use best_first::{BestFirstSearch, CfsConfig, WarmStart};
 pub use sequential::{SequentialCfs, SequentialCorrelator};
 
 use crate::core::FeatureId;
@@ -55,6 +55,53 @@ pub trait Correlator {
 pub trait SharedCorrelator: Send + Sync {
     /// Compute correlations for a batch of attribute pairs.
     fn compute_batch(&self, pairs: &[(FeatureId, FeatureId)]) -> Vec<f64>;
+
+    /// Whether this backend can run **contingency-table jobs**
+    /// ([`Self::compute_ctables`]). Table jobs are what the incremental
+    /// service (DESIGN.md §12) is built on: fresh pairs are computed as
+    /// tables (cached for future delta upgrades) and appends upgrade
+    /// cached tables by scanning only the delta rows. Scalar-only
+    /// backends (the default) still work — their cached values simply
+    /// cannot be delta-upgraded and are recomputed after an append.
+    fn supports_ctables(&self) -> bool {
+        false
+    }
+
+    /// Compute the **merged contingency table** of each pair over the row
+    /// range `rows`, in pair order — one distributed table job.
+    ///
+    /// Two uses: `rows = 0..n` computes full tables for fresh pairs (the
+    /// table is cached alongside SU so later appends can upgrade it), and
+    /// `rows = n0..n` computes *delta* tables whose counts are merged
+    /// into cached base tables via
+    /// [`ContingencyTable::merge`](crate::correlation::ContingencyTable::merge)
+    /// — exact, because u64 counts are additive across disjoint row
+    /// ranges.
+    ///
+    /// Only called when [`Self::supports_ctables`] returns `true`; the
+    /// default panics to surface a backend that advertises support
+    /// without implementing it.
+    fn compute_ctables(
+        &self,
+        pairs: &[(FeatureId, FeatureId)],
+        rows: std::ops::Range<usize>,
+    ) -> Vec<crate::correlation::ContingencyTable> {
+        let _ = rows;
+        panic!(
+            "backend declared no ctable-job support but was asked for {} tables",
+            pairs.len()
+        )
+    }
+
+    /// The adaptive backend's calibrated compute rates, if this backend
+    /// plans ([`None`] for fixed hp/vp/seq backends, the default). The
+    /// versioned registry reads this off a superseded version's provider
+    /// and seeds the next version's planner with it, so append streams
+    /// never re-pay the cost-model warm-up
+    /// ([`Planner::set_calibration`](crate::dicfs::planner::Planner::set_calibration)).
+    fn planner_calibration(&self) -> Option<crate::dicfs::planner::PlannerCalibration> {
+        None
+    }
 
     /// Take the partitioning-planner decisions accumulated since the
     /// last call. Fixed hp/vp backends make no decisions (the default);

@@ -13,20 +13,33 @@
 //! * [`CorrelationCache`] — the single-search cache every standalone
 //!   `select` run owns. Hit/miss counters feed the `ablation_ondemand`
 //!   bench that reproduces the claim.
-//! * [`SharedSuCache`] — the thread-safe, interior-mutability variant the
-//!   multi-query service (`crate::serve`) keeps alive per registered
-//!   dataset, so concurrent searches hit each other's correlations.
-//!   Statistics are **per query handle** ([`SuCacheHandle`]): `requested`
-//!   / `hits` / `computed` describe one search, never the union of every
-//!   search that ever touched the shared map (see
+//! * [`SharedSuCache`] — the thread-safe, interior-mutability variant for
+//!   concurrent searches over one *frozen* dataset. Statistics are **per
+//!   query handle** ([`SuCacheHandle`]): `requested` / `hits` /
+//!   `computed` describe one search, never the union of every search
+//!   that ever touched the shared map (see
 //!   [`CacheStats::fraction_of_full_matrix`]). The number of distinct
 //!   pairs in the shared map is reported separately by
 //!   [`SharedSuCache::len`].
+//!
+//! A third implementation backs the *incremental* service
+//! (DESIGN.md §12): [`VersionedSuCache`] entries carry the contingency
+//! table each SU value was computed from, tagged with the row count it
+//! covers. Appending instances to a dataset then invalidates **nothing**:
+//! an entry is *upgraded* by merging only the delta rows' counts into its
+//! table ([`ContingencyTable::merge`] /
+//! [`ContingencyTable::merge_rows`](crate::correlation::ContingencyTable::merge_rows))
+//! and recomputing SU from the merged table — bit-identical to a
+//! from-scratch computation because u64 counts are additive across row
+//! ranges. Queries pin a row count ([`VersionedSuCache::handle`]), so a
+//! search that started before an append keeps reading values for exactly
+//! the rows it was launched against.
 
 use std::collections::{HashMap, HashSet};
 use std::sync::{Arc, RwLock};
 
 use crate::core::{pair_key, FeatureId};
+use crate::correlation::ContingencyTable;
 
 /// Cache statistics for the on-demand ablation and per-query reporting.
 ///
@@ -358,6 +371,242 @@ impl SuCache for SuCacheHandle {
     }
 }
 
+/// One versioned cache entry: the SU value of a pair together with the
+/// contingency table it was computed from and the number of dataset rows
+/// that table covers.
+///
+/// `table` is `None` only when the value was produced by a correlation
+/// backend that cannot run contingency-table jobs (scalar-only test
+/// providers); such entries cannot be delta-upgraded and are recomputed
+/// from scratch at the next dataset version instead — slower, never
+/// wrong.
+#[derive(Debug, Clone)]
+pub struct VersionedEntry {
+    /// Number of leading dataset rows this entry's table (and SU value)
+    /// covers. An entry is valid for a query exactly when this equals
+    /// the query's pinned row count.
+    pub rows: usize,
+    /// The merged contingency table behind `su` — the state an append
+    /// upgrades by merging only the delta rows' counts.
+    pub table: Option<ContingencyTable>,
+    /// SU of the pair over the first `rows` rows.
+    pub su: f64,
+}
+
+/// Thread-safe, version-aware SU cache: the per-dataset store of the
+/// incremental multi-query service.
+///
+/// Memory trade-off: entries retain their contingency table — that *is*
+/// the incremental state an append upgrades, and it is what buys
+/// delta-sized scans instead of full recomputation. Tables are bounded
+/// by `MAX_BINS² × 8` bytes (≤ 8 KiB) each, so a warmed cache costs
+/// `O(distinct pairs × table size)`; a deployment that freezes a
+/// dataset and wants the memory back can simply re-register it (the
+/// scalar-only [`SharedSuCache`] remains for fully frozen workloads).
+///
+/// One instance is shared by **every version** of a registered dataset.
+/// Entries are keyed by canonical pair and tagged with the row count they
+/// cover ([`VersionedEntry::rows`]); there is no global version counter —
+/// validity is decided per lookup against the reader's pinned row count,
+/// which is what lets in-flight queries keep their pre-append view while
+/// new queries see the merged state (DESIGN.md §12).
+///
+/// Publication is monotone: [`VersionedSuCache::publish`] only ever
+/// replaces an entry with one covering **more** rows, so a slow query
+/// pinned to an old version can never downgrade state that a newer query
+/// already upgraded.
+#[derive(Debug, Clone, Default)]
+pub struct VersionedSuCache {
+    map: Arc<RwLock<HashMap<(FeatureId, FeatureId), VersionedEntry>>>,
+}
+
+impl VersionedSuCache {
+    /// Empty versioned cache.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// A per-query funnel pinned at `rows` dataset rows: only entries
+    /// covering exactly that many rows count as hits. Statistics start
+    /// at zero per handle, as with [`SuCacheHandle`].
+    pub fn handle(&self, rows: usize) -> VersionedSuHandle {
+        VersionedSuHandle {
+            shared: self.clone(),
+            rows,
+            local: HashMap::new(),
+            stats: CacheStats::default(),
+        }
+    }
+
+    /// The cached entry of a single pair (symmetric), whatever row count
+    /// it currently covers.
+    pub fn get(&self, a: FeatureId, b: FeatureId) -> Option<VersionedEntry> {
+        self.map.read().unwrap().get(&pair_key(a, b)).cloned()
+    }
+
+    /// One read-guard pass: the cached entry (if any) of each pair, in
+    /// input order. The resolve path of the service classifies pairs into
+    /// hit / upgradable / fresh from this snapshot.
+    pub fn lookup(&self, pairs: &[(FeatureId, FeatureId)]) -> Vec<Option<VersionedEntry>> {
+        let map = self.map.read().unwrap();
+        pairs
+            .iter()
+            .map(|&(a, b)| map.get(&pair_key(a, b)).cloned())
+            .collect()
+    }
+
+    /// Publish computed or upgraded entries under canonical keys, keeping
+    /// for each pair the entry covering the **most** rows (monotone — a
+    /// concurrent old-version query can never clobber newer state; equal
+    /// row counts are identical values by purity, so skipping is safe).
+    pub fn publish(&self, updates: Vec<((FeatureId, FeatureId), VersionedEntry)>) {
+        if updates.is_empty() {
+            return;
+        }
+        let mut map = self.map.write().unwrap();
+        for ((a, b), e) in updates {
+            match map.entry(pair_key(a, b)) {
+                std::collections::hash_map::Entry::Occupied(mut o) => {
+                    if o.get().rows < e.rows {
+                        o.insert(e);
+                    }
+                }
+                std::collections::hash_map::Entry::Vacant(v) => {
+                    v.insert(e);
+                }
+            }
+        }
+    }
+
+    /// Every cached pair with the row count and SU value it currently
+    /// holds — the exactness proptest audits this against direct SU
+    /// computations over the matching row prefix.
+    pub fn snapshot(&self) -> Vec<((FeatureId, FeatureId), usize, f64)> {
+        self.map
+            .read()
+            .unwrap()
+            .iter()
+            .map(|(&k, e)| (k, e.rows, e.su))
+            .collect()
+    }
+
+    /// Number of distinct pairs ever computed into this cache (the
+    /// service-level "distinct SU pairs" metric).
+    pub fn len(&self) -> usize {
+        self.map.read().unwrap().len()
+    }
+
+    /// True when no pair has been computed yet.
+    pub fn is_empty(&self) -> bool {
+        self.map.read().unwrap().is_empty()
+    }
+}
+
+/// One query's view of a [`VersionedSuCache`], pinned at a row count:
+/// shares the entry map with every other handle, owns its own
+/// [`CacheStats`].
+///
+/// The handle never writes to the shared map — misses (including
+/// *upgradable* entries covering fewer rows than the pin) are forwarded
+/// to the compute funnel, and the service's resolve path is the single
+/// publisher. That keeps the upgrade logic (and its delta-merge
+/// exactness argument) in one place. The handle does keep a **local**
+/// memo of the values computed for it: a query whose pinned version is
+/// superseded mid-search still never recomputes a pair it already paid
+/// for, even though the shared map (upgraded past its pin by newer
+/// queries) can no longer serve it.
+#[derive(Debug)]
+pub struct VersionedSuHandle {
+    shared: VersionedSuCache,
+    rows: usize,
+    /// Values computed through this handle, valid at its pinned row
+    /// count regardless of what the shared map has been upgraded to.
+    local: HashMap<(FeatureId, FeatureId), f64>,
+    stats: CacheStats,
+}
+
+impl VersionedSuHandle {
+    /// The row count this handle is pinned at.
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    /// The shared versioned cache this handle draws from.
+    pub fn shared(&self) -> &VersionedSuCache {
+        &self.shared
+    }
+}
+
+impl SuCache for VersionedSuHandle {
+    fn batch(
+        &mut self,
+        pairs: &[(FeatureId, FeatureId)],
+        compute: &mut dyn FnMut(&[(FeatureId, FeatureId)]) -> Vec<f64>,
+    ) -> Vec<f64> {
+        self.stats.requested += pairs.len();
+
+        // One pass under one read guard, as in SuCacheHandle — but a
+        // shared-map hit requires the entry to cover exactly the pinned
+        // row count. Anything else (absent, stale, or upgraded past the
+        // pin) falls back to this handle's local memo, then to
+        // `compute`.
+        let mut found: Vec<Option<f64>> = Vec::with_capacity(pairs.len());
+        let mut missing: Vec<(FeatureId, FeatureId)> = Vec::new();
+        {
+            let map = self.shared.map.read().unwrap();
+            let mut seen: HashSet<(FeatureId, FeatureId)> = HashSet::new();
+            for &(a, b) in pairs {
+                let k = pair_key(a, b);
+                let v = match map.get(&k) {
+                    Some(e) if e.rows == self.rows => {
+                        // Memoize shared hits too: if an append
+                        // supersedes this pin mid-search, every value
+                        // this handle ever observed stays servable.
+                        self.local.entry(k).or_insert(e.su);
+                        Some(e.su)
+                    }
+                    _ => self.local.get(&k).copied(),
+                };
+                if v.is_none() && seen.insert(k) {
+                    missing.push(k);
+                }
+                found.push(v);
+            }
+        }
+        self.stats.hits += pairs.len() - missing.len();
+
+        if missing.is_empty() {
+            return found.into_iter().map(|v| v.expect("all hits")).collect();
+        }
+
+        let values = compute(&missing);
+        assert_eq!(
+            values.len(),
+            missing.len(),
+            "correlator returned {} values for {} pairs",
+            values.len(),
+            missing.len()
+        );
+        self.stats.computed += missing.len();
+        // Memoize locally: if the shared map can no longer serve this
+        // pin (it was upgraded past it by a newer query), the values
+        // computed for this handle must still never be recomputed.
+        for (&k, &v) in missing.iter().zip(values.iter()) {
+            self.local.insert(k, v);
+        }
+
+        pairs
+            .iter()
+            .zip(found)
+            .map(|(&(a, b), v)| v.unwrap_or_else(|| self.local[&pair_key(a, b)]))
+            .collect()
+    }
+
+    fn stats(&self) -> CacheStats {
+        self.stats
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -509,6 +758,111 @@ mod tests {
         // insert_batch over already-present pairs is a read-only no-op.
         shared.insert_batch(&[(1, 0)], &[0.1]);
         assert_eq!(shared.len(), 2);
+    }
+
+    fn entry(rows: usize, su: f64) -> VersionedEntry {
+        VersionedEntry {
+            rows,
+            table: None,
+            su,
+        }
+    }
+
+    #[test]
+    fn versioned_hits_require_exact_row_pin() {
+        let c = VersionedSuCache::new();
+        c.publish(vec![((0, 1), entry(100, 0.5)), ((0, 2), entry(100, 0.7))]);
+
+        // A handle pinned at the matching row count hits.
+        let mut pinned = c.handle(100);
+        let v = pinned.batch(&[(1, 0), (0, 2)], &mut |_| panic!("all pinned hits"));
+        assert_eq!(v, vec![0.5, 0.7]);
+        assert_eq!(pinned.stats().hits, 2);
+
+        // A handle pinned past an append misses the same entries and
+        // forwards them (the resolve path upgrades and republishes).
+        let mut newer = c.handle(150);
+        let v = newer.batch(&[(0, 1)], &mut |miss| {
+            assert_eq!(miss, &[(0, 1)]);
+            vec![0.9]
+        });
+        assert_eq!(v, vec![0.9]);
+        assert_eq!(newer.stats().computed, 1);
+        // The handle itself never published: the entry still covers 100.
+        assert_eq!(c.get(0, 1).unwrap().rows, 100);
+    }
+
+    /// Regression: a query whose pinned version is superseded mid-search
+    /// must not recompute pairs it already paid for. The shared map can
+    /// no longer serve the old pin once entries are upgraded past it, so
+    /// the handle's local memo has to.
+    #[test]
+    fn stale_pinned_handle_memoizes_its_own_computations() {
+        let c = VersionedSuCache::new();
+        let mut h = c.handle(100);
+        let v = h.batch(&[(0, 1)], &mut |miss| {
+            assert_eq!(miss.len(), 1);
+            vec![0.3]
+        });
+        assert_eq!(v, vec![0.3]);
+        // A newer query upgrades the entry past this handle's pin.
+        c.publish(vec![((0, 1), entry(200, 0.9))]);
+        // Re-requesting through the stale handle hits the local memo —
+        // no recomputation, and the pin-consistent value comes back.
+        let v2 = h.batch(&[(1, 0)], &mut |_| panic!("stale handle recomputed"));
+        assert_eq!(v2, vec![0.3]);
+        assert_eq!(h.stats().computed, 1);
+        assert_eq!(h.stats().hits, 1);
+
+        // Shared-map *hits* are memoized too: a pair this handle only
+        // ever read must survive being upgraded past the pin.
+        c.publish(vec![((2, 3), entry(100, 0.7))]);
+        let v3 = h.batch(&[(2, 3)], &mut |_| panic!("hit expected"));
+        assert_eq!(v3, vec![0.7]);
+        c.publish(vec![((2, 3), entry(200, 0.8))]);
+        let v4 = h.batch(&[(3, 2)], &mut |_| panic!("memoized hit recomputed"));
+        assert_eq!(v4, vec![0.7], "pin-consistent value, not the upgraded one");
+    }
+
+    #[test]
+    fn versioned_publish_is_monotone_in_rows() {
+        let c = VersionedSuCache::new();
+        c.publish(vec![((3, 5), entry(200, 0.4))]);
+        // An old-version query's result cannot downgrade the entry...
+        c.publish(vec![((5, 3), entry(120, 0.1))]);
+        assert_eq!(c.get(3, 5).unwrap().rows, 200);
+        assert_eq!(c.get(3, 5).unwrap().su, 0.4);
+        // ...but an upgrade past it lands.
+        c.publish(vec![((3, 5), entry(260, 0.6))]);
+        assert_eq!(c.get(5, 3).unwrap().rows, 260);
+        assert_eq!(c.len(), 1, "canonical keys: one entry per pair");
+    }
+
+    #[test]
+    fn versioned_lookup_and_snapshot_round_trip() {
+        let c = VersionedSuCache::new();
+        assert!(c.is_empty());
+        let table = crate::correlation::ContingencyTable::from_columns(
+            &[0u8, 1, 1],
+            2,
+            &[1u8, 0, 1],
+            2,
+        );
+        c.publish(vec![(
+            (2, 4),
+            VersionedEntry {
+                rows: 3,
+                table: Some(table.clone()),
+                su: 0.25,
+            },
+        )]);
+        let looked = c.lookup(&[(4, 2), (0, 1)]);
+        assert_eq!(looked.len(), 2);
+        let hit = looked[0].as_ref().expect("cached pair");
+        assert_eq!(hit.rows, 3);
+        assert_eq!(hit.table.as_ref().unwrap(), &table);
+        assert!(looked[1].is_none());
+        assert_eq!(c.snapshot(), vec![((2, 4), 3, 0.25)]);
     }
 
     #[test]

@@ -40,22 +40,18 @@ impl ContingencyTable {
     /// Build from two aligned columns — the sequential Algorithm 2.
     ///
     /// This is the L3 numeric hot loop (EXPERIMENTS.md §Perf): a dense
-    /// scatter-count. Bin indices are validated against the arity by
-    /// `DiscreteDataset::new`, so the unchecked indexing below cannot go
-    /// out of bounds for any dataset constructed through the public API;
-    /// a debug assertion still guards test builds.
+    /// scatter-count, shared with the incremental path via
+    /// [`Self::merge_rows`]. Bin indices are validated against the arity
+    /// by `DiscreteDataset::new`, so the unchecked indexing in
+    /// `merge_rows` cannot go out of bounds for any dataset constructed
+    /// through the public API; a debug assertion still guards test
+    /// builds.
     pub fn from_columns(x: &[u8], bins_x: u16, y: &[u8], bins_y: u16) -> Self {
         debug_assert_eq!(x.len(), y.len());
         let mut t = Self::new(bins_x, bins_y);
-        let by = bins_y as usize;
-        let counts = &mut t.counts[..];
-        for (&xv, &yv) in x.iter().zip(y.iter()) {
-            let idx = xv as usize * by + yv as usize;
-            debug_assert!(idx < counts.len());
-            // SAFETY: xv < bins_x and yv < bins_y are dataset invariants
-            // (checked at construction), so idx < bins_x*bins_y = len.
-            unsafe { *counts.get_unchecked_mut(idx) += 1 };
-        }
+        // One scatter-count definition for the whole crate: building
+        // from scratch is delta-merging into an empty table.
+        t.merge_rows(x, y, 0..x.len());
         t
     }
 
@@ -68,6 +64,31 @@ impl ContingencyTable {
         range: std::ops::Range<usize>,
     ) -> Self {
         Self::from_columns(&x[range.clone()], bins_x, &y[range], bins_y)
+    }
+
+    /// Delta-merge: scatter-count the row range `rows` of two columns
+    /// directly into this table — the incremental-append primitive.
+    ///
+    /// Because counts are exact `u64` sums, a table built over `0..n`
+    /// rows and then delta-merged with `n..n2` is **bit-identical** to a
+    /// table built from scratch over `0..n2` (asserted by
+    /// `delta_merge_equals_from_scratch` below). This is what lets the
+    /// versioned SU cache (`cache::VersionedSuCache`) upgrade cached
+    /// tables after a dataset append by scanning only the delta rows,
+    /// and what makes [`Self::marginals`] of an upgraded table equal the
+    /// marginals of the from-scratch one (marginals are sums of counts,
+    /// so they inherit additivity).
+    pub fn merge_rows(&mut self, x: &[u8], y: &[u8], rows: std::ops::Range<usize>) {
+        debug_assert_eq!(x.len(), y.len());
+        let by = self.bins_y as usize;
+        let counts = &mut self.counts[..];
+        for (&xv, &yv) in x[rows.clone()].iter().zip(&y[rows]) {
+            let idx = xv as usize * by + yv as usize;
+            debug_assert!(idx < counts.len());
+            // SAFETY: same invariant as `from_columns` — bin indices are
+            // validated against the arity at dataset construction.
+            unsafe { *counts.get_unchecked_mut(idx) += 1 };
+        }
     }
 
     /// Element-wise merge (the `reduceByKey` combiner). Errors on shape
@@ -218,6 +239,27 @@ mod tests {
             .merge(&ContingencyTable::from_columns_range(&x, 2, &y, 2, 3..8))
             .unwrap();
         assert_eq!(whole, merged);
+    }
+
+    #[test]
+    fn delta_merge_equals_from_scratch() {
+        // The incremental invariant: table(0..n) ⊕ rows(n..n2) is
+        // bit-identical to table(0..n2), and so are its marginals.
+        let x = [0u8, 1, 2, 0, 1, 2, 2, 1, 0, 2];
+        let y = [1u8, 0, 1, 1, 1, 0, 0, 1, 0, 1];
+        let whole = ContingencyTable::from_columns(&x, 3, &y, 2);
+        let mut upgraded = ContingencyTable::from_columns_range(&x, 3, &y, 2, 0..6);
+        upgraded.merge_rows(&x, &y, 6..10);
+        assert_eq!(whole, upgraded);
+        assert_eq!(whole.marginals(), upgraded.marginals());
+        // Delta-merging in several steps is equally exact.
+        let mut stepped = ContingencyTable::from_columns_range(&x, 3, &y, 2, 0..3);
+        stepped.merge_rows(&x, &y, 3..7);
+        stepped.merge_rows(&x, &y, 7..10);
+        assert_eq!(whole, stepped);
+        // An empty delta is a no-op.
+        stepped.merge_rows(&x, &y, 5..5);
+        assert_eq!(whole, stepped);
     }
 
     #[test]

@@ -12,6 +12,9 @@ pub mod entropy;
 pub mod pearson;
 pub mod su;
 
-pub use cache::{CacheStats, CorrelationCache, SharedSuCache, SuCache, SuCacheHandle};
+pub use cache::{
+    CacheStats, CorrelationCache, SharedSuCache, SuCache, SuCacheHandle, VersionedEntry,
+    VersionedSuCache, VersionedSuHandle,
+};
 pub use ctable::ContingencyTable;
 pub use su::{su_from_table, symmetrical_uncertainty};

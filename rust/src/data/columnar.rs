@@ -207,6 +207,71 @@ impl DiscreteDataset {
     pub fn footprint_bytes(&self) -> usize {
         self.cols.iter().map(|c| c.len()).sum::<usize>() + self.class.len()
     }
+
+    /// A copy of the row range `range` of every column (and the class),
+    /// keeping the arities of the full dataset.
+    ///
+    /// This is the versioning building block: the incremental-service
+    /// tests and the workload-script replay discretize a dataset **once**
+    /// (so the binning is frozen) and then reveal row slices of it —
+    /// a base slice at registration, the rest as append deltas — which
+    /// models instances arriving over time from the same distribution.
+    ///
+    /// Panics if `range` exceeds the row count (a caller bug, like an
+    /// out-of-bounds index).
+    pub fn slice_rows(&self, range: std::ops::Range<usize>) -> DiscreteDataset {
+        assert!(
+            range.start <= range.end && range.end <= self.num_rows(),
+            "slice_rows {range:?} out of bounds for {} rows",
+            self.num_rows()
+        );
+        // Field-wise construction is safe: every invariant `new` checks
+        // (bin < arity, aligned lengths) is inherited from `self`.
+        Self {
+            name: self.name.clone(),
+            cols: self.cols.iter().map(|c| c[range.clone()].to_vec()).collect(),
+            arities: self.arities.clone(),
+            class: self.class[range.clone()].to_vec(),
+            class_arity: self.class_arity,
+        }
+    }
+
+    /// A new dataset with `delta`'s rows appended after this dataset's —
+    /// the registry-side half of the incremental-append path.
+    ///
+    /// The merged dataset keeps **this** dataset's arities (the binning
+    /// is frozen at registration), so every delta bin index must already
+    /// be valid under them; the merged data is re-validated through
+    /// [`Self::new`], which rejects out-of-range delta bins or class
+    /// labels and mismatched feature counts.
+    pub fn append_rows(&self, delta: &DiscreteDataset) -> Result<DiscreteDataset> {
+        if delta.num_features() != self.num_features() {
+            return Err(Error::InvalidData(format!(
+                "append has {} features, dataset has {}",
+                delta.num_features(),
+                self.num_features()
+            )));
+        }
+        let cols: Vec<Vec<u8>> = self
+            .cols
+            .iter()
+            .zip(&delta.cols)
+            .map(|(base, extra)| {
+                let mut c = base.clone();
+                c.extend_from_slice(extra);
+                c
+            })
+            .collect();
+        let mut class = self.class.clone();
+        class.extend_from_slice(&delta.class);
+        Self::new(
+            self.name.clone(),
+            cols,
+            self.arities.clone(),
+            class,
+            self.class_arity,
+        )
+    }
 }
 
 #[cfg(test)]
@@ -262,6 +327,46 @@ mod tests {
         let (f1, a1) = d.column(1);
         assert_eq!(f1, &[2, 0, 1, 2]);
         assert_eq!(a1, 3);
+    }
+
+    #[test]
+    fn slice_then_append_roundtrips() {
+        let d = tiny();
+        let base = d.slice_rows(0..3);
+        let delta = d.slice_rows(3..4);
+        assert_eq!(base.num_rows(), 3);
+        assert_eq!(base.arities, d.arities, "slices keep the full arities");
+        let merged = base.append_rows(&delta).unwrap();
+        assert_eq!(merged.cols, d.cols);
+        assert_eq!(merged.class, d.class);
+        // Empty slices are fine (an append of zero rows is rejected at
+        // the service layer, not here).
+        assert_eq!(d.slice_rows(2..2).num_rows(), 0);
+    }
+
+    #[test]
+    fn append_rejects_mismatched_deltas() {
+        let d = tiny();
+        // Wrong feature count.
+        let narrow = DiscreteDataset::new("n", vec![vec![0]], vec![2], vec![0], 2).unwrap();
+        assert!(d.append_rows(&narrow).is_err());
+        // Delta bin out of range for the frozen base arity (column 0 has
+        // arity 2, the delta uses bin 3).
+        let bad = DiscreteDataset::new(
+            "b",
+            vec![vec![3], vec![0]],
+            vec![4, 3],
+            vec![0],
+            2,
+        )
+        .unwrap();
+        assert!(d.append_rows(&bad).is_err());
+    }
+
+    #[test]
+    #[should_panic(expected = "out of bounds")]
+    fn slice_rows_bounds_checked() {
+        tiny().slice_rows(2..9);
     }
 
     #[test]

@@ -85,25 +85,28 @@ impl HorizontalCorrelator {
             self.ranges.num_partitions(),
         )
     }
-}
 
-/// The hp job is stateless on the driver side (it only reads the shared
-/// dataset, engine and partition layout), so one correlator instance can
-/// serve any number of concurrent searches — the multi-query service
-/// relies on this to run one hp job per coalesced miss batch.
-impl SharedCorrelator for HorizontalCorrelator {
-    fn compute_batch(&self, pairs: &[(FeatureId, FeatureId)]) -> Vec<f64> {
-        if pairs.is_empty() {
-            return vec![];
-        }
+    /// Steps 1–3 of every hp job, shared by the SU batch (which appends
+    /// a computeSU stage) and the table job (which collects the merged
+    /// tables directly): broadcast the pair list, count each range into
+    /// per-partition partial tables through the engine, and
+    /// `reduceByKey(sum)` them per pair. `delta` only switches the stage
+    /// labels, so the two job kinds stay distinguishable in metrics.
+    fn merged_ctables(
+        &self,
+        pairs: &[(FeatureId, FeatureId)],
+        ranges: Rdd<Range<usize>>,
+        delta: bool,
+    ) -> Rdd<(usize, ContingencyTable)> {
         // 1. Broadcast the pair list (16 bytes per pair on the wire).
         let pairs_bc = self.ctx.broadcast(pairs.to_vec(), pairs.len() * 16);
 
         // 2. mapPartitions(localCTables): per-range partial tables.
         let data = Arc::clone(&self.data);
         let engine = Arc::clone(&self.engine);
+        let map_label = if delta { "localCTablesDelta" } else { "localCTables" };
         let partials: Rdd<(usize, ContingencyTable)> =
-            self.ranges.map_partitions("localCTables", move |_, ranges| {
+            ranges.map_partitions(map_label, move |_, ranges| {
                 // The pair → column resolution does not depend on the
                 // range: build the ColumnPair list once per task, not
                 // once per range.
@@ -121,12 +124,65 @@ impl SharedCorrelator for HorizontalCorrelator {
 
         // 3. reduceByKey(sum): merge partials per pair (Eq. 4).
         let reduce_parts = pairs.len().min(self.ctx.cluster.total_slots()).max(1);
-        let merged = partials.reduce_by_key(
-            "mergeCTables",
+        partials.reduce_by_key(
+            if delta { "mergeCTablesDelta" } else { "mergeCTables" },
             reduce_parts,
             ContingencyTable::wire_bytes,
             |a, b| a.merge(b).expect("pair tables share shape"),
-        );
+        )
+    }
+}
+
+/// The hp job is stateless on the driver side (it only reads the shared
+/// dataset, engine and partition layout), so one correlator instance can
+/// serve any number of concurrent searches — the multi-query service
+/// relies on this to run one hp job per coalesced miss batch.
+impl SharedCorrelator for HorizontalCorrelator {
+    fn supports_ctables(&self) -> bool {
+        true
+    }
+
+    /// The hp **table job** (DESIGN.md §12): steps 1–3 of the SU job over
+    /// an arbitrary row range — broadcast the pair list, count the
+    /// range's rows into per-partition partial tables, `reduceByKey(sum)`
+    /// — then collect the *merged tables* (their full wire size) instead
+    /// of running the computeSU stage. Partition count follows the
+    /// correlator's row layout, clamped to the range length (a delta of
+    /// 50 rows does not launch 240 tasks).
+    fn compute_ctables(
+        &self,
+        pairs: &[(FeatureId, FeatureId)],
+        rows: Range<usize>,
+    ) -> Vec<ContingencyTable> {
+        if pairs.is_empty() {
+            return vec![];
+        }
+        debug_assert!(rows.end <= self.data.num_rows());
+        let len = rows.len();
+        let parts = self.ranges.num_partitions().clamp(1, len.max(1));
+        let chunk = len.div_ceil(parts).max(1);
+        let ranges: Vec<Range<usize>> = (0..parts)
+            .map(|p| {
+                (rows.start + p * chunk).min(rows.end)..(rows.start + (p + 1) * chunk).min(rows.end)
+            })
+            .collect();
+        let count = ranges.len();
+        let ranges = self.ctx.parallelize(ranges, count);
+
+        let merged = self.merged_ctables(pairs, ranges, true);
+        let mut collected = merged.collect_sized(|(_, t)| t.wire_bytes());
+        collected.sort_by_key(|(i, _)| *i);
+        debug_assert_eq!(collected.len(), pairs.len());
+        collected.into_iter().map(|(_, t)| t).collect()
+    }
+
+    fn compute_batch(&self, pairs: &[(FeatureId, FeatureId)]) -> Vec<f64> {
+        if pairs.is_empty() {
+            return vec![];
+        }
+        // Steps 1–3 (pair broadcast, localCTables, mergeCTables) are the
+        // shared job prefix.
+        let merged = self.merged_ctables(pairs, self.ranges.clone(), false);
 
         // 4. SU finish *in parallel on the CTables RDD* (paper §5.1: "this
         // calculation can therefore be performed in parallel by processing
@@ -271,6 +327,31 @@ mod tests {
                 });
             }
         });
+    }
+
+    #[test]
+    fn ctable_job_matches_direct_tables_and_supports_deltas() {
+        let (_ctx, corr, dd) = setup(7);
+        assert!(corr.supports_ctables());
+        let pairs = vec![(0, CLASS_ID), (1, 4), (2, CLASS_ID)];
+        let n = dd.num_rows();
+
+        // Full-range tables equal the driver-side computation exactly.
+        let full = corr.compute_ctables(&pairs, 0..n);
+        for (t, &(a, b)) in full.iter().zip(&pairs) {
+            let (x, bx) = dd.column(a);
+            let (y, by) = dd.column(b);
+            assert_eq!(t, &ContingencyTable::from_columns(x, bx, y, by));
+        }
+
+        // Base ⊕ delta == full, bit-identically — the append invariant.
+        let split = n - 137;
+        let base = corr.compute_ctables(&pairs, 0..split);
+        let delta = corr.compute_ctables(&pairs, split..n);
+        for ((mut b, d), f) in base.into_iter().zip(delta).zip(&full) {
+            b.merge(&d).unwrap();
+            assert_eq!(&b, f);
+        }
     }
 
     #[test]

@@ -16,6 +16,18 @@
 //! | shuffle shape    | partial ctables, one per pair per partition | none (the one-time columnar setup is charged separately) |
 //! | SU collect       | 8 B per pair                     | 8 B per pair                |
 //!
+//! Each strategy also has a **table-job** flavor ([`hp_delta_plan`] /
+//! [`vp_delta_plan`], `table_collect = true`): scan an arbitrary row
+//! range and collect the merged contingency tables themselves instead of
+//! finishing SU on the workers. These lower the incremental service's
+//! jobs (DESIGN.md §12) — fresh-table jobs over `0..n` and delta-upgrade
+//! jobs over `n0..n` — and are priced through the identical
+//! [`PlanSpec::estimate`] path, so the planner weighs hp vs vp for delta
+//! jobs too. Deltas are tall-and-tiny (few rows, every cached pair),
+//! which often flips the winner: vp's broadcast shrinks to the delta
+//! slice of each reference column while hp still ships one partial table
+//! per pair per partition.
+//!
 //! Because the spec is pure data, it can be **costed without running**:
 //! [`PlanSpec::estimate`] prices the network steps with the exact same
 //! [`NetworkModel`](crate::sparklet::NetworkModel) formulas the
@@ -139,6 +151,14 @@ pub struct PlanSpec {
     /// denominator too — otherwise the first vp observation would imply
     /// a wildly inflated rate and mis-price every later vp candidate.
     pub setup_cells: f64,
+    /// `true` for **table jobs** ([`hp_delta_plan`] / [`vp_delta_plan`]):
+    /// the job collects the merged contingency tables themselves
+    /// (`collect_bytes` = the tables' wire size) instead of finishing SU
+    /// on the workers, so the SU-finish passes (hp's computeSU stage,
+    /// vp's local entropy work) are not priced. This is the shape of the
+    /// incremental service's delta-upgrade and fresh-table jobs
+    /// (DESIGN.md §12).
+    pub table_collect: bool,
 }
 
 impl PlanSpec {
@@ -156,15 +176,25 @@ impl PlanSpec {
         // ~4 extra passes over the table cells.
         let mut units = match self.strategy {
             Strategy::Hp => (self.scan_cells + self.table_cells) / map_width,
+            // vp finishes SU locally (~4 extra passes over the table
+            // cells) — unless this is a table job, which stops at the
+            // built table.
+            Strategy::Vp if self.table_collect => (self.scan_cells + self.table_cells) / map_width,
             Strategy::Vp => (self.scan_cells + 4.0 * self.table_cells) / map_width,
         };
         if let Some(sh) = &self.shuffle {
             // Reduce wave merges one partial table per map partition per
             // pair; the computeSU stage then makes ~3 passes (marginals +
-            // joint entropy) over the merged cells.
+            // joint entropy) over the merged cells — skipped for table
+            // jobs, which collect the merged tables as-is.
             let reduce_width = sh.reduce_partitions.clamp(1, slots) as f64;
             let merge_cells = self.table_cells * self.layout.partitions() as f64;
-            units += (merge_cells + 3.0 * self.table_cells) / reduce_width;
+            let finish = if self.table_collect {
+                0.0
+            } else {
+                3.0 * self.table_cells
+            };
+            units += (merge_cells + finish) / reduce_width;
         }
         if self.setup_cells > 0.0 {
             // Layout construction (vp's columnar shuffle) spreads over
@@ -185,7 +215,10 @@ impl PlanSpec {
         let mut w = waves(self.layout.partitions());
         if let Some(sh) = &self.shuffle {
             // reduce wave + the computeSU map stage over the merged RDD
-            w += 2.0 * waves(sh.reduce_partitions);
+            // (table jobs have no computeSU stage — the merged tables are
+            // collected directly).
+            let su_stages = if self.table_collect { 1.0 } else { 2.0 };
+            w += su_stages * waves(sh.reduce_partitions);
         }
         if self.setup_cells > 0.0 {
             // columnar-transformation shuffle: map wave + reduce wave
@@ -262,6 +295,7 @@ pub fn hp_plan(
         scan_cells: (pairs.len() * n) as f64,
         table_cells,
         setup_cells: 0.0,
+        table_collect: false,
     }
 }
 
@@ -319,6 +353,104 @@ pub fn vp_plan(
         scan_cells: (pairs.len() * n) as f64,
         table_cells,
         setup_cells,
+        table_collect: false,
+    }
+}
+
+/// Lower a **table job** over a row range to the hp plan: the delta (or
+/// fresh-table) flavor of [`hp_plan`]. The map wave scans only
+/// `rows` (deltas are tall-and-tiny: few rows, many pairs), partial
+/// tables still shuffle per partition, and the *merged tables* are
+/// collected (their full wire size) instead of running a computeSU
+/// stage — the driver-side resolve path merges them into cached base
+/// tables and recomputes SU there (DESIGN.md §12).
+pub fn hp_delta_plan(
+    data: &DiscreteDataset,
+    pairs: &[(FeatureId, FeatureId)],
+    cluster: &ClusterConfig,
+    num_partitions: usize,
+    rows: &std::ops::Range<usize>,
+) -> PlanSpec {
+    let len = rows.len();
+    let parts = num_partitions.clamp(1, len.max(1));
+    let (table_cells, wire) = table_sizes(data, pairs);
+    let reduce_partitions = pairs.len().min(cluster.total_slots()).max(1);
+    PlanSpec {
+        strategy: Strategy::Hp,
+        num_pairs: pairs.len(),
+        layout: PartitionLayout::Rows { partitions: parts },
+        busy_tasks: parts,
+        broadcast_bytes: pairs.len() * 16,
+        setup_shuffle_bytes: 0,
+        shuffle: Some(ShuffleSpec {
+            bytes: wire * parts,
+            reduce_partitions,
+        }),
+        collect_bytes: wire,
+        scan_cells: (pairs.len() * len) as f64,
+        table_cells,
+        setup_cells: 0.0,
+        table_collect: true,
+    }
+}
+
+/// Lower a **table job** over a row range to the vp plan: the delta (or
+/// fresh-table) flavor of [`vp_plan`]. Only the `rows` slice of each
+/// reference column is broadcast (a delta slice is tiny — which is why
+/// the planner often flips to vp for delta jobs even on tall datasets
+/// whose full batches favor hp), owners build the range's tables
+/// locally, and the tables are collected at their wire size. As with
+/// [`vp_plan`], an unbuilt layout charges the full columnar shuffle of
+/// the *current* (merged) dataset to this batch.
+pub fn vp_delta_plan(
+    data: &DiscreteDataset,
+    pairs: &[(FeatureId, FeatureId)],
+    cluster: &ClusterConfig,
+    num_partitions: usize,
+    layout_built: bool,
+    rows: &std::ops::Range<usize>,
+) -> PlanSpec {
+    let _ = cluster;
+    let n = data.num_rows();
+    let m = data.num_features();
+    let len = rows.len();
+    let parts = num_partitions.clamp(1, m.max(1));
+    let (table_cells, wire) = table_sizes(data, pairs);
+
+    let sides = assign_sides(pairs);
+    let mut owners: Vec<FeatureId> = sides.iter().map(|&(o, _)| o).collect();
+    owners.sort_unstable();
+    owners.dedup();
+    let mut refs: Vec<FeatureId> = sides
+        .iter()
+        .map(|&(_, r)| r)
+        .filter(|&r| r != CLASS_ID)
+        .collect();
+    refs.sort_unstable();
+    refs.dedup();
+
+    let mut broadcast_bytes = refs.len() * len;
+    let mut setup_shuffle_bytes = 0;
+    let mut setup_cells = 0.0;
+    if !layout_built {
+        setup_shuffle_bytes = n * m;
+        setup_cells = (n * m) as f64;
+        broadcast_bytes += n;
+    }
+
+    PlanSpec {
+        strategy: Strategy::Vp,
+        num_pairs: pairs.len(),
+        layout: PartitionLayout::Features { partitions: parts },
+        busy_tasks: owners.len().min(parts).max(1),
+        broadcast_bytes,
+        setup_shuffle_bytes,
+        shuffle: None,
+        collect_bytes: wire,
+        scan_cells: (pairs.len() * len) as f64,
+        table_cells,
+        setup_cells,
+        table_collect: true,
     }
 }
 
@@ -536,6 +668,79 @@ mod tests {
         let vp_t = vp_plan(&tall, &pairs, &cluster, 8, true);
         assert!(hp_t.busy_tasks > 10 * vp_t.busy_tasks);
         assert!(vp_t.broadcast_bytes > hp_t.broadcast_bytes);
+    }
+
+    #[test]
+    fn delta_plans_scan_only_the_range_and_collect_tables() {
+        use crate::correlation::ContingencyTable;
+
+        let dd = dataset(10_000, 12, 4);
+        let cluster = ClusterConfig::with_nodes(4);
+        let pairs = class_batch(12);
+        let delta = 9_500..10_000;
+
+        let hp = hp_delta_plan(&dd, &pairs, &cluster, 20, &delta);
+        assert_eq!(hp.strategy, Strategy::Hp);
+        assert!(hp.table_collect);
+        assert_eq!(hp.scan_cells, (12 * 500) as f64, "only delta rows scanned");
+        // Tables come back whole: 12 tables of 4x2 cells.
+        let wire = 12 * ContingencyTable::wire_bytes_for_cells(4 * 2);
+        assert_eq!(hp.collect_bytes, wire);
+        let sh = hp.shuffle.expect("hp still shuffles partial tables");
+        assert_eq!(sh.bytes, wire * 20);
+
+        let vp = vp_delta_plan(&dd, &pairs, &cluster, 12, true, &delta);
+        assert!(vp.table_collect);
+        assert_eq!(vp.scan_cells, (12 * 500) as f64);
+        assert_eq!(vp.collect_bytes, wire);
+        // Class pairs broadcast nothing; a feature-feature delta batch
+        // broadcasts only the delta slice of the reference column.
+        assert_eq!(vp.broadcast_bytes, 0);
+        let ff = vp_delta_plan(&dd, &[(0, 5), (1, 5)], &cluster, 12, true, &delta);
+        assert_eq!(ff.broadcast_bytes, 500, "delta slice of feature 5 only");
+
+        // A delta job never prices the SU finish: its cost is below the
+        // full job's at the same rate.
+        let full = hp_plan(&dd, &pairs, &cluster, 20);
+        assert!(
+            hp.estimate(&cluster, 2e-9).compute_secs < full.estimate(&cluster, 2e-9).compute_secs,
+            "delta job must be cheaper than the full job"
+        );
+    }
+
+    #[test]
+    fn tiny_deltas_flip_the_winner_toward_vp() {
+        // vp's per-batch broadcast scales with the rows it must ship:
+        // the *full* reference columns for a full batch, only the delta
+        // slice for a delta batch. So a broadcast-heavy batch (many
+        // distinct reference columns) on a tall dataset favors hp when
+        // full — and the same batch as a tall-and-tiny delta flips to
+        // vp, whose broadcast collapses to refs × delta_rows while hp
+        // still shuffles the same per-partition tables.
+        let cluster = ClusterConfig::with_nodes(10);
+        let rate = 2e-9;
+        let tall = dataset(50_000, 32, 16);
+        // 16 disjoint feature-feature pairs → 16 distinct reference
+        // columns (the broadcast-heavy regime).
+        let pairs: Vec<(FeatureId, FeatureId)> = (0..16).map(|i| (2 * i, 2 * i + 1)).collect();
+        let hp_parts = cluster.default_row_partitions(50_000);
+        let hp_full = hp_plan(&tall, &pairs, &cluster, hp_parts);
+        let vp_full = vp_plan(&tall, &pairs, &cluster, 32, true);
+        assert!(
+            hp_full.estimate(&cluster, rate).total() < vp_full.estimate(&cluster, rate).total(),
+            "precondition: the broadcast-heavy full batch favors hp: hp {:?} vs vp {:?}",
+            hp_full.estimate(&cluster, rate),
+            vp_full.estimate(&cluster, rate)
+        );
+        let delta = 49_500..50_000;
+        let hp_d = hp_delta_plan(&tall, &pairs, &cluster, hp_parts, &delta);
+        let vp_d = vp_delta_plan(&tall, &pairs, &cluster, 32, true, &delta);
+        assert!(
+            vp_d.estimate(&cluster, rate).total() < hp_d.estimate(&cluster, rate).total(),
+            "the tall-and-tiny delta must flip the winner to vp: vp {:?} vs hp {:?}",
+            vp_d.estimate(&cluster, rate),
+            hp_d.estimate(&cluster, rate)
+        );
     }
 
     #[test]

@@ -84,6 +84,29 @@ impl StrategyState {
     }
 }
 
+/// Portable calibration state of a [`Planner`]: the per-strategy
+/// secs-per-cell rates and how many observations back them.
+///
+/// Rates measure the *hardware* (how fast cells are scanned), not the
+/// dataset, so they stay meaningful when a dataset grows: the versioned
+/// registry transfers them onto the fresh planner it builds for each
+/// appended version, sparing every post-append job the cold-start
+/// warm-up. The vp layout-built flag is deliberately **not** part of
+/// this state — an append invalidates the columnar layout for real, so
+/// re-charging its construction to vp candidates is honest pricing, not
+/// lost amortization.
+#[derive(Debug, Clone, Copy)]
+pub struct PlannerCalibration {
+    /// hp secs-per-cell estimate.
+    pub hp_rate: f64,
+    /// Observations behind `hp_rate`.
+    pub hp_observations: usize,
+    /// vp secs-per-cell estimate.
+    pub vp_rate: f64,
+    /// Observations behind `vp_rate`.
+    pub vp_observations: usize,
+}
+
 struct PlannerState {
     hp: StrategyState,
     vp: StrategyState,
@@ -194,6 +217,51 @@ impl Planner {
         }
     }
 
+    /// Like [`Self::plan_batch`], but for a **table job** over the row
+    /// range `rows` (DESIGN.md §12): both candidates are lowered through
+    /// the delta flavor of the IR ([`plan::hp_delta_plan`] /
+    /// [`plan::vp_delta_plan`]), so the planner prices hp vs vp for the
+    /// incremental service's delta-upgrade and fresh-table jobs with the
+    /// same calibrated rates it uses for ordinary batches. Deltas are
+    /// tall-and-tiny, which often flips the winner (vp's broadcast
+    /// shrinks to the delta slice); pricing them as if they were full
+    /// batches would hide exactly that.
+    pub fn plan_delta_batch(
+        &self,
+        pairs: &[(FeatureId, FeatureId)],
+        rows: &std::ops::Range<usize>,
+    ) -> PlannedBatch {
+        let st = self.state.lock().unwrap();
+        let hp_spec =
+            plan::hp_delta_plan(&self.data, pairs, &self.cluster, self.hp_partitions, rows);
+        let vp_spec = plan::vp_delta_plan(
+            &self.data,
+            pairs,
+            &self.cluster,
+            self.vp_partitions,
+            st.vp_built,
+            rows,
+        );
+        let hp_cost = hp_spec.estimate(&self.cluster, st.hp.rate);
+        let vp_cost = vp_spec.estimate(&self.cluster, st.vp.rate);
+        drop(st);
+        if hp_cost.total() <= vp_cost.total() {
+            PlannedBatch {
+                strategy: Strategy::Hp,
+                spec: hp_spec,
+                predicted: hp_cost,
+                rejected_secs: vp_cost.total(),
+            }
+        } else {
+            PlannedBatch {
+                strategy: Strategy::Vp,
+                spec: vp_spec,
+                predicted: vp_cost,
+                rejected_secs: hp_cost.total(),
+            }
+        }
+    }
+
     /// Close the loop on one executed batch: log the decision
     /// (predicted vs observed) and refine the chosen strategy's compute
     /// rate from the observed cost. `observed` is the virtual-cluster
@@ -216,6 +284,33 @@ impl Planner {
             rejected_secs: planned.rejected_secs,
             observed_secs: observed.compute_secs + observed.network_secs,
         });
+    }
+
+    /// Snapshot of the calibrated compute rates (see
+    /// [`PlannerCalibration`]).
+    pub fn calibration(&self) -> PlannerCalibration {
+        let st = self.state.lock().unwrap();
+        PlannerCalibration {
+            hp_rate: st.hp.rate,
+            hp_observations: st.hp.observations,
+            vp_rate: st.vp.rate,
+            vp_observations: st.vp.observations,
+        }
+    }
+
+    /// Adopt previously calibrated rates (typically from the planner of
+    /// the dataset version this one supersedes), so the first post-append
+    /// decisions are priced with measured rates instead of the prior.
+    pub fn set_calibration(&self, cal: PlannerCalibration) {
+        let mut st = self.state.lock().unwrap();
+        st.hp = StrategyState {
+            rate: cal.hp_rate.max(MIN_RATE),
+            observations: cal.hp_observations,
+        };
+        st.vp = StrategyState {
+            rate: cal.vp_rate.max(MIN_RATE),
+            observations: cal.vp_observations,
+        };
     }
 
     /// Snapshot of every decision made so far, in batch order.
@@ -311,6 +406,38 @@ impl AutoCorrelator {
 }
 
 impl SharedCorrelator for AutoCorrelator {
+    fn supports_ctables(&self) -> bool {
+        true
+    }
+
+    /// The auto **table job**: priced through
+    /// [`Planner::plan_delta_batch`], routed to whichever backend's
+    /// ctable job is cheaper, observed and calibrated exactly like a
+    /// scalar batch. The tables are bit-identical either way (u64
+    /// counts), so planning cannot affect the incremental service's
+    /// exactness invariant.
+    fn compute_ctables(
+        &self,
+        pairs: &[(FeatureId, FeatureId)],
+        rows: std::ops::Range<usize>,
+    ) -> Vec<crate::correlation::ContingencyTable> {
+        if pairs.is_empty() {
+            return vec![];
+        }
+        let planned = self.planner.plan_delta_batch(pairs, &rows);
+        let recorder = Arc::new(StageRecorder::new());
+        let out = {
+            let _guard = observe_stages(Arc::clone(&recorder) as Arc<dyn PlanObserver>);
+            match planned.strategy {
+                Strategy::Hp => self.hp.compute_ctables(pairs, rows),
+                Strategy::Vp => self.vp_backend().compute_ctables(pairs, rows),
+            }
+        };
+        let sim = simulate_job_time(&recorder.metrics(), self.planner.cluster(), 0.0);
+        self.planner.observe(&planned, &sim);
+        out
+    }
+
     fn compute_batch(&self, pairs: &[(FeatureId, FeatureId)]) -> Vec<f64> {
         if pairs.is_empty() {
             return vec![];
@@ -334,6 +461,10 @@ impl SharedCorrelator for AutoCorrelator {
 
     fn drain_plan_decisions(&self) -> Vec<PlanDecision> {
         self.planner.drain_decisions()
+    }
+
+    fn planner_calibration(&self) -> Option<PlannerCalibration> {
+        Some(self.planner.calibration())
     }
 }
 
@@ -433,6 +564,40 @@ mod tests {
     }
 
     #[test]
+    fn calibration_transfers_onto_a_fresh_planner() {
+        let dd = dataset(500, 8, 41);
+        let planner = Planner::new(Arc::clone(&dd), ClusterConfig::with_nodes(3), None, None);
+        let pairs: Vec<(usize, usize)> = (0..8).map(|f| (f, CLASS_ID)).collect();
+        let planned = planner.plan_batch(&pairs);
+        // One observation moves the chosen strategy's rate off the prior.
+        let observed = SimTime {
+            compute_secs: planned.predicted.total() * 3.0 + 1e-3,
+            network_secs: 0.0,
+            driver_secs: 0.0,
+        };
+        planner.observe(&planned, &observed);
+        let cal = planner.calibration();
+        assert_eq!(cal.hp_observations + cal.vp_observations, 1);
+
+        // A fresh planner (what an appended dataset version gets) adopts
+        // the measured rates bit-for-bit — but not the vp-layout flag:
+        // the merged data genuinely needs a new columnar shuffle.
+        let fresh = Planner::new(Arc::clone(&dd), ClusterConfig::with_nodes(3), None, None);
+        fresh.set_calibration(cal);
+        let got = fresh.calibration();
+        assert_eq!(got.hp_rate.to_bits(), cal.hp_rate.to_bits());
+        assert_eq!(got.vp_rate.to_bits(), cal.vp_rate.to_bits());
+        assert_eq!(got.hp_observations, cal.hp_observations);
+        assert_eq!(got.vp_observations, cal.vp_observations);
+        assert!(!fresh.vp_built(), "layout-built flag must not transfer");
+
+        // The auto backend exposes the same snapshot through the
+        // SharedCorrelator hook the registry reads on append.
+        let (_ctx, corr, _dd) = auto(400, 6);
+        assert!(corr.planner_calibration().is_some());
+    }
+
+    #[test]
     fn vp_layout_is_lazy() {
         let (ctx, corr, _dd) = auto(400, 6);
         // Until some batch routes to vp, the columnar transformation
@@ -456,6 +621,38 @@ mod tests {
             "columnar shuffle must run iff a batch was routed to vp"
         );
         assert_eq!(corr.planner().vp_built(), vp_used);
+    }
+
+    #[test]
+    fn auto_ctable_jobs_are_planned_and_exact() {
+        use crate::correlation::ContingencyTable;
+
+        let (_ctx, corr, dd) = auto(600, 8);
+        assert!(corr.supports_ctables());
+        let n = dd.num_rows();
+        let pairs = vec![(0, CLASS_ID), (2, 5)];
+
+        // Full tables match the driver-side computation, and the job
+        // logged a planner decision like any scalar batch.
+        let full = corr.compute_ctables(&pairs, 0..n);
+        for (t, &(a, b)) in full.iter().zip(&pairs) {
+            let (x, bx) = dd.column(a);
+            let (y, by) = dd.column(b);
+            assert_eq!(t, &ContingencyTable::from_columns(x, bx, y, by));
+        }
+        let decisions = corr.planner().decisions();
+        assert_eq!(decisions.len(), 1);
+        assert!(decisions[0].predicted_secs > 0.0 && decisions[0].observed_secs > 0.0);
+
+        // A delta job over the tail range merges into the base exactly.
+        let split = n - 100;
+        let mut base = corr.compute_ctables(&pairs, 0..split);
+        let delta = corr.compute_ctables(&pairs, split..n);
+        for ((b, d), f) in base.iter_mut().zip(&delta).zip(&full) {
+            b.merge(d).unwrap();
+            assert_eq!(&*b, f);
+        }
+        assert_eq!(corr.planner().decisions().len(), 3, "every table job is a decision");
     }
 
     #[test]

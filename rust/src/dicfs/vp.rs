@@ -20,10 +20,12 @@
 //! are what the paper's §6 experiments probe (EPSILON partition tuning).
 
 use std::collections::HashMap;
+use std::ops::Range;
 use std::sync::Arc;
 
 use crate::cfs::{Correlator, SharedCorrelator};
 use crate::core::{FeatureId, CLASS_ID};
+use crate::correlation::ContingencyTable;
 use crate::data::columnar::DiscreteDataset;
 use crate::dicfs::plan::{self, PlanSpec};
 use crate::runtime::{ColumnPair, SuEngine};
@@ -105,6 +107,41 @@ impl VerticalCorrelator {
             true,
         )
     }
+
+    /// Per-batch reference assembly shared by the SU batch and the table
+    /// job: choose each pair's reference side, broadcast the distinct
+    /// non-class reference columns (priced at `ref_rows` bytes each —
+    /// the full column for SU batches, only the delta slice for table
+    /// jobs), and group pair indices by owner column.
+    fn batch_assembly(
+        &self,
+        pairs: &[(FeatureId, FeatureId)],
+        ref_rows: usize,
+    ) -> (
+        Broadcast<Vec<FeatureId>>,
+        Arc<HashMap<FeatureId, Vec<(usize, (FeatureId, FeatureId))>>>,
+    ) {
+        let sides = Self::assign_sides(pairs);
+        let mut ref_ids: Vec<FeatureId> = sides
+            .iter()
+            .map(|&(_, r)| r)
+            .filter(|&r| r != CLASS_ID)
+            .collect();
+        ref_ids.sort_unstable();
+        ref_ids.dedup();
+        let ref_bytes = ref_ids.len() * ref_rows;
+        let refs_bc = self.ctx.broadcast(ref_ids, ref_bytes);
+
+        // Owner → list of (pair index, original pair). The owner decides
+        // *where* the pair is computed; the pair itself is always built
+        // in its canonical (a, b) orientation so the result is
+        // bit-identical to the sequential/hp computation.
+        let mut work: HashMap<FeatureId, Vec<(usize, (FeatureId, FeatureId))>> = HashMap::new();
+        for (i, (&(owner, _), &pair)) in sides.iter().zip(pairs).enumerate() {
+            work.entry(owner).or_default().push((i, pair));
+        }
+        (refs_bc, Arc::new(work))
+    }
 }
 
 /// Resolve one side of a pair to its column data inside a `localSU`
@@ -135,34 +172,69 @@ fn resolve_side<'a>(
 /// orientation regardless — coalescing batches across queries cannot
 /// change any value.
 impl SharedCorrelator for VerticalCorrelator {
+    fn supports_ctables(&self) -> bool {
+        true
+    }
+
+    /// The vp **table job** (DESIGN.md §12): like a correlation batch,
+    /// but each owner partition builds its pairs' complete contingency
+    /// tables over the row range `rows` and the tables are collected at
+    /// their wire size (vp's one concession to incrementality — scalar
+    /// batches never ship tables). Only the range's slice of each
+    /// reference column is priced into the broadcast, which is what
+    /// makes tall-and-tiny delta jobs cheap here.
+    fn compute_ctables(
+        &self,
+        pairs: &[(FeatureId, FeatureId)],
+        rows: Range<usize>,
+    ) -> Vec<ContingencyTable> {
+        if pairs.is_empty() {
+            return vec![];
+        }
+        debug_assert!(rows.end <= self.data.num_rows());
+        // Only the delta slice of each reference column ships.
+        let (refs_bc, work) = self.batch_assembly(pairs, rows.len());
+
+        let data = Arc::clone(&self.data);
+        let w2 = Arc::clone(&work);
+        let class_bc = self.class_bc.clone();
+        let tables: Rdd<(usize, ContingencyTable)> =
+            self.columns.map_partitions("localCTablesDelta", move |_, cols| {
+                let _ = &refs_bc; // broadcast lifetime mirrors Spark semantics
+                let (class_col, class_arity) = (&class_bc.0, class_bc.1);
+                let mut out = Vec::new();
+                for (fid, col) in cols {
+                    let Some(items) = w2.get(fid) else { continue };
+                    for &(pair_idx, (a, b)) in items {
+                        let class = (class_col.as_slice(), class_arity);
+                        let (x, bins_x) = resolve_side(a, *fid, col, class, &data);
+                        let (y, bins_y) = resolve_side(b, *fid, col, class, &data);
+                        out.push((
+                            pair_idx,
+                            ContingencyTable::from_columns_range(x, bins_x, y, bins_y, rows.clone()),
+                        ));
+                    }
+                }
+                out
+            });
+        let mut collected = tables.collect_sized(|(_, t)| t.wire_bytes());
+        collected.sort_by_key(|(i, _)| *i);
+        debug_assert_eq!(collected.len(), pairs.len());
+        collected.into_iter().map(|(_, t)| t).collect()
+    }
+
     fn compute_batch(&self, pairs: &[(FeatureId, FeatureId)]) -> Vec<f64> {
         if pairs.is_empty() {
             return vec![];
         }
-        let sides = Self::assign_sides(pairs);
-
-        // Broadcast the non-class reference columns for this batch.
-        let mut ref_ids: Vec<FeatureId> = sides
-            .iter()
-            .map(|&(_, r)| r)
-            .filter(|&r| r != CLASS_ID)
-            .collect();
-        ref_ids.sort_unstable();
-        ref_ids.dedup();
-        let ref_bytes: usize = ref_ids.iter().map(|&r| self.data.cols[r].len()).sum();
-        let refs_bc = self.ctx.broadcast(ref_ids, ref_bytes);
-
-        // Owner → list of (pair index, original pair). The owner decides
-        // *where* the pair is computed; the pair itself is always built in
-        // its canonical (a, b) orientation so the f64 SU value is
-        // bit-identical to the sequential/hp computation — transposing the
-        // table permutes the entropy summation order, which can differ in
-        // the last ulp and flip merit ties.
-        let mut work: HashMap<FeatureId, Vec<(usize, (FeatureId, FeatureId))>> = HashMap::new();
-        for (i, (&(owner, _), &pair)) in sides.iter().zip(pairs).enumerate() {
-            work.entry(owner).or_default().push((i, pair));
-        }
-        let work = Arc::new(work);
+        // Broadcast the non-class reference columns for this batch
+        // (every column has `num_rows` rows, so the wire cost is
+        // refs × n bytes) and group the pairs by owner column. The pair
+        // stays in its canonical (a, b) orientation so the f64 SU value
+        // is bit-identical to the sequential/hp computation —
+        // transposing the table permutes the entropy summation order,
+        // which can differ in the last ulp and flip merit ties.
+        let (refs_bc, work) = self.batch_assembly(pairs, self.data.num_rows());
 
         // localSU: each partition computes SU for the pairs whose owner
         // column it holds, in one engine batch. Worker-side data paths:
@@ -300,6 +372,36 @@ mod tests {
     fn empty_batch() {
         let (_ctx, mut corr, _) = setup(3);
         assert!(corr.compute(&[]).is_empty());
+    }
+
+    #[test]
+    fn ctable_job_matches_direct_tables_and_prices_delta_broadcast() {
+        let (ctx, corr, dd) = setup(14);
+        assert!(corr.supports_ctables());
+        let n = dd.num_rows();
+        let pairs = vec![(0, 5), (1, 5), (3, CLASS_ID)];
+
+        // Full-range tables equal the driver-side computation exactly,
+        // in the canonical (a, b) orientation.
+        let full = corr.compute_ctables(&pairs, 0..n);
+        for (t, &(a, b)) in full.iter().zip(&pairs) {
+            let (x, bx) = dd.column(a);
+            let (y, by) = dd.column(b);
+            assert_eq!(t, &ContingencyTable::from_columns(x, bx, y, by));
+        }
+
+        // Base ⊕ delta == full, and the delta broadcast ships only the
+        // delta slice of the reference column (feature 5).
+        let split = n - 100;
+        let base = corr.compute_ctables(&pairs, 0..split);
+        let before = ctx.metrics().total_broadcast_bytes();
+        let delta = corr.compute_ctables(&pairs, split..n);
+        let after = ctx.metrics().total_broadcast_bytes();
+        assert_eq!(after - before, 100, "delta slice of one reference column");
+        for ((mut b, d), f) in base.into_iter().zip(delta).zip(&full) {
+            b.merge(&d).unwrap();
+            assert_eq!(&b, f);
+        }
     }
 
     #[test]

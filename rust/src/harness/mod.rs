@@ -13,11 +13,13 @@
 //! | scheduler fusion (DESIGN.md §3) | — | `cargo bench --bench ablation_fusion` |
 //! | multi-query service (DESIGN.md §10) | — | `cargo bench --bench ablation_service` |
 //! | adaptive partitioning planner (DESIGN.md §11) | [`planner`] | `cargo bench --bench ablation_planner` |
+//! | incremental append vs cold re-registration (DESIGN.md §12) | — | `cargo bench --bench ablation_incremental` |
 //!
 //! Each run writes a CSV under `bench_out/` and prints an ASCII chart, so
-//! `cargo bench` output is the full reproduction report. The planner
-//! bench additionally writes `bench_out/BENCH_planner.json` (auto vs hp
-//! vs vp per shape) as the machine-readable perf trajectory.
+//! `cargo bench` output is the full reproduction report. The planner and
+//! incremental benches additionally write `bench_out/BENCH_planner.json`
+//! / `bench_out/BENCH_incremental.json` as machine-readable perf
+//! trajectories.
 
 pub mod ablation;
 pub mod fig3;

@@ -50,12 +50,16 @@ every decision. `--scheme` is accepted as an alias.
 FAMILIES: ecbdl14, higgs, kddcup99, epsilon (Table 1 of the paper),
           wide (features >> rows, for the planner harness)
 
-A `queries` script declares tenant datasets and the query traffic over
-them, e.g.:
+A `queries` script declares tenant datasets and the traffic over them —
+queries, and `append` directives that ingest new instances mid-workload
+(cached SU state is *upgraded* from the delta rows, never recomputed;
+`warm=true` warm-restarts a search from the previous winner), e.g.:
 
   dataset logs family=kddcup99 rows=4000 features=20 seed=7 scheme=hp
   query logs repeat=3
   query logs max_fails=3 locally_predictive=false
+  append logs rows=800
+  query logs warm=true
 ";
 
 fn parse_flags(args: &[String]) -> Result<HashMap<String, String>, String> {
@@ -297,9 +301,9 @@ fn cmd_queries(flags: &HashMap<String, String>) {
         verify: flags.contains_key("verify"),
     };
     println!(
-        "replaying {} dataset(s), {} query line(s) (concurrency {}, max in-flight jobs {})\n",
+        "replaying {} dataset(s), {} directive(s) (concurrency {}, max in-flight jobs {})\n",
         script.datasets.len(),
-        script.queries.len(),
+        script.ops.len(),
         opts.concurrency,
         opts.max_inflight_jobs
     );

@@ -15,17 +15,32 @@
 //! * Registering a dataset ([`DicfsService::register_discrete`]) builds
 //!   its partitioning layout once — for vp, the columnar shuffle and the
 //!   class broadcast — and attaches a shared, thread-safe
-//!   [`SharedSuCache`](crate::correlation::SharedSuCache); see
+//!   [`VersionedSuCache`](crate::correlation::VersionedSuCache); see
 //!   [`registry`].
 //! * Queries run the ordinary best-first search, each through its own
-//!   [`SuCacheHandle`](crate::correlation::SuCacheHandle) (per-query
-//!   statistics) over the dataset's shared cache. Only cache *misses*
-//!   become distributed work.
+//!   [`VersionedSuHandle`](crate::correlation::VersionedSuHandle)
+//!   (per-query statistics, pinned to a dataset version) over the
+//!   dataset's shared cache. Only cache *misses* become distributed
+//!   work.
 //! * Misses flow through the [`scheduler`]: a FIFO job queue with
 //!   admission control (bounded in-flight jobs) that coalesces the
 //!   misses of concurrent queries on the same dataset into one hp/vp
 //!   batch job per scheduling tick, and records a [`SuJobReport`] per
 //!   job.
+//! * Datasets are **versioned** ([`DatasetVersion`], DESIGN.md §12):
+//!   [`DicfsService::append_discrete`] publishes a new version with the
+//!   delta rows merged in, while in-flight queries stay pinned to the
+//!   version they started on. Nothing in the SU cache is invalidated —
+//!   entries carry their contingency tables and are *upgraded* by
+//!   merging only the delta rows' counts when a later query needs them,
+//!   coalesced through the scheduler like any other miss batch. The
+//!   result is exact: append-then-query selects bit-identically to a
+//!   from-scratch run over the merged data.
+//! * Post-append searches can **warm-restart**
+//!   ([`DicfsService::query_warm`]): the best-first search is re-seeded
+//!   from a previous query's winning subset and final queue
+//!   ([`WarmStart`](crate::cfs::best_first::WarmStart)), typically
+//!   converging in a fraction of the expansions.
 //! * A dataset registered with [`ServeScheme::Auto`] keeps an adaptive
 //!   [`Planner`](crate::dicfs::planner::Planner) in its registry entry:
 //!   every coalesced batch is routed to whichever partitioning the cost
@@ -46,7 +61,7 @@ pub mod registry;
 pub mod scheduler;
 pub mod script;
 
-pub use registry::{DatasetId, RegisteredDataset};
+pub use registry::{DatasetId, DatasetVersion, RegisteredDataset};
 pub use scheduler::SuJobReport;
 
 use std::sync::atomic::{AtomicUsize, Ordering};
@@ -54,7 +69,7 @@ use std::sync::mpsc::channel;
 use std::sync::Arc;
 use std::time::Instant;
 
-use crate::cfs::best_first::{BestFirstSearch, CfsConfig};
+use crate::cfs::best_first::{BestFirstSearch, CfsConfig, WarmStart};
 use crate::cfs::Correlator;
 use crate::core::{FeatureId, SelectionResult};
 use crate::correlation::{CacheStats, SuCache};
@@ -146,14 +161,20 @@ pub struct QueryReport {
     pub dataset: DatasetId,
     /// Dataset name at registration.
     pub dataset_name: String,
+    /// Dataset version the query pinned at start (0 before any append).
+    pub version: usize,
     /// The selected features (identical to an isolated run).
     pub result: SelectionResult,
     /// This query's cache statistics: `hits` includes pairs warmed by
     /// *other* queries; `computed` counts only misses this query
-    /// forwarded.
+    /// forwarded (after an append this includes pairs the job merely
+    /// *upgraded* — see [`SuJobReport::upgraded_pairs`]).
     pub cache: CacheStats,
     /// Wall-clock of the query on this host, in seconds.
     pub wall_secs: f64,
+    /// Restart seed for a follow-up [`DicfsService::query_warm`] on the
+    /// same dataset: the winning subset plus the final search queue.
+    pub warm: WarmStart,
 }
 
 /// Cache state of one registered dataset, service-wide.
@@ -265,6 +286,64 @@ impl DicfsService {
             .id
     }
 
+    /// Append already-discretized instances to a registered dataset,
+    /// publishing a new current version and returning its number.
+    ///
+    /// The delta must have the registered feature count and stay within
+    /// the frozen arities (discretization is decided at registration —
+    /// re-binning appended rows with fresh cut points would silently
+    /// change the base rows' semantics). The canonical pattern is to
+    /// discretize the full stream once and reveal row slices of it:
+    /// [`DiscreteDataset::slice_rows`] at registration, the remaining
+    /// slices here.
+    ///
+    /// Nothing is invalidated: in-flight queries stay pinned to their
+    /// version, and cached SU entries are **upgraded** lazily — the next
+    /// query's misses coalesce into scheduler jobs that merge only the
+    /// delta rows' counts into the cached contingency tables, recompute
+    /// SU from the merged tables, and are therefore bit-identical to a
+    /// cold re-registration of the merged data (DESIGN.md §12):
+    ///
+    /// ```
+    /// use std::sync::Arc;
+    /// use dicfs::cfs::SequentialCfs;
+    /// use dicfs::data::synth::{higgs_like, SynthConfig};
+    /// use dicfs::discretize::discretize_dataset;
+    /// use dicfs::serve::{DicfsService, QuerySpec, ServeScheme, ServiceConfig};
+    ///
+    /// let service = DicfsService::new(ServiceConfig::default());
+    /// let raw = higgs_like(&SynthConfig { rows: 500, seed: 9, features: Some(8) });
+    /// let full = Arc::new(discretize_dataset(&raw).unwrap());
+    ///
+    /// // Register the first 400 rows, query once (fills the SU cache)...
+    /// let id = service.register_discrete(
+    ///     "tenant-a", Arc::new(full.slice_rows(0..400)), ServeScheme::Horizontal, None);
+    /// let spec = QuerySpec { dataset: id, cfs: Default::default() };
+    /// let before = service.query(&spec);
+    ///
+    /// // ...then append the remaining 100 rows: nothing is recomputed
+    /// // from scratch except genuinely new pairs.
+    /// let v1 = service.append_discrete(id, &full.slice_rows(400..500)).unwrap();
+    /// assert_eq!(v1, 1);
+    /// let after = service.query(&spec);
+    /// assert_eq!(after.version, 1);
+    ///
+    /// // Exactness: identical to a from-scratch run over all 500 rows.
+    /// let scratch = SequentialCfs::default().select_discrete(&full);
+    /// assert_eq!(after.result.selected, scratch.selected);
+    /// # let _ = before;
+    /// ```
+    pub fn append_discrete(
+        &self,
+        id: DatasetId,
+        delta: &DiscreteDataset,
+    ) -> crate::core::Result<usize> {
+        let reg = self.registry.get(id).ok_or_else(|| {
+            crate::core::Error::InvalidConfig(format!("unknown dataset id {id}"))
+        })?;
+        reg.append(delta, &self.ctx, &self.engine)
+    }
+
     /// Look up a registered dataset by id.
     pub fn dataset(&self, id: DatasetId) -> Option<Arc<RegisteredDataset>> {
         self.registry.get(id)
@@ -279,40 +358,64 @@ impl DicfsService {
     ///
     /// Safe to call from many threads at once (that is the point): the
     /// search runs locally, cache misses are forwarded to the shared
-    /// scheduler and coalesce with other queries' misses.
+    /// scheduler and coalesce with other queries' misses. The query
+    /// **pins** the dataset version that is current when it starts: an
+    /// append landing mid-search changes nothing the search observes.
     pub fn query(&self, spec: &QuerySpec) -> QueryReport {
+        self.run_query(spec, None)
+    }
+
+    /// [`Self::query`] with a **warm restart**: the best-first search is
+    /// re-seeded from `seed` — a previous query's winning subset and
+    /// final queue ([`QueryReport::warm`]) re-evaluated under the
+    /// current version's correlations — so a post-append search
+    /// typically converges in a fraction of the expansions. A heuristic
+    /// accelerator: the merit can only match or exceed the re-evaluated
+    /// seed, but the trajectory may differ from a cold search's (use
+    /// [`Self::query`] where the bit-identical-to-cold trajectory
+    /// matters).
+    pub fn query_warm(&self, spec: &QuerySpec, seed: &WarmStart) -> QueryReport {
+        self.run_query(spec, Some(seed))
+    }
+
+    fn run_query(&self, spec: &QuerySpec, warm: Option<&WarmStart>) -> QueryReport {
         let reg = self
             .registry
             .get(spec.dataset)
             .unwrap_or_else(|| panic!("unknown dataset id {}", spec.dataset));
+        let ver = reg.current();
         let query = self.next_query.fetch_add(1, Ordering::SeqCst);
-        let mut handle = reg.cache().handle();
+        let mut handle = ver.cache_handle();
         // Driver-local (seq) tenants compute misses inline on the query
         // thread — there is no distributed job to admission-control, so
         // they must not occupy scheduler slots or serialize behind the
-        // per-dataset job lock. They still share the dataset's cache.
+        // per-dataset job lock. They still share the dataset's cache
+        // (and its upgrade path, via the same resolve call the
+        // scheduler's jobs use).
         let mut correlator: Box<dyn Correlator + '_> = match reg.scheme {
             ServeScheme::Sequential => Box::new(DirectCorrelator {
-                dataset: Arc::clone(&reg),
+                version: Arc::clone(&ver),
             }),
             ServeScheme::Horizontal | ServeScheme::Vertical | ServeScheme::Auto => {
                 Box::new(MissForwarder {
-                    dataset: Arc::clone(&reg),
+                    version: Arc::clone(&ver),
                     scheduler: &self.scheduler,
                 })
             }
         };
-        let m = reg.data.num_features();
+        let m = ver.data.num_features();
         let search = BestFirstSearch::new(spec.cfs);
-        let (result, wall_secs) =
-            timed(|| search.run_with_cache(m, correlator.as_mut(), &mut handle));
+        let ((result, warm_out), wall_secs) =
+            timed(|| search.run_traced(m, correlator.as_mut(), &mut handle, warm));
         QueryReport {
             query,
             dataset: reg.id,
             dataset_name: reg.name.clone(),
+            version: ver.version,
             result,
             cache: handle.stats(),
             wall_secs,
+            warm: warm_out,
         }
     }
 
@@ -362,16 +465,17 @@ impl DicfsService {
     }
 }
 
-/// Query-side miss funnel for driver-local (seq) tenants: computes the
-/// misses inline through the dataset's provider. No scheduler involved —
-/// cache sharing alone carries the cross-query reuse.
+/// Query-side miss funnel for driver-local (seq) tenants: resolves the
+/// misses inline at the pinned version (hits, delta upgrades and fresh
+/// computations included). No scheduler involved — cache sharing alone
+/// carries the cross-query reuse.
 struct DirectCorrelator {
-    dataset: Arc<RegisteredDataset>,
+    version: Arc<DatasetVersion>,
 }
 
 impl Correlator for DirectCorrelator {
     fn compute(&mut self, pairs: &[(FeatureId, FeatureId)]) -> Vec<f64> {
-        self.dataset.provider.compute_batch(pairs)
+        self.version.resolve(pairs).values
     }
 }
 
@@ -379,7 +483,7 @@ impl Correlator for DirectCorrelator {
 /// contract by shipping misses to the shared scheduler and blocking until
 /// the coalesced job answers.
 struct MissForwarder<'a> {
-    dataset: Arc<RegisteredDataset>,
+    version: Arc<DatasetVersion>,
     scheduler: &'a MissScheduler,
 }
 
@@ -387,7 +491,7 @@ impl Correlator for MissForwarder<'_> {
     fn compute(&mut self, pairs: &[(FeatureId, FeatureId)]) -> Vec<f64> {
         let (reply, rx) = channel();
         self.scheduler.submit(MissRequest {
-            dataset: Arc::clone(&self.dataset),
+            version: Arc::clone(&self.version),
             pairs: pairs.to_vec(),
             reply,
             enqueued: Instant::now(),
@@ -533,6 +637,134 @@ mod tests {
         assert!(ServeScheme::parse("rows").is_none());
         assert_eq!(ServeScheme::Horizontal.label(), "hp");
         assert_eq!(ServeScheme::Auto.label(), "auto");
+    }
+
+    #[test]
+    fn append_publishes_new_version_and_upgrades_cached_pairs() {
+        let service = small_service();
+        let full = discrete(900, 9, 17);
+        let id = service.register_discrete(
+            "a",
+            Arc::new(full.slice_rows(0..700)),
+            ServeScheme::Horizontal,
+            None,
+        );
+        let spec = QuerySpec {
+            dataset: id,
+            cfs: CfsConfig::default(),
+        };
+        let before = service.query(&spec);
+        assert_eq!(before.version, 0);
+        assert!(before.cache.computed > 0);
+
+        let v1 = service
+            .append_discrete(id, &full.slice_rows(700..900))
+            .unwrap();
+        assert_eq!(v1, 1);
+        let reg = service.dataset(id).unwrap();
+        assert_eq!(reg.num_versions(), 2);
+        assert_eq!(reg.current().rows(), 900);
+
+        // Post-append query: exact vs a from-scratch run over all rows,
+        // with cached pairs upgraded (delta scans), not recomputed.
+        let after = service.query(&spec);
+        assert_eq!(after.version, 1);
+        let scratch = SequentialCfs::default().select_discrete(&full);
+        assert_eq!(after.result.selected, scratch.selected);
+        assert_eq!(after.result.merit.to_bits(), scratch.merit.to_bits());
+
+        let jobs = service.job_log();
+        let upgraded: usize = jobs.iter().map(|j| j.upgraded_pairs).sum();
+        assert!(upgraded > 0, "no cached pair was delta-upgraded");
+        let delta_cells: u64 = jobs.iter().map(|j| j.delta_cells).sum();
+        // Upgrades scanned exactly the 200 delta rows per upgraded pair.
+        assert_eq!(delta_cells, 200 * upgraded as u64);
+        assert!(jobs.iter().any(|j| j.version == 1));
+    }
+
+    #[test]
+    fn append_works_inline_for_sequential_scheme() {
+        let service = small_service();
+        let full = discrete(600, 8, 29);
+        let id = service.register_discrete(
+            "a",
+            Arc::new(full.slice_rows(0..450)),
+            ServeScheme::Sequential,
+            None,
+        );
+        let spec = QuerySpec {
+            dataset: id,
+            cfs: CfsConfig::default(),
+        };
+        let _ = service.query(&spec);
+        service
+            .append_discrete(id, &full.slice_rows(450..600))
+            .unwrap();
+        let after = service.query(&spec);
+        let scratch = SequentialCfs::default().select_discrete(&full);
+        assert_eq!(after.result.selected, scratch.selected);
+        assert_eq!(after.result.merit.to_bits(), scratch.merit.to_bits());
+        // The SU matrix audit: every cached entry equals the direct SU
+        // over the row prefix it covers.
+        use crate::correlation::symmetrical_uncertainty;
+        for ((a, b), rows, su) in service.dataset(id).unwrap().cache().snapshot() {
+            let prefix = full.slice_rows(0..rows);
+            let (x, bx) = prefix.column(a);
+            let (y, by) = prefix.column(b);
+            assert_eq!(su.to_bits(), symmetrical_uncertainty(x, bx, y, by).to_bits());
+        }
+    }
+
+    #[test]
+    fn append_rejects_bad_deltas() {
+        let service = small_service();
+        let full = discrete(400, 6, 31);
+        let id =
+            service.register_discrete("a", Arc::clone(&full), ServeScheme::Sequential, None);
+        // Unknown dataset id.
+        assert!(service.append_discrete(99, &full).is_err());
+        // Empty delta.
+        assert!(service
+            .append_discrete(id, &full.slice_rows(0..0))
+            .is_err());
+        // Feature-count mismatch.
+        let narrow = discrete(50, 4, 31);
+        assert!(service.append_discrete(id, &narrow).is_err());
+        // Nothing was published.
+        assert_eq!(service.dataset(id).unwrap().num_versions(), 1);
+    }
+
+    #[test]
+    fn warm_query_reuses_previous_winner_after_append() {
+        let service = small_service();
+        let full = discrete(800, 10, 37);
+        let id = service.register_discrete(
+            "a",
+            Arc::new(full.slice_rows(0..650)),
+            ServeScheme::Horizontal,
+            None,
+        );
+        let spec = QuerySpec {
+            dataset: id,
+            cfs: CfsConfig::default(),
+        };
+        let first = service.query(&spec);
+        assert!(!first.warm.is_empty(), "query must return a restart seed");
+        service
+            .append_discrete(id, &full.slice_rows(650..800))
+            .unwrap();
+
+        let cold = service.query(&spec);
+        let warm = service.query_warm(&spec, &first.warm);
+        // The warm search confirms (or improves on) the re-evaluated
+        // seed and must not expand more than the cold rebuild.
+        assert!(
+            warm.result.iterations <= cold.result.iterations,
+            "warm {} vs cold {} iterations",
+            warm.result.iterations,
+            cold.result.iterations
+        );
+        assert_eq!(warm.version, 1);
     }
 
     #[test]

@@ -1,19 +1,33 @@
 //! The dataset registry: per-dataset state the service keeps alive
-//! across queries.
+//! across queries — now a **versioned lineage** per dataset.
 //!
 //! Registering a dataset is the expensive, once-per-tenant step: the
 //! discretization is computed (or adopted), the partitioning layout is
 //! built — for vp that includes the columnar-transformation shuffle and
-//! the one-time class broadcast — and an empty [`SharedSuCache`] is
-//! attached. Every query against the dataset then reuses all three, which
-//! is what turns the paper's per-search on-demand optimization into a
-//! cross-query one.
+//! the one-time class broadcast — and an empty
+//! [`VersionedSuCache`] is attached. Every query against the dataset
+//! then reuses all three, which is what turns the paper's per-search
+//! on-demand optimization into a cross-query one.
+//!
+//! Appending instances (`RegisteredDataset::append`, exposed as
+//! [`DicfsService::append_discrete`](crate::serve::DicfsService::append_discrete))
+//! pushes a new [`DatasetVersion`] onto the lineage instead of
+//! re-registering: the merged data gets a fresh partition layout, but
+//! the SU cache is **shared across versions** and nothing in it is
+//! invalidated — cached entries carry their contingency tables and are
+//! *upgraded* on demand by merging only the delta rows' counts
+//! (`DatasetVersion::resolve`, the single upgrade path both the
+//! scheduler's jobs and the seq scheme's inline correlator go through).
+//! In-flight queries keep the `Arc` of the version they started on
+//! (version pinning), so an append never changes what a running search
+//! observes. See DESIGN.md §12.
 
-use std::sync::{Arc, Mutex};
+use std::ops::Range;
+use std::sync::{Arc, Mutex, RwLock};
 
 use crate::cfs::SharedCorrelator;
-use crate::correlation::SharedSuCache;
-use crate::core::FeatureId;
+use crate::core::{pair_key, Error, FeatureId, Result};
+use crate::correlation::{ContingencyTable, VersionedEntry, VersionedSuCache, VersionedSuHandle};
 use crate::data::columnar::DiscreteDataset;
 use crate::dicfs::planner::AutoCorrelator;
 use crate::dicfs::{hp::HorizontalCorrelator, vp::VerticalCorrelator};
@@ -25,26 +39,292 @@ use crate::sparklet::SparkletContext;
 /// for the service's lifetime).
 pub type DatasetId = usize;
 
-/// Everything the service keeps alive for one registered dataset.
+/// One version of a registered dataset: the merged data as of some
+/// append, its partitioning layout, and a handle on the lineage's shared
+/// SU cache.
+///
+/// Queries pin the `Arc` of the version that was current when they
+/// started; versions are immutable once published, so a pinned query is
+/// isolated from any concurrent append by construction.
+pub struct DatasetVersion {
+    /// The dataset this version belongs to.
+    pub dataset: DatasetId,
+    /// Registration name (carried for job reports).
+    pub name: String,
+    /// 0-based version number; bumped by one per append.
+    pub version: usize,
+    /// The merged (base + all appended deltas) discretized data.
+    pub data: Arc<DiscreteDataset>,
+    /// The correlation backend over this version's layout.
+    pub(crate) provider: Box<dyn SharedCorrelator>,
+    /// The lineage-wide SU cache (shared by every version).
+    pub(crate) cache: VersionedSuCache,
+    /// Engine used to finish SU from merged tables on the driver side.
+    pub(crate) engine: Arc<dyn SuEngine>,
+}
+
+/// What one [`DatasetVersion::resolve`] call did — the accounting behind
+/// [`SuJobReport`](crate::serve::SuJobReport)'s incremental fields.
+#[derive(Debug, Clone)]
+pub(crate) struct ResolveOutcome {
+    /// SU values, aligned with the input pairs.
+    pub values: Vec<f64>,
+    /// Pairs already valid at this version (no work).
+    pub cached: usize,
+    /// Pairs computed from scratch over all rows.
+    pub fresh: usize,
+    /// Pairs upgraded by merging only delta-row counts.
+    pub upgraded: usize,
+    /// Σ rows scanned by fresh computations (`fresh × n`).
+    pub full_cells: u64,
+    /// Σ delta rows scanned by upgrades (strictly less than `n` each).
+    pub delta_cells: u64,
+}
+
+impl DatasetVersion {
+    /// Rows this version covers.
+    pub fn rows(&self) -> usize {
+        self.data.num_rows()
+    }
+
+    /// A per-query cache funnel pinned at this version's row count.
+    pub fn cache_handle(&self) -> VersionedSuHandle {
+        self.cache.handle(self.rows())
+    }
+
+    /// Resolve a batch of (deduplicated) pairs at this version: serve
+    /// already-valid entries, **upgrade** entries whose tables cover
+    /// fewer rows by merging only the delta rows' counts, and compute
+    /// the rest from scratch — publishing tables alongside SU so future
+    /// appends can upgrade them too.
+    ///
+    /// Exactness: an upgraded table is the cached base table plus the
+    /// delta rows' counts — bit-identical to a from-scratch table over
+    /// this version's rows because u64 counts are additive across
+    /// disjoint row ranges — and SU is recomputed from the merged table
+    /// through the same engine path every from-scratch computation uses.
+    /// Publication is monotone (kept-most-rows), so resolving at an old
+    /// pinned version can never downgrade newer entries; such stale
+    /// resolves return correct values for their own version without
+    /// publishing.
+    pub(crate) fn resolve(&self, pairs: &[(FeatureId, FeatureId)]) -> ResolveOutcome {
+        let n = self.rows();
+        let table_jobs = self.provider.supports_ctables();
+
+        // Classify under one read pass. `Slot` remembers where each
+        // input pair's value will come from.
+        enum Slot {
+            Done(f64),
+            Fresh(usize),
+            Upgrade(usize),
+        }
+        let canonical: Vec<(FeatureId, FeatureId)> =
+            pairs.iter().map(|&(a, b)| pair_key(a, b)).collect();
+        let entries = self.cache.lookup(&canonical);
+        let mut slots: Vec<Slot> = Vec::with_capacity(pairs.len());
+        let mut fresh: Vec<(FeatureId, FeatureId)> = Vec::new();
+        // (pair, base rows, base table — taken when merged) of each
+        // upgradable entry.
+        let mut upgrades: Vec<((FeatureId, FeatureId), usize, Option<ContingencyTable>)> =
+            Vec::new();
+        for (&p, e) in canonical.iter().zip(entries) {
+            match e {
+                Some(e) if e.rows == n => slots.push(Slot::Done(e.su)),
+                Some(VersionedEntry {
+                    rows,
+                    table: Some(t),
+                    ..
+                }) if rows < n && table_jobs => {
+                    slots.push(Slot::Upgrade(upgrades.len()));
+                    upgrades.push((p, rows, Some(t)));
+                }
+                _ => {
+                    slots.push(Slot::Fresh(fresh.len()));
+                    fresh.push(p);
+                }
+            }
+        }
+        let cached = slots.iter().filter(|s| matches!(s, Slot::Done(_))).count();
+
+        // Tables are *moved* into the publish list as they are produced
+        // (no second deep copy of any table); the scalar SU values are
+        // kept separately for the aligned reply.
+        let mut updates: Vec<((FeatureId, FeatureId), VersionedEntry)> =
+            Vec::with_capacity(fresh.len() + upgrades.len());
+
+        // Fresh pairs: one table job over all rows (tables are kept for
+        // future upgrades) — or a scalar batch on table-less backends.
+        let mut fresh_su: Vec<f64> = Vec::new();
+        if !fresh.is_empty() {
+            if table_jobs {
+                let tables = self.provider.compute_ctables(&fresh, 0..n);
+                let refs: Vec<&ContingencyTable> = tables.iter().collect();
+                fresh_su = self.engine.su_from_tables(&refs);
+                for ((&p, table), &su) in fresh.iter().zip(tables).zip(&fresh_su) {
+                    updates.push((
+                        p,
+                        VersionedEntry {
+                            rows: n,
+                            table: Some(table),
+                            su,
+                        },
+                    ));
+                }
+            } else {
+                fresh_su = self.provider.compute_batch(&fresh);
+                for (&p, &su) in fresh.iter().zip(&fresh_su) {
+                    updates.push((
+                        p,
+                        VersionedEntry {
+                            rows: n,
+                            table: None,
+                            su,
+                        },
+                    ));
+                }
+            }
+        }
+        let full_cells = (fresh.len() * n) as u64;
+
+        // Upgrades: one delta table job per distinct base-row count
+        // (entries may have been published at different versions), in
+        // ascending order for determinism of the job sequence.
+        let mut upgraded_su: Vec<Option<f64>> = vec![None; upgrades.len()];
+        let mut delta_cells = 0u64;
+        let mut groups: Vec<usize> = upgrades.iter().map(|&(_, r, _)| r).collect();
+        groups.sort_unstable();
+        groups.dedup();
+        for base in groups {
+            let idxs: Vec<usize> = (0..upgrades.len())
+                .filter(|&i| upgrades[i].1 == base)
+                .collect();
+            let gpairs: Vec<(FeatureId, FeatureId)> = idxs.iter().map(|&i| upgrades[i].0).collect();
+            let deltas = self.provider.compute_ctables(&gpairs, base..n);
+            // Merge the whole group first, then finish SU in one engine
+            // call (the engine API is batched; per-pair calls would cost
+            // a dispatch round-trip each under PJRT).
+            let mut merged: Vec<ContingencyTable> = Vec::with_capacity(idxs.len());
+            for (&i, delta) in idxs.iter().zip(deltas) {
+                let mut table = upgrades[i].2.take().expect("upgrade table taken once");
+                table
+                    .merge(&delta)
+                    .expect("delta table shares the pair's shape");
+                delta_cells += (n - base) as u64;
+                merged.push(table);
+            }
+            let refs: Vec<&ContingencyTable> = merged.iter().collect();
+            let sus = self.engine.su_from_tables(&refs);
+            for ((&i, table), &su) in idxs.iter().zip(merged).zip(&sus) {
+                upgraded_su[i] = Some(su);
+                updates.push((
+                    upgrades[i].0,
+                    VersionedEntry {
+                        rows: n,
+                        table: Some(table),
+                        su,
+                    },
+                ));
+            }
+        }
+
+        // Publish (monotone), then assemble the aligned values.
+        self.cache.publish(updates);
+        let values = slots
+            .iter()
+            .map(|s| match s {
+                Slot::Done(v) => *v,
+                Slot::Fresh(i) => fresh_su[*i],
+                Slot::Upgrade(i) => upgraded_su[*i].expect("every upgrade group resolved"),
+            })
+            .collect();
+        ResolveOutcome {
+            values,
+            cached,
+            fresh: fresh.len(),
+            upgraded: upgrades.len(),
+            full_cells,
+            delta_cells,
+        }
+    }
+}
+
+/// Build the correlation backend for one dataset version, paying its
+/// construction cost (for vp, the columnar shuffle + class broadcast)
+/// here — once per version. `prev` is the superseded version's backend,
+/// if any: an adaptive backend inherits its calibrated compute rates,
+/// so an append stream never re-pays the cost-model warm-up (the vp
+/// layout flag is *not* inherited — the merged data genuinely needs a
+/// new columnar shuffle, so charging it to vp candidates stays honest).
+fn build_provider(
+    scheme: ServeScheme,
+    data: &Arc<DiscreteDataset>,
+    partitions: Option<usize>,
+    ctx: &Arc<SparkletContext>,
+    engine: &Arc<dyn SuEngine>,
+    prev: Option<&dyn SharedCorrelator>,
+) -> Box<dyn SharedCorrelator> {
+    match scheme {
+        ServeScheme::Sequential => Box::new(LocalCorrelator {
+            data: Arc::clone(data),
+            engine: Arc::clone(engine),
+        }),
+        ServeScheme::Horizontal => Box::new(HorizontalCorrelator::new(
+            ctx,
+            Arc::clone(data),
+            Arc::clone(engine),
+            // Same block-based default as the standalone DiCfs driver.
+            partitions.unwrap_or_else(|| ctx.cluster.default_row_partitions(data.num_rows())),
+        )),
+        ServeScheme::Vertical => Box::new(VerticalCorrelator::new(
+            ctx,
+            Arc::clone(data),
+            Arc::clone(engine),
+            partitions.unwrap_or_else(|| data.num_features()),
+        )),
+        // The registry is where the per-dataset planner state lives: the
+        // AutoCorrelator owns a Planner (calibrated rates, vp layout
+        // flag, decision log) that persists across every query and
+        // coalesced job on this dataset version — and, via the
+        // calibration transfer below, across appends.
+        ServeScheme::Auto => {
+            let auto = AutoCorrelator::new(ctx, Arc::clone(data), Arc::clone(engine), partitions);
+            if let Some(cal) = prev.and_then(|p| p.planner_calibration()) {
+                auto.planner().set_calibration(cal);
+            }
+            Box::new(auto)
+        }
+    }
+}
+
+/// Everything the service keeps alive for one registered dataset: its
+/// version lineage plus the cross-version SU cache.
 pub struct RegisteredDataset {
     /// Registry id.
     pub id: DatasetId,
     /// Registration name (unique within a service).
     pub name: String,
-    /// The discretized data, shared with every job that touches it.
-    pub data: Arc<DiscreteDataset>,
     /// Which correlation backend queries on this dataset use.
     pub scheme: ServeScheme,
-    /// The long-lived correlation service (hp/vp layout lives in here).
-    pub(crate) provider: Box<dyn SharedCorrelator>,
-    /// The cross-query SU cache.
-    pub(crate) cache: SharedSuCache,
+    /// Partition-count override, reapplied to every version's layout.
+    partitions: Option<usize>,
+    /// The lineage-wide SU cache (also held by every version).
+    cache: VersionedSuCache,
+    /// The current version. Only the latest is retained — in-flight
+    /// queries hold their own `Arc` pin, so superseded versions (and
+    /// their full column copies + partition layouts) are freed as soon
+    /// as the last query over them finishes, keeping memory bounded
+    /// under long append streams.
+    current: RwLock<Arc<DatasetVersion>>,
+    /// Serializes appends (the merge + layout build happen *outside*
+    /// `current`'s lock so queries never stall behind an append).
+    append_lock: Mutex<()>,
 }
 
 impl RegisteredDataset {
-    /// Build the per-dataset state: choose the correlation backend for
-    /// `scheme` (paying its construction cost — for vp, the columnar
-    /// shuffle — exactly once) and attach an empty shared cache.
+    /// Build the per-dataset state at version 0: choose the correlation
+    /// backend for `scheme` (paying its construction cost — for vp, the
+    /// columnar shuffle — exactly once) and attach an empty shared
+    /// versioned cache.
     pub(crate) fn build(
         id: DatasetId,
         name: String,
@@ -54,43 +334,25 @@ impl RegisteredDataset {
         ctx: &Arc<SparkletContext>,
         engine: &Arc<dyn SuEngine>,
     ) -> Self {
-        let provider: Box<dyn SharedCorrelator> = match scheme {
-            ServeScheme::Sequential => Box::new(LocalCorrelator {
-                data: Arc::clone(&data),
-                engine: Arc::clone(engine),
-            }),
-            ServeScheme::Horizontal => Box::new(HorizontalCorrelator::new(
-                ctx,
-                Arc::clone(&data),
-                Arc::clone(engine),
-                // Same block-based default as the standalone DiCfs driver.
-                partitions
-                    .unwrap_or_else(|| ctx.cluster.default_row_partitions(data.num_rows())),
-            )),
-            ServeScheme::Vertical => Box::new(VerticalCorrelator::new(
-                ctx,
-                Arc::clone(&data),
-                Arc::clone(engine),
-                partitions.unwrap_or_else(|| data.num_features()),
-            )),
-            // The registry is where the per-dataset planner state lives:
-            // the AutoCorrelator owns a Planner (calibrated rates, vp
-            // layout flag, decision log) that persists across every
-            // query and coalesced job on this dataset.
-            ServeScheme::Auto => Box::new(AutoCorrelator::new(
-                ctx,
-                Arc::clone(&data),
-                Arc::clone(engine),
-                partitions,
-            )),
-        };
+        let cache = VersionedSuCache::new();
+        let provider = build_provider(scheme, &data, partitions, ctx, engine, None);
+        let v0 = Arc::new(DatasetVersion {
+            dataset: id,
+            name: name.clone(),
+            version: 0,
+            data,
+            provider,
+            cache: cache.clone(),
+            engine: Arc::clone(engine),
+        });
         Self {
             id,
             name,
-            data,
             scheme,
-            provider,
-            cache: SharedSuCache::new(),
+            partitions,
+            cache,
+            current: RwLock::new(v0),
+            append_lock: Mutex::new(()),
         }
     }
 
@@ -103,39 +365,121 @@ impl RegisteredDataset {
         scheme: ServeScheme,
         provider: Box<dyn SharedCorrelator>,
     ) -> Self {
+        let cache = VersionedSuCache::new();
+        let v0 = Arc::new(DatasetVersion {
+            dataset: id,
+            name: name.to_string(),
+            version: 0,
+            data,
+            provider,
+            cache: cache.clone(),
+            engine: Arc::new(crate::runtime::NativeEngine),
+        });
         Self {
             id,
             name: name.to_string(),
-            data,
             scheme,
-            provider,
-            cache: SharedSuCache::new(),
+            partitions: None,
+            cache,
+            current: RwLock::new(v0),
+            append_lock: Mutex::new(()),
         }
     }
 
-    /// The cross-query SU cache of this dataset.
-    pub fn cache(&self) -> &SharedSuCache {
+    /// The current (latest) version — what new queries pin. Superseded
+    /// versions live on only through the `Arc`s of still-running
+    /// queries.
+    pub fn current(&self) -> Arc<DatasetVersion> {
+        Arc::clone(&self.current.read().unwrap())
+    }
+
+    /// Number of versions published so far (1 + appends).
+    pub fn num_versions(&self) -> usize {
+        self.current.read().unwrap().version + 1
+    }
+
+    /// The current version's merged data.
+    pub fn data(&self) -> Arc<DiscreteDataset> {
+        Arc::clone(&self.current().data)
+    }
+
+    /// The lineage-wide SU cache of this dataset.
+    pub fn cache(&self) -> &VersionedSuCache {
         &self.cache
     }
 
-    /// Full correlation-matrix size `C(m+1, 2)` for this dataset.
+    /// Full correlation-matrix size `C(m+1, 2)` for this dataset (the
+    /// feature count is version-invariant — appends add rows only).
     pub fn full_matrix(&self) -> usize {
-        let m = self.data.num_features();
+        let m = self.current().data.num_features();
         (m + 1) * m / 2
+    }
+
+    /// Append `delta`'s rows, publishing a new current version. The
+    /// delta must match the registered feature count and stay within the
+    /// frozen arities (validated by
+    /// [`DiscreteDataset::append_rows`]); an empty delta is rejected.
+    ///
+    /// Cheap by design: the merged columns are materialized and the new
+    /// version's partition layout is built (for vp, the columnar shuffle
+    /// re-runs over the merged data), but **no SU work happens here** —
+    /// cached entries are upgraded lazily, coalesced into the same
+    /// scheduler jobs as ordinary cache misses, when the next query
+    /// actually asks for them.
+    pub(crate) fn append(
+        &self,
+        delta: &DiscreteDataset,
+        ctx: &Arc<SparkletContext>,
+        engine: &Arc<dyn SuEngine>,
+    ) -> Result<usize> {
+        if delta.num_rows() == 0 {
+            return Err(Error::InvalidData(
+                "append needs at least one row".to_string(),
+            ));
+        }
+        // Appends serialize among themselves, but the expensive work —
+        // materializing the merged columns and building the new
+        // partition layout (for vp, the columnar shuffle) — runs
+        // *outside* `current`'s lock, so queries keep pinning the old
+        // version without stalling until the O(1) pointer swap below.
+        let _appending = self.append_lock.lock().unwrap();
+        let cur = self.current();
+        let merged = Arc::new(cur.data.append_rows(delta)?);
+        let provider = build_provider(
+            self.scheme,
+            &merged,
+            self.partitions,
+            ctx,
+            engine,
+            Some(cur.provider.as_ref()),
+        );
+        let version = cur.version + 1;
+        *self.current.write().unwrap() = Arc::new(DatasetVersion {
+            dataset: self.id,
+            name: self.name.clone(),
+            version,
+            data: merged,
+            provider,
+            cache: self.cache.clone(),
+            engine: Arc::clone(engine),
+        });
+        Ok(version)
     }
 }
 
 /// Driver-local correlation service for `scheme = seq` registrations:
 /// computes SU directly through the engine, no sparklet job. Useful for
 /// small tenants and as the service-side analogue of `SequentialCfs`.
+/// Supports table jobs (they are a driver-side loop here), so seq
+/// datasets participate fully in the incremental upgrade path.
 struct LocalCorrelator {
     data: Arc<DiscreteDataset>,
     engine: Arc<dyn SuEngine>,
 }
 
-impl SharedCorrelator for LocalCorrelator {
-    fn compute_batch(&self, pairs: &[(FeatureId, FeatureId)]) -> Vec<f64> {
-        let cps: Vec<ColumnPair> = pairs
+impl LocalCorrelator {
+    fn column_pairs<'a>(&'a self, pairs: &[(FeatureId, FeatureId)]) -> Vec<ColumnPair<'a>> {
+        pairs
             .iter()
             .map(|&(a, b)| {
                 let (x, bins_x) = self.data.column(a);
@@ -147,8 +491,25 @@ impl SharedCorrelator for LocalCorrelator {
                     bins_y,
                 }
             })
-            .collect();
-        self.engine.su_from_column_pairs(&cps)
+            .collect()
+    }
+}
+
+impl SharedCorrelator for LocalCorrelator {
+    fn compute_batch(&self, pairs: &[(FeatureId, FeatureId)]) -> Vec<f64> {
+        self.engine.su_from_column_pairs(&self.column_pairs(pairs))
+    }
+
+    fn supports_ctables(&self) -> bool {
+        true
+    }
+
+    fn compute_ctables(
+        &self,
+        pairs: &[(FeatureId, FeatureId)],
+        rows: Range<usize>,
+    ) -> Vec<ContingencyTable> {
+        self.engine.ctables(&self.column_pairs(pairs), rows)
     }
 }
 

@@ -8,25 +8,35 @@
 //! at once — the admission control):
 //!
 //! * the **oldest** pending request whose dataset has no job in flight
-//!   picks the dataset (FIFO fairness),
-//! * every queued request for that dataset joins the same job
-//!   (per-dataset batching): their pair lists are deduplicated into one
-//!   canonical union, already-cached pairs are dropped, and the remainder
-//!   runs as **one** hp/vp batch through the dataset's shared correlator,
+//!   picks the dataset (FIFO fairness) — and, on a versioned dataset,
+//!   the dataset *version*: only requests pinned to the same version
+//!   coalesce, so a query that raced an append still resolves against
+//!   exactly the layout it started on,
+//! * every queued request for that dataset (and version) joins the same
+//!   job (per-dataset batching): their pair lists are deduplicated into
+//!   one canonical union, already-valid pairs are dropped, and the
+//!   remainder runs through the version's shared correlator — one batch
+//!   for fresh pairs, one tiny delta batch per distinct upgrade base,
 //! * at most one job per dataset runs at a time — misses arriving while
 //!   a dataset's job is in flight wait (and keep coalescing), so a pair
 //!   is never computed twice and every computed pair is attributable to
 //!   exactly one [`SuJobReport`],
-//! * the job inserts results into the dataset's
-//!   [`SharedSuCache`](crate::correlation::SharedSuCache) and answers
-//!   every coalesced request from it.
+//! * the job resolves the union at the pinned version
+//!   ([`DatasetVersion::resolve`](crate::serve::registry::DatasetVersion)):
+//!   valid cached entries are served, entries from earlier versions are
+//!   **upgraded** by merging only the delta rows' counts, the rest are
+//!   computed fresh (tables cached in the lineage's
+//!   [`VersionedSuCache`](crate::correlation::VersionedSuCache) for
+//!   future upgrades) — so delta upgrades coalesce like any other miss
+//!   batch, and every answered pair is attributable to exactly one
+//!   [`SuJobReport`].
 //!
 //! Coalescing is value-safe: SU per pair is a pure function of the
 //! dataset and both correlators compute each pair in canonical
 //! orientation, so batch composition cannot change any value (DESIGN.md
 //! §5, §10).
 
-use std::collections::{HashSet, VecDeque};
+use std::collections::{HashMap, HashSet, VecDeque};
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
@@ -34,12 +44,13 @@ use std::time::Instant;
 
 use crate::core::{pair_key, FeatureId};
 use crate::dicfs::plan::PlanDecision;
-use crate::serve::registry::{DatasetId, RegisteredDataset};
+use crate::serve::registry::{DatasetId, DatasetVersion};
 
 /// One query's forwarded cache misses, waiting for a coalesced job.
 pub(crate) struct MissRequest {
-    /// The dataset the pairs belong to (carries provider + cache).
-    pub dataset: Arc<RegisteredDataset>,
+    /// The dataset *version* the query is pinned to (carries the
+    /// version's provider, the lineage cache, and the resolve path).
+    pub version: Arc<DatasetVersion>,
     /// Requested pairs, in the query's order (the reply preserves it).
     pub pairs: Vec<(FeatureId, FeatureId)>,
     /// Where the values go once the job completes.
@@ -61,8 +72,20 @@ pub struct SuJobReport {
     pub coalesced_requests: usize,
     /// Total pairs across the coalesced requests (with duplicates).
     pub requested_pairs: usize,
-    /// Distinct uncached pairs the distributed job actually computed.
+    /// Distinct uncached pairs the job computed — fresh computations
+    /// plus delta upgrades.
     pub computed_pairs: usize,
+    /// Dataset version the job resolved against.
+    pub version: usize,
+    /// Of `computed_pairs`, how many were **upgraded** from an earlier
+    /// version by merging only the delta rows' counts (DESIGN.md §12).
+    pub upgraded_pairs: usize,
+    /// Σ rows scanned by from-scratch computations (`fresh pairs × n`).
+    pub full_cells: u64,
+    /// Σ delta rows scanned by upgrades — the incremental bench asserts
+    /// `full_cells + delta_cells` of an append-and-requery workload
+    /// stays strictly below the `full_cells` of a cold re-registration.
+    pub delta_cells: u64,
     /// Oldest coalesced request's queue wait, in seconds.
     pub queue_secs: f64,
     /// Wall-clock of the correlator batch, in seconds.
@@ -175,14 +198,23 @@ fn scheduler_loop(
         // that dataset's queued misses join the job. Datasets with a job
         // in flight stay queued (their misses keep coalescing).
         while inflight < max_inflight {
-            let Some(pos) = pending.iter().position(|r| !busy.contains(&r.dataset.id)) else {
+            let Some(pos) = pending
+                .iter()
+                .position(|r| !busy.contains(&r.version.dataset))
+            else {
                 break;
             };
-            let ds_id = pending[pos].dataset.id;
+            let ds_id = pending[pos].version.dataset;
+            // Coalesce only requests pinned to the same version: a
+            // request that raced an append must resolve against its own
+            // pinned layout. (The oldest request picks the version;
+            // later-version requests for the same dataset stay queued
+            // and coalesce into the next job.)
+            let ver_no = pending[pos].version.version;
             let mut batch = Vec::new();
             let mut rest = VecDeque::with_capacity(pending.len());
             for r in pending.drain(..) {
-                if r.dataset.id == ds_id {
+                if r.version.dataset == ds_id && r.version.version == ver_no {
                     batch.push(r);
                 } else {
                     rest.push_back(r);
@@ -221,15 +253,17 @@ fn scheduler_loop(
 }
 
 /// Execute one coalesced job: union the batch's pairs (canonical keys,
-/// first-seen order), drop already-cached ones, run a single correlator
-/// batch, publish into the shared cache, log the report, answer every
-/// request — in that order, so the job log never trails a served reply.
+/// first-seen order), resolve them at the batch's pinned dataset version
+/// — already-valid entries served, stale entries **upgraded** by merging
+/// only the delta rows' counts, the rest computed fresh (tables cached
+/// for future upgrades) — log the report, answer every request — in
+/// that order, so the job log never trails a served reply.
 pub(crate) fn run_su_job(
     job_id: usize,
     batch: &[MissRequest],
     log: &Mutex<Vec<SuJobReport>>,
 ) -> SuJobReport {
-    let ds = &batch[0].dataset;
+    let ds = &batch[0].version;
     let requested_pairs: usize = batch.iter().map(|r| r.pairs.len()).sum();
     let queue_secs = batch
         .iter()
@@ -239,7 +273,10 @@ pub(crate) fn run_su_job(
     let mut candidates: Vec<(FeatureId, FeatureId)> = Vec::new();
     let mut seen: HashSet<(FeatureId, FeatureId)> = HashSet::new();
     for r in batch {
-        debug_assert_eq!(r.dataset.id, ds.id, "batch spans datasets");
+        debug_assert!(
+            r.version.dataset == ds.dataset && r.version.version == ds.version,
+            "batch spans dataset versions"
+        );
         for &(a, b) in &r.pairs {
             let k = pair_key(a, b);
             if seen.insert(k) {
@@ -247,14 +284,12 @@ pub(crate) fn run_su_job(
             }
         }
     }
-    // One read-guard scan for the whole union, not one lock per pair.
-    let union = ds.cache.missing_of(&candidates);
 
     let t0 = Instant::now();
-    if !union.is_empty() {
-        let values = ds.provider.compute_batch(&union);
-        ds.cache.insert_batch(&union, &values);
-    }
+    // The whole hit/upgrade/fresh pipeline lives in the version's
+    // resolve path (serve/registry.rs) — shared with the seq scheme's
+    // inline correlator, so the upgrade semantics cannot fork.
+    let outcome = ds.resolve(&candidates);
     let compute_secs = t0.elapsed().as_secs_f64();
     // Per-job plan attribution: the scheduler runs at most one job per
     // dataset at a time, so draining here yields exactly this batch's
@@ -263,20 +298,28 @@ pub(crate) fn run_su_job(
 
     let report = SuJobReport {
         job_id,
-        dataset: ds.id,
+        dataset: ds.dataset,
         dataset_name: ds.name.clone(),
         coalesced_requests: batch.len(),
         requested_pairs,
-        computed_pairs: union.len(),
+        computed_pairs: outcome.fresh + outcome.upgraded,
+        version: ds.version,
+        upgraded_pairs: outcome.upgraded,
+        full_cells: outcome.full_cells,
+        delta_cells: outcome.delta_cells,
         queue_secs,
         compute_secs,
         plans,
     };
     log.lock().unwrap().push(report.clone());
 
+    // Answer from the resolve outcome, not from the cache: a request
+    // pinned to an old version gets values the monotone cache may never
+    // store (they would downgrade newer entries).
+    let by_pair: HashMap<(FeatureId, FeatureId), f64> =
+        candidates.into_iter().zip(outcome.values).collect();
     for r in batch {
-        // One read-guard acquisition per request, not per pair.
-        let values = ds.cache.get_batch(&r.pairs).expect("job computed every pair");
+        let values: Vec<f64> = r.pairs.iter().map(|&(a, b)| by_pair[&pair_key(a, b)]).collect();
         // A query abandoned mid-run (its receiver dropped) is not an
         // error for the job; the cache still keeps the values.
         let _ = r.reply.send(values);
@@ -292,6 +335,7 @@ mod tests {
 
     use crate::cfs::SharedCorrelator;
     use crate::data::columnar::DiscreteDataset;
+    use crate::serve::registry::RegisteredDataset;
     use crate::serve::ServeScheme;
 
     /// Provider that returns `a*1000 + b` and counts pairs computed.
@@ -338,7 +382,7 @@ mod tests {
         let (tx, rx) = channel();
         (
             MissRequest {
-                dataset: Arc::clone(ds),
+                version: ds.current(),
                 pairs,
                 reply: tx,
                 enqueued: Instant::now(),

@@ -20,13 +20,34 @@
 //! `features=`, `seed=`, `scheme=seq|hp|vp|auto` (default `auto`: the
 //! adaptive planner picks hp or vp per coalesced batch), `partitions=`.
 //! `query` lines reference a dataset by name and accept `max_fails=`,
-//! `queue_capacity=`, `locally_predictive=true|false`, `repeat=`. Blank
-//! lines and `#` comments are ignored.
+//! `queue_capacity=`, `locally_predictive=true|false`, `repeat=`,
+//! `warm=true|false` (warm-restart the search from the previous query's
+//! winner on the same dataset). Blank lines and `#` comments are
+//! ignored.
+//!
+//! `append NAME rows=N` models instances arriving mid-workload: queries
+//! before the line run against the original rows, queries after it see
+//! the merged state — with every cached SU pair *upgraded* from only
+//! the delta rows, never recomputed from scratch (DESIGN.md §12):
+//!
+//! ```text
+//! dataset logs family=kddcup99 rows=4000 features=20
+//! query logs repeat=2
+//! append logs rows=800          # ingest 800 new instances
+//! query logs                    # exact vs a from-scratch 4800-row run
+//! query logs warm=true          # …and warm-restarted for convergence
+//! ```
+//!
+//! Directives execute in declaration order (queries between two appends
+//! form one concurrent wave set). The replay pre-generates each
+//! dataset's full stream (declared rows + all its appends) and
+//! discretizes it **once**, so the binning is frozen at registration
+//! and appended slices stay within the registered arities.
 
 use std::collections::HashMap;
 use std::sync::Arc;
 
-use crate::cfs::best_first::CfsConfig;
+use crate::cfs::best_first::{CfsConfig, WarmStart};
 use crate::cfs::SequentialCfs;
 use crate::core::{Error, Result};
 use crate::data::synth::{by_name, SynthConfig, FAMILIES};
@@ -68,6 +89,28 @@ pub struct QueryDecl {
     /// How many identical queries this line contributes (0 disables the
     /// line).
     pub repeat: usize,
+    /// Warm-restart the search from the latest completed query's seed on
+    /// the same dataset (`warm=true`).
+    pub warm: bool,
+}
+
+/// One `append` declaration: ingest the next `rows` instances of the
+/// dataset's pre-generated stream.
+#[derive(Debug, Clone)]
+pub struct AppendDecl {
+    /// Name of the dataset the delta belongs to.
+    pub dataset: String,
+    /// Instances to append.
+    pub rows: usize,
+}
+
+/// One workload directive, in script order.
+#[derive(Debug, Clone)]
+pub enum WorkloadOp {
+    /// Run (possibly repeated) queries.
+    Query(QueryDecl),
+    /// Append instances, publishing a new dataset version.
+    Append(AppendDecl),
 }
 
 /// A parsed workload script.
@@ -75,8 +118,24 @@ pub struct QueryDecl {
 pub struct WorkloadScript {
     /// Datasets to register, in declaration order.
     pub datasets: Vec<DatasetDecl>,
-    /// Queries to run, in declaration order.
-    pub queries: Vec<QueryDecl>,
+    /// Queries and appends, in declaration order.
+    pub ops: Vec<WorkloadOp>,
+}
+
+impl WorkloadScript {
+    /// Total rows a dataset's pre-generated stream needs: declared base
+    /// rows plus every append targeting it.
+    fn total_rows(&self, decl: &DatasetDecl) -> usize {
+        decl.rows
+            + self
+                .ops
+                .iter()
+                .filter_map(|op| match op {
+                    WorkloadOp::Append(a) if a.dataset == decl.name => Some(a.rows),
+                    _ => None,
+                })
+                .sum::<usize>()
+    }
 }
 
 fn kv_pairs(
@@ -179,7 +238,7 @@ pub fn parse(text: &str) -> Result<WorkloadScript> {
                     .to_string();
                 let kv = kv_pairs(
                     &tokens[2..],
-                    &["max_fails", "queue_capacity", "locally_predictive", "repeat"],
+                    &["max_fails", "queue_capacity", "locally_predictive", "repeat", "warm"],
                     line_no,
                 )?;
                 let mut cfs = CfsConfig::default();
@@ -200,24 +259,58 @@ pub fn parse(text: &str) -> Result<WorkloadScript> {
                         }
                     };
                 }
-                script.queries.push(QueryDecl {
+                let warm = match kv.get("warm").map(String::as_str) {
+                    None | Some("false") => false,
+                    Some("true") => true,
+                    Some(other) => {
+                        return Err(Error::InvalidConfig(format!(
+                            "line {line_no}: warm={other:?} (true|false)"
+                        )))
+                    }
+                };
+                script.ops.push(WorkloadOp::Query(QueryDecl {
                     dataset,
                     cfs,
                     repeat: parse_num(&kv, "repeat", line_no)?.unwrap_or(1),
-                });
+                    warm,
+                }));
+            }
+            "append" => {
+                let dataset = tokens
+                    .get(1)
+                    .filter(|t| !t.contains('='))
+                    .ok_or_else(|| {
+                        Error::InvalidConfig(format!(
+                            "line {line_no}: append needs a dataset name"
+                        ))
+                    })?
+                    .to_string();
+                let kv = kv_pairs(&tokens[2..], &["rows"], line_no)?;
+                let rows: usize = parse_num(&kv, "rows", line_no)?.ok_or_else(|| {
+                    Error::InvalidConfig(format!("line {line_no}: append needs rows=N"))
+                })?;
+                if rows == 0 {
+                    return Err(Error::InvalidConfig(format!(
+                        "line {line_no}: append rows must be >= 1"
+                    )));
+                }
+                script.ops.push(WorkloadOp::Append(AppendDecl { dataset, rows }));
             }
             other => {
                 return Err(Error::InvalidConfig(format!(
-                    "line {line_no}: unknown directive {other:?} (dataset|query)"
+                    "line {line_no}: unknown directive {other:?} (dataset|query|append)"
                 )))
             }
         }
     }
-    for q in &script.queries {
-        if !script.datasets.iter().any(|d| d.name == q.dataset) {
+    for op in &script.ops {
+        let (kind, name) = match op {
+            WorkloadOp::Query(q) => ("query", &q.dataset),
+            WorkloadOp::Append(a) => ("append", &a.dataset),
+        };
+        if !script.datasets.iter().any(|d| &d.name == name) {
             return Err(Error::InvalidConfig(format!(
-                "query references undeclared dataset {:?}",
-                q.dataset
+                "{kind} references undeclared dataset {name:?}"
             )));
         }
     }
@@ -263,11 +356,15 @@ pub struct ReplaySummary {
     pub equivalence: Option<bool>,
 }
 
-/// Build a service, register the script's datasets, replay its queries
-/// in waves of `concurrency`, and return the session summary.
+/// Build a service, register the script's datasets (base slices of a
+/// once-discretized stream), replay its directives in order — queries in
+/// waves of `concurrency`, appends as version publications between waves
+/// — and return the session summary.
 ///
 /// Panics on a verify mismatch — the equivalence invariant is the
-/// correctness contract of the whole service.
+/// correctness contract of the whole service. Warm-restarted queries
+/// (`warm=true`) are excluded from the check: the warm search is a
+/// convergence heuristic whose trajectory may legitimately differ.
 pub fn replay(
     script: &WorkloadScript,
     opts: &ReplayOptions,
@@ -281,71 +378,166 @@ pub fn replay(
         engine,
     );
 
-    let mut ids = HashMap::new();
+    // Pre-generate and discretize each dataset's full stream once, then
+    // register only the declared base slice; appends reveal the rest.
+    struct Stream {
+        id: usize,
+        full: Arc<crate::data::columnar::DiscreteDataset>,
+        cursor: usize,
+    }
+    let mut streams: HashMap<String, Stream> = HashMap::new();
     for d in &script.datasets {
+        let total = script.total_rows(d);
         let raw = by_name(
             &d.family,
             &SynthConfig {
-                rows: d.rows,
+                rows: total,
                 seed: d.seed,
                 features: d.features,
             },
         );
-        let id = service
-            .register(&d.name, &raw, d.scheme, d.partitions)
-            .expect("register dataset");
-        ids.insert(d.name.clone(), id);
+        let full = Arc::new(
+            crate::discretize::discretize_dataset(&raw).expect("discretize dataset stream"),
+        );
+        let id = service.register_discrete(
+            &d.name,
+            Arc::new(full.slice_rows(0..d.rows)),
+            d.scheme,
+            d.partitions,
+        );
         eprintln!(
-            "registered {:>10} [{}] {} rows x {} features (dataset {})",
+            "registered {:>10} [{}] {} rows x {} features (dataset {}, stream {})",
             d.name,
             d.scheme.label(),
-            raw.num_rows(),
-            raw.num_features(),
-            id
+            d.rows,
+            full.num_features(),
+            id,
+            total
+        );
+        streams.insert(
+            d.name.clone(),
+            Stream {
+                id,
+                full,
+                cursor: d.rows,
+            },
         );
     }
 
-    let mut specs: Vec<QuerySpec> = Vec::new();
-    for q in &script.queries {
-        let id = *ids
-            .get(&q.dataset)
-            .unwrap_or_else(|| panic!("query references unknown dataset {:?}", q.dataset));
-        // repeat=0 disables the line (parse accepts it; replay honors it).
-        for _ in 0..q.repeat {
-            specs.push(QuerySpec {
-                dataset: id,
-                cfs: q.cfs,
+    struct Planned {
+        spec: QuerySpec,
+        /// Rows of the version current when the query was scheduled —
+        /// the verify baseline re-runs sequentially over exactly this
+        /// prefix of the stream.
+        rows: usize,
+        warm: bool,
+    }
+    let mut planned: Vec<Planned> = Vec::new();
+    let mut reports: Vec<QueryReport> = Vec::new();
+    // Latest completed query's restart seed, per dataset.
+    let mut seeds: HashMap<usize, WarmStart> = HashMap::new();
+
+    let run_waves = |pending: &mut Vec<Planned>,
+                     reports: &mut Vec<QueryReport>,
+                     seeds: &mut HashMap<usize, WarmStart>| {
+        for wave in pending.chunks(opts.concurrency.max(1)) {
+            let wave_reports: Vec<QueryReport> = std::thread::scope(|scope| {
+                let handles: Vec<_> = wave
+                    .iter()
+                    .map(|p| {
+                        let seed = if p.warm {
+                            seeds.get(&p.spec.dataset).cloned()
+                        } else {
+                            None
+                        };
+                        let service = &service;
+                        scope.spawn(move || match &seed {
+                            Some(w) => service.query_warm(&p.spec, w),
+                            None => service.query(&p.spec),
+                        })
+                    })
+                    .collect();
+                handles
+                    .into_iter()
+                    .map(|h| h.join().expect("query thread panicked"))
+                    .collect()
             });
+            for r in &wave_reports {
+                seeds.insert(r.dataset, r.warm.clone());
+            }
+            reports.extend(wave_reports);
+        }
+    };
+
+    let mut flushed: Vec<Planned> = Vec::new();
+    for op in &script.ops {
+        match op {
+            WorkloadOp::Query(q) => {
+                let stream = &streams[&q.dataset];
+                // repeat=0 disables the line (parse accepts it; replay
+                // honors it).
+                for _ in 0..q.repeat {
+                    planned.push(Planned {
+                        spec: QuerySpec {
+                            dataset: stream.id,
+                            cfs: q.cfs,
+                        },
+                        rows: stream.cursor,
+                        warm: q.warm,
+                    });
+                }
+            }
+            WorkloadOp::Append(a) => {
+                // Flush queued queries: they must observe the pre-append
+                // version they were scheduled against.
+                run_waves(&mut planned, &mut reports, &mut seeds);
+                flushed.append(&mut planned);
+                let stream = streams.get_mut(&a.dataset).expect("validated at parse");
+                let delta = stream.full.slice_rows(stream.cursor..stream.cursor + a.rows);
+                let version = service
+                    .append_discrete(stream.id, &delta)
+                    .expect("append validated delta");
+                stream.cursor += a.rows;
+                eprintln!(
+                    "appended {:>11} +{} rows -> version {} ({} rows total)",
+                    a.dataset, a.rows, version, stream.cursor
+                );
+            }
         }
     }
-
-    let mut reports = Vec::with_capacity(specs.len());
-    for wave in specs.chunks(opts.concurrency.max(1)) {
-        reports.extend(service.run_concurrent(wave));
-    }
+    run_waves(&mut planned, &mut reports, &mut seeds);
+    flushed.append(&mut planned);
 
     let equivalence = opts.verify.then(|| {
-        let mut baselines: HashMap<(usize, usize, usize, bool), Vec<usize>> = HashMap::new();
+        let mut baselines: HashMap<(usize, usize, usize, usize, bool), Vec<usize>> =
+            HashMap::new();
         let mut ok = true;
-        // Baseline each distinct (dataset, config) once; reports are in
-        // spec order wave by wave, so the two lists line up.
-        for (spec, r) in specs.iter().zip(&reports) {
+        // Baseline each distinct (dataset, rows, config) once; reports
+        // are in planned order wave by wave, so the two lists line up.
+        for (p, r) in flushed.iter().zip(&reports) {
+            if p.warm {
+                continue; // heuristic trajectory: not part of the invariant
+            }
             let key = (
-                spec.dataset,
-                spec.cfs.max_fails,
-                spec.cfs.queue_capacity,
-                spec.cfs.locally_predictive,
+                p.spec.dataset,
+                p.rows,
+                p.spec.cfs.max_fails,
+                p.spec.cfs.queue_capacity,
+                p.spec.cfs.locally_predictive,
             );
             let baseline = baselines.entry(key).or_insert_with(|| {
-                let reg = service.dataset(spec.dataset).expect("registered");
-                SequentialCfs::new(spec.cfs)
-                    .select_discrete(&reg.data)
+                let stream = streams
+                    .values()
+                    .find(|st| st.id == p.spec.dataset)
+                    .expect("registered");
+                SequentialCfs::new(p.spec.cfs)
+                    .select_discrete(&stream.full.slice_rows(0..p.rows))
                     .selected
             });
             if &r.result.selected != baseline {
                 eprintln!(
-                    "MISMATCH: query {} on dataset {} selected {:?}, sequential selected {:?}",
-                    r.query, r.dataset_name, r.result.selected, baseline
+                    "MISMATCH: query {} on dataset {} v{} selected {:?}, sequential selected {:?}",
+                    r.query, r.dataset_name, r.version, r.result.selected, baseline
                 );
                 ok = false;
             }
@@ -372,6 +564,7 @@ fn print_summary(s: &ReplaySummary) {
             vec![
                 r.query.to_string(),
                 r.dataset_name.clone(),
+                format!("v{}", r.version),
                 r.result.selected.len().to_string(),
                 r.cache.requested.to_string(),
                 r.cache.hits.to_string(),
@@ -384,7 +577,7 @@ fn print_summary(s: &ReplaySummary) {
     println!(
         "{}",
         table(
-            &["query", "dataset", "selected", "requested", "hits", "computed", "hit rate", "wall s"],
+            &["query", "dataset", "ver", "selected", "requested", "hits", "computed", "hit rate", "wall s"],
             &qrows
         )
     );
@@ -411,12 +604,19 @@ fn print_summary(s: &ReplaySummary) {
 
     let coalesced = s.jobs.iter().filter(|j| j.coalesced_requests > 1).count();
     let computed: usize = s.jobs.iter().map(|j| j.computed_pairs).sum();
+    let upgraded: usize = s.jobs.iter().map(|j| j.upgraded_pairs).sum();
+    let full_cells: u64 = s.jobs.iter().map(|j| j.full_cells).sum();
+    let delta_cells: u64 = s.jobs.iter().map(|j| j.delta_cells).sum();
     let max_queue = s.jobs.iter().map(|j| j.queue_secs).fold(0.0, f64::max);
     println!(
-        "jobs: {} ({} coalesced >1 request), {} pairs computed, max queue wait {}s",
+        "jobs: {} ({} coalesced >1 request), {} pairs computed ({} upgraded from deltas), \
+         {} full-scan cells + {} delta cells, max queue wait {}s",
         s.jobs.len(),
         coalesced,
         computed,
+        upgraded,
+        full_cells,
+        delta_cells,
         fmt_secs(max_queue)
     );
     // Adaptive datasets: name each job's chosen plan with its
@@ -450,7 +650,22 @@ query a repeat=2
 query a max_fails=3 locally_predictive=false
 query b queue_capacity=3
 query c
+
+# ingest new instances mid-workload, then requery (cold + warm-restart)
+append a rows=150
+query a
+query a warm=true
 ";
+
+    fn queries(s: &WorkloadScript) -> Vec<&QueryDecl> {
+        s.ops
+            .iter()
+            .filter_map(|op| match op {
+                WorkloadOp::Query(q) => Some(q),
+                WorkloadOp::Append(_) => None,
+            })
+            .collect()
+    }
 
     #[test]
     fn parses_datasets_and_queries() {
@@ -464,11 +679,38 @@ query c
             ServeScheme::Auto,
             "the adaptive planner is the default scheme"
         );
-        assert_eq!(s.queries.len(), 4);
-        assert_eq!(s.queries[0].repeat, 2);
-        assert_eq!(s.queries[1].cfs.max_fails, 3);
-        assert!(!s.queries[1].cfs.locally_predictive);
-        assert_eq!(s.queries[2].cfs.queue_capacity, 3);
+        let qs = queries(&s);
+        assert_eq!(qs.len(), 6);
+        assert_eq!(qs[0].repeat, 2);
+        assert_eq!(qs[1].cfs.max_fails, 3);
+        assert!(!qs[1].cfs.locally_predictive);
+        assert_eq!(qs[2].cfs.queue_capacity, 3);
+        assert!(!qs[4].warm && qs[5].warm);
+        // The append sits between the query groups, in declaration
+        // order, and the stream total accounts for it.
+        assert!(matches!(&s.ops[4], WorkloadOp::Append(a) if a.dataset == "a" && a.rows == 150));
+        assert_eq!(s.total_rows(&s.datasets[0]), 650);
+        assert_eq!(s.total_rows(&s.datasets[1]), 400);
+    }
+
+    #[test]
+    fn parse_rejects_bad_appends() {
+        let err = parse("dataset a family=higgs
+append a
+").unwrap_err();
+        assert!(err.to_string().contains("rows=N"), "{err}");
+        let err = parse("dataset a family=higgs
+append a rows=0
+").unwrap_err();
+        assert!(err.to_string().contains(">= 1"), "{err}");
+        let err = parse("dataset a family=higgs
+append b rows=5
+").unwrap_err();
+        assert!(err.to_string().contains("undeclared dataset"), "{err}");
+        let err = parse("dataset a family=higgs
+query a warm=maybe
+").unwrap_err();
+        assert!(err.to_string().contains("warm"), "{err}");
     }
 
     #[test]
@@ -492,7 +734,7 @@ query c
         assert!(err.to_string().contains("unknown key"), "{err}");
 
         let s = parse("dataset a family=higgs\nquery a repeat=0\n").unwrap();
-        assert_eq!(s.queries[0].repeat, 0, "repeat=0 is a valid declaration");
+        assert_eq!(queries(&s)[0].repeat, 0, "repeat=0 is a valid declaration");
 
         // Duplicate keys on one line are an error, not last-one-wins.
         let err = parse("dataset a family=higgs\nquery a repeat=3 repeat=0\n").unwrap_err();
@@ -514,7 +756,7 @@ query c
     fn comments_and_blanks_ignored() {
         let s = parse("# nothing\n\n   \ndataset a family=higgs rows=100 # inline\n").unwrap();
         assert_eq!(s.datasets.len(), 1);
-        assert!(s.queries.is_empty());
+        assert!(s.ops.is_empty());
     }
 
     #[test]
@@ -530,8 +772,19 @@ query c
             },
             Arc::new(NativeEngine),
         );
-        assert_eq!(summary.reports.len(), 5); // 2 + 1 + 1 + 1
+        assert_eq!(summary.reports.len(), 7); // 2 + 1 + 1 + 1, then 2 post-append
         assert_eq!(summary.equivalence, Some(true));
+        // Post-append queries run at version 1 of dataset a; the
+        // upgrade path reused the pre-append tables (some pair was
+        // upgraded rather than recomputed).
+        assert!(summary.reports.iter().any(|r| r.dataset_name == "a" && r.version == 1));
+        let a_upgraded: usize = summary
+            .jobs
+            .iter()
+            .filter(|j| j.dataset_name == "a")
+            .map(|j| j.upgraded_pairs)
+            .sum();
+        assert!(a_upgraded > 0, "append-then-query upgraded no cached pairs");
         // The auto tenant's jobs name their plans.
         let auto_plans: usize = summary
             .jobs

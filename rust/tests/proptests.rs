@@ -270,6 +270,111 @@ fn prop_exactness_seq_hp_vp_auto_across_shapes_and_partitions() {
 }
 
 #[test]
+fn prop_incremental_append_bit_identical() {
+    // The incremental-service exactness bar (DESIGN.md §12), as a
+    // property: split each synth family's stream into base + k appends
+    // (k in 1..4), replay register → query → (append → query)^k against
+    // one service, and require after every append that (a) the selected
+    // subset and merit are bit-identical to a from-scratch sequential
+    // run over the merged prefix, and (b) every cached SU entry equals
+    // the direct SU over exactly the row prefix it covers. Partition
+    // counts 1..8 and all four serve schemes are swept across the
+    // (family, k) grid.
+    use dicfs::cfs::best_first::CfsConfig;
+    use dicfs::correlation::su::symmetrical_uncertainty;
+    use dicfs::discretize::discretize_dataset;
+    use dicfs::serve::{DicfsService, QuerySpec, ServeScheme, ServiceConfig};
+    use dicfs::sparklet::ClusterConfig;
+
+    let mut rng = XorShift64Star::new(0xD17A5EED);
+    let families = ["higgs", "kddcup99", "epsilon"];
+    let schemes = [
+        ServeScheme::Horizontal,
+        ServeScheme::Vertical,
+        ServeScheme::Auto,
+        ServeScheme::Sequential,
+    ];
+    for (fi, family) in families.iter().enumerate() {
+        for k in 1..=4usize {
+            let partitions = 1 + (fi * 4 + k * 3) % 8; // covers 1..8 across the grid
+            let scheme = schemes[(fi + k) % schemes.len()];
+            let total = 240 + rng.next_below(160) as usize;
+            let raw = dicfs::data::synth::by_name(
+                family,
+                &dicfs::data::synth::SynthConfig {
+                    rows: total,
+                    seed: rng.next_u64(),
+                    features: Some(6),
+                },
+            );
+            let full = Arc::new(discretize_dataset(&raw).unwrap());
+
+            // k+1 random, strictly increasing cut points → base + k
+            // non-empty deltas.
+            let mut cuts: Vec<usize> = (0..k)
+                .map(|i| {
+                    let lo = (i + 1) * total / (k + 2);
+                    lo + rng.next_below((total / (k + 2)) as u64) as usize
+                })
+                .collect();
+            cuts.insert(0, total / (k + 2));
+            cuts.push(total);
+            cuts.sort_unstable();
+            cuts.dedup();
+
+            let service = DicfsService::new(ServiceConfig {
+                cluster: ClusterConfig::with_nodes(3),
+                max_inflight_jobs: 2,
+            });
+            let id = service.register_discrete(
+                &format!("{family}-{k}"),
+                Arc::new(full.slice_rows(0..cuts[0])),
+                scheme,
+                Some(partitions),
+            );
+            let spec = QuerySpec {
+                dataset: id,
+                cfs: CfsConfig::default(),
+            };
+            let _ = service.query(&spec);
+
+            for j in 0..cuts.len() - 1 {
+                service
+                    .append_discrete(id, &full.slice_rows(cuts[j]..cuts[j + 1]))
+                    .unwrap();
+                let r = service.query(&spec);
+                let prefix = full.slice_rows(0..cuts[j + 1]);
+                let scratch = dicfs::cfs::SequentialCfs::default().select_discrete(&prefix);
+                assert_eq!(
+                    r.result.selected, scratch.selected,
+                    "{family} k={k} {scheme:?} p={partitions}: subset diverged after append {j}"
+                );
+                assert_eq!(
+                    r.result.merit.to_bits(),
+                    scratch.merit.to_bits(),
+                    "{family} k={k} {scheme:?} p={partitions}: merit not bit-identical"
+                );
+            }
+
+            // The cached SU matrix is exact at whatever prefix each
+            // entry covers (entries lag only when no query touched them
+            // after the last append).
+            for ((a, b), rows, su) in service.dataset(id).unwrap().cache().snapshot() {
+                let prefix = full.slice_rows(0..rows);
+                let (x, bx) = prefix.column(a);
+                let (y, by) = prefix.column(b);
+                assert_eq!(
+                    su.to_bits(),
+                    symmetrical_uncertainty(x, bx, y, by).to_bits(),
+                    "{family} k={k}: cached SU for {:?} at {rows} rows drifted",
+                    (a, b)
+                );
+            }
+        }
+    }
+}
+
+#[test]
 fn prop_oversize_preserves_column_content() {
     let mut rng = XorShift64Star::new(137);
     for _ in 0..30 {

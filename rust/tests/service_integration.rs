@@ -143,6 +143,57 @@ fn different_config_still_shares() {
     assert!(other.cache.hits > 0, "no reuse across configs");
 }
 
+/// Incremental serving (DESIGN.md §12): an append between two bursts of
+/// concurrent queries publishes a new version; post-append selections
+/// are bit-identical to a from-scratch run over the merged rows, and
+/// the job log shows cached pairs being *upgraded* (delta-row scans)
+/// rather than recomputed.
+#[test]
+fn append_between_concurrent_bursts_is_exact_and_upgrades() {
+    for scheme in [ServeScheme::Horizontal, ServeScheme::Vertical] {
+        let svc = service(3, 2);
+        let full = discrete("higgs", 900, 10, 53);
+        let id = svc.register_discrete("tenant", Arc::new(full.slice_rows(0..700)), scheme, None);
+        let spec = QuerySpec {
+            dataset: id,
+            cfs: CfsConfig::default(),
+        };
+
+        let burst1 = svc.run_concurrent(&vec![spec; 3]);
+        let base = full.slice_rows(0..700);
+        let iso_base = SequentialCfs::default().select_discrete(&base);
+        for r in &burst1 {
+            assert_eq!(r.version, 0);
+            assert_eq!(r.result.selected, iso_base.selected, "{scheme:?} pre-append");
+        }
+
+        let v1 = svc.append_discrete(id, &full.slice_rows(700..900)).unwrap();
+        assert_eq!(v1, 1);
+
+        let burst2 = svc.run_concurrent(&vec![spec; 3]);
+        let iso_full = SequentialCfs::default().select_discrete(&full);
+        for r in &burst2 {
+            assert_eq!(r.version, 1);
+            assert_eq!(r.result.selected, iso_full.selected, "{scheme:?} post-append");
+            assert_eq!(r.result.merit.to_bits(), iso_full.merit.to_bits());
+        }
+
+        // The upgrade accounting: version-1 jobs merged delta rows into
+        // cached tables (200 rows per upgraded pair) instead of
+        // rescanning all 900.
+        let jobs = svc.job_log();
+        let upgraded: usize = jobs
+            .iter()
+            .filter(|j| j.version == 1)
+            .map(|j| j.upgraded_pairs)
+            .sum();
+        assert!(upgraded > 0, "{scheme:?}: nothing was upgraded");
+        let delta_cells: u64 = jobs.iter().map(|j| j.delta_cells).sum();
+        assert_eq!(delta_cells, 200 * upgraded as u64, "{scheme:?}");
+        assert!(jobs.iter().all(|j| j.version <= 1));
+    }
+}
+
 /// Heavier multi-tenant replay: many concurrent queries over two
 /// datasets, every selection equal to its isolated run, and the job log
 /// accounts for every computed pair.
