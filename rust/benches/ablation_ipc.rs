@@ -1,0 +1,62 @@
+//! Ablation for the multi-process executor backend (DESIGN.md §13):
+//! in-process executors vs real `dicfs --worker` OS processes vs
+//! processes with speculative re-execution, on the tall and wide shape
+//! regimes under their natural partitioning schemes.
+//!
+//! Asserted acceptance bars (when the worker binary is available):
+//! * **Exactness**: all three arms select identical features with
+//!   bit-equal merits — serialization and the driver-routed shuffle are
+//!   invisible to the algorithm.
+//! * **Measured wire traffic**: the multi-process arms report > 0
+//!   bytes actually serialized onto the worker sockets, alongside the
+//!   cost model's estimate for the same stages.
+//!
+//! Output: table + `bench_out/ablation_ipc.csv` +
+//! `bench_out/BENCH_ipc.json` (measured shuffle bytes + calibrated
+//! NetworkModel parameters per shape).
+
+use dicfs::harness::{bench_scale, ipc};
+
+fn main() {
+    let scale = bench_scale();
+    eprintln!("ablation_ipc: scale {scale}\n");
+    let rows = ipc::run(scale, 3);
+    ipc::emit(&rows);
+
+    let mut verified = 0usize;
+    for r in &rows {
+        if !r.multi_ran {
+            continue;
+        }
+        assert!(
+            r.selections_equal,
+            "{}: multi-process selections diverged from in-process",
+            r.shape
+        );
+        assert!(
+            r.merits_bit_equal,
+            "{}: multi-process merits not bit-identical",
+            r.shape
+        );
+        assert!(
+            r.measured_shuffle_bytes > 0,
+            "{}: no wire bytes measured",
+            r.shape
+        );
+        assert!(
+            r.est_shuffle_bytes > 0,
+            "{}: no shuffle estimate recorded",
+            r.shape
+        );
+        verified += 1;
+    }
+    if verified == 0 {
+        println!(
+            "ablation_ipc: SKIPPED multi-process arms (dicfs binary not built; run `cargo build` first)"
+        );
+    } else {
+        println!(
+            "ablation_ipc: PASS ({verified} shapes bit-identical across in-process / multi-process / +speculation)"
+        );
+    }
+}

@@ -25,9 +25,10 @@
 pub mod hp;
 pub mod plan;
 pub mod planner;
+pub mod remote;
 pub mod vp;
 
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 
 use crate::cfs::best_first::{BestFirstSearch, CfsConfig};
 use crate::cfs::{ArcCorrelator, Correlator};
@@ -37,6 +38,7 @@ use crate::data::columnar::DiscreteDataset;
 use crate::dicfs::plan::PlanDecision;
 use crate::dicfs::planner::AutoCorrelator;
 use crate::runtime::SuEngine;
+use crate::sparklet::remote::{ProcessPool, ProcessPoolConfig};
 use crate::sparklet::simtime::SimTime;
 use crate::sparklet::{simulate_job_time, ClusterConfig, JobMetrics, SparkletContext};
 use crate::util::timer::timed;
@@ -68,6 +70,17 @@ pub struct DiCfsConfig {
     /// partition-tuning experiment turns). Under [`Partitioning::Auto`]
     /// an override applies to both lowerings.
     pub num_partitions: Option<usize>,
+    /// Run the correlation jobs on `N` worker **OS processes** instead
+    /// of in-process threads (`--workers-proc N`): tasks, partitions,
+    /// and shuffle blocks cross real Unix sockets as serialized bytes,
+    /// so shuffle traffic is measured and the network model can be
+    /// calibrated ([`DiCfsRun::calibrated_net`]). `None` (the default)
+    /// keeps the in-process backend. Results are bit-identical either
+    /// way.
+    pub workers_proc: Option<usize>,
+    /// Speculatively re-execute straggler tasks on idle workers
+    /// (multi-process backend only; first finished attempt wins).
+    pub speculative: bool,
 }
 
 impl Default for DiCfsConfig {
@@ -77,6 +90,8 @@ impl Default for DiCfsConfig {
             cfs: CfsConfig::default(),
             cluster: ClusterConfig::default(),
             num_partitions: None,
+            workers_proc: None,
+            speculative: false,
         }
     }
 }
@@ -107,6 +122,12 @@ pub struct DiCfsRun {
     /// Planner decisions, one per correlation batch (predicted vs
     /// observed cost). Empty for the fixed hp/vp schemes.
     pub decisions: Vec<PlanDecision>,
+    /// Network model fitted to the wire samples the multi-process
+    /// backend measured (`None` for in-process runs, or when the
+    /// samples cannot identify the model — see
+    /// [`remote::spawn_installed_pool`] and
+    /// [`crate::sparklet::remote::fit_network_model`]).
+    pub calibrated_net: Option<crate::sparklet::NetworkModel>,
 }
 
 /// The distributed CFS driver.
@@ -128,40 +149,94 @@ impl DiCfs {
     }
 
     /// Run distributed selection over a discretized dataset.
+    ///
+    /// # Panics
+    ///
+    /// With [`DiCfsConfig::workers_proc`] set, panics if the worker
+    /// processes cannot be spawned (missing/non-worker executable — see
+    /// [`crate::sparklet::remote::ProcessPoolConfig::worker_exe`]).
     pub fn select(&self, data: &Arc<DiscreteDataset>) -> DiCfsRun {
         let ctx = SparkletContext::new(self.config.cluster);
         let m = data.num_features();
         let cluster_secs = std::rc::Rc::new(std::cell::Cell::new(0.0f64));
         // Construction happens *inside* the timed window (vp pays its
-        // columnar shuffle there, as before); the handle escapes through
-        // the cell so the planner's decision log can be read afterwards.
+        // columnar shuffle there, and the multi-process backend its
+        // dataset install, as before); the handles escape through the
+        // cells so the planner's decision log and the pool's wire
+        // samples can be read afterwards.
         let auto: std::cell::RefCell<Option<Arc<AutoCorrelator>>> = std::cell::RefCell::new(None);
+        let remote_auto: std::cell::RefCell<Option<Arc<remote::RemoteAuto>>> =
+            std::cell::RefCell::new(None);
+        let remote_pool: std::cell::RefCell<Option<Arc<Mutex<ProcessPool>>>> =
+            std::cell::RefCell::new(None);
 
         let (result, wall_secs) = timed(|| {
-            let inner: Box<dyn Correlator> = match self.config.partitioning {
-                Partitioning::Horizontal => Box::new(hp::HorizontalCorrelator::new(
+            let inner: Box<dyn Correlator> = if let Some(workers) = self.config.workers_proc {
+                let pool = remote::spawn_installed_pool(
                     &ctx,
-                    Arc::clone(data),
-                    Arc::clone(&self.engine),
-                    self.config.num_partitions.unwrap_or_else(|| {
-                        self.config.cluster.default_row_partitions(data.num_rows())
-                    }),
-                )),
-                Partitioning::Vertical => Box::new(vp::VerticalCorrelator::new(
-                    &ctx,
-                    Arc::clone(data),
-                    Arc::clone(&self.engine),
-                    self.config.num_partitions.unwrap_or(m),
-                )),
-                Partitioning::Auto => {
-                    let backend = Arc::new(AutoCorrelator::new(
+                    data.as_ref(),
+                    ProcessPoolConfig {
+                        workers,
+                        speculation: self.config.speculative,
+                        worker_exe: None,
+                    },
+                )
+                .expect("spawn multi-process executors");
+                *remote_pool.borrow_mut() = Some(Arc::clone(&pool));
+                match self.config.partitioning {
+                    Partitioning::Horizontal => Box::new(ArcCorrelator(Arc::new(
+                        remote::RemoteCorrelator::new(
+                            &ctx,
+                            Arc::clone(data),
+                            pool,
+                            plan::Strategy::Hp,
+                        ),
+                    ))),
+                    Partitioning::Vertical => Box::new(ArcCorrelator(Arc::new(
+                        remote::RemoteCorrelator::new(
+                            &ctx,
+                            Arc::clone(data),
+                            pool,
+                            plan::Strategy::Vp,
+                        ),
+                    ))),
+                    Partitioning::Auto => {
+                        let backend = Arc::new(remote::RemoteAuto::new(
+                            &ctx,
+                            Arc::clone(data),
+                            pool,
+                            self.config.num_partitions,
+                        ));
+                        *remote_auto.borrow_mut() = Some(Arc::clone(&backend));
+                        Box::new(ArcCorrelator(backend))
+                    }
+                }
+            } else {
+                match self.config.partitioning {
+                    Partitioning::Horizontal => Box::new(hp::HorizontalCorrelator::new(
                         &ctx,
                         Arc::clone(data),
                         Arc::clone(&self.engine),
-                        self.config.num_partitions,
-                    ));
-                    *auto.borrow_mut() = Some(Arc::clone(&backend));
-                    Box::new(ArcCorrelator(backend))
+                        self.config.num_partitions.unwrap_or_else(|| {
+                            self.config.cluster.default_row_partitions(data.num_rows())
+                        }),
+                    )),
+                    Partitioning::Vertical => Box::new(vp::VerticalCorrelator::new(
+                        &ctx,
+                        Arc::clone(data),
+                        Arc::clone(&self.engine),
+                        self.config.num_partitions.unwrap_or(m),
+                    )),
+                    Partitioning::Auto => {
+                        let backend = Arc::new(AutoCorrelator::new(
+                            &ctx,
+                            Arc::clone(data),
+                            Arc::clone(&self.engine),
+                            self.config.num_partitions,
+                        ));
+                        *auto.borrow_mut() = Some(Arc::clone(&backend));
+                        Box::new(ArcCorrelator(backend))
+                    }
                 }
             };
             let mut correlator = TimedCorrelator::new(inner);
@@ -183,15 +258,20 @@ impl DiCfs {
         // the virtual cluster.)
         let driver_secs = (wall_secs - cluster_secs.get()).max(0.0);
         let sim = simulate_job_time(&metrics, &self.config.cluster, driver_secs);
+        let decisions = match (auto.into_inner(), remote_auto.into_inner()) {
+            (Some(a), _) => a.planner().decisions(),
+            (None, Some(r)) => r.planner().decisions(),
+            (None, None) => Vec::new(),
+        };
         DiCfsRun {
             result,
             metrics,
             sim,
             wall_secs,
-            decisions: auto
+            decisions,
+            calibrated_net: remote_pool
                 .into_inner()
-                .map(|a| a.planner().decisions())
-                .unwrap_or_default(),
+                .and_then(|p| p.lock().unwrap().calibrated_network()),
         }
     }
 }

@@ -1,0 +1,455 @@
+//! DiCFS over the multi-process executor backend
+//! ([`crate::sparklet::remote`]).
+//!
+//! The in-process hp/vp correlators move partial tables and columns as
+//! `Vec` handles; here the same §5 jobs run against worker **OS
+//! processes**, so every payload is serialized for real:
+//!
+//! * **hp** — the pair list and row ranges go out as [`RemoteTask::HpCount`]
+//!   frames; each worker counts its rows into partial tables and ships
+//!   them back as bytes. The driver plays the shuffle's role: it regroups
+//!   the serialized partial tables by pair and re-dispatches the groups
+//!   as [`RemoteTask::HpMergeSu`] reduce tasks (Eq. 4 merge + SU finish
+//!   on the workers). The bytes of the map-output frames are the stage's
+//!   **measured** shuffle volume.
+//! * **vp** — pairs are oriented by [`plan::assign_sides`] and bucketed
+//!   by owner feature onto workers ([`RemoteTask::VpSu`]); each worker
+//!   computes SU from its complete columns, exactly the §5.2 shape (the
+//!   dataset install shipped every column to every worker up front, the
+//!   broadcast-heavy regime the paper describes).
+//!
+//! Bit-identity with the in-process backends is structural, not
+//! incidental: both run [`execute_task`](crate::sparklet::remote::execute_task)
+//! lowerings through the same [`NativeEngine`](crate::runtime::NativeEngine)
+//! kernels, u64 table counts are exact and merge-order independent, and
+//! SU scalars are computed from identical tables or identical full
+//! columns. The `ipc` integration tests pin the end-to-end claim:
+//! multi-process DiCFS selects the same features with the same merits as
+//! in-process DiCFS, for hp, vp, and auto.
+//!
+//! [`RemoteAuto`] reuses the adaptive [`Planner`] unchanged — candidate
+//! plans are priced with the same cost model, batches are observed by
+//! replaying their recorded stages (which now carry *measured* wire
+//! bytes) on the virtual cluster.
+
+use std::collections::BTreeMap;
+use std::ops::Range;
+use std::sync::{Arc, Mutex};
+
+use crate::cfs::SharedCorrelator;
+use crate::core::FeatureId;
+use crate::correlation::ContingencyTable;
+use crate::data::columnar::DiscreteDataset;
+use crate::dicfs::plan::{self, PlanDecision, Strategy};
+use crate::dicfs::planner::{Planner, PlannerCalibration};
+use crate::sparklet::remote::{
+    DatasetPayload, IndexedPair, ProcessPool, ProcessPoolConfig, RemoteTask, StageOutcome,
+    TaskResult,
+};
+use crate::sparklet::{
+    observe_stages, simulate_job_time, PlanObserver, SparkletContext, StageKind, StageMetrics,
+    StageRecorder,
+};
+
+/// Spawn the worker processes, ship the dataset to each, and record the
+/// install as a shuffle stage: estimated bytes = the dataset's in-memory
+/// footprint, measured bytes = the serialized frame payloads that
+/// actually crossed the sockets. The pool is shared (`Arc<Mutex>`) so
+/// hp, vp, and auto lowerings all dispatch onto the same workers.
+pub fn spawn_installed_pool(
+    ctx: &Arc<SparkletContext>,
+    data: &DiscreteDataset,
+    cfg: ProcessPoolConfig,
+) -> std::io::Result<Arc<Mutex<ProcessPool>>> {
+    let mut pool = ProcessPool::new(cfg)?;
+    let workers = pool.alive_workers();
+    let shipped = pool.install(&DatasetPayload::from_dataset(data))?;
+    ctx.record_stage(StageMetrics {
+        label: "ipcInstall".into(),
+        kind: StageKind::Shuffle,
+        fused_ops: 1,
+        task_secs: vec![],
+        reduce_task_secs: vec![],
+        retries: 0,
+        // The in-memory footprint is what an estimator would charge for
+        // replicating the dataset to one worker; the wire measured it
+        // once per worker.
+        shuffle_bytes: data.footprint_bytes() * workers,
+        measured_shuffle_bytes: Some(shipped),
+        collect_bytes: 0,
+    });
+    Ok(Arc::new(Mutex::new(pool)))
+}
+
+/// One fixed-scheme distributed correlator over a shared process pool.
+/// `mode` picks the §5 lowering (hp table shuffle / vp owner buckets);
+/// the dataset itself already lives on every worker.
+pub struct RemoteCorrelator {
+    ctx: Arc<SparkletContext>,
+    data: Arc<DiscreteDataset>,
+    pool: Arc<Mutex<ProcessPool>>,
+    mode: Strategy,
+}
+
+impl RemoteCorrelator {
+    /// Correlator in the given mode over an installed pool
+    /// ([`spawn_installed_pool`]).
+    pub fn new(
+        ctx: &Arc<SparkletContext>,
+        data: Arc<DiscreteDataset>,
+        pool: Arc<Mutex<ProcessPool>>,
+        mode: Strategy,
+    ) -> Self {
+        Self {
+            ctx: Arc::clone(ctx),
+            data,
+            pool,
+            mode,
+        }
+    }
+
+    /// Encode request pairs for the wire, tagged with their batch index
+    /// so out-of-order completion cannot permute results.
+    fn wire_pairs(pairs: &[(FeatureId, FeatureId)]) -> Vec<IndexedPair> {
+        pairs
+            .iter()
+            .enumerate()
+            .map(|(i, &(a, b))| (i as u64, (a as u64, b as u64)))
+            .collect()
+    }
+
+    /// Contiguous row chunks of `rows`, one map task per live worker.
+    fn row_chunks(rows: &Range<usize>, workers: usize) -> Vec<Range<usize>> {
+        let len = rows.len();
+        let parts = workers.clamp(1, len.max(1));
+        let chunk = len.div_ceil(parts).max(1);
+        (0..parts)
+            .map(|p| {
+                (rows.start + p * chunk).min(rows.end)..(rows.start + (p + 1) * chunk).min(rows.end)
+            })
+            .filter(|r| !r.is_empty())
+            .collect()
+    }
+
+    /// The hp map wave + driver-routed shuffle: count partial tables on
+    /// the workers, regroup the serialized map output by pair, and
+    /// return the groups plus the wave's measured costs. The estimated
+    /// shuffle volume prices each partial table at its wire size — the
+    /// same model the in-process hp job uses — while the measured volume
+    /// is the byte count of the frames that actually arrived.
+    #[allow(clippy::type_complexity)]
+    fn hp_map_wave(
+        &self,
+        pool: &mut ProcessPool,
+        pairs: &[IndexedPair],
+        rows: &Range<usize>,
+    ) -> (Vec<(u64, Vec<ContingencyTable>)>, StageOutcome, usize) {
+        let tasks: Vec<RemoteTask> = Self::row_chunks(rows, pool.alive_workers())
+            .into_iter()
+            .map(|rows| RemoteTask::HpCount {
+                pairs: pairs.to_vec(),
+                rows,
+            })
+            .collect();
+        let out = pool.run_tasks(&tasks).expect("multi-process hp map wave");
+        let mut groups: BTreeMap<u64, Vec<ContingencyTable>> = BTreeMap::new();
+        let mut est_shuffle = 0usize;
+        let StageOutcome {
+            results,
+            task_secs,
+            retries,
+            speculative,
+            bytes_sent,
+            bytes_received,
+        } = out;
+        for r in results {
+            let TaskResult::Tables(tables) = r else {
+                unreachable!("HpCount returns tables")
+            };
+            for (idx, t) in tables {
+                est_shuffle += t.wire_bytes();
+                groups.entry(idx).or_default().push(t);
+            }
+        }
+        let wave = StageOutcome {
+            results: vec![],
+            task_secs,
+            retries,
+            speculative,
+            bytes_sent,
+            bytes_received,
+        };
+        (groups.into_iter().collect(), wave, est_shuffle)
+    }
+
+    /// Split shuffle groups into one reduce task per worker (contiguous
+    /// chunks of the pair-index order).
+    fn reduce_tasks(
+        groups: Vec<(u64, Vec<ContingencyTable>)>,
+        workers: usize,
+        merge_only: bool,
+    ) -> Vec<RemoteTask> {
+        let reducers = workers.clamp(1, groups.len().max(1));
+        let per = groups.len().div_ceil(reducers).max(1);
+        groups
+            .chunks(per)
+            .map(|g| {
+                if merge_only {
+                    RemoteTask::HpMergeTables { groups: g.to_vec() }
+                } else {
+                    RemoteTask::HpMergeSu { groups: g.to_vec() }
+                }
+            })
+            .collect()
+    }
+
+    /// The hp SU job: count → driver-routed shuffle → merge+SU, recorded
+    /// as one shuffle stage with the estimated-vs-measured byte split.
+    fn hp_batch(&self, pairs: &[(FeatureId, FeatureId)]) -> Vec<f64> {
+        let wire = Self::wire_pairs(pairs);
+        let mut pool = self.pool.lock().unwrap();
+        let (groups, map_wave, est_shuffle) =
+            self.hp_map_wave(&mut pool, &wire, &(0..self.data.num_rows()));
+        let tasks = Self::reduce_tasks(groups, pool.alive_workers(), false);
+        let red = pool.run_tasks(&tasks).expect("multi-process hp reduce wave");
+        drop(pool);
+
+        let mut out = vec![0.0f64; pairs.len()];
+        for r in &red.results {
+            let TaskResult::Su(sus) = r else {
+                unreachable!("HpMergeSu returns SU scalars")
+            };
+            for &(idx, su) in sus {
+                out[idx as usize] = su;
+            }
+        }
+        // Driver→worker task frames are the job's broadcast-shaped
+        // traffic (pair lists, shuffle groups); price them as such.
+        self.ctx.broadcast((), map_wave.bytes_sent + red.bytes_sent);
+        self.ctx.record_stage(StageMetrics {
+            label: "ipcLocalCTables+mergeCTables".into(),
+            kind: StageKind::Shuffle,
+            fused_ops: 2,
+            task_secs: map_wave.task_secs,
+            reduce_task_secs: red.task_secs,
+            retries: map_wave.retries + map_wave.speculative + red.retries + red.speculative,
+            shuffle_bytes: est_shuffle,
+            measured_shuffle_bytes: Some(map_wave.bytes_received),
+            collect_bytes: red.bytes_received,
+        });
+        out
+    }
+
+    /// The vp SU job: owner-bucketed complete-column SU on the workers,
+    /// recorded as one map stage (no shuffle — the columns were shipped
+    /// at install time, §5.2's one-time redistribution).
+    fn vp_batch(&self, pairs: &[(FeatureId, FeatureId)]) -> Vec<f64> {
+        let oriented = plan::assign_sides(pairs);
+        let mut pool = self.pool.lock().unwrap();
+        let workers = pool.alive_workers().max(1);
+        let mut buckets: Vec<Vec<IndexedPair>> = vec![Vec::new(); workers];
+        for (i, &(owner, other)) in oriented.iter().enumerate() {
+            buckets[owner % workers].push((i as u64, (owner as u64, other as u64)));
+        }
+        let tasks: Vec<RemoteTask> = buckets
+            .into_iter()
+            .filter(|b| !b.is_empty())
+            .map(|pairs| RemoteTask::VpSu { pairs })
+            .collect();
+        let run = pool.run_tasks(&tasks).expect("multi-process vp wave");
+        drop(pool);
+
+        let mut out = vec![0.0f64; pairs.len()];
+        for r in &run.results {
+            let TaskResult::Su(sus) = r else {
+                unreachable!("VpSu returns SU scalars")
+            };
+            for &(idx, su) in sus {
+                out[idx as usize] = su;
+            }
+        }
+        self.ctx.broadcast((), run.bytes_sent);
+        self.ctx.record_stage(StageMetrics {
+            label: "ipcComputeSU".into(),
+            kind: StageKind::Map,
+            fused_ops: 1,
+            task_secs: run.task_secs,
+            reduce_task_secs: vec![],
+            retries: run.retries + run.speculative,
+            shuffle_bytes: 0,
+            measured_shuffle_bytes: None,
+            collect_bytes: run.bytes_received,
+        });
+        out
+    }
+}
+
+impl SharedCorrelator for RemoteCorrelator {
+    fn compute_batch(&self, pairs: &[(FeatureId, FeatureId)]) -> Vec<f64> {
+        if pairs.is_empty() {
+            return vec![];
+        }
+        match self.mode {
+            Strategy::Hp => self.hp_batch(pairs),
+            Strategy::Vp => self.vp_batch(pairs),
+        }
+    }
+
+    fn supports_ctables(&self) -> bool {
+        true
+    }
+
+    /// The remote **table job**: the hp count/merge lowering regardless
+    /// of mode (merged tables are layout-independent — u64 counts), over
+    /// an arbitrary row range, with [`RemoteTask::HpMergeTables`] as the
+    /// reduce so the merged tables come back whole.
+    fn compute_ctables(
+        &self,
+        pairs: &[(FeatureId, FeatureId)],
+        rows: Range<usize>,
+    ) -> Vec<ContingencyTable> {
+        if pairs.is_empty() {
+            return vec![];
+        }
+        debug_assert!(rows.end <= self.data.num_rows());
+        let wire = Self::wire_pairs(pairs);
+        let mut pool = self.pool.lock().unwrap();
+        let (groups, map_wave, est_shuffle) = self.hp_map_wave(&mut pool, &wire, &rows);
+        let tasks = Self::reduce_tasks(groups, pool.alive_workers(), true);
+        let red = pool.run_tasks(&tasks).expect("multi-process table merge wave");
+        drop(pool);
+
+        let mut out: Vec<Option<ContingencyTable>> = vec![None; pairs.len()];
+        for r in red.results {
+            let TaskResult::Tables(tables) = r else {
+                unreachable!("HpMergeTables returns tables")
+            };
+            for (idx, t) in tables {
+                out[idx as usize] = Some(t);
+            }
+        }
+        self.ctx.broadcast((), map_wave.bytes_sent + red.bytes_sent);
+        self.ctx.record_stage(StageMetrics {
+            label: "ipcLocalCTablesDelta+mergeCTables".into(),
+            kind: StageKind::Shuffle,
+            fused_ops: 2,
+            task_secs: map_wave.task_secs,
+            reduce_task_secs: red.task_secs,
+            retries: map_wave.retries + map_wave.speculative + red.retries + red.speculative,
+            shuffle_bytes: est_shuffle,
+            measured_shuffle_bytes: Some(map_wave.bytes_received),
+            collect_bytes: red.bytes_received,
+        });
+        out.into_iter()
+            .map(|t| t.expect("every pair merged"))
+            .collect()
+    }
+}
+
+/// The adaptive backend over the process pool: the same [`Planner`] that
+/// routes in-process batches prices hp vs vp here, and batches are
+/// observed by replaying their recorded stages — which now carry
+/// measured wire bytes — on the virtual cluster. The vp "layout" is
+/// marked built from the start: the install already shipped complete
+/// columns to every worker, so vp candidates carry no setup charge.
+pub struct RemoteAuto {
+    planner: Planner,
+    hp: RemoteCorrelator,
+    vp: RemoteCorrelator,
+}
+
+impl RemoteAuto {
+    /// Auto backend over an installed pool. `partitions` overrides the
+    /// planner's assumed partition counts for pricing (each scheme's
+    /// default applies when `None`), matching the in-process auto knob.
+    pub fn new(
+        ctx: &Arc<SparkletContext>,
+        data: Arc<DiscreteDataset>,
+        pool: Arc<Mutex<ProcessPool>>,
+        partitions: Option<usize>,
+    ) -> Self {
+        let planner = Planner::new(Arc::clone(&data), ctx.cluster, partitions, partitions);
+        planner.mark_vp_built();
+        Self {
+            planner,
+            hp: RemoteCorrelator::new(ctx, Arc::clone(&data), Arc::clone(&pool), Strategy::Hp),
+            vp: RemoteCorrelator::new(ctx, data, pool, Strategy::Vp),
+        }
+    }
+
+    /// The planner (decision log, calibration state).
+    pub fn planner(&self) -> &Planner {
+        &self.planner
+    }
+}
+
+impl SharedCorrelator for RemoteAuto {
+    fn compute_batch(&self, pairs: &[(FeatureId, FeatureId)]) -> Vec<f64> {
+        if pairs.is_empty() {
+            return vec![];
+        }
+        let planned = self.planner.plan_batch(pairs);
+        let recorder = Arc::new(StageRecorder::new());
+        let out = {
+            let _guard = observe_stages(Arc::clone(&recorder) as Arc<dyn PlanObserver>);
+            match planned.strategy {
+                Strategy::Hp => self.hp.compute_batch(pairs),
+                Strategy::Vp => self.vp.compute_batch(pairs),
+            }
+        };
+        let sim = simulate_job_time(&recorder.metrics(), self.planner.cluster(), 0.0);
+        self.planner.observe(&planned, &sim);
+        out
+    }
+
+    fn supports_ctables(&self) -> bool {
+        true
+    }
+
+    /// Table jobs lower to the hp count/merge wave in either mode (see
+    /// [`RemoteCorrelator::compute_ctables`]), so they bypass the hp-vs-vp
+    /// decision — and are deliberately not logged as one.
+    fn compute_ctables(
+        &self,
+        pairs: &[(FeatureId, FeatureId)],
+        rows: Range<usize>,
+    ) -> Vec<ContingencyTable> {
+        self.hp.compute_ctables(pairs, rows)
+    }
+
+    fn drain_plan_decisions(&self) -> Vec<PlanDecision> {
+        self.planner.drain_decisions()
+    }
+
+    fn planner_calibration(&self) -> Option<PlannerCalibration> {
+        Some(self.planner.calibration())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn missing_worker_executable_fails_to_spawn() {
+        let cfg = ProcessPoolConfig {
+            workers: 1,
+            speculation: false,
+            worker_exe: Some("/nonexistent/definitely-not-a-binary".into()),
+        };
+        assert!(ProcessPool::new(cfg).is_err());
+    }
+
+    #[test]
+    fn non_worker_executable_fails_handshake() {
+        // `/bin/sh --worker <sock>` exits immediately instead of
+        // connecting; the spawn path must detect the dead child rather
+        // than hang in accept().
+        let cfg = ProcessPoolConfig {
+            workers: 1,
+            speculation: false,
+            worker_exe: Some("/bin/sh".into()),
+        };
+        assert!(ProcessPool::new(cfg).is_err());
+    }
+}

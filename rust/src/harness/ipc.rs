@@ -1,0 +1,363 @@
+//! Multi-process executor ablation (DESIGN.md §13): in-process
+//! executors vs real `dicfs --worker` OS processes vs processes with
+//! speculative re-execution, on the tall and wide shape regimes.
+//!
+//! This is the harness behind `cargo bench --bench ablation_ipc`. The
+//! bar it enforces (in the bench): every arm selects bit-identical
+//! features and merits, and the multi-process arms report *measured*
+//! wire bytes alongside the model's estimate, plus the NetworkModel
+//! parameters calibrated from the wire samples.
+//!
+//! Multi-process arms need the real `dicfs` binary on disk (bench
+//! executables are libtest-style binaries that do not speak the worker
+//! protocol). When it cannot be found the arms are skipped with a note
+//! instead of failing, so `cargo bench` stays runnable from a clean
+//! checkout; CI builds the binary first.
+
+use std::path::PathBuf;
+use std::sync::Arc;
+
+use crate::data::synth::{by_name, SynthConfig};
+use crate::dicfs::{DiCfs, DiCfsConfig, DiCfsRun, Partitioning};
+use crate::discretize::discretize_dataset;
+use crate::harness::report;
+use crate::util::chart::table;
+
+/// One shape's three-arm comparison.
+#[derive(Debug, Clone)]
+pub struct IpcRow {
+    /// Shape regime (`tall` / `wide`).
+    pub shape: &'static str,
+    /// Instances.
+    pub rows: usize,
+    /// Features.
+    pub features: usize,
+    /// Partitioning scheme forced for this shape (`hp` / `vp`).
+    pub scheme: &'static str,
+    /// Whether the multi-process arms actually ran (worker binary found).
+    pub multi_ran: bool,
+    /// Wall seconds, in-process executors.
+    pub in_secs: f64,
+    /// Wall seconds, multi-process executors (NaN when skipped).
+    pub multi_secs: f64,
+    /// Wall seconds, multi-process + speculation (NaN when skipped).
+    pub spec_secs: f64,
+    /// Cost-model estimate of shuffle traffic in the multi-process run.
+    pub est_shuffle_bytes: usize,
+    /// Bytes actually serialized onto the worker sockets.
+    pub measured_shuffle_bytes: usize,
+    /// Task re-executions (crash retries + speculative duplicates).
+    pub retries: usize,
+    /// Calibrated wire bandwidth in bytes/second, when identifiable.
+    pub net_bandwidth: Option<f64>,
+    /// Calibrated per-transfer latency in seconds, when identifiable.
+    pub net_latency: Option<f64>,
+    /// All arms selected identical features.
+    pub selections_equal: bool,
+    /// All arms produced bit-equal merits.
+    pub merits_bit_equal: bool,
+}
+
+/// A shape regime in the sweep.
+struct Shape {
+    name: &'static str,
+    family: &'static str,
+    rows: usize,
+    features: usize,
+    partitioning: Partitioning,
+    scheme: &'static str,
+}
+
+/// The two regimes where the paper's §6 comparison separates the
+/// schemes; each runs under its natural partitioning so the wire
+/// carries that scheme's characteristic traffic (hp: partial
+/// contingency tables, vp: task dispatch only).
+fn shapes(scale: f64) -> Vec<Shape> {
+    let r = |base: usize| ((base as f64 * scale) as usize).max(64);
+    vec![
+        Shape {
+            name: "tall",
+            family: "higgs",
+            rows: r(6_000),
+            features: 12,
+            partitioning: Partitioning::Horizontal,
+            scheme: "hp",
+        },
+        Shape {
+            name: "wide",
+            family: "wide",
+            rows: r(150),
+            features: 400,
+            partitioning: Partitioning::Vertical,
+            scheme: "vp",
+        },
+    ]
+}
+
+/// Locate the real `dicfs` binary for use as the worker executable.
+///
+/// `DICFS_WORKER_EXE` wins when set and present. Otherwise bench/test
+/// executables live in `target/<profile>/deps/`, so the binary built by
+/// `cargo build` sits one directory up. Returns `None` when neither
+/// resolves to an existing file.
+pub fn resolve_worker_exe() -> Option<PathBuf> {
+    if let Some(p) = std::env::var_os("DICFS_WORKER_EXE") {
+        let p = PathBuf::from(p);
+        return p.is_file().then_some(p);
+    }
+    let exe = std::env::current_exe().ok()?;
+    let mut dir = exe.parent()?.to_path_buf();
+    if dir.file_name().is_some_and(|n| n == "deps") {
+        dir.pop();
+    }
+    let cand = dir.join(format!("dicfs{}", std::env::consts::EXE_SUFFIX));
+    cand.is_file().then_some(cand)
+}
+
+/// Run the three-arm comparison with `workers` executor processes.
+pub fn run(scale: f64, workers: usize) -> Vec<IpcRow> {
+    let worker_exe = resolve_worker_exe();
+    match &worker_exe {
+        Some(exe) => std::env::set_var("DICFS_WORKER_EXE", exe),
+        None => eprintln!(
+            "ipc: dicfs worker binary not found (run `cargo build` first); \
+             multi-process arms skipped"
+        ),
+    }
+    shapes(scale)
+        .into_iter()
+        .map(|s| {
+            let ds = by_name(
+                s.family,
+                &SynthConfig {
+                    rows: s.rows,
+                    seed: 0xC7 + s.name.len() as u64,
+                    features: Some(s.features),
+                },
+            );
+            let dd = Arc::new(discretize_dataset(&ds).unwrap());
+            let select = |proc: Option<usize>, speculative: bool| -> DiCfsRun {
+                let mut cfg = DiCfsConfig::for_scheme(s.partitioning, workers);
+                cfg.workers_proc = proc;
+                cfg.speculative = speculative;
+                DiCfs::native(cfg).select(&dd)
+            };
+            let inp = select(None, false);
+            if worker_exe.is_none() {
+                return IpcRow {
+                    shape: s.name,
+                    rows: s.rows,
+                    features: s.features,
+                    scheme: s.scheme,
+                    multi_ran: false,
+                    in_secs: inp.wall_secs,
+                    multi_secs: f64::NAN,
+                    spec_secs: f64::NAN,
+                    est_shuffle_bytes: 0,
+                    measured_shuffle_bytes: 0,
+                    retries: 0,
+                    net_bandwidth: None,
+                    net_latency: None,
+                    selections_equal: true,
+                    merits_bit_equal: true,
+                };
+            }
+            let multi = select(Some(workers), false);
+            let spec = select(Some(workers), true);
+            let row = IpcRow {
+                shape: s.name,
+                rows: s.rows,
+                features: s.features,
+                scheme: s.scheme,
+                multi_ran: true,
+                in_secs: inp.wall_secs,
+                multi_secs: multi.wall_secs,
+                spec_secs: spec.wall_secs,
+                est_shuffle_bytes: multi.metrics.total_shuffle_bytes(),
+                measured_shuffle_bytes: multi.metrics.total_measured_shuffle_bytes(),
+                retries: multi.metrics.total_retries() + spec.metrics.total_retries(),
+                net_bandwidth: multi.calibrated_net.map(|n| n.bandwidth_bytes_per_s),
+                net_latency: multi.calibrated_net.map(|n| n.latency_s),
+                selections_equal: multi.result.selected == inp.result.selected
+                    && spec.result.selected == inp.result.selected,
+                merits_bit_equal: multi.result.merit.to_bits() == inp.result.merit.to_bits()
+                    && spec.result.merit.to_bits() == inp.result.merit.to_bits(),
+            };
+            eprintln!(
+                "ipc {:>5} ({}x{}, {}): in {:>8} multi {:>8} spec {:>8} wire {} B (est {} B)",
+                row.shape,
+                row.rows,
+                row.features,
+                row.scheme,
+                report::fmt_secs(row.in_secs),
+                report::fmt_secs(row.multi_secs),
+                report::fmt_secs(row.spec_secs),
+                row.measured_shuffle_bytes,
+                row.est_shuffle_bytes
+            );
+            row
+        })
+        .collect()
+}
+
+/// A finite float as a JSON number, NaN as `null`.
+fn jnum(v: f64) -> String {
+    if v.is_finite() {
+        format!("{v:.6}")
+    } else {
+        "null".to_string()
+    }
+}
+
+/// An optional float as a JSON number or `null`.
+fn jopt(v: Option<f64>) -> String {
+    v.map_or_else(|| "null".to_string(), |v| format!("{v:.6e}"))
+}
+
+/// Emit the comparison table, `ablation_ipc.csv`, and the
+/// `BENCH_ipc.json` record (measured wire bytes + calibrated
+/// NetworkModel parameters per shape).
+pub fn emit(rows: &[IpcRow]) {
+    let csv: Vec<Vec<String>> = rows
+        .iter()
+        .map(|r| {
+            vec![
+                r.shape.to_string(),
+                r.rows.to_string(),
+                r.features.to_string(),
+                r.scheme.to_string(),
+                r.multi_ran.to_string(),
+                format!("{:.6}", r.in_secs),
+                format!("{:.6}", r.multi_secs),
+                format!("{:.6}", r.spec_secs),
+                r.est_shuffle_bytes.to_string(),
+                r.measured_shuffle_bytes.to_string(),
+                r.retries.to_string(),
+                jopt(r.net_bandwidth),
+                jopt(r.net_latency),
+                r.selections_equal.to_string(),
+                r.merits_bit_equal.to_string(),
+            ]
+        })
+        .collect();
+    let path = report::write_csv(
+        "ablation_ipc.csv",
+        &[
+            "shape",
+            "rows",
+            "features",
+            "scheme",
+            "multi_ran",
+            "in_secs",
+            "multi_secs",
+            "spec_secs",
+            "est_shuffle_bytes",
+            "measured_shuffle_bytes",
+            "retries",
+            "net_bandwidth_bytes_per_s",
+            "net_latency_s",
+            "selections_equal",
+            "merits_bit_equal",
+        ],
+        &csv,
+    );
+
+    let trows: Vec<Vec<String>> = rows
+        .iter()
+        .map(|r| {
+            vec![
+                r.shape.to_string(),
+                format!("{}x{}", r.rows, r.features),
+                r.scheme.to_string(),
+                report::fmt_secs(r.in_secs),
+                report::fmt_secs(r.multi_secs),
+                report::fmt_secs(r.spec_secs),
+                format!("{}", r.measured_shuffle_bytes),
+                format!("{}", r.est_shuffle_bytes),
+                r.net_bandwidth
+                    .map_or_else(|| "-".to_string(), |b| format!("{b:.2e} B/s")),
+            ]
+        })
+        .collect();
+    println!(
+        "{}",
+        table(
+            &[
+                "shape", "n x m", "scheme", "in s", "multi s", "spec s", "wire B", "est B", "net"
+            ],
+            &trows
+        )
+    );
+    println!("  data: {}", path.display());
+
+    let shapes_json: Vec<String> = rows
+        .iter()
+        .map(|r| {
+            format!(
+                concat!(
+                    "    {{\"shape\": \"{}\", \"rows\": {}, \"features\": {}, ",
+                    "\"scheme\": \"{}\", \"multi_ran\": {}, ",
+                    "\"in_secs\": {}, \"multi_secs\": {}, \"spec_secs\": {}, ",
+                    "\"est_shuffle_bytes\": {}, \"measured_shuffle_bytes\": {}, ",
+                    "\"retries\": {}, \"net_bandwidth_bytes_per_s\": {}, ",
+                    "\"net_latency_s\": {}, \"selections_equal\": {}, ",
+                    "\"merits_bit_equal\": {}}}"
+                ),
+                r.shape,
+                r.rows,
+                r.features,
+                r.scheme,
+                r.multi_ran,
+                jnum(r.in_secs),
+                jnum(r.multi_secs),
+                jnum(r.spec_secs),
+                r.est_shuffle_bytes,
+                r.measured_shuffle_bytes,
+                r.retries,
+                jopt(r.net_bandwidth),
+                jopt(r.net_latency),
+                r.selections_equal,
+                r.merits_bit_equal
+            )
+        })
+        .collect();
+    let json = format!(
+        "{{\n  \"bench\": \"ipc\",\n  \"shapes\": [\n{}\n  ]\n}}\n",
+        shapes_json.join(",\n")
+    );
+    let json_path = report::out_dir().join("BENCH_ipc.json");
+    std::fs::write(&json_path, json).expect("write BENCH_ipc.json");
+    println!("  perf trajectory: {}\n", json_path.display());
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shapes_cover_tall_and_wide() {
+        let s = shapes(0.05);
+        assert_eq!(s.len(), 2);
+        assert!(s[0].rows > s[0].features, "tall must be row-dominant");
+        assert!(s[1].features > s[1].rows, "wide must be feature-dominant");
+        assert_eq!(s[0].scheme, "hp");
+        assert_eq!(s[1].scheme, "vp");
+    }
+
+    #[test]
+    fn worker_exe_resolution_is_fail_soft() {
+        // Must never panic; may or may not find the binary depending on
+        // what has been built.
+        if let Some(p) = resolve_worker_exe() {
+            assert!(p.is_file());
+        }
+    }
+
+    #[test]
+    fn json_helpers_emit_valid_tokens() {
+        assert_eq!(jnum(f64::NAN), "null");
+        assert_eq!(jnum(1.5), "1.500000");
+        assert_eq!(jopt(None), "null");
+        assert!(jopt(Some(1.25e9)).contains('e'));
+    }
+}

@@ -14,6 +14,7 @@
 //! | multi-query service (DESIGN.md §10) | — | `cargo bench --bench ablation_service` |
 //! | adaptive partitioning planner (DESIGN.md §11) | [`planner`] | `cargo bench --bench ablation_planner` |
 //! | incremental append vs cold re-registration (DESIGN.md §12) | — | `cargo bench --bench ablation_incremental` |
+//! | multi-process executors (DESIGN.md §13) | [`ipc`] | `cargo bench --bench ablation_ipc` |
 //!
 //! Each run writes a CSV under `bench_out/` and prints an ASCII chart, so
 //! `cargo bench` output is the full reproduction report. The planner and
@@ -25,6 +26,7 @@ pub mod ablation;
 pub mod fig3;
 pub mod fig4;
 pub mod fig5;
+pub mod ipc;
 pub mod planner;
 pub mod report;
 pub mod table2;

@@ -35,6 +35,7 @@ USAGE:
   dicfs select   [--family NAME | --csv FILE] [--partitioning seq|hp|vp|auto]
                  [--nodes N] [--engine native|pjrt] [--partitions P]
                  [--rows N] [--features M] [--seed S]
+                 [--workers-proc N [--speculative true]]
   dicfs generate --family NAME --rows N [--features M] [--seed S] --out FILE
   dicfs generate --describe
   dicfs compare  [--family NAME] [--rows N] [--features M] [--nodes N]
@@ -46,6 +47,13 @@ USAGE:
 `--partitioning` defaults to `auto`: the adaptive planner chooses hp or
 vp per correlation batch (cost model + measured feedback) and reports
 every decision. `--scheme` is accepted as an alias.
+
+`--workers-proc N` runs the correlation jobs on N worker OS processes
+speaking a binary protocol over Unix sockets (results are bit-identical
+to the in-process backend); shuffle bytes are then *measured* and the
+network model is calibrated from the observed transfers.
+`--speculative true` additionally duplicates straggler tasks onto idle
+workers.
 
 FAMILIES: ecbdl14, higgs, kddcup99, epsilon (Table 1 of the paper),
           wide (features >> rows, for the planner harness)
@@ -154,6 +162,13 @@ fn cmd_select(flags: &HashMap<String, String>) {
             if let Some(p) = flags.get("partitions") {
                 cfg.num_partitions = Some(p.parse().expect("--partitions"));
             }
+            if let Some(w) = flags.get("workers-proc") {
+                cfg.workers_proc = Some(w.parse().expect("--workers-proc"));
+                cfg.speculative = flags
+                    .get("speculative")
+                    .map(|v| v == "true")
+                    .unwrap_or(false);
+            }
             let run = DiCfs::new(cfg, make_engine(flags)).select(&dd);
             print_result(&run.result, run.wall_secs, Some(&run));
         }
@@ -189,6 +204,16 @@ fn print_result(
             run.metrics.total_broadcast_bytes(),
             run.metrics.total_retries()
         );
+        let measured = run.metrics.total_measured_shuffle_bytes();
+        if measured > 0 {
+            println!("measured shuffle (wire): {measured} B");
+        }
+        if let Some(net) = &run.calibrated_net {
+            println!(
+                "calibrated network: {:.3e} B/s bandwidth, {:.3e}s latency",
+                net.bandwidth_bytes_per_s, net.latency_s
+            );
+        }
         if !run.decisions.is_empty() {
             let hp = run
                 .decisions
@@ -353,6 +378,16 @@ fn cmd_bench(flags: &HashMap<String, String>) {
 
 fn main() -> ExitCode {
     let args: Vec<String> = std::env::args().skip(1).collect();
+    // Hidden worker mode: the multi-process backend re-invokes this
+    // binary as `dicfs --worker <socket>` (before any other parsing —
+    // workers must never fall through to the user-facing CLI).
+    if args.first().map(String::as_str) == Some("--worker") {
+        let Some(socket) = args.get(1) else {
+            eprintln!("--worker needs a socket path");
+            return ExitCode::FAILURE;
+        };
+        std::process::exit(dicfs::sparklet::remote::worker_main(socket));
+    }
     let Some((cmd, rest)) = args.split_first() else {
         eprint!("{USAGE}");
         return ExitCode::FAILURE;

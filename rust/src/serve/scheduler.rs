@@ -90,6 +90,15 @@ pub struct SuJobReport {
     pub queue_secs: f64,
     /// Wall-clock of the correlator batch, in seconds.
     pub compute_secs: f64,
+    /// **Estimated** shuffle bytes across the job's stages (the
+    /// in-process wire-size model; see
+    /// [`StageMetrics::shuffle_bytes`](crate::sparklet::StageMetrics)).
+    pub est_shuffle_bytes: usize,
+    /// **Measured** serialized shuffle bytes — nonzero only when the
+    /// dataset's provider ran on the multi-process backend
+    /// ([`crate::sparklet::remote`]) and its map output actually crossed
+    /// a process boundary.
+    pub measured_shuffle_bytes: usize,
     /// Partitioning-planner decisions behind this job (empty for fixed
     /// hp/vp/seq datasets): which plan served the batch, at what
     /// predicted cost, against what observed cost.
@@ -289,8 +298,17 @@ pub(crate) fn run_su_job(
     // The whole hit/upgrade/fresh pipeline lives in the version's
     // resolve path (serve/registry.rs) — shared with the seq scheme's
     // inline correlator, so the upgrade semantics cannot fork.
-    let outcome = ds.resolve(&candidates);
+    // A thread-scoped recorder captures exactly this job's stages so the
+    // report can split estimated vs wire-measured shuffle volume.
+    let recorder = std::sync::Arc::new(crate::sparklet::StageRecorder::new());
+    let outcome = {
+        let _guard = crate::sparklet::observe_stages(
+            std::sync::Arc::clone(&recorder) as std::sync::Arc<dyn crate::sparklet::PlanObserver>,
+        );
+        ds.resolve(&candidates)
+    };
     let compute_secs = t0.elapsed().as_secs_f64();
+    let job_stages = recorder.metrics();
     // Per-job plan attribution: the scheduler runs at most one job per
     // dataset at a time, so draining here yields exactly this batch's
     // decisions (fixed-scheme providers return an empty log).
@@ -309,6 +327,8 @@ pub(crate) fn run_su_job(
         delta_cells: outcome.delta_cells,
         queue_secs,
         compute_secs,
+        est_shuffle_bytes: job_stages.total_shuffle_bytes(),
+        measured_shuffle_bytes: job_stages.total_measured_shuffle_bytes(),
         plans,
     };
     log.lock().unwrap().push(report.clone());

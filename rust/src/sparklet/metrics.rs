@@ -41,8 +41,15 @@ pub struct StageMetrics {
     pub reduce_task_secs: Vec<f64>,
     /// Total retry attempts beyond the first, across tasks.
     pub retries: usize,
-    /// Bytes that would cross the shuffle (map-output size).
+    /// **Estimated** bytes that would cross the shuffle (map-output size
+    /// priced by the caller's `wire` size function). In-process stages
+    /// never serialize, so this is a model, not a measurement.
     pub shuffle_bytes: usize,
+    /// **Measured** serialized shuffle bytes: the exact frame payload
+    /// sizes that crossed a real process boundary. `None` for in-process
+    /// stages; `Some` only when the multi-process backend
+    /// ([`crate::sparklet::remote`]) moved the map output over a wire.
+    pub measured_shuffle_bytes: Option<usize>,
     /// Bytes collected back to the driver.
     pub collect_bytes: usize,
 }
@@ -56,6 +63,13 @@ impl StageMetrics {
     /// Total tasks launched by this stage (both shuffle waves).
     pub fn total_tasks(&self) -> usize {
         self.task_secs.len() + self.reduce_task_secs.len()
+    }
+
+    /// The shuffle volume the network model should charge: the measured
+    /// wire bytes when the stage actually crossed a process boundary,
+    /// falling back to the estimate for in-process stages.
+    pub fn wire_shuffle_bytes(&self) -> usize {
+        self.measured_shuffle_bytes.unwrap_or(self.shuffle_bytes)
     }
 }
 
@@ -79,9 +93,21 @@ impl JobMetrics {
         self.stages.iter().map(StageMetrics::total_tasks).sum()
     }
 
-    /// Total shuffle bytes across stages.
+    /// Total **estimated** shuffle bytes across stages (see
+    /// [`StageMetrics::shuffle_bytes`]).
     pub fn total_shuffle_bytes(&self) -> usize {
         self.stages.iter().map(|s| s.shuffle_bytes).sum()
+    }
+
+    /// Total **measured** serialized shuffle bytes across stages that
+    /// crossed a real process boundary (see
+    /// [`StageMetrics::measured_shuffle_bytes`]). Zero for pure
+    /// in-process jobs.
+    pub fn total_measured_shuffle_bytes(&self) -> usize {
+        self.stages
+            .iter()
+            .filter_map(|s| s.measured_shuffle_bytes)
+            .sum()
     }
 
     /// Total broadcast bytes.
@@ -175,6 +201,7 @@ mod tests {
             reduce_task_secs: vec![],
             retries: 1,
             shuffle_bytes: 100,
+            measured_shuffle_bytes: None,
             collect_bytes: 10,
         });
         jm.stages.push(StageMetrics {
@@ -185,12 +212,18 @@ mod tests {
             reduce_task_secs: vec![0.1],
             retries: 0,
             shuffle_bytes: 50,
+            measured_shuffle_bytes: Some(64),
             collect_bytes: 0,
         });
         jm.broadcast_bytes.push(1000);
         assert!((jm.total_task_secs() - 0.7).abs() < 1e-12);
         assert_eq!(jm.total_tasks(), 4);
         assert_eq!(jm.total_shuffle_bytes(), 150);
+        assert_eq!(jm.total_measured_shuffle_bytes(), 64);
+        // Estimated-only stage falls back to the estimate; measured
+        // stage reports its wire bytes.
+        assert_eq!(jm.stages[0].wire_shuffle_bytes(), 100);
+        assert_eq!(jm.stages[1].wire_shuffle_bytes(), 64);
         assert_eq!(jm.total_broadcast_bytes(), 1000);
         assert_eq!(jm.total_retries(), 1);
         assert_eq!(jm.stages_of_kind(StageKind::Map), 1);

@@ -48,6 +48,7 @@ pub mod metrics;
 pub mod observer;
 pub mod pool;
 pub mod rdd;
+pub mod remote;
 pub mod simtime;
 
 pub use config::{ClusterConfig, NetworkModel};
@@ -55,4 +56,5 @@ pub use metrics::{JobMetrics, StageKind, StageMetrics};
 pub use observer::{observe_stages, ObserverGuard, PlanObserver, StageRecorder};
 pub use pool::{ExecutorPool, TaskOptions};
 pub use rdd::{Broadcast, Rdd, SparkletContext};
+pub use remote::{ExecutorBackend, ProcessPool, ProcessPoolConfig, TaskBackend};
 pub use simtime::simulate_job_time;

@@ -135,7 +135,11 @@ impl SparkletContext {
         *self.metrics.lock().unwrap() = JobMetrics::default();
     }
 
-    fn record_stage(&self, stage: StageMetrics) {
+    /// Append a finished stage to the job log, notifying thread-scoped
+    /// observers first. `pub(crate)` so the multi-process backend
+    /// ([`crate::sparklet::remote`]) can record its wire-measured stages
+    /// into the same log the virtual-cluster replay consumes.
+    pub(crate) fn record_stage(&self, stage: StageMetrics) {
         // Observers first (thread-scoped, see `observer`): they receive
         // exactly the stages the current driver thread records, which is
         // how per-batch costs are attributed under concurrent jobs.
@@ -294,6 +298,7 @@ impl<T: Send + Sync + 'static> Rdd<T> {
             reduce_task_secs: vec![],
             retries,
             shuffle_bytes: 0,
+            measured_shuffle_bytes: None,
             collect_bytes: 0,
         });
         let parts = Arc::new(out);
@@ -377,6 +382,7 @@ impl<T: Send + Sync + 'static> Rdd<T> {
             reduce_task_secs: vec![],
             retries: 0,
             shuffle_bytes: 0,
+            measured_shuffle_bytes: None,
             collect_bytes: bytes,
         });
         out
@@ -534,6 +540,9 @@ where
             reduce_task_secs: red_reports.iter().map(|r| r.secs).collect(),
             retries,
             shuffle_bytes,
+            // Nothing was serialized: the shuffle moved Vec handles
+            // inside one address space.
+            measured_shuffle_bytes: None,
             collect_bytes: 0,
         });
 

@@ -1,0 +1,123 @@
+//! Fitting the [`NetworkModel`] to a real wire.
+//!
+//! The planner's hp-vs-vp pricing (PR 4) charges shuffles through
+//! `NetworkModel::shuffle_secs`, whose latency and bandwidth were so far
+//! assumed constants (10 GbE-ish defaults). The multi-process backend
+//! finally produces *measurements*: for every dispatched task the pool
+//! records one [`WireSample`] — the serialized bytes that crossed the
+//! socket (task frame + reply frame) and the wall-clock of the round
+//! trip minus the worker-reported compute time, i.e. the
+//! serialize/transfer/deserialize overhead alone.
+//!
+//! Those samples are fitted by ordinary least squares to the affine wire
+//! model `secs = latency + bytes / bandwidth`, which is exactly the
+//! point-to-point form the [`NetworkModel`] formulas are built from. The
+//! fitted parameters replace the assumed constants, so virtual-cluster
+//! replays and planner predictions are priced against the wire this host
+//! actually has.
+
+use crate::sparklet::config::NetworkModel;
+
+/// One measured wire crossing.
+#[derive(Debug, Clone, Copy)]
+pub struct WireSample {
+    /// Serialized payload bytes that crossed the socket (both ways).
+    pub bytes: usize,
+    /// Seconds of wire overhead (round-trip wall minus worker compute).
+    pub secs: f64,
+}
+
+/// Least-squares fit of `secs = latency + bytes / bandwidth` over the
+/// samples. Returns `None` when the samples cannot identify both
+/// parameters: fewer than two distinct byte sizes, or a non-positive
+/// fitted slope (a wire so fast the noise dominates — no meaningful
+/// bandwidth can be claimed). Fitted latency is clamped at ≥ 0.
+pub fn fit_network_model(samples: &[WireSample]) -> Option<NetworkModel> {
+    let n = samples.len();
+    if n < 2 {
+        return None;
+    }
+    let xs: Vec<f64> = samples.iter().map(|s| s.bytes as f64).collect();
+    let ys: Vec<f64> = samples.iter().map(|s| s.secs.max(0.0)).collect();
+    let mean_x = xs.iter().sum::<f64>() / n as f64;
+    let mean_y = ys.iter().sum::<f64>() / n as f64;
+    let var_x: f64 = xs.iter().map(|x| (x - mean_x).powi(2)).sum();
+    if var_x <= f64::EPSILON {
+        return None; // all samples the same size: slope unidentifiable
+    }
+    let cov: f64 = xs
+        .iter()
+        .zip(&ys)
+        .map(|(x, y)| (x - mean_x) * (y - mean_y))
+        .sum();
+    let slope = cov / var_x; // secs per byte
+    if slope <= 0.0 || !slope.is_finite() {
+        return None;
+    }
+    let latency = (mean_y - slope * mean_x).max(0.0);
+    Some(NetworkModel {
+        bandwidth_bytes_per_s: 1.0 / slope,
+        latency_s: latency,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn synth(latency: f64, bw: f64, sizes: &[usize]) -> Vec<WireSample> {
+        sizes
+            .iter()
+            .map(|&b| WireSample {
+                bytes: b,
+                secs: latency + b as f64 / bw,
+            })
+            .collect()
+    }
+
+    #[test]
+    fn recovers_exact_affine_model() {
+        let samples = synth(2e-4, 5e8, &[1_000, 10_000, 100_000, 1_000_000]);
+        let m = fit_network_model(&samples).unwrap();
+        assert!((m.latency_s - 2e-4).abs() < 1e-9, "latency {}", m.latency_s);
+        let rel = (m.bandwidth_bytes_per_s - 5e8).abs() / 5e8;
+        assert!(rel < 1e-6, "bandwidth {}", m.bandwidth_bytes_per_s);
+    }
+
+    #[test]
+    fn noisy_samples_still_fit_reasonably() {
+        // ±20% multiplicative noise, deterministic pattern.
+        let mut samples = synth(1e-3, 1e8, &[4_096, 65_536, 262_144, 1 << 20, 4 << 20]);
+        for (i, s) in samples.iter_mut().enumerate() {
+            let f = if i % 2 == 0 { 1.2 } else { 0.8 };
+            s.secs *= f;
+        }
+        let m = fit_network_model(&samples).unwrap();
+        let rel = (m.bandwidth_bytes_per_s - 1e8).abs() / 1e8;
+        assert!(rel < 0.5, "bandwidth off by {rel}");
+    }
+
+    #[test]
+    fn degenerate_inputs_return_none() {
+        assert!(fit_network_model(&[]).is_none());
+        assert!(fit_network_model(&[WireSample { bytes: 10, secs: 0.1 }]).is_none());
+        // Same size everywhere: slope unidentifiable.
+        let same = synth(1e-3, 1e8, &[4_096, 4_096, 4_096]);
+        assert!(fit_network_model(&same).is_none());
+        // Negative slope (bigger payloads *faster*): rejected.
+        let inverted = vec![
+            WireSample { bytes: 100, secs: 1.0 },
+            WireSample { bytes: 1_000_000, secs: 0.1 },
+        ];
+        assert!(fit_network_model(&inverted).is_none());
+    }
+
+    #[test]
+    fn fitted_model_prices_shuffles() {
+        let samples = synth(1e-4, 1e9, &[1_000, 1 << 20]);
+        let m = fit_network_model(&samples).unwrap();
+        // The fitted model plugs straight into the shuffle formula.
+        assert!(m.shuffle_secs(1 << 20, 4) > 0.0);
+        assert_eq!(m.shuffle_secs(0, 4), 0.0);
+    }
+}

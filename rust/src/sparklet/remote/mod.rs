@@ -1,0 +1,242 @@
+//! Multi-process sparklet executors: real serialization over a wire.
+//!
+//! Everything else in [`crate::sparklet`] moves data between "executors"
+//! by passing `Vec` handles inside one address space — no bytes are ever
+//! serialized, so shuffle sizes are *estimates* and the
+//! [`NetworkModel`](crate::sparklet::NetworkModel) is an assumption. This
+//! module adds the missing distribution boundary: worker **OS
+//! processes** (the `dicfs` binary re-invoked in `--worker` mode) that
+//! speak a length-prefixed binary protocol over Unix sockets. Task
+//! dispatch, dataset partitions, shuffle blocks, and metrics all cross
+//! the wire as bytes, so shuffle traffic is *measured*
+//! ([`StageMetrics::measured_shuffle_bytes`](crate::sparklet::StageMetrics))
+//! and the network model can be *calibrated* from observed transfers
+//! ([`fit_network_model`]).
+//!
+//! Layout:
+//! * [`codec`] — the [`Wire`] binary codec (length-prefixed
+//!   little-endian; the std-only stand-in for serde).
+//! * [`protocol`] — frames and the driver↔worker message vocabulary
+//!   ([`DriverMsg`], [`WorkerMsg`], [`RemoteTask`], [`TaskResult`]).
+//! * [`tasks`] — the single shared meaning of each task
+//!   ([`execute_task`]), the backend-equivalence anchor.
+//! * [`worker`] — the `--worker` process loop ([`worker_main`]).
+//! * [`pool`] — the driver-side [`ProcessPool`]: spawn/handshake,
+//!   crash re-dispatch, speculative retry, resize.
+//! * [`calibrate`] — least-squares [`NetworkModel`] fit over measured
+//!   [`WireSample`]s.
+//!
+//! Backends are unified behind one trait: [`TaskBackend`], with
+//! [`ExecutorBackend`] as the concrete enum over
+//! [`InProcess`](ExecutorBackend::InProcess) (thread pool, zero copies)
+//! and [`MultiProcess`](ExecutorBackend::MultiProcess) (real processes,
+//! real bytes). Both run the identical [`execute_task`] lowering, which
+//! is why in-process and multi-process DiCFS select bit-identical
+//! feature subsets — the property the `ipc` integration tests pin down.
+
+pub mod calibrate;
+pub mod codec;
+pub mod pool;
+pub mod protocol;
+pub mod tasks;
+pub mod worker;
+
+pub use calibrate::{fit_network_model, WireSample};
+pub use codec::{ColumnBlock, Wire};
+pub use pool::{ProcessPool, ProcessPoolConfig, StageOutcome};
+pub use protocol::{DatasetPayload, DriverMsg, IndexedPair, RemoteTask, TaskResult, WorkerMsg};
+pub use tasks::execute_task;
+pub use worker::{worker_main, CRASH_EXIT_CODE};
+
+use std::io;
+use std::sync::Arc;
+use std::time::Instant;
+
+use crate::data::columnar::DiscreteDataset;
+use crate::runtime::NativeEngine;
+use crate::sparklet::pool::{ExecutorPool, TaskOptions};
+
+/// A stage executor for the remote task vocabulary: run a batch of
+/// [`RemoteTask`]s, return results in task order plus measured costs.
+///
+/// The two implementations differ only in *where* the tasks run and
+/// whether bytes cross a wire — never in what they compute.
+pub trait TaskBackend {
+    /// Parallel slots available (threads or live worker processes).
+    fn slots(&self) -> usize;
+    /// Execute one stage of tasks.
+    fn run_tasks(&mut self, tasks: &[RemoteTask]) -> io::Result<StageOutcome>;
+    /// Human-readable backend label for metrics and reports.
+    fn label(&self) -> &'static str;
+}
+
+/// The in-process implementation: the same dataset reference shared by
+/// worker *threads*; nothing is serialized, so measured byte counts are
+/// zero and wire samples are never produced.
+pub struct InProcessBackend {
+    data: Arc<DiscreteDataset>,
+    pool: ExecutorPool,
+}
+
+impl InProcessBackend {
+    /// Build over a shared dataset with `threads` executor threads.
+    pub fn new(data: Arc<DiscreteDataset>, threads: usize) -> Self {
+        Self {
+            data,
+            pool: ExecutorPool::new(TaskOptions::with_threads(threads)),
+        }
+    }
+}
+
+impl TaskBackend for InProcessBackend {
+    fn slots(&self) -> usize {
+        self.pool.threads()
+    }
+
+    fn run_tasks(&mut self, tasks: &[RemoteTask]) -> io::Result<StageOutcome> {
+        let tasks: Arc<Vec<RemoteTask>> = Arc::new(tasks.to_vec());
+        let n = tasks.len();
+        let data = Arc::clone(&self.data);
+        let shared = Arc::clone(&tasks);
+        let (results, reports) = self
+            .pool
+            .run_stage(n, move |i| {
+                let t0 = Instant::now();
+                let r = execute_task(&data, &NativeEngine, &shared[i]);
+                (r, t0.elapsed().as_secs_f64())
+            })
+            .map_err(|ti| codec::bad(format!("in-process task {ti} failed permanently")))?;
+        let mut out = StageOutcome {
+            results: Vec::with_capacity(n),
+            task_secs: Vec::with_capacity(n),
+            retries: reports.iter().map(|r| r.attempts - 1).sum(),
+            speculative: 0,
+            bytes_sent: 0,
+            bytes_received: 0,
+        };
+        for (r, secs) in results {
+            out.results.push(r);
+            out.task_secs.push(secs);
+        }
+        Ok(out)
+    }
+
+    fn label(&self) -> &'static str {
+        "inProcess"
+    }
+}
+
+/// The executor backend: one enum, one trait, two worlds.
+///
+/// `InProcess` is the default (threads in this address space);
+/// `MultiProcess` is selected by `--workers-proc N` and runs real worker
+/// processes through the [`ProcessPool`].
+pub enum ExecutorBackend {
+    /// Threads sharing the driver's address space.
+    InProcess(InProcessBackend),
+    /// Worker OS processes behind the framed socket protocol.
+    MultiProcess(ProcessPool),
+}
+
+impl ExecutorBackend {
+    /// In-process backend over a shared dataset.
+    pub fn in_process(data: Arc<DiscreteDataset>, threads: usize) -> Self {
+        Self::InProcess(InProcessBackend::new(data, threads))
+    }
+
+    /// Multi-process backend: spawn workers, install the dataset, and
+    /// return the backend plus the measured install bytes.
+    pub fn multi_process(
+        data: &DiscreteDataset,
+        cfg: ProcessPoolConfig,
+    ) -> io::Result<(Self, usize)> {
+        let mut pool = ProcessPool::new(cfg)?;
+        let shipped = pool.install(&DatasetPayload::from_dataset(data))?;
+        Ok((Self::MultiProcess(pool), shipped))
+    }
+
+    /// The process pool, when this backend is multi-process.
+    pub fn process_pool(&self) -> Option<&ProcessPool> {
+        match self {
+            Self::InProcess(_) => None,
+            Self::MultiProcess(p) => Some(p),
+        }
+    }
+
+    /// Mutable access to the process pool, when multi-process.
+    pub fn process_pool_mut(&mut self) -> Option<&mut ProcessPool> {
+        match self {
+            Self::InProcess(_) => None,
+            Self::MultiProcess(p) => Some(p),
+        }
+    }
+}
+
+impl TaskBackend for ExecutorBackend {
+    fn slots(&self) -> usize {
+        match self {
+            Self::InProcess(b) => b.slots(),
+            Self::MultiProcess(p) => p.alive_workers(),
+        }
+    }
+
+    fn run_tasks(&mut self, tasks: &[RemoteTask]) -> io::Result<StageOutcome> {
+        match self {
+            Self::InProcess(b) => b.run_tasks(tasks),
+            Self::MultiProcess(p) => p.run_tasks(tasks),
+        }
+    }
+
+    fn label(&self) -> &'static str {
+        match self {
+            Self::InProcess(b) => b.label(),
+            Self::MultiProcess(_) => "multiProcess",
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::CLASS_ID;
+
+    fn data() -> Arc<DiscreteDataset> {
+        Arc::new(
+            DiscreteDataset::new(
+                "b",
+                vec![vec![0, 1, 2, 1], vec![1, 0, 1, 0]],
+                vec![3, 2],
+                vec![0, 1, 1, 0],
+                2,
+            )
+            .unwrap(),
+        )
+    }
+
+    #[test]
+    fn in_process_backend_runs_tasks_in_order() {
+        let mut b = ExecutorBackend::in_process(data(), 2);
+        assert_eq!(b.label(), "inProcess");
+        assert_eq!(b.slots(), 2);
+        let tasks: Vec<RemoteTask> = (0..2u64)
+            .map(|f| RemoteTask::VpSu {
+                pairs: vec![(f, (f, CLASS_ID as u64))],
+            })
+            .collect();
+        let out = b.run_tasks(&tasks).unwrap();
+        assert_eq!(out.results.len(), 2);
+        assert_eq!(out.task_secs.len(), 2);
+        assert_eq!(out.bytes_sent + out.bytes_received, 0, "nothing crosses a wire");
+        for (i, r) in out.results.iter().enumerate() {
+            let TaskResult::Su(sus) = r else { panic!("vp task returns SU") };
+            assert_eq!(sus[0].0, i as u64, "results stay in task order");
+        }
+    }
+
+    #[test]
+    fn in_process_backend_empty_stage() {
+        let mut b = ExecutorBackend::in_process(data(), 1);
+        let out = b.run_tasks(&[]).unwrap();
+        assert!(out.results.is_empty() && out.retries == 0);
+    }
+}

@@ -1,0 +1,579 @@
+//! The multi-process executor pool: worker OS processes speaking the
+//! framed protocol over Unix sockets.
+//!
+//! The driver spawns each worker by re-invoking its own binary in
+//! `--worker` mode (resolved via the `DICFS_WORKER_EXE` override when
+//! the calling process is not the `dicfs` binary, e.g. a test harness),
+//! handshakes over a per-worker socket, installs the dataset once, and
+//! then dispatches tasks one-at-a-time per worker — the driver is the
+//! scheduler, exactly as Spark's driver schedules tasks onto executors.
+//!
+//! Robustness the in-process thread pool could not express:
+//! * **crash detection + re-dispatch** — a worker whose connection dies
+//!   mid-task has that task re-queued to the surviving workers (counted
+//!   as a retry);
+//! * **speculative re-execution** — when the queue drains and workers
+//!   sit idle, in-flight straggler tasks are duplicated onto the idle
+//!   workers; the first finished attempt wins (results are
+//!   deterministic, so the winner is irrelevant), the loser is drained;
+//! * **graceful resize** — between stages the pool can shut down excess
+//!   workers (clean `Shutdown`) or spawn new ones (which replay the
+//!   dataset install).
+//!
+//! Every dispatch also records a [`WireSample`] — serialized bytes both
+//! ways and the round-trip wall time minus worker compute — feeding the
+//! [`NetworkModel`](crate::sparklet::NetworkModel) calibration
+//! ([`super::calibrate`]).
+
+use std::collections::{HashMap, VecDeque};
+use std::io;
+use std::os::unix::net::{UnixListener, UnixStream};
+use std::path::PathBuf;
+use std::process::{Child, Command, Stdio};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use crate::sparklet::config::NetworkModel;
+
+use super::calibrate::{fit_network_model, WireSample};
+use super::codec::{bad, Wire};
+use super::protocol::{
+    recv_msg, send_msg, write_frame, DatasetPayload, DriverMsg, RemoteTask, TaskResult, WorkerMsg,
+};
+
+/// Distinguishes socket directories of concurrently live pools.
+static POOL_SEQ: AtomicUsize = AtomicUsize::new(0);
+
+/// How long to wait for a spawned worker to connect and handshake.
+const HANDSHAKE_TIMEOUT: Duration = Duration::from_secs(20);
+
+/// How long a stage waits for *any* worker event before declaring the
+/// pool wedged. Generous: tasks are sub-second in every workload here.
+const EVENT_TIMEOUT: Duration = Duration::from_secs(60);
+
+/// Configuration of a [`ProcessPool`].
+#[derive(Debug, Clone, Default)]
+pub struct ProcessPoolConfig {
+    /// Worker processes to spawn (0 is clamped to 1).
+    pub workers: usize,
+    /// Duplicate in-flight straggler tasks onto idle workers once the
+    /// queue drains (first finished attempt wins).
+    pub speculation: bool,
+    /// Explicit worker executable. Defaults to the `DICFS_WORKER_EXE`
+    /// environment variable, then to `std::env::current_exe()` — correct
+    /// whenever the driver *is* the `dicfs` binary.
+    pub worker_exe: Option<PathBuf>,
+}
+
+impl ProcessPoolConfig {
+    /// Default config with `workers` processes.
+    pub fn with_workers(workers: usize) -> Self {
+        Self {
+            workers,
+            ..Self::default()
+        }
+    }
+}
+
+/// What one stage of remote tasks produced and cost.
+#[derive(Debug, Clone)]
+pub struct StageOutcome {
+    /// Per-task results, in task order.
+    pub results: Vec<TaskResult>,
+    /// Worker-measured compute seconds of each task's winning attempt.
+    pub task_secs: Vec<f64>,
+    /// Tasks re-dispatched because their worker died mid-flight.
+    pub retries: usize,
+    /// Speculative duplicate attempts launched.
+    pub speculative: usize,
+    /// Measured serialized bytes sent to workers (task frames).
+    pub bytes_sent: usize,
+    /// Measured serialized bytes received from workers (result frames).
+    pub bytes_received: usize,
+}
+
+impl StageOutcome {
+    fn empty() -> Self {
+        Self {
+            results: vec![],
+            task_secs: vec![],
+            retries: 0,
+            speculative: 0,
+            bytes_sent: 0,
+            bytes_received: 0,
+        }
+    }
+}
+
+/// One dispatched-but-unanswered task on a worker.
+#[derive(Debug, Clone, Copy)]
+struct Inflight {
+    id: u64,
+    task: usize,
+    at: Instant,
+    sent_bytes: usize,
+}
+
+enum Event {
+    Msg(WorkerMsg, usize),
+    Dead,
+}
+
+struct Worker {
+    child: Child,
+    writer: UnixStream,
+    reader: Option<JoinHandle<()>>,
+    alive: bool,
+    current: Option<Inflight>,
+}
+
+/// A pool of worker OS processes (see module docs).
+pub struct ProcessPool {
+    exe: PathBuf,
+    dir: PathBuf,
+    speculation: bool,
+    workers: Vec<Worker>,
+    events_tx: Sender<(usize, Event)>,
+    events_rx: Receiver<(usize, Event)>,
+    /// Serialized `Install` frame, replayed to workers spawned later.
+    install_frame: Option<Vec<u8>>,
+    install_bytes: usize,
+    next_id: u64,
+    next_worker_seq: usize,
+    samples: Vec<WireSample>,
+}
+
+impl ProcessPool {
+    /// Spawn the configured number of worker processes and handshake
+    /// with each.
+    pub fn new(cfg: ProcessPoolConfig) -> io::Result<Self> {
+        let exe = match cfg.worker_exe {
+            Some(p) => p,
+            None => match std::env::var_os("DICFS_WORKER_EXE") {
+                Some(p) => PathBuf::from(p),
+                None => std::env::current_exe()?,
+            },
+        };
+        let dir = std::env::temp_dir().join(format!(
+            "dicfs-ipc-{}-{}",
+            std::process::id(),
+            POOL_SEQ.fetch_add(1, Ordering::Relaxed)
+        ));
+        std::fs::create_dir_all(&dir)?;
+        let (events_tx, events_rx) = channel();
+        let mut pool = Self {
+            exe,
+            dir,
+            speculation: cfg.speculation,
+            workers: Vec::new(),
+            events_tx,
+            events_rx,
+            install_frame: None,
+            install_bytes: 0,
+            next_id: 0,
+            next_worker_seq: 0,
+            samples: Vec::new(),
+        };
+        for _ in 0..cfg.workers.max(1) {
+            pool.spawn_worker()?;
+        }
+        Ok(pool)
+    }
+
+    /// Number of live worker processes.
+    pub fn alive_workers(&self) -> usize {
+        self.workers.iter().filter(|w| w.alive).count()
+    }
+
+    /// Toggle speculative re-execution between stages.
+    pub fn set_speculation(&mut self, on: bool) {
+        self.speculation = on;
+    }
+
+    /// Measured serialized bytes of dataset installs so far.
+    pub fn install_bytes(&self) -> usize {
+        self.install_bytes
+    }
+
+    /// The wire samples measured so far (one per answered dispatch).
+    pub fn samples(&self) -> &[WireSample] {
+        &self.samples
+    }
+
+    /// Fit the network model to the measured wire samples
+    /// ([`super::calibrate::fit_network_model`]).
+    pub fn calibrated_network(&self) -> Option<NetworkModel> {
+        fit_network_model(&self.samples)
+    }
+
+    /// Install the dataset on every live worker; new workers spawned by
+    /// a later [`Self::resize`] replay the same install. Returns the
+    /// measured serialized bytes shipped by this call.
+    pub fn install(&mut self, payload: &DatasetPayload) -> io::Result<usize> {
+        let frame = DriverMsg::Install(payload.clone()).to_bytes();
+        let mut pending = 0usize;
+        let mut shipped = 0usize;
+        for i in 0..self.workers.len() {
+            if !self.workers[i].alive {
+                continue;
+            }
+            match write_frame(&mut self.workers[i].writer, &frame) {
+                Ok(b) => {
+                    shipped += b;
+                    pending += 1;
+                }
+                Err(_) => {
+                    self.mark_dead(i);
+                }
+            }
+        }
+        let mut acked = 0usize;
+        while acked < pending {
+            let (wi, ev) = self.recv_event()?;
+            match ev {
+                Event::Msg(WorkerMsg::Ready, _) => acked += 1,
+                Event::Msg(WorkerMsg::Done { .. }, _) => {
+                    return Err(bad("task reply during dataset install"));
+                }
+                Event::Dead => {
+                    self.mark_dead(wi);
+                    acked += 1;
+                }
+            }
+        }
+        if self.alive_workers() == 0 {
+            return Err(bad("all workers died during dataset install"));
+        }
+        self.install_bytes += shipped;
+        self.install_frame = Some(frame);
+        Ok(shipped)
+    }
+
+    /// Arm the failure-injection hook on one worker: it will exit
+    /// without replying upon receiving the task that follows `after`
+    /// more normal completions (see
+    /// [`DriverMsg::ArmCrash`]).
+    pub fn arm_crash(&mut self, worker: usize, after: u64) -> io::Result<()> {
+        if !self.workers.get(worker).is_some_and(|w| w.alive) {
+            return Err(bad(format!("no live worker {worker}")));
+        }
+        send_msg(&mut self.workers[worker].writer, &DriverMsg::ArmCrash { after })?;
+        Ok(())
+    }
+
+    /// Grow or shrink the pool to `n` live workers between stages.
+    /// Shrinking shuts the newest workers down cleanly; growing spawns
+    /// fresh processes and replays the dataset install on them.
+    pub fn resize(&mut self, n: usize) -> io::Result<()> {
+        let n = n.max(1);
+        while self.alive_workers() > n {
+            let i = self
+                .workers
+                .iter()
+                .rposition(|w| w.alive)
+                .expect("alive worker exists");
+            let _ = send_msg(&mut self.workers[i].writer, &DriverMsg::Shutdown);
+            let w = &mut self.workers[i];
+            w.alive = false;
+            let _ = w.child.wait();
+            if let Some(h) = w.reader.take() {
+                let _ = h.join();
+            }
+        }
+        while self.alive_workers() < n {
+            self.spawn_worker()?;
+        }
+        Ok(())
+    }
+
+    /// Run one stage of tasks across the live workers, returning results
+    /// in task order plus the stage's measured costs. Tasks lost to a
+    /// worker crash are re-dispatched to survivors; the stage fails only
+    /// when every worker is gone.
+    pub fn run_tasks(&mut self, tasks: &[RemoteTask]) -> io::Result<StageOutcome> {
+        let n = tasks.len();
+        if n == 0 {
+            return Ok(StageOutcome::empty());
+        }
+        if self.install_frame.is_none() {
+            return Err(bad("run_tasks before install"));
+        }
+        let mut results: Vec<Option<TaskResult>> = (0..n).map(|_| None).collect();
+        let mut task_secs = vec![0.0f64; n];
+        let mut completed = vec![false; n];
+        // In-flight attempt count per task (crash re-queue decrements).
+        let mut attempts = vec![0usize; n];
+        let mut done = 0usize;
+        let mut queue: VecDeque<usize> = (0..n).collect();
+        let mut id_map: HashMap<u64, usize> = HashMap::new();
+        let mut out = StageOutcome::empty();
+
+        while done < n {
+            // Dispatch wave: fill every idle live worker, first from the
+            // queue, then (speculation) with duplicates of stragglers.
+            loop {
+                let Some(wi) = self
+                    .workers
+                    .iter()
+                    .position(|w| w.alive && w.current.is_none())
+                else {
+                    break;
+                };
+                let (ti, is_spec) = match queue.pop_front() {
+                    Some(t) if completed[t] => continue,
+                    Some(t) => (t, false),
+                    None => {
+                        if !self.speculation {
+                            break;
+                        }
+                        // Straggler = incomplete, exactly one attempt in
+                        // flight, not yet duplicated.
+                        match (0..n).find(|&t| !completed[t] && attempts[t] == 1) {
+                            Some(t) => (t, true),
+                            None => break,
+                        }
+                    }
+                };
+                let id = self.next_id;
+                self.next_id += 1;
+                let frame = DriverMsg::Task {
+                    id,
+                    task: tasks[ti].clone(),
+                }
+                .to_bytes();
+                match write_frame(&mut self.workers[wi].writer, &frame) {
+                    Ok(b) => {
+                        out.bytes_sent += b;
+                        attempts[ti] += 1;
+                        if is_spec {
+                            out.speculative += 1;
+                        }
+                        id_map.insert(id, ti);
+                        self.workers[wi].current = Some(Inflight {
+                            id,
+                            task: ti,
+                            at: Instant::now(),
+                            sent_bytes: b,
+                        });
+                    }
+                    Err(_) => {
+                        // The idle worker died before we noticed; its
+                        // reader will also report Dead, which mark_dead
+                        // makes idempotent.
+                        self.mark_dead(wi);
+                        if !is_spec {
+                            queue.push_front(ti);
+                        }
+                    }
+                }
+            }
+            if self.alive_workers() == 0 {
+                return Err(bad(format!(
+                    "all workers died with {} of {n} tasks incomplete",
+                    n - done
+                )));
+            }
+
+            let (wi, ev) = self.recv_event()?;
+            match ev {
+                Event::Msg(WorkerMsg::Done { id, secs, result }, bytes) => {
+                    out.bytes_received += bytes;
+                    if let Some(inf) = self.workers[wi].current.take() {
+                        debug_assert_eq!(inf.id, id, "one in-flight task per worker");
+                        // Wire overhead sample: round-trip wall minus
+                        // worker compute, against bytes both ways.
+                        let wall = inf.at.elapsed().as_secs_f64();
+                        self.samples.push(WireSample {
+                            bytes: inf.sent_bytes + bytes,
+                            secs: (wall - secs).max(0.0),
+                        });
+                    }
+                    if let Some(ti) = id_map.remove(&id) {
+                        attempts[ti] = attempts[ti].saturating_sub(1);
+                        if !completed[ti] {
+                            completed[ti] = true;
+                            results[ti] = Some(result);
+                            task_secs[ti] = secs;
+                            done += 1;
+                        }
+                        // else: speculative loser — identical bytes,
+                        // dropped.
+                    }
+                }
+                Event::Msg(WorkerMsg::Ready, _) => {}
+                Event::Dead => {
+                    if let Some(inf) = self.mark_dead(wi) {
+                        id_map.remove(&inf.id);
+                        if !completed[inf.task] {
+                            attempts[inf.task] = attempts[inf.task].saturating_sub(1);
+                            out.retries += 1;
+                            if attempts[inf.task] == 0 {
+                                // Lost the only attempt: re-dispatch to
+                                // the survivors, at the queue's front so
+                                // recovery is prompt.
+                                queue.push_front(inf.task);
+                            }
+                        }
+                    }
+                    if self.alive_workers() == 0 {
+                        return Err(bad(format!(
+                            "all workers died with {} of {n} tasks incomplete",
+                            n - done
+                        )));
+                    }
+                }
+            }
+        }
+
+        // Drain speculative losers still in flight so the next stage
+        // starts against idle workers.
+        while self.workers.iter().any(|w| w.alive && w.current.is_some()) {
+            let (wi, ev) = self.recv_event()?;
+            match ev {
+                Event::Msg(WorkerMsg::Done { id, .. }, bytes) => {
+                    out.bytes_received += bytes;
+                    self.workers[wi].current = None;
+                    id_map.remove(&id);
+                }
+                Event::Msg(WorkerMsg::Ready, _) => {}
+                Event::Dead => {
+                    self.mark_dead(wi);
+                }
+            }
+        }
+
+        out.results = results.into_iter().map(|r| r.expect("completed")).collect();
+        out.task_secs = task_secs;
+        Ok(out)
+    }
+
+    fn recv_event(&mut self) -> io::Result<(usize, Event)> {
+        self.events_rx
+            .recv_timeout(EVENT_TIMEOUT)
+            .map_err(|_| bad("timed out waiting for worker events"))
+    }
+
+    /// Mark a worker dead (idempotent), reap the child, and return the
+    /// task it had in flight, if any.
+    fn mark_dead(&mut self, i: usize) -> Option<Inflight> {
+        let w = &mut self.workers[i];
+        if !w.alive {
+            return None;
+        }
+        w.alive = false;
+        let _ = w.child.kill();
+        let _ = w.child.wait();
+        // The reader thread exits on the closed socket; its handle is
+        // joined when the pool drops.
+        w.current.take()
+    }
+
+    fn spawn_worker(&mut self) -> io::Result<()> {
+        let seq = self.next_worker_seq;
+        self.next_worker_seq += 1;
+        let sock = self.dir.join(format!("w{seq}.sock"));
+        let _ = std::fs::remove_file(&sock);
+        let listener = UnixListener::bind(&sock)?;
+        listener.set_nonblocking(true)?;
+        let mut child = Command::new(&self.exe)
+            .arg("--worker")
+            .arg(&sock)
+            .stdin(Stdio::null())
+            .spawn()?;
+
+        let deadline = Instant::now() + HANDSHAKE_TIMEOUT;
+        let mut stream = loop {
+            match listener.accept() {
+                Ok((s, _)) => break s,
+                Err(e) if e.kind() == io::ErrorKind::WouldBlock => {
+                    if let Some(status) = child.try_wait()? {
+                        return Err(bad(format!(
+                            "worker exited during handshake: {status} (exe {:?})",
+                            self.exe
+                        )));
+                    }
+                    if Instant::now() > deadline {
+                        let _ = child.kill();
+                        let _ = child.wait();
+                        return Err(bad("worker handshake timed out"));
+                    }
+                    std::thread::sleep(Duration::from_millis(2));
+                }
+                Err(e) => return Err(e),
+            }
+        };
+        stream.set_nonblocking(false)?;
+        // Connected: the filesystem name has served its purpose.
+        let _ = std::fs::remove_file(&sock);
+
+        let (hello, _): (WorkerMsg, usize) = recv_msg(&mut stream)?;
+        if hello != WorkerMsg::Ready {
+            let _ = child.kill();
+            let _ = child.wait();
+            return Err(bad("worker handshake: expected Ready"));
+        }
+        // Late spawn (resize): replay the dataset install synchronously,
+        // before the reader thread takes over the receive side.
+        if let Some(frame) = self.install_frame.clone() {
+            let sent = write_frame(&mut stream, &frame)?;
+            self.install_bytes += sent;
+            let (ack, _): (WorkerMsg, usize) = recv_msg(&mut stream)?;
+            if ack != WorkerMsg::Ready {
+                let _ = child.kill();
+                let _ = child.wait();
+                return Err(bad("worker install: expected Ready ack"));
+            }
+        }
+
+        let writer = stream.try_clone()?;
+        let wi = self.workers.len();
+        let tx = self.events_tx.clone();
+        let reader = std::thread::Builder::new()
+            .name(format!("dicfs-ipc-reader-{seq}"))
+            .spawn(move || {
+                let mut stream = stream;
+                loop {
+                    match recv_msg::<WorkerMsg>(&mut stream) {
+                        Ok((msg, bytes)) => {
+                            if tx.send((wi, Event::Msg(msg, bytes))).is_err() {
+                                return;
+                            }
+                        }
+                        Err(_) => {
+                            let _ = tx.send((wi, Event::Dead));
+                            return;
+                        }
+                    }
+                }
+            })?;
+
+        self.workers.push(Worker {
+            child,
+            writer,
+            reader: Some(reader),
+            alive: true,
+            current: None,
+        });
+        Ok(())
+    }
+}
+
+impl Drop for ProcessPool {
+    fn drop(&mut self) {
+        for w in &mut self.workers {
+            if w.alive {
+                let _ = send_msg(&mut w.writer, &DriverMsg::Shutdown);
+            }
+        }
+        for w in &mut self.workers {
+            let _ = w.child.kill();
+            let _ = w.child.wait();
+            if let Some(h) = w.reader.take() {
+                let _ = h.join();
+            }
+        }
+        let _ = std::fs::remove_dir_all(&self.dir);
+    }
+}

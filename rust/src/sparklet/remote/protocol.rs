@@ -1,0 +1,479 @@
+//! Frame layer and message vocabulary of the driver ↔ worker protocol.
+//!
+//! Everything crossing the Unix socket is a **frame**: a `u32`
+//! little-endian payload length followed by exactly that many payload
+//! bytes, where the payload is the [`Wire`] encoding of one message.
+//! The framing is what makes the byte accounting honest: the driver
+//! records the *actual* frame payload sizes as measured shuffle bytes,
+//! not an estimate.
+//!
+//! Closures cannot cross a process boundary, so unlike the in-process
+//! executor pool the remote protocol speaks a **fixed task vocabulary**
+//! ([`RemoteTask`]) covering exactly the jobs DiCFS lowers to
+//! (DESIGN.md §13): hp partial-table counting over a row range, hp
+//! merge + SU finish over shuffled table blocks, and vp local SU over
+//! full columns. Workers hold the dataset (installed once per process,
+//! like Spark executors holding their partitions), so tasks reference
+//! columns by id instead of shipping them per call.
+
+use std::io::{self, Read, Write};
+
+use crate::correlation::ContingencyTable;
+use crate::data::columnar::DiscreteDataset;
+
+use super::codec::{bad, ColumnBlock, Wire};
+
+/// Upper bound on one frame's payload (guards against a corrupt length
+/// prefix allocating unbounded memory). 1 GiB comfortably exceeds any
+/// dataset this substrate installs.
+pub const MAX_FRAME_BYTES: usize = 1 << 30;
+
+/// Write one length-prefixed frame; returns the payload size in bytes.
+pub fn write_frame(w: &mut impl Write, payload: &[u8]) -> io::Result<usize> {
+    let len = u32::try_from(payload.len())
+        .map_err(|_| bad(format!("frame of {} bytes exceeds u32", payload.len())))?;
+    w.write_all(&len.to_le_bytes())?;
+    w.write_all(payload)?;
+    w.flush()?;
+    Ok(payload.len())
+}
+
+/// Read one length-prefixed frame's payload.
+pub fn read_frame(r: &mut impl Read) -> io::Result<Vec<u8>> {
+    let mut len_bytes = [0u8; 4];
+    r.read_exact(&mut len_bytes)?;
+    let len = u32::from_le_bytes(len_bytes) as usize;
+    if len > MAX_FRAME_BYTES {
+        return Err(bad(format!("frame length {len} exceeds cap")));
+    }
+    let mut payload = vec![0u8; len];
+    r.read_exact(&mut payload)?;
+    Ok(payload)
+}
+
+/// Encode `msg` and send it as one frame; returns payload bytes written.
+pub fn send_msg<M: Wire>(w: &mut impl Write, msg: &M) -> io::Result<usize> {
+    write_frame(w, &msg.to_bytes())
+}
+
+/// Receive one frame and decode it as `M`; returns the message and its
+/// payload size (the measured wire bytes).
+pub fn recv_msg<M: Wire>(r: &mut impl Read) -> io::Result<(M, usize)> {
+    let payload = read_frame(r)?;
+    Ok((M::from_bytes(&payload)?, payload.len()))
+}
+
+/// The dataset as it crosses the wire at install time: one
+/// [`ColumnBlock`] per feature plus the class block.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct DatasetPayload {
+    /// Dataset name (diagnostics only).
+    pub name: String,
+    /// Feature columns, ids `0..m`, each covering all rows.
+    pub columns: Vec<ColumnBlock>,
+    /// The class column ([`crate::core::CLASS_ID`]).
+    pub class: ColumnBlock,
+}
+
+impl DatasetPayload {
+    /// Snapshot a dataset into its wire form.
+    pub fn from_dataset(data: &DiscreteDataset) -> Self {
+        let n = data.num_rows();
+        Self {
+            name: data.name.clone(),
+            columns: data
+                .cols
+                .iter()
+                .enumerate()
+                .map(|(id, col)| ColumnBlock {
+                    id,
+                    arity: data.arities[id],
+                    rows: 0..n,
+                    values: col.clone(),
+                })
+                .collect(),
+            class: ColumnBlock {
+                id: crate::core::CLASS_ID,
+                arity: data.class_arity,
+                rows: 0..n,
+                values: data.class.clone(),
+            },
+        }
+    }
+
+    /// Rebuild the worker-side dataset. The payload came from a dataset
+    /// validated at construction, so only structural consistency is
+    /// re-checked here.
+    pub fn into_dataset(self) -> io::Result<DiscreteDataset> {
+        let n = self.class.values.len();
+        let mut cols = Vec::with_capacity(self.columns.len());
+        let mut arities = Vec::with_capacity(self.columns.len());
+        for (i, c) in self.columns.into_iter().enumerate() {
+            if c.id != i {
+                return Err(bad(format!("column {i} carries id {}", c.id)));
+            }
+            if c.values.len() != n {
+                return Err(bad(format!(
+                    "column {i} has {} rows, class has {n}",
+                    c.values.len()
+                )));
+            }
+            arities.push(c.arity);
+            cols.push(c.values);
+        }
+        Ok(DiscreteDataset {
+            name: self.name,
+            cols,
+            arities,
+            class: self.class.values,
+            class_arity: self.class.arity,
+        })
+    }
+}
+
+impl Wire for DatasetPayload {
+    fn encode(&self, out: &mut Vec<u8>) {
+        self.name.encode(out);
+        self.columns.encode(out);
+        self.class.encode(out);
+    }
+    fn decode(buf: &mut &[u8]) -> io::Result<Self> {
+        Ok(Self {
+            name: String::decode(buf)?,
+            columns: Vec::<ColumnBlock>::decode(buf)?,
+            class: ColumnBlock::decode(buf)?,
+        })
+    }
+}
+
+/// A pair of attribute ids with its index in the driver's batch, so
+/// results can be reassembled in batch order regardless of which worker
+/// computed them. Ids are `u64` on the wire ([`crate::core::CLASS_ID`]
+/// maps to `u64::MAX`).
+pub type IndexedPair = (u64, (u64, u64));
+
+/// One unit of remote work (see module docs for the vocabulary).
+#[derive(Debug, Clone, PartialEq)]
+pub enum RemoteTask {
+    /// hp map side: partial contingency tables for each pair over the
+    /// row range `rows` of the installed dataset.
+    HpCount {
+        /// Pairs to count, tagged with their batch indices.
+        pairs: Vec<IndexedPair>,
+        /// Row range this task covers (one partition's share).
+        rows: std::ops::Range<usize>,
+    },
+    /// hp reduce side: merge each group of partial tables (shuffle
+    /// blocks routed by the driver) and finish SU on the merged table.
+    HpMergeSu {
+        /// Per batch index: the partial tables to merge.
+        groups: Vec<(u64, Vec<ContingencyTable>)>,
+    },
+    /// Like [`RemoteTask::HpMergeSu`] but returning the merged tables
+    /// themselves — the incremental service's delta-table path.
+    HpMergeTables {
+        /// Per batch index: the partial tables to merge.
+        groups: Vec<(u64, Vec<ContingencyTable>)>,
+    },
+    /// vp local path: SU per pair over full columns of the installed
+    /// dataset (pairs pre-oriented by the driver's `assign_sides`).
+    VpSu {
+        /// Pairs to evaluate, tagged with their batch indices.
+        pairs: Vec<IndexedPair>,
+    },
+}
+
+impl Wire for RemoteTask {
+    fn encode(&self, out: &mut Vec<u8>) {
+        match self {
+            RemoteTask::HpCount { pairs, rows } => {
+                out.push(0);
+                pairs.encode(out);
+                rows.encode(out);
+            }
+            RemoteTask::HpMergeSu { groups } => {
+                out.push(1);
+                groups.encode(out);
+            }
+            RemoteTask::HpMergeTables { groups } => {
+                out.push(2);
+                groups.encode(out);
+            }
+            RemoteTask::VpSu { pairs } => {
+                out.push(3);
+                pairs.encode(out);
+            }
+        }
+    }
+    fn decode(buf: &mut &[u8]) -> io::Result<Self> {
+        match u8::decode(buf)? {
+            0 => Ok(RemoteTask::HpCount {
+                pairs: Vec::decode(buf)?,
+                rows: std::ops::Range::<usize>::decode(buf)?,
+            }),
+            1 => Ok(RemoteTask::HpMergeSu {
+                groups: Vec::decode(buf)?,
+            }),
+            2 => Ok(RemoteTask::HpMergeTables {
+                groups: Vec::decode(buf)?,
+            }),
+            3 => Ok(RemoteTask::VpSu {
+                pairs: Vec::decode(buf)?,
+            }),
+            t => Err(bad(format!("task tag {t}"))),
+        }
+    }
+}
+
+/// What a completed task produced.
+#[derive(Debug, Clone, PartialEq)]
+pub enum TaskResult {
+    /// Contingency tables keyed by batch index (partial or merged).
+    Tables(Vec<(u64, ContingencyTable)>),
+    /// SU values keyed by batch index.
+    Su(Vec<(u64, f64)>),
+}
+
+impl Wire for TaskResult {
+    fn encode(&self, out: &mut Vec<u8>) {
+        match self {
+            TaskResult::Tables(t) => {
+                out.push(0);
+                t.encode(out);
+            }
+            TaskResult::Su(s) => {
+                out.push(1);
+                s.encode(out);
+            }
+        }
+    }
+    fn decode(buf: &mut &[u8]) -> io::Result<Self> {
+        match u8::decode(buf)? {
+            0 => Ok(TaskResult::Tables(Vec::decode(buf)?)),
+            1 => Ok(TaskResult::Su(Vec::decode(buf)?)),
+            t => Err(bad(format!("result tag {t}"))),
+        }
+    }
+}
+
+/// Driver → worker messages.
+#[derive(Debug, Clone, PartialEq)]
+pub enum DriverMsg {
+    /// Install the dataset (once per worker process; re-sent to workers
+    /// spawned by a pool resize). Worker acks with [`WorkerMsg::Ready`].
+    Install(DatasetPayload),
+    /// Execute one task; `id` is echoed back so the driver can match
+    /// replies to (possibly speculatively duplicated) dispatches.
+    Task {
+        /// Pool-unique dispatch id.
+        id: u64,
+        /// The work itself.
+        task: RemoteTask,
+    },
+    /// Failure-injection hook: exit the process (without replying) upon
+    /// receiving the task that arrives after `after` more completions.
+    /// Deterministic by construction — no kill-signal races.
+    ArmCrash {
+        /// Tasks still to complete normally before crashing.
+        after: u64,
+    },
+    /// Exit cleanly.
+    Shutdown,
+}
+
+impl Wire for DriverMsg {
+    fn encode(&self, out: &mut Vec<u8>) {
+        match self {
+            DriverMsg::Install(p) => {
+                out.push(0);
+                p.encode(out);
+            }
+            DriverMsg::Task { id, task } => {
+                out.push(1);
+                id.encode(out);
+                task.encode(out);
+            }
+            DriverMsg::ArmCrash { after } => {
+                out.push(2);
+                after.encode(out);
+            }
+            DriverMsg::Shutdown => out.push(3),
+        }
+    }
+    fn decode(buf: &mut &[u8]) -> io::Result<Self> {
+        match u8::decode(buf)? {
+            0 => Ok(DriverMsg::Install(DatasetPayload::decode(buf)?)),
+            1 => Ok(DriverMsg::Task {
+                id: u64::decode(buf)?,
+                task: RemoteTask::decode(buf)?,
+            }),
+            2 => Ok(DriverMsg::ArmCrash {
+                after: u64::decode(buf)?,
+            }),
+            3 => Ok(DriverMsg::Shutdown),
+            t => Err(bad(format!("driver msg tag {t}"))),
+        }
+    }
+}
+
+/// Worker → driver messages.
+#[derive(Debug, Clone, PartialEq)]
+pub enum WorkerMsg {
+    /// Handshake: sent once after connecting and once per
+    /// [`DriverMsg::Install`] ack.
+    Ready,
+    /// A task finished. `secs` is the worker-measured compute time of
+    /// this attempt (feeds the virtual-cluster replay's task times).
+    Done {
+        /// The dispatch id being answered.
+        id: u64,
+        /// Worker-side compute seconds.
+        secs: f64,
+        /// The produced result.
+        result: TaskResult,
+    },
+}
+
+impl Wire for WorkerMsg {
+    fn encode(&self, out: &mut Vec<u8>) {
+        match self {
+            WorkerMsg::Ready => out.push(0),
+            WorkerMsg::Done { id, secs, result } => {
+                out.push(1);
+                id.encode(out);
+                secs.encode(out);
+                result.encode(out);
+            }
+        }
+    }
+    fn decode(buf: &mut &[u8]) -> io::Result<Self> {
+        match u8::decode(buf)? {
+            0 => Ok(WorkerMsg::Ready),
+            1 => Ok(WorkerMsg::Done {
+                id: u64::decode(buf)?,
+                secs: f64::decode(buf)?,
+                result: TaskResult::decode(buf)?,
+            }),
+            t => Err(bad(format!("worker msg tag {t}"))),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::os::unix::net::UnixStream;
+
+    fn table() -> ContingencyTable {
+        let mut t = ContingencyTable::new(2, 3);
+        t.bump(1, 2);
+        t.bump(0, 0);
+        t
+    }
+
+    #[test]
+    fn messages_round_trip() {
+        let msgs = vec![
+            DriverMsg::Install(DatasetPayload {
+                name: "t".into(),
+                columns: vec![ColumnBlock {
+                    id: 0,
+                    arity: 2,
+                    rows: 0..3,
+                    values: vec![0, 1, 1],
+                }],
+                class: ColumnBlock {
+                    id: crate::core::CLASS_ID,
+                    arity: 2,
+                    rows: 0..3,
+                    values: vec![1, 0, 1],
+                },
+            }),
+            DriverMsg::Task {
+                id: 7,
+                task: RemoteTask::HpCount {
+                    pairs: vec![(0, (0, u64::MAX))],
+                    rows: 0..3,
+                },
+            },
+            DriverMsg::Task {
+                id: 8,
+                task: RemoteTask::HpMergeSu {
+                    groups: vec![(0, vec![table(), table()])],
+                },
+            },
+            DriverMsg::Task {
+                id: 9,
+                task: RemoteTask::VpSu {
+                    pairs: vec![(3, (1, 2))],
+                },
+            },
+            DriverMsg::ArmCrash { after: 2 },
+            DriverMsg::Shutdown,
+        ];
+        for m in &msgs {
+            assert_eq!(&DriverMsg::from_bytes(&m.to_bytes()).unwrap(), m);
+        }
+        let replies = vec![
+            WorkerMsg::Ready,
+            WorkerMsg::Done {
+                id: 7,
+                secs: 0.25,
+                result: TaskResult::Tables(vec![(0, table())]),
+            },
+            WorkerMsg::Done {
+                id: 9,
+                secs: 0.5,
+                result: TaskResult::Su(vec![(3, 0.125)]),
+            },
+        ];
+        for m in &replies {
+            assert_eq!(&WorkerMsg::from_bytes(&m.to_bytes()).unwrap(), m);
+        }
+    }
+
+    #[test]
+    fn frames_cross_a_real_socket() {
+        let (mut a, mut b) = UnixStream::pair().unwrap();
+        let msg = DriverMsg::Task {
+            id: 1,
+            task: RemoteTask::VpSu {
+                pairs: vec![(0, (0, 1))],
+            },
+        };
+        let sent = send_msg(&mut a, &msg).unwrap();
+        let (back, received): (DriverMsg, usize) = recv_msg(&mut b).unwrap();
+        assert_eq!(back, msg);
+        // The measured byte count is symmetric: what the driver paid to
+        // send is exactly what the worker read.
+        assert_eq!(sent, received);
+        assert_eq!(sent, msg.to_bytes().len());
+    }
+
+    #[test]
+    fn dataset_payload_round_trips_through_dataset() {
+        let data = DiscreteDataset::new(
+            "rt",
+            vec![vec![0, 1, 2, 1], vec![1, 1, 0, 0]],
+            vec![3, 2],
+            vec![0, 1, 0, 1],
+            2,
+        )
+        .unwrap();
+        let payload = DatasetPayload::from_dataset(&data);
+        let bytes = payload.to_bytes();
+        let back = DatasetPayload::from_bytes(&bytes).unwrap();
+        assert_eq!(back.to_bytes(), bytes);
+        let rebuilt = back.into_dataset().unwrap();
+        assert_eq!(rebuilt.cols, data.cols);
+        assert_eq!(rebuilt.arities, data.arities);
+        assert_eq!(rebuilt.class, data.class);
+        assert_eq!(rebuilt.class_arity, data.class_arity);
+    }
+
+    #[test]
+    fn oversized_frame_length_rejected() {
+        let mut buf: &[u8] = &u32::MAX.to_le_bytes();
+        assert!(read_frame(&mut buf).is_err());
+    }
+}

@@ -1,0 +1,224 @@
+//! Execution of the remote task vocabulary against an installed dataset.
+//!
+//! This is the single definition of what each [`RemoteTask`] *means*,
+//! shared by the worker process loop ([`super::worker`]) and the
+//! in-process backend variant — so the two backends cannot drift: a task
+//! produces the same bytes no matter which side of a process boundary it
+//! runs on. All numeric work goes through the same [`SuEngine`] the
+//! in-process correlators use, which is what makes multi-process DiCFS
+//! **bit-identical** to in-process DiCFS (u64 table counts are exact and
+//! merge-order independent; SU is computed from identical tables or
+//! identical column slices).
+
+use crate::correlation::ContingencyTable;
+use crate::data::columnar::DiscreteDataset;
+use crate::runtime::{ColumnPair, SuEngine};
+
+use super::protocol::{IndexedPair, RemoteTask, TaskResult};
+
+/// Map a wire feature id back to a [`crate::core::FeatureId`]
+/// (`u64::MAX` is the class, numerically identical to
+/// [`crate::core::CLASS_ID`] on 64-bit targets — asserted in tests).
+fn fid(wire_id: u64) -> usize {
+    wire_id as usize
+}
+
+/// Borrow the column pair of an indexed wire pair from the dataset.
+fn column_pair<'a>(data: &'a DiscreteDataset, pair: &IndexedPair) -> ColumnPair<'a> {
+    let (x, bins_x) = data.column(fid(pair.1 .0));
+    let (y, bins_y) = data.column(fid(pair.1 .1));
+    ColumnPair {
+        x,
+        bins_x,
+        y,
+        bins_y,
+    }
+}
+
+/// Merge a group of partial tables into one (exact u64 sums; order
+/// independent). Panics on an empty group or shape mismatch — both are
+/// driver routing bugs, and a worker panic surfaces as a task failure.
+fn merge_group(tables: &[ContingencyTable]) -> ContingencyTable {
+    let mut acc = tables.first().expect("non-empty shuffle group").clone();
+    for t in &tables[1..] {
+        acc.merge(t).expect("shuffle group shape mismatch");
+    }
+    acc
+}
+
+/// Execute one task against the installed dataset. Deterministic: the
+/// result depends only on `(data, task)`, never on which worker ran it —
+/// the invariant speculative duplicates rely on.
+pub fn execute_task(
+    data: &DiscreteDataset,
+    engine: &dyn SuEngine,
+    task: &RemoteTask,
+) -> TaskResult {
+    match task {
+        RemoteTask::HpCount { pairs, rows } => {
+            let cps: Vec<ColumnPair<'_>> = pairs.iter().map(|p| column_pair(data, p)).collect();
+            let tables = engine.ctables(&cps, rows.clone());
+            TaskResult::Tables(pairs.iter().map(|p| p.0).zip(tables).collect())
+        }
+        RemoteTask::HpMergeSu { groups } => {
+            let merged: Vec<(u64, ContingencyTable)> = groups
+                .iter()
+                .map(|(idx, tables)| (*idx, merge_group(tables)))
+                .collect();
+            let refs: Vec<&ContingencyTable> = merged.iter().map(|(_, t)| t).collect();
+            let sus = engine.su_from_tables(&refs);
+            TaskResult::Su(merged.iter().map(|(idx, _)| *idx).zip(sus).collect())
+        }
+        RemoteTask::HpMergeTables { groups } => TaskResult::Tables(
+            groups
+                .iter()
+                .map(|(idx, tables)| (*idx, merge_group(tables)))
+                .collect(),
+        ),
+        RemoteTask::VpSu { pairs } => {
+            let cps: Vec<ColumnPair<'_>> = pairs.iter().map(|p| column_pair(data, p)).collect();
+            let sus = engine.su_from_column_pairs(&cps);
+            TaskResult::Su(pairs.iter().map(|p| p.0).zip(sus).collect())
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::CLASS_ID;
+    use crate::runtime::NativeEngine;
+
+    fn data() -> DiscreteDataset {
+        DiscreteDataset::new(
+            "t",
+            vec![vec![0, 1, 2, 1, 0, 2], vec![1, 0, 1, 0, 1, 0]],
+            vec![3, 2],
+            vec![0, 1, 1, 0, 0, 1],
+            2,
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn class_id_survives_the_wire() {
+        // The wire encodes feature ids as u64; CLASS_ID must map to
+        // itself through the round trip on this target.
+        assert_eq!(fid(CLASS_ID as u64), CLASS_ID);
+    }
+
+    #[test]
+    fn hp_count_then_merge_su_equals_direct_su() {
+        let d = data();
+        let engine = NativeEngine;
+        // Partial tables over two row halves...
+        let pair: IndexedPair = (0, (0, CLASS_ID as u64));
+        let r1 = execute_task(
+            &d,
+            &engine,
+            &RemoteTask::HpCount {
+                pairs: vec![pair],
+                rows: 0..3,
+            },
+        );
+        let r2 = execute_task(
+            &d,
+            &engine,
+            &RemoteTask::HpCount {
+                pairs: vec![pair],
+                rows: 3..6,
+            },
+        );
+        let (TaskResult::Tables(t1), TaskResult::Tables(t2)) = (r1, r2) else {
+            panic!("count returned non-tables")
+        };
+        // ...merged and finished remotely...
+        let merged = execute_task(
+            &d,
+            &engine,
+            &RemoteTask::HpMergeSu {
+                groups: vec![(0, vec![t1[0].1.clone(), t2[0].1.clone()])],
+            },
+        );
+        let TaskResult::Su(sus) = merged else {
+            panic!("merge-su returned non-su")
+        };
+        // ...must equal the full-range computation bit for bit.
+        let (x, bx) = d.column(0);
+        let (y, by) = d.column(CLASS_ID);
+        let full = ContingencyTable::from_columns(x, bx, y, by);
+        let direct = engine.su_from_tables(&[&full]);
+        assert_eq!(sus, vec![(0, direct[0])]);
+    }
+
+    #[test]
+    fn merge_tables_matches_from_scratch() {
+        let d = data();
+        let engine = NativeEngine;
+        let pair: IndexedPair = (5, (0, 1));
+        let halves: Vec<ContingencyTable> = [0..2usize, 2..6]
+            .into_iter()
+            .map(|rows| {
+                let TaskResult::Tables(t) = execute_task(
+                    &d,
+                    &engine,
+                    &RemoteTask::HpCount {
+                        pairs: vec![pair],
+                        rows,
+                    },
+                ) else {
+                    panic!()
+                };
+                t.into_iter().next().unwrap().1
+            })
+            .collect();
+        let TaskResult::Tables(merged) = execute_task(
+            &d,
+            &engine,
+            &RemoteTask::HpMergeTables {
+                groups: vec![(5, halves)],
+            },
+        ) else {
+            panic!()
+        };
+        let (x, bx) = d.column(0);
+        let (y, by) = d.column(1);
+        assert_eq!(merged, vec![(5, ContingencyTable::from_columns(x, bx, y, by))]);
+    }
+
+    #[test]
+    fn vp_su_matches_hp_su() {
+        // The two lowerings of the same pair agree exactly (the paper's
+        // hp ≡ vp equivalence, here at the task level).
+        let d = data();
+        let engine = NativeEngine;
+        let pair: IndexedPair = (1, (1, CLASS_ID as u64));
+        let TaskResult::Su(vp) = execute_task(
+            &d,
+            &engine,
+            &RemoteTask::VpSu { pairs: vec![pair] },
+        ) else {
+            panic!()
+        };
+        let TaskResult::Tables(t) = execute_task(
+            &d,
+            &engine,
+            &RemoteTask::HpCount {
+                pairs: vec![pair],
+                rows: 0..6,
+            },
+        ) else {
+            panic!()
+        };
+        let TaskResult::Su(hp) = execute_task(
+            &d,
+            &engine,
+            &RemoteTask::HpMergeSu {
+                groups: vec![(1, vec![t[0].1.clone()])],
+            },
+        ) else {
+            panic!()
+        };
+        assert_eq!(vp, hp);
+    }
+}

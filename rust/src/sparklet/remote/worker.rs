@@ -1,0 +1,246 @@
+//! The worker-process side of the protocol: what runs when the `dicfs`
+//! binary is re-invoked as `dicfs --worker <socket>`.
+//!
+//! A worker connects to the driver's Unix socket, sends
+//! [`WorkerMsg::Ready`], and then serves [`DriverMsg`]s until shutdown
+//! or EOF. It holds exactly one installed dataset at a time and runs
+//! every task through the native engine — the same kernels the
+//! in-process executors run, which is the bit-identity guarantee.
+//!
+//! The serve loop is separated from process plumbing so library tests
+//! can drive a "worker" over a `UnixStream::pair()` without spawning a
+//! process; the crash-injection path (`ArmCrash` → `process::exit`) is
+//! only reachable in a real worker process and is exercised by the
+//! integration tests.
+
+use std::io;
+use std::os::unix::net::UnixStream;
+use std::time::Instant;
+
+use crate::data::columnar::DiscreteDataset;
+use crate::runtime::NativeEngine;
+
+use super::protocol::{recv_msg, send_msg, DriverMsg, WorkerMsg};
+use super::tasks::execute_task;
+
+/// Exit code of a deliberately crashed worker (failure injection).
+pub const CRASH_EXIT_CODE: i32 = 17;
+
+/// Entry point for `--worker` mode: connect to the driver and serve
+/// until shutdown. Returns the process exit code.
+pub fn worker_main(socket_path: &str) -> i32 {
+    let stream = match UnixStream::connect(socket_path) {
+        Ok(s) => s,
+        Err(e) => {
+            eprintln!("dicfs worker: cannot connect to {socket_path}: {e}");
+            return 1;
+        }
+    };
+    match serve(stream, &mut RealCrash) {
+        Ok(()) => 0,
+        Err(e) => {
+            // A vanished driver (EOF / broken pipe) is a normal way for
+            // a worker to end; anything else is reported.
+            if e.kind() == io::ErrorKind::UnexpectedEof || e.kind() == io::ErrorKind::BrokenPipe {
+                0
+            } else {
+                eprintln!("dicfs worker: {e}");
+                1
+            }
+        }
+    }
+}
+
+/// How an armed crash fires. Abstracted so the serve loop is testable
+/// in-process (a test hook records the trigger instead of exiting).
+pub(crate) trait CrashHook {
+    fn fire(&mut self) -> io::Result<()>;
+}
+
+struct RealCrash;
+
+impl CrashHook for RealCrash {
+    fn fire(&mut self) -> io::Result<()> {
+        // Exit without replying: the driver observes a dead connection
+        // with the task still in flight — a mid-shuffle worker loss.
+        std::process::exit(CRASH_EXIT_CODE);
+    }
+}
+
+/// Serve one driver connection to completion.
+pub(crate) fn serve(mut stream: UnixStream, crash: &mut dyn CrashHook) -> io::Result<()> {
+    send_msg(&mut stream, &WorkerMsg::Ready)?;
+    let engine = NativeEngine;
+    let mut data: Option<DiscreteDataset> = None;
+    // `None` = disarmed; `Some(k)` = complete k more tasks normally,
+    // then die on the next one.
+    let mut crash_after: Option<u64> = None;
+
+    loop {
+        let (msg, _bytes): (DriverMsg, usize) = recv_msg(&mut stream)?;
+        match msg {
+            DriverMsg::Install(payload) => {
+                data = Some(payload.into_dataset()?);
+                send_msg(&mut stream, &WorkerMsg::Ready)?;
+            }
+            DriverMsg::Task { id, task } => {
+                if crash_after == Some(0) {
+                    crash.fire()?;
+                    // Test hook only: a real crash never returns.
+                    continue;
+                }
+                let d = data
+                    .as_ref()
+                    .ok_or_else(|| super::codec::bad("task before dataset install"))?;
+                let t0 = Instant::now();
+                let result = execute_task(d, &engine, &task);
+                let secs = t0.elapsed().as_secs_f64();
+                send_msg(&mut stream, &WorkerMsg::Done { id, secs, result })?;
+                if let Some(left) = crash_after.as_mut() {
+                    *left = left.saturating_sub(1);
+                }
+            }
+            DriverMsg::ArmCrash { after } => crash_after = Some(after),
+            DriverMsg::Shutdown => return Ok(()),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::CLASS_ID;
+    use crate::correlation::ContingencyTable;
+    use crate::sparklet::remote::protocol::{DatasetPayload, RemoteTask, TaskResult};
+
+    struct RecordingCrash(bool);
+    impl CrashHook for RecordingCrash {
+        fn fire(&mut self) -> io::Result<()> {
+            self.0 = true;
+            // Simulate the vanishing worker by erroring out of serve.
+            Err(io::Error::other("crashed"))
+        }
+    }
+
+    fn dataset() -> DiscreteDataset {
+        DiscreteDataset::new(
+            "w",
+            vec![vec![0, 1, 0, 1], vec![1, 1, 0, 0]],
+            vec![2, 2],
+            vec![0, 1, 0, 1],
+            2,
+        )
+        .unwrap()
+    }
+
+    /// Drive `serve` over a socketpair from the test thread.
+    fn with_worker(f: impl FnOnce(&mut UnixStream)) -> io::Result<()> {
+        let (mut driver, worker) = UnixStream::pair().unwrap();
+        let handle = std::thread::spawn(move || serve(worker, &mut RealCrashNever));
+        let (ready, _): (WorkerMsg, usize) = recv_msg(&mut driver).unwrap();
+        assert_eq!(ready, WorkerMsg::Ready);
+        f(&mut driver);
+        drop(driver); // EOF ends the serve loop
+        handle.join().unwrap()
+    }
+
+    struct RealCrashNever;
+    impl CrashHook for RealCrashNever {
+        fn fire(&mut self) -> io::Result<()> {
+            panic!("crash fired in a test that never armed one")
+        }
+    }
+
+    #[test]
+    fn install_then_task_over_socketpair() {
+        let data = dataset();
+        let expected = {
+            let (x, bx) = data.column(0);
+            let (y, by) = data.column(CLASS_ID);
+            ContingencyTable::from_columns(x, bx, y, by)
+        };
+        let err = with_worker(|driver| {
+            let install = DriverMsg::Install(DatasetPayload::from_dataset(&dataset()));
+            send_msg(driver, &install).unwrap();
+            let (ack, _): (WorkerMsg, usize) = recv_msg(driver).unwrap();
+            assert_eq!(ack, WorkerMsg::Ready);
+
+            send_msg(
+                driver,
+                &DriverMsg::Task {
+                    id: 42,
+                    task: RemoteTask::HpCount {
+                        pairs: vec![(0, (0, CLASS_ID as u64))],
+                        rows: 0..4,
+                    },
+                },
+            )
+            .unwrap();
+            let (reply, _): (WorkerMsg, usize) = recv_msg(driver).unwrap();
+            let WorkerMsg::Done { id, secs, result } = reply else {
+                panic!("expected Done")
+            };
+            assert_eq!(id, 42);
+            assert!(secs >= 0.0);
+            assert_eq!(result, TaskResult::Tables(vec![(0, expected.clone())]));
+        });
+        // Driver hang-up is a clean end.
+        assert!(err.is_err());
+    }
+
+    #[test]
+    fn task_before_install_is_an_error() {
+        let (mut driver, worker) = UnixStream::pair().unwrap();
+        let handle = std::thread::spawn(move || serve(worker, &mut RealCrashNever));
+        let (_ready, _): (WorkerMsg, usize) = recv_msg(&mut driver).unwrap();
+        send_msg(
+            &mut driver,
+            &DriverMsg::Task {
+                id: 1,
+                task: RemoteTask::VpSu { pairs: vec![] },
+            },
+        )
+        .unwrap();
+        let res = handle.join().unwrap();
+        assert!(res.is_err());
+    }
+
+    #[test]
+    fn shutdown_ends_serve_cleanly() {
+        let (mut driver, worker) = UnixStream::pair().unwrap();
+        let handle = std::thread::spawn(move || serve(worker, &mut RealCrashNever));
+        let (_ready, _): (WorkerMsg, usize) = recv_msg(&mut driver).unwrap();
+        send_msg(&mut driver, &DriverMsg::Shutdown).unwrap();
+        assert!(handle.join().unwrap().is_ok());
+    }
+
+    #[test]
+    fn armed_crash_fires_after_count() {
+        let (mut driver, worker) = UnixStream::pair().unwrap();
+        let handle = std::thread::spawn(move || {
+            let mut hook = RecordingCrash(false);
+            let res = serve(worker, &mut hook);
+            (res, hook.0)
+        });
+        let (_ready, _): (WorkerMsg, usize) = recv_msg(&mut driver).unwrap();
+        send_msg(&mut driver, &DriverMsg::Install(DatasetPayload::from_dataset(&dataset())))
+            .unwrap();
+        let (_ack, _): (WorkerMsg, usize) = recv_msg(&mut driver).unwrap();
+        // Arm: one more normal completion, then die.
+        send_msg(&mut driver, &DriverMsg::ArmCrash { after: 1 }).unwrap();
+        let task = |id| DriverMsg::Task {
+            id,
+            task: RemoteTask::VpSu {
+                pairs: vec![(0, (0, 1))],
+            },
+        };
+        send_msg(&mut driver, &task(1)).unwrap();
+        let (first, _): (WorkerMsg, usize) = recv_msg(&mut driver).unwrap();
+        assert!(matches!(first, WorkerMsg::Done { id: 1, .. }));
+        // The next task triggers the armed crash: no reply, serve errors.
+        send_msg(&mut driver, &task(2)).unwrap();
+        let (res, fired) = handle.join().unwrap();
+        assert!(res.is_err());
+        assert!(fired, "crash hook never fired");
+    }
+}

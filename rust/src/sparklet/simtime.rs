@@ -64,7 +64,12 @@ pub fn simulate_job_time(
         match stage.kind {
             StageKind::Map => {}
             StageKind::Shuffle => {
-                network += cluster.net.shuffle_secs(stage.shuffle_bytes, cluster.nodes);
+                // Prefer the wire-measured byte count when the stage
+                // actually serialized across a process boundary; fall
+                // back to the caller's estimate for in-process stages.
+                network += cluster
+                    .net
+                    .shuffle_secs(stage.wire_shuffle_bytes(), cluster.nodes);
             }
             StageKind::Collect => {
                 network += cluster.net.collect_secs(stage.collect_bytes);
@@ -103,6 +108,7 @@ mod tests {
                 reduce_task_secs: vec![],
                 retries: 0,
                 shuffle_bytes: shuffle,
+                measured_shuffle_bytes: None,
                 collect_bytes: 0,
             }],
             broadcast_bytes: vec![],
@@ -142,6 +148,17 @@ mod tests {
         let jm = job_with_tasks(vec![0.1], StageKind::Shuffle, 1 << 30);
         let sim = simulate_job_time(&jm, &ClusterConfig::with_nodes(10), 0.0);
         assert!(sim.network_secs > 0.01); // 1 GiB over the model is visible
+    }
+
+    #[test]
+    fn measured_wire_bytes_override_estimate() {
+        // An estimate of 8 B prices as ~free; a measured GiB must
+        // dominate once the stage carries real wire bytes.
+        let mut jm = job_with_tasks(vec![0.1], StageKind::Shuffle, 8);
+        let est = simulate_job_time(&jm, &ClusterConfig::with_nodes(10), 0.0).network_secs;
+        jm.stages[0].measured_shuffle_bytes = Some(1 << 30);
+        let meas = simulate_job_time(&jm, &ClusterConfig::with_nodes(10), 0.0).network_secs;
+        assert!(meas > est + 0.01);
     }
 
     #[test]

@@ -1,0 +1,277 @@
+//! Multi-process executor integration tests: real `dicfs --worker`
+//! processes spawned over Unix sockets.
+//!
+//! These live in an integration test (not lib unit tests) because the
+//! worker executable is the `dicfs` binary itself: under `cargo test`
+//! the current executable is the libtest harness, which does not speak
+//! the worker protocol, so the pool is pointed at the real binary via
+//! `CARGO_BIN_EXE_dicfs` / the `DICFS_WORKER_EXE` override.
+//!
+//! The two load-bearing claims:
+//! * **bit-identity** — multi-process DiCFS (hp, vp, and auto) selects
+//!   the same features with bit-equal merits as in-process DiCFS;
+//! * **fault tolerance** — a worker killed mid-shuffle has its tasks
+//!   re-executed on the survivors, to the same result, with the retry
+//!   visible in the metrics.
+
+use std::sync::Arc;
+
+use dicfs::cfs::SharedCorrelator;
+use dicfs::core::CLASS_ID;
+use dicfs::correlation::su::symmetrical_uncertainty;
+use dicfs::data::columnar::DiscreteDataset;
+use dicfs::data::synth::{higgs_like, SynthConfig};
+use dicfs::dicfs::plan::Strategy;
+use dicfs::dicfs::remote::{spawn_installed_pool, RemoteCorrelator};
+use dicfs::dicfs::{DiCfs, DiCfsConfig, Partitioning};
+use dicfs::discretize::discretize_dataset;
+use dicfs::sparklet::remote::{
+    DatasetPayload, ProcessPool, ProcessPoolConfig, RemoteTask, TaskResult,
+};
+use dicfs::sparklet::{ClusterConfig, SparkletContext};
+
+/// Point the pool at the real `dicfs` binary (see module docs).
+fn worker_exe() -> std::path::PathBuf {
+    let exe = env!("CARGO_BIN_EXE_dicfs");
+    std::env::set_var("DICFS_WORKER_EXE", exe);
+    exe.into()
+}
+
+fn dataset(rows: usize, features: usize) -> Arc<DiscreteDataset> {
+    let ds = higgs_like(&SynthConfig {
+        rows,
+        seed: 42,
+        features: Some(features),
+    });
+    Arc::new(discretize_dataset(&ds).unwrap())
+}
+
+fn pool_config(workers: usize, speculation: bool) -> ProcessPoolConfig {
+    ProcessPoolConfig {
+        workers,
+        speculation,
+        worker_exe: Some(worker_exe()),
+    }
+}
+
+/// Run the same selection in-process and multi-process and require
+/// bit-identical output.
+fn assert_backend_equivalence(partitioning: Partitioning) -> dicfs::dicfs::DiCfsRun {
+    worker_exe();
+    let dd = dataset(700, 9);
+    let in_proc = DiCfs::native(DiCfsConfig::for_scheme(partitioning, 4)).select(&dd);
+    let mut cfg = DiCfsConfig::for_scheme(partitioning, 4);
+    cfg.workers_proc = Some(2);
+    let multi = DiCfs::native(cfg).select(&dd);
+
+    assert_eq!(
+        multi.result.selected, in_proc.result.selected,
+        "multi-process selected different features"
+    );
+    assert_eq!(
+        multi.result.merit.to_bits(),
+        in_proc.result.merit.to_bits(),
+        "merit not bit-identical: {} vs {}",
+        multi.result.merit,
+        in_proc.result.merit
+    );
+    // The install shipped the dataset over a real wire.
+    assert!(
+        multi.metrics.total_measured_shuffle_bytes() > 0,
+        "no measured wire bytes recorded"
+    );
+    let install = multi
+        .metrics
+        .stages
+        .iter()
+        .find(|s| s.label == "ipcInstall")
+        .expect("install stage recorded");
+    assert!(install.measured_shuffle_bytes.unwrap() > 0);
+    // In-process runs must not claim measured wire traffic.
+    assert_eq!(in_proc.metrics.total_measured_shuffle_bytes(), 0);
+    assert!(in_proc.calibrated_net.is_none());
+    multi
+}
+
+#[test]
+fn hp_multi_process_is_bit_identical() {
+    let multi = assert_backend_equivalence(Partitioning::Horizontal);
+    // hp's shuffle stages carry both the estimate and the measurement.
+    let shuffle = multi
+        .metrics
+        .stages
+        .iter()
+        .find(|s| s.label == "ipcLocalCTables+mergeCTables")
+        .expect("remote hp shuffle stage");
+    assert!(shuffle.shuffle_bytes > 0, "estimated bytes missing");
+    assert!(
+        shuffle.measured_shuffle_bytes.unwrap() > 0,
+        "measured bytes missing"
+    );
+}
+
+#[test]
+fn vp_multi_process_is_bit_identical() {
+    let multi = assert_backend_equivalence(Partitioning::Vertical);
+    assert!(multi
+        .metrics
+        .stages
+        .iter()
+        .any(|s| s.label == "ipcComputeSU"));
+}
+
+#[test]
+fn auto_multi_process_is_bit_identical() {
+    let multi = assert_backend_equivalence(Partitioning::Auto);
+    // The planner routed every batch and logged its decisions.
+    assert!(!multi.decisions.is_empty());
+    for d in &multi.decisions {
+        assert!(d.predicted_secs > 0.0 && d.observed_secs > 0.0);
+    }
+}
+
+#[test]
+fn killed_worker_tasks_are_reexecuted() {
+    let dd = dataset(500, 6);
+    let mut pool = ProcessPool::new(pool_config(2, false)).unwrap();
+    pool.install(&DatasetPayload::from_dataset(&dd)).unwrap();
+    // Worker 0 will die on its next task, without replying.
+    pool.arm_crash(0, 0).unwrap();
+
+    let tasks: Vec<RemoteTask> = (0..4u64)
+        .map(|f| RemoteTask::VpSu {
+            pairs: vec![(f, (f, CLASS_ID as u64))],
+        })
+        .collect();
+    let out = pool.run_tasks(&tasks).unwrap();
+
+    assert!(out.retries >= 1, "crash did not surface as a retry");
+    assert_eq!(pool.alive_workers(), 1, "crashed worker still counted");
+    for (i, r) in out.results.iter().enumerate() {
+        let TaskResult::Su(sus) = r else { panic!("vp task returns SU") };
+        let (x, bx) = dd.column(i);
+        let (y, by) = dd.column(CLASS_ID);
+        assert_eq!(
+            sus[0],
+            (i as u64, symmetrical_uncertainty(x, bx, y, by)),
+            "re-executed task diverged"
+        );
+    }
+
+    // The survivor keeps serving later stages.
+    let again = pool.run_tasks(&tasks[..2]).unwrap();
+    assert_eq!(again.results.len(), 2);
+    assert_eq!(again.retries, 0);
+}
+
+#[test]
+fn worker_crash_mid_shuffle_is_recovered_and_recorded() {
+    let dd = dataset(600, 8);
+    let ctx = SparkletContext::new(ClusterConfig::with_nodes(2));
+    let pool = spawn_installed_pool(&ctx, dd.as_ref(), pool_config(2, false)).unwrap();
+    // Die on the first map task of the hp shuffle.
+    pool.lock().unwrap().arm_crash(0, 0).unwrap();
+
+    let corr = RemoteCorrelator::new(&ctx, Arc::clone(&dd), pool, Strategy::Hp);
+    let pairs: Vec<(usize, usize)> = (0..8).map(|f| (f, CLASS_ID)).collect();
+    let got = corr.compute_batch(&pairs);
+
+    for (i, &(a, b)) in pairs.iter().enumerate() {
+        let (x, bx) = dd.column(a);
+        let (y, by) = dd.column(b);
+        assert_eq!(
+            got[i],
+            symmetrical_uncertainty(x, bx, y, by),
+            "SU diverged after mid-shuffle crash"
+        );
+    }
+    let m = ctx.metrics();
+    let shuffle = m
+        .stages
+        .iter()
+        .find(|s| s.label == "ipcLocalCTables+mergeCTables")
+        .expect("shuffle stage");
+    assert!(shuffle.retries >= 1, "retry not recorded in stage metrics");
+    assert!(m.total_retries() >= 1);
+}
+
+#[test]
+fn speculative_duplicates_do_not_change_results() {
+    let dd = dataset(500, 6);
+    let mut plain = ProcessPool::new(pool_config(3, false)).unwrap();
+    let mut spec = ProcessPool::new(pool_config(3, true)).unwrap();
+    plain.install(&DatasetPayload::from_dataset(&dd)).unwrap();
+    spec.install(&DatasetPayload::from_dataset(&dd)).unwrap();
+
+    // Fewer tasks than workers: the idle worker is guaranteed to get a
+    // speculative duplicate of an in-flight task.
+    let tasks: Vec<RemoteTask> = (0..2u64)
+        .map(|f| RemoteTask::VpSu {
+            pairs: vec![(f, (f, CLASS_ID as u64))],
+        })
+        .collect();
+    let a = plain.run_tasks(&tasks).unwrap();
+    let b = spec.run_tasks(&tasks).unwrap();
+
+    assert!(b.speculative >= 1, "idle workers never speculated");
+    assert_eq!(a.results, b.results, "speculation changed results");
+    assert_eq!(a.speculative, 0);
+
+    // Pools stay healthy after the speculative losers are drained.
+    assert_eq!(spec.alive_workers(), 3);
+    let again = spec.run_tasks(&tasks).unwrap();
+    assert_eq!(again.results, a.results);
+}
+
+#[test]
+fn pool_resizes_between_stages() {
+    let dd = dataset(400, 5);
+    let mut pool = ProcessPool::new(pool_config(1, false)).unwrap();
+    pool.install(&DatasetPayload::from_dataset(&dd)).unwrap();
+
+    let tasks: Vec<RemoteTask> = (0..5u64)
+        .map(|f| RemoteTask::VpSu {
+            pairs: vec![(f, (f, CLASS_ID as u64))],
+        })
+        .collect();
+    let one = pool.run_tasks(&tasks).unwrap();
+
+    // Grow: new workers must replay the dataset install.
+    pool.resize(3).unwrap();
+    assert_eq!(pool.alive_workers(), 3);
+    let three = pool.run_tasks(&tasks).unwrap();
+    assert_eq!(one.results, three.results);
+
+    // Shrink back down.
+    pool.resize(1).unwrap();
+    assert_eq!(pool.alive_workers(), 1);
+    let back = pool.run_tasks(&tasks).unwrap();
+    assert_eq!(one.results, back.results);
+}
+
+#[test]
+fn wire_samples_are_collected_for_calibration() {
+    let dd = dataset(500, 6);
+    let mut pool = ProcessPool::new(pool_config(2, false)).unwrap();
+    pool.install(&DatasetPayload::from_dataset(&dd)).unwrap();
+    assert!(pool.install_bytes() > 0);
+
+    // A mix of payload sizes gives the least-squares fit something to
+    // work with (identical sizes cannot identify a slope).
+    let mut tasks: Vec<RemoteTask> = (0..4u64)
+        .map(|f| RemoteTask::VpSu {
+            pairs: vec![(f, (f, CLASS_ID as u64))],
+        })
+        .collect();
+    tasks.push(RemoteTask::HpCount {
+        pairs: (0..5u64).map(|f| (f, (f, CLASS_ID as u64))).collect(),
+        rows: 0..500,
+    });
+    let _ = pool.run_tasks(&tasks).unwrap();
+
+    assert_eq!(pool.samples().len(), tasks.len(), "one sample per dispatch");
+    assert!(pool.samples().iter().all(|s| s.bytes > 0));
+    // The fit itself may legitimately return None on a same-sized or
+    // noise-dominated sample set; it must not panic.
+    let _ = pool.calibrated_network();
+}
