@@ -56,6 +56,12 @@ impl ContingencyTable {
     }
 
     /// Build from a row range of two columns (one partition's share).
+    ///
+    /// Feeds the range straight into the [`Self::merge_rows`] scatter
+    /// loop — one slice resolution per column, no intermediate re-sliced
+    /// borrows (this used to go through [`Self::from_columns`] on
+    /// pre-sliced columns, paying the slicing twice per call on the
+    /// scalar fallback path).
     pub fn from_columns_range(
         x: &[u8],
         bins_x: u16,
@@ -63,7 +69,9 @@ impl ContingencyTable {
         bins_y: u16,
         range: std::ops::Range<usize>,
     ) -> Self {
-        Self::from_columns(&x[range.clone()], bins_x, &y[range], bins_y)
+        let mut t = Self::new(bins_x, bins_y);
+        t.merge_rows(x, y, range);
+        t
     }
 
     /// Delta-merge: scatter-count the row range `rows` of two columns
@@ -260,6 +268,28 @@ mod tests {
         // An empty delta is a no-op.
         stepped.merge_rows(&x, &y, 5..5);
         assert_eq!(whole, stepped);
+    }
+
+    #[test]
+    fn range_construction_matches_slice_then_scan() {
+        // Regression pin for the `from_columns_range` fast path: the
+        // direct range scatter must count exactly what the old
+        // slice-first formulation (`from_columns(&x[r], ..)`) counted,
+        // across randomized shapes, arities and (possibly empty) ranges.
+        let mut rng = crate::util::XorShift64Star::new(0xC7AB1E);
+        for _ in 0..200 {
+            let n = rng.next_below(400) as usize + 1;
+            let bins_x = rng.next_below(12) as u16 + 1;
+            let bins_y = rng.next_below(12) as u16 + 1;
+            let x: Vec<u8> = (0..n).map(|_| rng.next_below(bins_x as u64) as u8).collect();
+            let y: Vec<u8> = (0..n).map(|_| rng.next_below(bins_y as u64) as u8).collect();
+            let a = rng.next_below(n as u64 + 1) as usize;
+            let b = rng.next_below(n as u64 + 1) as usize;
+            let range = a.min(b)..a.max(b);
+            let fast = ContingencyTable::from_columns_range(&x, bins_x, &y, bins_y, range.clone());
+            let old = ContingencyTable::from_columns(&x[range.clone()], bins_x, &y[range], bins_y);
+            assert_eq!(fast, old);
+        }
     }
 
     #[test]

@@ -62,6 +62,19 @@ impl HorizontalCorrelator {
         }
     }
 
+    /// A sibling correlator over the *same* row layout but a different
+    /// engine. `Rdd` handles are cheap clones, so no partitioning work
+    /// re-runs — this is how the engine-pool planner gets one hp lowering
+    /// per engine without paying the setup twice.
+    pub fn with_engine(&self, engine: Arc<dyn SuEngine>) -> Self {
+        Self {
+            data: Arc::clone(&self.data),
+            engine,
+            ctx: Arc::clone(&self.ctx),
+            ranges: self.ranges.clone(),
+        }
+    }
+
     /// Resolve a pair id to borrowed columns.
     fn column_pair<'a>(data: &'a DiscreteDataset, a: FeatureId, b: FeatureId) -> ColumnPair<'a> {
         let (x, bins_x) = data.column(a);

@@ -38,7 +38,7 @@ use crate::data::columnar::DiscreteDataset;
 use crate::dicfs::plan::PlanDecision;
 use crate::dicfs::planner::AutoCorrelator;
 use crate::runtime::SuEngine;
-use crate::sparklet::remote::{ProcessPool, ProcessPoolConfig};
+use crate::sparklet::remote::{EngineKind, ProcessPool, ProcessPoolConfig};
 use crate::sparklet::simtime::SimTime;
 use crate::sparklet::{simulate_job_time, ClusterConfig, JobMetrics, SparkletContext};
 use crate::util::timer::timed;
@@ -134,18 +134,51 @@ pub struct DiCfsRun {
 pub struct DiCfs {
     /// Driver configuration.
     pub config: DiCfsConfig,
-    engine: Arc<dyn SuEngine>,
+    /// Engine pool. A single entry pins every batch to that engine; two
+    /// or more make the engine a priced planner dimension under
+    /// [`Partitioning::Auto`] (`--engine auto`). Fixed hp/vp schemes
+    /// always run the first entry.
+    engines: Vec<Arc<dyn SuEngine>>,
 }
 
 impl DiCfs {
-    /// Driver with the given engine (native or PJRT).
+    /// Driver with the given single engine (native, tiled, or PJRT).
     pub fn new(config: DiCfsConfig, engine: Arc<dyn SuEngine>) -> Self {
-        Self { config, engine }
+        Self {
+            config,
+            engines: vec![engine],
+        }
     }
 
     /// Driver with the native engine.
     pub fn native(config: DiCfsConfig) -> Self {
         Self::new(config, Arc::new(crate::runtime::NativeEngine))
+    }
+
+    /// Driver pinned to the cache-tiled engine (`--engine tiled`).
+    pub fn tiled(config: DiCfsConfig) -> Self {
+        Self::new(config, Arc::new(crate::runtime::TiledEngine::new()))
+    }
+
+    /// Driver with the `[native, tiled]` engine pool (`--engine auto`,
+    /// the CLI default): under [`Partitioning::Auto`] the planner prices
+    /// every batch across both engines and logs the winner per batch;
+    /// fixed hp/vp schemes fall back to the first (native) entry.
+    pub fn auto_engine(config: DiCfsConfig) -> Self {
+        Self::with_engine_pool(
+            config,
+            vec![
+                Arc::new(crate::runtime::NativeEngine),
+                Arc::new(crate::runtime::TiledEngine::new()),
+            ],
+        )
+    }
+
+    /// Driver over an explicit engine pool (see [`DiCfs::auto_engine`]
+    /// for the pool semantics). Panics on an empty pool.
+    pub fn with_engine_pool(config: DiCfsConfig, engines: Vec<Arc<dyn SuEngine>>) -> Self {
+        assert!(!engines.is_empty(), "engine pool cannot be empty");
+        Self { config, engines }
     }
 
     /// Run distributed selection over a discretized dataset.
@@ -183,29 +216,40 @@ impl DiCfs {
                 )
                 .expect("spawn multi-process executors");
                 *remote_pool.borrow_mut() = Some(Arc::clone(&pool));
+                // Worker-side engine kinds mirror the driver's pool;
+                // engines with no worker implementation (pjrt) degrade
+                // to native, which is today's remote behavior.
+                let kinds: Vec<EngineKind> = self
+                    .engines
+                    .iter()
+                    .map(|e| EngineKind::from_name(e.name()))
+                    .collect();
                 match self.config.partitioning {
                     Partitioning::Horizontal => Box::new(ArcCorrelator(Arc::new(
-                        remote::RemoteCorrelator::new(
+                        remote::RemoteCorrelator::with_engine(
                             &ctx,
                             Arc::clone(data),
                             pool,
                             plan::Strategy::Hp,
+                            kinds[0],
                         ),
                     ))),
                     Partitioning::Vertical => Box::new(ArcCorrelator(Arc::new(
-                        remote::RemoteCorrelator::new(
+                        remote::RemoteCorrelator::with_engine(
                             &ctx,
                             Arc::clone(data),
                             pool,
                             plan::Strategy::Vp,
+                            kinds[0],
                         ),
                     ))),
                     Partitioning::Auto => {
-                        let backend = Arc::new(remote::RemoteAuto::new(
+                        let backend = Arc::new(remote::RemoteAuto::with_engines(
                             &ctx,
                             Arc::clone(data),
                             pool,
                             self.config.num_partitions,
+                            kinds,
                         ));
                         *remote_auto.borrow_mut() = Some(Arc::clone(&backend));
                         Box::new(ArcCorrelator(backend))
@@ -216,7 +260,7 @@ impl DiCfs {
                     Partitioning::Horizontal => Box::new(hp::HorizontalCorrelator::new(
                         &ctx,
                         Arc::clone(data),
-                        Arc::clone(&self.engine),
+                        Arc::clone(&self.engines[0]),
                         self.config.num_partitions.unwrap_or_else(|| {
                             self.config.cluster.default_row_partitions(data.num_rows())
                         }),
@@ -224,14 +268,14 @@ impl DiCfs {
                     Partitioning::Vertical => Box::new(vp::VerticalCorrelator::new(
                         &ctx,
                         Arc::clone(data),
-                        Arc::clone(&self.engine),
+                        Arc::clone(&self.engines[0]),
                         self.config.num_partitions.unwrap_or(m),
                     )),
                     Partitioning::Auto => {
-                        let backend = Arc::new(AutoCorrelator::new(
+                        let backend = Arc::new(AutoCorrelator::with_engine_pool(
                             &ctx,
                             Arc::clone(data),
-                            Arc::clone(&self.engine),
+                            self.engines.clone(),
                             self.config.num_partitions,
                         ));
                         *auto.borrow_mut() = Some(Arc::clone(&backend));
@@ -355,6 +399,42 @@ mod tests {
         // predicted-vs-observed comparison filled in.
         assert!(!auto.decisions.is_empty());
         for d in &auto.decisions {
+            assert!(d.predicted_secs > 0.0 && d.observed_secs > 0.0);
+        }
+    }
+
+    #[test]
+    fn tiled_engine_equals_sequential_bit_for_bit() {
+        let dd = dataset();
+        let seq = SequentialCfs::default().select_discrete(&dd);
+        let tiled = DiCfs::tiled(DiCfsConfig::for_scheme(Partitioning::Auto, 4)).select(&dd);
+        assert_eq!(tiled.result.selected, seq.selected, "tiled engine equivalence");
+        assert_eq!(
+            tiled.result.merit.to_bits(),
+            seq.merit.to_bits(),
+            "tiled merit not bit-identical to sequential"
+        );
+    }
+
+    #[test]
+    fn auto_engine_prices_batches_and_stays_exact() {
+        let dd = dataset();
+        let seq = SequentialCfs::default().select_discrete(&dd);
+        let run = DiCfs::auto_engine(DiCfsConfig::for_scheme(Partitioning::Auto, 4)).select(&dd);
+        assert_eq!(run.result.selected, seq.selected, "engine pool equivalence");
+        assert_eq!(
+            run.result.merit.to_bits(),
+            seq.merit.to_bits(),
+            "engine pool merit not bit-identical"
+        );
+        // Every batch decision names the engine the planner priced in.
+        assert!(!run.decisions.is_empty());
+        for d in &run.decisions {
+            assert!(
+                d.engine == "native" || d.engine == "tiled",
+                "unexpected engine label {:?}",
+                d.engine
+            );
             assert!(d.predicted_secs > 0.0 && d.observed_secs > 0.0);
         }
     }

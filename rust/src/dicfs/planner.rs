@@ -20,6 +20,17 @@
 //! candidate plan carries the one-time setup cost, so "switch to vp"
 //! is priced honestly.
 //!
+//! **Engine choice is a second priced dimension.** A planner built with
+//! an engine pool ([`Planner::with_engines`], what `--engine auto`
+//! wires up) keeps one secs-per-cell rate per **(strategy, engine)**
+//! slot and prices every batch across the full candidate grid — hp and
+//! vp, each through the native and the tiled kernels. The engines are
+//! bit-identical (the tiled engine assembles the same tables and runs
+//! the same `su_from_table` finish), so this is purely a performance
+//! decision: the plan spec's shape never changes with the engine, only
+//! the rate constant does, and observed feedback separates the
+//! constants exactly the way it separates hp from vp.
+//!
 //! Every choice is logged as a [`PlanDecision`] (predicted vs observed
 //! seconds); the multi-query service attaches these to its
 //! [`SuJobReport`](crate::serve::SuJobReport)s and the `DiCfs` driver
@@ -97,19 +108,31 @@ impl StrategyState {
 /// lost amortization.
 #[derive(Debug, Clone, Copy)]
 pub struct PlannerCalibration {
-    /// hp secs-per-cell estimate.
+    /// hp secs-per-cell estimate (primary engine — native unless the
+    /// planner was built over a different single engine).
     pub hp_rate: f64,
     /// Observations behind `hp_rate`.
     pub hp_observations: usize,
-    /// vp secs-per-cell estimate.
+    /// vp secs-per-cell estimate (primary engine).
     pub vp_rate: f64,
     /// Observations behind `vp_rate`.
     pub vp_observations: usize,
+    /// hp secs-per-cell estimate through the tiled engine (second engine
+    /// slot; the prior when the planner prices only one engine).
+    pub hp_tiled_rate: f64,
+    /// Observations behind `hp_tiled_rate`.
+    pub hp_tiled_observations: usize,
+    /// vp secs-per-cell estimate through the tiled engine.
+    pub vp_tiled_rate: f64,
+    /// Observations behind `vp_tiled_rate`.
+    pub vp_tiled_observations: usize,
 }
 
 struct PlannerState {
-    hp: StrategyState,
-    vp: StrategyState,
+    /// Per-(strategy, engine-slot) calibration: `hp[e]` / `vp[e]` is the
+    /// rate of engine slot `e` under that strategy.
+    hp: Vec<StrategyState>,
+    vp: Vec<StrategyState>,
     /// Whether the vp columnar layout has been built (stops charging the
     /// setup shuffle to vp candidate plans).
     vp_built: bool,
@@ -117,17 +140,32 @@ struct PlannerState {
     decisions: Vec<PlanDecision>,
 }
 
-/// One planned batch: the chosen strategy, its spec, and the predictions
-/// that picked it. Hand it back to [`Planner::observe`] with the
-/// batch's replayed cost to close the feedback loop.
+impl PlannerState {
+    fn slot(&mut self, strategy: Strategy, engine: usize) -> &mut StrategyState {
+        match strategy {
+            Strategy::Hp => &mut self.hp[engine],
+            Strategy::Vp => &mut self.vp[engine],
+        }
+    }
+}
+
+/// One planned batch: the chosen strategy and engine, the spec, and the
+/// predictions that picked them. Hand it back to [`Planner::observe`]
+/// with the batch's replayed cost to close the feedback loop.
 pub struct PlannedBatch {
     /// The strategy the planner chose.
     pub strategy: Strategy,
+    /// Engine-slot index the planner chose (into the pool it was built
+    /// with; always 0 for single-engine planners). The executing
+    /// correlator routes the batch to its matching engine sibling.
+    pub engine: usize,
+    /// Label of the chosen engine (for the decision log).
+    pub engine_name: &'static str,
     /// The chosen plan's spec (IR).
     pub spec: PlanSpec,
     /// Predicted cost of the chosen plan.
     pub predicted: PlanCost,
-    /// Predicted total seconds of the rejected alternative.
+    /// Predicted total seconds of the best rejected alternative.
     pub rejected_secs: f64,
 }
 
@@ -139,30 +177,49 @@ pub struct Planner {
     cluster: ClusterConfig,
     hp_partitions: usize,
     vp_partitions: usize,
+    /// Engine labels, one per priced slot (`["native"]` by default,
+    /// `["native", "tiled"]` under `--engine auto`).
+    engines: Vec<&'static str>,
     state: Mutex<PlannerState>,
 }
 
 impl Planner {
-    /// Planner over `data` on `cluster`. `hp_partitions` /
-    /// `vp_partitions` default to the schemes' own defaults (Spark block
-    /// heuristic / one per feature).
+    /// Planner over `data` on `cluster`, pricing a single engine slot.
+    /// `hp_partitions` / `vp_partitions` default to the schemes' own
+    /// defaults (Spark block heuristic / one per feature).
     pub fn new(
         data: Arc<DiscreteDataset>,
         cluster: ClusterConfig,
         hp_partitions: Option<usize>,
         vp_partitions: Option<usize>,
     ) -> Self {
+        Self::with_engines(data, cluster, hp_partitions, vp_partitions, vec!["native"])
+    }
+
+    /// [`Self::new`] with an explicit engine pool: one calibration slot
+    /// per engine label, priced for both strategies. The candidate grid
+    /// of every batch is `strategies × engines`. Panics on an empty pool.
+    pub fn with_engines(
+        data: Arc<DiscreteDataset>,
+        cluster: ClusterConfig,
+        hp_partitions: Option<usize>,
+        vp_partitions: Option<usize>,
+        engines: Vec<&'static str>,
+    ) -> Self {
+        assert!(!engines.is_empty(), "planner needs at least one engine");
         let hp_partitions =
             hp_partitions.unwrap_or_else(|| cluster.default_row_partitions(data.num_rows()));
         let vp_partitions = vp_partitions.unwrap_or_else(|| data.num_features());
+        let slots = engines.len();
         Self {
             data,
             cluster,
             hp_partitions,
             vp_partitions,
+            engines,
             state: Mutex::new(PlannerState {
-                hp: StrategyState::fresh(),
-                vp: StrategyState::fresh(),
+                hp: vec![StrategyState::fresh(); slots],
+                vp: vec![StrategyState::fresh(); slots],
                 vp_built: false,
                 decisions: Vec::new(),
             }),
@@ -172,6 +229,53 @@ impl Planner {
     /// The cluster this planner prices against.
     pub fn cluster(&self) -> &ClusterConfig {
         &self.cluster
+    }
+
+    /// The engine labels this planner prices, in slot order.
+    pub fn engines(&self) -> &[&'static str] {
+        &self.engines
+    }
+
+    /// Price both specs across every engine slot and return the cheapest
+    /// candidate (ties go to the earliest candidate in hp-before-vp,
+    /// lower-slot-first order — so a single-engine planner keeps the old
+    /// ties-go-to-hp rule). `rejected_secs` is the best alternative.
+    fn choose(&self, hp_spec: PlanSpec, vp_spec: PlanSpec) -> PlannedBatch {
+        let st = self.state.lock().unwrap();
+        let mut best: Option<(Strategy, usize, PlanCost)> = None;
+        let mut runner_up = f64::INFINITY;
+        for (strategy, spec, rates) in [
+            (Strategy::Hp, &hp_spec, &st.hp),
+            (Strategy::Vp, &vp_spec, &st.vp),
+        ] {
+            for (e, slot) in rates.iter().enumerate() {
+                let cost = spec.estimate(&self.cluster, slot.rate);
+                match &best {
+                    Some((_, _, b)) if cost.total() >= b.total() => {
+                        runner_up = runner_up.min(cost.total());
+                    }
+                    _ => {
+                        if let Some((_, _, b)) = &best {
+                            runner_up = runner_up.min(b.total());
+                        }
+                        best = Some((strategy, e, cost));
+                    }
+                }
+            }
+        }
+        let (strategy, engine, predicted) = best.expect("non-empty candidate grid");
+        drop(st);
+        PlannedBatch {
+            strategy,
+            engine,
+            engine_name: self.engines[engine],
+            spec: match strategy {
+                Strategy::Hp => hp_spec,
+                Strategy::Vp => vp_spec,
+            },
+            predicted,
+            rejected_secs: runner_up,
+        }
     }
 
     /// Whether the vp columnar layout has been marked built.
@@ -185,36 +289,14 @@ impl Planner {
         self.state.lock().unwrap().vp_built = true;
     }
 
-    /// Lower `pairs` to both candidate plans, price them, and return the
-    /// cheaper one (ties go to hp, which needs no layout construction).
+    /// Lower `pairs` to every candidate plan (strategies × engine
+    /// slots), price them, and return the cheapest (ties go to hp on the
+    /// first engine slot, which needs no layout construction).
     pub fn plan_batch(&self, pairs: &[(FeatureId, FeatureId)]) -> PlannedBatch {
-        let st = self.state.lock().unwrap();
+        let vp_built = self.vp_built();
         let hp_spec = plan::hp_plan(&self.data, pairs, &self.cluster, self.hp_partitions);
-        let vp_spec = plan::vp_plan(
-            &self.data,
-            pairs,
-            &self.cluster,
-            self.vp_partitions,
-            st.vp_built,
-        );
-        let hp_cost = hp_spec.estimate(&self.cluster, st.hp.rate);
-        let vp_cost = vp_spec.estimate(&self.cluster, st.vp.rate);
-        drop(st);
-        if hp_cost.total() <= vp_cost.total() {
-            PlannedBatch {
-                strategy: Strategy::Hp,
-                spec: hp_spec,
-                predicted: hp_cost,
-                rejected_secs: vp_cost.total(),
-            }
-        } else {
-            PlannedBatch {
-                strategy: Strategy::Vp,
-                spec: vp_spec,
-                predicted: vp_cost,
-                rejected_secs: hp_cost.total(),
-            }
-        }
+        let vp_spec = plan::vp_plan(&self.data, pairs, &self.cluster, self.vp_partitions, vp_built);
+        self.choose(hp_spec, vp_spec)
     }
 
     /// Like [`Self::plan_batch`], but for a **table job** over the row
@@ -231,7 +313,7 @@ impl Planner {
         pairs: &[(FeatureId, FeatureId)],
         rows: &std::ops::Range<usize>,
     ) -> PlannedBatch {
-        let st = self.state.lock().unwrap();
+        let vp_built = self.vp_built();
         let hp_spec =
             plan::hp_delta_plan(&self.data, pairs, &self.cluster, self.hp_partitions, rows);
         let vp_spec = plan::vp_delta_plan(
@@ -239,27 +321,10 @@ impl Planner {
             pairs,
             &self.cluster,
             self.vp_partitions,
-            st.vp_built,
+            vp_built,
             rows,
         );
-        let hp_cost = hp_spec.estimate(&self.cluster, st.hp.rate);
-        let vp_cost = vp_spec.estimate(&self.cluster, st.vp.rate);
-        drop(st);
-        if hp_cost.total() <= vp_cost.total() {
-            PlannedBatch {
-                strategy: Strategy::Hp,
-                spec: hp_spec,
-                predicted: hp_cost,
-                rejected_secs: vp_cost.total(),
-            }
-        } else {
-            PlannedBatch {
-                strategy: Strategy::Vp,
-                spec: vp_spec,
-                predicted: vp_cost,
-                rejected_secs: hp_cost.total(),
-            }
-        }
+        self.choose(hp_spec, vp_spec)
     }
 
     /// Close the loop on one executed batch: log the decision
@@ -272,13 +337,11 @@ impl Planner {
         let mut st = self.state.lock().unwrap();
         if units > 0.0 {
             let implied = (observed.compute_secs - overhead).max(0.0) / units;
-            match planned.strategy {
-                Strategy::Hp => st.hp.observe(implied),
-                Strategy::Vp => st.vp.observe(implied),
-            }
+            st.slot(planned.strategy, planned.engine).observe(implied);
         }
         st.decisions.push(PlanDecision {
             strategy: planned.strategy,
+            engine: planned.engine_name,
             pairs: planned.spec.num_pairs,
             predicted_secs: planned.predicted.total(),
             rejected_secs: planned.rejected_secs,
@@ -287,30 +350,50 @@ impl Planner {
     }
 
     /// Snapshot of the calibrated compute rates (see
-    /// [`PlannerCalibration`]).
+    /// [`PlannerCalibration`]). Single-engine planners report the prior
+    /// in the tiled slots.
     pub fn calibration(&self) -> PlannerCalibration {
         let st = self.state.lock().unwrap();
+        let tiled = |v: &Vec<StrategyState>| v.get(1).copied().unwrap_or_else(StrategyState::fresh);
+        let (hp_t, vp_t) = (tiled(&st.hp), tiled(&st.vp));
         PlannerCalibration {
-            hp_rate: st.hp.rate,
-            hp_observations: st.hp.observations,
-            vp_rate: st.vp.rate,
-            vp_observations: st.vp.observations,
+            hp_rate: st.hp[0].rate,
+            hp_observations: st.hp[0].observations,
+            vp_rate: st.vp[0].rate,
+            vp_observations: st.vp[0].observations,
+            hp_tiled_rate: hp_t.rate,
+            hp_tiled_observations: hp_t.observations,
+            vp_tiled_rate: vp_t.rate,
+            vp_tiled_observations: vp_t.observations,
         }
     }
 
     /// Adopt previously calibrated rates (typically from the planner of
     /// the dataset version this one supersedes), so the first post-append
     /// decisions are priced with measured rates instead of the prior.
+    /// The tiled slots apply only when this planner prices two engines.
     pub fn set_calibration(&self, cal: PlannerCalibration) {
         let mut st = self.state.lock().unwrap();
-        st.hp = StrategyState {
+        st.hp[0] = StrategyState {
             rate: cal.hp_rate.max(MIN_RATE),
             observations: cal.hp_observations,
         };
-        st.vp = StrategyState {
+        st.vp[0] = StrategyState {
             rate: cal.vp_rate.max(MIN_RATE),
             observations: cal.vp_observations,
         };
+        if let Some(s) = st.hp.get_mut(1) {
+            *s = StrategyState {
+                rate: cal.hp_tiled_rate.max(MIN_RATE),
+                observations: cal.hp_tiled_observations,
+            };
+        }
+        if let Some(s) = st.vp.get_mut(1) {
+            *s = StrategyState {
+                rate: cal.vp_tiled_rate.max(MIN_RATE),
+                observations: cal.vp_tiled_observations,
+            };
+        }
     }
 
     /// Snapshot of every decision made so far, in batch order.
@@ -338,10 +421,14 @@ impl Planner {
 pub struct AutoCorrelator {
     ctx: Arc<SparkletContext>,
     data: Arc<DiscreteDataset>,
-    engine: Arc<dyn SuEngine>,
+    engines: Vec<Arc<dyn SuEngine>>,
     planner: Planner,
-    hp: HorizontalCorrelator,
-    vp: Mutex<Option<Arc<VerticalCorrelator>>>,
+    /// One hp lowering per engine slot; siblings share the row-range
+    /// `Rdd`, so only the first costs anything to build.
+    hp: Vec<HorizontalCorrelator>,
+    /// One vp lowering per engine slot, built lazily as a group; the
+    /// first pays the columnar shuffle, siblings share its handles.
+    vp: Mutex<Option<Arc<Vec<VerticalCorrelator>>>>,
     vp_partitions: usize,
 }
 
@@ -357,21 +444,47 @@ impl AutoCorrelator {
         engine: Arc<dyn SuEngine>,
         partitions: Option<usize>,
     ) -> Self {
+        Self::with_engine_pool(ctx, data, vec![engine], partitions)
+    }
+
+    /// [`Self::new`] with an explicit engine pool: the planner prices
+    /// every batch across `strategies × engines` and routes it to the
+    /// matching lowering sibling (what `--engine auto` wires up with
+    /// `[native, tiled]`). All engines are bit-identical, so pooling is
+    /// purely a performance decision. Panics on an empty pool.
+    pub fn with_engine_pool(
+        ctx: &Arc<SparkletContext>,
+        data: Arc<DiscreteDataset>,
+        engines: Vec<Arc<dyn SuEngine>>,
+        partitions: Option<usize>,
+    ) -> Self {
+        assert!(!engines.is_empty(), "auto backend needs at least one engine");
         let cluster = ctx.cluster;
         let hp_partitions =
             partitions.unwrap_or_else(|| cluster.default_row_partitions(data.num_rows()));
         let vp_partitions = partitions.unwrap_or_else(|| data.num_features());
-        let planner = Planner::new(
+        let planner = Planner::with_engines(
             Arc::clone(&data),
             cluster,
             Some(hp_partitions),
             Some(vp_partitions),
+            engines.iter().map(|e| e.name()).collect(),
         );
-        let hp = HorizontalCorrelator::new(ctx, Arc::clone(&data), Arc::clone(&engine), hp_partitions);
+        let first = HorizontalCorrelator::new(
+            ctx,
+            Arc::clone(&data),
+            Arc::clone(&engines[0]),
+            hp_partitions,
+        );
+        let mut hp = Vec::with_capacity(engines.len());
+        for e in &engines[1..] {
+            hp.push(first.with_engine(Arc::clone(e)));
+        }
+        hp.insert(0, first);
         Self {
             ctx: Arc::clone(ctx),
             data,
-            engine,
+            engines,
             planner,
             hp,
             vp: Mutex::new(None),
@@ -384,21 +497,29 @@ impl AutoCorrelator {
         &self.planner
     }
 
-    /// The vp lowering, built on first use. The columnar-transformation
-    /// stages run on the calling thread, so when this is called inside a
-    /// batch's observation scope the setup cost lands in that batch's
-    /// observed metrics — matching the setup charge in its plan.
-    fn vp_backend(&self) -> Arc<VerticalCorrelator> {
+    /// The vp lowerings, built as a group on first use. The
+    /// columnar-transformation stages run on the calling thread, so when
+    /// this is called inside a batch's observation scope the setup cost
+    /// lands in that batch's observed metrics — matching the setup
+    /// charge in its plan. Only the first sibling runs the shuffle; the
+    /// rest clone its handles via [`VerticalCorrelator::with_engine`].
+    fn vp_backend(&self) -> Arc<Vec<VerticalCorrelator>> {
         let mut guard = self.vp.lock().unwrap();
         if let Some(v) = guard.as_ref() {
             return Arc::clone(v);
         }
-        let v = Arc::new(VerticalCorrelator::new(
+        let first = VerticalCorrelator::new(
             &self.ctx,
             Arc::clone(&self.data),
-            Arc::clone(&self.engine),
+            Arc::clone(&self.engines[0]),
             self.vp_partitions,
-        ));
+        );
+        let mut pool = Vec::with_capacity(self.engines.len());
+        for e in &self.engines[1..] {
+            pool.push(first.with_engine(Arc::clone(e)));
+        }
+        pool.insert(0, first);
+        let v = Arc::new(pool);
         self.planner.mark_vp_built();
         *guard = Some(Arc::clone(&v));
         v
@@ -429,8 +550,8 @@ impl SharedCorrelator for AutoCorrelator {
         let out = {
             let _guard = observe_stages(Arc::clone(&recorder) as Arc<dyn PlanObserver>);
             match planned.strategy {
-                Strategy::Hp => self.hp.compute_ctables(pairs, rows),
-                Strategy::Vp => self.vp_backend().compute_ctables(pairs, rows),
+                Strategy::Hp => self.hp[planned.engine].compute_ctables(pairs, rows),
+                Strategy::Vp => self.vp_backend()[planned.engine].compute_ctables(pairs, rows),
             }
         };
         let sim = simulate_job_time(&recorder.metrics(), self.planner.cluster(), 0.0);
@@ -447,8 +568,8 @@ impl SharedCorrelator for AutoCorrelator {
         let out = {
             let _guard = observe_stages(Arc::clone(&recorder) as Arc<dyn PlanObserver>);
             match planned.strategy {
-                Strategy::Hp => self.hp.compute_batch(pairs),
-                Strategy::Vp => self.vp_backend().compute_batch(pairs),
+                Strategy::Hp => self.hp[planned.engine].compute_batch(pairs),
+                Strategy::Vp => self.vp_backend()[planned.engine].compute_batch(pairs),
             }
         };
         // Replay this batch's stages (and only this batch's — the
@@ -682,5 +803,111 @@ mod tests {
         let (_ctx, corr, _) = auto(300, 5);
         assert!(corr.compute_batch(&[]).is_empty());
         assert!(corr.planner().decisions().is_empty(), "no decision for empty batch");
+    }
+
+    #[test]
+    fn engine_pool_prices_both_engines_and_stays_exact() {
+        use crate::correlation::ContingencyTable;
+        use crate::runtime::TiledEngine;
+
+        let dd = dataset(600, 8, 77);
+        let ctx = SparkletContext::new(ClusterConfig::with_nodes(3));
+        let corr = AutoCorrelator::with_engine_pool(
+            &ctx,
+            Arc::clone(&dd),
+            vec![Arc::new(NativeEngine) as Arc<dyn SuEngine>, Arc::new(TiledEngine::new())],
+            None,
+        );
+        assert_eq!(corr.planner().engines(), &["native", "tiled"]);
+
+        // SU values are the engines' shared bit-exact answer no matter
+        // which slot the planner routes to.
+        let pairs = vec![(0, CLASS_ID), (1, CLASS_ID), (0, 1), (2, 6)];
+        let got = corr.compute_batch(&pairs);
+        for (i, &(a, b)) in pairs.iter().enumerate() {
+            let (x, bx) = dd.column(a);
+            let (y, by) = dd.column(b);
+            assert_eq!(got[i], symmetrical_uncertainty(x, bx, y, by), "pair {:?}", (a, b));
+        }
+
+        // Table jobs route through the same grid and stay exact too.
+        let n = dd.num_rows();
+        let tables = corr.compute_ctables(&pairs, 0..n);
+        for (t, &(a, b)) in tables.iter().zip(&pairs) {
+            let (x, bx) = dd.column(a);
+            let (y, by) = dd.column(b);
+            assert_eq!(t, &ContingencyTable::from_columns(x, bx, y, by));
+        }
+
+        // Every decision names the engine it routed to.
+        let decisions = corr.planner().decisions();
+        assert_eq!(decisions.len(), 2);
+        for d in &decisions {
+            assert!(["native", "tiled"].contains(&d.engine), "unknown engine {:?}", d.engine);
+            assert!(d.summary().contains(d.engine));
+        }
+    }
+
+    #[test]
+    fn feedback_separates_engine_rates() {
+        let dd = dataset(500, 8, 83);
+        let planner = Planner::with_engines(
+            Arc::clone(&dd),
+            ClusterConfig::with_nodes(3),
+            None,
+            None,
+            vec!["native", "tiled"],
+        );
+        let pairs: Vec<(usize, usize)> = (0..8).map(|f| (f, CLASS_ID)).collect();
+
+        // Punish whatever (strategy, engine) slot the planner picks; it
+        // must move to a different slot — the other engine of the same
+        // strategy or the other strategy — because only the punished
+        // slot's rate exploded.
+        let first = planner.plan_batch(&pairs);
+        let first_slot = (first.strategy, first.engine);
+        let mut switched = None;
+        for _ in 0..6 {
+            let planned = planner.plan_batch(&pairs);
+            if (planned.strategy, planned.engine) != first_slot {
+                switched = Some((planned.strategy, planned.engine));
+                break;
+            }
+            let observed = SimTime {
+                compute_secs: (planned.predicted.total() + 1e-3) * 1e4,
+                network_secs: 0.0,
+                driver_secs: 0.0,
+            };
+            planner.observe(&planned, &observed);
+        }
+        assert!(
+            switched.is_some(),
+            "planner never left a slot observed 10^4× over budget"
+        );
+
+        // The punished slot's observations appear in the calibration
+        // snapshot, and the snapshot round-trips onto another two-engine
+        // planner bit-for-bit (the versioned-registry transfer path).
+        let cal = planner.calibration();
+        let total = cal.hp_observations
+            + cal.vp_observations
+            + cal.hp_tiled_observations
+            + cal.vp_tiled_observations;
+        assert!(total >= 1);
+        let fresh = Planner::with_engines(
+            Arc::clone(&dd),
+            ClusterConfig::with_nodes(3),
+            None,
+            None,
+            vec!["native", "tiled"],
+        );
+        fresh.set_calibration(cal);
+        let got = fresh.calibration();
+        assert_eq!(got.hp_rate.to_bits(), cal.hp_rate.to_bits());
+        assert_eq!(got.vp_rate.to_bits(), cal.vp_rate.to_bits());
+        assert_eq!(got.hp_tiled_rate.to_bits(), cal.hp_tiled_rate.to_bits());
+        assert_eq!(got.vp_tiled_rate.to_bits(), cal.vp_tiled_rate.to_bits());
+        assert_eq!(got.hp_tiled_observations, cal.hp_tiled_observations);
+        assert_eq!(got.vp_tiled_observations, cal.vp_tiled_observations);
     }
 }

@@ -20,8 +20,10 @@
 //!
 //! Bit-identity with the in-process backends is structural, not
 //! incidental: both run [`execute_task`](crate::sparklet::remote::execute_task)
-//! lowerings through the same [`NativeEngine`](crate::runtime::NativeEngine)
-//! kernels, u64 table counts are exact and merge-order independent, and
+//! lowerings through the same engine kernels (native or tiled, selected
+//! per Task frame — themselves bit-identical by construction,
+//! see [`TiledEngine`](crate::runtime::TiledEngine)),
+//! u64 table counts are exact and merge-order independent, and
 //! SU scalars are computed from identical tables or identical full
 //! columns. The `ipc` integration tests pin the end-to-end claim:
 //! multi-process DiCFS selects the same features with the same merits as
@@ -43,8 +45,8 @@ use crate::data::columnar::DiscreteDataset;
 use crate::dicfs::plan::{self, PlanDecision, Strategy};
 use crate::dicfs::planner::{Planner, PlannerCalibration};
 use crate::sparklet::remote::{
-    DatasetPayload, IndexedPair, ProcessPool, ProcessPoolConfig, RemoteTask, StageOutcome,
-    TaskResult,
+    DatasetPayload, EngineKind, IndexedPair, ProcessPool, ProcessPoolConfig, RemoteTask,
+    StageOutcome, TaskResult,
 };
 use crate::sparklet::{
     observe_stages, simulate_job_time, PlanObserver, SparkletContext, StageKind, StageMetrics,
@@ -89,22 +91,37 @@ pub struct RemoteCorrelator {
     data: Arc<DiscreteDataset>,
     pool: Arc<Mutex<ProcessPool>>,
     mode: Strategy,
+    /// Engine every dispatch of this correlator carries on its Task
+    /// frame (workers select the matching kernel per task).
+    engine: EngineKind,
 }
 
 impl RemoteCorrelator {
     /// Correlator in the given mode over an installed pool
-    /// ([`spawn_installed_pool`]).
+    /// ([`spawn_installed_pool`]), dispatching through the native engine.
     pub fn new(
         ctx: &Arc<SparkletContext>,
         data: Arc<DiscreteDataset>,
         pool: Arc<Mutex<ProcessPool>>,
         mode: Strategy,
     ) -> Self {
+        Self::with_engine(ctx, data, pool, mode, EngineKind::Native)
+    }
+
+    /// [`Self::new`] with an explicit worker-side engine.
+    pub fn with_engine(
+        ctx: &Arc<SparkletContext>,
+        data: Arc<DiscreteDataset>,
+        pool: Arc<Mutex<ProcessPool>>,
+        mode: Strategy,
+        engine: EngineKind,
+    ) -> Self {
         Self {
             ctx: Arc::clone(ctx),
             data,
             pool,
             mode,
+            engine,
         }
     }
 
@@ -151,7 +168,9 @@ impl RemoteCorrelator {
                 rows,
             })
             .collect();
-        let out = pool.run_tasks(&tasks).expect("multi-process hp map wave");
+        let out = pool
+            .run_tasks(self.engine, &tasks)
+            .expect("multi-process hp map wave");
         let mut groups: BTreeMap<u64, Vec<ContingencyTable>> = BTreeMap::new();
         let mut est_shuffle = 0usize;
         let StageOutcome {
@@ -211,7 +230,9 @@ impl RemoteCorrelator {
         let (groups, map_wave, est_shuffle) =
             self.hp_map_wave(&mut pool, &wire, &(0..self.data.num_rows()));
         let tasks = Self::reduce_tasks(groups, pool.alive_workers(), false);
-        let red = pool.run_tasks(&tasks).expect("multi-process hp reduce wave");
+        let red = pool
+            .run_tasks(self.engine, &tasks)
+            .expect("multi-process hp reduce wave");
         drop(pool);
 
         let mut out = vec![0.0f64; pairs.len()];
@@ -256,7 +277,9 @@ impl RemoteCorrelator {
             .filter(|b| !b.is_empty())
             .map(|pairs| RemoteTask::VpSu { pairs })
             .collect();
-        let run = pool.run_tasks(&tasks).expect("multi-process vp wave");
+        let run = pool
+            .run_tasks(self.engine, &tasks)
+            .expect("multi-process vp wave");
         drop(pool);
 
         let mut out = vec![0.0f64; pairs.len()];
@@ -316,7 +339,9 @@ impl SharedCorrelator for RemoteCorrelator {
         let mut pool = self.pool.lock().unwrap();
         let (groups, map_wave, est_shuffle) = self.hp_map_wave(&mut pool, &wire, &rows);
         let tasks = Self::reduce_tasks(groups, pool.alive_workers(), true);
-        let red = pool.run_tasks(&tasks).expect("multi-process table merge wave");
+        let red = pool
+            .run_tasks(self.engine, &tasks)
+            .expect("multi-process table merge wave");
         drop(pool);
 
         let mut out: Vec<Option<ContingencyTable>> = vec![None; pairs.len()];
@@ -354,8 +379,10 @@ impl SharedCorrelator for RemoteCorrelator {
 /// columns to every worker, so vp candidates carry no setup charge.
 pub struct RemoteAuto {
     planner: Planner,
-    hp: RemoteCorrelator,
-    vp: RemoteCorrelator,
+    /// One (hp, vp) correlator pair per engine slot — cheap handles
+    /// sharing the pool; the planner's slot index selects the sibling.
+    hp: Vec<RemoteCorrelator>,
+    vp: Vec<RemoteCorrelator>,
 }
 
 impl RemoteAuto {
@@ -368,12 +395,47 @@ impl RemoteAuto {
         pool: Arc<Mutex<ProcessPool>>,
         partitions: Option<usize>,
     ) -> Self {
-        let planner = Planner::new(Arc::clone(&data), ctx.cluster, partitions, partitions);
+        Self::with_engines(ctx, data, pool, partitions, vec![EngineKind::Native])
+    }
+
+    /// [`Self::new`] with an explicit engine pool: the planner prices
+    /// `strategies × engines` candidates per batch and dispatches the
+    /// winner's engine on every Task frame (`--engine auto` over
+    /// `--workers-proc`). Panics on an empty pool.
+    pub fn with_engines(
+        ctx: &Arc<SparkletContext>,
+        data: Arc<DiscreteDataset>,
+        pool: Arc<Mutex<ProcessPool>>,
+        partitions: Option<usize>,
+        engines: Vec<EngineKind>,
+    ) -> Self {
+        assert!(!engines.is_empty(), "remote auto needs at least one engine");
+        let planner = Planner::with_engines(
+            Arc::clone(&data),
+            ctx.cluster,
+            partitions,
+            partitions,
+            engines.iter().map(|e| e.label()).collect(),
+        );
         planner.mark_vp_built();
+        let correlators = |mode| -> Vec<RemoteCorrelator> {
+            engines
+                .iter()
+                .map(|&e| {
+                    RemoteCorrelator::with_engine(
+                        ctx,
+                        Arc::clone(&data),
+                        Arc::clone(&pool),
+                        mode,
+                        e,
+                    )
+                })
+                .collect()
+        };
         Self {
             planner,
-            hp: RemoteCorrelator::new(ctx, Arc::clone(&data), Arc::clone(&pool), Strategy::Hp),
-            vp: RemoteCorrelator::new(ctx, data, pool, Strategy::Vp),
+            hp: correlators(Strategy::Hp),
+            vp: correlators(Strategy::Vp),
         }
     }
 
@@ -393,8 +455,8 @@ impl SharedCorrelator for RemoteAuto {
         let out = {
             let _guard = observe_stages(Arc::clone(&recorder) as Arc<dyn PlanObserver>);
             match planned.strategy {
-                Strategy::Hp => self.hp.compute_batch(pairs),
-                Strategy::Vp => self.vp.compute_batch(pairs),
+                Strategy::Hp => self.hp[planned.engine].compute_batch(pairs),
+                Strategy::Vp => self.vp[planned.engine].compute_batch(pairs),
             }
         };
         let sim = simulate_job_time(&recorder.metrics(), self.planner.cluster(), 0.0);
@@ -414,7 +476,7 @@ impl SharedCorrelator for RemoteAuto {
         pairs: &[(FeatureId, FeatureId)],
         rows: Range<usize>,
     ) -> Vec<ContingencyTable> {
-        self.hp.compute_ctables(pairs, rows)
+        self.hp[0].compute_ctables(pairs, rows)
     }
 
     fn drain_plan_decisions(&self) -> Vec<PlanDecision> {

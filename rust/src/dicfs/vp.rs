@@ -84,6 +84,20 @@ impl VerticalCorrelator {
         }
     }
 
+    /// A sibling correlator over the *same* columnar layout but a
+    /// different engine. The columns `Rdd` and class `Broadcast` are
+    /// cheap-clone handles, so the columnar transformation shuffle is
+    /// paid once and shared by every engine in the planner's pool.
+    pub fn with_engine(&self, engine: Arc<dyn SuEngine>) -> Self {
+        Self {
+            data: Arc::clone(&self.data),
+            engine,
+            ctx: Arc::clone(&self.ctx),
+            columns: self.columns.clone(),
+            class_bc: self.class_bc.clone(),
+        }
+    }
+
     /// Choose the reference (broadcast) side of each pair — delegated to
     /// [`plan::assign_sides`], the single definition both this lowering
     /// and the planner's vp costing share (the broadcast bytes and busy

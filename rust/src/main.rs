@@ -25,7 +25,7 @@ use dicfs::data::synth::{by_name, SynthConfig, FAMILIES};
 use dicfs::dicfs::{DiCfs, DiCfsConfig, Partitioning};
 use dicfs::discretize::discretize_dataset;
 use dicfs::harness;
-use dicfs::runtime::{NativeEngine, SuEngine};
+use dicfs::runtime::{NativeEngine, SuEngine, TiledEngine};
 use dicfs::util::timer::timed;
 
 const USAGE: &str = "\
@@ -33,20 +33,25 @@ dicfs — Distributed Correlation-Based Feature Selection (paper reproduction)
 
 USAGE:
   dicfs select   [--family NAME | --csv FILE] [--partitioning seq|hp|vp|auto]
-                 [--nodes N] [--engine native|pjrt] [--partitions P]
+                 [--nodes N] [--engine native|tiled|auto] [--partitions P]
                  [--rows N] [--features M] [--seed S]
                  [--workers-proc N [--speculative true]]
   dicfs generate --family NAME --rows N [--features M] [--seed S] --out FILE
   dicfs generate --describe
   dicfs compare  [--family NAME] [--rows N] [--features M] [--nodes N]
   dicfs queries  --script FILE [--nodes N] [--concurrency C]
-                 [--max-inflight J] [--engine native|pjrt] [--verify]
+                 [--max-inflight J] [--engine native|tiled|auto] [--verify]
   dicfs bench    --target fig3|fig4|fig5|table2|ondemand|partitions|planner
                  [--scale X]
 
 `--partitioning` defaults to `auto`: the adaptive planner chooses hp or
 vp per correlation batch (cost model + measured feedback) and reports
 every decision. `--scheme` is accepted as an alias.
+
+`--engine` picks the SU kernel: `native` (scalar), `tiled`
+(cache-blocked batch kernel, bit-identical results), or `auto` (the
+default — under adaptive partitioning the planner also prices the
+engine per batch and logs the winner; `pjrt` with the feature built).
 
 `--workers-proc N` runs the correlation jobs on N worker OS processes
 speaking a binary protocol over Unix sockets (results are bit-identical
@@ -115,14 +120,21 @@ fn load_dataset(flags: &HashMap<String, String>) -> dicfs::data::Dataset {
     }
 }
 
-fn make_engine(flags: &HashMap<String, String>) -> Arc<dyn SuEngine> {
-    match flags.get("engine").map(String::as_str).unwrap_or("native") {
-        "native" => Arc::new(NativeEngine),
+/// Resolve `--engine` into the SU engine pool the run uses. `auto` (the
+/// default) is the `[native, tiled]` pool: under adaptive partitioning
+/// the planner prices every correlation batch across both engines and
+/// logs the winner; fixed schemes pin to the first (native) entry. A
+/// named engine yields a single-entry pool that every batch runs on.
+fn make_engine_pool(flags: &HashMap<String, String>) -> Vec<Arc<dyn SuEngine>> {
+    match flags.get("engine").map(String::as_str).unwrap_or("auto") {
+        "auto" => vec![Arc::new(NativeEngine), Arc::new(TiledEngine::new())],
+        "native" => vec![Arc::new(NativeEngine)],
+        "tiled" => vec![Arc::new(TiledEngine::new())],
         #[cfg(feature = "pjrt")]
-        "pjrt" => Arc::new(
+        "pjrt" => vec![Arc::new(
             dicfs::runtime::pjrt::PjrtEngine::from_default_dir()
                 .expect("pjrt engine (run `make artifacts`?)"),
-        ),
+        )],
         other => panic!("unknown engine {other} (build with --features pjrt?)"),
     }
 }
@@ -169,7 +181,7 @@ fn cmd_select(flags: &HashMap<String, String>) {
                     .map(|v| v == "true")
                     .unwrap_or(false);
             }
-            let run = DiCfs::new(cfg, make_engine(flags)).select(&dd);
+            let run = DiCfs::with_engine_pool(cfg, make_engine_pool(flags)).select(&dd);
             print_result(&run.result, run.wall_secs, Some(&run));
         }
         other => panic!("unknown partitioning {other} (seq|hp|vp|auto)"),
@@ -332,7 +344,7 @@ fn cmd_queries(flags: &HashMap<String, String>) {
         opts.concurrency,
         opts.max_inflight_jobs
     );
-    let _ = dicfs::serve::script::replay(&script, &opts, make_engine(flags));
+    let _ = dicfs::serve::script::replay(&script, &opts, make_engine_pool(flags));
 }
 
 fn cmd_bench(flags: &HashMap<String, String>) {

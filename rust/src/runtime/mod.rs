@@ -1,9 +1,16 @@
 //! Execution engines for the SU numeric path.
 //!
-//! Two interchangeable implementations of [`SuEngine`]:
-//! * [`native::NativeEngine`] — exact u64/f64 arithmetic in rust. This is
-//!   the engine the equivalence tests run on (bit-deterministic) and the
-//!   default for the harness.
+//! Three interchangeable implementations of [`SuEngine`]:
+//! * [`native::NativeEngine`] — exact u64/f64 arithmetic in rust, one
+//!   pair at a time. This is the engine the equivalence tests run on
+//!   (bit-deterministic) and the conservative baseline.
+//! * [`tiled::TiledEngine`] — the same exact arithmetic restructured
+//!   around fixed `(P, N, B)` cache tiles: one flat count slab per pair
+//!   batch, row tiles consumed by all pairs before advancing, two pair
+//!   stripes interleaved per pass. Bit-identical to native (asserted by
+//!   the engine axis of `tests/proptests.rs`); faster on wide batches.
+//!   The adaptive planner prices it as a second engine dimension
+//!   (`--engine auto`).
 //! * [`pjrt::PjrtEngine`] *(feature `pjrt`)* — loads the AOT artifacts
 //!   produced by `python/compile/aot.py` (`artifacts/*.hlo.txt`, the
 //!   Pallas kernels lowered through L2) and executes them on the PJRT CPU
@@ -18,9 +25,11 @@ pub mod artifacts;
 pub mod native;
 #[cfg(feature = "pjrt")]
 pub mod pjrt;
+pub mod tiled;
 pub mod tiling;
 
 pub use native::NativeEngine;
+pub use tiled::TiledEngine;
 
 use crate::correlation::ContingencyTable;
 

@@ -40,6 +40,22 @@ impl SuEngine for NativeEngine {
     fn su_from_tables(&self, tables: &[&ContingencyTable]) -> Vec<f64> {
         tables.iter().map(|&t| su_from_table(t)).collect()
     }
+
+    /// Fused per-pair path: count and finish each pair as it streams by,
+    /// instead of materializing the whole batch's `Vec<ContingencyTable>`
+    /// plus a reference `Vec` first (the default two-phase composition).
+    /// Bit-identical by construction — the per-pair table and the
+    /// `su_from_table` finish are exactly the ones the two-phase path
+    /// would build, only their lifetimes are per-iteration.
+    fn su_from_column_pairs(&self, pairs: &[ColumnPair<'_>]) -> Vec<f64> {
+        pairs
+            .iter()
+            .map(|p| {
+                let t = ContingencyTable::from_columns(p.x, p.bins_x, p.y, p.bins_y);
+                su_from_table(&t)
+            })
+            .collect()
+    }
 }
 
 #[cfg(test)]
@@ -54,17 +70,35 @@ mod tests {
 
     #[test]
     fn fused_matches_two_phase() {
+        // The fused override must stay bit-identical to the two-phase
+        // composition it replaces (tables first, SU after), across a
+        // batch of mixed arities.
         let x = random_cols(1, 500, 8);
         let y = random_cols(2, 500, 4);
-        let pair = ColumnPair {
-            x: &x,
-            bins_x: 8,
-            y: &y,
-            bins_y: 4,
-        };
+        let z = random_cols(7, 500, 3);
+        let pairs = [
+            ColumnPair {
+                x: &x,
+                bins_x: 8,
+                y: &y,
+                bins_y: 4,
+            },
+            ColumnPair {
+                x: &z,
+                bins_x: 3,
+                y: &x,
+                bins_y: 8,
+            },
+            ColumnPair {
+                x: &y,
+                bins_x: 4,
+                y: &y,
+                bins_y: 4,
+            },
+        ];
         let e = NativeEngine;
-        let fused = e.su_from_column_pairs(&[pair]);
-        let tables = e.ctables(&[pair], 0..500);
+        let fused = e.su_from_column_pairs(&pairs);
+        let tables = e.ctables(&pairs, 0..500);
         let two = e.su_from_tables(&tables.iter().collect::<Vec<_>>());
         assert_eq!(fused, two);
     }

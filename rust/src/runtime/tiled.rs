@@ -1,0 +1,379 @@
+//! Cache-blocked tiled SU engine: one flat count slab for a whole pair
+//! batch, filled tile by tile.
+//!
+//! [`NativeEngine`](crate::runtime::NativeEngine) processes a batch one
+//! pair at a time: allocate that pair's `ContingencyTable`, stream every
+//! row through it, move on. [`TiledEngine`] restructures the same work
+//! around fixed `(P, N, B)` tiles:
+//!
+//! * **P** — pairs per tile. Up to `P` pairs share one flat `u64` count
+//!   slab (`P × B` cells, one `B`-strided stripe per pair), allocated
+//!   once per tile and reused across row tiles — no per-pair allocation
+//!   in the hot loop.
+//! * **N** — rows per tile. The row range is walked in `N`-row chunks,
+//!   and *all* `P` pairs consume a chunk before the walk advances. CFS
+//!   batches share columns heavily (feature-vs-class pairs all read the
+//!   class column), so the shared column's tile stays cache-resident
+//!   across the `P` scans instead of being re-streamed from memory per
+//!   pair, and the slab itself (at the default shape, 64 KiB) never
+//!   leaves L1/L2.
+//! * **B** — the cell budget (`bins_x × bins_y`) of a slab stripe. Pairs
+//!   whose table exceeds `B` cells take the scalar
+//!   [`ContingencyTable::from_columns_range`] fallback; everything else
+//!   goes through the slab.
+//!
+//! The inner loop is branch-light and bounds-check-free (the same
+//! validated-bins invariant `ContingencyTable::merge_rows` relies on),
+//! and interleaves **two pair stripes per pass** so the scatter-increment
+//! dependence chains of independent histograms overlap — the classic
+//! multi-histogram trick, here across pairs instead of sub-histograms.
+//!
+//! **Exactness.** The slab holds `u64` counts bumped by 1 per row — the
+//! identical additions `merge_rows` performs, in a different order, and
+//! integer addition is commutative. The finish assembles each stripe
+//! back into a `ContingencyTable` of the pair's true shape and runs the
+//! very same [`su_from_table`] the native engine runs. Every result is
+//! therefore **bit-identical** to `NativeEngine`'s, which the engine
+//! axis of `tests/proptests.rs` asserts across shapes, ragged batches
+//! and arities straddling `B`.
+
+use crate::correlation::su::su_from_table;
+use crate::correlation::ContingencyTable;
+use crate::runtime::{ColumnPair, SuEngine};
+
+/// Default pairs per tile (`P`).
+pub const TILE_PAIRS: usize = 8;
+/// Default rows per tile (`N`).
+pub const TILE_ROWS: usize = 4096;
+/// Default cell budget per pair stripe (`B`), in table cells.
+pub const TILE_BINS: usize = 1024;
+
+/// One pair's view of the current row tile: its slab stripe base and the
+/// column slices cut to the tile.
+struct Slot<'a> {
+    base: usize,
+    by: usize,
+    x: &'a [u8],
+    y: &'a [u8],
+}
+
+/// Scatter-count one row tile into a single pair's slab stripe.
+#[inline]
+fn bump_one(counts: &mut [u64], s: &Slot<'_>) {
+    for (&xv, &yv) in s.x.iter().zip(s.y) {
+        let idx = s.base + xv as usize * s.by + yv as usize;
+        debug_assert!(idx < counts.len());
+        // SAFETY: bin indices are validated against the arity at dataset
+        // construction (the `merge_rows` invariant), so
+        // `xv * by + yv < bins_x * bins_y ≤ B` and the index stays inside
+        // this pair's stripe.
+        unsafe { *counts.get_unchecked_mut(idx) += 1 };
+    }
+}
+
+/// Scatter-count one row tile for two pair stripes in a single pass.
+/// The two increment chains are independent (disjoint stripes), so the
+/// store-to-load dependences of repeated cells overlap instead of
+/// serializing — the measurable win over the one-pair-at-a-time loop.
+#[inline]
+fn bump_two(counts: &mut [u64], a: &Slot<'_>, b: &Slot<'_>) {
+    debug_assert_eq!(a.x.len(), a.y.len());
+    debug_assert_eq!(a.x.len(), b.x.len());
+    debug_assert_eq!(b.x.len(), b.y.len());
+    let n = a.x.len();
+    for i in 0..n {
+        // SAFETY: all four slices are cut from the same row tile, so
+        // `i < n` is in bounds for each; slab indices stay inside their
+        // stripes by the same validated-bins invariant as `bump_one`.
+        unsafe {
+            let ia =
+                a.base + *a.x.get_unchecked(i) as usize * a.by + *a.y.get_unchecked(i) as usize;
+            let ib =
+                b.base + *b.x.get_unchecked(i) as usize * b.by + *b.y.get_unchecked(i) as usize;
+            debug_assert!(ia < counts.len() && ib < counts.len());
+            *counts.get_unchecked_mut(ia) += 1;
+            *counts.get_unchecked_mut(ib) += 1;
+        }
+    }
+}
+
+/// Cache-blocked batch engine. Bit-identical to
+/// [`NativeEngine`](crate::runtime::NativeEngine) (see the module doc's
+/// exactness argument); faster on wide pair batches.
+#[derive(Debug, Clone, Copy)]
+pub struct TiledEngine {
+    tile_pairs: usize,
+    tile_rows: usize,
+    tile_bins: usize,
+}
+
+impl Default for TiledEngine {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl TiledEngine {
+    /// Engine with the default `(P, N, B)` tile shape.
+    pub fn new() -> Self {
+        Self::with_tiles(TILE_PAIRS, TILE_ROWS, TILE_BINS)
+    }
+
+    /// Engine with an explicit tile shape — tests use tiny tiles to
+    /// exercise ragged boundaries and the `B` fallback. All dimensions
+    /// must be at least 1.
+    pub fn with_tiles(tile_pairs: usize, tile_rows: usize, tile_bins: usize) -> Self {
+        assert!(
+            tile_pairs >= 1 && tile_rows >= 1 && tile_bins >= 1,
+            "tile dimensions must be positive"
+        );
+        Self {
+            tile_pairs,
+            tile_rows,
+            tile_bins,
+        }
+    }
+
+    /// Cells a pair's table needs; `None` means it exceeds the stripe
+    /// budget `B` and takes the scalar fallback.
+    fn stripe_cells(&self, p: &ColumnPair<'_>) -> Option<usize> {
+        let cells = p.bins_x as usize * p.bins_y as usize;
+        (cells <= self.tile_bins).then_some(cells)
+    }
+}
+
+impl SuEngine for TiledEngine {
+    fn name(&self) -> &'static str {
+        "tiled"
+    }
+
+    fn ctables(
+        &self,
+        pairs: &[ColumnPair<'_>],
+        rows: std::ops::Range<usize>,
+    ) -> Vec<ContingencyTable> {
+        let mut out: Vec<Option<ContingencyTable>> = vec![None; pairs.len()];
+        // Split the batch: stripe-eligible pairs go through the slab,
+        // oversize arities (> B cells) through the scalar path.
+        let mut tiled: Vec<usize> = Vec::with_capacity(pairs.len());
+        for (i, p) in pairs.iter().enumerate() {
+            if self.stripe_cells(p).is_some() {
+                tiled.push(i);
+            } else {
+                out[i] = Some(ContingencyTable::from_columns_range(
+                    p.x,
+                    p.bins_x,
+                    p.y,
+                    p.bins_y,
+                    rows.clone(),
+                ));
+            }
+        }
+
+        // One slab, reused (re-zeroed) per P-tile of pairs.
+        let mut slab: Vec<u64> = vec![0; self.tile_pairs.min(tiled.len()) * self.tile_bins];
+        for chunk in tiled.chunks(self.tile_pairs) {
+            let live = &mut slab[..chunk.len() * self.tile_bins];
+            live.fill(0);
+
+            // Walk the row range in N-tiles; every pair in the chunk
+            // consumes a tile before the walk advances, keeping shared
+            // column tiles and the slab cache-resident.
+            let mut start = rows.start;
+            while start < rows.end {
+                let end = (start + self.tile_rows).min(rows.end);
+                let slot = |k: usize| {
+                    let p = &pairs[chunk[k]];
+                    Slot {
+                        base: k * self.tile_bins,
+                        by: p.bins_y as usize,
+                        x: &p.x[start..end],
+                        y: &p.y[start..end],
+                    }
+                };
+                let mut k = 0;
+                while k + 1 < chunk.len() {
+                    bump_two(live, &slot(k), &slot(k + 1));
+                    k += 2;
+                }
+                if k < chunk.len() {
+                    bump_one(live, &slot(k));
+                }
+                start = end;
+            }
+
+            // Assemble each stripe back into the pair's true shape. The
+            // stripe prefix holds exactly the row-major counts a
+            // `ContingencyTable` stores.
+            for (k, &i) in chunk.iter().enumerate() {
+                let p = &pairs[i];
+                let cells = self.stripe_cells(p).expect("chunk holds eligible pairs");
+                let mut t = ContingencyTable::new(p.bins_x, p.bins_y);
+                t.counts
+                    .copy_from_slice(&live[k * self.tile_bins..k * self.tile_bins + cells]);
+                out[i] = Some(t);
+            }
+        }
+
+        out.into_iter()
+            .map(|t| t.expect("every pair assembled"))
+            .collect()
+    }
+
+    fn su_from_tables(&self, tables: &[&ContingencyTable]) -> Vec<f64> {
+        // The identical finish the native engine runs — bit-identity of
+        // the SU values follows from bit-identity of the tables.
+        tables.iter().map(|&t| su_from_table(t)).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::NativeEngine;
+    use crate::util::XorShift64Star;
+
+    fn random_cols(seed: u64, n: usize, bins: u16) -> Vec<u8> {
+        let mut rng = XorShift64Star::new(seed);
+        (0..n).map(|_| rng.next_below(bins as u64) as u8).collect()
+    }
+
+    /// A batch of pairs with mixed arities over shared columns (the CFS
+    /// shape: many pairs read the same "class" column).
+    fn batch(n: usize) -> (Vec<(Vec<u8>, u16)>, Vec<(usize, usize)>) {
+        let arities: Vec<u16> = vec![2, 5, 8, 3, 16, 7, 4, 33];
+        let cols: Vec<(Vec<u8>, u16)> = arities
+            .iter()
+            .enumerate()
+            .map(|(i, &b)| (random_cols(100 + i as u64, n, b), b))
+            .collect();
+        // Every column vs column 0, plus a few cross pairs: 11 pairs —
+        // ragged against the default and the tiny tile_pairs alike.
+        let mut idx: Vec<(usize, usize)> = (1..cols.len()).map(|i| (i, 0)).collect();
+        idx.extend([(2, 4), (7, 7), (5, 3), (0, 0)]);
+        (cols, idx)
+    }
+
+    fn pairs_of<'a>(cols: &'a [(Vec<u8>, u16)], idx: &[(usize, usize)]) -> Vec<ColumnPair<'a>> {
+        idx.iter()
+            .map(|&(a, b)| ColumnPair {
+                x: &cols[a].0,
+                bins_x: cols[a].1,
+                y: &cols[b].0,
+                bins_y: cols[b].1,
+            })
+            .collect()
+    }
+
+    #[test]
+    fn tables_match_native_across_tile_shapes() {
+        let (cols, idx) = batch(1000);
+        let pairs = pairs_of(&cols, &idx);
+        let native = NativeEngine.ctables(&pairs, 0..1000);
+        // Tile shapes chosen to hit every boundary: P dividing and not
+        // dividing the batch, N dividing and not dividing the rows, B
+        // forcing some / all pairs onto the scalar fallback.
+        for (p, n, b) in [
+            (TILE_PAIRS, TILE_ROWS, TILE_BINS),
+            (1, 1, 1),          // everything degenerate: all-fallback, 1-row tiles
+            (2, 7, 64),         // ragged everywhere; arity 16×33 falls back
+            (3, 1000, 4096),    // single row tile, odd chunk size
+            (11, 999, 16 * 33), // exact batch width, ragged rows, all eligible
+        ] {
+            let tiled = TiledEngine::with_tiles(p, n, b).ctables(&pairs, 0..1000);
+            assert_eq!(tiled, native, "tile shape ({p},{n},{b}) diverged");
+        }
+    }
+
+    #[test]
+    fn row_subranges_match_native_and_merge_exactly() {
+        let (cols, idx) = batch(500);
+        let pairs = pairs_of(&cols, &idx);
+        let e = TiledEngine::with_tiles(4, 64, 2048);
+        let native = NativeEngine;
+        for range in [0..500, 0..0, 17..17, 3..130, 130..500, 499..500] {
+            assert_eq!(
+                e.ctables(&pairs, range.clone()),
+                native.ctables(&pairs, range.clone()),
+                "range {range:?} diverged"
+            );
+        }
+        // Disjoint subranges merge to the whole — the hp partition
+        // invariant, through the tiled path.
+        let whole = e.ctables(&pairs, 0..500);
+        let mut low = e.ctables(&pairs, 0..201);
+        let high = e.ctables(&pairs, 201..500);
+        for (l, h) in low.iter_mut().zip(&high) {
+            l.merge(h).unwrap();
+        }
+        assert_eq!(low, whole);
+    }
+
+    #[test]
+    fn su_bit_identical_to_native() {
+        let (cols, idx) = batch(800);
+        let pairs = pairs_of(&cols, &idx);
+        let tiled = TiledEngine::new().su_from_column_pairs(&pairs);
+        let native = NativeEngine.su_from_column_pairs(&pairs);
+        assert_eq!(tiled.len(), native.len());
+        for (t, n) in tiled.iter().zip(&native) {
+            assert_eq!(t.to_bits(), n.to_bits());
+        }
+    }
+
+    #[test]
+    fn arities_straddling_the_bin_budget() {
+        // B = 100: the 8×12 pair (96 cells) squeaks under, the 9×12
+        // (108) and 16×33 pairs fall back — both paths in one batch,
+        // both bit-identical to native.
+        let a = random_cols(1, 300, 8);
+        let b = random_cols(2, 300, 12);
+        let c = random_cols(3, 300, 9);
+        let d = random_cols(4, 300, 16);
+        let e = random_cols(5, 300, 33);
+        let pairs = [
+            ColumnPair {
+                x: &a,
+                bins_x: 8,
+                y: &b,
+                bins_y: 12,
+            },
+            ColumnPair {
+                x: &c,
+                bins_x: 9,
+                y: &b,
+                bins_y: 12,
+            },
+            ColumnPair {
+                x: &d,
+                bins_x: 16,
+                y: &e,
+                bins_y: 33,
+            },
+        ];
+        let engine = TiledEngine::with_tiles(4, 128, 100);
+        assert_eq!(
+            engine.ctables(&pairs, 0..300),
+            NativeEngine.ctables(&pairs, 0..300)
+        );
+        let tiled = engine.su_from_column_pairs(&pairs);
+        let native = NativeEngine.su_from_column_pairs(&pairs);
+        for (t, n) in tiled.iter().zip(&native) {
+            assert_eq!(t.to_bits(), n.to_bits());
+        }
+    }
+
+    #[test]
+    fn empty_inputs() {
+        let e = TiledEngine::new();
+        assert!(e.ctables(&[], 0..0).is_empty());
+        assert!(e.su_from_column_pairs(&[]).is_empty());
+        assert!(e.su_from_tables(&[]).is_empty());
+    }
+
+    #[test]
+    #[should_panic(expected = "tile dimensions must be positive")]
+    fn zero_tile_dims_rejected() {
+        let _ = TiledEngine::with_tiles(0, 1, 1);
+    }
+}

@@ -224,7 +224,7 @@ impl DatasetCacheReport {
 pub struct DicfsService {
     config: ServiceConfig,
     ctx: Arc<SparkletContext>,
-    engine: Arc<dyn SuEngine>,
+    engines: Vec<Arc<dyn SuEngine>>,
     registry: DatasetRegistry,
     scheduler: MissScheduler,
     next_query: AtomicUsize,
@@ -236,12 +236,24 @@ impl DicfsService {
         Self::with_engine(config, Arc::new(NativeEngine))
     }
 
-    /// Service with an explicit engine (native or PJRT).
+    /// Service with an explicit single engine (native, tiled, or PJRT):
+    /// every dataset's jobs run through it.
     pub fn with_engine(config: ServiceConfig, engine: Arc<dyn SuEngine>) -> Self {
+        Self::with_engine_pool(config, vec![engine])
+    }
+
+    /// Service with an engine pool. Datasets registered with
+    /// [`ServeScheme::Auto`] keep the whole pool: their planner prices
+    /// each coalesced miss batch across every engine (the engine shows
+    /// up in [`SuJobReport`] plan decisions). Fixed schemes — and the
+    /// driver-side SU finish of the incremental upgrade path — use the
+    /// first entry.
+    pub fn with_engine_pool(config: ServiceConfig, engines: Vec<Arc<dyn SuEngine>>) -> Self {
+        assert!(!engines.is_empty(), "engine pool cannot be empty");
         Self {
             config,
             ctx: SparkletContext::new(config.cluster),
-            engine,
+            engines,
             registry: DatasetRegistry::default(),
             scheduler: MissScheduler::new(config.max_inflight_jobs),
             next_query: AtomicUsize::new(0),
@@ -282,7 +294,7 @@ impl DicfsService {
         partitions: Option<usize>,
     ) -> DatasetId {
         self.registry
-            .insert(name, data, scheme, partitions, &self.ctx, &self.engine)
+            .insert(name, data, scheme, partitions, &self.ctx, &self.engines)
             .id
     }
 
@@ -341,7 +353,7 @@ impl DicfsService {
         let reg = self.registry.get(id).ok_or_else(|| {
             crate::core::Error::InvalidConfig(format!("unknown dataset id {id}"))
         })?;
-        reg.append(delta, &self.ctx, &self.engine)
+        reg.append(delta, &self.ctx, &self.engines)
     }
 
     /// Look up a registered dataset by id.
@@ -787,6 +799,42 @@ mod tests {
         for j in &log {
             for d in &j.plans {
                 assert!(d.predicted_secs > 0.0 && d.observed_secs > 0.0);
+            }
+        }
+    }
+
+    #[test]
+    fn engine_pool_service_prices_engines_and_stays_exact() {
+        use crate::runtime::TiledEngine;
+        let service = DicfsService::with_engine_pool(
+            ServiceConfig {
+                cluster: ClusterConfig::with_nodes(2),
+                max_inflight_jobs: 2,
+            },
+            vec![
+                Arc::new(NativeEngine) as Arc<dyn SuEngine>,
+                Arc::new(TiledEngine::new()),
+            ],
+        );
+        let dd = discrete(700, 9, 13);
+        let id = service.register_discrete("a", Arc::clone(&dd), ServeScheme::Auto, None);
+        let report = service.query(&QuerySpec {
+            dataset: id,
+            cfs: CfsConfig::default(),
+        });
+        let seq = SequentialCfs::default().select_discrete(&dd);
+        assert_eq!(report.result.selected, seq.selected, "pool broke exactness");
+        assert_eq!(report.result.merit.to_bits(), seq.merit.to_bits());
+        // Each plan decision names which engine the planner priced in.
+        let log = service.job_log();
+        assert!(log.iter().any(|j| !j.plans.is_empty()));
+        for j in &log {
+            for d in &j.plans {
+                assert!(
+                    d.engine == "native" || d.engine == "tiled",
+                    "unexpected engine label {:?}",
+                    d.engine
+                );
             }
         }
     }

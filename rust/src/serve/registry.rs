@@ -260,9 +260,12 @@ fn build_provider(
     data: &Arc<DiscreteDataset>,
     partitions: Option<usize>,
     ctx: &Arc<SparkletContext>,
-    engine: &Arc<dyn SuEngine>,
+    engines: &[Arc<dyn SuEngine>],
     prev: Option<&dyn SharedCorrelator>,
 ) -> Box<dyn SharedCorrelator> {
+    // Fixed schemes pin every batch to the pool's first engine; only
+    // the adaptive scheme prices the whole pool.
+    let engine = &engines[0];
     match scheme {
         ServeScheme::Sequential => Box::new(LocalCorrelator {
             data: Arc::clone(data),
@@ -285,9 +288,15 @@ fn build_provider(
         // AutoCorrelator owns a Planner (calibrated rates, vp layout
         // flag, decision log) that persists across every query and
         // coalesced job on this dataset version — and, via the
-        // calibration transfer below, across appends.
+        // calibration transfer below, across appends. With a multi-entry
+        // pool the planner also prices the engine per coalesced batch.
         ServeScheme::Auto => {
-            let auto = AutoCorrelator::new(ctx, Arc::clone(data), Arc::clone(engine), partitions);
+            let auto = AutoCorrelator::with_engine_pool(
+                ctx,
+                Arc::clone(data),
+                engines.to_vec(),
+                partitions,
+            );
             if let Some(cal) = prev.and_then(|p| p.planner_calibration()) {
                 auto.planner().set_calibration(cal);
             }
@@ -332,10 +341,10 @@ impl RegisteredDataset {
         scheme: ServeScheme,
         partitions: Option<usize>,
         ctx: &Arc<SparkletContext>,
-        engine: &Arc<dyn SuEngine>,
+        engines: &[Arc<dyn SuEngine>],
     ) -> Self {
         let cache = VersionedSuCache::new();
-        let provider = build_provider(scheme, &data, partitions, ctx, engine, None);
+        let provider = build_provider(scheme, &data, partitions, ctx, engines, None);
         let v0 = Arc::new(DatasetVersion {
             dataset: id,
             name: name.clone(),
@@ -343,7 +352,7 @@ impl RegisteredDataset {
             data,
             provider,
             cache: cache.clone(),
-            engine: Arc::clone(engine),
+            engine: Arc::clone(&engines[0]),
         });
         Self {
             id,
@@ -430,7 +439,7 @@ impl RegisteredDataset {
         &self,
         delta: &DiscreteDataset,
         ctx: &Arc<SparkletContext>,
-        engine: &Arc<dyn SuEngine>,
+        engines: &[Arc<dyn SuEngine>],
     ) -> Result<usize> {
         if delta.num_rows() == 0 {
             return Err(Error::InvalidData(
@@ -450,7 +459,7 @@ impl RegisteredDataset {
             &merged,
             self.partitions,
             ctx,
-            engine,
+            engines,
             Some(cur.provider.as_ref()),
         );
         let version = cur.version + 1;
@@ -461,7 +470,7 @@ impl RegisteredDataset {
             data: merged,
             provider,
             cache: self.cache.clone(),
-            engine: Arc::clone(engine),
+            engine: Arc::clone(&engines[0]),
         });
         Ok(version)
     }
@@ -529,7 +538,7 @@ impl DatasetRegistry {
         scheme: ServeScheme,
         partitions: Option<usize>,
         ctx: &Arc<SparkletContext>,
-        engine: &Arc<dyn SuEngine>,
+        engines: &[Arc<dyn SuEngine>],
     ) -> Arc<RegisteredDataset> {
         let mut entries = self.entries.lock().unwrap();
         assert!(
@@ -543,7 +552,7 @@ impl DatasetRegistry {
             scheme,
             partitions,
             ctx,
-            engine,
+            engines,
         ));
         entries.push(Arc::clone(&reg));
         reg

@@ -480,6 +480,7 @@ mod tests {
             fn compute_batch(&self, pairs: &[(FeatureId, FeatureId)]) -> Vec<f64> {
                 self.log.lock().unwrap().push(PlanDecision {
                     strategy: Strategy::Vp,
+                    engine: "native",
                     pairs: pairs.len(),
                     predicted_secs: 0.5,
                     rejected_secs: 0.9,

@@ -368,14 +368,14 @@ pub struct ReplaySummary {
 pub fn replay(
     script: &WorkloadScript,
     opts: &ReplayOptions,
-    engine: Arc<dyn SuEngine>,
+    engines: Vec<Arc<dyn SuEngine>>,
 ) -> ReplaySummary {
-    let service = DicfsService::with_engine(
+    let service = DicfsService::with_engine_pool(
         ServiceConfig {
             cluster: ClusterConfig::with_nodes(opts.nodes),
             max_inflight_jobs: opts.max_inflight_jobs,
         },
-        engine,
+        engines,
     );
 
     // Pre-generate and discretize each dataset's full stream once, then
@@ -770,7 +770,7 @@ query a warm=maybe
                 concurrency: 2,
                 verify: true,
             },
-            Arc::new(NativeEngine),
+            vec![Arc::new(NativeEngine)],
         );
         assert_eq!(summary.reports.len(), 7); // 2 + 1 + 1 + 1, then 2 post-append
         assert_eq!(summary.equivalence, Some(true));

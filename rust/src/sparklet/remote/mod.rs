@@ -44,7 +44,9 @@ pub mod worker;
 pub use calibrate::{fit_network_model, WireSample};
 pub use codec::{ColumnBlock, Wire};
 pub use pool::{ProcessPool, ProcessPoolConfig, StageOutcome};
-pub use protocol::{DatasetPayload, DriverMsg, IndexedPair, RemoteTask, TaskResult, WorkerMsg};
+pub use protocol::{
+    DatasetPayload, DriverMsg, EngineKind, IndexedPair, RemoteTask, TaskResult, WorkerMsg,
+};
 pub use tasks::execute_task;
 pub use worker::{worker_main, CRASH_EXIT_CODE};
 
@@ -53,7 +55,7 @@ use std::sync::Arc;
 use std::time::Instant;
 
 use crate::data::columnar::DiscreteDataset;
-use crate::runtime::NativeEngine;
+use crate::runtime::{NativeEngine, SuEngine, TiledEngine};
 use crate::sparklet::pool::{ExecutorPool, TaskOptions};
 
 /// A stage executor for the remote task vocabulary: run a batch of
@@ -64,8 +66,10 @@ use crate::sparklet::pool::{ExecutorPool, TaskOptions};
 pub trait TaskBackend {
     /// Parallel slots available (threads or live worker processes).
     fn slots(&self) -> usize;
-    /// Execute one stage of tasks.
-    fn run_tasks(&mut self, tasks: &[RemoteTask]) -> io::Result<StageOutcome>;
+    /// Execute one stage of tasks, all through `engine` (the driver's
+    /// planner picks one engine per batch, and a batch is one stage).
+    fn run_tasks(&mut self, engine: EngineKind, tasks: &[RemoteTask])
+        -> io::Result<StageOutcome>;
     /// Human-readable backend label for metrics and reports.
     fn label(&self) -> &'static str;
 }
@@ -93,7 +97,11 @@ impl TaskBackend for InProcessBackend {
         self.pool.threads()
     }
 
-    fn run_tasks(&mut self, tasks: &[RemoteTask]) -> io::Result<StageOutcome> {
+    fn run_tasks(
+        &mut self,
+        engine: EngineKind,
+        tasks: &[RemoteTask],
+    ) -> io::Result<StageOutcome> {
         let tasks: Arc<Vec<RemoteTask>> = Arc::new(tasks.to_vec());
         let n = tasks.len();
         let data = Arc::clone(&self.data);
@@ -101,8 +109,16 @@ impl TaskBackend for InProcessBackend {
         let (results, reports) = self
             .pool
             .run_stage(n, move |i| {
+                // Same per-task engine selection the worker process
+                // performs — the two backends stay interchangeable.
+                let native = NativeEngine;
+                let tiled = TiledEngine::new();
+                let engine: &dyn SuEngine = match engine {
+                    EngineKind::Native => &native,
+                    EngineKind::Tiled => &tiled,
+                };
                 let t0 = Instant::now();
-                let r = execute_task(&data, &NativeEngine, &shared[i]);
+                let r = execute_task(&data, engine, &shared[i]);
                 (r, t0.elapsed().as_secs_f64())
             })
             .map_err(|ti| codec::bad(format!("in-process task {ti} failed permanently")))?;
@@ -180,10 +196,14 @@ impl TaskBackend for ExecutorBackend {
         }
     }
 
-    fn run_tasks(&mut self, tasks: &[RemoteTask]) -> io::Result<StageOutcome> {
+    fn run_tasks(
+        &mut self,
+        engine: EngineKind,
+        tasks: &[RemoteTask],
+    ) -> io::Result<StageOutcome> {
         match self {
-            Self::InProcess(b) => b.run_tasks(tasks),
-            Self::MultiProcess(p) => p.run_tasks(tasks),
+            Self::InProcess(b) => b.run_tasks(engine, tasks),
+            Self::MultiProcess(p) => p.run_tasks(engine, tasks),
         }
     }
 
@@ -223,7 +243,7 @@ mod tests {
                 pairs: vec![(f, (f, CLASS_ID as u64))],
             })
             .collect();
-        let out = b.run_tasks(&tasks).unwrap();
+        let out = b.run_tasks(EngineKind::Native, &tasks).unwrap();
         assert_eq!(out.results.len(), 2);
         assert_eq!(out.task_secs.len(), 2);
         assert_eq!(out.bytes_sent + out.bytes_received, 0, "nothing crosses a wire");
@@ -231,12 +251,15 @@ mod tests {
             let TaskResult::Su(sus) = r else { panic!("vp task returns SU") };
             assert_eq!(sus[0].0, i as u64, "results stay in task order");
         }
+        // The tiled engine produces bit-identical results in-process too.
+        let tiled = b.run_tasks(EngineKind::Tiled, &tasks).unwrap();
+        assert_eq!(tiled.results, out.results);
     }
 
     #[test]
     fn in_process_backend_empty_stage() {
         let mut b = ExecutorBackend::in_process(data(), 1);
-        let out = b.run_tasks(&[]).unwrap();
+        let out = b.run_tasks(EngineKind::Native, &[]).unwrap();
         assert!(out.results.is_empty() && out.retries == 0);
     }
 }

@@ -40,7 +40,8 @@ use crate::sparklet::config::NetworkModel;
 use super::calibrate::{fit_network_model, WireSample};
 use super::codec::{bad, Wire};
 use super::protocol::{
-    recv_msg, send_msg, write_frame, DatasetPayload, DriverMsg, RemoteTask, TaskResult, WorkerMsg,
+    recv_msg, send_msg, write_frame, DatasetPayload, DriverMsg, EngineKind, RemoteTask, TaskResult,
+    WorkerMsg,
 };
 
 /// Distinguishes socket directories of concurrently live pools.
@@ -289,10 +290,17 @@ impl ProcessPool {
     }
 
     /// Run one stage of tasks across the live workers, returning results
-    /// in task order plus the stage's measured costs. Tasks lost to a
+    /// in task order plus the stage's measured costs. Every dispatch of
+    /// this stage (including crash re-dispatches and speculative
+    /// duplicates) carries `engine` on its Task frame, so retries replay
+    /// the same engine without any worker-side state. Tasks lost to a
     /// worker crash are re-dispatched to survivors; the stage fails only
     /// when every worker is gone.
-    pub fn run_tasks(&mut self, tasks: &[RemoteTask]) -> io::Result<StageOutcome> {
+    pub fn run_tasks(
+        &mut self,
+        engine: EngineKind,
+        tasks: &[RemoteTask],
+    ) -> io::Result<StageOutcome> {
         let n = tasks.len();
         if n == 0 {
             return Ok(StageOutcome::empty());
@@ -340,6 +348,7 @@ impl ProcessPool {
                 self.next_id += 1;
                 let frame = DriverMsg::Task {
                     id,
+                    engine,
                     task: tasks[ti].clone(),
                 }
                 .to_bytes();

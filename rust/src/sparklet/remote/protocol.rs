@@ -225,6 +225,57 @@ impl Wire for RemoteTask {
     }
 }
 
+/// Which [`SuEngine`](crate::runtime::SuEngine) the worker runs a task
+/// through. Carried on every [`DriverMsg::Task`] frame rather than held
+/// as worker state, so crash retries and speculative duplicates replay
+/// the dispatch's engine automatically — the dispatch is the whole
+/// truth about its attempt.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum EngineKind {
+    /// The scalar native engine (the default, and what unknown engine
+    /// labels fall back to — e.g. pjrt, which has no worker-side
+    /// implementation).
+    #[default]
+    Native,
+    /// The cache-tiled engine (bit-identical to native).
+    Tiled,
+}
+
+impl EngineKind {
+    /// Map an [`SuEngine::name`](crate::runtime::SuEngine::name) label
+    /// to its wire kind. Unknown labels map to [`EngineKind::Native`].
+    pub fn from_name(name: &str) -> Self {
+        match name {
+            "tiled" => EngineKind::Tiled,
+            _ => EngineKind::Native,
+        }
+    }
+
+    /// The engine label this kind resolves to on the worker.
+    pub fn label(self) -> &'static str {
+        match self {
+            EngineKind::Native => "native",
+            EngineKind::Tiled => "tiled",
+        }
+    }
+}
+
+impl Wire for EngineKind {
+    fn encode(&self, out: &mut Vec<u8>) {
+        out.push(match self {
+            EngineKind::Native => 0,
+            EngineKind::Tiled => 1,
+        });
+    }
+    fn decode(buf: &mut &[u8]) -> io::Result<Self> {
+        match u8::decode(buf)? {
+            0 => Ok(EngineKind::Native),
+            1 => Ok(EngineKind::Tiled),
+            t => Err(bad(format!("engine kind {t}"))),
+        }
+    }
+}
+
 /// What a completed task produced.
 #[derive(Debug, Clone, PartialEq)]
 pub enum TaskResult {
@@ -267,6 +318,8 @@ pub enum DriverMsg {
     Task {
         /// Pool-unique dispatch id.
         id: u64,
+        /// The engine this attempt runs through.
+        engine: EngineKind,
         /// The work itself.
         task: RemoteTask,
     },
@@ -288,9 +341,10 @@ impl Wire for DriverMsg {
                 out.push(0);
                 p.encode(out);
             }
-            DriverMsg::Task { id, task } => {
+            DriverMsg::Task { id, engine, task } => {
                 out.push(1);
                 id.encode(out);
+                engine.encode(out);
                 task.encode(out);
             }
             DriverMsg::ArmCrash { after } => {
@@ -305,6 +359,7 @@ impl Wire for DriverMsg {
             0 => Ok(DriverMsg::Install(DatasetPayload::decode(buf)?)),
             1 => Ok(DriverMsg::Task {
                 id: u64::decode(buf)?,
+                engine: EngineKind::decode(buf)?,
                 task: RemoteTask::decode(buf)?,
             }),
             2 => Ok(DriverMsg::ArmCrash {
@@ -391,6 +446,7 @@ mod tests {
             }),
             DriverMsg::Task {
                 id: 7,
+                engine: EngineKind::Native,
                 task: RemoteTask::HpCount {
                     pairs: vec![(0, (0, u64::MAX))],
                     rows: 0..3,
@@ -398,12 +454,14 @@ mod tests {
             },
             DriverMsg::Task {
                 id: 8,
+                engine: EngineKind::Tiled,
                 task: RemoteTask::HpMergeSu {
                     groups: vec![(0, vec![table(), table()])],
                 },
             },
             DriverMsg::Task {
                 id: 9,
+                engine: EngineKind::Native,
                 task: RemoteTask::VpSu {
                     pairs: vec![(3, (1, 2))],
                 },
@@ -437,6 +495,7 @@ mod tests {
         let (mut a, mut b) = UnixStream::pair().unwrap();
         let msg = DriverMsg::Task {
             id: 1,
+            engine: EngineKind::Tiled,
             task: RemoteTask::VpSu {
                 pairs: vec![(0, (0, 1))],
             },
@@ -469,6 +528,18 @@ mod tests {
         assert_eq!(rebuilt.arities, data.arities);
         assert_eq!(rebuilt.class, data.class);
         assert_eq!(rebuilt.class_arity, data.class_arity);
+    }
+
+    #[test]
+    fn engine_kind_maps_names_with_native_fallback() {
+        assert_eq!(EngineKind::from_name("native"), EngineKind::Native);
+        assert_eq!(EngineKind::from_name("tiled"), EngineKind::Tiled);
+        // Engines with no worker-side implementation degrade to native.
+        assert_eq!(EngineKind::from_name("pjrt-cpu"), EngineKind::Native);
+        for k in [EngineKind::Native, EngineKind::Tiled] {
+            assert_eq!(EngineKind::from_bytes(&k.to_bytes()).unwrap(), k);
+            assert_eq!(EngineKind::from_name(k.label()), k);
+        }
     }
 
     #[test]

@@ -4,8 +4,11 @@
 //! A worker connects to the driver's Unix socket, sends
 //! [`WorkerMsg::Ready`], and then serves [`DriverMsg`]s until shutdown
 //! or EOF. It holds exactly one installed dataset at a time and runs
-//! every task through the native engine — the same kernels the
-//! in-process executors run, which is the bit-identity guarantee.
+//! each task through the engine named on its Task frame
+//! ([`EngineKind`]) — the same kernels the in-process executors run,
+//! which is the bit-identity guarantee (native and tiled produce
+//! identical tables and SU values, so the driver's engine choice is
+//! invisible in the results).
 //!
 //! The serve loop is separated from process plumbing so library tests
 //! can drive a "worker" over a `UnixStream::pair()` without spawning a
@@ -18,9 +21,9 @@ use std::os::unix::net::UnixStream;
 use std::time::Instant;
 
 use crate::data::columnar::DiscreteDataset;
-use crate::runtime::NativeEngine;
+use crate::runtime::{NativeEngine, SuEngine, TiledEngine};
 
-use super::protocol::{recv_msg, send_msg, DriverMsg, WorkerMsg};
+use super::protocol::{recv_msg, send_msg, DriverMsg, EngineKind, WorkerMsg};
 use super::tasks::execute_task;
 
 /// Exit code of a deliberately crashed worker (failure injection).
@@ -70,7 +73,10 @@ impl CrashHook for RealCrash {
 /// Serve one driver connection to completion.
 pub(crate) fn serve(mut stream: UnixStream, crash: &mut dyn CrashHook) -> io::Result<()> {
     send_msg(&mut stream, &WorkerMsg::Ready)?;
-    let engine = NativeEngine;
+    // Both worker-side engines exist up front; each task picks one by
+    // its frame's EngineKind. They are stateless and bit-identical.
+    let native = NativeEngine;
+    let tiled = TiledEngine::new();
     let mut data: Option<DiscreteDataset> = None;
     // `None` = disarmed; `Some(k)` = complete k more tasks normally,
     // then die on the next one.
@@ -83,7 +89,7 @@ pub(crate) fn serve(mut stream: UnixStream, crash: &mut dyn CrashHook) -> io::Re
                 data = Some(payload.into_dataset()?);
                 send_msg(&mut stream, &WorkerMsg::Ready)?;
             }
-            DriverMsg::Task { id, task } => {
+            DriverMsg::Task { id, engine, task } => {
                 if crash_after == Some(0) {
                     crash.fire()?;
                     // Test hook only: a real crash never returns.
@@ -92,8 +98,12 @@ pub(crate) fn serve(mut stream: UnixStream, crash: &mut dyn CrashHook) -> io::Re
                 let d = data
                     .as_ref()
                     .ok_or_else(|| super::codec::bad("task before dataset install"))?;
+                let engine: &dyn SuEngine = match engine {
+                    EngineKind::Native => &native,
+                    EngineKind::Tiled => &tiled,
+                };
                 let t0 = Instant::now();
-                let result = execute_task(d, &engine, &task);
+                let result = execute_task(d, engine, &task);
                 let secs = t0.elapsed().as_secs_f64();
                 send_msg(&mut stream, &WorkerMsg::Done { id, secs, result })?;
                 if let Some(left) = crash_after.as_mut() {
@@ -111,7 +121,7 @@ mod tests {
     use super::*;
     use crate::core::CLASS_ID;
     use crate::correlation::ContingencyTable;
-    use crate::sparklet::remote::protocol::{DatasetPayload, RemoteTask, TaskResult};
+    use crate::sparklet::remote::protocol::{DatasetPayload, EngineKind, RemoteTask, TaskResult};
 
     struct RecordingCrash(bool);
     impl CrashHook for RecordingCrash {
@@ -165,24 +175,29 @@ mod tests {
             let (ack, _): (WorkerMsg, usize) = recv_msg(driver).unwrap();
             assert_eq!(ack, WorkerMsg::Ready);
 
-            send_msg(
-                driver,
-                &DriverMsg::Task {
-                    id: 42,
-                    task: RemoteTask::HpCount {
-                        pairs: vec![(0, (0, CLASS_ID as u64))],
-                        rows: 0..4,
+            // The same count task through each engine kind: identical
+            // tables either way (the worker-side bit-identity check).
+            for (id, engine) in [(42u64, EngineKind::Native), (43, EngineKind::Tiled)] {
+                send_msg(
+                    driver,
+                    &DriverMsg::Task {
+                        id,
+                        engine,
+                        task: RemoteTask::HpCount {
+                            pairs: vec![(0, (0, CLASS_ID as u64))],
+                            rows: 0..4,
+                        },
                     },
-                },
-            )
-            .unwrap();
-            let (reply, _): (WorkerMsg, usize) = recv_msg(driver).unwrap();
-            let WorkerMsg::Done { id, secs, result } = reply else {
-                panic!("expected Done")
-            };
-            assert_eq!(id, 42);
-            assert!(secs >= 0.0);
-            assert_eq!(result, TaskResult::Tables(vec![(0, expected.clone())]));
+                )
+                .unwrap();
+                let (reply, _): (WorkerMsg, usize) = recv_msg(driver).unwrap();
+                let WorkerMsg::Done { id: got, secs, result } = reply else {
+                    panic!("expected Done")
+                };
+                assert_eq!(got, id);
+                assert!(secs >= 0.0);
+                assert_eq!(result, TaskResult::Tables(vec![(0, expected.clone())]));
+            }
         });
         // Driver hang-up is a clean end.
         assert!(err.is_err());
@@ -197,6 +212,7 @@ mod tests {
             &mut driver,
             &DriverMsg::Task {
                 id: 1,
+                engine: EngineKind::Native,
                 task: RemoteTask::VpSu { pairs: vec![] },
             },
         )
@@ -230,6 +246,7 @@ mod tests {
         send_msg(&mut driver, &DriverMsg::ArmCrash { after: 1 }).unwrap();
         let task = |id| DriverMsg::Task {
             id,
+            engine: EngineKind::Native,
             task: RemoteTask::VpSu {
                 pairs: vec![(0, (0, 1))],
             },

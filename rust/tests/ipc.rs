@@ -26,7 +26,7 @@ use dicfs::dicfs::remote::{spawn_installed_pool, RemoteCorrelator};
 use dicfs::dicfs::{DiCfs, DiCfsConfig, Partitioning};
 use dicfs::discretize::discretize_dataset;
 use dicfs::sparklet::remote::{
-    DatasetPayload, ProcessPool, ProcessPoolConfig, RemoteTask, TaskResult,
+    DatasetPayload, EngineKind, ProcessPool, ProcessPoolConfig, RemoteTask, TaskResult,
 };
 use dicfs::sparklet::{ClusterConfig, SparkletContext};
 
@@ -131,6 +131,35 @@ fn auto_multi_process_is_bit_identical() {
 }
 
 #[test]
+fn auto_engine_pool_multi_process_is_bit_identical() {
+    worker_exe();
+    let dd = dataset(700, 9);
+    let in_proc = DiCfs::native(DiCfsConfig::for_scheme(Partitioning::Auto, 4)).select(&dd);
+    let mut cfg = DiCfsConfig::for_scheme(Partitioning::Auto, 4);
+    cfg.workers_proc = Some(2);
+    // The full engine pool: the planner prices native vs tiled per
+    // batch and each Task frame carries the chosen engine to the
+    // workers — with no effect on the selected features or merit bits.
+    let multi = DiCfs::auto_engine(cfg).select(&dd);
+
+    assert_eq!(multi.result.selected, in_proc.result.selected);
+    assert_eq!(
+        multi.result.merit.to_bits(),
+        in_proc.result.merit.to_bits(),
+        "engine pool broke bit-identity over the wire"
+    );
+    assert!(!multi.decisions.is_empty());
+    for d in &multi.decisions {
+        assert!(
+            d.engine == "native" || d.engine == "tiled",
+            "unexpected engine label {:?}",
+            d.engine
+        );
+        assert!(d.predicted_secs > 0.0 && d.observed_secs > 0.0);
+    }
+}
+
+#[test]
 fn killed_worker_tasks_are_reexecuted() {
     let dd = dataset(500, 6);
     let mut pool = ProcessPool::new(pool_config(2, false)).unwrap();
@@ -143,7 +172,10 @@ fn killed_worker_tasks_are_reexecuted() {
             pairs: vec![(f, (f, CLASS_ID as u64))],
         })
         .collect();
-    let out = pool.run_tasks(&tasks).unwrap();
+    // Dispatch through the tiled engine: the crash re-dispatch must
+    // replay the same engine (it rides the Task frame), and the tiled
+    // kernels must match the driver-side SU bit-for-bit.
+    let out = pool.run_tasks(EngineKind::Tiled, &tasks).unwrap();
 
     assert!(out.retries >= 1, "crash did not surface as a retry");
     assert_eq!(pool.alive_workers(), 1, "crashed worker still counted");
@@ -159,7 +191,7 @@ fn killed_worker_tasks_are_reexecuted() {
     }
 
     // The survivor keeps serving later stages.
-    let again = pool.run_tasks(&tasks[..2]).unwrap();
+    let again = pool.run_tasks(EngineKind::Tiled, &tasks[..2]).unwrap();
     assert_eq!(again.results.len(), 2);
     assert_eq!(again.retries, 0);
 }
@@ -210,8 +242,8 @@ fn speculative_duplicates_do_not_change_results() {
             pairs: vec![(f, (f, CLASS_ID as u64))],
         })
         .collect();
-    let a = plain.run_tasks(&tasks).unwrap();
-    let b = spec.run_tasks(&tasks).unwrap();
+    let a = plain.run_tasks(EngineKind::Native, &tasks).unwrap();
+    let b = spec.run_tasks(EngineKind::Native, &tasks).unwrap();
 
     assert!(b.speculative >= 1, "idle workers never speculated");
     assert_eq!(a.results, b.results, "speculation changed results");
@@ -219,7 +251,8 @@ fn speculative_duplicates_do_not_change_results() {
 
     // Pools stay healthy after the speculative losers are drained.
     assert_eq!(spec.alive_workers(), 3);
-    let again = spec.run_tasks(&tasks).unwrap();
+    // The tiled engine's speculative run is byte-identical too.
+    let again = spec.run_tasks(EngineKind::Tiled, &tasks).unwrap();
     assert_eq!(again.results, a.results);
 }
 
@@ -234,18 +267,19 @@ fn pool_resizes_between_stages() {
             pairs: vec![(f, (f, CLASS_ID as u64))],
         })
         .collect();
-    let one = pool.run_tasks(&tasks).unwrap();
+    let one = pool.run_tasks(EngineKind::Native, &tasks).unwrap();
 
     // Grow: new workers must replay the dataset install.
     pool.resize(3).unwrap();
     assert_eq!(pool.alive_workers(), 3);
-    let three = pool.run_tasks(&tasks).unwrap();
+    // The grown pool answers through the other engine, same bytes.
+    let three = pool.run_tasks(EngineKind::Tiled, &tasks).unwrap();
     assert_eq!(one.results, three.results);
 
     // Shrink back down.
     pool.resize(1).unwrap();
     assert_eq!(pool.alive_workers(), 1);
-    let back = pool.run_tasks(&tasks).unwrap();
+    let back = pool.run_tasks(EngineKind::Native, &tasks).unwrap();
     assert_eq!(one.results, back.results);
 }
 
@@ -267,7 +301,7 @@ fn wire_samples_are_collected_for_calibration() {
         pairs: (0..5u64).map(|f| (f, (f, CLASS_ID as u64))).collect(),
         rows: 0..500,
     });
-    let _ = pool.run_tasks(&tasks).unwrap();
+    let _ = pool.run_tasks(EngineKind::Native, &tasks).unwrap();
 
     assert_eq!(pool.samples().len(), tasks.len(), "one sample per dispatch");
     assert!(pool.samples().iter().all(|s| s.bytes > 0));

@@ -375,6 +375,134 @@ fn prop_incremental_append_bit_identical() {
 }
 
 #[test]
+fn prop_engine_axis_bit_identical_tables_su_and_merits() {
+    // The engine axis of the exactness claim: every `SuEngine` builds
+    // identical contingency tables, and the tiled engine's SU (and the
+    // merits of a whole selection run) is bit-identical to native.
+    // Swept across tall/wide/degenerate shapes, ragged batch sizes
+    // around the tile width P, random row subranges, and arities whose
+    // table straddles the bin budget B — both the default engine
+    // (40 × 40 = 1600 > 1024) and a tiny-tile engine where 9 × 9
+    // already overflows B = 64, so oversize pairs take the scalar
+    // fallback inside otherwise-tiled batches. PJRT, when built with
+    // artifacts present, is held to exact tables and 1e-5 SU (its SU
+    // finish runs in f32).
+    use dicfs::runtime::{ColumnPair, NativeEngine, SuEngine, TiledEngine};
+
+    let mut rng = XorShift64Star::new(0x7E57_71ED);
+    let native = NativeEngine;
+    #[allow(unused_mut)]
+    let mut engines: Vec<(&str, Arc<dyn SuEngine>, bool)> = vec![
+        ("tiled", Arc::new(TiledEngine::new()) as Arc<dyn SuEngine>, true),
+        ("tiled-3x17x64", Arc::new(TiledEngine::with_tiles(3, 17, 64)), true),
+    ];
+    #[cfg(feature = "pjrt")]
+    {
+        let dir = dicfs::runtime::artifacts::Registry::default_dir();
+        if dir.join("manifest.tsv").exists() {
+            engines.push((
+                "pjrt",
+                Arc::new(dicfs::runtime::pjrt::PjrtEngine::new(&dir).unwrap()),
+                false,
+            ));
+        }
+    }
+
+    // (rows, features): tall, wide, tiny/degenerate.
+    for &(rows, features) in &[(400usize, 6usize), (24, 15), (8, 3)] {
+        let mut cols = Vec::with_capacity(features);
+        let mut arities: Vec<u16> = Vec::with_capacity(features);
+        for f in 0..features {
+            let arity: u16 = match f % 4 {
+                0 => 2 + rng.next_below(6) as u16,
+                1 => 1,  // degenerate single-bin column
+                2 => 40, // 40 × 40 tables straddle the default B
+                _ => 9,  // 9 × 9 straddles the tiny-tile B
+            };
+            cols.push(random_column(&mut rng, rows, arity));
+            arities.push(arity);
+        }
+
+        // Kernel level: ragged batches over random column pairs and a
+        // random row subrange each.
+        for &batch in &[1usize, 2, 7, 8, 9, 13] {
+            let idx: Vec<(usize, usize)> = (0..batch)
+                .map(|_| {
+                    (
+                        rng.next_below(features as u64) as usize,
+                        rng.next_below(features as u64) as usize,
+                    )
+                })
+                .collect();
+            let pairs: Vec<ColumnPair<'_>> = idx
+                .iter()
+                .map(|&(a, b)| ColumnPair {
+                    x: &cols[a],
+                    bins_x: arities[a],
+                    y: &cols[b],
+                    bins_y: arities[b],
+                })
+                .collect();
+            let lo = rng.next_below(rows as u64) as usize;
+            let hi = lo + rng.next_below((rows - lo + 1) as u64) as usize;
+            let base_tables = native.ctables(&pairs, lo..hi);
+            let refs: Vec<&ContingencyTable> = base_tables.iter().collect();
+            let base_su = native.su_from_tables(&refs);
+            let base_fused = native.su_from_column_pairs(&pairs);
+            for (name, engine, exact) in &engines {
+                assert_eq!(
+                    engine.ctables(&pairs, lo..hi),
+                    base_tables,
+                    "{name}: tables diverged on {rows}x{features} batch {batch} rows {lo}..{hi}"
+                );
+                let su = engine.su_from_tables(&refs);
+                let fused = engine.su_from_column_pairs(&pairs);
+                for i in 0..batch {
+                    if *exact {
+                        assert_eq!(su[i].to_bits(), base_su[i].to_bits(), "{name}: SU bits");
+                        assert_eq!(fused[i].to_bits(), base_fused[i].to_bits(), "{name}: fused");
+                    } else {
+                        assert!((su[i] - base_su[i]).abs() < 1e-5, "{name}: SU drifted");
+                        assert!((fused[i] - base_fused[i]).abs() < 1e-5, "{name}: fused");
+                    }
+                }
+            }
+        }
+
+        // Merit level: a whole selection run through each bit-exact
+        // engine matches the native run bit-for-bit.
+        let class: Vec<u8> = (0..rows).map(|_| rng.next_below(3) as u8).collect();
+        let dd = Arc::new(
+            DiscreteDataset::new(
+                format!("engines-{rows}x{features}"),
+                cols.clone(),
+                arities.clone(),
+                class,
+                3,
+            )
+            .unwrap(),
+        );
+        let base = DiCfs::native(DiCfsConfig::for_scheme(Partitioning::Auto, 3)).select(&dd);
+        for (name, engine, exact) in &engines {
+            if !*exact {
+                continue;
+            }
+            let run = DiCfs::new(
+                DiCfsConfig::for_scheme(Partitioning::Auto, 3),
+                Arc::clone(engine),
+            )
+            .select(&dd);
+            assert_eq!(run.result.selected, base.result.selected, "{name}: subset");
+            assert_eq!(
+                run.result.merit.to_bits(),
+                base.result.merit.to_bits(),
+                "{name}: merit not bit-identical on {rows}x{features}"
+            );
+        }
+    }
+}
+
+#[test]
 fn prop_oversize_preserves_column_content() {
     let mut rng = XorShift64Star::new(137);
     for _ in 0..30 {
