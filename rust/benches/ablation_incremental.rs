@@ -57,6 +57,7 @@ fn service() -> DicfsService {
     DicfsService::new(ServiceConfig {
         cluster: ClusterConfig::with_nodes(4),
         max_inflight_jobs: 2,
+        ..ServiceConfig::default()
     })
 }
 

@@ -34,6 +34,10 @@ pub enum Error {
     Runtime(String),
     /// Filesystem / parsing failures.
     Io(String),
+    /// Admission rejected: granting the request would exceed the service's
+    /// configured memory ceiling. Callers can retire a dataset (or raise the
+    /// ceiling) and retry; nothing panics on this path.
+    Overloaded(String),
 }
 
 impl fmt::Display for Error {
@@ -43,6 +47,7 @@ impl fmt::Display for Error {
             Error::InvalidConfig(m) => write!(f, "invalid config: {m}"),
             Error::Runtime(m) => write!(f, "runtime error: {m}"),
             Error::Io(m) => write!(f, "io error: {m}"),
+            Error::Overloaded(m) => write!(f, "overloaded: {m}"),
         }
     }
 }

@@ -34,12 +34,35 @@
 //! ranges. Queries pin a row count ([`VersionedSuCache::handle`]), so a
 //! search that started before an append keeps reading values for exactly
 //! the rows it was launched against.
+//!
+//! Both shared caches carry a **byte-accounting layer** and an optional
+//! resident-byte budget (`with_budget`): entries are priced at their
+//! table payload (`arity_a × arity_b × 8` bytes of u64 cells) plus a
+//! fixed per-entry overhead, and publishes that push past the budget
+//! evict — cost-aware against the planner's calibrated recompute rates
+//! when available, LRU before calibration. Eviction is invisible to
+//! correctness: SU is a pure function of the dataset, so a dropped pair
+//! is recomputed bit-identically on its next request (DESIGN.md §15).
 
 use std::collections::{HashMap, HashSet};
-use std::sync::{Arc, RwLock};
+use std::sync::atomic::{AtomicU64, Ordering as AtomicOrdering};
+use std::sync::{Arc, Mutex, RwLock};
 
 use crate::core::{pair_key, FeatureId};
 use crate::correlation::ContingencyTable;
+
+/// Fixed bookkeeping bytes charged per [`VersionedEntry`] by the
+/// byte-accounting layer, on top of the contingency-table payload: the
+/// canonical pair key (16), `rows` (8), `su` (8), the
+/// `Option<ContingencyTable>` header — discriminant, bin counts and the
+/// table's `Vec` pointer/length/capacity (32) — plus a flat estimate of
+/// hash-map slot overhead (24).
+pub const ENTRY_OVERHEAD_BYTES: usize = 88;
+
+/// Bytes charged per scalar [`SharedSuCache`] entry: the canonical pair
+/// key (16), the SU value (8), the LRU clock (8) and hash-map slot
+/// overhead (16).
+pub const SCALAR_ENTRY_BYTES: usize = 48;
 
 /// Cache statistics for the on-demand ablation and per-query reporting.
 ///
@@ -210,15 +233,64 @@ impl SuCache for CorrelationCache {
 /// same pair twice is harmless by construction: SU is a pure function of
 /// the dataset and every engine in this repo computes it bit-identically
 /// (DESIGN.md §5), so concurrent writers can only agree.
+///
+/// The cache can be bounded ([`SharedSuCache::with_budget`]): resident
+/// bytes are accounted at [`SCALAR_ENTRY_BYTES`] per pair, and inserts
+/// that push past the budget drop least-recently-used pairs. Scalar
+/// entries are uniform in both size and recompute cost, so LRU *is* the
+/// cost-aware policy here (contrast [`VersionedSuCache`], whose entries
+/// differ in table size and recompute price). Eviction never changes a
+/// query's answers — a dropped pair is recomputed on next request.
 #[derive(Debug, Clone, Default)]
 pub struct SharedSuCache {
-    map: Arc<RwLock<HashMap<(FeatureId, FeatureId), f64>>>,
+    inner: Arc<SharedInner>,
+}
+
+#[derive(Debug, Default)]
+struct SharedInner {
+    state: RwLock<ScalarState>,
+    budget: Option<usize>,
+    clock: AtomicU64,
+}
+
+#[derive(Debug, Default)]
+struct ScalarState {
+    map: HashMap<(FeatureId, FeatureId), ScalarSlot>,
+    resident_bytes: usize,
+    peak_bytes: usize,
+    evicted_pairs: usize,
+}
+
+/// One scalar value plus its LRU clock. The clock is atomic so read-path
+/// hits can refresh recency under the shared read guard.
+#[derive(Debug)]
+struct ScalarSlot {
+    value: f64,
+    last_use: AtomicU64,
 }
 
 impl SharedSuCache {
-    /// Empty shared cache.
+    /// Empty, unbounded shared cache.
     pub fn new() -> Self {
         Self::default()
+    }
+
+    /// Shared cache bounded to `budget` resident bytes (`None` =
+    /// unbounded, the default). See the type-level docs for the
+    /// accounting and eviction policy.
+    pub fn with_budget(budget: Option<usize>) -> Self {
+        Self {
+            inner: Arc::new(SharedInner {
+                state: RwLock::new(ScalarState::default()),
+                budget,
+                clock: AtomicU64::new(0),
+            }),
+        }
+    }
+
+    /// The configured resident-byte budget (`None` = unbounded).
+    pub fn budget(&self) -> Option<usize> {
+        self.inner.budget
     }
 
     /// A fresh per-query handle over this shared map (statistics start at
@@ -230,18 +302,32 @@ impl SharedSuCache {
         }
     }
 
-    /// Look up a single pair (symmetric).
+    fn tick(&self) -> u64 {
+        self.inner.clock.fetch_add(1, AtomicOrdering::Relaxed)
+    }
+
+    /// Look up a single pair (symmetric), refreshing its recency.
     pub fn get(&self, a: FeatureId, b: FeatureId) -> Option<f64> {
-        self.map.read().unwrap().get(&pair_key(a, b)).copied()
+        let st = self.inner.state.read().unwrap();
+        st.map.get(&pair_key(a, b)).map(|s| {
+            s.last_use.store(self.tick(), AtomicOrdering::Relaxed);
+            s.value
+        })
     }
 
     /// Look up a batch under a single read guard (one lock acquisition
     /// however long the batch). Returns `None` if any pair is missing.
     pub fn get_batch(&self, pairs: &[(FeatureId, FeatureId)]) -> Option<Vec<f64>> {
-        let map = self.map.read().unwrap();
+        let st = self.inner.state.read().unwrap();
+        let tick = self.tick();
         pairs
             .iter()
-            .map(|&(a, b)| map.get(&pair_key(a, b)).copied())
+            .map(|&(a, b)| {
+                st.map.get(&pair_key(a, b)).map(|s| {
+                    s.last_use.store(tick, AtomicOrdering::Relaxed);
+                    s.value
+                })
+            })
             .collect()
     }
 
@@ -251,45 +337,106 @@ impl SharedSuCache {
     /// Skips the write lock entirely when every pair is already present —
     /// the common case for query handles whose misses were published by a
     /// coalesced scheduler job moments earlier — so publishing never
-    /// blocks other queries' read-guard hot path without need.
+    /// blocks other queries' read-guard hot path without need. Under a
+    /// budget, eviction runs before the peak counter updates, so
+    /// [`SharedSuCache::peak_resident_bytes`] never exceeds the budget.
     pub fn insert_batch(&self, pairs: &[(FeatureId, FeatureId)], values: &[f64]) {
         assert_eq!(pairs.len(), values.len(), "pair/value length mismatch");
         {
-            let map = self.map.read().unwrap();
-            if pairs
-                .iter()
-                .all(|&(a, b)| map.contains_key(&pair_key(a, b)))
-            {
+            let st = self.inner.state.read().unwrap();
+            let tick = self.tick();
+            let all_present = pairs.iter().all(|&(a, b)| match st.map.get(&pair_key(a, b)) {
+                Some(s) => {
+                    s.last_use.store(tick, AtomicOrdering::Relaxed);
+                    true
+                }
+                None => false,
+            });
+            if all_present {
                 return;
             }
         }
-        let mut map = self.map.write().unwrap();
+        let mut guard = self.inner.state.write().unwrap();
+        let st = &mut *guard;
         for (&(a, b), &v) in pairs.iter().zip(values) {
-            map.insert(pair_key(a, b), v);
+            let tick = self.inner.clock.fetch_add(1, AtomicOrdering::Relaxed);
+            match st.map.entry(pair_key(a, b)) {
+                std::collections::hash_map::Entry::Occupied(mut o) => {
+                    let s = o.get_mut();
+                    s.value = v;
+                    s.last_use.store(tick, AtomicOrdering::Relaxed);
+                }
+                std::collections::hash_map::Entry::Vacant(vac) => {
+                    vac.insert(ScalarSlot {
+                        value: v,
+                        last_use: AtomicU64::new(tick),
+                    });
+                    st.resident_bytes = st.resident_bytes.saturating_add(SCALAR_ENTRY_BYTES);
+                }
+            }
+        }
+        self.enforce_budget(st);
+        st.peak_bytes = st.peak_bytes.max(st.resident_bytes);
+    }
+
+    /// Drop least-recently-used pairs until the resident total fits the
+    /// budget (ties broken by key for determinism).
+    fn enforce_budget(&self, st: &mut ScalarState) {
+        let Some(budget) = self.inner.budget else {
+            return;
+        };
+        while st.resident_bytes > budget {
+            let victim = st
+                .map
+                .iter()
+                .min_by_key(|(k, s)| (s.last_use.load(AtomicOrdering::Relaxed), **k))
+                .map(|(&k, _)| k);
+            let Some(victim) = victim else {
+                break;
+            };
+            st.map.remove(&victim);
+            st.resident_bytes = st.resident_bytes.saturating_sub(SCALAR_ENTRY_BYTES);
+            st.evicted_pairs += 1;
         }
     }
 
     /// Of the given pairs, return those not yet cached (canonical keys,
     /// input order) — one read-guard acquisition for the whole scan.
     pub fn missing_of(&self, pairs: &[(FeatureId, FeatureId)]) -> Vec<(FeatureId, FeatureId)> {
-        let map = self.map.read().unwrap();
+        let st = self.inner.state.read().unwrap();
         pairs
             .iter()
             .map(|&(a, b)| pair_key(a, b))
-            .filter(|k| !map.contains_key(k))
+            .filter(|k| !st.map.contains_key(k))
             .collect()
     }
 
-    /// Number of distinct pairs ever computed into this cache — the
-    /// service-level "distinct SU pairs" metric (per-query `computed`
-    /// lives on the handles).
+    /// Number of distinct pairs currently resident — the service-level
+    /// "distinct SU pairs" metric (per-query `computed` lives on the
+    /// handles). Under a budget this can shrink as pairs are evicted.
     pub fn len(&self) -> usize {
-        self.map.read().unwrap().len()
+        self.inner.state.read().unwrap().map.len()
     }
 
-    /// True when no pair has been computed yet.
+    /// True when no pair is resident.
     pub fn is_empty(&self) -> bool {
-        self.map.read().unwrap().is_empty()
+        self.inner.state.read().unwrap().map.is_empty()
+    }
+
+    /// Bytes currently resident under the accounting model.
+    pub fn resident_bytes(&self) -> usize {
+        self.inner.state.read().unwrap().resident_bytes
+    }
+
+    /// High-water mark of [`SharedSuCache::resident_bytes`], observed
+    /// after each insert's eviction pass — never exceeds the budget.
+    pub fn peak_resident_bytes(&self) -> usize {
+        self.inner.state.read().unwrap().peak_bytes
+    }
+
+    /// Total pairs evicted to honor the budget so far.
+    pub fn evicted_pairs(&self) -> usize {
+        self.inner.state.read().unwrap().evicted_pairs
     }
 }
 
@@ -324,11 +471,15 @@ impl SuCache for SuCacheHandle {
         let mut found: Vec<Option<f64>> = Vec::with_capacity(pairs.len());
         let mut missing: Vec<(FeatureId, FeatureId)> = Vec::new();
         {
-            let map = self.shared.map.read().unwrap();
+            let st = self.shared.inner.state.read().unwrap();
+            let tick = self.shared.tick();
             let mut seen: HashSet<(FeatureId, FeatureId)> = HashSet::new();
             for &(a, b) in pairs {
                 let k = pair_key(a, b);
-                let v = map.get(&k).copied();
+                let v = st.map.get(&k).map(|s| {
+                    s.last_use.store(tick, AtomicOrdering::Relaxed);
+                    s.value
+                });
                 if v.is_none() && seen.insert(k) {
                     missing.push(k);
                 }
@@ -393,6 +544,22 @@ pub struct VersionedEntry {
     pub su: f64,
 }
 
+impl VersionedEntry {
+    /// Bytes this entry holds resident under the accounting model:
+    /// [`ENTRY_OVERHEAD_BYTES`] plus the contingency-table payload —
+    /// `bins_x × bins_y × 8` for the u64 count cells, i.e. the pair's
+    /// `arity_a × arity_b × 8` bytes. Table-less entries cost exactly
+    /// the overhead.
+    pub fn resident_bytes(&self) -> usize {
+        let table = self.table.as_ref().map_or(0, |t| {
+            (t.bins_x as usize)
+                .saturating_mul(t.bins_y as usize)
+                .saturating_mul(8)
+        });
+        ENTRY_OVERHEAD_BYTES.saturating_add(table)
+    }
+}
+
 /// Thread-safe, version-aware SU cache: the per-dataset store of the
 /// incremental multi-query service.
 ///
@@ -400,9 +567,10 @@ pub struct VersionedEntry {
 /// the incremental state an append upgrades, and it is what buys
 /// delta-sized scans instead of full recomputation. Tables are bounded
 /// by `MAX_BINS² × 8` bytes (≤ 8 KiB) each, so a warmed cache costs
-/// `O(distinct pairs × table size)`; a deployment that freezes a
-/// dataset and wants the memory back can simply re-register it (the
-/// scalar-only [`SharedSuCache`] remains for fully frozen workloads).
+/// `O(distinct pairs × table size)`; deployments that need a hard bound
+/// set a resident-byte budget ([`VersionedSuCache::with_budget`]) and
+/// trade recomputation for memory (the scalar-only [`SharedSuCache`]
+/// remains for fully frozen workloads).
 ///
 /// One instance is shared by **every version** of a registered dataset.
 /// Entries are keyed by canonical pair and tagged with the row count they
@@ -415,15 +583,97 @@ pub struct VersionedEntry {
 /// replaces an entry with one covering **more** rows, so a slow query
 /// pinned to an old version can never downgrade state that a newer query
 /// already upgraded.
+///
+/// The cache can be bounded ([`VersionedSuCache::with_budget`]):
+/// resident bytes follow [`VersionedEntry::resident_bytes`], and a
+/// publish that pushes past the budget evicts entries until the total
+/// fits. The victim choice is cost-aware once a recompute price is
+/// known ([`VersionedSuCache::set_recompute_rate`], fed from the
+/// planner's calibrated secs-per-cell rates): the entry with the lowest
+/// recompute cost per byte freed (`rows × rate / bytes`) goes first, so
+/// big tables that are cheap to rebuild are sacrificed before small
+/// expensive ones. Before calibration the fallback is plain
+/// least-recently-used. Eviction never changes any query's answers:
+/// the resolve path replies from the values it just computed and query
+/// handles memoize locally, so an evicted pair is at worst recomputed
+/// (SU is a pure function of the dataset) — never silently wrong.
 #[derive(Debug, Clone, Default)]
 pub struct VersionedSuCache {
-    map: Arc<RwLock<HashMap<(FeatureId, FeatureId), VersionedEntry>>>,
+    inner: Arc<VersionedInner>,
+}
+
+#[derive(Debug, Default)]
+struct VersionedInner {
+    state: RwLock<VersionedState>,
+    budget: Option<usize>,
+    clock: AtomicU64,
+    /// Calibrated recompute price (secs per contingency cell) feeding
+    /// the cost-aware eviction policy; `None` until first calibration,
+    /// which selects the LRU fallback.
+    rate: Mutex<Option<f64>>,
+}
+
+#[derive(Debug, Default)]
+struct VersionedState {
+    map: HashMap<(FeatureId, FeatureId), StoredEntry>,
+    resident_bytes: usize,
+    peak_bytes: usize,
+    evicted_pairs: usize,
+    evicted_bytes: usize,
+    fresh_publishes: usize,
+}
+
+/// A resident entry plus its accounting: the bytes it was charged at
+/// publish time and an LRU clock (atomic so read-path hits can refresh
+/// recency under the shared read guard).
+#[derive(Debug)]
+struct StoredEntry {
+    entry: VersionedEntry,
+    bytes: usize,
+    last_use: AtomicU64,
 }
 
 impl VersionedSuCache {
-    /// Empty versioned cache.
+    /// Empty, unbounded versioned cache.
     pub fn new() -> Self {
         Self::default()
+    }
+
+    /// Versioned cache bounded to `budget` resident bytes (`None` =
+    /// unbounded, the default). See the type-level docs for the
+    /// accounting and eviction policy.
+    pub fn with_budget(budget: Option<usize>) -> Self {
+        Self {
+            inner: Arc::new(VersionedInner {
+                state: RwLock::new(VersionedState::default()),
+                budget,
+                clock: AtomicU64::new(0),
+                rate: Mutex::new(None),
+            }),
+        }
+    }
+
+    /// The configured resident-byte budget (`None` = unbounded).
+    pub fn budget(&self) -> Option<usize> {
+        self.inner.budget
+    }
+
+    /// Install the calibrated recompute price (planner secs per
+    /// contingency cell); ignored unless finite and positive. From then
+    /// on eviction is cost-aware instead of LRU.
+    pub fn set_recompute_rate(&self, secs_per_cell: f64) {
+        if secs_per_cell.is_finite() && secs_per_cell > 0.0 {
+            *self.inner.rate.lock().unwrap() = Some(secs_per_cell);
+        }
+    }
+
+    /// The currently installed recompute price, if any.
+    pub fn recompute_rate(&self) -> Option<f64> {
+        *self.inner.rate.lock().unwrap()
+    }
+
+    fn tick(&self) -> u64 {
+        self.inner.clock.fetch_add(1, AtomicOrdering::Relaxed)
     }
 
     /// A per-query funnel pinned at `rows` dataset rows: only entries
@@ -439,19 +689,29 @@ impl VersionedSuCache {
     }
 
     /// The cached entry of a single pair (symmetric), whatever row count
-    /// it currently covers.
+    /// it currently covers. Refreshes the pair's recency.
     pub fn get(&self, a: FeatureId, b: FeatureId) -> Option<VersionedEntry> {
-        self.map.read().unwrap().get(&pair_key(a, b)).cloned()
+        let st = self.inner.state.read().unwrap();
+        st.map.get(&pair_key(a, b)).map(|s| {
+            s.last_use.store(self.tick(), AtomicOrdering::Relaxed);
+            s.entry.clone()
+        })
     }
 
     /// One read-guard pass: the cached entry (if any) of each pair, in
     /// input order. The resolve path of the service classifies pairs into
     /// hit / upgradable / fresh from this snapshot.
     pub fn lookup(&self, pairs: &[(FeatureId, FeatureId)]) -> Vec<Option<VersionedEntry>> {
-        let map = self.map.read().unwrap();
+        let st = self.inner.state.read().unwrap();
+        let tick = self.tick();
         pairs
             .iter()
-            .map(|&(a, b)| map.get(&pair_key(a, b)).cloned())
+            .map(|&(a, b)| {
+                st.map.get(&pair_key(a, b)).map(|s| {
+                    s.last_use.store(tick, AtomicOrdering::Relaxed);
+                    s.entry.clone()
+                })
+            })
             .collect()
     }
 
@@ -459,46 +719,172 @@ impl VersionedSuCache {
     /// for each pair the entry covering the **most** rows (monotone — a
     /// concurrent old-version query can never clobber newer state; equal
     /// row counts are identical values by purity, so skipping is safe).
+    ///
+    /// Byte accounting: an upgrade releases the replaced entry's bytes
+    /// and charges the new entry's; a vacant insert charges the new
+    /// entry's and counts as a *fresh publish* (the recompute-accounting
+    /// metric the eviction proptests balance against evictions). Under a
+    /// budget, eviction runs before the peak counter updates, so
+    /// [`VersionedSuCache::peak_resident_bytes`] never exceeds the
+    /// budget — the bound is an invariant, not an average.
     pub fn publish(&self, updates: Vec<((FeatureId, FeatureId), VersionedEntry)>) {
         if updates.is_empty() {
             return;
         }
-        let mut map = self.map.write().unwrap();
+        let mut guard = self.inner.state.write().unwrap();
+        let st = &mut *guard;
         for ((a, b), e) in updates {
-            match map.entry(pair_key(a, b)) {
+            let bytes = e.resident_bytes();
+            let tick = self.inner.clock.fetch_add(1, AtomicOrdering::Relaxed);
+            match st.map.entry(pair_key(a, b)) {
                 std::collections::hash_map::Entry::Occupied(mut o) => {
-                    if o.get().rows < e.rows {
-                        o.insert(e);
+                    if o.get().entry.rows < e.rows {
+                        let released = o.get().bytes;
+                        let s = o.get_mut();
+                        s.entry = e;
+                        s.bytes = bytes;
+                        s.last_use.store(tick, AtomicOrdering::Relaxed);
+                        st.resident_bytes = st
+                            .resident_bytes
+                            .saturating_sub(released)
+                            .saturating_add(bytes);
                     }
                 }
                 std::collections::hash_map::Entry::Vacant(v) => {
-                    v.insert(e);
+                    v.insert(StoredEntry {
+                        entry: e,
+                        bytes,
+                        last_use: AtomicU64::new(tick),
+                    });
+                    st.fresh_publishes += 1;
+                    st.resident_bytes = st.resident_bytes.saturating_add(bytes);
                 }
             }
         }
+        self.enforce_budget(st);
+        st.peak_bytes = st.peak_bytes.max(st.resident_bytes);
+    }
+
+    /// Evict entries until the resident total fits the budget. Victim
+    /// order: lowest recompute cost per byte freed when a rate is
+    /// calibrated, else least-recently-used; ties broken by recency then
+    /// key for determinism. Terminates once the map is empty even if the
+    /// (saturating) byte counter is inconsistent.
+    fn enforce_budget(&self, st: &mut VersionedState) {
+        let Some(budget) = self.inner.budget else {
+            return;
+        };
+        if st.resident_bytes <= budget {
+            return;
+        }
+        let rate = *self.inner.rate.lock().unwrap();
+        let score = |s: &StoredEntry| match rate {
+            // Recompute seconds (rows × secs-per-cell, per table cell a
+            // rebuild scans) divided by the bytes freed: evict the
+            // biggest-footprint, cheapest-to-rebuild entries first.
+            Some(r) => (s.entry.rows as f64 * r) / s.bytes.max(1) as f64,
+            // Before calibration: least-recently-used.
+            None => s.last_use.load(AtomicOrdering::Relaxed) as f64,
+        };
+        while st.resident_bytes > budget {
+            let victim = st
+                .map
+                .iter()
+                .min_by(|&(ka, sa), &(kb, sb)| {
+                    score(sa)
+                        .partial_cmp(&score(sb))
+                        .unwrap_or(std::cmp::Ordering::Equal)
+                        .then_with(|| {
+                            sa.last_use
+                                .load(AtomicOrdering::Relaxed)
+                                .cmp(&sb.last_use.load(AtomicOrdering::Relaxed))
+                        })
+                        .then_with(|| ka.cmp(kb))
+                })
+                .map(|(&k, _)| k);
+            let Some(victim) = victim else {
+                break;
+            };
+            let s = st.map.remove(&victim).expect("victim key is present");
+            st.resident_bytes = st.resident_bytes.saturating_sub(s.bytes);
+            st.evicted_pairs += 1;
+            st.evicted_bytes = st.evicted_bytes.saturating_add(s.bytes);
+        }
+    }
+
+    /// Drop every entry — the dataset-retire path — accounting the
+    /// removals as evictions. Returns `(pairs, bytes)` released.
+    pub fn clear(&self) -> (usize, usize) {
+        let mut guard = self.inner.state.write().unwrap();
+        let st = &mut *guard;
+        let pairs = st.map.len();
+        let bytes = st.resident_bytes;
+        st.map.clear();
+        st.resident_bytes = 0;
+        st.evicted_pairs += pairs;
+        st.evicted_bytes = st.evicted_bytes.saturating_add(bytes);
+        (pairs, bytes)
     }
 
     /// Every cached pair with the row count and SU value it currently
     /// holds — the exactness proptest audits this against direct SU
     /// computations over the matching row prefix.
     pub fn snapshot(&self) -> Vec<((FeatureId, FeatureId), usize, f64)> {
-        self.map
+        self.inner
+            .state
             .read()
             .unwrap()
+            .map
             .iter()
-            .map(|(&k, e)| (k, e.rows, e.su))
+            .map(|(&k, s)| (k, s.entry.rows, s.entry.su))
             .collect()
     }
 
-    /// Number of distinct pairs ever computed into this cache (the
-    /// service-level "distinct SU pairs" metric).
+    /// Number of distinct pairs currently resident (the service-level
+    /// "distinct SU pairs" metric). Under a budget this can shrink as
+    /// pairs are evicted.
     pub fn len(&self) -> usize {
-        self.map.read().unwrap().len()
+        self.inner.state.read().unwrap().map.len()
     }
 
-    /// True when no pair has been computed yet.
+    /// True when no pair is resident.
     pub fn is_empty(&self) -> bool {
-        self.map.read().unwrap().is_empty()
+        self.inner.state.read().unwrap().map.is_empty()
+    }
+
+    /// Bytes currently resident under the accounting model.
+    pub fn resident_bytes(&self) -> usize {
+        self.inner.state.read().unwrap().resident_bytes
+    }
+
+    /// High-water mark of [`VersionedSuCache::resident_bytes`], observed
+    /// after each publish's eviction pass — never exceeds the budget.
+    pub fn peak_resident_bytes(&self) -> usize {
+        self.inner.state.read().unwrap().peak_bytes
+    }
+
+    /// Total pairs evicted (budget enforcement plus [`Self::clear`]).
+    pub fn evicted_pairs(&self) -> usize {
+        self.inner.state.read().unwrap().evicted_pairs
+    }
+
+    /// Total bytes released by eviction and [`Self::clear`].
+    pub fn evicted_bytes(&self) -> usize {
+        self.inner.state.read().unwrap().evicted_bytes
+    }
+
+    /// Vacant inserts since creation. Exceeds the number of *distinct*
+    /// pairs exactly when evicted pairs were recomputed and republished —
+    /// the balance the eviction proptests assert.
+    pub fn fresh_publishes(&self) -> usize {
+        self.inner.state.read().unwrap().fresh_publishes
+    }
+
+    /// Test hook: force the resident-byte counter to an arbitrary value
+    /// to exercise saturating arithmetic.
+    #[cfg(test)]
+    fn force_resident_bytes(&self, bytes: usize) {
+        self.inner.state.write().unwrap().resident_bytes = bytes;
     }
 }
 
@@ -553,17 +939,20 @@ impl SuCache for VersionedSuHandle {
         let mut found: Vec<Option<f64>> = Vec::with_capacity(pairs.len());
         let mut missing: Vec<(FeatureId, FeatureId)> = Vec::new();
         {
-            let map = self.shared.map.read().unwrap();
+            let st = self.shared.inner.state.read().unwrap();
+            let tick = self.shared.inner.clock.fetch_add(1, AtomicOrdering::Relaxed);
             let mut seen: HashSet<(FeatureId, FeatureId)> = HashSet::new();
             for &(a, b) in pairs {
                 let k = pair_key(a, b);
-                let v = match map.get(&k) {
-                    Some(e) if e.rows == self.rows => {
+                let v = match st.map.get(&k) {
+                    Some(s) if s.entry.rows == self.rows => {
+                        s.last_use.store(tick, AtomicOrdering::Relaxed);
                         // Memoize shared hits too: if an append
-                        // supersedes this pin mid-search, every value
-                        // this handle ever observed stays servable.
-                        self.local.entry(k).or_insert(e.su);
-                        Some(e.su)
+                        // supersedes this pin mid-search (or eviction
+                        // drops the entry), every value this handle
+                        // ever observed stays servable.
+                        self.local.entry(k).or_insert(s.entry.su);
+                        Some(s.entry.su)
                     }
                     _ => self.local.get(&k).copied(),
                 };
@@ -886,5 +1275,183 @@ mod tests {
             }
         });
         assert_eq!(shared.len(), pairs.len());
+    }
+
+    #[test]
+    fn resident_bytes_exact_for_known_arities() {
+        // A 3×4 table: 12 u64 cells = 96 bytes of payload.
+        let t = ContingencyTable::from_columns(&[0u8, 1, 2], 3, &[3u8, 0, 1], 4);
+        let e = VersionedEntry {
+            rows: 3,
+            table: Some(t),
+            su: 0.5,
+        };
+        assert_eq!(e.resident_bytes(), ENTRY_OVERHEAD_BYTES + 3 * 4 * 8);
+        // Table-less entries cost exactly the overhead.
+        assert_eq!(entry(3, 0.5).resident_bytes(), ENTRY_OVERHEAD_BYTES);
+    }
+
+    #[test]
+    fn accounting_consistent_across_publish_upgrade_keep_and_clear() {
+        let c = VersionedSuCache::new();
+        let small = ContingencyTable::from_columns(&[0u8, 1], 2, &[1u8, 0], 2); // 32 B payload
+        let big = ContingencyTable::from_columns(&[0u8, 1, 2, 3], 4, &[1u8, 0, 1, 0], 2); // 64 B
+        c.publish(vec![(
+            (0, 1),
+            VersionedEntry {
+                rows: 2,
+                table: Some(small.clone()),
+                su: 0.1,
+            },
+        )]);
+        assert_eq!(c.resident_bytes(), ENTRY_OVERHEAD_BYTES + 32);
+        assert_eq!(c.fresh_publishes(), 1);
+
+        // Upgrade path: the replaced entry's bytes are released, the new
+        // entry's charged — no drift, no double count.
+        c.publish(vec![(
+            (1, 0),
+            VersionedEntry {
+                rows: 4,
+                table: Some(big),
+                su: 0.2,
+            },
+        )]);
+        assert_eq!(c.resident_bytes(), ENTRY_OVERHEAD_BYTES + 64);
+        assert_eq!(c.len(), 1);
+        assert_eq!(c.fresh_publishes(), 1, "an upgrade is not a fresh publish");
+
+        // Keep path (stale publish loses monotonicity): untouched.
+        c.publish(vec![(
+            (0, 1),
+            VersionedEntry {
+                rows: 3,
+                table: Some(small),
+                su: 0.3,
+            },
+        )]);
+        assert_eq!(c.resident_bytes(), ENTRY_OVERHEAD_BYTES + 64);
+
+        // Retire path: everything released and accounted as evicted.
+        let (pairs, bytes) = c.clear();
+        assert_eq!((pairs, bytes), (1, ENTRY_OVERHEAD_BYTES + 64));
+        assert_eq!(c.resident_bytes(), 0);
+        assert_eq!(c.evicted_pairs(), 1);
+        assert_eq!(c.evicted_bytes(), ENTRY_OVERHEAD_BYTES + 64);
+        assert_eq!(c.peak_resident_bytes(), ENTRY_OVERHEAD_BYTES + 64);
+    }
+
+    #[test]
+    fn lru_eviction_before_calibration() {
+        // Budget fits exactly two table-less entries.
+        let c = VersionedSuCache::with_budget(Some(2 * ENTRY_OVERHEAD_BYTES));
+        assert_eq!(c.budget(), Some(2 * ENTRY_OVERHEAD_BYTES));
+        c.publish(vec![((0, 1), entry(10, 0.1))]);
+        c.publish(vec![((0, 2), entry(10, 0.2))]);
+        // Touch (0, 1) so (0, 2) becomes the least recently used.
+        assert!(c.get(0, 1).is_some());
+        c.publish(vec![((0, 3), entry(10, 0.3))]);
+        assert_eq!(c.len(), 2);
+        assert!(c.resident_bytes() <= 2 * ENTRY_OVERHEAD_BYTES);
+        assert!(c.peak_resident_bytes() <= 2 * ENTRY_OVERHEAD_BYTES);
+        assert!(c.get(0, 2).is_none(), "LRU victim must be evicted");
+        assert!(c.get(0, 1).is_some() && c.get(0, 3).is_some());
+        assert_eq!(c.evicted_pairs(), 1);
+        assert_eq!(c.evicted_bytes(), ENTRY_OVERHEAD_BYTES);
+    }
+
+    #[test]
+    fn calibrated_eviction_prefers_cheapest_recompute_per_byte() {
+        // `a`: many rows, no table — expensive to recompute per byte
+        // freed. `b`: few rows, big table — cheap per byte. Cost-aware
+        // eviction must pick `b` even though it is the most recently
+        // used, which is exactly where it diverges from LRU.
+        let big = ContingencyTable::from_columns(&[0u8, 1, 2, 3], 4, &[3u8, 2, 1, 0], 4);
+        let a = VersionedEntry {
+            rows: 10_000,
+            table: None,
+            su: 0.1,
+        };
+        let b = VersionedEntry {
+            rows: 100,
+            table: Some(big),
+            su: 0.2,
+        };
+        let total = a.resident_bytes() + b.resident_bytes();
+        let c = VersionedSuCache::with_budget(Some(total - 1));
+        c.set_recompute_rate(2e-9);
+        assert_eq!(c.recompute_rate(), Some(2e-9));
+        c.publish(vec![((0, 1), a)]);
+        let b_bytes = b.resident_bytes();
+        c.publish(vec![((0, 2), b)]);
+        assert!(
+            c.get(0, 2).is_none(),
+            "cheapest recompute per byte goes first, despite being most recent"
+        );
+        assert!(c.get(0, 1).is_some());
+        assert_eq!(c.evicted_pairs(), 1);
+        assert_eq!(c.evicted_bytes(), b_bytes);
+    }
+
+    #[test]
+    fn zero_budget_cache_keeps_handles_exact() {
+        let c = VersionedSuCache::with_budget(Some(0));
+        c.publish(vec![((0, 1), entry(10, 0.5))]);
+        assert_eq!(c.len(), 0, "nothing can stay resident");
+        assert_eq!(c.resident_bytes(), 0);
+        assert_eq!(c.peak_resident_bytes(), 0, "peak observes post-eviction state");
+        assert_eq!(c.evicted_pairs(), 1);
+        // Queries still work: misses are recomputed and memoized locally
+        // by the handle, so even a cache that can hold nothing never
+        // changes an answer.
+        let mut h = c.handle(10);
+        let v = h.batch(&[(0, 1)], &mut |miss| {
+            assert_eq!(miss.len(), 1);
+            vec![0.5]
+        });
+        assert_eq!(v, vec![0.5]);
+        let v2 = h.batch(&[(1, 0)], &mut |_| panic!("local memo must serve this"));
+        assert_eq!(v2, vec![0.5]);
+    }
+
+    #[test]
+    fn resident_accounting_saturates_instead_of_overflowing() {
+        let c = VersionedSuCache::new();
+        c.force_resident_bytes(usize::MAX - 8);
+        c.publish(vec![((0, 1), entry(5, 0.1))]); // would overflow a plain add
+        assert_eq!(c.resident_bytes(), usize::MAX);
+        assert_eq!(c.peak_resident_bytes(), usize::MAX);
+
+        // A bounded cache with a poisoned counter still terminates:
+        // eviction stops once the map is empty.
+        let b = VersionedSuCache::with_budget(Some(64));
+        b.publish(vec![((0, 1), entry(5, 0.1))]);
+        b.force_resident_bytes(usize::MAX);
+        b.publish(vec![((0, 2), entry(5, 0.2))]);
+        assert!(b.is_empty());
+        assert_eq!(b.evicted_pairs(), 2);
+    }
+
+    #[test]
+    fn shared_cache_budget_evicts_lru_scalars() {
+        let shared = SharedSuCache::with_budget(Some(2 * SCALAR_ENTRY_BYTES));
+        assert_eq!(shared.budget(), Some(2 * SCALAR_ENTRY_BYTES));
+        shared.insert_batch(&[(0, 1), (0, 2)], &[0.1, 0.2]);
+        assert!(shared.get(0, 1).is_some()); // touch → (0, 2) is now LRU
+        shared.insert_batch(&[(0, 3)], &[0.3]);
+        assert_eq!(shared.len(), 2);
+        assert!(shared.get(0, 2).is_none());
+        assert_eq!(shared.evicted_pairs(), 1);
+        assert!(shared.resident_bytes() <= 2 * SCALAR_ENTRY_BYTES);
+        assert_eq!(shared.peak_resident_bytes(), 2 * SCALAR_ENTRY_BYTES);
+
+        // An evicted pair is recomputed, never a silent miss.
+        let mut h = shared.handle();
+        let v = h.batch(&[(0, 2)], &mut |miss| {
+            assert_eq!(miss, &[(0, 2)]);
+            vec![0.2]
+        });
+        assert_eq!(v, vec![0.2]);
+        assert_eq!(h.stats().computed, 1);
     }
 }

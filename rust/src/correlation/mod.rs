@@ -14,7 +14,7 @@ pub mod su;
 
 pub use cache::{
     CacheStats, CorrelationCache, SharedSuCache, SuCache, SuCacheHandle, VersionedEntry,
-    VersionedSuCache, VersionedSuHandle,
+    VersionedSuCache, VersionedSuHandle, ENTRY_OVERHEAD_BYTES, SCALAR_ENTRY_BYTES,
 };
 pub use ctable::ContingencyTable;
 pub use su::{su_from_table, symmetrical_uncertainty};

@@ -128,6 +128,29 @@ pub struct PlannerCalibration {
     pub vp_tiled_observations: usize,
 }
 
+impl PlannerCalibration {
+    /// The cheapest *measured* secs-per-cell rate across the
+    /// (strategy, engine) slots, ignoring slots still at the prior —
+    /// the recompute price the bounded SU caches use for cost-aware
+    /// eviction (DESIGN.md §15). `None` until at least one slot has an
+    /// observation, which selects the caches' LRU fallback.
+    pub fn min_calibrated_rate(&self) -> Option<f64> {
+        let slots = [
+            (self.hp_rate, self.hp_observations),
+            (self.vp_rate, self.vp_observations),
+            (self.hp_tiled_rate, self.hp_tiled_observations),
+            (self.vp_tiled_rate, self.vp_tiled_observations),
+        ];
+        slots
+            .iter()
+            .filter(|&&(_, obs)| obs > 0)
+            .map(|&(rate, _)| rate)
+            .fold(None, |acc: Option<f64>, r| {
+                Some(acc.map_or(r, |a| a.min(r)))
+            })
+    }
+}
+
 struct PlannerState {
     /// Per-(strategy, engine-slot) calibration: `hp[e]` / `vp[e]` is the
     /// rate of engine slot `e` under that strategy.
@@ -618,6 +641,29 @@ mod tests {
         let ctx = SparkletContext::new(ClusterConfig::with_nodes(3));
         let corr = AutoCorrelator::new(&ctx, Arc::clone(&dd), Arc::new(NativeEngine), None);
         (ctx, corr, dd)
+    }
+
+    #[test]
+    fn min_calibrated_rate_ignores_unobserved_slots() {
+        let mut cal = PlannerCalibration {
+            hp_rate: 5e-9,
+            hp_observations: 0,
+            vp_rate: 4e-9,
+            vp_observations: 0,
+            hp_tiled_rate: 3e-9,
+            hp_tiled_observations: 0,
+            vp_tiled_rate: 2e-9,
+            vp_tiled_observations: 0,
+        };
+        assert_eq!(cal.min_calibrated_rate(), None, "all slots at the prior");
+        cal.hp_observations = 3;
+        assert_eq!(cal.min_calibrated_rate(), Some(5e-9));
+        cal.vp_tiled_observations = 1;
+        assert_eq!(
+            cal.min_calibrated_rate(),
+            Some(2e-9),
+            "cheapest measured slot wins"
+        );
     }
 
     #[test]

@@ -41,6 +41,7 @@ USAGE:
   dicfs compare  [--family NAME] [--rows N] [--features M] [--nodes N]
   dicfs queries  --script FILE [--nodes N] [--concurrency C]
                  [--max-inflight J] [--engine native|tiled|auto] [--verify]
+                 [--cache-budget BYTES|P%] [--tenant-weight W]
   dicfs bench    --target fig3|fig4|fig5|table2|ondemand|partitions|planner
                  [--scale X]
 
@@ -64,9 +65,13 @@ FAMILIES: ecbdl14, higgs, kddcup99, epsilon (Table 1 of the paper),
           wide (features >> rows, for the planner harness)
 
 A `queries` script declares tenant datasets and the traffic over them —
-queries, and `append` directives that ingest new instances mid-workload
+queries, `append` directives that ingest new instances mid-workload
 (cached SU state is *upgraded* from the delta rows, never recomputed;
-`warm=true` warm-restarts a search from the previous winner), e.g.:
+`warm=true` warm-restarts a search from the previous winner), and
+`retire NAME` which unregisters a tenant and frees its cache. Datasets
+take `budget=BYTES|P%` (SU-cache byte budget; percent of the worst-case
+fully-warmed cache) and `weight=W` (deficit-round-robin share);
+`--cache-budget` / `--tenant-weight` set the defaults, e.g.:
 
   dataset logs family=kddcup99 rows=4000 features=20 seed=7 scheme=hp
   query logs repeat=3
@@ -331,11 +336,24 @@ fn cmd_queries(flags: &HashMap<String, String>) {
         Ok(s) => s,
         Err(e) => panic!("script error: {e}"),
     };
+    let cache_budget = flags.get("cache-budget").map(|s| {
+        dicfs::serve::script::BudgetSpec::parse(s)
+            .unwrap_or_else(|e| panic!("--cache-budget: {e}"))
+    });
+    let tenant_weight = flags
+        .get("tenant-weight")
+        .map(|s| {
+            s.parse::<f64>()
+                .unwrap_or_else(|_| panic!("--tenant-weight: not a number: {s:?}"))
+        })
+        .unwrap_or(1.0);
     let opts = dicfs::serve::script::ReplayOptions {
         nodes: get_usize(flags, "nodes", 10),
         max_inflight_jobs: get_usize(flags, "max-inflight", 2),
         concurrency: get_usize(flags, "concurrency", 4),
         verify: flags.contains_key("verify"),
+        cache_budget,
+        tenant_weight,
     };
     println!(
         "replaying {} dataset(s), {} directive(s) (concurrency {}, max in-flight jobs {})\n",

@@ -22,11 +22,20 @@
 //!   (per-query statistics, pinned to a dataset version) over the
 //!   dataset's shared cache. Only cache *misses* become distributed
 //!   work.
-//! * Misses flow through the [`scheduler`]: a FIFO job queue with
-//!   admission control (bounded in-flight jobs) that coalesces the
-//!   misses of concurrent queries on the same dataset into one hp/vp
-//!   batch job per scheduling tick, and records a [`SuJobReport`] per
-//!   job.
+//! * Misses flow through the [`scheduler`]: a **deficit-round-robin**
+//!   dispatcher across tenants (weighted per dataset, with admission
+//!   control bounding in-flight jobs) that coalesces the misses of
+//!   concurrent queries on the same dataset into one hp/vp batch job
+//!   per dispatch, and records a [`SuJobReport`] per job — so one hot
+//!   tenant cannot starve the rest (DESIGN.md §15).
+//! * Memory is bounded end to end: per-dataset SU-cache budgets
+//!   ([`ServiceConfig::cache_budget_bytes`] or per registration via
+//!   [`DicfsService::try_register_discrete`]) evict cost-aware instead
+//!   of growing without limit, a service-wide ceiling
+//!   ([`ServiceConfig::max_service_bytes`]) rejects registrations and
+//!   appends that cannot fit (typed [`Error`](crate::core::Error::Overloaded),
+//!   no panic), and [`DicfsService::unregister`] retires a tenant,
+//!   freeing its versions and cache.
 //! * Datasets are **versioned** ([`DatasetVersion`], DESIGN.md §12):
 //!   [`DicfsService::append_discrete`] publishes a new version with the
 //!   delta rows merged in, while in-flight queries stay pinned to the
@@ -61,8 +70,8 @@ pub mod registry;
 pub mod scheduler;
 pub mod script;
 
-pub use registry::{DatasetId, DatasetVersion, RegisteredDataset};
-pub use scheduler::SuJobReport;
+pub use registry::{worst_case_cache_bytes, DatasetId, DatasetVersion, RegisteredDataset};
+pub use scheduler::{SuJobReport, TenantStats};
 
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::mpsc::channel;
@@ -132,6 +141,18 @@ pub struct ServiceConfig {
     pub cluster: ClusterConfig,
     /// Admission control: distributed SU jobs allowed in flight at once.
     pub max_inflight_jobs: usize,
+    /// Default per-dataset SU-cache budget in resident bytes (`None` =
+    /// unbounded). Applied by [`DicfsService::register_discrete`];
+    /// [`DicfsService::try_register_discrete`] can override per tenant.
+    /// Eviction never changes selections — see
+    /// [`VersionedSuCache`](crate::correlation::VersionedSuCache).
+    pub cache_budget_bytes: Option<usize>,
+    /// Service-wide memory ceiling in bytes (`None` = unbounded).
+    /// Registrations and appends whose projected demand (column
+    /// footprint + cache budget or worst-case cache, summed over live
+    /// datasets — see [`RegisteredDataset::demand_bytes`]) would exceed
+    /// it are rejected with [`Error::Overloaded`](crate::core::Error::Overloaded).
+    pub max_service_bytes: Option<usize>,
 }
 
 impl Default for ServiceConfig {
@@ -139,6 +160,47 @@ impl Default for ServiceConfig {
         Self {
             cluster: ClusterConfig::default(),
             max_inflight_jobs: 2,
+            cache_budget_bytes: None,
+            max_service_bytes: None,
+        }
+    }
+}
+
+/// Per-dataset SU-cache budget choice at registration.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub enum CacheBudget {
+    /// Use the service-wide default
+    /// ([`ServiceConfig::cache_budget_bytes`]).
+    #[default]
+    Inherit,
+    /// Unbounded, even when the service has a bounded default.
+    Unbounded,
+    /// Explicit resident-byte budget for this dataset's SU cache.
+    Bytes(usize),
+}
+
+/// Per-tenant knobs for [`DicfsService::try_register_discrete`].
+/// `Default` matches what [`DicfsService::register_discrete`] does:
+/// scheme-default partitioning, the service's default cache budget, and
+/// DRR weight 1.0.
+#[derive(Debug, Clone, Copy)]
+pub struct RegisterOptions {
+    /// Partition-count override (hp: row blocks; vp: one per feature).
+    pub partitions: Option<usize>,
+    /// SU-cache budget for this dataset.
+    pub budget: CacheBudget,
+    /// Deficit-round-robin weight: this tenant's share of scheduler
+    /// dispatch bandwidth relative to weight-1.0 tenants. Must be
+    /// finite and strictly positive.
+    pub weight: f64,
+}
+
+impl Default for RegisterOptions {
+    fn default() -> Self {
+        Self {
+            partitions: None,
+            budget: CacheBudget::Inherit,
+            weight: 1.0,
         }
     }
 }
@@ -184,10 +246,22 @@ pub struct DatasetCacheReport {
     pub dataset: DatasetId,
     /// Registration name.
     pub name: String,
-    /// Distinct SU pairs ever computed for this dataset.
+    /// Distinct SU pairs currently resident for this dataset (equals
+    /// every pair ever computed when the cache is unbounded; shrinks
+    /// under a budget as pairs are evicted).
     pub distinct_pairs: usize,
     /// Full correlation matrix size `C(m+1, 2)`.
     pub full_matrix: usize,
+    /// Resident bytes the cache currently holds (entries + tables).
+    pub resident_bytes: usize,
+    /// High-water mark of `resident_bytes` (taken after budget
+    /// enforcement, so ≤ the budget whenever one is set).
+    pub peak_resident_bytes: usize,
+    /// The dataset's cache budget (`None` = unbounded).
+    pub budget_bytes: Option<usize>,
+    /// Pairs the budget has evicted so far (each reappears as a fresh
+    /// computation if requested again — never a silent miss).
+    pub evicted_pairs: usize,
 }
 
 impl DatasetCacheReport {
@@ -285,7 +359,13 @@ impl DicfsService {
 
     /// Register an already-discretized dataset. `partitions` overrides
     /// the scheme's default partition count (hp: block-based; vp: one
-    /// per feature).
+    /// per feature). Uses the service-default cache budget and DRR
+    /// weight 1.0.
+    ///
+    /// # Panics
+    /// On a taken name or an admission rejection (service ceiling) —
+    /// use [`Self::try_register_discrete`] to handle those as typed
+    /// errors instead.
     pub fn register_discrete(
         &self,
         name: &str,
@@ -293,9 +373,68 @@ impl DicfsService {
         scheme: ServeScheme,
         partitions: Option<usize>,
     ) -> DatasetId {
-        self.registry
-            .insert(name, data, scheme, partitions, &self.ctx, &self.engines)
-            .id
+        self.try_register_discrete(
+            name,
+            data,
+            scheme,
+            RegisterOptions {
+                partitions,
+                ..RegisterOptions::default()
+            },
+        )
+        .unwrap_or_else(|e| panic!("dataset registration failed: {e}"))
+    }
+
+    /// Register an already-discretized dataset with explicit per-tenant
+    /// options (cache budget, DRR weight, partitioning). Admission is
+    /// checked *before* any layout work: a taken name or invalid weight
+    /// is [`Error::InvalidConfig`](crate::core::Error::InvalidConfig), a
+    /// registration whose projected demand (column footprint + cache
+    /// budget, or worst-case cache when unbounded) would push the
+    /// service past [`ServiceConfig::max_service_bytes`] is
+    /// [`Error::Overloaded`](crate::core::Error::Overloaded).
+    pub fn try_register_discrete(
+        &self,
+        name: &str,
+        data: Arc<DiscreteDataset>,
+        scheme: ServeScheme,
+        opts: RegisterOptions,
+    ) -> crate::core::Result<DatasetId> {
+        let budget = match opts.budget {
+            CacheBudget::Inherit => self.config.cache_budget_bytes,
+            CacheBudget::Unbounded => None,
+            CacheBudget::Bytes(b) => Some(b),
+        };
+        Ok(self
+            .registry
+            .insert(
+                name,
+                data,
+                scheme,
+                opts.partitions,
+                budget,
+                opts.weight,
+                self.config.max_service_bytes,
+                &self.ctx,
+                &self.engines,
+            )?
+            .id)
+    }
+
+    /// Retire a dataset: drop its registry slot (the id is never
+    /// reused; the name becomes free) and clear its SU cache, returning
+    /// `(pairs, resident bytes)` freed. In-flight queries pinned to the
+    /// dataset's versions finish unaffected through their own `Arc`s; a
+    /// later query against the stale id panics in [`Self::query`] like
+    /// any unknown id. Unknown or already-retired ids are
+    /// [`Error::InvalidConfig`](crate::core::Error::InvalidConfig).
+    pub fn unregister(&self, id: DatasetId) -> crate::core::Result<(usize, usize)> {
+        let reg = self.registry.remove(id).ok_or_else(|| {
+            crate::core::Error::InvalidConfig(format!(
+                "unknown or already retired dataset id {id}"
+            ))
+        })?;
+        Ok(reg.cache().clear())
     }
 
     /// Append already-discretized instances to a registered dataset,
@@ -353,6 +492,24 @@ impl DicfsService {
         let reg = self.registry.get(id).ok_or_else(|| {
             crate::core::Error::InvalidConfig(format!("unknown dataset id {id}"))
         })?;
+        // Admission against the service ceiling: an append grows the
+        // column footprint by the delta's bytes (the cache demand is
+        // arity-based and does not change). Rejected before any merge
+        // or layout work.
+        if let Some(ceiling) = self.config.max_service_bytes {
+            let projected = self
+                .registry
+                .total_demand_bytes()
+                .saturating_add(delta.footprint_bytes());
+            if projected > ceiling {
+                return Err(crate::core::Error::Overloaded(format!(
+                    "appending {} rows to {:?} projects {projected} bytes of demand, \
+                     exceeding the service ceiling of {ceiling} bytes",
+                    delta.num_rows(),
+                    reg.name,
+                )));
+            }
+        }
         reg.append(delta, &self.ctx, &self.engines)
     }
 
@@ -452,14 +609,35 @@ impl DicfsService {
         self.scheduler.job_log()
     }
 
-    /// Cache report for one dataset.
-    pub fn cache_report(&self, id: DatasetId) -> Option<DatasetCacheReport> {
-        self.registry.get(id).map(|reg| DatasetCacheReport {
+    /// Per-tenant fairness aggregates over the completed-job log
+    /// (dispatch counts, DRR pair volume, queue waits), sorted by
+    /// dataset id.
+    pub fn tenant_stats(&self) -> Vec<TenantStats> {
+        self.scheduler.tenant_stats()
+    }
+
+    /// Σ projected demand bytes over live datasets — what admission
+    /// compares against [`ServiceConfig::max_service_bytes`].
+    pub fn total_demand_bytes(&self) -> usize {
+        self.registry.total_demand_bytes()
+    }
+
+    fn cache_report_of(reg: &RegisteredDataset) -> DatasetCacheReport {
+        DatasetCacheReport {
             dataset: reg.id,
             name: reg.name.clone(),
             distinct_pairs: reg.cache().len(),
             full_matrix: reg.full_matrix(),
-        })
+            resident_bytes: reg.cache().resident_bytes(),
+            peak_resident_bytes: reg.cache().peak_resident_bytes(),
+            budget_bytes: reg.cache_budget(),
+            evicted_pairs: reg.cache().evicted_pairs(),
+        }
+    }
+
+    /// Cache report for one dataset.
+    pub fn cache_report(&self, id: DatasetId) -> Option<DatasetCacheReport> {
+        self.registry.get(id).map(|reg| Self::cache_report_of(&reg))
     }
 
     /// Cache reports for every registered dataset.
@@ -467,12 +645,7 @@ impl DicfsService {
         self.registry
             .all()
             .iter()
-            .map(|reg| DatasetCacheReport {
-                dataset: reg.id,
-                name: reg.name.clone(),
-                distinct_pairs: reg.cache().len(),
-                full_matrix: reg.full_matrix(),
-            })
+            .map(|reg| Self::cache_report_of(reg))
             .collect()
     }
 }
@@ -535,6 +708,7 @@ mod tests {
         DicfsService::new(ServiceConfig {
             cluster: ClusterConfig::with_nodes(2),
             max_inflight_jobs: 2,
+            ..ServiceConfig::default()
         })
     }
 
@@ -804,12 +978,160 @@ mod tests {
     }
 
     #[test]
+    fn duplicate_name_and_bad_weight_are_typed_config_errors() {
+        use crate::core::Error;
+        let service = small_service();
+        let dd = discrete(300, 6, 41);
+        let _ = service.register_discrete("a", Arc::clone(&dd), ServeScheme::Sequential, None);
+        let dup = service.try_register_discrete(
+            "a",
+            Arc::clone(&dd),
+            ServeScheme::Sequential,
+            RegisterOptions::default(),
+        );
+        assert!(matches!(dup, Err(Error::InvalidConfig(_))));
+        for w in [0.0, -1.0, f64::NAN, f64::INFINITY] {
+            let bad = service.try_register_discrete(
+                "b",
+                Arc::clone(&dd),
+                ServeScheme::Sequential,
+                RegisterOptions {
+                    weight: w,
+                    ..RegisterOptions::default()
+                },
+            );
+            assert!(matches!(bad, Err(Error::InvalidConfig(_))), "weight {w}");
+        }
+    }
+
+    #[test]
+    fn service_ceiling_rejects_registration_with_typed_overload() {
+        use crate::core::Error;
+        let dd = discrete(400, 8, 43);
+        let footprint = dd.footprint_bytes();
+        let demand = footprint + registry::worst_case_cache_bytes(&dd);
+        // Headroom after the first tenant: 1.5× footprint — enough for a
+        // second tenant only if its cache is tightly budgeted.
+        let service = DicfsService::new(ServiceConfig {
+            cluster: ClusterConfig::with_nodes(2),
+            max_inflight_jobs: 2,
+            max_service_bytes: Some(demand + footprint + footprint / 2),
+            ..ServiceConfig::default()
+        });
+        // First tenant fits...
+        let id = service
+            .try_register_discrete(
+                "a",
+                Arc::clone(&dd),
+                ServeScheme::Sequential,
+                RegisterOptions::default(),
+            )
+            .unwrap();
+        // ...the second does not: typed rejection, no panic, no state.
+        let res = service.try_register_discrete(
+            "b",
+            Arc::clone(&dd),
+            ServeScheme::Sequential,
+            RegisterOptions::default(),
+        );
+        assert!(matches!(res, Err(Error::Overloaded(_))), "got {res:?}");
+        assert!(service.dataset_by_name("b").is_none());
+        // A bounded cache budget shrinks projected demand below the
+        // ceiling, so the same dataset now fits.
+        let b = service
+            .try_register_discrete(
+                "b",
+                Arc::clone(&dd),
+                ServeScheme::Sequential,
+                RegisterOptions {
+                    budget: CacheBudget::Bytes(footprint / 4),
+                    ..RegisterOptions::default()
+                },
+            )
+            .unwrap();
+        assert_ne!(id, b);
+        // An append that would push past the ceiling is rejected too —
+        // and the lineage stays at version 0.
+        let res = service.append_discrete(id, &dd);
+        assert!(matches!(res, Err(Error::Overloaded(_))), "got {res:?}");
+        assert_eq!(service.dataset(id).unwrap().num_versions(), 1);
+    }
+
+    #[test]
+    fn unregister_frees_capacity_name_and_cache() {
+        use crate::core::Error;
+        let service = small_service();
+        let dd = discrete(500, 7, 47);
+        let id = service.register_discrete("a", Arc::clone(&dd), ServeScheme::Sequential, None);
+        let spec = QuerySpec {
+            dataset: id,
+            cfs: CfsConfig::default(),
+        };
+        let r = service.query(&spec);
+        assert!(r.cache.computed > 0);
+        let demand_before = service.total_demand_bytes();
+
+        let (pairs, bytes) = service.unregister(id).unwrap();
+        assert_eq!(pairs, r.cache.computed);
+        assert!(bytes > 0);
+        // Slot cleared, id dead, name reusable, demand released.
+        assert!(service.dataset(id).is_none());
+        assert!(service.dataset_by_name("a").is_none());
+        assert!(service.total_demand_bytes() < demand_before);
+        assert!(matches!(service.unregister(id), Err(Error::InvalidConfig(_))));
+        assert!(matches!(
+            service.append_discrete(id, &dd),
+            Err(Error::InvalidConfig(_))
+        ));
+        let id2 = service.register_discrete("a", Arc::clone(&dd), ServeScheme::Sequential, None);
+        assert_ne!(id2, id, "retired ids are never reused");
+        let r2 = service.query(&QuerySpec {
+            dataset: id2,
+            cfs: CfsConfig::default(),
+        });
+        assert_eq!(r2.result.selected, r.result.selected);
+    }
+
+    #[test]
+    fn budgeted_service_stays_exact_and_under_budget() {
+        let dd = discrete(700, 9, 53);
+        let budget = registry::worst_case_cache_bytes(&dd) / 4;
+        let service = DicfsService::new(ServiceConfig {
+            cluster: ClusterConfig::with_nodes(2),
+            max_inflight_jobs: 2,
+            cache_budget_bytes: Some(budget),
+            ..ServiceConfig::default()
+        });
+        let id = service.register_discrete("a", Arc::clone(&dd), ServeScheme::Horizontal, None);
+        let spec = QuerySpec {
+            dataset: id,
+            cfs: CfsConfig::default(),
+        };
+        let seq = SequentialCfs::default().select_discrete(&dd);
+        for _ in 0..3 {
+            let r = service.query(&spec);
+            assert_eq!(r.result.selected, seq.selected, "eviction changed selection");
+            assert_eq!(r.result.merit.to_bits(), seq.merit.to_bits());
+        }
+        let rep = service.cache_report(id).unwrap();
+        assert_eq!(rep.budget_bytes, Some(budget));
+        assert!(
+            rep.peak_resident_bytes <= budget,
+            "peak {} exceeded budget {budget}",
+            rep.peak_resident_bytes
+        );
+        // A 25% budget on this shape genuinely evicts.
+        assert!(rep.evicted_pairs > 0, "budget never evicted — test too lax");
+    }
+
+    #[test]
     fn engine_pool_service_prices_engines_and_stays_exact() {
         use crate::runtime::TiledEngine;
         let service = DicfsService::with_engine_pool(
             ServiceConfig {
                 cluster: ClusterConfig::with_nodes(2),
                 max_inflight_jobs: 2,
+                ..ServiceConfig::default()
             },
             vec![
                 Arc::new(NativeEngine) as Arc<dyn SuEngine>,

@@ -21,13 +21,23 @@
 //! In-flight queries keep the `Arc` of the version they started on
 //! (version pinning), so an append never changes what a running search
 //! observes. See DESIGN.md §12.
+//!
+//! The registry is also where the service's **memory quotas** live
+//! (DESIGN.md §15): each dataset can carry a resident-byte budget for
+//! its SU cache, admission against an optional service-wide ceiling is
+//! checked here (typed [`Error::Overloaded`], never a panic), and
+//! [`DatasetRegistry::remove`] is the retire path — the slot is cleared
+//! (ids stay stable, names become reusable) and the caller drops the
+//! cache. In-flight queries keep working through their pinned `Arc`s.
 
 use std::ops::Range;
 use std::sync::{Arc, Mutex, RwLock};
 
 use crate::cfs::SharedCorrelator;
 use crate::core::{pair_key, Error, FeatureId, Result};
-use crate::correlation::{ContingencyTable, VersionedEntry, VersionedSuCache, VersionedSuHandle};
+use crate::correlation::{
+    ContingencyTable, VersionedEntry, VersionedSuCache, VersionedSuHandle, ENTRY_OVERHEAD_BYTES,
+};
 use crate::data::columnar::DiscreteDataset;
 use crate::dicfs::planner::AutoCorrelator;
 use crate::dicfs::{hp::HorizontalCorrelator, vp::VerticalCorrelator};
@@ -36,8 +46,40 @@ use crate::serve::ServeScheme;
 use crate::sparklet::SparkletContext;
 
 /// Identifier of a registered dataset (index into the registry, stable
-/// for the service's lifetime).
+/// for the service's lifetime — retired ids are never reused).
 pub type DatasetId = usize;
+
+/// Worst-case resident bytes of a fully warmed [`VersionedSuCache`] over
+/// `data`: every pair of the `C(m+1, 2)` correlation matrix cached with
+/// its contingency table. Closed form over the arities — with
+/// `S1 = Σ arity` and `S2 = Σ arity²`, the feature–feature cells sum to
+/// `(S1² − S2) / 2` and the feature–class cells to `class_arity × S1`,
+/// each cell a u64, plus [`ENTRY_OVERHEAD_BYTES`] per pair.
+///
+/// This is what admission control charges an *unbounded* dataset (a
+/// budgeted dataset is charged `min(budget, worst_case)`), and the unit
+/// callers express relative budgets in ("25% of the full SU matrix").
+/// Computed in `u128` and saturated to `usize` so pathological shapes
+/// cannot overflow.
+pub fn worst_case_cache_bytes(data: &DiscreteDataset) -> usize {
+    let s1: u128 = data.arities.iter().map(|&a| a as u128).sum();
+    let s2: u128 = data.arities.iter().map(|&a| (a as u128) * (a as u128)).sum();
+    let m = data.num_features() as u128;
+    let pairs = m * (m + 1) / 2;
+    let cells = (s1 * s1 - s2) / 2 + (data.class_arity as u128) * s1;
+    let bytes = pairs * (ENTRY_OVERHEAD_BYTES as u128) + 8 * cells;
+    usize::try_from(bytes).unwrap_or(usize::MAX)
+}
+
+/// Bytes admission control charges a dataset: its column footprint plus
+/// the cache it is allowed to grow — the full worst case when unbounded,
+/// else the budget (capped at the worst case, which a generous budget
+/// can never exceed in practice).
+pub(crate) fn projected_demand_bytes(data: &DiscreteDataset, cache_budget: Option<usize>) -> usize {
+    let worst = worst_case_cache_bytes(data);
+    let cache = cache_budget.map_or(worst, |b| b.min(worst));
+    data.footprint_bytes().saturating_add(cache)
+}
 
 /// One version of a registered dataset: the merged data as of some
 /// append, its partitioning layout, and a handle on the lineage's shared
@@ -55,6 +97,9 @@ pub struct DatasetVersion {
     pub version: usize,
     /// The merged (base + all appended deltas) discretized data.
     pub data: Arc<DiscreteDataset>,
+    /// The dataset's DRR fairness weight (carried so the scheduler can
+    /// read it straight off a pinned request; version-invariant).
+    pub(crate) weight: f64,
     /// The correlation backend over this version's layout.
     pub(crate) provider: Box<dyn SharedCorrelator>,
     /// The lineage-wide SU cache (shared by every version).
@@ -314,6 +359,10 @@ pub struct RegisteredDataset {
     pub name: String,
     /// Which correlation backend queries on this dataset use.
     pub scheme: ServeScheme,
+    /// Deficit-round-robin weight: the share of scheduler dispatch
+    /// bandwidth this tenant earns relative to the others (1.0 =
+    /// baseline; see DESIGN.md §15). Finite and strictly positive.
+    weight: f64,
     /// Partition-count override, reapplied to every version's layout.
     partitions: Option<usize>,
     /// The lineage-wide SU cache (also held by every version).
@@ -333,23 +382,27 @@ impl RegisteredDataset {
     /// Build the per-dataset state at version 0: choose the correlation
     /// backend for `scheme` (paying its construction cost — for vp, the
     /// columnar shuffle — exactly once) and attach an empty shared
-    /// versioned cache.
+    /// versioned cache, bounded to `cache_budget` resident bytes when
+    /// given (`None` = unbounded).
     pub(crate) fn build(
         id: DatasetId,
         name: String,
         data: Arc<DiscreteDataset>,
         scheme: ServeScheme,
         partitions: Option<usize>,
+        cache_budget: Option<usize>,
+        weight: f64,
         ctx: &Arc<SparkletContext>,
         engines: &[Arc<dyn SuEngine>],
     ) -> Self {
-        let cache = VersionedSuCache::new();
+        let cache = VersionedSuCache::with_budget(cache_budget);
         let provider = build_provider(scheme, &data, partitions, ctx, engines, None);
         let v0 = Arc::new(DatasetVersion {
             dataset: id,
             name: name.clone(),
             version: 0,
             data,
+            weight,
             provider,
             cache: cache.clone(),
             engine: Arc::clone(&engines[0]),
@@ -358,6 +411,7 @@ impl RegisteredDataset {
             id,
             name,
             scheme,
+            weight,
             partitions,
             cache,
             current: RwLock::new(v0),
@@ -372,6 +426,7 @@ impl RegisteredDataset {
         name: &str,
         data: Arc<DiscreteDataset>,
         scheme: ServeScheme,
+        weight: f64,
         provider: Box<dyn SharedCorrelator>,
     ) -> Self {
         let cache = VersionedSuCache::new();
@@ -380,6 +435,7 @@ impl RegisteredDataset {
             name: name.to_string(),
             version: 0,
             data,
+            weight,
             provider,
             cache: cache.clone(),
             engine: Arc::new(crate::runtime::NativeEngine),
@@ -388,6 +444,7 @@ impl RegisteredDataset {
             id,
             name: name.to_string(),
             scheme,
+            weight,
             partitions: None,
             cache,
             current: RwLock::new(v0),
@@ -422,6 +479,30 @@ impl RegisteredDataset {
     pub fn full_matrix(&self) -> usize {
         let m = self.current().data.num_features();
         (m + 1) * m / 2
+    }
+
+    /// This dataset's SU-cache budget (`None` = unbounded).
+    pub fn cache_budget(&self) -> Option<usize> {
+        self.cache.budget()
+    }
+
+    /// This dataset's deficit-round-robin fairness weight.
+    pub fn weight(&self) -> f64 {
+        self.weight
+    }
+
+    /// Worst-case resident bytes of this dataset's fully warmed cache
+    /// (see [`worst_case_cache_bytes`]), over the current version's
+    /// arities.
+    pub fn worst_case_cache_bytes(&self) -> usize {
+        worst_case_cache_bytes(&self.data())
+    }
+
+    /// Bytes this dataset counts against the service ceiling: its
+    /// current column footprint plus the cache it may grow (budget if
+    /// bounded, worst case if not).
+    pub fn demand_bytes(&self) -> usize {
+        projected_demand_bytes(&self.data(), self.cache.budget())
     }
 
     /// Append `delta`'s rows, publishing a new current version. The
@@ -468,6 +549,7 @@ impl RegisteredDataset {
             name: self.name.clone(),
             version,
             data: merged,
+            weight: self.weight,
             provider,
             cache: self.cache.clone(),
             engine: Arc::clone(&engines[0]),
@@ -523,43 +605,86 @@ impl SharedCorrelator for LocalCorrelator {
 }
 
 /// Name → state map of every dataset registered with a service.
+/// Retired datasets leave a `None` slot behind so ids stay stable and
+/// are never reused (a stale id held by a client fails to resolve
+/// instead of silently addressing someone else's tenant).
 #[derive(Default)]
 pub(crate) struct DatasetRegistry {
-    entries: Mutex<Vec<Arc<RegisteredDataset>>>,
+    entries: Mutex<Vec<Option<Arc<RegisteredDataset>>>>,
 }
 
 impl DatasetRegistry {
-    /// Register under the next free id. Panics if `name` is taken —
-    /// registrations are a setup-time, driver-side operation.
+    /// Register under the next free id. A taken name or a non-finite /
+    /// non-positive DRR weight is an [`Error::InvalidConfig`]; when
+    /// `ceiling` is set, admission is checked first — the sum of every
+    /// live dataset's [`RegisteredDataset::demand_bytes`] plus the
+    /// newcomer's projected demand must fit, else [`Error::Overloaded`]
+    /// (and no state is built: the rejection happens before the
+    /// expensive layout work).
+    #[allow(clippy::too_many_arguments)]
     pub(crate) fn insert(
         &self,
         name: &str,
         data: Arc<DiscreteDataset>,
         scheme: ServeScheme,
         partitions: Option<usize>,
+        cache_budget: Option<usize>,
+        weight: f64,
+        ceiling: Option<usize>,
         ctx: &Arc<SparkletContext>,
         engines: &[Arc<dyn SuEngine>],
-    ) -> Arc<RegisteredDataset> {
+    ) -> Result<Arc<RegisteredDataset>> {
+        if !weight.is_finite() || weight <= 0.0 {
+            return Err(Error::InvalidConfig(format!(
+                "dataset {name:?}: DRR weight must be finite and > 0, got {weight}"
+            )));
+        }
         let mut entries = self.entries.lock().unwrap();
-        assert!(
-            entries.iter().all(|e| e.name != name),
-            "dataset {name:?} already registered"
-        );
+        if entries.iter().flatten().any(|e| e.name == name) {
+            return Err(Error::InvalidConfig(format!(
+                "dataset {name:?} already registered"
+            )));
+        }
+        if let Some(ceiling) = ceiling {
+            let admitted: usize = entries
+                .iter()
+                .flatten()
+                .map(|e| e.demand_bytes())
+                .fold(0usize, |a, b| a.saturating_add(b));
+            let incoming = projected_demand_bytes(&data, cache_budget);
+            if admitted.saturating_add(incoming) > ceiling {
+                return Err(Error::Overloaded(format!(
+                    "registering {name:?} needs {incoming} bytes on top of {admitted} \
+                     already admitted, exceeding the service ceiling of {ceiling} bytes \
+                     (retire a dataset or set a cache budget)"
+                )));
+            }
+        }
         let reg = Arc::new(RegisteredDataset::build(
             entries.len(),
             name.to_string(),
             data,
             scheme,
             partitions,
+            cache_budget,
+            weight,
             ctx,
             engines,
         ));
-        entries.push(Arc::clone(&reg));
-        reg
+        entries.push(Some(Arc::clone(&reg)));
+        Ok(reg)
+    }
+
+    /// Retire a dataset: clear its slot and hand the state back to the
+    /// caller (who drops the cache). `None` for unknown or already
+    /// retired ids. In-flight queries holding version `Arc`s finish
+    /// unaffected.
+    pub(crate) fn remove(&self, id: DatasetId) -> Option<Arc<RegisteredDataset>> {
+        self.entries.lock().unwrap().get_mut(id).and_then(Option::take)
     }
 
     pub(crate) fn get(&self, id: DatasetId) -> Option<Arc<RegisteredDataset>> {
-        self.entries.lock().unwrap().get(id).cloned()
+        self.entries.lock().unwrap().get(id).cloned().flatten()
     }
 
     pub(crate) fn by_name(&self, name: &str) -> Option<Arc<RegisteredDataset>> {
@@ -567,11 +692,24 @@ impl DatasetRegistry {
             .lock()
             .unwrap()
             .iter()
+            .flatten()
             .find(|e| e.name == name)
             .cloned()
     }
 
     pub(crate) fn all(&self) -> Vec<Arc<RegisteredDataset>> {
-        self.entries.lock().unwrap().clone()
+        self.entries.lock().unwrap().iter().flatten().cloned().collect()
+    }
+
+    /// Σ [`RegisteredDataset::demand_bytes`] over live datasets — what
+    /// admission compares against the ceiling.
+    pub(crate) fn total_demand_bytes(&self) -> usize {
+        self.entries
+            .lock()
+            .unwrap()
+            .iter()
+            .flatten()
+            .map(|e| e.demand_bytes())
+            .fold(0usize, |a, b| a.saturating_add(b))
     }
 }

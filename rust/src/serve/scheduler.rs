@@ -1,40 +1,49 @@
 //! The shared job scheduler: admission control + per-dataset miss
-//! coalescing.
+//! coalescing + **deficit-round-robin (DRR) fairness across tenants**.
 //!
 //! Every cache miss batch a query produces becomes a [`MissRequest`] on
-//! the scheduler's FIFO queue. Each scheduling tick the scheduler drains
-//! its channel, then dispatches jobs while capacity allows
-//! (`max_inflight_jobs` bounds the number of distributed SU jobs running
-//! at once — the admission control):
+//! the scheduler's channel. Each scheduling tick the scheduler drains
+//! the channel into **per-tenant lanes** (one lane per dataset), then
+//! dispatches jobs while capacity allows (`max_inflight_jobs` bounds
+//! the number of distributed SU jobs running at once — the admission
+//! control):
 //!
-//! * the **oldest** pending request whose dataset has no job in flight
-//!   picks the dataset (FIFO fairness) — and, on a versioned dataset,
-//!   the dataset *version*: only requests pinned to the same version
-//!   coalesce, so a query that raced an append still resolves against
-//!   exactly the layout it started on,
-//! * every queued request for that dataset (and version) joins the same
-//!   job (per-dataset batching): their pair lists are deduplicated into
-//!   one canonical union, already-valid pairs are dropped, and the
-//!   remainder runs through the version's shared correlator — one batch
-//!   for fresh pairs, one tiny delta batch per distinct upgrade base,
+//! * tenants are visited in **round-robin ring order**; on each visit a
+//!   runnable lane (pending work, no job in flight) earns
+//!   `weight × quantum` deficit credit, and dispatches when its credit
+//!   covers the head batch's cost — the number of distinct requested
+//!   pairs. Over a contended interval every tenant's dispatched pair
+//!   volume is therefore proportional to its configured weight
+//!   ([`RegisteredDataset::weight`](crate::serve::RegisteredDataset::weight)),
+//!   and one hot tenant can no longer starve the rest the way the old
+//!   oldest-request-first (FIFO) rule allowed. When a whole rotation
+//!   dispatches nothing, every runnable lane is advanced by the same
+//!   number of rounds at once (virtual time jump), so low-weight lanes
+//!   cannot spin the scheduler; an idle system serves a lone tenant
+//!   immediately (work conservation),
+//! * a lane's head batch coalesces only requests pinned to the same
+//!   dataset **version**, so a query that raced an append still
+//!   resolves against exactly the layout it started on
+//!   (later-version requests stay queued for the next job),
 //! * at most one job per dataset runs at a time — misses arriving while
-//!   a dataset's job is in flight wait (and keep coalescing), so a pair
-//!   is never computed twice and every computed pair is attributable to
-//!   exactly one [`SuJobReport`],
+//!   a dataset's job is in flight wait (and keep coalescing) without
+//!   accruing deficit, so a pair is never computed twice and every
+//!   computed pair is attributable to exactly one [`SuJobReport`],
 //! * the job resolves the union at the pinned version
 //!   ([`DatasetVersion::resolve`](crate::serve::registry::DatasetVersion)):
 //!   valid cached entries are served, entries from earlier versions are
 //!   **upgraded** by merging only the delta rows' counts, the rest are
 //!   computed fresh (tables cached in the lineage's
 //!   [`VersionedSuCache`](crate::correlation::VersionedSuCache) for
-//!   future upgrades) — so delta upgrades coalesce like any other miss
-//!   batch, and every answered pair is attributable to exactly one
-//!   [`SuJobReport`].
+//!   future upgrades) — and it refreshes the cache's eviction pricing
+//!   from the planner's calibrated rates when the dataset has one.
 //!
-//! Coalescing is value-safe: SU per pair is a pure function of the
-//! dataset and both correlators compute each pair in canonical
-//! orientation, so batch composition cannot change any value (DESIGN.md
-//! §5, §10).
+//! Fairness never touches values: DRR only reorders *when* a tenant's
+//! coalesced batch runs, and SU per pair is a pure function of the
+//! dataset computed in canonical orientation, so dispatch order cannot
+//! change any value (DESIGN.md §5, §10, §15). Per-job fairness inputs
+//! and outcomes (tenant weight, charged cost, queue wait) land in
+//! [`SuJobReport`]; [`TenantStats`] aggregates them per tenant.
 
 use std::collections::{HashMap, HashSet, VecDeque};
 use std::sync::mpsc::{channel, Receiver, Sender};
@@ -86,6 +95,14 @@ pub struct SuJobReport {
     /// `full_cells + delta_cells` of an append-and-requery workload
     /// stays strictly below the `full_cells` of a cold re-registration.
     pub delta_cells: u64,
+    /// DRR weight of the tenant (dataset) this job served, as
+    /// configured at registration.
+    pub tenant_weight: f64,
+    /// Pairs the DRR accounting charged this tenant for the dispatch:
+    /// the distinct requested pairs of the coalesced batch (demand, not
+    /// post-cache work — at dispatch time the scheduler does not probe
+    /// the cache).
+    pub drr_cost_pairs: usize,
     /// Oldest coalesced request's queue wait, in seconds.
     pub queue_secs: f64,
     /// Wall-clock of the correlator batch, in seconds.
@@ -103,6 +120,45 @@ pub struct SuJobReport {
     /// hp/vp/seq datasets): which plan served the batch, at what
     /// predicted cost, against what observed cost.
     pub plans: Vec<PlanDecision>,
+}
+
+/// Per-tenant aggregate of every [`SuJobReport`] the scheduler has
+/// completed for one dataset — the fairness ledger behind
+/// `tests/tenancy_stress.rs` and `BENCH_tenancy.json`.
+#[derive(Debug, Clone)]
+pub struct TenantStats {
+    /// The tenant's dataset id.
+    pub dataset: DatasetId,
+    /// Registration name.
+    pub dataset_name: String,
+    /// Configured DRR weight.
+    pub weight: f64,
+    /// Coalesced jobs dispatched for this tenant.
+    pub jobs: usize,
+    /// Σ [`SuJobReport::drr_cost_pairs`] — the dispatch bandwidth the
+    /// tenant consumed in DRR units.
+    pub drr_cost_pairs: usize,
+    /// Σ distinct pairs its jobs actually computed (fresh + upgraded).
+    pub computed_pairs: usize,
+    /// Σ query miss batches coalesced into its jobs.
+    pub coalesced_requests: usize,
+    /// Σ per-job oldest-request queue wait, in seconds.
+    pub total_queue_secs: f64,
+    /// Worst single-job queue wait, in seconds.
+    pub max_queue_secs: f64,
+    /// Σ per-job correlator wall-clock, in seconds.
+    pub total_compute_secs: f64,
+}
+
+impl TenantStats {
+    /// Mean per-job queue wait, in seconds (0 when no job ran).
+    pub fn mean_queue_secs(&self) -> f64 {
+        if self.jobs == 0 {
+            0.0
+        } else {
+            self.total_queue_secs / self.jobs as f64
+        }
+    }
 }
 
 pub(crate) enum SchedMsg {
@@ -153,6 +209,37 @@ impl MissScheduler {
     pub(crate) fn job_log(&self) -> Vec<SuJobReport> {
         self.log.lock().unwrap().clone()
     }
+
+    /// Per-tenant aggregates over the completed-job log, sorted by
+    /// dataset id. Tenants that never dispatched a job have no row.
+    pub(crate) fn tenant_stats(&self) -> Vec<TenantStats> {
+        let log = self.log.lock().unwrap();
+        let mut by_ds: HashMap<DatasetId, TenantStats> = HashMap::new();
+        for j in log.iter() {
+            let t = by_ds.entry(j.dataset).or_insert_with(|| TenantStats {
+                dataset: j.dataset,
+                dataset_name: j.dataset_name.clone(),
+                weight: j.tenant_weight,
+                jobs: 0,
+                drr_cost_pairs: 0,
+                computed_pairs: 0,
+                coalesced_requests: 0,
+                total_queue_secs: 0.0,
+                max_queue_secs: 0.0,
+                total_compute_secs: 0.0,
+            });
+            t.jobs += 1;
+            t.drr_cost_pairs += j.drr_cost_pairs;
+            t.computed_pairs += j.computed_pairs;
+            t.coalesced_requests += j.coalesced_requests;
+            t.total_queue_secs += j.queue_secs;
+            t.max_queue_secs = t.max_queue_secs.max(j.queue_secs);
+            t.total_compute_secs += j.compute_secs;
+        }
+        let mut out: Vec<TenantStats> = by_ds.into_values().collect();
+        out.sort_by_key(|t| t.dataset);
+        out
+    }
 }
 
 impl Drop for MissScheduler {
@@ -167,13 +254,55 @@ impl Drop for MissScheduler {
     }
 }
 
+/// Deficit credit a runnable lane earns per ring visit, per unit of
+/// weight, in DRR pair units. Small relative to a typical coalesced
+/// batch so weights shape dispatch order under contention; the
+/// virtual-time jump in the dispatch loop keeps low quanta from ever
+/// costing extra rotations of real work.
+const DRR_QUANTUM_PAIRS: f64 = 8.0;
+
+/// Tolerance for deficit-vs-cost comparisons (both are small integral
+/// sums accumulated in f64).
+const DRR_EPS: f64 = 1e-9;
+
+/// One tenant's scheduler lane: its queued miss batches plus the DRR
+/// state that decides when the head batch dispatches.
+struct TenantLane {
+    queue: VecDeque<MissRequest>,
+    /// Configured weight, read off the first pinned version seen.
+    weight: f64,
+    /// Accumulated dispatch credit, in pair units. Reset to zero when
+    /// the queue drains (classic DRR: an idle tenant banks nothing).
+    deficit: f64,
+}
+
+/// DRR cost of a lane's head batch: the distinct canonical pairs across
+/// every queued request pinned to the head request's version (exactly
+/// the set a dispatched job would resolve). At least 1 so a dispatch
+/// always consumes credit.
+fn head_batch_cost(queue: &VecDeque<MissRequest>) -> f64 {
+    let ver = queue.front().expect("cost of an empty lane").version.version;
+    let mut seen: HashSet<(FeatureId, FeatureId)> = HashSet::new();
+    for r in queue.iter().filter(|r| r.version.version == ver) {
+        for &(a, b) in &r.pairs {
+            seen.insert(pair_key(a, b));
+        }
+    }
+    seen.len().max(1) as f64
+}
+
 fn scheduler_loop(
     rx: Receiver<SchedMsg>,
     tx: Sender<SchedMsg>,
     max_inflight: usize,
     log: Arc<Mutex<Vec<SuJobReport>>>,
 ) {
-    let mut pending: VecDeque<MissRequest> = VecDeque::new();
+    let mut lanes: HashMap<DatasetId, TenantLane> = HashMap::new();
+    // Round-robin ring of lanes with pending work. Invariant outside a
+    // rotation: a dataset id is in the ring iff its lane's queue is
+    // nonempty (busy lanes stay in the ring; they are skipped, not
+    // dropped).
+    let mut ring: VecDeque<DatasetId> = VecDeque::new();
     let mut busy: HashSet<DatasetId> = HashSet::new();
     let mut inflight = 0usize;
     let mut next_job = 0usize;
@@ -193,7 +322,18 @@ fn scheduler_loop(
         }
         for m in msgs {
             match m {
-                SchedMsg::Miss(r) => pending.push_back(r),
+                SchedMsg::Miss(r) => {
+                    let id = r.version.dataset;
+                    let lane = lanes.entry(id).or_insert_with(|| TenantLane {
+                        queue: VecDeque::new(),
+                        weight: r.version.weight,
+                        deficit: 0.0,
+                    });
+                    if lane.queue.is_empty() {
+                        ring.push_back(id);
+                    }
+                    lane.queue.push_back(r);
+                }
                 SchedMsg::JobDone(ds_id) => {
                     inflight -= 1;
                     busy.remove(&ds_id);
@@ -202,60 +342,114 @@ fn scheduler_loop(
             }
         }
 
-        // Admission control: dispatch while a job slot is free. The
-        // oldest request whose dataset is idle picks the dataset; all of
-        // that dataset's queued misses join the job. Datasets with a job
-        // in flight stay queued (their misses keep coalescing).
-        while inflight < max_inflight {
-            let Some(pos) = pending
-                .iter()
-                .position(|r| !busy.contains(&r.version.dataset))
-            else {
-                break;
-            };
-            let ds_id = pending[pos].version.dataset;
-            // Coalesce only requests pinned to the same version: a
-            // request that raced an append must resolve against its own
-            // pinned layout. (The oldest request picks the version;
-            // later-version requests for the same dataset stay queued
-            // and coalesce into the next job.)
-            let ver_no = pending[pos].version.version;
-            let mut batch = Vec::new();
-            let mut rest = VecDeque::with_capacity(pending.len());
-            for r in pending.drain(..) {
-                if r.version.dataset == ds_id && r.version.version == ver_no {
-                    batch.push(r);
-                } else {
-                    rest.push_back(r);
+        // Deficit-round-robin dispatch while admission slots are free.
+        'dispatch: while inflight < max_inflight {
+            let mut dispatched = false;
+            // One rotation: visit every lane currently in the ring.
+            for _ in 0..ring.len() {
+                if inflight >= max_inflight {
+                    break;
                 }
+                let id = ring.pop_front().expect("ring entry");
+                let lane = lanes.get_mut(&id).expect("ring id has a lane");
+                if lane.queue.is_empty() {
+                    lane.deficit = 0.0;
+                    continue; // drained lane leaves the ring
+                }
+                if busy.contains(&id) {
+                    // A job for this dataset is in flight: its queued
+                    // misses keep coalescing but earn no credit (a
+                    // tenant cannot bank a dispatch burst while served).
+                    ring.push_back(id);
+                    continue;
+                }
+                lane.deficit += lane.weight * DRR_QUANTUM_PAIRS;
+                let cost = head_batch_cost(&lane.queue);
+                if lane.deficit + DRR_EPS < cost {
+                    ring.push_back(id);
+                    continue;
+                }
+                lane.deficit -= cost;
+                // Coalesce only requests pinned to the head request's
+                // version: a request that raced an append must resolve
+                // against its own pinned layout. Later-version requests
+                // stay queued for the next job.
+                let ver_no = lane.queue.front().expect("nonempty").version.version;
+                let mut batch = Vec::new();
+                let mut rest = VecDeque::with_capacity(lane.queue.len());
+                for r in lane.queue.drain(..) {
+                    if r.version.version == ver_no {
+                        batch.push(r);
+                    } else {
+                        rest.push_back(r);
+                    }
+                }
+                lane.queue = rest;
+                if lane.queue.is_empty() {
+                    lane.deficit = 0.0;
+                } else {
+                    ring.push_back(id);
+                }
+                busy.insert(id);
+                inflight += 1;
+                dispatched = true;
+                let job_id = next_job;
+                next_job += 1;
+                let done = tx.clone();
+                let job_log = Arc::clone(&log);
+                let drr_cost = cost as usize;
+                std::thread::Builder::new()
+                    .name(format!("dicfs-su-job-{job_id}"))
+                    .spawn(move || {
+                        // JobDone must reach the scheduler even when the
+                        // job panics (e.g. a sparklet stage failing
+                        // permanently), or the dataset would stay busy
+                        // and the admission slot would leak forever. A
+                        // panicked job drops its batch, so the waiting
+                        // queries observe their reply channels closing
+                        // and fail individually — the service itself
+                        // keeps serving.
+                        let outcome = std::panic::catch_unwind(std::panic::AssertUnwindSafe(
+                            || run_su_job(job_id, drr_cost, &batch, &job_log),
+                        ));
+                        let _ = done.send(SchedMsg::JobDone(id));
+                        drop(outcome);
+                    })
+                    .expect("spawn job runner");
             }
-            pending = rest;
-            busy.insert(ds_id);
-            inflight += 1;
-            let job_id = next_job;
-            next_job += 1;
-            let done = tx.clone();
-            let job_log = Arc::clone(&log);
-            std::thread::Builder::new()
-                .name(format!("dicfs-su-job-{job_id}"))
-                .spawn(move || {
-                    // JobDone must reach the scheduler even when the job
-                    // panics (e.g. a sparklet stage failing permanently),
-                    // or the dataset would stay busy and the admission
-                    // slot would leak forever. A panicked job drops its
-                    // batch, so the waiting queries observe their reply
-                    // channels closing and fail individually — the
-                    // service itself keeps serving.
-                    let outcome = std::panic::catch_unwind(std::panic::AssertUnwindSafe(
-                        || run_su_job(job_id, &batch, &job_log),
-                    ));
-                    let _ = done.send(SchedMsg::JobDone(ds_id));
-                    drop(outcome);
-                })
-                .expect("spawn job runner");
+            if dispatched {
+                continue 'dispatch;
+            }
+            // No lane reached its cost this rotation. Jump virtual time:
+            // advance every runnable lane by the same number of rounds —
+            // just enough for the nearest one to dispatch next rotation.
+            // Preserves weight proportionality exactly while keeping a
+            // low-weight lone tenant from costing real scheduler spins
+            // (work conservation).
+            let mut min_rounds: Option<f64> = None;
+            for id in ring.iter() {
+                if busy.contains(id) {
+                    continue;
+                }
+                let lane = &lanes[id];
+                let cost = head_batch_cost(&lane.queue);
+                let need = (cost - lane.deficit) / (lane.weight * DRR_QUANTUM_PAIRS);
+                min_rounds = Some(min_rounds.map_or(need, |m: f64| m.min(need)));
+            }
+            // Every pending lane is busy (or the ring is empty): nothing
+            // to dispatch until a JobDone arrives.
+            let Some(rounds) = min_rounds else { break };
+            let rounds = rounds.max(0.0).ceil().max(1.0);
+            for id in ring.iter() {
+                if busy.contains(id) {
+                    continue;
+                }
+                let lane = lanes.get_mut(id).expect("ring id has a lane");
+                lane.deficit += rounds * lane.weight * DRR_QUANTUM_PAIRS;
+            }
         }
 
-        if shutting_down && inflight == 0 && pending.is_empty() {
+        if shutting_down && inflight == 0 && lanes.values().all(|l| l.queue.is_empty()) {
             break;
         }
     }
@@ -265,10 +459,15 @@ fn scheduler_loop(
 /// first-seen order), resolve them at the batch's pinned dataset version
 /// — already-valid entries served, stale entries **upgraded** by merging
 /// only the delta rows' counts, the rest computed fresh (tables cached
-/// for future upgrades) — log the report, answer every request — in
-/// that order, so the job log never trails a served reply.
+/// for future upgrades) — refresh the cache's eviction price from the
+/// provider's calibration, log the report, answer every request — in
+/// that order, so the job log never trails a served reply. `drr_cost`
+/// is the pair cost the dispatcher charged the tenant (the distinct
+/// requested pairs; 0 from test harnesses that bypass the dispatcher —
+/// then the job's own union size is recorded).
 pub(crate) fn run_su_job(
     job_id: usize,
+    drr_cost: usize,
     batch: &[MissRequest],
     log: &Mutex<Vec<SuJobReport>>,
 ) -> SuJobReport {
@@ -309,6 +508,17 @@ pub(crate) fn run_su_job(
     };
     let compute_secs = t0.elapsed().as_secs_f64();
     let job_stages = recorder.metrics();
+    // Keep the cache's cost-aware eviction priced by what recomputation
+    // *actually* costs here: the planner's cheapest calibrated
+    // secs-per-cell rate, refreshed after every job (fixed-scheme
+    // providers have no planner and keep the LRU fallback).
+    if let Some(rate) = ds
+        .provider
+        .planner_calibration()
+        .and_then(|c| c.min_calibrated_rate())
+    {
+        ds.cache.set_recompute_rate(rate);
+    }
     // Per-job plan attribution: the scheduler runs at most one job per
     // dataset at a time, so draining here yields exactly this batch's
     // decisions (fixed-scheme providers return an empty log).
@@ -325,6 +535,12 @@ pub(crate) fn run_su_job(
         upgraded_pairs: outcome.upgraded,
         full_cells: outcome.full_cells,
         delta_cells: outcome.delta_cells,
+        tenant_weight: ds.weight,
+        drr_cost_pairs: if drr_cost > 0 {
+            drr_cost
+        } else {
+            candidates.len()
+        },
         queue_secs,
         compute_secs,
         est_shuffle_bytes: job_stages.total_shuffle_bytes(),
@@ -386,11 +602,21 @@ mod tests {
     }
 
     fn registered(provider: Box<dyn SharedCorrelator>) -> Arc<RegisteredDataset> {
+        registered_as(0, "tiny", 1.0, provider)
+    }
+
+    fn registered_as(
+        id: DatasetId,
+        name: &str,
+        weight: f64,
+        provider: Box<dyn SharedCorrelator>,
+    ) -> Arc<RegisteredDataset> {
         Arc::new(RegisteredDataset::with_provider(
-            0,
-            "tiny",
+            id,
+            name,
             tiny_dataset(),
             ServeScheme::Sequential,
+            weight,
             provider,
         ))
     }
@@ -423,7 +649,7 @@ mod tests {
         let log = Mutex::new(Vec::new());
         let (r1, rx1) = request(&ds, vec![(0, 1), (0, 2)]);
         let (r2, rx2) = request(&ds, vec![(1, 0), (1, 2)]);
-        let report = run_su_job(7, &[r1, r2], &log);
+        let report = run_su_job(7, 0, &[r1, r2], &log);
 
         assert_eq!(report.job_id, 7);
         assert_eq!(report.coalesced_requests, 2);
@@ -455,12 +681,12 @@ mod tests {
         let log = Mutex::new(Vec::new());
 
         let (r1, rx1) = request(&ds, vec![(0, 1), (0, 2)]);
-        let _ = run_su_job(0, &[r1], &log);
+        let _ = run_su_job(0, 0, &[r1], &log);
         assert_eq!(rx1.recv().unwrap().len(), 2);
 
         // Second job re-requests a cached pair plus a new one.
         let (r2, rx2) = request(&ds, vec![(0, 1), (1, 2)]);
-        let report = run_su_job(1, &[r2], &log);
+        let report = run_su_job(1, 0, &[r2], &log);
         assert_eq!(report.computed_pairs, 1, "only the new pair computed");
         assert_eq!(rx2.recv().unwrap(), vec![1.0, 1002.0]);
         assert_eq!(counts.pairs_computed.load(Ordering::SeqCst), 3);
@@ -498,7 +724,7 @@ mod tests {
         }));
         let log = Mutex::new(Vec::new());
         let (r, rx) = request(&ds, vec![(0, 1), (0, 2)]);
-        let report = run_su_job(0, &[r], &log);
+        let report = run_su_job(0, 0, &[r], &log);
         assert_eq!(rx.recv().unwrap().len(), 2);
         assert_eq!(report.plans.len(), 1);
         assert_eq!(report.plans[0].strategy, Strategy::Vp);
@@ -508,7 +734,7 @@ mod tests {
         // A fully-cached follow-up job never calls the provider: no
         // stale decisions leak into its report.
         let (r2, rx2) = request(&ds, vec![(0, 1)]);
-        let report2 = run_su_job(1, &[r2], &log);
+        let report2 = run_su_job(1, 0, &[r2], &log);
         assert_eq!(rx2.recv().unwrap(), vec![1.0]);
         assert!(report2.plans.is_empty());
     }
@@ -560,16 +786,15 @@ mod tests {
 
         // The dataset slot was freed: the scheduler still serves other
         // work (a healthy dataset) and can be dropped without hanging.
-        let good = Arc::new(RegisteredDataset::with_provider(
+        let good = registered_as(
             1,
             "good",
-            tiny_dataset(),
-            ServeScheme::Sequential,
+            1.0,
             Box::new(CountingProvider {
                 pairs_computed: AtomicUsize::new(0),
                 batches: AtomicUsize::new(0),
             }),
-        ));
+        );
         let (r2, rx2) = request(&good, vec![(0, 2)]);
         sched.submit(r2);
         assert_eq!(rx2.recv().unwrap(), vec![2.0]);
@@ -589,5 +814,108 @@ mod tests {
         sched.submit(r);
         drop(sched); // Drop waits for the in-flight job
         assert_eq!(rx.recv().unwrap(), vec![2.0]);
+    }
+
+    /// Provider that sleeps per batch so requests pile up behind an
+    /// in-flight job — the contention DRR resolves.
+    struct SlowProvider(std::time::Duration);
+    impl SharedCorrelator for SlowProvider {
+        fn compute_batch(&self, pairs: &[(FeatureId, FeatureId)]) -> Vec<f64> {
+            std::thread::sleep(self.0);
+            pairs.iter().map(|&(a, b)| (a * 1000 + b) as f64).collect()
+        }
+    }
+
+    #[test]
+    fn drr_dispatches_low_weight_tenant_last_under_contention() {
+        use std::time::Duration;
+        let hold = Duration::from_millis(250);
+        let sched = MissScheduler::new(1);
+
+        // A blocker tenant occupies the only admission slot...
+        let blocker = registered_as(9, "blocker", 1.0, Box::new(SlowProvider(hold)));
+        let (rb, rxb) = request(&blocker, vec![(0, 1)]);
+        sched.submit(rb);
+        std::thread::sleep(Duration::from_millis(60));
+
+        // ...while three tenants with distinct weights queue up. Same
+        // 2-pair demand each; only the weight differs.
+        let a = registered_as(1, "a", 1.0, Box::new(SlowProvider(Duration::from_millis(5))));
+        let b = registered_as(2, "b", 1.0, Box::new(SlowProvider(Duration::from_millis(5))));
+        let c = registered_as(3, "c", 0.01, Box::new(SlowProvider(Duration::from_millis(5))));
+        let (ra, rxa) = request(&a, vec![(0, 1), (0, 2)]);
+        let (rb2, rxb2) = request(&b, vec![(0, 1), (0, 2)]);
+        let (rc, rxc) = request(&c, vec![(0, 1), (0, 2)]);
+        sched.submit(ra);
+        sched.submit(rb2);
+        sched.submit(rc);
+
+        for rx in [rxb, rxa, rxb2, rxc] {
+            assert!(rx.recv().is_ok());
+        }
+        let order: Vec<DatasetId> = sched
+            .job_log()
+            .iter()
+            .filter(|j| j.dataset != 9)
+            .map(|j| j.dataset)
+            .collect();
+        assert_eq!(
+            order,
+            vec![1, 2, 3],
+            "equal-weight tenants go in arrival ring order, the 0.01-weight tenant last"
+        );
+        // Fairness inputs land in the report and aggregate per tenant.
+        let stats = sched.tenant_stats();
+        let sc = stats.iter().find(|t| t.dataset == 3).unwrap();
+        assert_eq!(sc.jobs, 1);
+        assert_eq!(sc.drr_cost_pairs, 2);
+        assert!((sc.weight - 0.01).abs() < 1e-12);
+        assert!(sc.max_queue_secs >= sc.mean_queue_secs());
+    }
+
+    #[test]
+    fn lone_tenant_with_tiny_weight_is_served_immediately() {
+        // Work conservation: no competition, so the virtual-time jump
+        // must cover the deficit gap without real delay (and without
+        // millions of scheduler spins).
+        let sched = MissScheduler::new(2);
+        let ds = registered_as(0, "meek", 1e-6, Box::new(CountingProvider {
+            pairs_computed: AtomicUsize::new(0),
+            batches: AtomicUsize::new(0),
+        }));
+        let (r, rx) = request(&ds, vec![(0, 1), (0, 2), (1, 2)]);
+        sched.submit(r);
+        assert_eq!(rx.recv().unwrap(), vec![1.0, 2.0, 1002.0]);
+        let log = sched.job_log();
+        assert_eq!(log.len(), 1);
+        assert_eq!(log[0].drr_cost_pairs, 3);
+        assert!((log[0].tenant_weight - 1e-6).abs() < 1e-18);
+    }
+
+    #[test]
+    fn drr_still_coalesces_same_version_misses() {
+        use std::time::Duration;
+        let hold = Duration::from_millis(200);
+        let sched = MissScheduler::new(1);
+        let ds = registered_as(0, "tiny", 1.0, Box::new(SlowProvider(hold)));
+
+        // First request occupies the dataset; two more arrive while it
+        // runs and must coalesce into exactly one follow-up job.
+        let (r1, rx1) = request(&ds, vec![(0, 1)]);
+        sched.submit(r1);
+        std::thread::sleep(Duration::from_millis(50));
+        let (r2, rx2) = request(&ds, vec![(0, 2), (1, 2)]);
+        let (r3, rx3) = request(&ds, vec![(1, 2), (2, 0)]);
+        sched.submit(r2);
+        sched.submit(r3);
+
+        assert_eq!(rx1.recv().unwrap(), vec![1.0]);
+        assert_eq!(rx2.recv().unwrap(), vec![2.0, 1002.0]);
+        assert_eq!(rx3.recv().unwrap(), vec![1002.0, 2.0]);
+        let log = sched.job_log();
+        assert_eq!(log.len(), 2, "trailing misses coalesced into one job");
+        assert_eq!(log[1].coalesced_requests, 2);
+        // Charged for the distinct union {(0,2),(1,2)}, not 4 raw pairs.
+        assert_eq!(log[1].drr_cost_pairs, 2);
     }
 }

@@ -325,6 +325,7 @@ fn prop_incremental_append_bit_identical() {
             let service = DicfsService::new(ServiceConfig {
                 cluster: ClusterConfig::with_nodes(3),
                 max_inflight_jobs: 2,
+                ..ServiceConfig::default()
             });
             let id = service.register_discrete(
                 &format!("{family}-{k}"),
@@ -521,6 +522,161 @@ fn prop_oversize_preserves_column_content() {
         assert_eq!(big.num_rows(), target);
         for r in 0..big.num_rows() {
             assert_eq!(big.class[r], ds.class[r % rows]);
+        }
+    }
+}
+
+#[test]
+fn prop_eviction_bit_identical() {
+    // The bounded-memory axis of the exactness claim: a budgeted
+    // service — any budget, down to a single entry and to zero bytes —
+    // selects the same features with the same merit bits as an
+    // unbounded one, across serve schemes and engine pools, while its
+    // resident bytes never exceed the budget and the cache's recompute
+    // accounting balances (`fresh_publishes == len + evicted_pairs`,
+    // and every fresh publish was a pair some query computed).
+    use dicfs::cfs::best_first::CfsConfig;
+    use dicfs::correlation::cache::ENTRY_OVERHEAD_BYTES;
+    use dicfs::discretize::discretize_dataset;
+    use dicfs::runtime::{NativeEngine, SuEngine, TiledEngine};
+    use dicfs::serve::{
+        worst_case_cache_bytes, CacheBudget, DicfsService, QuerySpec, RegisterOptions,
+        ServeScheme, ServiceConfig,
+    };
+    use dicfs::sparklet::ClusterConfig;
+
+    let mut rng = XorShift64Star::new(0xE71C_BAD5);
+    let schemes = [
+        ServeScheme::Horizontal,
+        ServeScheme::Vertical,
+        ServeScheme::Auto,
+        ServeScheme::Sequential,
+    ];
+    let pools: [fn() -> Vec<Arc<dyn SuEngine>>; 2] = [
+        || vec![Arc::new(NativeEngine)],
+        || vec![Arc::new(NativeEngine), Arc::new(TiledEngine::new())],
+    ];
+    let families = ["higgs", "kddcup99", "epsilon"];
+    let cfs_mix = [
+        CfsConfig::default(),
+        CfsConfig {
+            max_fails: 3,
+            ..CfsConfig::default()
+        },
+        CfsConfig {
+            locally_predictive: false,
+            ..CfsConfig::default()
+        },
+    ];
+
+    for (si, &scheme) in schemes.iter().enumerate() {
+        for (pi, pool) in pools.iter().enumerate() {
+            let family = families[(si + pi) % families.len()];
+            let rows = 240 + rng.next_below(160) as usize;
+            let raw = dicfs::data::synth::by_name(
+                family,
+                &dicfs::data::synth::SynthConfig {
+                    rows,
+                    seed: rng.next_u64(),
+                    features: Some(6),
+                },
+            );
+            let dd = Arc::new(discretize_dataset(&raw).unwrap());
+            let worst = worst_case_cache_bytes(&dd);
+
+            // Reference: same scheme/pool, unbounded cache.
+            let reference = |budget: CacheBudget| {
+                let svc = DicfsService::with_engine_pool(
+                    ServiceConfig {
+                        cluster: ClusterConfig::with_nodes(3),
+                        max_inflight_jobs: 2,
+                        ..ServiceConfig::default()
+                    },
+                    pool(),
+                );
+                let id = svc
+                    .try_register_discrete(
+                        family,
+                        Arc::clone(&dd),
+                        scheme,
+                        RegisterOptions {
+                            partitions: None,
+                            budget,
+                            weight: 1.0,
+                        },
+                    )
+                    .unwrap();
+                let reports: Vec<_> = cfs_mix
+                    .iter()
+                    .map(|&cfs| svc.query(&QuerySpec { dataset: id, cfs }))
+                    .collect();
+                (svc, id, reports)
+            };
+            let (_ref_svc, _, unbounded) = reference(CacheBudget::Unbounded);
+
+            // Budgets: pathological zero, ~one entry, a quarter of the
+            // worst case, and a random point in (0, worst).
+            let budgets = [
+                0usize,
+                ENTRY_OVERHEAD_BYTES + 16 * 16 * 8,
+                worst / 4,
+                1 + rng.next_below(worst as u64) as usize,
+            ];
+            for &budget in &budgets {
+                let (svc, id, bounded) = reference(CacheBudget::Bytes(budget));
+                for (u, b) in unbounded.iter().zip(&bounded) {
+                    assert_eq!(
+                        b.result.selected, u.result.selected,
+                        "{scheme:?} pool{pi} budget={budget}: subset diverged"
+                    );
+                    assert_eq!(
+                        b.result.merit.to_bits(),
+                        u.result.merit.to_bits(),
+                        "{scheme:?} pool{pi} budget={budget}: merit not bit-identical"
+                    );
+                    // Identical trajectory: the searches requested the
+                    // same number of pairs; the budget only changes how
+                    // many were recomputed rather than served as hits.
+                    assert_eq!(b.cache.requested, u.cache.requested);
+                }
+
+                let reg = svc.dataset(id).unwrap();
+                let cache = reg.cache();
+                assert_eq!(cache.budget(), Some(budget));
+                assert!(
+                    cache.resident_bytes() <= budget,
+                    "{scheme:?} budget={budget}: resident {} over budget",
+                    cache.resident_bytes()
+                );
+                assert!(
+                    cache.peak_resident_bytes() <= budget,
+                    "{scheme:?} budget={budget}: peak {} over budget",
+                    cache.peak_resident_bytes()
+                );
+                // Recompute accounting balances exactly: every fresh
+                // publish is either still resident or was evicted, and
+                // the queries' computed counters funded every fresh
+                // publish (queries ran one at a time, so no publish was
+                // a concurrent overwrite).
+                assert_eq!(
+                    cache.fresh_publishes(),
+                    cache.len() + cache.evicted_pairs(),
+                    "{scheme:?} budget={budget}: publish/evict ledger unbalanced"
+                );
+                let computed: usize = bounded.iter().map(|r| r.cache.computed).sum();
+                assert_eq!(
+                    computed,
+                    cache.fresh_publishes(),
+                    "{scheme:?} budget={budget}: computed pairs != fresh publishes"
+                );
+                // A budget below the working set must actually evict.
+                if budget < worst / 8 {
+                    assert!(
+                        cache.evicted_pairs() > 0,
+                        "{scheme:?} budget={budget}: tiny budget never evicted"
+                    );
+                }
+            }
         }
     }
 }

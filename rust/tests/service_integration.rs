@@ -29,6 +29,7 @@ fn service(nodes: usize, max_inflight: usize) -> DicfsService {
     DicfsService::new(ServiceConfig {
         cluster: ClusterConfig::with_nodes(nodes),
         max_inflight_jobs: max_inflight,
+        ..ServiceConfig::default()
     })
 }
 
