@@ -1,0 +1,304 @@
+//! Ablation for sketch-then-verify pruning (DESIGN.md §16): exact SU
+//! cells scanned with `--prune auto` vs the exact baseline (`off`).
+//!
+//! Workload: the regime the optimization targets — a handful of
+//! genuinely relevant features over a mass of hopeless high-cardinality
+//! noise. Six exact class copies pin the capacity-5 queue cut at merit
+//! 1.0 through every expansion, while each noise column's sound SU
+//! upper bound (`≤ 2·H(C)/(H(X)+H(C))` with a skewed binary class and
+//! arity-64 noise ≈ 0.08) stays below the prune margin `√(k²+1) − k`
+//! down to the deepest head the stop rule reaches (k = 5 → 0.099).
+//! Every noise candidate is therefore pruned at every depth, so the
+//! exact-pair count collapses from ~16·m to a constant — the selection
+//! itself stays bit-identical (asserted here and proptest-enforced).
+//!
+//! Asserted acceptance bars (the ISSUE's):
+//! * **Equal selections**: auto ≡ off — same subset, bit-identical
+//!   merit — on every shape, sequential and hp.
+//! * **Exact-cell drop**: on the wide and ultrawide shapes, exact SU
+//!   cells (`correlations_computed × rows`) drop ≥ 5× (≥ 10× at
+//!   `DICFS_BENCH_SCALE ≥ 1`).
+//! * **Wall-clock**: at scale ≥ 1, the auto run is no slower than the
+//!   baseline (small scales are too noisy to gate).
+//! * The `ultrawide_like` synth preset rides along equality-gated: its
+//!   reduction is reported but not floored (pruning may decline).
+//!
+//! Output: table + `bench_out/ablation_prune.csv` +
+//! `bench_out/BENCH_prune.json` (sampled_cells, exact_cells,
+//! pruned_candidates, per-shape reduction).
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use dicfs::cfs::best_first::{CfsConfig, PruneMode};
+use dicfs::cfs::SequentialCfs;
+use dicfs::core::SelectionResult;
+use dicfs::data::columnar::DiscreteDataset;
+use dicfs::data::synth::{ultrawide_like, SynthConfig};
+use dicfs::dicfs::{DiCfs, DiCfsConfig, Partitioning};
+use dicfs::discretize::discretize_dataset;
+use dicfs::harness::{bench_scale, report};
+use dicfs::util::chart::table;
+use dicfs::util::XorShift64Star;
+
+/// Six exact class copies + uniform arity-64 noise over a 4%-minority
+/// binary class (see the module docs for why these constants make the
+/// prune margin provable, not incidental).
+fn structured(name: &str, rows: usize, features: usize, seed: u64) -> Arc<DiscreteDataset> {
+    const COPIES: usize = 6;
+    const NOISE_ARITY: u16 = 64;
+    let mut rng = XorShift64Star::new(seed);
+    let class: Vec<u8> = (0..rows).map(|_| u8::from(rng.next_below(25) == 0)).collect();
+    let mut cols: Vec<Vec<u8>> = Vec::with_capacity(features);
+    let mut arities: Vec<u16> = Vec::with_capacity(features);
+    for f in 0..features {
+        if f < COPIES {
+            cols.push(class.clone());
+            arities.push(2);
+        } else {
+            cols.push((0..rows).map(|_| rng.next_below(NOISE_ARITY as u64) as u8).collect());
+            arities.push(NOISE_ARITY);
+        }
+    }
+    Arc::new(DiscreteDataset::new(name.to_string(), cols, arities, class, 2).unwrap())
+}
+
+struct Run {
+    result: SelectionResult,
+    secs: f64,
+}
+
+fn seq_run(dd: &Arc<DiscreteDataset>, mode: PruneMode) -> Run {
+    let cfg = CfsConfig {
+        locally_predictive: false,
+        prune: mode,
+        ..CfsConfig::default()
+    };
+    let t = Instant::now();
+    let result = SequentialCfs::new(cfg).select_discrete(dd);
+    Run {
+        result,
+        secs: t.elapsed().as_secs_f64(),
+    }
+}
+
+fn hp_run(dd: &Arc<DiscreteDataset>, mode: PruneMode) -> Run {
+    let mut cfg = DiCfsConfig::for_scheme(Partitioning::Horizontal, 3);
+    cfg.cfs.locally_predictive = false;
+    cfg.cfs.prune = mode;
+    let t = Instant::now();
+    let result = DiCfs::native(cfg).select(dd).result;
+    Run {
+        result,
+        secs: t.elapsed().as_secs_f64(),
+    }
+}
+
+struct Row {
+    shape: &'static str,
+    rows: usize,
+    features: usize,
+    off_exact_cells: u64,
+    auto_exact_cells: u64,
+    sampled_cells: u64,
+    pruned_candidates: usize,
+    reduction: f64,
+    off_secs: f64,
+    auto_secs: f64,
+    gated: bool,
+}
+
+fn measure(
+    shape: &'static str,
+    dd: &Arc<DiscreteDataset>,
+    gated: bool,
+    run: impl Fn(&Arc<DiscreteDataset>, PruneMode) -> Run,
+) -> Row {
+    let off = run(dd, PruneMode::Off);
+    let auto = run(dd, PruneMode::Auto);
+    assert_eq!(
+        auto.result.selected, off.result.selected,
+        "{shape}: pruned selection diverged from exact"
+    );
+    assert_eq!(
+        auto.result.merit.to_bits(),
+        off.result.merit.to_bits(),
+        "{shape}: merit not bit-identical"
+    );
+    assert_eq!(off.result.pruned_candidates, 0, "{shape}: off pruned");
+    assert_eq!(off.result.sampled_cells, 0, "{shape}: off sketched");
+    let n = dd.num_rows() as u64;
+    let off_exact_cells = off.result.correlations_computed as u64 * n;
+    let auto_exact_cells = auto.result.correlations_computed as u64 * n;
+    assert!(
+        auto_exact_cells <= off_exact_cells,
+        "{shape}: pruning increased exact work ({auto_exact_cells} > {off_exact_cells})"
+    );
+    Row {
+        shape,
+        rows: dd.num_rows(),
+        features: dd.num_features(),
+        off_exact_cells,
+        auto_exact_cells,
+        sampled_cells: auto.result.sampled_cells,
+        pruned_candidates: auto.result.pruned_candidates,
+        reduction: off_exact_cells as f64 / auto_exact_cells.max(1) as f64,
+        off_secs: off.secs,
+        auto_secs: auto.secs,
+        gated,
+    }
+}
+
+fn main() {
+    let scale = bench_scale();
+    println!("== Ablation: sketch-then-verify pruning vs exact baseline (scale {scale}) ==\n");
+
+    let rows = |base: usize| ((base as f64 * scale) as usize).max(400);
+    let mut out_rows: Vec<Row> = Vec::new();
+
+    // Headline shapes (cell-reduction gated): sequential search.
+    let wide = structured("wide", rows(4_000), 400, 11);
+    out_rows.push(measure("wide-seq", &wide, true, seq_run));
+    let ultra = structured("ultrawide", rows(1_200), 2_000, 13);
+    out_rows.push(measure("ultrawide-seq", &ultra, true, seq_run));
+    // The hp lowering prunes identically (bit-identical sketch tables).
+    out_rows.push(measure("wide-hp", &wide, true, hp_run));
+
+    // The ultrawide synth preset rides along equality-gated only: its
+    // class structure is the generator's, so pruning may win less (or
+    // decline); the bar is exactness and no extra exact work.
+    let preset_raw = ultrawide_like(&SynthConfig {
+        rows: ((120.0 * scale) as usize).max(60),
+        seed: 17,
+        features: None,
+    });
+    let preset = Arc::new(discretize_dataset(&preset_raw).unwrap());
+    out_rows.push(measure("ultrawide-preset-seq", &preset, false, seq_run));
+
+    let floor = if scale >= 1.0 { 10.0 } else { 5.0 };
+    for r in &out_rows {
+        if !r.gated {
+            continue;
+        }
+        assert!(
+            r.reduction >= floor,
+            "{}: exact cells dropped only {:.1}x (< {floor}x): {} -> {}",
+            r.shape,
+            r.reduction,
+            r.off_exact_cells,
+            r.auto_exact_cells
+        );
+        assert!(r.pruned_candidates > 0, "{}: nothing pruned", r.shape);
+        assert!(r.sampled_cells > 0, "{}: nothing sketched", r.shape);
+        if scale >= 1.0 {
+            assert!(
+                r.auto_secs <= r.off_secs * 1.10,
+                "{}: pruned run slower ({:.3}s vs {:.3}s)",
+                r.shape,
+                r.auto_secs,
+                r.off_secs
+            );
+        }
+    }
+
+    let trows: Vec<Vec<String>> = out_rows
+        .iter()
+        .map(|r| {
+            vec![
+                r.shape.to_string(),
+                format!("{}x{}", r.rows, r.features),
+                r.off_exact_cells.to_string(),
+                r.auto_exact_cells.to_string(),
+                r.sampled_cells.to_string(),
+                r.pruned_candidates.to_string(),
+                format!("{:.1}x", r.reduction),
+                format!("{:.3}/{:.3}", r.auto_secs, r.off_secs),
+            ]
+        })
+        .collect();
+    println!(
+        "{}",
+        table(
+            &[
+                "shape",
+                "rows x features",
+                "exact cells (off)",
+                "exact cells (auto)",
+                "sampled cells",
+                "pruned",
+                "reduction",
+                "secs (auto/off)",
+            ],
+            &trows
+        )
+    );
+
+    let csv: Vec<Vec<String>> = out_rows
+        .iter()
+        .map(|r| {
+            vec![
+                r.shape.to_string(),
+                r.rows.to_string(),
+                r.features.to_string(),
+                r.off_exact_cells.to_string(),
+                r.auto_exact_cells.to_string(),
+                r.sampled_cells.to_string(),
+                r.pruned_candidates.to_string(),
+                format!("{:.4}", r.reduction),
+                format!("{:.6}", r.off_secs),
+                format!("{:.6}", r.auto_secs),
+            ]
+        })
+        .collect();
+    let path = report::write_csv(
+        "ablation_prune.csv",
+        &[
+            "shape",
+            "rows",
+            "features",
+            "off_exact_cells",
+            "auto_exact_cells",
+            "sampled_cells",
+            "pruned_candidates",
+            "reduction",
+            "off_secs",
+            "auto_secs",
+        ],
+        &csv,
+    );
+
+    // Machine-readable perf trajectory (one JSON per bench run).
+    let shapes_json: Vec<String> = out_rows
+        .iter()
+        .map(|r| {
+            format!(
+                concat!(
+                    "    {{\"shape\": \"{}\", \"rows\": {}, \"features\": {}, ",
+                    "\"exact_cells_off\": {}, \"exact_cells_auto\": {}, ",
+                    "\"sampled_cells\": {}, \"pruned_candidates\": {}, ",
+                    "\"reduction\": {:.4}, \"off_secs\": {:.6}, \"auto_secs\": {:.6}}}"
+                ),
+                r.shape,
+                r.rows,
+                r.features,
+                r.off_exact_cells,
+                r.auto_exact_cells,
+                r.sampled_cells,
+                r.pruned_candidates,
+                r.reduction,
+                r.off_secs,
+                r.auto_secs
+            )
+        })
+        .collect();
+    let json = format!(
+        "{{\n  \"bench\": \"prune\",\n  \"shapes\": [\n{}\n  ]\n}}\n",
+        shapes_json.join(",\n")
+    );
+    let json_path = report::out_dir().join("BENCH_prune.json");
+    std::fs::write(&json_path, json).expect("write BENCH_prune.json");
+
+    println!("ablation_prune: PASS (equal selections, >= {floor}x fewer exact SU cells)");
+    println!("  data: {}", path.display());
+    println!("  perf trajectory: {}\n", json_path.display());
+}

@@ -12,13 +12,14 @@
 //! * the ordering is fully deterministic (merit desc, then lexicographic
 //!   feature list), so sequential/hp/vp runs traverse identical states.
 
-use std::collections::HashSet;
+use std::collections::{HashMap, HashSet};
 
 use crate::cfs::locally_predictive::add_locally_predictive;
 use crate::cfs::merit::merit_from_sums;
 use crate::cfs::subset::SearchState;
 use crate::cfs::Correlator;
-use crate::core::{FeatureId, SelectionResult, CLASS_ID};
+use crate::core::{pair_key, FeatureId, SelectionResult, CLASS_ID};
+use crate::correlation::sampled::SuInterval;
 use crate::correlation::{CorrelationCache, SuCache};
 
 /// A search-restart seed: feature subsets worth re-evaluating first —
@@ -49,6 +50,44 @@ impl WarmStart {
     }
 }
 
+/// Whether the search may use sampled SU **upper bounds** to skip exact
+/// evaluation of provably-losing expansion candidates (DESIGN.md §16).
+///
+/// The selection is bit-identical either way — pruning only changes how
+/// much exact correlation work is performed. `correlations_computed`
+/// (and the new `sampled_cells`/`pruned_candidates` counters) are the
+/// only observable differences.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum PruneMode {
+    /// Prune when the correlator offers sound bounds (the default).
+    /// Planner-backed correlators additionally decline sketches that
+    /// are not predicted to pay for themselves, which latches the
+    /// search back to plain exact expansion.
+    #[default]
+    Auto,
+    /// Never prune: every expansion candidate is evaluated exactly.
+    Off,
+}
+
+impl PruneMode {
+    /// Stable CLI label (`--prune auto|off`).
+    pub fn label(&self) -> &'static str {
+        match self {
+            PruneMode::Auto => "auto",
+            PruneMode::Off => "off",
+        }
+    }
+
+    /// Parse a CLI label (the inverse of [`Self::label`]).
+    pub fn parse(s: &str) -> Option<Self> {
+        match s {
+            "auto" => Some(PruneMode::Auto),
+            "off" => Some(PruneMode::Off),
+            _ => None,
+        }
+    }
+}
+
 /// Search configuration (defaults = the paper's experimental setup).
 #[derive(Debug, Clone, Copy)]
 pub struct CfsConfig {
@@ -58,6 +97,8 @@ pub struct CfsConfig {
     pub queue_capacity: usize,
     /// Run the locally-predictive post-step (paper experiments: true).
     pub locally_predictive: bool,
+    /// Sketch-then-verify pruning mode (DESIGN.md §16).
+    pub prune: PruneMode,
 }
 
 impl Default for CfsConfig {
@@ -66,6 +107,44 @@ impl Default for CfsConfig {
             max_fails: 5,
             queue_capacity: 5,
             locally_predictive: true,
+            prune: PruneMode::Auto,
+        }
+    }
+}
+
+/// Minimum candidate surplus over the queue capacity before the pruned
+/// expansion engages: below this, the bookkeeping costs more than the
+/// few exact evaluations it could save.
+const PRUNE_MIN_EXCESS: usize = 3;
+
+/// Run-local pruning state threaded through one search: the bounds memo
+/// (sampled intervals never enter the exact cache, so without this a
+/// pruned-at-root pair would be re-sketched at every later expansion),
+/// the decline latch, and the counters surfaced via [`SelectionResult`].
+struct PruneState {
+    /// `config.prune == Auto`.
+    enabled: bool,
+    /// Set when the correlator declines a bounds request. Sketching is
+    /// pointless after that (the backend has no sketch path, or its
+    /// planner priced sketches out for this shape), so the rest of the
+    /// search uses plain exact expansion.
+    declined: bool,
+    /// Sound SU intervals per canonical pair, valid for the whole run.
+    memo: HashMap<(FeatureId, FeatureId), SuInterval>,
+    /// Candidates skipped without an exact evaluation.
+    pruned: usize,
+    /// Total sketch cells scanned by bounds requests.
+    sampled_cells: u64,
+}
+
+impl PruneState {
+    fn new(mode: PruneMode) -> Self {
+        Self {
+            enabled: mode == PruneMode::Auto,
+            declined: false,
+            memo: HashMap::new(),
+            pruned: 0,
+            sampled_cells: 0,
         }
     }
 }
@@ -88,8 +167,7 @@ impl BestFirstSearch {
     /// DiCFS-vp and RegCFS — they differ only in the `correlator`.
     pub fn run(&self, m: usize, correlator: &mut dyn Correlator) -> SelectionResult {
         let mut cache = CorrelationCache::new();
-        let result = self.run_with_cache(m, correlator, &mut cache);
-        result
+        self.run_with_cache(m, correlator, &mut cache)
     }
 
     /// [`Self::run`] with an external [`SuCache`] — an owned
@@ -123,6 +201,7 @@ impl BestFirstSearch {
     /// unchanged (or mildly shifted) optimum is confirmed after
     /// `max_fails` expansions instead of being rebuilt feature by
     /// feature.
+    #[must_use = "discarding the result also discards the warm-restart seed"]
     pub fn run_traced(
         &self,
         m: usize,
@@ -134,6 +213,7 @@ impl BestFirstSearch {
         visited.insert(vec![]);
         let mut fails = 0usize;
         let mut iterations = 0usize;
+        let mut prune = PruneState::new(self.config.prune);
         let seeds = warm
             .map(|w| seed_states(m, w, correlator, cache))
             .unwrap_or_default();
@@ -152,7 +232,16 @@ impl BestFirstSearch {
             let root = SearchState::empty();
             iterations += 1;
             let candidates: Vec<FeatureId> = (0..m).collect();
-            let singletons = expand_batch(&root, &candidates, correlator, cache, &mut visited);
+            let singletons = expand_batch_pruned(
+                &root,
+                &candidates,
+                correlator,
+                cache,
+                &mut visited,
+                &queue,
+                self.config.queue_capacity.max(1),
+                &mut prune,
+            );
             queue.extend(singletons);
             queue.sort_by(|a, b| a.cmp_priority(b));
             queue.truncate(self.config.queue_capacity.max(1));
@@ -172,8 +261,16 @@ impl BestFirstSearch {
             // one batched correlation request.
             let candidates: Vec<FeatureId> =
                 (0..m).filter(|&f| !head.contains(f)).collect();
-            let new_states =
-                expand_batch(&head, &candidates, correlator, cache, &mut visited);
+            let new_states = expand_batch_pruned(
+                &head,
+                &candidates,
+                correlator,
+                cache,
+                &mut visited,
+                &queue,
+                self.config.queue_capacity,
+                &mut prune,
+            );
 
             // Enqueue (line 9) into the bounded priority queue.
             for s in new_states {
@@ -220,6 +317,8 @@ impl BestFirstSearch {
                 merit: best.merit,
                 iterations,
                 correlations_computed: cache.stats().computed,
+                pruned_candidates: prune.pruned,
+                sampled_cells: prune.sampled_cells,
                 locally_predictive_added: locally_added,
             },
             warm_out,
@@ -322,6 +421,200 @@ fn expand_batch(
     out
 }
 
+/// [`expand_batch`] with sketch-then-verify pruning (DESIGN.md §16).
+///
+/// Exactness argument (mirroring §12's delta-merge argument): children
+/// influence the search *only* through the bounded queue, which the
+/// caller truncates once per expansion to the top `capacity` states of
+/// (post-pop queue ∪ children) under the total order `cmp_priority`.
+/// The threshold computed here is the `capacity`-th best merit among a
+/// **subset** of that union — the post-pop queue plus the children
+/// already evaluated exactly — so the union's `capacity`-th best can
+/// only be higher. A candidate is skipped only when its *optimistic*
+/// merit is strictly below the threshold. The optimistic merit mirrors
+/// [`SearchState::expanded`]'s accumulation step for step (one add for
+/// rcf, an in-order sum for rff, the same [`merit_from_sums`] finish)
+/// with element-wise dominating operands: rcf replaced by a sound upper
+/// bound (cached exact value, sampled interval high end, or the trivial
+/// 1.0) and each uncached rff replaced by 0 (SU is nonnegative). IEEE
+/// add, sqrt and divide are monotone and the denominator is ≥ 1 for
+/// `k ≥ 1`, so `upper ≥ exact merit` holds *in floating point*, not
+/// just in ℝ — a pruned child's exact state would have been truncated
+/// away by at least `capacity` strictly better states. Pruned children
+/// are marked visited exactly as the exact run would have marked them,
+/// so the visited set, queue trajectory and final selection stay
+/// bit-identical; only `correlations_computed` (and the new counters)
+/// differ.
+#[allow(clippy::too_many_arguments)]
+fn expand_batch_pruned(
+    head: &SearchState,
+    candidates: &[FeatureId],
+    correlator: &mut dyn Correlator,
+    cache: &mut dyn SuCache,
+    visited: &mut HashSet<Vec<FeatureId>>,
+    queue_rest: &[SearchState],
+    capacity: usize,
+    prune: &mut PruneState,
+) -> Vec<SearchState> {
+    if !prune.enabled
+        || prune.declined
+        || capacity == 0
+        || candidates.len() < capacity + PRUNE_MIN_EXCESS
+    {
+        return expand_batch(head, candidates, correlator, cache, visited);
+    }
+
+    // Split candidates: "free" ones have every needed pair cached (their
+    // exact evaluation computes nothing new); the rest are prune targets.
+    struct Pending {
+        c: FeatureId,
+        rcf: Option<f64>,
+        /// In-order sum of the cached rff values; uncached members
+        /// contribute 0 (adding 0.0 is exact, so this equals the sum
+        /// `SearchState::expanded` would form with those values zeroed).
+        rff_lo_sum: f64,
+    }
+    let mut free: Vec<FeatureId> = Vec::new();
+    let mut pending: Vec<Pending> = Vec::new();
+    for &c in candidates {
+        let rcf = cache.probe(c, CLASS_ID);
+        let mut all_cached = rcf.is_some();
+        let mut rff_lo_sum = 0.0;
+        for &g in &head.features {
+            match cache.probe(c, g) {
+                Some(v) => rff_lo_sum += v,
+                None => all_cached = false,
+            }
+        }
+        if all_cached {
+            free.push(c);
+        } else {
+            pending.push(Pending { c, rcf, rff_lo_sum });
+        }
+    }
+    if pending.is_empty() {
+        // Everything is cached: the exact expansion is already free.
+        return expand_batch(head, candidates, correlator, cache, visited);
+    }
+
+    // Sampled bounds for pending candidates whose class pair is not
+    // cached, memoized for the whole run (intervals never enter the
+    // exact cache, so without the memo each later expansion would
+    // re-sketch the same pairs).
+    let need: Vec<(FeatureId, FeatureId)> = pending
+        .iter()
+        .filter(|p| p.rcf.is_none())
+        .map(|p| pair_key(p.c, CLASS_ID))
+        .filter(|k| !prune.memo.contains_key(k))
+        .collect();
+    if !need.is_empty() {
+        match correlator.compute_bounds(&need) {
+            Some(b) if b.intervals.len() == need.len() => {
+                prune.sampled_cells += b.sampled_cells;
+                for (k, iv) in need.iter().zip(b.intervals.iter()) {
+                    prune.memo.insert(*k, *iv);
+                }
+            }
+            _ => {
+                // No sketch path (or the planner priced it out): latch
+                // and revert to plain exact expansion for the rest of
+                // the run.
+                prune.declined = true;
+                return expand_batch(head, candidates, correlator, cache, visited);
+            }
+        }
+    }
+
+    // Optimistic merit per pending candidate (see the doc comment for
+    // why this dominates the exact child merit in floating point).
+    let k1 = head.features.len() + 1;
+    let uppers: Vec<f64> = pending
+        .iter()
+        .map(|p| {
+            let rcf_hi = match p.rcf {
+                Some(v) => v,
+                None => prune
+                    .memo
+                    .get(&pair_key(p.c, CLASS_ID))
+                    .map(|iv| iv.hi)
+                    .unwrap_or(1.0),
+            };
+            merit_from_sums(k1, head.sum_rcf + rcf_hi, head.sum_rff + p.rff_lo_sum)
+        })
+        .collect();
+
+    // Wave 1: evaluate the free set (cache hits only); if the threshold
+    // pool is still short of `capacity` — a cold root, mostly — add the
+    // most promising pending candidates so the queue cut is known.
+    // (On a warm re-query everything evaluated by the previous run is
+    // free, so this wave adds nothing and no new pairs are computed.)
+    let mut children = expand_batch(head, &free, correlator, cache, visited);
+    let mut evaluated: HashSet<FeatureId> = free.into_iter().collect();
+    if queue_rest.len() + children.len() < capacity {
+        let mut order: Vec<usize> = (0..pending.len()).collect();
+        order.sort_by(|&i, &j| {
+            uppers[j]
+                .partial_cmp(&uppers[i])
+                .unwrap_or(std::cmp::Ordering::Equal)
+                .then(pending[i].c.cmp(&pending[j].c))
+        });
+        let wave1: Vec<FeatureId> = order
+            .iter()
+            .take(capacity)
+            .map(|&i| pending[i].c)
+            .collect();
+        children.extend(expand_batch(head, &wave1, correlator, cache, visited));
+        evaluated.extend(wave1);
+    }
+
+    // Queue-cut threshold: the capacity-th best merit among the post-pop
+    // queue and the exactly-evaluated children — a lower bound on the
+    // capacity-th best of the full union the exact run truncates to
+    // (adding the remaining children can only raise it).
+    let mut pool: Vec<f64> = queue_rest
+        .iter()
+        .chain(children.iter())
+        .map(|s| s.merit)
+        .collect();
+    if pool.len() < capacity {
+        // Too few known states to bound the queue cut: nothing can be
+        // pruned soundly, evaluate the remainder exactly.
+        let rest: Vec<FeatureId> = pending
+            .iter()
+            .map(|p| p.c)
+            .filter(|c| !evaluated.contains(c))
+            .collect();
+        children.extend(expand_batch(head, &rest, correlator, cache, visited));
+        return children;
+    }
+    pool.sort_by(|a, b| b.partial_cmp(a).unwrap_or(std::cmp::Ordering::Equal));
+    let threshold = pool[capacity - 1];
+
+    // Wave 2: skip candidates whose optimistic merit is *strictly* below
+    // the threshold (ties must be evaluated — only a strict deficit
+    // proves the exact child loses the cut); evaluate the rest exactly.
+    let mut survivors: Vec<FeatureId> = Vec::new();
+    for (p, &upper) in pending.iter().zip(uppers.iter()) {
+        if evaluated.contains(&p.c) {
+            continue;
+        }
+        if upper < threshold {
+            // The exact run would evaluate this child and immediately
+            // truncate it away; mark it visited exactly as that run
+            // would have, and skip the exact work.
+            let mut feats = head.features.clone();
+            let pos = feats.partition_point(|&g| g < p.c);
+            feats.insert(pos, p.c);
+            visited.insert(feats);
+            prune.pruned += 1;
+        } else {
+            survivors.push(p.c);
+        }
+    }
+    children.extend(expand_batch(head, &survivors, correlator, cache, visited));
+    children
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -357,6 +650,41 @@ mod tests {
         fn compute(&mut self, pairs: &[(FeatureId, FeatureId)]) -> Vec<f64> {
             self.calls += 1;
             pairs.iter().map(|&(a, b)| self.su[&crate::core::pair_key(a, b)]).collect()
+        }
+    }
+
+    /// [`TableCorrelator`] that also answers bounds requests with a
+    /// ±`width` interval around the exact value (always sound here).
+    struct BoundsCorrelator {
+        inner: TableCorrelator,
+        width: f64,
+        bounds_calls: usize,
+    }
+
+    impl Correlator for BoundsCorrelator {
+        fn compute(&mut self, pairs: &[(FeatureId, FeatureId)]) -> Vec<f64> {
+            self.inner.compute(pairs)
+        }
+
+        fn compute_bounds(
+            &mut self,
+            pairs: &[(FeatureId, FeatureId)],
+        ) -> Option<crate::correlation::SuBounds> {
+            self.bounds_calls += 1;
+            let intervals = pairs
+                .iter()
+                .map(|&(a, b)| {
+                    let v = self.inner.su[&crate::core::pair_key(a, b)];
+                    SuInterval {
+                        lo: (v - self.width).max(0.0),
+                        hi: v + self.width,
+                    }
+                })
+                .collect();
+            Some(crate::correlation::SuBounds {
+                intervals,
+                sampled_cells: pairs.len() as u64 * 10,
+            })
         }
     }
 
@@ -553,6 +881,110 @@ mod tests {
         assert!((states[0].merit - 0.9 / 2f64.sqrt()).abs() < 1e-12);
         assert_eq!(states[2].features, vec![3]);
         assert!((states[2].merit - 0.2).abs() < 1e-12);
+    }
+
+    /// A 12-feature table with a clear relevance gradient: enough
+    /// candidates over the capacity-5 queue for the pruned expansion to
+    /// engage, enough hopeless features for it to actually prune.
+    fn gradient_table() -> TableCorrelator {
+        let rcf: Vec<f64> = (0..12).map(|i| (0.85 - 0.08 * i as f64).max(0.0)).collect();
+        TableCorrelator::new(12, &rcf, &[(0, 1, 0.9), (2, 3, 0.55)])
+    }
+
+    #[test]
+    fn pruned_search_is_bit_identical_and_cheaper() {
+        let exact_cfg = CfsConfig {
+            prune: PruneMode::Off,
+            ..cfg_no_lp()
+        };
+        let exact = BestFirstSearch::new(exact_cfg).run(
+            12,
+            &mut BoundsCorrelator {
+                inner: gradient_table(),
+                width: 0.02,
+                bounds_calls: 0,
+            },
+        );
+        let mut pruned_corr = BoundsCorrelator {
+            inner: gradient_table(),
+            width: 0.02,
+            bounds_calls: 0,
+        };
+        let pruned = BestFirstSearch::new(cfg_no_lp()).run(12, &mut pruned_corr);
+
+        // Everything the search decides on is bit-identical...
+        assert_eq!(pruned.selected, exact.selected);
+        assert_eq!(pruned.merit.to_bits(), exact.merit.to_bits());
+        assert_eq!(pruned.iterations, exact.iterations);
+        assert_eq!(
+            pruned.locally_predictive_added,
+            exact.locally_predictive_added
+        );
+        // ...but the pruned run did strictly less exact work.
+        assert!(pruned.pruned_candidates > 0, "nothing was pruned");
+        assert!(pruned.sampled_cells > 0, "no sketch was requested");
+        assert!(
+            pruned.correlations_computed < exact.correlations_computed,
+            "pruned computed {} vs exact {}",
+            pruned.correlations_computed,
+            exact.correlations_computed
+        );
+        assert!(pruned_corr.bounds_calls > 0);
+        assert_eq!(exact.pruned_candidates, 0);
+        assert_eq!(exact.sampled_cells, 0);
+    }
+
+    #[test]
+    fn prune_off_never_requests_bounds() {
+        let mut corr = BoundsCorrelator {
+            inner: gradient_table(),
+            width: 0.02,
+            bounds_calls: 0,
+        };
+        let cfg = CfsConfig {
+            prune: PruneMode::Off,
+            ..cfg_no_lp()
+        };
+        let _ = BestFirstSearch::new(cfg).run(12, &mut corr);
+        assert_eq!(corr.bounds_calls, 0);
+    }
+
+    #[test]
+    fn declined_bounds_latch_back_to_the_exact_search() {
+        // TableCorrelator has no sketch path: the first bounds request
+        // declines, the search latches to exact expansion, and the
+        // result (including call counts) matches PruneMode::Off exactly.
+        let mut auto_corr = gradient_table();
+        let auto = BestFirstSearch::new(cfg_no_lp()).run(12, &mut auto_corr);
+        let mut off_corr = gradient_table();
+        let off_cfg = CfsConfig {
+            prune: PruneMode::Off,
+            ..cfg_no_lp()
+        };
+        let off = BestFirstSearch::new(off_cfg).run(12, &mut off_corr);
+        assert_eq!(auto, off);
+        assert_eq!(auto_corr.calls, off_corr.calls);
+        assert_eq!(auto.pruned_candidates, 0);
+        assert_eq!(auto.sampled_cells, 0);
+    }
+
+    #[test]
+    fn trivial_bound_caps_cannot_break_exactness() {
+        // Very wide intervals (width 1.0 → hi caps at ≥ 1) must never
+        // prune wrongly; they just prune nothing.
+        let mut corr = BoundsCorrelator {
+            inner: gradient_table(),
+            width: 1.0,
+            bounds_calls: 0,
+        };
+        let pruned = BestFirstSearch::new(cfg_no_lp()).run(12, &mut corr);
+        let exact = BestFirstSearch::new(CfsConfig {
+            prune: PruneMode::Off,
+            ..cfg_no_lp()
+        })
+        .run(12, &mut gradient_table());
+        assert_eq!(pruned.selected, exact.selected);
+        assert_eq!(pruned.merit.to_bits(), exact.merit.to_bits());
     }
 
     #[test]

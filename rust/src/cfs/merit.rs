@@ -82,4 +82,59 @@ mod tests {
         let strong = merit_from_sums(3, 1.8, 0.5);
         assert!(strong > weak);
     }
+
+    #[test]
+    fn degenerate_sums_are_guarded() {
+        // A negative rff sum can drive the radicand negative; sqrt then
+        // yields NaN, which the `denom <= 0.0` guard does NOT catch
+        // (NaN comparisons are false) — the merit is NaN, and the search
+        // layer treats NaN merits as non-improvements. Pin that contract.
+        assert!(merit_from_sums(1, 0.5, -2.0).is_nan());
+        // Radicand exactly zero: guarded to 0.0, not +inf.
+        assert_eq!(merit_from_sums(1, 0.5, -0.5), 0.0);
+        // NaN inputs propagate rather than panic.
+        assert!(merit_from_sums(2, f64::NAN, 0.1).is_nan());
+        assert!(merit_from_sums(2, 0.4, f64::NAN).is_nan());
+        // Averages form with the same zero-denominator guard
+        // (k=2, avg_rff=−1 ⇒ radicand 2 + 2·(−1) = 0).
+        assert_eq!(merit_from_averages(2, 0.5, -1.0), 0.0);
+    }
+
+    /// The pruning invariant (DESIGN.md §16) at the merit layer: with
+    /// `rcf_hi ≥ rcf_exact` and `rff_lo ≤ rff_exact`, the bound merit
+    /// dominates the exact merit — in floating point, not just in ℝ.
+    /// The accumulation order matters: the bound must add its terms in
+    /// the same order the search does, which `merit_from_sums` callers
+    /// guarantee by summing cached values in candidate order.
+    #[test]
+    fn prop_upper_bound_merit_dominates_exact() {
+        let mut rng = XorShift64Star::new(0xB0BA);
+        for case in 0..1000 {
+            let k = 1 + rng.next_below(12) as usize;
+            // Exact per-feature class correlations and pair sums.
+            let rcf: Vec<f64> = (0..k).map(|_| rng.next_f64()).collect();
+            let npairs = k * (k - 1) / 2;
+            let rff: Vec<f64> = (0..npairs).map(|_| rng.next_f64()).collect();
+            let sum_rcf: f64 = rcf.iter().sum();
+            let sum_rff: f64 = rff.iter().sum();
+            // The bound path: overshoot the last rcf term (interval hi),
+            // and drop a random subset of rff terms to zero (uncached
+            // pairs contribute nothing to the lower sum).
+            let overshoot = rng.next_f64() * 0.5;
+            // `next_f64` yields [0, 1), so the capped overshoot is still
+            // ≥ the exact term.
+            let mut hi_rcf: f64 = rcf[..k - 1].iter().sum();
+            hi_rcf += (rcf[k - 1] + overshoot).min(1.0);
+            let lo_rff: f64 = rff
+                .iter()
+                .map(|&v| if rng.next_f64() < 0.5 { v } else { 0.0 })
+                .sum();
+            let exact = merit_from_sums(k, sum_rcf, sum_rff);
+            let upper = merit_from_sums(k, hi_rcf, lo_rff);
+            assert!(
+                upper >= exact,
+                "case {case}: upper {upper} < exact {exact} (k={k})"
+            );
+        }
+    }
 }

@@ -28,10 +28,11 @@ pub mod merit;
 pub mod sequential;
 pub mod subset;
 
-pub use best_first::{BestFirstSearch, CfsConfig, WarmStart};
+pub use best_first::{BestFirstSearch, CfsConfig, PruneMode, WarmStart};
 pub use sequential::{SequentialCfs, SequentialCorrelator};
 
 use crate::core::FeatureId;
+use crate::correlation::sampled::SuBounds;
 
 /// Source of symmetrical-uncertainty correlations.
 ///
@@ -42,6 +43,18 @@ use crate::core::FeatureId;
 pub trait Correlator {
     /// Compute correlations for a batch of attribute pairs.
     fn compute(&mut self, pairs: &[(FeatureId, FeatureId)]) -> Vec<f64>;
+
+    /// *Sound* SU intervals for a batch of pairs from sampled sketches
+    /// (DESIGN.md §16), or `None` to decline — the default, and what
+    /// backends that cannot sketch cheaply (e.g. remote IPC correlators)
+    /// return. A decline disables pruning for the rest of the search;
+    /// the search stays exact either way, pruning is purely a work
+    /// saver. Implementations must return one interval per pair, in
+    /// order, each guaranteed to contain the exact SU.
+    fn compute_bounds(&mut self, pairs: &[(FeatureId, FeatureId)]) -> Option<SuBounds> {
+        let _ = pairs;
+        None
+    }
 }
 
 /// A thread-safe correlation service: the same contract as [`Correlator`]
@@ -114,6 +127,16 @@ pub trait SharedCorrelator: Send + Sync {
     fn drain_plan_decisions(&self) -> Vec<crate::dicfs::plan::PlanDecision> {
         Vec::new()
     }
+
+    /// `&self` form of [`Correlator::compute_bounds`]: sound SU intervals
+    /// from sampled sketches, or `None` to decline (the default).
+    /// Declining is always safe — the search falls back to exact
+    /// evaluation; returning intervals that might exclude the exact SU
+    /// is **not** (it would change selections).
+    fn compute_bounds_batch(&self, pairs: &[(FeatureId, FeatureId)]) -> Option<SuBounds> {
+        let _ = pairs;
+        None
+    }
 }
 
 /// Adapter driving any [`SharedCorrelator`] through the `&mut`
@@ -129,5 +152,9 @@ pub struct ArcCorrelator(
 impl Correlator for ArcCorrelator {
     fn compute(&mut self, pairs: &[(FeatureId, FeatureId)]) -> Vec<f64> {
         self.0.compute_batch(pairs)
+    }
+
+    fn compute_bounds(&mut self, pairs: &[(FeatureId, FeatureId)]) -> Option<SuBounds> {
+        self.0.compute_bounds_batch(pairs)
     }
 }

@@ -10,20 +10,27 @@
 use crate::cfs::best_first::{BestFirstSearch, CfsConfig};
 use crate::cfs::Correlator;
 use crate::core::{FeatureId, SelectionResult};
+use crate::correlation::sampled::{bounds_for_pairs, default_windows, sampled_table, SuBounds};
 use crate::correlation::su::su_from_table;
-use crate::correlation::ContingencyTable;
+use crate::correlation::{ContingencyTable, Marginals};
 use crate::data::columnar::{Dataset, DiscreteDataset};
 use crate::discretize::discretize_dataset;
 
 /// Computes SU correlations directly from a local [`DiscreteDataset`].
 pub struct SequentialCorrelator<'a> {
     data: &'a DiscreteDataset,
+    /// Lazily counted full-column marginals, shared across sampled-bounds
+    /// requests (DESIGN.md §16).
+    marginals: Marginals,
 }
 
 impl<'a> SequentialCorrelator<'a> {
     /// Correlator over the given discretized dataset.
     pub fn new(data: &'a DiscreteDataset) -> Self {
-        Self { data }
+        Self {
+            data,
+            marginals: Marginals::new(),
+        }
     }
 }
 
@@ -37,6 +44,29 @@ impl Correlator for SequentialCorrelator<'_> {
                 su_from_table(&ContingencyTable::from_columns(xa, aa, xb, ab))
             })
             .collect()
+    }
+
+    fn compute_bounds(&mut self, pairs: &[(FeatureId, FeatureId)]) -> Option<SuBounds> {
+        let windows = default_windows(self.data.num_rows());
+        if windows.is_empty() {
+            return None;
+        }
+        let tables: Vec<ContingencyTable> = pairs
+            .iter()
+            .map(|&(a, b)| {
+                let (xa, aa) = self.data.column(a);
+                let (xb, ab) = self.data.column(b);
+                sampled_table(xa, aa, xb, ab, &windows)
+            })
+            .collect();
+        let sampled_rows = crate::correlation::windows_len(&windows);
+        Some(bounds_for_pairs(
+            self.data,
+            &self.marginals,
+            pairs,
+            &tables,
+            sampled_rows,
+        ))
     }
 }
 

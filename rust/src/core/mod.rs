@@ -77,6 +77,14 @@ pub struct SelectionResult {
     /// Number of distinct correlations computed (the on-demand ablation
     /// counts these against C(m+1, 2)).
     pub correlations_computed: usize,
+    /// Expansion candidates skipped by sketch-then-verify pruning
+    /// (DESIGN.md §16) without an exact evaluation. Always 0 when
+    /// pruning is off or the correlator declined to sketch.
+    pub pruned_candidates: usize,
+    /// Total sketch cells scanned by sampled-bounds requests
+    /// (pairs × sampled rows). Sketch work never counts toward
+    /// `correlations_computed`.
+    pub sampled_cells: u64,
     /// Features appended by the locally-predictive post-step (subset of
     /// `selected`).
     pub locally_predictive_added: Vec<FeatureId>,
@@ -117,6 +125,8 @@ mod tests {
             merit: 0.5,
             iterations: 3,
             correlations_computed: 10,
+            pruned_candidates: 0,
+            sampled_cells: 0,
             locally_predictive_added: vec![],
         };
         let mut b = a.clone();

@@ -49,6 +49,7 @@ use std::sync::atomic::{AtomicU64, Ordering as AtomicOrdering};
 use std::sync::{Arc, Mutex, RwLock};
 
 use crate::core::{pair_key, FeatureId};
+use crate::correlation::sampled::SuInterval;
 use crate::correlation::ContingencyTable;
 
 /// Fixed bookkeeping bytes charged per [`VersionedEntry`] by the
@@ -63,6 +64,12 @@ pub const ENTRY_OVERHEAD_BYTES: usize = 88;
 /// key (16), the SU value (8), the LRU clock (8) and hash-map slot
 /// overhead (16).
 pub const SCALAR_ENTRY_BYTES: usize = 48;
+
+/// Capacity of the [`VersionedSuCache`] advisory sampled-bounds side-map
+/// (DESIGN.md §16). A publish that would exceed it clears the map —
+/// bounds are non-authoritative and cheap to re-sketch, so wholesale
+/// drop is simpler than eviction and can never affect correctness.
+pub const MAX_BOUND_ENTRIES: usize = 8192;
 
 /// Cache statistics for the on-demand ablation and per-query reporting.
 ///
@@ -129,6 +136,17 @@ pub trait SuCache {
     /// Statistics of the requests served through this cache (per query
     /// handle when the backing store is shared).
     fn stats(&self) -> CacheStats;
+
+    /// Non-computing lookup: the cached **exact** value of one pair, or
+    /// `None` (the default). The pruned best-first expansion
+    /// (DESIGN.md §16) uses this to split candidates into
+    /// fully-cached (free to evaluate) and prune targets without
+    /// triggering any computation; a cache that keeps the default
+    /// simply makes every candidate a prune target.
+    fn probe(&self, a: FeatureId, b: FeatureId) -> Option<f64> {
+        let _ = (a, b);
+        None
+    }
 }
 
 /// Symmetric, on-demand correlation cache owned by a single search.
@@ -223,6 +241,10 @@ impl SuCache for CorrelationCache {
 
     fn stats(&self) -> CacheStats {
         self.stats
+    }
+
+    fn probe(&self, a: FeatureId, b: FeatureId) -> Option<f64> {
+        self.get(a, b)
     }
 }
 
@@ -520,6 +542,10 @@ impl SuCache for SuCacheHandle {
     fn stats(&self) -> CacheStats {
         self.stats
     }
+
+    fn probe(&self, a: FeatureId, b: FeatureId) -> Option<f64> {
+        self.shared.get(a, b)
+    }
 }
 
 /// One versioned cache entry: the SU value of a pair together with the
@@ -611,6 +637,15 @@ struct VersionedInner {
     /// the cost-aware eviction policy; `None` until first calibration,
     /// which selects the LRU fallback.
     rate: Mutex<Option<f64>>,
+    /// Advisory side-map of sampled SU intervals (DESIGN.md §16), keyed
+    /// by canonical pair and tagged with the row count they bound.
+    /// Strictly non-authoritative: never read by [`SuCache::batch`],
+    /// [`VersionedSuCache::lookup`] or [`SuCache::probe`], never
+    /// counted by the byte-accounting layer (bounded by
+    /// [`MAX_BOUND_ENTRIES`] instead), and dropped wholesale on
+    /// overflow or [`VersionedSuCache::clear`]. Losing a bound only
+    /// costs a re-sketch; it can never change a selection.
+    bounds: Mutex<HashMap<(FeatureId, FeatureId), (usize, SuInterval)>>,
 }
 
 #[derive(Debug, Default)]
@@ -649,6 +684,7 @@ impl VersionedSuCache {
                 budget,
                 clock: AtomicU64::new(0),
                 rate: Mutex::new(None),
+                bounds: Mutex::new(HashMap::new()),
             }),
         }
     }
@@ -813,7 +849,8 @@ impl VersionedSuCache {
     }
 
     /// Drop every entry — the dataset-retire path — accounting the
-    /// removals as evictions. Returns `(pairs, bytes)` released.
+    /// removals as evictions (advisory sampled bounds are dropped too).
+    /// Returns `(pairs, bytes)` released.
     pub fn clear(&self) -> (usize, usize) {
         let mut guard = self.inner.state.write().unwrap();
         let st = &mut *guard;
@@ -823,7 +860,61 @@ impl VersionedSuCache {
         st.resident_bytes = 0;
         st.evicted_pairs += pairs;
         st.evicted_bytes = st.evicted_bytes.saturating_add(bytes);
+        drop(guard);
+        self.inner.bounds.lock().unwrap().clear();
         (pairs, bytes)
+    }
+
+    /// Publish sampled SU intervals for `pairs` at row count `rows` into
+    /// the advisory side-map (DESIGN.md §16). Monotone in rows per pair
+    /// — a bound over fewer rows never replaces one over more — and
+    /// bounded by [`MAX_BOUND_ENTRIES`]: a publish that would overflow
+    /// clears the whole map first (bounds are cheap to re-sketch, so a
+    /// wholesale drop beats per-entry eviction bookkeeping). `pairs` and
+    /// `intervals` must be the same length.
+    pub fn publish_bounds(
+        &self,
+        rows: usize,
+        pairs: &[(FeatureId, FeatureId)],
+        intervals: &[SuInterval],
+    ) {
+        assert_eq!(pairs.len(), intervals.len(), "pair/interval length mismatch");
+        if pairs.is_empty() {
+            return;
+        }
+        let mut guard = self.inner.bounds.lock().unwrap();
+        if guard.len() + pairs.len() > MAX_BOUND_ENTRIES {
+            guard.clear();
+        }
+        for (&(a, b), &iv) in pairs.iter().zip(intervals) {
+            match guard.entry(pair_key(a, b)) {
+                std::collections::hash_map::Entry::Occupied(mut o) => {
+                    if o.get().0 <= rows {
+                        *o.get_mut() = (rows, iv);
+                    }
+                }
+                std::collections::hash_map::Entry::Vacant(v) => {
+                    v.insert((rows, iv));
+                }
+            }
+        }
+    }
+
+    /// The advisory sampled interval of a pair, if one was published at
+    /// exactly `rows` rows. Bounds for other row counts are invisible —
+    /// an interval over a different prefix says nothing sound about this
+    /// one. Never consulted by the exact lookup paths.
+    pub fn probe_bounds(&self, a: FeatureId, b: FeatureId, rows: usize) -> Option<SuInterval> {
+        let guard = self.inner.bounds.lock().unwrap();
+        match guard.get(&pair_key(a, b)) {
+            Some(&(r, iv)) if r == rows => Some(iv),
+            _ => None,
+        }
+    }
+
+    /// Number of advisory sampled intervals currently held.
+    pub fn bounds_len(&self) -> usize {
+        self.inner.bounds.lock().unwrap().len()
     }
 
     /// Every cached pair with the row count and SU value it currently
@@ -993,6 +1084,19 @@ impl SuCache for VersionedSuHandle {
 
     fn stats(&self) -> CacheStats {
         self.stats
+    }
+
+    fn probe(&self, a: FeatureId, b: FeatureId) -> Option<f64> {
+        let k = pair_key(a, b);
+        {
+            let st = self.shared.inner.state.read().unwrap();
+            if let Some(s) = st.map.get(&k) {
+                if s.entry.rows == self.rows {
+                    return Some(s.entry.su);
+                }
+            }
+        }
+        self.local.get(&k).copied()
     }
 }
 
@@ -1252,6 +1356,89 @@ mod tests {
         assert_eq!(hit.table.as_ref().unwrap(), &table);
         assert!(looked[1].is_none());
         assert_eq!(c.snapshot(), vec![((2, 4), 3, 0.25)]);
+    }
+
+    #[test]
+    fn probe_reads_caches_without_computing() {
+        // Owned cache: probe mirrors get.
+        let mut owned = CorrelationCache::new();
+        assert_eq!(owned.probe(0, 1), None);
+        owned.insert(1, 0, 0.4);
+        assert_eq!(owned.probe(0, 1), Some(0.4));
+
+        // Shared handle: probe sees pairs warmed by any query.
+        let shared = SharedSuCache::new();
+        shared.insert_batch(&[(2, 3)], &[0.6]);
+        let h = shared.handle();
+        assert_eq!(h.probe(3, 2), Some(0.6));
+        assert_eq!(h.probe(0, 9), None);
+        assert_eq!(h.stats(), CacheStats::default(), "probe never counts");
+
+        // Versioned handle: shared hit requires the exact row pin;
+        // stale pins fall back to the local memo.
+        let vc = VersionedSuCache::new();
+        vc.publish(vec![((0, 1), entry(100, 0.5))]);
+        let mut pinned = vc.handle(100);
+        assert_eq!(pinned.probe(1, 0), Some(0.5));
+        let mut stale = vc.handle(60);
+        assert_eq!(stale.probe(0, 1), None, "row pin mismatch is a miss");
+        let v = stale.batch(&[(0, 1)], &mut |_| vec![0.2]);
+        assert_eq!(v, vec![0.2]);
+        assert_eq!(stale.probe(1, 0), Some(0.2), "local memo serves probes");
+        // `pinned` is unaffected by the stale handle's memo.
+        assert_eq!(pinned.batch(&[(0, 1)], &mut |_| panic!("hit")), vec![0.5]);
+    }
+
+    #[test]
+    fn bounds_side_map_is_non_authoritative() {
+        let c = VersionedSuCache::new();
+        let iv = SuInterval { lo: 0.2, hi: 0.8 };
+        c.publish_bounds(100, &[(0, 1)], &[iv]);
+        assert_eq!(c.bounds_len(), 1);
+
+        // Row-tagged probe: exact pin only.
+        assert_eq!(c.probe_bounds(1, 0, 100), Some(iv));
+        assert_eq!(c.probe_bounds(0, 1, 50), None);
+
+        // Bounds never satisfy the exact paths: lookup misses, probe
+        // misses, and a batch still computes.
+        assert!(c.lookup(&[(0, 1)])[0].is_none());
+        let mut h = c.handle(100);
+        assert_eq!(h.probe(0, 1), None);
+        let v = h.batch(&[(0, 1)], &mut |miss| {
+            assert_eq!(miss, &[(0, 1)]);
+            vec![0.44]
+        });
+        assert_eq!(v, vec![0.44]);
+        assert_eq!(h.stats().computed, 1);
+
+        // Monotone in rows: fewer-row bounds never replace more-row ones.
+        let narrow = SuInterval { lo: 0.3, hi: 0.7 };
+        c.publish_bounds(60, &[(0, 1)], &[narrow]);
+        assert_eq!(c.probe_bounds(0, 1, 100), Some(iv));
+        c.publish_bounds(150, &[(0, 1)], &[narrow]);
+        assert_eq!(c.probe_bounds(0, 1, 150), Some(narrow));
+        assert_eq!(c.probe_bounds(0, 1, 100), None);
+
+        // clear() drops the advisory map with the entries.
+        c.clear();
+        assert_eq!(c.bounds_len(), 0);
+        assert_eq!(c.probe_bounds(0, 1, 150), None);
+    }
+
+    #[test]
+    fn bounds_side_map_clears_on_overflow() {
+        let c = VersionedSuCache::new();
+        let iv = SuInterval { lo: 0.0, hi: 1.0 };
+        let pairs: Vec<(FeatureId, FeatureId)> =
+            (0..MAX_BOUND_ENTRIES).map(|i| (i, i + 1)).collect();
+        let ivs = vec![iv; pairs.len()];
+        c.publish_bounds(10, &pairs, &ivs);
+        assert_eq!(c.bounds_len(), MAX_BOUND_ENTRIES);
+        // One more pair overflows: the map is dropped wholesale first.
+        c.publish_bounds(10, &[(usize::MAX - 2, 0)], &[iv]);
+        assert_eq!(c.bounds_len(), 1);
+        assert_eq!(c.probe_bounds(0, 1, 10), None, "old bounds were dropped");
     }
 
     #[test]

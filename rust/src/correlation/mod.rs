@@ -10,11 +10,17 @@ pub mod cache;
 pub mod ctable;
 pub mod entropy;
 pub mod pearson;
+pub mod sampled;
 pub mod su;
 
 pub use cache::{
     CacheStats, CorrelationCache, SharedSuCache, SuCache, SuCacheHandle, VersionedEntry,
-    VersionedSuCache, VersionedSuHandle, ENTRY_OVERHEAD_BYTES, SCALAR_ENTRY_BYTES,
+    VersionedSuCache, VersionedSuHandle, ENTRY_OVERHEAD_BYTES, MAX_BOUND_ENTRIES,
+    SCALAR_ENTRY_BYTES,
 };
 pub use ctable::ContingencyTable;
+pub use sampled::{
+    bounds_for_pairs, default_windows, sample_ranges, windows_len, Marginals, SuBounds,
+    SuInterval,
+};
 pub use su::{su_from_table, symmetrical_uncertainty};

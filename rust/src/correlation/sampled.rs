@@ -1,0 +1,430 @@
+//! Sampled contingency sketches with *sound* SU intervals (DESIGN.md §16).
+//!
+//! The sketch path builds contingency tables over a deterministic, seeded
+//! subset of rows and turns them into an interval `[lo, hi]` that provably
+//! contains the exact SU of the full dataset. The derivation is a mixture
+//! decomposition, not a probabilistic tail bound, so the interval holds
+//! unconditionally — which is what lets the best-first search prune on
+//! `hi` without ever risking a selection change (the proptests assert
+//! bit-identical selections, not approximately-equal ones).
+//!
+//! Derivation. Split the `n` rows into the sample `S` (`s` rows, weight
+//! `λ = s/n`) and the remainder `R`. The empirical joint distribution of
+//! any pair `(X, Y)` over all rows is exactly the mixture
+//! `λ·P_S + (1−λ)·P_R`. With `T` the membership indicator:
+//!
+//! * `H(X,Y) ≥ H(X,Y | T) = λ·H_S(X,Y) + (1−λ)·H_R(X,Y)`
+//! * `H(X,Y) ≤ H(X,Y | T) + H(T) = λ·H_S(X,Y) + (1−λ)·H_R(X,Y) + h₂(λ)`
+//!
+//! `H_S(X,Y)` is known exactly from the sampled table. `H_R(X,Y)` is not,
+//! but the remainder *marginals* are: full marginal counts minus sampled
+//! marginal counts (exact `u64` arithmetic — the sample is a subset). So
+//! `max(H_R(X), H_R(Y)) ≤ H_R(X,Y) ≤ H_R(X) + H_R(Y)`, which closes the
+//! envelope. The full-data marginal entropies `H(X)`, `H(Y)` are exact
+//! (one `O(n)` count per distinct column, memoized in [`Marginals`]), so
+//! the SU finish `2·(H(X)+H(Y)−H(X,Y)) / (H(X)+H(Y))` maps the `H(X,Y)`
+//! interval to an SU interval. A `±1e-9` widening absorbs the floating
+//! point rounding between this path and `su_from_table` (entropies are
+//! `O(log n)`-sized; the rounding gap is orders of magnitude below 1e-9).
+//!
+//! Everything here is deterministic: the row windows come from a fixed
+//! seed, so sequential, hp and vp lowerings merge the *same* `u64` tables
+//! and emit bit-identical intervals — which keeps pruning decisions (and
+//! therefore `correlations_computed`) identical across those schemes.
+
+use std::collections::HashMap;
+use std::ops::Range;
+use std::sync::{Arc, Mutex};
+
+use crate::core::FeatureId;
+use crate::correlation::ctable::ContingencyTable;
+use crate::correlation::entropy::entropy_of_counts;
+use crate::data::DiscreteDataset;
+use crate::util::rng::XorShift64Star;
+use crate::util::stats::plogp;
+
+/// Fraction of rows to sample: `n / SAMPLE_DENOM`.
+pub const SAMPLE_DENOM: usize = 4;
+
+/// Number of disjoint contiguous row windows the sample is spread over
+/// (so skewed row orderings don't bias the sketch toward one region).
+pub const SAMPLE_WAVES: usize = 4;
+
+/// Fixed seed for window placement. A *constant* seed is load-bearing:
+/// bounds must be bit-identical run-to-run and scheme-to-scheme, or
+/// pruning decisions (and cached-pair sets) would drift.
+pub const SAMPLE_SEED: u64 = 0x5EED_0C4B;
+
+/// Widening applied to both interval ends to absorb floating-point
+/// rounding differences against the exact `su_from_table` finish.
+const SLACK: f64 = 1e-9;
+
+/// A closed interval guaranteed to contain the exact SU of a pair.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct SuInterval {
+    /// Lower end (≥ 0).
+    pub lo: f64,
+    /// Upper end. May exceed 1.0 by the rounding slack; never clamped
+    /// below the exact value.
+    pub hi: f64,
+}
+
+/// Result of one sampled-bounds request: one interval per requested pair,
+/// plus the sketch work it cost (for reporting, not correctness).
+#[derive(Debug, Clone, Default)]
+pub struct SuBounds {
+    /// One interval per requested pair, in request order.
+    pub intervals: Vec<SuInterval>,
+    /// Cells scanned to build the sketches: `pairs × sampled rows`.
+    pub sampled_cells: u64,
+}
+
+/// Deterministic seeded row windows: `waves` disjoint, sorted, contiguous
+/// ranges covering ~`target` rows in total. Each window sits at a seeded
+/// offset inside its own stride of the row space, so the sample is spread
+/// across the dataset but stays cheap to scan (contiguous slices).
+///
+/// `target >= n` returns the single full range (the "sample" is exact);
+/// `n == 0 || target == 0` returns no windows (callers should decline).
+pub fn sample_ranges(n: usize, target: usize, waves: usize, seed: u64) -> Vec<Range<usize>> {
+    if n == 0 || target == 0 {
+        return Vec::new();
+    }
+    if target >= n {
+        return vec![0..n];
+    }
+    let waves = waves.clamp(1, target);
+    let stride = n / waves; // ≥ 1: waves ≤ target < n
+    let window = (target / waves).clamp(1, stride);
+    let mut rng = XorShift64Star::new(seed);
+    let mut out = Vec::with_capacity(waves);
+    for w in 0..waves {
+        let base = w * stride;
+        let slack = stride - window;
+        let off = if slack == 0 {
+            0
+        } else {
+            rng.next_below(slack as u64 + 1) as usize
+        };
+        let start = base + off;
+        out.push(start..(start + window).min(n));
+    }
+    out
+}
+
+/// The default sketch windows for an `n`-row dataset (λ = 1/4 spread over
+/// [`SAMPLE_WAVES`] waves, fixed seed). Empty for tiny `n` — callers must
+/// decline to sketch in that case.
+pub fn default_windows(n: usize) -> Vec<Range<usize>> {
+    sample_ranges(n, n / SAMPLE_DENOM, SAMPLE_WAVES, SAMPLE_SEED)
+}
+
+/// Total rows covered by a window set.
+pub fn windows_len(windows: &[Range<usize>]) -> usize {
+    windows.iter().map(|w| w.len()).sum()
+}
+
+/// Memoized exact marginal counts, one `O(n)` pass per distinct column.
+///
+/// Deliberately does *not* own the dataset (the sequential correlator
+/// borrows its data); callers pass the dataset to every lookup and must
+/// pass the same one each time. Interior mutability keeps the lookup
+/// usable from `&self` contexts (shared correlators).
+#[derive(Debug, Default)]
+pub struct Marginals {
+    counts: Mutex<HashMap<FeatureId, Arc<Vec<u64>>>>,
+}
+
+impl Marginals {
+    /// Empty memo.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Exact marginal counts for `f` (class included via `CLASS_ID`),
+    /// counted on first use and memoized.
+    pub fn column(&self, data: &DiscreteDataset, f: FeatureId) -> Arc<Vec<u64>> {
+        let mut guard = self.counts.lock().unwrap();
+        if let Some(c) = guard.get(&f) {
+            return Arc::clone(c);
+        }
+        let (values, bins) = data.column(f);
+        let mut counts = vec![0u64; bins as usize];
+        for &v in values {
+            counts[v as usize] += 1;
+        }
+        let counts = Arc::new(counts);
+        guard.insert(f, Arc::clone(&counts));
+        counts
+    }
+
+    /// How many distinct columns referenced by `pairs` have not been
+    /// counted yet (used to price the driver-side marginal pass).
+    pub fn uncounted_columns(&self, pairs: &[(FeatureId, FeatureId)]) -> usize {
+        let guard = self.counts.lock().unwrap();
+        let mut seen: Vec<FeatureId> = Vec::new();
+        for &(a, b) in pairs {
+            for f in [a, b] {
+                if !guard.contains_key(&f) && !seen.contains(&f) {
+                    seen.push(f);
+                }
+            }
+        }
+        seen.len()
+    }
+}
+
+/// Binary entropy `h₂(λ)` in bits.
+fn h2(lam: f64) -> f64 {
+    -(plogp(lam) + plogp(1.0 - lam))
+}
+
+/// Sound SU interval from a sampled joint table plus *exact* full-data
+/// marginal counts for both variables (see the module docs for the
+/// derivation). `sample` must be oriented `(x, y)` with bin counts equal
+/// to `mx.len()` / `my.len()`.
+pub fn su_envelope(sample: &ContingencyTable, mx: &[u64], my: &[u64]) -> SuInterval {
+    debug_assert_eq!(sample.bins_x as usize, mx.len());
+    debug_assert_eq!(sample.bins_y as usize, my.len());
+    let n: u64 = mx.iter().sum();
+    debug_assert_eq!(n, my.iter().sum::<u64>());
+
+    let hx = entropy_of_counts(mx);
+    let hy = entropy_of_counts(my);
+    let denom = hx + hy;
+    if denom <= 0.0 {
+        // A constant column: exact SU is 0 by the same guard in
+        // `su_from_table`.
+        return SuInterval { lo: 0.0, hi: 0.0 };
+    }
+
+    let (s, sx, sy) = sample.marginals();
+    if s == 0 || n == 0 {
+        return SuInterval { lo: 0.0, hi: 1.0 };
+    }
+    if s >= n {
+        // Sample covers every row: H(X,Y) is exact.
+        let hxy = entropy_of_counts(&sample.counts);
+        let su = (2.0 * (denom - hxy) / denom).max(0.0);
+        return SuInterval {
+            lo: (su - SLACK).max(0.0),
+            hi: su + SLACK,
+        };
+    }
+
+    let lam = s as f64 / n as f64;
+    let h_s = entropy_of_counts(&sample.counts);
+    // Remainder marginals are exact u64 subtractions (sample ⊆ full).
+    let rx: Vec<u64> = mx
+        .iter()
+        .zip(sx.iter())
+        .map(|(&m, &c)| m.saturating_sub(c))
+        .collect();
+    let ry: Vec<u64> = my
+        .iter()
+        .zip(sy.iter())
+        .map(|(&m, &c)| m.saturating_sub(c))
+        .collect();
+    let h_rx = entropy_of_counts(&rx);
+    let h_ry = entropy_of_counts(&ry);
+
+    let hxy_lo = (lam * h_s + (1.0 - lam) * h_rx.max(h_ry)).max(hx.max(hy));
+    let hxy_hi = (lam * h_s + (1.0 - lam) * (h_rx + h_ry) + h2(lam)).min(denom);
+
+    let su_hi = (2.0 * (denom - hxy_lo) / denom).clamp(0.0, 1.0);
+    let su_lo = (2.0 * (denom - hxy_hi) / denom).clamp(0.0, 1.0);
+    SuInterval {
+        lo: (su_lo - SLACK).max(0.0),
+        hi: su_hi + SLACK,
+    }
+}
+
+/// Driver-side finish shared by every lowering: turn merged sampled
+/// tables (one per pair, pair-oriented) into [`SuBounds`]. All schemes
+/// merge identical `u64` tables, so routing them through this one
+/// function makes the resulting intervals bit-identical across seq, hp
+/// and vp.
+pub fn bounds_for_pairs(
+    data: &DiscreteDataset,
+    marginals: &Marginals,
+    pairs: &[(FeatureId, FeatureId)],
+    tables: &[ContingencyTable],
+    sampled_rows: usize,
+) -> SuBounds {
+    debug_assert_eq!(pairs.len(), tables.len());
+    let intervals = pairs
+        .iter()
+        .zip(tables.iter())
+        .map(|(&(a, b), t)| {
+            let mx = marginals.column(data, a);
+            let my = marginals.column(data, b);
+            su_envelope(t, &mx, &my)
+        })
+        .collect();
+    SuBounds {
+        intervals,
+        sampled_cells: (pairs.len() * sampled_rows) as u64,
+    }
+}
+
+/// Build the merged sampled table for one pair directly from columns
+/// (the sequential lowering; also the reference the distributed
+/// lowerings must match bit-for-bit).
+pub fn sampled_table(
+    x: &[u8],
+    bins_x: u16,
+    y: &[u8],
+    bins_y: u16,
+    windows: &[Range<usize>],
+) -> ContingencyTable {
+    let mut t = ContingencyTable::new(bins_x, bins_y);
+    for w in windows {
+        t.merge_rows(x, y, w.clone());
+    }
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::CLASS_ID;
+    use crate::correlation::su::su_from_table;
+    use crate::data::synth::{by_name, SynthConfig};
+    use crate::discretize::discretize_dataset;
+
+    fn dataset(rows: usize, seed: u64) -> DiscreteDataset {
+        let raw = by_name(
+            "kddcup99",
+            &SynthConfig {
+                rows,
+                seed,
+                features: Some(10),
+            },
+        );
+        discretize_dataset(&raw).unwrap()
+    }
+
+    #[test]
+    fn sample_ranges_disjoint_sorted_deterministic() {
+        let a = sample_ranges(1000, 250, 4, 7);
+        let b = sample_ranges(1000, 250, 4, 7);
+        assert_eq!(a, b, "same seed must give same windows");
+        assert_eq!(a.len(), 4);
+        for w in a.windows(2) {
+            assert!(w[0].end <= w[1].start, "windows must be disjoint+sorted");
+        }
+        let covered: usize = a.iter().map(|w| w.len()).sum();
+        assert!(covered > 0 && covered <= 250);
+        assert!(a.iter().all(|w| w.end <= 1000));
+    }
+
+    #[test]
+    fn sample_ranges_degenerate_inputs() {
+        assert!(sample_ranges(0, 10, 4, 1).is_empty());
+        assert!(sample_ranges(100, 0, 4, 1).is_empty());
+        assert_eq!(sample_ranges(10, 100, 4, 1), vec![0..10]);
+        assert_eq!(sample_ranges(10, 10, 4, 1), vec![0..10]);
+        // target 1: a single 1-row window somewhere in range.
+        let w = sample_ranges(100, 1, 4, 1);
+        assert_eq!(w.len(), 1);
+        assert_eq!(w[0].len(), 1);
+    }
+
+    #[test]
+    fn default_windows_declines_tiny_datasets() {
+        assert!(default_windows(0).is_empty());
+        assert!(default_windows(3).is_empty());
+        assert!(!default_windows(4).is_empty());
+    }
+
+    #[test]
+    fn marginals_match_direct_count_and_memoize() {
+        let dd = dataset(200, 3);
+        let m = Marginals::new();
+        for f in [0usize, 1, CLASS_ID] {
+            let counts = m.column(&dd, f);
+            let (values, bins) = dd.column(f);
+            assert_eq!(counts.len(), bins as usize);
+            assert_eq!(counts.iter().sum::<u64>(), values.len() as u64);
+        }
+        assert_eq!(m.uncounted_columns(&[(0, 1), (0, CLASS_ID)]), 0);
+        assert_eq!(m.uncounted_columns(&[(2, 3), (2, CLASS_ID)]), 2);
+    }
+
+    #[test]
+    fn envelope_contains_exact_su_on_synth_pairs() {
+        for (rows, seed) in [(64usize, 1u64), (200, 2), (777, 5)] {
+            let dd = dataset(rows, seed);
+            let m = Marginals::new();
+            let windows = default_windows(dd.num_rows());
+            for a in 0..dd.num_features() {
+                for b in [CLASS_ID, (a + 1) % dd.num_features()] {
+                    if b == a {
+                        continue;
+                    }
+                    let (xv, xb) = dd.column(a);
+                    let (yv, yb) = dd.column(b);
+                    let t = sampled_table(xv, xb, yv, yb, &windows);
+                    let iv = su_envelope(&t, &m.column(&dd, a), &m.column(&dd, b));
+                    let exact = su_from_table(&ContingencyTable::from_columns(xv, xb, yv, yb));
+                    assert!(
+                        iv.lo <= exact && exact <= iv.hi,
+                        "rows={rows} pair=({a},{b}): exact {exact} outside [{}, {}]",
+                        iv.lo,
+                        iv.hi
+                    );
+                    assert!(iv.lo >= 0.0);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn envelope_full_sample_is_tight() {
+        let dd = dataset(100, 9);
+        let m = Marginals::new();
+        let (xv, xb) = dd.column(0);
+        let (yv, yb) = dd.column(CLASS_ID);
+        let t = ContingencyTable::from_columns(xv, xb, yv, yb);
+        let iv = su_envelope(&t, &m.column(&dd, 0), &m.column(&dd, CLASS_ID));
+        let exact = su_from_table(&t);
+        assert!(iv.lo <= exact && exact <= iv.hi);
+        assert!(iv.hi - iv.lo <= 3.0 * 1e-9, "full sample should collapse");
+    }
+
+    #[test]
+    fn envelope_constant_column_is_zero() {
+        // A constant column has zero marginal entropy on one side.
+        let x = vec![0u8; 50];
+        let y: Vec<u8> = (0..50).map(|i| (i % 2) as u8).collect();
+        let t = sampled_table(&x, 1, &y, 2, &[0..12]);
+        let mx = vec![50u64];
+        let my = vec![25u64, 25];
+        let iv = su_envelope(&t, &mx, &my);
+        // denom > 0 here (y varies); check the all-constant case too.
+        assert!(iv.lo >= 0.0 && iv.hi >= iv.lo);
+        let t2 = sampled_table(&x, 1, &x, 1, &[0..12]);
+        let iv2 = su_envelope(&t2, &mx, &mx);
+        assert_eq!((iv2.lo, iv2.hi), (0.0, 0.0));
+    }
+
+    #[test]
+    fn bounds_for_pairs_counts_cells() {
+        let dd = dataset(120, 4);
+        let m = Marginals::new();
+        let windows = default_windows(dd.num_rows());
+        let sampled = windows_len(&windows);
+        let pairs = [(0usize, CLASS_ID), (1, 2)];
+        let tables: Vec<ContingencyTable> = pairs
+            .iter()
+            .map(|&(a, b)| {
+                let (xv, xb) = dd.column(a);
+                let (yv, yb) = dd.column(b);
+                sampled_table(xv, xb, yv, yb, &windows)
+            })
+            .collect();
+        let b = bounds_for_pairs(&dd, &m, &pairs, &tables, sampled);
+        assert_eq!(b.intervals.len(), 2);
+        assert_eq!(b.sampled_cells, (2 * sampled) as u64);
+    }
+}

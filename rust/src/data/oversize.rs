@@ -8,27 +8,52 @@
 
 use crate::data::columnar::{Column, Dataset};
 
+/// Duplicate `src` into a `target`-element vector: whole-slice
+/// repetitions followed by a prefix remainder, all via `extend_from_slice`
+/// (block memcpy) instead of a per-element index gather — the scaling
+/// protocol is pure repetition, so there is nothing to gather.
+fn repeat_to<T: Copy>(src: &[T], target: usize) -> Vec<T> {
+    assert!(!src.is_empty() || target == 0, "cannot repeat an empty column");
+    if target == 0 {
+        return Vec::new();
+    }
+    let mut out = Vec::with_capacity(target);
+    while out.len() + src.len() <= target {
+        out.extend_from_slice(src);
+    }
+    out.extend_from_slice(&src[..target - out.len()]);
+    out
+}
+
 /// Scale the number of instances to `pct`% of the original by prefix
 /// sampling (< 100) or whole-dataset duplication + prefix (> 100).
 pub fn scale_instances(ds: &Dataset, pct: usize) -> Dataset {
     let n = ds.num_rows();
     let target = (n * pct).div_ceil(100);
-    let take = |col_len: usize| -> Vec<usize> {
-        (0..target).map(|i| i % col_len).collect()
+    // ≤ 100% is a pure prefix; above, block-repeat each column.
+    let scale_col = |v: &[u8]| -> Vec<u8> {
+        if target <= n {
+            v[..target].to_vec()
+        } else {
+            repeat_to(v, target)
+        }
     };
-    let idx = take(n);
     let features = ds
         .features
         .iter()
         .map(|c| match c {
-            Column::Numeric(v) => Column::Numeric(idx.iter().map(|&i| v[i]).collect()),
+            Column::Numeric(v) => Column::Numeric(if target <= n {
+                v[..target].to_vec()
+            } else {
+                repeat_to(v, target)
+            }),
             Column::Categorical { values, arity } => Column::Categorical {
-                values: idx.iter().map(|&i| values[i]).collect(),
+                values: scale_col(values),
                 arity: *arity,
             },
         })
         .collect();
-    let class = idx.iter().map(|&i| ds.class[i]).collect();
+    let class = scale_col(&ds.class);
     Dataset::new(
         format!("{}_{}i", ds.name, pct),
         features,
@@ -76,6 +101,38 @@ mod tests {
         // rows 0..100 repeat at 100..200
         assert_eq!(big.class[0], big.class[100]);
         assert_eq!(big.class[50], big.class[150]);
+    }
+
+    #[test]
+    fn block_repeat_matches_index_gather() {
+        // The chunked copy is an optimization of the old per-row index
+        // gather (`i % n`); results must be bit-identical, including the
+        // partial trailing repetition (237% of 100 rows = 2 full + 37).
+        let ds = base();
+        let n = ds.num_rows();
+        let big = scale_instances(&ds, 237);
+        assert_eq!(big.num_rows(), 237);
+        for (c_big, c_src) in big.features.iter().zip(&ds.features) {
+            match (c_big, c_src) {
+                (Column::Numeric(b), Column::Numeric(s)) => {
+                    for (i, x) in b.iter().enumerate() {
+                        assert_eq!(*x, s[i % n]);
+                    }
+                }
+                (
+                    Column::Categorical { values: b, .. },
+                    Column::Categorical { values: s, .. },
+                ) => {
+                    for (i, x) in b.iter().enumerate() {
+                        assert_eq!(*x, s[i % n]);
+                    }
+                }
+                _ => panic!("column kind changed by scaling"),
+            }
+        }
+        for (i, c) in big.class.iter().enumerate() {
+            assert_eq!(*c, ds.class[i % n]);
+        }
     }
 
     #[test]

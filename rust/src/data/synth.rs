@@ -14,10 +14,14 @@
 //! | `kddcup99_like`| KDDCUP99     | 41   | numeric + categ. | 5       |
 //! | `epsilon_like`| EPSILON       | 2000 | numeric          | 2       |
 //! | `wide_like`   | *(planner)*   | 4000 | numeric + categ. | 2       |
+//! | `ultrawide_like`| *(pruning)* | 50000| numeric + categ. | 2       |
 //!
 //! `wide_like` is not from Table 1: it is the features ≫ rows regime
 //! (skewed 2–32 categorical arities) the partitioning planner's harness
 //! and benches use to exercise the corner where DiCFS-vp wins.
+//! `ultrawide_like` pushes that regime to ≥50k features over a handful
+//! of rows — the shape where sketch-then-verify pruning (DESIGN.md §16)
+//! saves the most exact-SU work.
 //!
 //! Row counts are scaled to this host (the paper's 0.5M–33.6M rows are a
 //! hardware gate — see DESIGN.md §2); `SynthConfig::rows` sets the 100%
@@ -285,6 +289,17 @@ pub fn wide_like(cfg: &SynthConfig) -> Dataset {
     with_roles("wide", cfg).dataset
 }
 
+/// Ultrawide regime: ≥50k features over very few rows with the skewed
+/// 2–32 categorical arity spread — the extreme of the `wide` regime,
+/// sized for the sketch-then-verify pruning path (DESIGN.md §16): the
+/// candidate pool per best-first expansion is enormous, so the exact-SU
+/// cell savings of pruning dominate. Like `wide`, not a Table-1 family.
+/// Pair with a *tiny* `rows` (the 100% scale is meant to sit near
+/// rows ≈ features / 100).
+pub fn ultrawide_like(cfg: &SynthConfig) -> Dataset {
+    with_roles("ultrawide", cfg).dataset
+}
+
 /// Generate with ground-truth roles exposed (tests and ablations).
 pub fn with_roles(family: &str, cfg: &SynthConfig) -> SynthDataset {
     let spec = match family {
@@ -342,6 +357,20 @@ pub fn with_roles(family: &str, cfg: &SynthConfig) -> SynthDataset {
             relevant: 60,
             redundant: 400,
         },
+        "ultrawide" => FamilySpec {
+            name: "ultrawide",
+            features: 50_000,
+            // Mostly categorical with the full 2–32 arity spread: the
+            // per-pair exact cost varies by ~two orders of magnitude,
+            // which is what makes sketch-then-verify pruning pay — the
+            // bound kills fat-table candidates before their exact scan.
+            numeric_frac: 0.25,
+            cat_arity: (2, 32),
+            class_arity: 2,
+            class_prior: vec![0.55, 0.45],
+            relevant: 150,
+            redundant: 3_000,
+        },
         other => panic!("unknown family {other}"),
     };
     generate(&spec, cfg)
@@ -353,8 +382,9 @@ pub fn by_name(family: &str, cfg: &SynthConfig) -> Dataset {
 }
 
 /// All family names: the paper's Table 1 order, then the extra `wide`
-/// planner-harness regime (features ≫ rows, skewed arities).
-pub const FAMILIES: [&str; 5] = ["ecbdl14", "higgs", "kddcup99", "epsilon", "wide"];
+/// planner-harness regime (features ≫ rows, skewed arities) and the
+/// `ultrawide` pruning regime (≥50k features over very few rows).
+pub const FAMILIES: [&str; 6] = ["ecbdl14", "higgs", "kddcup99", "epsilon", "wide", "ultrawide"];
 
 #[cfg(test)]
 mod tests {
@@ -496,6 +526,34 @@ mod tests {
         assert!(*arities.last().unwrap() > 8, "no high-arity columns");
         assert!(*arities.first().unwrap() < *arities.last().unwrap());
         assert!(FAMILIES.contains(&"wide"));
+    }
+
+    #[test]
+    fn ultrawide_family_is_extreme_wide() {
+        let cfg = SynthConfig {
+            rows: 120,
+            seed: 11,
+            features: None,
+        };
+        let ds = ultrawide_like(&cfg);
+        assert_eq!(ds.num_features(), 50_000);
+        assert!(
+            ds.num_features() >= 100 * ds.num_rows(),
+            "ultrawide must dwarf its row count"
+        );
+        // Skewed arities, like wide but denser in categoricals.
+        let arities: Vec<u16> = ds
+            .features
+            .iter()
+            .filter_map(|c| match c {
+                Column::Categorical { arity, .. } => Some(*arity),
+                Column::Numeric(_) => None,
+            })
+            .collect();
+        assert!(arities.len() * 2 > ds.num_features(), "mostly categorical");
+        assert!(arities.iter().any(|&a| a > 8), "no high-arity columns");
+        assert!(arities.iter().any(|&a| a < 4), "no low-arity columns");
+        assert!(FAMILIES.contains(&"ultrawide"));
     }
 
     #[test]

@@ -24,7 +24,8 @@ use std::sync::Arc;
 
 use crate::cfs::{Correlator, SharedCorrelator};
 use crate::core::FeatureId;
-use crate::correlation::ContingencyTable;
+use crate::correlation::sampled::{bounds_for_pairs, default_windows, windows_len, SuBounds};
+use crate::correlation::{ContingencyTable, Marginals};
 use crate::data::columnar::DiscreteDataset;
 use crate::dicfs::plan::{self, PlanSpec};
 use crate::runtime::{ColumnPair, SuEngine};
@@ -37,6 +38,9 @@ pub struct HorizontalCorrelator {
     ctx: Arc<SparkletContext>,
     /// One contiguous row range per partition.
     ranges: Rdd<Range<usize>>,
+    /// Exact full-column marginal counts for the sampled-bounds finish
+    /// (DESIGN.md §16), shared across engine siblings.
+    marginals: Arc<Marginals>,
 }
 
 impl HorizontalCorrelator {
@@ -59,6 +63,7 @@ impl HorizontalCorrelator {
             engine,
             ctx: Arc::clone(ctx),
             ranges: ctx.parallelize(ranges, count),
+            marginals: Arc::new(Marginals::new()),
         }
     }
 
@@ -72,6 +77,7 @@ impl HorizontalCorrelator {
             engine,
             ctx: Arc::clone(&self.ctx),
             ranges: self.ranges.clone(),
+            marginals: Arc::clone(&self.marginals),
         }
     }
 
@@ -100,16 +106,17 @@ impl HorizontalCorrelator {
     }
 
     /// Steps 1–3 of every hp job, shared by the SU batch (which appends
-    /// a computeSU stage) and the table job (which collects the merged
-    /// tables directly): broadcast the pair list, count each range into
-    /// per-partition partial tables through the engine, and
-    /// `reduceByKey(sum)` them per pair. `delta` only switches the stage
-    /// labels, so the two job kinds stay distinguishable in metrics.
+    /// a computeSU stage), the table job and the sampled-sketch job
+    /// (which collect the merged tables directly): broadcast the pair
+    /// list, count each range into per-partition partial tables through
+    /// the engine, and `reduceByKey(sum)` them per pair. The `(map,
+    /// reduce)` label pair only switches the stage labels, so the three
+    /// job kinds stay distinguishable in metrics.
     fn merged_ctables(
         &self,
         pairs: &[(FeatureId, FeatureId)],
         ranges: Rdd<Range<usize>>,
-        delta: bool,
+        labels: (&'static str, &'static str),
     ) -> Rdd<(usize, ContingencyTable)> {
         // 1. Broadcast the pair list (16 bytes per pair on the wire).
         let pairs_bc = self.ctx.broadcast(pairs.to_vec(), pairs.len() * 16);
@@ -117,9 +124,8 @@ impl HorizontalCorrelator {
         // 2. mapPartitions(localCTables): per-range partial tables.
         let data = Arc::clone(&self.data);
         let engine = Arc::clone(&self.engine);
-        let map_label = if delta { "localCTablesDelta" } else { "localCTables" };
         let partials: Rdd<(usize, ContingencyTable)> =
-            ranges.map_partitions(map_label, move |_, ranges| {
+            ranges.map_partitions(labels.0, move |_, ranges| {
                 // The pair → column resolution does not depend on the
                 // range: build the ColumnPair list once per task, not
                 // once per range.
@@ -138,11 +144,37 @@ impl HorizontalCorrelator {
         // 3. reduceByKey(sum): merge partials per pair (Eq. 4).
         let reduce_parts = pairs.len().min(self.ctx.cluster.total_slots()).max(1);
         partials.reduce_by_key(
-            if delta { "mergeCTablesDelta" } else { "mergeCTables" },
+            labels.1,
             reduce_parts,
             ContingencyTable::wire_bytes,
             |a, b| a.merge(b).expect("pair tables share shape"),
         )
+    }
+
+    /// The hp **sampled-sketch job** (DESIGN.md §16): the ctable job
+    /// shape, but each map task counts one deterministic sample window
+    /// instead of a sub-range of the full dataset — one task per window,
+    /// scanning only `Σ|window|` rows per pair. The merged tables are
+    /// bit-identical to the sequential
+    /// [`sampled_table`](crate::correlation::sampled::sampled_table)
+    /// (u64 counts, associative merge), so hp-derived bounds equal
+    /// sequential bounds and prune decisions agree across schemes.
+    pub fn sampled_ctables(
+        &self,
+        pairs: &[(FeatureId, FeatureId)],
+        windows: &[Range<usize>],
+    ) -> Vec<ContingencyTable> {
+        if pairs.is_empty() || windows.is_empty() {
+            return vec![];
+        }
+        let count = windows.len();
+        let ranges = self.ctx.parallelize(windows.to_vec(), count);
+        let merged =
+            self.merged_ctables(pairs, ranges, ("localCTablesSampled", "mergeCTablesSampled"));
+        let mut collected = merged.collect_sized(|(_, t)| t.wire_bytes());
+        collected.sort_by_key(|(i, _)| *i);
+        debug_assert_eq!(collected.len(), pairs.len());
+        collected.into_iter().map(|(_, t)| t).collect()
     }
 }
 
@@ -182,7 +214,7 @@ impl SharedCorrelator for HorizontalCorrelator {
         let count = ranges.len();
         let ranges = self.ctx.parallelize(ranges, count);
 
-        let merged = self.merged_ctables(pairs, ranges, true);
+        let merged = self.merged_ctables(pairs, ranges, ("localCTablesDelta", "mergeCTablesDelta"));
         let mut collected = merged.collect_sized(|(_, t)| t.wire_bytes());
         collected.sort_by_key(|(i, _)| *i);
         debug_assert_eq!(collected.len(), pairs.len());
@@ -195,7 +227,8 @@ impl SharedCorrelator for HorizontalCorrelator {
         }
         // Steps 1–3 (pair broadcast, localCTables, mergeCTables) are the
         // shared job prefix.
-        let merged = self.merged_ctables(pairs, self.ranges.clone(), false);
+        let merged =
+            self.merged_ctables(pairs, self.ranges.clone(), ("localCTables", "mergeCTables"));
 
         // 4. SU finish *in parallel on the CTables RDD* (paper §5.1: "this
         // calculation can therefore be performed in parallel by processing
@@ -215,11 +248,38 @@ impl SharedCorrelator for HorizontalCorrelator {
         // restore request order.
         plan::collect_su(&sus, pairs.len())
     }
+
+    /// Sound SU intervals from the hp sampled-sketch job (DESIGN.md §16):
+    /// run [`Self::sampled_ctables`] over the deterministic default
+    /// windows, then finish into intervals on the driver with exact
+    /// full-column marginals. Declines only when the dataset is too small
+    /// to carry sample windows.
+    fn compute_bounds_batch(&self, pairs: &[(FeatureId, FeatureId)]) -> Option<SuBounds> {
+        if pairs.is_empty() {
+            return Some(SuBounds::default());
+        }
+        let windows = default_windows(self.data.num_rows());
+        if windows.is_empty() {
+            return None;
+        }
+        let tables = self.sampled_ctables(pairs, &windows);
+        Some(bounds_for_pairs(
+            &self.data,
+            &self.marginals,
+            pairs,
+            &tables,
+            windows_len(&windows),
+        ))
+    }
 }
 
 impl Correlator for HorizontalCorrelator {
     fn compute(&mut self, pairs: &[(FeatureId, FeatureId)]) -> Vec<f64> {
         self.compute_batch(pairs)
+    }
+
+    fn compute_bounds(&mut self, pairs: &[(FeatureId, FeatureId)]) -> Option<SuBounds> {
+        self.compute_bounds_batch(pairs)
     }
 }
 
@@ -365,6 +425,68 @@ mod tests {
             b.merge(&d).unwrap();
             assert_eq!(&b, f);
         }
+    }
+
+    #[test]
+    fn sampled_job_matches_sequential_sketch_bitwise() {
+        use crate::correlation::sampled::sampled_table;
+
+        let (ctx, corr, dd) = setup(6);
+        let pairs = vec![(0, CLASS_ID), (1, 4), (2, CLASS_ID), (3, 7)];
+        let windows = default_windows(dd.num_rows());
+        assert!(!windows.is_empty());
+
+        // One map task per sample window, distinct stage labels.
+        let tables = corr.sampled_ctables(&pairs, &windows);
+        let m = ctx.metrics();
+        let fused = m
+            .stages
+            .iter()
+            .find(|s| s.label == "localCTablesSampled+mergeCTablesSampled")
+            .expect("fused sampled shuffle stage");
+        assert_eq!(fused.task_secs.len(), windows.len());
+
+        // The merged distributed tables equal the driver-side sampled
+        // tables bit-for-bit — so do the bounds derived from them.
+        for (t, &(a, b)) in tables.iter().zip(&pairs) {
+            let (x, bx) = dd.column(a);
+            let (y, by) = dd.column(b);
+            assert_eq!(t, &sampled_table(x, bx, y, by, &windows));
+        }
+    }
+
+    #[test]
+    fn bounds_contain_exact_su_and_match_sequential() {
+        use crate::cfs::sequential::SequentialCorrelator;
+
+        let (_ctx, corr, dd) = setup(5);
+        let pairs = vec![(0, CLASS_ID), (2, 6), (5, CLASS_ID)];
+        let hp = corr.compute_bounds_batch(&pairs).expect("900 rows sketch");
+        assert_eq!(hp.intervals.len(), pairs.len());
+        assert!(hp.sampled_cells > 0);
+
+        let mut seq = SequentialCorrelator::new(&dd);
+        let sq = seq.compute_bounds(&pairs).unwrap();
+        for (i, &(a, b)) in pairs.iter().enumerate() {
+            let (x, bx) = dd.column(a);
+            let (y, by) = dd.column(b);
+            let exact = symmetrical_uncertainty(x, bx, y, by);
+            let iv = hp.intervals[i];
+            assert!(
+                iv.lo <= exact && exact <= iv.hi,
+                "pair {:?}: {exact} ∉ [{}, {}]",
+                (a, b),
+                iv.lo,
+                iv.hi
+            );
+            // Scheme-independence: hp intervals == sequential intervals,
+            // bit-for-bit — the property the prune protocol rests on.
+            assert_eq!(iv, sq.intervals[i]);
+        }
+
+        // Empty batch succeeds without launching a job.
+        let empty = corr.compute_bounds_batch(&[]).unwrap();
+        assert!(empty.intervals.is_empty());
     }
 
     #[test]

@@ -352,6 +352,22 @@ impl Correlator for TimedCorrelator {
         );
         out
     }
+
+    fn compute_bounds(
+        &mut self,
+        pairs: &[(crate::core::FeatureId, crate::core::FeatureId)],
+    ) -> Option<crate::correlation::sampled::SuBounds> {
+        // Sketch jobs are cluster time too — time them like exact batches
+        // so driver_secs stays "time outside the distributed jobs".
+        let t0 = std::time::Instant::now();
+        let out = self.inner.compute_bounds(pairs);
+        let prev = self.total_secs();
+        self.secs.store(
+            (prev + t0.elapsed().as_secs_f64()).to_bits(),
+            std::sync::atomic::Ordering::Relaxed,
+        );
+        out
+    }
 }
 
 #[cfg(test)]

@@ -159,6 +159,13 @@ pub struct PlanSpec {
     /// incremental service's delta-upgrade and fresh-table jobs
     /// (DESIGN.md §12).
     pub table_collect: bool,
+    /// `true` for **sampled-sketch jobs** ([`hp_sampled_plan`] /
+    /// [`vp_sampled_plan`]): the scan covers only the seeded sample
+    /// windows (DESIGN.md §16). Sampled jobs calibrate their own planner
+    /// rate slot — sketch scans have a different cost profile (tiny
+    /// strided windows) than full contiguous scans, and mixing them into
+    /// the exact slots would skew both calibrations.
+    pub sampled: bool,
 }
 
 impl PlanSpec {
@@ -296,6 +303,7 @@ pub fn hp_plan(
         table_cells,
         setup_cells: 0.0,
         table_collect: false,
+        sampled: false,
     }
 }
 
@@ -354,6 +362,7 @@ pub fn vp_plan(
         table_cells,
         setup_cells,
         table_collect: false,
+        sampled: false,
     }
 }
 
@@ -391,6 +400,7 @@ pub fn hp_delta_plan(
         table_cells,
         setup_cells: 0.0,
         table_collect: true,
+        sampled: false,
     }
 }
 
@@ -451,6 +461,103 @@ pub fn vp_delta_plan(
         table_cells,
         setup_cells,
         table_collect: true,
+        sampled: false,
+    }
+}
+
+/// Lower a **sampled-sketch job** (DESIGN.md §16) to the hp plan: one
+/// map task per seeded sample window builds partial tables over its
+/// window, partials shuffle and merge per pair, and the merged sampled
+/// tables are collected whole (the driver finishes the SU envelope
+/// against exact full-data marginals). Structurally a table job whose
+/// scan covers only `Σ windows` rows.
+pub fn hp_sampled_plan(
+    data: &DiscreteDataset,
+    pairs: &[(FeatureId, FeatureId)],
+    cluster: &ClusterConfig,
+    windows: &[std::ops::Range<usize>],
+) -> PlanSpec {
+    let sampled_rows = crate::correlation::windows_len(windows);
+    let parts = windows.len().max(1);
+    let (table_cells, wire) = table_sizes(data, pairs);
+    let reduce_partitions = pairs.len().min(cluster.total_slots()).max(1);
+    PlanSpec {
+        strategy: Strategy::Hp,
+        num_pairs: pairs.len(),
+        layout: PartitionLayout::Rows { partitions: parts },
+        busy_tasks: parts,
+        broadcast_bytes: pairs.len() * 16,
+        setup_shuffle_bytes: 0,
+        shuffle: Some(ShuffleSpec {
+            bytes: wire * parts,
+            reduce_partitions,
+        }),
+        collect_bytes: wire,
+        scan_cells: (pairs.len() * sampled_rows) as f64,
+        table_cells,
+        setup_cells: 0.0,
+        table_collect: true,
+        sampled: true,
+    }
+}
+
+/// Lower a **sampled-sketch job** (DESIGN.md §16) to the vp plan: only
+/// the sample-window slices of each reference column are broadcast,
+/// owner partitions build each pair's sampled table locally across the
+/// windows, and the tables are collected whole. As with [`vp_plan`], an
+/// unbuilt layout charges the one-time columnar shuffle to this batch —
+/// which is exactly what makes the planner decline vp sketches until
+/// the layout has been paid for by exact work.
+pub fn vp_sampled_plan(
+    data: &DiscreteDataset,
+    pairs: &[(FeatureId, FeatureId)],
+    cluster: &ClusterConfig,
+    num_partitions: usize,
+    layout_built: bool,
+    windows: &[std::ops::Range<usize>],
+) -> PlanSpec {
+    let _ = cluster;
+    let n = data.num_rows();
+    let m = data.num_features();
+    let sampled_rows = crate::correlation::windows_len(windows);
+    let parts = num_partitions.clamp(1, m.max(1));
+    let (table_cells, wire) = table_sizes(data, pairs);
+
+    let sides = assign_sides(pairs);
+    let mut owners: Vec<FeatureId> = sides.iter().map(|&(o, _)| o).collect();
+    owners.sort_unstable();
+    owners.dedup();
+    let mut refs: Vec<FeatureId> = sides
+        .iter()
+        .map(|&(_, r)| r)
+        .filter(|&r| r != CLASS_ID)
+        .collect();
+    refs.sort_unstable();
+    refs.dedup();
+
+    let mut broadcast_bytes = refs.len() * sampled_rows;
+    let mut setup_shuffle_bytes = 0;
+    let mut setup_cells = 0.0;
+    if !layout_built {
+        setup_shuffle_bytes = n * m;
+        setup_cells = (n * m) as f64;
+        broadcast_bytes += n;
+    }
+
+    PlanSpec {
+        strategy: Strategy::Vp,
+        num_pairs: pairs.len(),
+        layout: PartitionLayout::Features { partitions: parts },
+        busy_tasks: owners.len().min(parts).max(1),
+        broadcast_bytes,
+        setup_shuffle_bytes,
+        shuffle: None,
+        collect_bytes: wire,
+        scan_cells: (pairs.len() * sampled_rows) as f64,
+        table_cells,
+        setup_cells,
+        table_collect: true,
+        sampled: true,
     }
 }
 
@@ -747,6 +854,43 @@ mod tests {
             "the tall-and-tiny delta must flip the winner to vp: vp {:?} vs hp {:?}",
             vp_d.estimate(&cluster, rate),
             hp_d.estimate(&cluster, rate)
+        );
+    }
+
+    #[test]
+    fn sampled_plans_scan_only_the_windows() {
+        let dd = dataset(10_000, 12, 4);
+        let cluster = ClusterConfig::with_nodes(4);
+        let pairs = class_batch(12);
+        let windows = crate::correlation::default_windows(10_000);
+        let sampled = crate::correlation::windows_len(&windows);
+        assert!(sampled > 0 && sampled <= 10_000 / 4);
+
+        let hp = hp_sampled_plan(&dd, &pairs, &cluster, &windows);
+        assert!(hp.sampled && hp.table_collect);
+        assert_eq!(hp.scan_cells, (12 * sampled) as f64);
+        assert_eq!(
+            hp.layout.partitions(),
+            windows.len(),
+            "one hp map task per sample window"
+        );
+
+        let vp = vp_sampled_plan(&dd, &pairs, &cluster, 12, true, &windows);
+        assert!(vp.sampled && vp.table_collect);
+        assert_eq!(vp.scan_cells, (12 * sampled) as f64);
+        assert_eq!(vp.broadcast_bytes, 0, "class pairs broadcast nothing");
+        let ff = vp_sampled_plan(&dd, &[(0, 5), (1, 5)], &cluster, 12, true, &windows);
+        assert_eq!(ff.broadcast_bytes, sampled, "window slices of feature 5 only");
+
+        // A sketch job must be strictly cheaper than the exact full job
+        // it hopes to displace — that margin is the planner's whole case
+        // for sampling.
+        let full = hp_plan(&dd, &pairs, &cluster, 20);
+        assert!(
+            hp.estimate(&cluster, 2e-9).total() < full.estimate(&cluster, 2e-9).total(),
+            "sampled {:?} vs full {:?}",
+            hp.estimate(&cluster, 2e-9),
+            full.estimate(&cluster, 2e-9)
         );
     }
 

@@ -40,6 +40,9 @@ use std::sync::{Arc, Mutex};
 
 use crate::cfs::{Correlator, SharedCorrelator};
 use crate::core::FeatureId;
+use crate::correlation::sampled::{
+    bounds_for_pairs, default_windows, windows_len, Marginals, SuBounds,
+};
 use crate::data::columnar::DiscreteDataset;
 use crate::dicfs::hp::HorizontalCorrelator;
 use crate::dicfs::plan::{self, PlanCost, PlanDecision, PlanSpec, Strategy};
@@ -60,6 +63,14 @@ pub const DEFAULT_RATE_SECS_PER_CELL: f64 = 2e-9;
 
 /// EMA weight of a new rate observation.
 const RATE_EMA_ALPHA: f64 = 0.3;
+
+/// Fraction of sketched candidates the pruned search is assumed to
+/// still evaluate exactly (survivors + boundary cases). The sketch-
+/// then-verify gate (DESIGN.md §16) only sketches a batch when the
+/// predicted sketch cost undercuts `(1 − EXPECTED_SURVIVOR_FRAC)` of
+/// the predicted exact cost — i.e. when sketching pays for itself even
+/// if ~30% of the candidates end up exactly evaluated anyway.
+pub const EXPECTED_SURVIVOR_FRAC: f64 = 0.3;
 
 /// Floor for calibrated rates (observations of trivially small batches
 /// must not collapse the rate to zero).
@@ -126,6 +137,15 @@ pub struct PlannerCalibration {
     pub vp_tiled_rate: f64,
     /// Observations behind `vp_tiled_rate`.
     pub vp_tiled_observations: usize,
+    /// Secs-per-cell estimate of **sampled-sketch jobs** (DESIGN.md
+    /// §16). A dedicated slot: sketch scans (tiny strided windows,
+    /// table collect) have a different cost profile than full exact
+    /// scans, and mixing the observations would skew both rates.
+    /// Excluded from [`Self::min_calibrated_rate`] — that price is the
+    /// caches' *exact recompute* cost, which a sketch never replaces.
+    pub sampled_rate: f64,
+    /// Observations behind `sampled_rate`.
+    pub sampled_observations: usize,
 }
 
 impl PlannerCalibration {
@@ -156,6 +176,9 @@ struct PlannerState {
     /// rate of engine slot `e` under that strategy.
     hp: Vec<StrategyState>,
     vp: Vec<StrategyState>,
+    /// Dedicated calibration slot for sampled-sketch jobs (see
+    /// [`PlannerCalibration::sampled_rate`]).
+    sampled: StrategyState,
     /// Whether the vp columnar layout has been built (stops charging the
     /// setup shuffle to vp candidate plans).
     vp_built: bool,
@@ -243,6 +266,7 @@ impl Planner {
             state: Mutex::new(PlannerState {
                 hp: vec![StrategyState::fresh(); slots],
                 vp: vec![StrategyState::fresh(); slots],
+                sampled: StrategyState::fresh(),
                 vp_built: false,
                 decisions: Vec::new(),
             }),
@@ -350,6 +374,72 @@ impl Planner {
         self.choose(hp_spec, vp_spec)
     }
 
+    /// The calibrated secs-per-cell rate of sampled-sketch jobs (the
+    /// prior until the first [`Self::observe_sampled`]).
+    pub fn sampled_rate(&self) -> f64 {
+        self.state.lock().unwrap().sampled.rate
+    }
+
+    /// Lower a **sampled-sketch job** (DESIGN.md §16) over the seeded
+    /// `windows` and return the cheaper candidate, priced with the
+    /// dedicated sampled rate. hp is always offered; vp only once its
+    /// columnar layout exists — building the layout just to sketch
+    /// would hide a large exact-sized cost behind an "approximate" job.
+    /// Always routed to engine slot 0: sketch tables are plain
+    /// `merge_rows` scans with no engine-specific kernel to pick
+    /// between.
+    pub fn plan_sampled_batch(
+        &self,
+        pairs: &[(FeatureId, FeatureId)],
+        windows: &[std::ops::Range<usize>],
+    ) -> PlannedBatch {
+        let rate = self.sampled_rate();
+        let hp_spec = plan::hp_sampled_plan(&self.data, pairs, &self.cluster, windows);
+        let hp_cost = hp_spec.estimate(&self.cluster, rate);
+        let mut best = (Strategy::Hp, hp_spec, hp_cost);
+        let mut rejected = f64::INFINITY;
+        if self.vp_built() {
+            let vp_spec = plan::vp_sampled_plan(
+                &self.data,
+                pairs,
+                &self.cluster,
+                self.vp_partitions,
+                true,
+                windows,
+            );
+            let vp_cost = vp_spec.estimate(&self.cluster, rate);
+            if vp_cost.total() < best.2.total() {
+                rejected = best.2.total();
+                best = (Strategy::Vp, vp_spec, vp_cost);
+            } else {
+                rejected = vp_cost.total();
+            }
+        }
+        PlannedBatch {
+            strategy: best.0,
+            engine: 0,
+            engine_name: self.engines[0],
+            spec: best.1,
+            predicted: best.2,
+            rejected_secs: rejected,
+        }
+    }
+
+    /// Close the loop on one executed **sampled** batch: refine the
+    /// dedicated sampled rate. Deliberately logs **no**
+    /// [`PlanDecision`] — decisions are the exact-job audit trail the
+    /// service attributes to its reports, and several consumers count
+    /// them 1:1 against exact jobs; sketch work is reported through
+    /// `sampled_cells` instead.
+    pub fn observe_sampled(&self, planned: &PlannedBatch, observed: &SimTime) {
+        let units = planned.spec.parallel_cell_units(&self.cluster);
+        let overhead = planned.spec.overhead_secs(&self.cluster);
+        if units > 0.0 {
+            let implied = (observed.compute_secs - overhead).max(0.0) / units;
+            self.state.lock().unwrap().sampled.observe(implied);
+        }
+    }
+
     /// Close the loop on one executed batch: log the decision
     /// (predicted vs observed) and refine the chosen strategy's compute
     /// rate from the observed cost. `observed` is the virtual-cluster
@@ -388,6 +478,8 @@ impl Planner {
             hp_tiled_observations: hp_t.observations,
             vp_tiled_rate: vp_t.rate,
             vp_tiled_observations: vp_t.observations,
+            sampled_rate: st.sampled.rate,
+            sampled_observations: st.sampled.observations,
         }
     }
 
@@ -417,6 +509,10 @@ impl Planner {
                 observations: cal.vp_tiled_observations,
             };
         }
+        st.sampled = StrategyState {
+            rate: cal.sampled_rate.max(MIN_RATE),
+            observations: cal.sampled_observations,
+        };
     }
 
     /// Snapshot of every decision made so far, in batch order.
@@ -453,6 +549,9 @@ pub struct AutoCorrelator {
     /// first pays the columnar shuffle, siblings share its handles.
     vp: Mutex<Option<Arc<Vec<VerticalCorrelator>>>>,
     vp_partitions: usize,
+    /// Exact full-column marginal counts for the sampled-bounds finish,
+    /// memoized across every sketch this backend serves.
+    marginals: Marginals,
 }
 
 impl AutoCorrelator {
@@ -512,6 +611,7 @@ impl AutoCorrelator {
             hp,
             vp: Mutex::new(None),
             vp_partitions,
+            marginals: Marginals::new(),
         }
     }
 
@@ -610,11 +710,59 @@ impl SharedCorrelator for AutoCorrelator {
     fn planner_calibration(&self) -> Option<PlannerCalibration> {
         Some(self.planner.calibration())
     }
+
+    /// The auto **sampled-sketch job** (DESIGN.md §16), gated by the
+    /// cost model: sketch only when the predicted sketch cost (the
+    /// planned job plus the driver's one-off marginal passes, priced at
+    /// the sampled rate) undercuts `(1 − EXPECTED_SURVIVOR_FRAC)` of
+    /// the predicted exact cost of the same batch. Declining is always
+    /// sound — the search falls back to exact evaluation. Sketches are
+    /// observed into the dedicated sampled slot and logged as **no**
+    /// plan decision (see [`Planner::observe_sampled`]).
+    fn compute_bounds_batch(&self, pairs: &[(FeatureId, FeatureId)]) -> Option<SuBounds> {
+        if pairs.is_empty() {
+            return Some(SuBounds::default());
+        }
+        let windows = default_windows(self.data.num_rows());
+        if windows.is_empty() {
+            return None;
+        }
+        let planned = self.planner.plan_sampled_batch(pairs, &windows);
+        let marginal_cells =
+            (self.marginals.uncounted_columns(pairs) * self.data.num_rows()) as f64;
+        let sketch_secs =
+            planned.predicted.total() + marginal_cells * self.planner.sampled_rate();
+        let exact_secs = self.planner.plan_batch(pairs).predicted.total();
+        if sketch_secs >= (1.0 - EXPECTED_SURVIVOR_FRAC) * exact_secs {
+            return None;
+        }
+        let recorder = Arc::new(StageRecorder::new());
+        let tables = {
+            let _guard = observe_stages(Arc::clone(&recorder) as Arc<dyn PlanObserver>);
+            match planned.strategy {
+                Strategy::Hp => self.hp[planned.engine].sampled_ctables(pairs, &windows),
+                Strategy::Vp => self.vp_backend()[planned.engine].sampled_ctables(pairs, &windows),
+            }
+        };
+        let sim = simulate_job_time(&recorder.metrics(), self.planner.cluster(), 0.0);
+        self.planner.observe_sampled(&planned, &sim);
+        Some(bounds_for_pairs(
+            &self.data,
+            &self.marginals,
+            pairs,
+            &tables,
+            windows_len(&windows),
+        ))
+    }
 }
 
 impl Correlator for AutoCorrelator {
     fn compute(&mut self, pairs: &[(FeatureId, FeatureId)]) -> Vec<f64> {
         self.compute_batch(pairs)
+    }
+
+    fn compute_bounds(&mut self, pairs: &[(FeatureId, FeatureId)]) -> Option<SuBounds> {
+        self.compute_bounds_batch(pairs)
     }
 }
 
@@ -654,8 +802,14 @@ mod tests {
             hp_tiled_observations: 0,
             vp_tiled_rate: 2e-9,
             vp_tiled_observations: 0,
+            sampled_rate: 1e-9,
+            sampled_observations: 5,
         };
-        assert_eq!(cal.min_calibrated_rate(), None, "all slots at the prior");
+        assert_eq!(
+            cal.min_calibrated_rate(),
+            None,
+            "all exact slots at the prior — the sampled slot never counts"
+        );
         cal.hp_observations = 3;
         assert_eq!(cal.min_calibrated_rate(), Some(5e-9));
         cal.vp_tiled_observations = 1;
@@ -820,6 +974,86 @@ mod tests {
             assert_eq!(&*b, f);
         }
         assert_eq!(corr.planner().decisions().len(), 3, "every table job is a decision");
+    }
+
+    #[test]
+    fn sampled_jobs_calibrate_their_own_slot_without_decisions() {
+        let dd = dataset(2_000, 10, 51);
+        let planner = Planner::new(Arc::clone(&dd), ClusterConfig::with_nodes(3), None, None);
+        let pairs: Vec<(usize, usize)> = (0..10).map(|f| (f, CLASS_ID)).collect();
+        let windows = crate::correlation::default_windows(dd.num_rows());
+
+        let planned = planner.plan_sampled_batch(&pairs, &windows);
+        assert!(planned.spec.sampled && planned.spec.table_collect);
+        assert_eq!(
+            planned.strategy,
+            Strategy::Hp,
+            "vp never offered before its layout is built"
+        );
+        assert_eq!(planned.engine, 0);
+
+        let observed = SimTime {
+            compute_secs: planned.predicted.total() * 2.0 + 1e-4,
+            network_secs: 0.0,
+            driver_secs: 0.0,
+        };
+        planner.observe_sampled(&planned, &observed);
+        let cal = planner.calibration();
+        assert_eq!(cal.sampled_observations, 1);
+        assert_ne!(cal.sampled_rate, DEFAULT_RATE_SECS_PER_CELL);
+        // Exact slots untouched, and no decision was logged.
+        assert_eq!(cal.hp_observations + cal.vp_observations, 0);
+        assert!(planner.decisions().is_empty(), "sketches log no decisions");
+
+        // The sampled slot round-trips through the calibration transfer.
+        let fresh = Planner::new(Arc::clone(&dd), ClusterConfig::with_nodes(3), None, None);
+        fresh.set_calibration(cal);
+        let got = fresh.calibration();
+        assert_eq!(got.sampled_rate.to_bits(), cal.sampled_rate.to_bits());
+        assert_eq!(got.sampled_observations, 1);
+
+        // Once the layout exists, vp enters the sampled candidate set
+        // and the loser is priced as the rejected alternative.
+        planner.mark_vp_built();
+        let with_vp = planner.plan_sampled_batch(&pairs, &windows);
+        assert!(with_vp.rejected_secs.is_finite());
+    }
+
+    #[test]
+    fn auto_bounds_are_sound_and_log_no_decisions() {
+        use crate::correlation::su::symmetrical_uncertainty;
+
+        let (_ctx, corr, dd) = auto(2_000, 10);
+        let pairs: Vec<(usize, usize)> =
+            (0..10).map(|f| (f, CLASS_ID)).chain([(0, 5), (2, 7)]).collect();
+        let before = corr.planner().decisions().len();
+        // The gate may also decline on this shape — a legal, always-
+        // sound outcome (the search then runs fully exact).
+        if let Some(b) = corr.compute_bounds_batch(&pairs) {
+            assert_eq!(b.intervals.len(), pairs.len());
+            assert!(b.sampled_cells > 0);
+            for (iv, &(a, c)) in b.intervals.iter().zip(&pairs) {
+                let (x, bx) = dd.column(a);
+                let (y, by) = dd.column(c);
+                let exact = symmetrical_uncertainty(x, bx, y, by);
+                assert!(
+                    iv.lo <= exact && exact <= iv.hi,
+                    "pair {:?}: exact {exact} outside [{}, {}]",
+                    (a, c),
+                    iv.lo,
+                    iv.hi
+                );
+            }
+            assert_eq!(corr.planner().calibration().sampled_observations, 1);
+        }
+        assert_eq!(
+            corr.planner().decisions().len(),
+            before,
+            "sketching must not pollute the exact decision log"
+        );
+        // Tiny datasets always decline (no sample windows).
+        let (_ctx2, tiny, _) = auto(3, 4);
+        assert!(tiny.compute_bounds_batch(&[(0, CLASS_ID)]).is_none());
     }
 
     #[test]

@@ -307,6 +307,11 @@ impl RemoteCorrelator {
     }
 }
 
+// Note on sampled bounds (DESIGN.md §16): the remote correlators keep
+// the trait's default `compute_bounds_batch` — decline. Sketch jobs are
+// only worthwhile when they are much cheaper than exact batches, and
+// over IPC the per-job round-trip dominates the saved cell scans;
+// declining keeps every remote search exact with zero protocol surface.
 impl SharedCorrelator for RemoteCorrelator {
     fn compute_batch(&self, pairs: &[(FeatureId, FeatureId)]) -> Vec<f64> {
         if pairs.is_empty() {

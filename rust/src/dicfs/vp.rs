@@ -25,7 +25,10 @@ use std::sync::Arc;
 
 use crate::cfs::{Correlator, SharedCorrelator};
 use crate::core::{FeatureId, CLASS_ID};
-use crate::correlation::ContingencyTable;
+use crate::correlation::sampled::{
+    bounds_for_pairs, default_windows, sampled_table, windows_len, SuBounds,
+};
+use crate::correlation::{ContingencyTable, Marginals};
 use crate::data::columnar::DiscreteDataset;
 use crate::dicfs::plan::{self, PlanSpec};
 use crate::runtime::{ColumnPair, SuEngine};
@@ -42,6 +45,9 @@ pub struct VerticalCorrelator {
     /// `localSU` workers read it from here instead of reaching into the
     /// driver-side dataset.
     class_bc: Broadcast<(Vec<u8>, u16)>,
+    /// Exact full-column marginal counts for the sampled-bounds finish
+    /// (DESIGN.md §16), shared across engine siblings.
+    marginals: Arc<Marginals>,
 }
 
 impl VerticalCorrelator {
@@ -81,6 +87,7 @@ impl VerticalCorrelator {
             ctx: Arc::clone(ctx),
             columns,
             class_bc,
+            marginals: Arc::new(Marginals::new()),
         }
     }
 
@@ -95,6 +102,7 @@ impl VerticalCorrelator {
             ctx: Arc::clone(&self.ctx),
             columns: self.columns.clone(),
             class_bc: self.class_bc.clone(),
+            marginals: Arc::clone(&self.marginals),
         }
     }
 
@@ -155,6 +163,52 @@ impl VerticalCorrelator {
             work.entry(owner).or_default().push((i, pair));
         }
         (refs_bc, Arc::new(work))
+    }
+
+    /// The vp **sampled-sketch job** (DESIGN.md §16): each owner
+    /// partition builds its pairs' *sampled* contingency tables — the
+    /// deterministic window subsample, counted through the same
+    /// [`sampled_table`] routine the sequential correlator uses, in
+    /// canonical (a, b) orientation — and the tables are collected at
+    /// wire size. Only the windows' slices of each reference column are
+    /// priced into the broadcast, so a sketch over an already-built
+    /// columnar layout ships `refs × sampled_rows` bytes. Counts are
+    /// u64, so the tables (and any bounds derived from them) are
+    /// bit-identical to the sequential and hp sketches.
+    pub fn sampled_ctables(
+        &self,
+        pairs: &[(FeatureId, FeatureId)],
+        windows: &[Range<usize>],
+    ) -> Vec<ContingencyTable> {
+        if pairs.is_empty() || windows.is_empty() {
+            return vec![];
+        }
+        let (refs_bc, work) = self.batch_assembly(pairs, windows_len(windows));
+
+        let data = Arc::clone(&self.data);
+        let w2 = Arc::clone(&work);
+        let class_bc = self.class_bc.clone();
+        let windows = windows.to_vec();
+        let tables: Rdd<(usize, ContingencyTable)> =
+            self.columns.map_partitions("localCTablesSampled", move |_, cols| {
+                let _ = &refs_bc; // broadcast lifetime mirrors Spark semantics
+                let (class_col, class_arity) = (&class_bc.0, class_bc.1);
+                let mut out = Vec::new();
+                for (fid, col) in cols {
+                    let Some(items) = w2.get(fid) else { continue };
+                    for &(pair_idx, (a, b)) in items {
+                        let class = (class_col.as_slice(), class_arity);
+                        let (x, bins_x) = resolve_side(a, *fid, col, class, &data);
+                        let (y, bins_y) = resolve_side(b, *fid, col, class, &data);
+                        out.push((pair_idx, sampled_table(x, bins_x, y, bins_y, &windows)));
+                    }
+                }
+                out
+            });
+        let mut collected = tables.collect_sized(|(_, t)| t.wire_bytes());
+        collected.sort_by_key(|(i, _)| *i);
+        debug_assert_eq!(collected.len(), pairs.len());
+        collected.into_iter().map(|(_, t)| t).collect()
     }
 }
 
@@ -288,11 +342,38 @@ impl SharedCorrelator for VerticalCorrelator {
         // restore request order.
         plan::collect_su(&sus, pairs.len())
     }
+
+    /// Sound SU intervals from the vp sampled-sketch job (DESIGN.md §16):
+    /// run [`Self::sampled_ctables`] over the deterministic default
+    /// windows, then finish into intervals on the driver with exact
+    /// full-column marginals. Declines only when the dataset is too small
+    /// to carry sample windows.
+    fn compute_bounds_batch(&self, pairs: &[(FeatureId, FeatureId)]) -> Option<SuBounds> {
+        if pairs.is_empty() {
+            return Some(SuBounds::default());
+        }
+        let windows = default_windows(self.data.num_rows());
+        if windows.is_empty() {
+            return None;
+        }
+        let tables = self.sampled_ctables(pairs, &windows);
+        Some(bounds_for_pairs(
+            &self.data,
+            &self.marginals,
+            pairs,
+            &tables,
+            windows_len(&windows),
+        ))
+    }
 }
 
 impl Correlator for VerticalCorrelator {
     fn compute(&mut self, pairs: &[(FeatureId, FeatureId)]) -> Vec<f64> {
         self.compute_batch(pairs)
+    }
+
+    fn compute_bounds(&mut self, pairs: &[(FeatureId, FeatureId)]) -> Option<SuBounds> {
+        self.compute_bounds_batch(pairs)
     }
 }
 
@@ -439,6 +520,53 @@ mod tests {
         );
         let collect = after.stages.last().unwrap();
         assert_eq!(collect.collect_bytes, spec.collect_bytes);
+    }
+
+    #[test]
+    fn sampled_job_matches_sequential_sketch_and_prices_window_broadcast() {
+        use crate::cfs::sequential::SequentialCorrelator;
+
+        let (ctx, corr, dd) = setup(14);
+        let pairs = vec![(0, 5), (1, 5), (3, CLASS_ID)];
+        let windows = default_windows(dd.num_rows());
+        assert!(!windows.is_empty());
+        let sampled_rows = windows_len(&windows);
+
+        // The sketch broadcast ships only the windows' slices of the one
+        // non-class reference column (feature 5).
+        let before = ctx.metrics().total_broadcast_bytes();
+        let tables = corr.sampled_ctables(&pairs, &windows);
+        let after = ctx.metrics().total_broadcast_bytes();
+        // refs slice + the broadcast pair list is not part of this job
+        // kind (vp ships the owner map through the closure), so the
+        // delta is exactly one sliced reference column.
+        assert_eq!(after - before, sampled_rows);
+
+        // Owner-partition sampled tables equal the driver-side sampled
+        // tables bit-for-bit, in canonical (a, b) orientation.
+        for (t, &(a, b)) in tables.iter().zip(&pairs) {
+            let (x, bx) = dd.column(a);
+            let (y, by) = dd.column(b);
+            assert_eq!(t, &sampled_table(x, bx, y, by, &windows));
+        }
+
+        // Scheme-independence: vp bounds == sequential bounds, bit-for-bit
+        // — with hp.rs's matching test this pins seq == hp == vp.
+        let vp = corr.compute_bounds_batch(&pairs).expect("600 rows sketch");
+        let mut seq = SequentialCorrelator::new(&dd);
+        let sq = seq.compute_bounds(&pairs).unwrap();
+        assert_eq!(vp.sampled_cells, sq.sampled_cells);
+        for (a, b) in vp.intervals.iter().zip(&sq.intervals) {
+            assert_eq!(a, b);
+        }
+
+        // The exact SU sits inside every interval.
+        for (iv, &(a, b)) in vp.intervals.iter().zip(&pairs) {
+            let (x, bx) = dd.column(a);
+            let (y, by) = dd.column(b);
+            let exact = symmetrical_uncertainty(x, bx, y, by);
+            assert!(iv.lo <= exact && exact <= iv.hi);
+        }
     }
 
     #[test]

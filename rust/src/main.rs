@@ -20,7 +20,7 @@ use std::collections::HashMap;
 use std::process::ExitCode;
 use std::sync::Arc;
 
-use dicfs::cfs::SequentialCfs;
+use dicfs::cfs::{CfsConfig, PruneMode, SequentialCfs};
 use dicfs::data::synth::{by_name, SynthConfig, FAMILIES};
 use dicfs::dicfs::{DiCfs, DiCfsConfig, Partitioning};
 use dicfs::discretize::discretize_dataset;
@@ -34,7 +34,7 @@ dicfs — Distributed Correlation-Based Feature Selection (paper reproduction)
 USAGE:
   dicfs select   [--family NAME | --csv FILE] [--partitioning seq|hp|vp|auto]
                  [--nodes N] [--engine native|tiled|auto] [--partitions P]
-                 [--rows N] [--features M] [--seed S]
+                 [--rows N] [--features M] [--seed S] [--prune auto|off]
                  [--workers-proc N [--speculative true]]
   dicfs generate --family NAME --rows N [--features M] [--seed S] --out FILE
   dicfs generate --describe
@@ -54,6 +54,12 @@ every decision. `--scheme` is accepted as an alias.
 default — under adaptive partitioning the planner also prices the
 engine per batch and logs the winner; `pjrt` with the feature built).
 
+`--prune` controls sketch-then-verify candidate pruning (DESIGN.md §16):
+`auto` (the default) lets the search skip best-first candidates whose
+sampled SU upper bound provably cannot survive the queue cut, with all
+survivors verified exactly — selections are bit-identical to `off`,
+which disables sketching entirely.
+
 `--workers-proc N` runs the correlation jobs on N worker OS processes
 speaking a binary protocol over Unix sockets (results are bit-identical
 to the in-process backend); shuffle bytes are then *measured* and the
@@ -62,7 +68,8 @@ network model is calibrated from the observed transfers.
 workers.
 
 FAMILIES: ecbdl14, higgs, kddcup99, epsilon (Table 1 of the paper),
-          wide (features >> rows, for the planner harness)
+          wide (features >> rows, for the planner harness),
+          ultrawide (>=50k features over few rows, for the pruning path)
 
 A `queries` script declares tenant datasets and the traffic over them —
 queries, `append` directives that ingest new instances mid-workload
@@ -164,9 +171,19 @@ fn cmd_select(flags: &HashMap<String, String>) {
         .map(String::as_str)
         .unwrap_or("auto");
     let nodes = get_usize(flags, "nodes", 10);
+    let prune = flags
+        .get("prune")
+        .map(|s| {
+            PruneMode::parse(s).unwrap_or_else(|| panic!("--prune must be auto|off, got {s:?}"))
+        })
+        .unwrap_or(PruneMode::Auto);
     match scheme {
         "seq" => {
-            let (r, secs) = timed(|| SequentialCfs::default().select_discrete(&dd));
+            let cfs = SequentialCfs::new(CfsConfig {
+                prune,
+                ..CfsConfig::default()
+            });
+            let (r, secs) = timed(|| cfs.select_discrete(&dd));
             print_result(&r, secs, None);
         }
         "hp" | "vp" | "auto" => {
@@ -176,6 +193,7 @@ fn cmd_select(flags: &HashMap<String, String>) {
                 _ => Partitioning::Auto,
             };
             let mut cfg = DiCfsConfig::for_scheme(partitioning, nodes);
+            cfg.cfs.prune = prune;
             if let Some(p) = flags.get("partitions") {
                 cfg.num_partitions = Some(p.parse().expect("--partitions"));
             }
@@ -204,6 +222,12 @@ fn print_result(
         "iterations: {}, correlations computed: {}, locally-predictive added: {:?}",
         r.iterations, r.correlations_computed, r.locally_predictive_added
     );
+    if r.pruned_candidates > 0 || r.sampled_cells > 0 {
+        println!(
+            "pruning: {} candidates skipped via {} sketch cells (selections exact)",
+            r.pruned_candidates, r.sampled_cells
+        );
+    }
     println!("wall: {wall:.3}s");
     if let Some(run) = run {
         println!(

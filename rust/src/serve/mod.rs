@@ -70,7 +70,9 @@ pub mod registry;
 pub mod scheduler;
 pub mod script;
 
-pub use registry::{worst_case_cache_bytes, DatasetId, DatasetVersion, RegisteredDataset};
+pub use registry::{
+    worst_case_cache_bytes, DatasetId, DatasetVersion, PruneCounters, RegisteredDataset,
+};
 pub use scheduler::{SuJobReport, TenantStats};
 
 use std::sync::atomic::{AtomicUsize, Ordering};
@@ -81,6 +83,7 @@ use std::time::Instant;
 use crate::cfs::best_first::{BestFirstSearch, CfsConfig, WarmStart};
 use crate::cfs::Correlator;
 use crate::core::{FeatureId, SelectionResult};
+use crate::correlation::sampled::{SuBounds, SuInterval};
 use crate::correlation::{CacheStats, SuCache};
 use crate::data::columnar::{Dataset, DiscreteDataset};
 use crate::discretize::discretize_dataset;
@@ -576,6 +579,10 @@ impl DicfsService {
         let search = BestFirstSearch::new(spec.cfs);
         let ((result, warm_out), wall_secs) =
             timed(|| search.run_traced(m, correlator.as_mut(), &mut handle, warm));
+        // Attribute this query's pruning work to the lineage counters;
+        // the next SU job report drains them (DESIGN.md §16).
+        ver.prune
+            .record(result.sampled_cells, result.pruned_candidates as u64);
         QueryReport {
             query,
             dataset: reg.id,
@@ -662,6 +669,52 @@ impl Correlator for DirectCorrelator {
     fn compute(&mut self, pairs: &[(FeatureId, FeatureId)]) -> Vec<f64> {
         self.version.resolve(pairs).values
     }
+
+    fn compute_bounds(&mut self, pairs: &[(FeatureId, FeatureId)]) -> Option<SuBounds> {
+        bounds_at_version(&self.version, pairs)
+    }
+}
+
+/// Sketch-bounds funnel shared by both query-side correlators
+/// (DESIGN.md §16): serve pairs whose advisory interval is already
+/// published at the pinned row count, sketch only the rest through the
+/// version's provider on the query thread (sketches are cheap and
+/// advisory — they do not occupy scheduler slots), and publish the
+/// fresh intervals for concurrent queries. Declines iff the provider
+/// declines; the search then stays exact.
+fn bounds_at_version(
+    version: &DatasetVersion,
+    pairs: &[(FeatureId, FeatureId)],
+) -> Option<SuBounds> {
+    let rows = version.rows();
+    let mut intervals: Vec<Option<SuInterval>> = pairs
+        .iter()
+        .map(|&(a, b)| version.cache.probe_bounds(a, b, rows))
+        .collect();
+    let need: Vec<(FeatureId, FeatureId)> = pairs
+        .iter()
+        .zip(&intervals)
+        .filter(|(_, iv)| iv.is_none())
+        .map(|(&p, _)| p)
+        .collect();
+    let mut sampled_cells = 0;
+    if !need.is_empty() {
+        let fresh = version.provider.compute_bounds_batch(&need)?;
+        debug_assert_eq!(fresh.intervals.len(), need.len());
+        version.cache.publish_bounds(rows, &need, &fresh.intervals);
+        sampled_cells = fresh.sampled_cells;
+        let mut it = fresh.intervals.into_iter();
+        for slot in intervals.iter_mut().filter(|s| s.is_none()) {
+            *slot = it.next();
+        }
+    }
+    Some(SuBounds {
+        intervals: intervals
+            .into_iter()
+            .map(|iv| iv.expect("every probe miss sketched"))
+            .collect(),
+        sampled_cells,
+    })
 }
 
 /// Query-side miss funnel: implements the ordinary [`Correlator`]
@@ -686,6 +739,10 @@ impl Correlator for MissForwarder<'_> {
         // (scheduler, other datasets, other queries) keeps running.
         rx.recv()
             .expect("SU job failed before answering this query's miss batch")
+    }
+
+    fn compute_bounds(&mut self, pairs: &[(FeatureId, FeatureId)]) -> Option<SuBounds> {
+        bounds_at_version(&self.version, pairs)
     }
 }
 

@@ -31,12 +31,17 @@
 //! cache. In-flight queries keep working through their pinned `Arc`s.
 
 use std::ops::Range;
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex, RwLock};
 
 use crate::cfs::SharedCorrelator;
 use crate::core::{pair_key, Error, FeatureId, Result};
+use crate::correlation::sampled::{
+    bounds_for_pairs, default_windows, sampled_table, windows_len, SuBounds,
+};
 use crate::correlation::{
-    ContingencyTable, VersionedEntry, VersionedSuCache, VersionedSuHandle, ENTRY_OVERHEAD_BYTES,
+    ContingencyTable, Marginals, VersionedEntry, VersionedSuCache, VersionedSuHandle,
+    ENTRY_OVERHEAD_BYTES,
 };
 use crate::data::columnar::DiscreteDataset;
 use crate::dicfs::planner::AutoCorrelator;
@@ -81,6 +86,39 @@ pub(crate) fn projected_demand_bytes(data: &DiscreteDataset, cache_budget: Optio
     data.footprint_bytes().saturating_add(cache)
 }
 
+/// Lineage-wide pruning counters (DESIGN.md §16): how much sketch work
+/// ran and how many best-first candidates were pruned on this dataset,
+/// accumulated by finished queries and drained (swap-to-zero) into the
+/// next [`SuJobReport`](crate::serve::SuJobReport). Shared by every
+/// version of a lineage, like the SU cache — pruning statistics survive
+/// appends.
+#[derive(Debug, Default)]
+pub struct PruneCounters {
+    /// Σ sketch cells scanned (`pairs × sampled rows`) by queries since
+    /// the last drain.
+    pub sampled_cells: AtomicU64,
+    /// Σ best-first candidates pruned by bounds since the last drain.
+    pub pruned_candidates: AtomicU64,
+}
+
+impl PruneCounters {
+    /// Add one query's pruning work to the lineage totals.
+    pub fn record(&self, sampled_cells: u64, pruned_candidates: u64) {
+        self.sampled_cells.fetch_add(sampled_cells, Ordering::Relaxed);
+        self.pruned_candidates
+            .fetch_add(pruned_candidates, Ordering::Relaxed);
+    }
+
+    /// Drain both counters to zero, returning `(sampled_cells,
+    /// pruned_candidates)` — the report attribution step.
+    pub fn drain(&self) -> (u64, u64) {
+        (
+            self.sampled_cells.swap(0, Ordering::Relaxed),
+            self.pruned_candidates.swap(0, Ordering::Relaxed),
+        )
+    }
+}
+
 /// One version of a registered dataset: the merged data as of some
 /// append, its partitioning layout, and a handle on the lineage's shared
 /// SU cache.
@@ -106,6 +144,8 @@ pub struct DatasetVersion {
     pub(crate) cache: VersionedSuCache,
     /// Engine used to finish SU from merged tables on the driver side.
     pub(crate) engine: Arc<dyn SuEngine>,
+    /// Lineage-wide pruning counters (shared by every version).
+    pub(crate) prune: Arc<PruneCounters>,
 }
 
 /// What one [`DatasetVersion::resolve`] call did — the accounting behind
@@ -315,6 +355,7 @@ fn build_provider(
         ServeScheme::Sequential => Box::new(LocalCorrelator {
             data: Arc::clone(data),
             engine: Arc::clone(engine),
+            marginals: Marginals::new(),
         }),
         ServeScheme::Horizontal => Box::new(HorizontalCorrelator::new(
             ctx,
@@ -367,6 +408,8 @@ pub struct RegisteredDataset {
     partitions: Option<usize>,
     /// The lineage-wide SU cache (also held by every version).
     cache: VersionedSuCache,
+    /// The lineage-wide pruning counters (also held by every version).
+    prune: Arc<PruneCounters>,
     /// The current version. Only the latest is retained — in-flight
     /// queries hold their own `Arc` pin, so superseded versions (and
     /// their full column copies + partition layouts) are freed as soon
@@ -396,6 +439,7 @@ impl RegisteredDataset {
         engines: &[Arc<dyn SuEngine>],
     ) -> Self {
         let cache = VersionedSuCache::with_budget(cache_budget);
+        let prune = Arc::new(PruneCounters::default());
         let provider = build_provider(scheme, &data, partitions, ctx, engines, None);
         let v0 = Arc::new(DatasetVersion {
             dataset: id,
@@ -406,6 +450,7 @@ impl RegisteredDataset {
             provider,
             cache: cache.clone(),
             engine: Arc::clone(&engines[0]),
+            prune: Arc::clone(&prune),
         });
         Self {
             id,
@@ -414,6 +459,7 @@ impl RegisteredDataset {
             weight,
             partitions,
             cache,
+            prune,
             current: RwLock::new(v0),
             append_lock: Mutex::new(()),
         }
@@ -430,6 +476,7 @@ impl RegisteredDataset {
         provider: Box<dyn SharedCorrelator>,
     ) -> Self {
         let cache = VersionedSuCache::new();
+        let prune = Arc::new(PruneCounters::default());
         let v0 = Arc::new(DatasetVersion {
             dataset: id,
             name: name.to_string(),
@@ -439,6 +486,7 @@ impl RegisteredDataset {
             provider,
             cache: cache.clone(),
             engine: Arc::new(crate::runtime::NativeEngine),
+            prune: Arc::clone(&prune),
         });
         Self {
             id,
@@ -447,6 +495,7 @@ impl RegisteredDataset {
             weight,
             partitions: None,
             cache,
+            prune,
             current: RwLock::new(v0),
             append_lock: Mutex::new(()),
         }
@@ -553,6 +602,7 @@ impl RegisteredDataset {
             provider,
             cache: self.cache.clone(),
             engine: Arc::clone(&engines[0]),
+            prune: Arc::clone(&self.prune),
         });
         Ok(version)
     }
@@ -566,6 +616,9 @@ impl RegisteredDataset {
 struct LocalCorrelator {
     data: Arc<DiscreteDataset>,
     engine: Arc<dyn SuEngine>,
+    /// Exact full-column marginal counts for the sampled-bounds finish
+    /// (DESIGN.md §16), memoized per version.
+    marginals: Marginals,
 }
 
 impl LocalCorrelator {
@@ -601,6 +654,35 @@ impl SharedCorrelator for LocalCorrelator {
         rows: Range<usize>,
     ) -> Vec<ContingencyTable> {
         self.engine.ctables(&self.column_pairs(pairs), rows)
+    }
+
+    /// Driver-side sampled bounds (DESIGN.md §16): sketch each pair over
+    /// the deterministic default windows and finish with exact memoized
+    /// marginals — same arithmetic as every distributed backend, so seq
+    /// tenants prune identically to hp/vp ones.
+    fn compute_bounds_batch(&self, pairs: &[(FeatureId, FeatureId)]) -> Option<SuBounds> {
+        if pairs.is_empty() {
+            return Some(SuBounds::default());
+        }
+        let windows = default_windows(self.data.num_rows());
+        if windows.is_empty() {
+            return None;
+        }
+        let tables: Vec<ContingencyTable> = pairs
+            .iter()
+            .map(|&(a, b)| {
+                let (x, bins_x) = self.data.column(a);
+                let (y, bins_y) = self.data.column(b);
+                sampled_table(x, bins_x, y, bins_y, &windows)
+            })
+            .collect();
+        Some(bounds_for_pairs(
+            &self.data,
+            &self.marginals,
+            pairs,
+            &tables,
+            windows_len(&windows),
+        ))
     }
 }
 

@@ -120,6 +120,16 @@ pub struct SuJobReport {
     /// hp/vp/seq datasets): which plan served the batch, at what
     /// predicted cost, against what observed cost.
     pub plans: Vec<PlanDecision>,
+    /// Σ sketch cells scanned by sampled-bounds requests (DESIGN.md §16)
+    /// on this lineage since the previous job's report — drained from
+    /// the lineage counters, so attribution is per-lineage, not per-job:
+    /// queries record pruning work when they *finish*, which may be
+    /// after the job that served their misses reported.
+    pub sampled_cells: u64,
+    /// Σ best-first candidates pruned by bounds since the previous
+    /// job's report (same lineage-level attribution as
+    /// [`Self::sampled_cells`]).
+    pub pruned_candidates: u64,
 }
 
 /// Per-tenant aggregate of every [`SuJobReport`] the scheduler has
@@ -523,6 +533,10 @@ pub(crate) fn run_su_job(
     // dataset at a time, so draining here yields exactly this batch's
     // decisions (fixed-scheme providers return an empty log).
     let plans = ds.provider.drain_plan_decisions();
+    // Pruning attribution is lineage-level (queries record on finish),
+    // drained swap-to-zero so each report carries the delta since the
+    // previous one.
+    let (sampled_cells, pruned_candidates) = ds.prune.drain();
 
     let report = SuJobReport {
         job_id,
@@ -546,6 +560,8 @@ pub(crate) fn run_su_job(
         est_shuffle_bytes: job_stages.total_shuffle_bytes(),
         measured_shuffle_bytes: job_stages.total_measured_shuffle_bytes(),
         plans,
+        sampled_cells,
+        pruned_candidates,
     };
     log.lock().unwrap().push(report.clone());
 

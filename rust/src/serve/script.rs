@@ -312,10 +312,22 @@ pub fn parse(text: &str) -> Result<WorkloadScript> {
                     .to_string();
                 let kv = kv_pairs(
                     &tokens[2..],
-                    &["max_fails", "queue_capacity", "locally_predictive", "repeat", "warm"],
+                    &[
+                        "max_fails",
+                        "queue_capacity",
+                        "locally_predictive",
+                        "repeat",
+                        "warm",
+                        "prune",
+                    ],
                     line_no,
                 )?;
                 let mut cfs = CfsConfig::default();
+                if let Some(v) = kv.get("prune") {
+                    cfs.prune = crate::cfs::best_first::PruneMode::parse(v).ok_or_else(|| {
+                        Error::InvalidConfig(format!("line {line_no}: prune={v:?} (auto|off)"))
+                    })?;
+                }
                 if let Some(v) = parse_num(&kv, "max_fails", line_no)? {
                     cfs.max_fails = v;
                 }

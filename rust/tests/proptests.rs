@@ -270,6 +270,126 @@ fn prop_exactness_seq_hp_vp_auto_across_shapes_and_partitions() {
 }
 
 #[test]
+fn prop_prune_auto_bit_identical_to_exact_across_schemes_engines_shapes() {
+    // The sketch-then-verify exactness claim (DESIGN.md §16), as a
+    // property: `PruneMode::Auto` must be observationally identical to
+    // plain exact expansion (`PruneMode::Off`) — same subset, same
+    // merit bits, same iteration count, same locally-predictive
+    // additions — across sequential and all distributed schemes, both
+    // SU engines, and tall / wide / ultrawide / degenerate shapes.
+    // Only the advisory counters may differ, and they must stay
+    // consistent: `Off` never sketches or prunes, and pruning a
+    // candidate implies sketch cells were paid for.
+    use dicfs::cfs::best_first::{CfsConfig, PruneMode};
+    use dicfs::core::SelectionResult;
+    use dicfs::runtime::{NativeEngine, SuEngine, TiledEngine};
+
+    fn check(auto: &SelectionResult, off: &SelectionResult, what: &str) {
+        assert_eq!(auto.selected, off.selected, "{what}: subset diverged");
+        assert_eq!(
+            auto.merit.to_bits(),
+            off.merit.to_bits(),
+            "{what}: merit not bit-identical"
+        );
+        assert_eq!(auto.iterations, off.iterations, "{what}: iteration count");
+        assert_eq!(
+            auto.locally_predictive_added, off.locally_predictive_added,
+            "{what}: post-step diverged"
+        );
+        assert_eq!(off.pruned_candidates, 0, "{what}: Off pruned");
+        assert_eq!(off.sampled_cells, 0, "{what}: Off sketched");
+        if auto.pruned_candidates > 0 {
+            assert!(auto.sampled_cells > 0, "{what}: pruned without sketching");
+        }
+    }
+
+    let mut rng = XorShift64Star::new(0x9121_5EED);
+    // (rows, features): tall, wide, ultrawide (features ≫ rows; several
+    // exact class copies over noise, so the capacity-5 queue cut sits at
+    // SU = 1 and the noise envelope provably falls below it — pruning is
+    // guaranteed to engage, not just permitted), and tiny/degenerate
+    // (too few rows for sketch windows and too few candidates for the
+    // gate — pruning must silently fall back to exact expansion).
+    let shapes = [(240usize, 10usize), (40, 20), (24, 48), (9, 3)];
+    let engines: Vec<Arc<dyn SuEngine>> =
+        vec![Arc::new(NativeEngine), Arc::new(TiledEngine::new())];
+    let mut pruned_total = 0usize;
+    let mut sampled_total = 0u64;
+
+    for (round, &(rows, features)) in shapes.iter().enumerate() {
+        let class: Vec<u8> = (0..rows).map(|_| rng.next_below(2) as u8).collect();
+        let mut cols = Vec::with_capacity(features);
+        let mut arities: Vec<u16> = Vec::with_capacity(features);
+        for f in 0..features {
+            if f == 1 {
+                // degenerate single-bin column in every dataset
+                cols.push(vec![0u8; rows]);
+                arities.push(1);
+            } else if round == 2 && f < 7 {
+                // ultrawide round: exact class copies (SU = 1)
+                cols.push(class.clone());
+                arities.push(2);
+            } else {
+                let arity = 2 + rng.next_below(6) as u16;
+                cols.push((0..rows).map(|_| rng.next_below(arity as u64) as u8).collect());
+                arities.push(arity);
+            }
+        }
+        let dd = Arc::new(
+            DiscreteDataset::new(format!("prune-{round}"), cols, arities, class, 2).unwrap(),
+        );
+
+        let seq = |mode: PruneMode| {
+            SequentialCfs::new(CfsConfig {
+                prune: mode,
+                ..CfsConfig::default()
+            })
+            .select_discrete(&dd)
+        };
+        let s_auto = seq(PruneMode::Auto);
+        let s_off = seq(PruneMode::Off);
+        check(&s_auto, &s_off, &format!("seq {rows}x{features}"));
+        pruned_total += s_auto.pruned_candidates;
+        sampled_total += s_auto.sampled_cells;
+
+        for parts in [1usize, 3, 6] {
+            for scheme in [
+                Partitioning::Horizontal,
+                Partitioning::Vertical,
+                Partitioning::Auto,
+            ] {
+                for (ei, engine) in engines.iter().enumerate() {
+                    let dist = |mode: PruneMode| {
+                        let mut cfg = DiCfsConfig::for_scheme(scheme, 3);
+                        cfg.num_partitions = Some(parts);
+                        cfg.cfs.prune = mode;
+                        DiCfs::new(cfg, Arc::clone(engine)).select(&dd).result
+                    };
+                    let auto = dist(PruneMode::Auto);
+                    let off = dist(PruneMode::Off);
+                    let what = format!("{scheme:?}/e{ei} {rows}x{features} p={parts}");
+                    check(&auto, &off, &what);
+                    // Pruned or not, every scheme walks the sequential
+                    // trajectory (the existing exactness bar).
+                    assert_eq!(auto.selected, s_off.selected, "{what}: vs sequential subset");
+                    assert_eq!(
+                        auto.merit.to_bits(),
+                        s_off.merit.to_bits(),
+                        "{what}: vs sequential merit"
+                    );
+                    pruned_total += auto.pruned_candidates;
+                    sampled_total += auto.sampled_cells;
+                }
+            }
+        }
+    }
+    // The sweep must actually exercise the sketch path — agreement is
+    // vacuous if every run declined to sketch or never pruned.
+    assert!(sampled_total > 0, "no run ever sketched");
+    assert!(pruned_total > 0, "no run ever pruned a candidate");
+}
+
+#[test]
 fn prop_incremental_append_bit_identical() {
     // The incremental-service exactness bar (DESIGN.md §12), as a
     // property: split each synth family's stream into base + k appends
