@@ -35,7 +35,7 @@ use dicfs::cfs::SequentialCfs;
 use dicfs::data::synth::{by_name, SynthConfig};
 use dicfs::discretize::discretize_dataset;
 use dicfs::harness::{bench_scale, report};
-use dicfs::serve::{DicfsService, QuerySpec, ServeScheme, ServiceConfig};
+use dicfs::serve::{AlgoSpec, DicfsService, QuerySpec, ServeScheme, ServiceConfig};
 use dicfs::sparklet::ClusterConfig;
 use dicfs::util::chart::table;
 
@@ -94,6 +94,7 @@ fn main() {
         let cold = cold_svc.query(&QuerySpec {
             dataset: cold_id,
             cfs: spec_cfs,
+            algo: AlgoSpec::Cfs,
         });
         assert_eq!(cold.result.selected, scratch.selected, "{tenant}: cold run broke");
         let cold_jobs = cold_svc.job_log();
@@ -114,6 +115,7 @@ fn main() {
         let spec = QuerySpec {
             dataset: incr_id,
             cfs: spec_cfs,
+            algo: AlgoSpec::Cfs,
         };
         let pre = incr_svc.query(&spec);
         incr_svc

@@ -1,0 +1,202 @@
+//! Ablation for the multi-algorithm substrate (DESIGN.md §17): does
+//! serving CFS and mRMR from ONE measure-keyed cache actually save
+//! contingency-table work over running each algorithm in isolation?
+//!
+//! Workload, per tenant dataset:
+//! * **isolated** — two cold services: one runs the CFS query, the
+//!   other runs the mRMR query. Each computes its own tables.
+//! * **shared** — one service runs CFS then mRMR. The mRMR query's MI
+//!   terms are *finished* driver-side from the tables the CFS query
+//!   already cached, so the shared run must compute **strictly fewer**
+//!   fresh contingency tables than the isolated pair (hard assert at
+//!   every scale — this is a counting invariant, not a timing one).
+//!
+//! Every selection in every phase is asserted bit-identical to its
+//! sequential reference driver (`SequentialCfs` / `SequentialMrmr` /
+//! `SequentialRelieff`) — the equivalence contract of DESIGN.md §17.
+//! A ReliefF query rides along on the shared service to price the
+//! row-wise member of the family (it touches no pair cache).
+//!
+//! Output: table + `bench_out/BENCH_multialgo.json`.
+
+use std::sync::Arc;
+
+use dicfs::cfs::best_first::CfsConfig;
+use dicfs::cfs::{MrmrConfig, RelieffConfig, SequentialCfs, SequentialMrmr, SequentialRelieff};
+use dicfs::data::columnar::DiscreteDataset;
+use dicfs::data::synth::{by_name, SynthConfig};
+use dicfs::discretize::discretize_dataset;
+use dicfs::harness::{bench_scale, report};
+use dicfs::serve::{AlgoSpec, DicfsService, QuerySpec, ServeScheme, ServiceConfig};
+use dicfs::sparklet::ClusterConfig;
+use dicfs::util::chart::table;
+
+struct Tenant {
+    name: &'static str,
+    scheme: ServeScheme,
+    data: Arc<DiscreteDataset>,
+}
+
+fn tenants(scale: f64) -> Vec<Tenant> {
+    let rows = |base: usize| ((base as f64 * scale) as usize).max(300);
+    let mk = |family: &str, r: usize, seed: u64, features: usize| {
+        let raw = by_name(
+            family,
+            &SynthConfig {
+                rows: r,
+                seed,
+                features: Some(features),
+            },
+        );
+        Arc::new(discretize_dataset(&raw).expect("discretize tenant"))
+    };
+    vec![
+        Tenant {
+            name: "higgs-hp",
+            scheme: ServeScheme::Horizontal,
+            data: mk("higgs", rows(2_000), 31, 14),
+        },
+        Tenant {
+            name: "kdd-auto",
+            scheme: ServeScheme::Auto,
+            data: mk("kddcup99", rows(1_500), 32, 12),
+        },
+        Tenant {
+            name: "eps-seq",
+            scheme: ServeScheme::Sequential,
+            data: mk("epsilon", rows(1_000), 33, 16),
+        },
+    ]
+}
+
+fn service(nodes: usize) -> DicfsService {
+    DicfsService::new(ServiceConfig {
+        cluster: ClusterConfig::with_nodes(nodes),
+        max_inflight_jobs: 2,
+        ..ServiceConfig::default()
+    })
+}
+
+fn spec(dataset: usize, algo: AlgoSpec) -> QuerySpec {
+    QuerySpec {
+        dataset,
+        cfs: CfsConfig::default(),
+        algo,
+    }
+}
+
+fn main() {
+    let scale = bench_scale();
+    let tenants = tenants(scale);
+    println!("\n=== multi-algorithm substrate ablation (scale {scale}) ===\n");
+
+    let mut rows = Vec::new();
+    let mut tenant_json = Vec::new();
+    let mut total_iso = 0usize;
+    let mut total_shared = 0usize;
+
+    for t in &tenants {
+        // Sequential reference drivers: the oracles every phase must
+        // match bit-for-bit.
+        let cfs_ref = SequentialCfs::default().select_discrete(&t.data);
+        let mrmr_ref = SequentialMrmr::new(MrmrConfig::default()).select_discrete(&t.data);
+        let relieff_ref = SequentialRelieff::default().select_discrete(&t.data);
+
+        // Isolated: each algorithm pays for its own tables.
+        let iso_cfs_svc = service(3);
+        let id = iso_cfs_svc.register_discrete(t.name, Arc::clone(&t.data), t.scheme, None);
+        let iso_cfs = iso_cfs_svc.query(&spec(id, AlgoSpec::Cfs));
+        assert_eq!(iso_cfs.result.selected, cfs_ref.selected, "{}: isolated CFS", t.name);
+        let iso_cfs_fresh = iso_cfs_svc.dataset(id).unwrap().cache().fresh_publishes();
+
+        let iso_mrmr_svc = service(3);
+        let id = iso_mrmr_svc.register_discrete(t.name, Arc::clone(&t.data), t.scheme, None);
+        let iso_mrmr = iso_mrmr_svc.query(&spec(id, AlgoSpec::Mrmr(MrmrConfig::default())));
+        assert_eq!(iso_mrmr.result.selected, mrmr_ref.selected, "{}: isolated mRMR", t.name);
+        assert_eq!(iso_mrmr.result.merit.to_bits(), mrmr_ref.merit.to_bits());
+        let iso_mrmr_fresh = iso_mrmr_svc.dataset(id).unwrap().cache().fresh_publishes();
+        let iso_fresh = iso_cfs_fresh + iso_mrmr_fresh;
+
+        // Shared: one substrate, CFS first, then mRMR finishing MI off
+        // the cached tables, then ReliefF riding along row-wise.
+        let svc = service(3);
+        let id = svc.register_discrete(t.name, Arc::clone(&t.data), t.scheme, None);
+        let shared_cfs = svc.query(&spec(id, AlgoSpec::Cfs));
+        assert_eq!(shared_cfs.result.selected, cfs_ref.selected, "{}: shared CFS", t.name);
+        let shared_mrmr = svc.query(&spec(id, AlgoSpec::Mrmr(MrmrConfig::default())));
+        assert_eq!(
+            shared_mrmr.result.selected, mrmr_ref.selected,
+            "{}: shared mRMR",
+            t.name
+        );
+        assert_eq!(shared_mrmr.result.merit.to_bits(), mrmr_ref.merit.to_bits());
+        let shared_relieff = svc.query(&spec(id, AlgoSpec::Relieff(RelieffConfig::default())));
+        assert_eq!(
+            shared_relieff.result.selected, relieff_ref.selected,
+            "{}: shared ReliefF",
+            t.name
+        );
+        let report_shared = svc.cache_report(id).unwrap();
+        let shared_fresh = svc.dataset(id).unwrap().cache().fresh_publishes();
+
+        // The tentpole claim: strictly fewer fresh contingency tables
+        // than the isolated pair of runs.
+        assert!(
+            shared_fresh < iso_fresh,
+            "{}: shared substrate computed {shared_fresh} fresh tables, \
+             isolated runs computed {iso_fresh} — sharing saved nothing",
+            t.name
+        );
+        assert!(
+            report_shared.cross_measure_finishes > 0,
+            "{}: no MI term was finished from a cached SU table",
+            t.name
+        );
+
+        total_iso += iso_fresh;
+        total_shared += shared_fresh;
+        rows.push(vec![
+            t.name.to_string(),
+            t.scheme.label().to_string(),
+            iso_cfs_fresh.to_string(),
+            iso_mrmr_fresh.to_string(),
+            shared_fresh.to_string(),
+            (iso_fresh - shared_fresh).to_string(),
+            report_shared.cross_measure_finishes.to_string(),
+            format!("{:.1}%", 100.0 * (1.0 - shared_fresh as f64 / iso_fresh as f64)),
+        ]);
+        tenant_json.push(format!(
+            "{{\"name\":\"{}\",\"scheme\":\"{}\",\"fresh_isolated_cfs\":{iso_cfs_fresh},\
+             \"fresh_isolated_mrmr\":{iso_mrmr_fresh},\"fresh_shared\":{shared_fresh},\
+             \"cross_measure_finishes\":{},\"selections_bit_identical\":true}}",
+            t.name,
+            t.scheme.label(),
+            report_shared.cross_measure_finishes
+        ));
+    }
+
+    println!(
+        "{}",
+        table(
+            &[
+                "tenant", "scheme", "fresh cfs", "fresh mrmr", "fresh shared", "saved",
+                "mi finishes", "saving",
+            ],
+            &rows
+        )
+    );
+    println!(
+        "fresh contingency tables: isolated {total_iso} vs shared {total_shared} \
+         (saved {})",
+        total_iso - total_shared
+    );
+
+    let json = format!(
+        "{{\"scale\":{scale},\"fresh_isolated_total\":{total_iso},\
+         \"fresh_shared_total\":{total_shared},\"tenants\":[{}]}}\n",
+        tenant_json.join(",")
+    );
+    let path = report::out_dir().join("BENCH_multialgo.json");
+    std::fs::write(&path, json).expect("write BENCH_multialgo.json");
+    println!("  data: {}\n", path.display());
+}

@@ -33,8 +33,8 @@ use dicfs::data::synth::{by_name, SynthConfig};
 use dicfs::discretize::discretize_dataset;
 use dicfs::harness::{bench_scale, report};
 use dicfs::serve::{
-    worst_case_cache_bytes, CacheBudget, DicfsService, QuerySpec, RegisterOptions, ServeScheme,
-    ServiceConfig,
+    worst_case_cache_bytes, AlgoSpec, CacheBudget, DicfsService, QuerySpec, RegisterOptions,
+    ServeScheme, ServiceConfig,
 };
 use dicfs::sparklet::ClusterConfig;
 use dicfs::util::chart::table;
@@ -137,6 +137,7 @@ fn main() {
             let r = svc.query(&QuerySpec {
                 dataset: id,
                 cfs: *cfs,
+                algo: AlgoSpec::Cfs,
             });
             assert_eq!(
                 r.result.selected, baselines[ti][qi],
@@ -160,6 +161,7 @@ fn main() {
             mix.iter().map(move |(_, cfs)| QuerySpec {
                 dataset: id,
                 cfs: *cfs,
+                algo: AlgoSpec::Cfs,
             })
         })
         .collect();
@@ -327,6 +329,7 @@ fn tenancy_phase(
                     mix.iter().map(move |(_, cfs)| QuerySpec {
                         dataset: id,
                         cfs: *cfs,
+                        algo: AlgoSpec::Cfs,
                     })
                 })
             })
@@ -372,6 +375,7 @@ fn tenancy_phase(
                     mix.iter().map(move |(_, cfs)| QuerySpec {
                         dataset: id,
                         cfs: *cfs,
+                        algo: AlgoSpec::Cfs,
                     })
                 })
                 .collect();

@@ -20,7 +20,7 @@ use crate::cfs::subset::SearchState;
 use crate::cfs::Correlator;
 use crate::core::{pair_key, FeatureId, SelectionResult, CLASS_ID};
 use crate::correlation::sampled::SuInterval;
-use crate::correlation::{CorrelationCache, SuCache};
+use crate::correlation::{CorrelationCache, MeasureCache};
 
 /// A search-restart seed: feature subsets worth re-evaluating first —
 /// the winning subset of a previous run, followed by its final priority
@@ -170,7 +170,7 @@ impl BestFirstSearch {
         self.run_with_cache(m, correlator, &mut cache)
     }
 
-    /// [`Self::run`] with an external [`SuCache`] — an owned
+    /// [`Self::run`] with an external [`MeasureCache`] — an owned
     /// [`CorrelationCache`] (exposes hit/miss statistics to the ablation
     /// harness) or a per-query handle over a shared cache (the
     /// multi-query service, where concurrent searches reuse each other's
@@ -179,7 +179,7 @@ impl BestFirstSearch {
         &self,
         m: usize,
         correlator: &mut dyn Correlator,
-        cache: &mut dyn SuCache,
+        cache: &mut dyn MeasureCache,
     ) -> SelectionResult {
         self.run_traced(m, correlator, cache, None).0
     }
@@ -206,7 +206,7 @@ impl BestFirstSearch {
         &self,
         m: usize,
         correlator: &mut dyn Correlator,
-        cache: &mut dyn SuCache,
+        cache: &mut dyn MeasureCache,
         warm: Option<&WarmStart>,
     ) -> (SelectionResult, WarmStart) {
         let mut visited: HashSet<Vec<FeatureId>> = HashSet::new();
@@ -335,7 +335,7 @@ fn seed_states(
     m: usize,
     warm: &WarmStart,
     correlator: &mut dyn Correlator,
-    cache: &mut dyn SuCache,
+    cache: &mut dyn MeasureCache,
 ) -> Vec<SearchState> {
     let mut subsets: Vec<Vec<FeatureId>> = Vec::new();
     let mut seen: HashSet<Vec<FeatureId>> = HashSet::new();
@@ -393,7 +393,7 @@ fn expand_batch(
     head: &SearchState,
     candidates: &[FeatureId],
     correlator: &mut dyn Correlator,
-    cache: &mut dyn SuCache,
+    cache: &mut dyn MeasureCache,
     visited: &mut HashSet<Vec<FeatureId>>,
 ) -> Vec<SearchState> {
     // Pair list: per candidate, (candidate, class) then (candidate, member)
@@ -450,7 +450,7 @@ fn expand_batch_pruned(
     head: &SearchState,
     candidates: &[FeatureId],
     correlator: &mut dyn Correlator,
-    cache: &mut dyn SuCache,
+    cache: &mut dyn MeasureCache,
     visited: &mut HashSet<Vec<FeatureId>>,
     queue_rest: &[SearchState],
     capacity: usize,

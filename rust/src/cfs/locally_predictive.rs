@@ -11,7 +11,7 @@
 
 use crate::cfs::Correlator;
 use crate::core::{FeatureId, CLASS_ID};
-use crate::correlation::SuCache;
+use crate::correlation::MeasureCache;
 
 /// Extend `selected` in place; returns the features added, in admission
 /// order. Correlations flow through the same cache as the search (they
@@ -21,7 +21,7 @@ pub fn add_locally_predictive(
     m: usize,
     selected: &mut Vec<FeatureId>,
     correlator: &mut dyn Correlator,
-    cache: &mut dyn SuCache,
+    cache: &mut dyn MeasureCache,
 ) -> Vec<FeatureId> {
     let outside: Vec<FeatureId> = (0..m).filter(|f| !selected.contains(f)).collect();
     if outside.is_empty() {

@@ -10,6 +10,11 @@
 //! * [`sequential`] — `SequentialCfs`, the faithful single-node
 //!   reimplementation standing in for the WEKA baseline.
 //!
+//! Since the measure substrate landed (DESIGN.md §17) this module also
+//! hosts the sibling selectors of the family: [`mrmr`] (greedy
+//! max-relevance min-redundancy over MI) and [`relieff`] (neighbor-based
+//! weighting), unified with CFS and RegCFS under [`FsAlgorithm`].
+//!
 //! The search is written against the [`Correlator`] trait: sequential CFS
 //! plugs in a local computation; DiCFS-hp/vp plug in sparklet jobs. The
 //! search itself is therefore *identical* across all variants — the
@@ -25,14 +30,85 @@
 pub mod best_first;
 pub mod locally_predictive;
 pub mod merit;
+pub mod mrmr;
+pub mod relieff;
 pub mod sequential;
 pub mod subset;
 
 pub use best_first::{BestFirstSearch, CfsConfig, PruneMode, WarmStart};
+pub use mrmr::{MrmrConfig, MrmrSearch, SequentialMiCorrelator, SequentialMrmr};
+pub use relieff::{Relieff, RelieffConfig, RelieffScheme, SequentialRelieff};
 pub use sequential::{SequentialCfs, SequentialCorrelator};
 
-use crate::core::FeatureId;
+use crate::core::{FeatureId, Result, SelectionResult};
 use crate::correlation::sampled::SuBounds;
+use crate::correlation::Measure;
+use crate::data::columnar::Dataset;
+
+/// One member of the feature-selection family served over the shared
+/// substrate (DESIGN.md §17): CFS (SU), mRMR (MI), ReliefF (neighbor
+/// scans), and RegCFS (Pearson, continuous targets) all implement this,
+/// so mixed discrete/continuous workloads are one dispatch site.
+///
+/// Implementors here are the *sequential reference oracles* — the
+/// distributed variants are asserted bit-identical to them, never the
+/// other way around.
+pub trait FsAlgorithm {
+    /// Short CLI/script spelling (`cfs` / `mrmr` / `relieff` / `regcfs`).
+    fn name(&self) -> &'static str;
+
+    /// The correlation measure the algorithm consumes. ReliefF returns
+    /// its dominant pairwise analogue ([`Measure::Su`]) even though its
+    /// scans are row-wise, not pairwise.
+    fn measure(&self) -> Measure;
+
+    /// Select features from a raw (continuous) dataset. Discrete-data
+    /// algorithms discretize first; RegCFS rejects categorical inputs
+    /// with [`Error::InvalidData`](crate::core::Error::InvalidData).
+    fn select(&self, ds: &Dataset) -> Result<SelectionResult>;
+}
+
+impl FsAlgorithm for SequentialCfs {
+    fn name(&self) -> &'static str {
+        "cfs"
+    }
+
+    fn measure(&self) -> Measure {
+        Measure::Su
+    }
+
+    fn select(&self, ds: &Dataset) -> Result<SelectionResult> {
+        Ok(SequentialCfs::select(self, ds))
+    }
+}
+
+impl FsAlgorithm for SequentialMrmr {
+    fn name(&self) -> &'static str {
+        "mrmr"
+    }
+
+    fn measure(&self) -> Measure {
+        Measure::Mi
+    }
+
+    fn select(&self, ds: &Dataset) -> Result<SelectionResult> {
+        Ok(SequentialMrmr::select(self, ds))
+    }
+}
+
+impl FsAlgorithm for SequentialRelieff {
+    fn name(&self) -> &'static str {
+        "relieff"
+    }
+
+    fn measure(&self) -> Measure {
+        Measure::Su
+    }
+
+    fn select(&self, ds: &Dataset) -> Result<SelectionResult> {
+        Ok(SequentialRelieff::select(self, ds))
+    }
+}
 
 /// Source of symmetrical-uncertainty correlations.
 ///

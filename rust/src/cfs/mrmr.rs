@@ -1,0 +1,272 @@
+//! mRMR — minimum-Redundancy Maximum-Relevance feature selection.
+//!
+//! The greedy info-theoretic selector of Peng et al., as distributed in
+//! the Spark framework of arXiv 1610.04154: each round picks the
+//! candidate maximizing `MI(f; class) − mean_{s ∈ S} MI(f; s)` over the
+//! already-selected set `S`. Every term is a pairwise mutual information
+//! — exactly the scalars the measure-keyed substrate (DESIGN.md §17)
+//! finishes from the *same* contingency tables CFS builds for SU, so a
+//! warm CFS cache answers mRMR's redundancy terms without recounting
+//! anything.
+//!
+//! The search is written against the [`Correlator`] trait like
+//! best-first CFS is; the correlator must return **MI** values (in the
+//! service this is a [`Measure::Mi`](crate::correlation::Measure)
+//! miss-forwarder, sequentially it is [`SequentialMiCorrelator`]).
+//! Rounds batch one `(candidate, last-picked)` pair per remaining
+//! candidate, so the scheduler coalesces each round into one job the
+//! same way it coalesces best-first expansion waves.
+
+use crate::cfs::Correlator;
+use crate::core::{FeatureId, SelectionResult, CLASS_ID};
+use crate::correlation::{mi_from_table, ContingencyTable};
+use crate::data::columnar::DiscreteDataset;
+
+/// mRMR search configuration.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct MrmrConfig {
+    /// How many features to select (clamped to the feature count).
+    pub num_select: usize,
+}
+
+impl Default for MrmrConfig {
+    fn default() -> Self {
+        Self { num_select: 8 }
+    }
+}
+
+/// The greedy mRMR search over any MI [`Correlator`].
+#[derive(Debug, Default)]
+pub struct MrmrSearch {
+    /// Search configuration.
+    pub config: MrmrConfig,
+}
+
+impl MrmrSearch {
+    /// Search with the given configuration.
+    pub fn new(config: MrmrConfig) -> Self {
+        Self { config }
+    }
+
+    /// Run the greedy selection over `num_features` candidates.
+    ///
+    /// Deterministic: candidates are scanned in ascending id order with
+    /// strict `>` comparison, so score ties always resolve to the lowest
+    /// id — the property the scheme/engine equivalence battery pins.
+    pub fn run(&self, num_features: usize, correlator: &mut dyn Correlator) -> SelectionResult {
+        let k = self.config.num_select.min(num_features);
+        if k == 0 {
+            return SelectionResult {
+                selected: Vec::new(),
+                merit: 0.0,
+                iterations: 0,
+                correlations_computed: 0,
+                pruned_candidates: 0,
+                sampled_cells: 0,
+                locally_predictive_added: Vec::new(),
+            };
+        }
+
+        // Round 0: relevance MI(f; class) for every feature, one batch.
+        let rel_pairs: Vec<(FeatureId, FeatureId)> =
+            (0..num_features).map(|f| (f, CLASS_ID)).collect();
+        let relevance = correlator.compute(&rel_pairs);
+        let mut computed = num_features;
+
+        let mut selected: Vec<FeatureId> = Vec::with_capacity(k);
+        let mut in_set = vec![false; num_features];
+        // Σ_{s ∈ S} MI(f; s), maintained incrementally per candidate.
+        let mut red_sum = vec![0.0f64; num_features];
+        let mut objective = 0.0f64;
+
+        for round in 0..k {
+            if round > 0 {
+                // One batched wave: each remaining candidate against the
+                // feature picked last round (all other redundancy terms
+                // are already in `red_sum`).
+                let last = *selected.last().expect("round > 0");
+                let wave: Vec<(FeatureId, FeatureId)> = (0..num_features)
+                    .filter(|&f| !in_set[f])
+                    .map(|f| (f, last))
+                    .collect();
+                let vals = correlator.compute(&wave);
+                computed += wave.len();
+                for (&(f, _), &v) in wave.iter().zip(&vals) {
+                    red_sum[f] += v;
+                }
+            }
+            let mut best: Option<(FeatureId, f64)> = None;
+            for f in 0..num_features {
+                if in_set[f] {
+                    continue;
+                }
+                let score = if round == 0 {
+                    relevance[f]
+                } else {
+                    relevance[f] - red_sum[f] / round as f64
+                };
+                if best.map_or(true, |(_, s)| score > s) {
+                    best = Some((f, score));
+                }
+            }
+            let (pick, score) = best.expect("k <= num_features leaves a candidate");
+            in_set[pick] = true;
+            selected.push(pick);
+            objective = score;
+        }
+
+        selected.sort_unstable();
+        SelectionResult {
+            selected,
+            // The mRMR objective of the last accepted candidate — the
+            // greedy analogue of CFS's subset merit.
+            merit: objective,
+            iterations: k,
+            correlations_computed: computed,
+            pruned_candidates: 0,
+            sampled_cells: 0,
+            locally_predictive_added: Vec::new(),
+        }
+    }
+}
+
+/// Computes MI directly from a local [`DiscreteDataset`] — the mRMR
+/// analogue of [`SequentialCorrelator`](crate::cfs::SequentialCorrelator)
+/// and the reference oracle the distributed variants are asserted
+/// against.
+pub struct SequentialMiCorrelator<'a> {
+    data: &'a DiscreteDataset,
+}
+
+impl<'a> SequentialMiCorrelator<'a> {
+    /// MI correlator over the given discretized dataset.
+    pub fn new(data: &'a DiscreteDataset) -> Self {
+        Self { data }
+    }
+}
+
+impl Correlator for SequentialMiCorrelator<'_> {
+    fn compute(&mut self, pairs: &[(FeatureId, FeatureId)]) -> Vec<f64> {
+        pairs
+            .iter()
+            .map(|&(a, b)| {
+                let (xa, aa) = self.data.column(a);
+                let (xb, ab) = self.data.column(b);
+                mi_from_table(&ContingencyTable::from_columns(xa, aa, xb, ab))
+            })
+            .collect()
+    }
+}
+
+/// Sequential mRMR: discretize, then greedy-select with the local MI
+/// correlator. The reference oracle for every distributed mRMR path.
+#[derive(Debug, Default)]
+pub struct SequentialMrmr {
+    /// Search configuration.
+    pub config: MrmrConfig,
+}
+
+impl SequentialMrmr {
+    /// mRMR with the given search configuration.
+    pub fn new(config: MrmrConfig) -> Self {
+        Self { config }
+    }
+
+    /// Full pipeline: discretize then select.
+    pub fn select(&self, ds: &crate::data::columnar::Dataset) -> SelectionResult {
+        let dd = crate::discretize::discretize_dataset(ds).expect("discretization failed");
+        self.select_discrete(&dd)
+    }
+
+    /// Selection over an already-discretized dataset.
+    pub fn select_discrete(&self, dd: &DiscreteDataset) -> SelectionResult {
+        let mut correlator = SequentialMiCorrelator::new(dd);
+        MrmrSearch::new(self.config).run(dd.num_features(), &mut correlator)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth::{higgs_like, with_roles, FeatureRole, SynthConfig};
+
+    #[test]
+    fn selects_requested_count_and_is_deterministic() {
+        let ds = higgs_like(&SynthConfig {
+            rows: 1_200,
+            seed: 31,
+            features: Some(12),
+        });
+        let m = SequentialMrmr::new(MrmrConfig { num_select: 5 });
+        let a = m.select(&ds);
+        let b = m.select(&ds);
+        assert_eq!(a, b);
+        assert_eq!(a.selected.len(), 5);
+        assert!(a.selected.windows(2).all(|w| w[0] < w[1]));
+        assert_eq!(a.iterations, 5);
+        // Round 0 computes all relevances; round r computes the
+        // remaining candidates.
+        assert_eq!(a.correlations_computed, 12 + 11 + 10 + 9 + 8);
+    }
+
+    #[test]
+    fn first_pick_is_max_relevance_and_avoids_noise() {
+        let s = with_roles(
+            "higgs",
+            &SynthConfig {
+                rows: 2_000,
+                seed: 37,
+                features: Some(16),
+            },
+        );
+        let dd = crate::discretize::discretize_dataset(&s.dataset).unwrap();
+        let mut mi = SequentialMiCorrelator::new(&dd);
+        let rel_pairs: Vec<_> = (0..dd.num_features()).map(|f| (f, CLASS_ID)).collect();
+        let rel = mi.compute(&rel_pairs);
+        let argmax = (0..rel.len()).fold(0, |b, f| if rel[f] > rel[b] { f } else { b });
+
+        let r = SequentialMrmr::new(MrmrConfig { num_select: 4 }).select(&s.dataset);
+        assert!(r.selected.contains(&argmax), "max-relevance feature kept");
+        for &f in &r.selected {
+            assert_ne!(s.roles[f], FeatureRole::Noise, "selected noise feature {f}");
+        }
+    }
+
+    #[test]
+    fn redundant_copy_is_deferred() {
+        // In the epsilon family redundant features are near-copies of
+        // relevant ones: mRMR's redundancy penalty must prefer a fresh
+        // relevant feature over a copy of the first pick.
+        let s = with_roles(
+            "epsilon",
+            &SynthConfig {
+                rows: 1_500,
+                seed: 41,
+                features: Some(20),
+            },
+        );
+        let r = SequentialMrmr::new(MrmrConfig { num_select: 6 }).select(&s.dataset);
+        let relevant = r
+            .selected
+            .iter()
+            .filter(|&&f| s.roles[f] == FeatureRole::Relevant)
+            .count();
+        assert!(
+            relevant > r.selected.len() / 2,
+            "mostly originals expected, got {relevant}/{}",
+            r.selected.len()
+        );
+    }
+
+    #[test]
+    fn zero_select_is_empty() {
+        let ds = higgs_like(&SynthConfig {
+            rows: 400,
+            seed: 43,
+            features: Some(6),
+        });
+        let r = SequentialMrmr::new(MrmrConfig { num_select: 0 }).select(&ds);
+        assert!(r.selected.is_empty());
+        assert_eq!(r.correlations_computed, 0);
+    }
+}

@@ -1,0 +1,400 @@
+//! ReliefF — neighbor-based feature weighting, with exact row- and
+//! column-partitioned variants.
+//!
+//! The multi-class Relief of Kononenko, as distributed in arXiv
+//! 1811.00424: every row finds its `k` nearest **hits** (same class) and
+//! `k` nearest **misses** per other class, and each feature's weight
+//! moves down for hit disagreements and up for (class-prior-weighted)
+//! miss disagreements. On discretized data the per-feature difference is
+//! 0/1 and the distance is plain Hamming, so everything is integer
+//! arithmetic until the final weight folds.
+//!
+//! Unlike CFS and mRMR, ReliefF is not a pairwise-correlation algorithm:
+//! it scans rows, not pairs, so it rides the dataset substrate (the
+//! registered version's columnar data) rather than the contingency-table
+//! cache. What it shares with the hp/vp story is the *decomposition
+//! shape* (DESIGN.md §17):
+//!
+//! * **hp** partitions rows: each partition emits per-row weight deltas;
+//!   the driver folds them in global row order, so the f64 additions are
+//!   the same operations in the same order as the sequential scan —
+//!   bit-identical by construction.
+//! * **vp** partitions features: each partition emits *partial Hamming
+//!   distances* over its feature chunk; the driver merges them (u32
+//!   adds, exact in any order), recovers exactly the sequential
+//!   neighbor sets, and then folds the same per-row deltas.
+//! * **auto** prices the two movements with the same bytes-moved logic
+//!   the SU planner uses (hp ships `rows × features` f64 deltas, vp
+//!   ships `rows²` u32 partials per chunk boundary) and picks the
+//!   cheaper — selections cannot depend on the choice because both are
+//!   exact.
+
+use crate::core::{FeatureId, SelectionResult};
+use crate::data::columnar::DiscreteDataset;
+
+/// ReliefF configuration.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct RelieffConfig {
+    /// Neighbors per class to average over (`k`), clamped per class to
+    /// the available rows.
+    pub num_neighbors: usize,
+    /// How many top-weighted features to select.
+    pub num_select: usize,
+}
+
+impl Default for RelieffConfig {
+    fn default() -> Self {
+        Self {
+            num_neighbors: 10,
+            num_select: 8,
+        }
+    }
+}
+
+/// Which decomposition evaluates the neighbor scans. All variants are
+/// exact (see the module docs), so this only moves work around.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RelieffScheme {
+    /// Single sequential scan — the reference oracle.
+    Seq,
+    /// Row-partitioned scan over the given partition count.
+    Hp(usize),
+    /// Feature-partitioned distances over the given partition count.
+    Vp(usize),
+    /// Cost-model choice between hp and vp.
+    Auto,
+}
+
+/// The ReliefF selector.
+#[derive(Debug, Default)]
+pub struct Relieff {
+    /// Configuration.
+    pub config: RelieffConfig,
+}
+
+/// Hamming distance between two rows over every feature column.
+fn row_distance(data: &DiscreteDataset, a: usize, b: usize) -> u32 {
+    let mut d = 0u32;
+    for f in 0..data.num_features() {
+        let (col, _) = data.column(f);
+        d += u32::from(col[a] != col[b]);
+    }
+    d
+}
+
+/// The `k` nearest hit rows and per-class nearest miss rows of `r`,
+/// given the full distance row `dist[other]` (any exact source: direct
+/// scan for seq/hp, merged partials for vp). Ties break to the lowest
+/// row id — `sort` below is on `(distance, row)` — so neighbor sets are
+/// a pure function of the data.
+fn neighbors(data: &DiscreteDataset, r: usize, dist: &[u32], k: usize) -> Vec<(u8, Vec<usize>)> {
+    let classes = data.class_arity as usize;
+    let mut by_class: Vec<Vec<(u32, usize)>> = vec![Vec::new(); classes];
+    for (other, &d) in dist.iter().enumerate() {
+        if other == r {
+            continue;
+        }
+        by_class[data.class[other] as usize].push((d, other));
+    }
+    by_class
+        .into_iter()
+        .enumerate()
+        .map(|(c, mut rows)| {
+            rows.sort_unstable();
+            (c as u8, rows.into_iter().take(k).map(|(_, o)| o).collect())
+        })
+        .collect()
+}
+
+/// Per-row weight contribution: `delta[f]` for every feature, from the
+/// hit/miss neighbor sets of row `r`. `priors[c]` is the empirical class
+/// prior. The f64 operations here are identical for every scheme; only
+/// where they run differs.
+fn row_delta(
+    data: &DiscreteDataset,
+    r: usize,
+    neigh: &[(u8, Vec<usize>)],
+    priors: &[f64],
+    k: usize,
+) -> Vec<f64> {
+    let m = data.num_features();
+    let n = data.num_rows() as f64;
+    let own = data.class[r] as usize;
+    let mut delta = vec![0.0f64; m];
+    for (c, rows) in neigh {
+        let c = *c as usize;
+        if rows.is_empty() {
+            continue;
+        }
+        // Normalize by the *requested* k like canonical ReliefF; rows
+        // short of k neighbors contribute proportionally less.
+        let scale = if c == own {
+            -1.0 / (n * k as f64)
+        } else {
+            priors[c] / ((1.0 - priors[own]) * n * k as f64)
+        };
+        for f in 0..m {
+            let (col, _) = data.column(f);
+            let mut disagreements = 0u32;
+            for &o in rows {
+                disagreements += u32::from(col[o] != col[r]);
+            }
+            delta[f] += scale * f64::from(disagreements);
+        }
+    }
+    delta
+}
+
+/// Contiguous index ranges splitting `0..len` into `p` near-equal parts
+/// (first `len % p` parts one longer) — the same block shapes the hp
+/// row partitioner uses.
+fn blocks(len: usize, p: usize) -> Vec<std::ops::Range<usize>> {
+    let p = p.clamp(1, len.max(1));
+    let (q, rem) = (len / p, len % p);
+    let mut out = Vec::with_capacity(p);
+    let mut start = 0;
+    for i in 0..p {
+        let end = start + q + usize::from(i < rem);
+        out.push(start..end);
+        start = end;
+    }
+    out
+}
+
+impl Relieff {
+    /// Selector with the given configuration.
+    pub fn new(config: RelieffConfig) -> Self {
+        Self { config }
+    }
+
+    /// Feature weights under the given scheme. Exact for every scheme;
+    /// the proptests assert the bit-identity.
+    pub fn weights(&self, data: &DiscreteDataset, scheme: RelieffScheme) -> Vec<f64> {
+        let n = data.num_rows();
+        let m = data.num_features();
+        if n < 2 || m == 0 {
+            return vec![0.0; m];
+        }
+        let k = self.config.num_neighbors.max(1);
+        let classes = data.class_arity as usize;
+        let mut priors = vec![0.0f64; classes];
+        for &c in &data.class {
+            priors[c as usize] += 1.0 / n as f64;
+        }
+
+        // Per-row deltas, produced by the scheme's decomposition...
+        let deltas: Vec<Vec<f64>> = match scheme {
+            RelieffScheme::Seq => (0..n)
+                .map(|r| {
+                    let dist: Vec<u32> = (0..n).map(|o| row_distance(data, r, o)).collect();
+                    row_delta(data, r, &neighbors(data, r, &dist, k), &priors, k)
+                })
+                .collect(),
+            RelieffScheme::Hp(p) => {
+                // Each row partition scans the whole dataset for its own
+                // rows' neighbors; deltas come back keyed by global row.
+                let mut out: Vec<(usize, Vec<f64>)> = Vec::with_capacity(n);
+                for part in blocks(n, p) {
+                    for r in part {
+                        let dist: Vec<u32> = (0..n).map(|o| row_distance(data, r, o)).collect();
+                        let d = row_delta(data, r, &neighbors(data, r, &dist, k), &priors, k);
+                        out.push((r, d));
+                    }
+                }
+                // Fold in global row order regardless of partition order.
+                out.sort_by_key(|&(r, _)| r);
+                out.into_iter().map(|(_, d)| d).collect()
+            }
+            RelieffScheme::Vp(p) => {
+                // Each feature chunk contributes partial Hamming
+                // distances; u32 merges are exact, so the recovered
+                // distance rows equal the sequential ones bit-for-bit.
+                let chunks = blocks(m, p);
+                (0..n)
+                    .map(|r| {
+                        let mut dist = vec![0u32; n];
+                        for chunk in &chunks {
+                            for f in chunk.clone() {
+                                let (col, _) = data.column(f);
+                                for (o, d) in dist.iter_mut().enumerate() {
+                                    *d += u32::from(col[o] != col[r]);
+                                }
+                            }
+                        }
+                        row_delta(data, r, &neighbors(data, r, &dist, k), &priors, k)
+                    })
+                    .collect()
+            }
+            RelieffScheme::Auto => {
+                let p = std::thread::available_parallelism().map_or(4, |p| p.get()).max(2);
+                return self.weights(data, self.plan(n, m, p));
+            }
+        };
+
+        // ...then folded in ascending row order — one shared reduction,
+        // so every scheme performs the identical f64 sum.
+        let mut w = vec![0.0f64; m];
+        for d in deltas {
+            for (f, v) in d.into_iter().enumerate() {
+                w[f] += v;
+            }
+        }
+        w
+    }
+
+    /// The decomposition `Auto` picks for an `n × m` dataset over `p`
+    /// partitions: cheaper modeled bytes moved, hp on ties. hp ships one
+    /// f64 delta row per data row; vp ships one u32 partial-distance row
+    /// per data row per non-final chunk.
+    pub fn plan(&self, n: usize, m: usize, p: usize) -> RelieffScheme {
+        let hp_bytes = (n as u128) * (m as u128) * 8;
+        let vp_chunks = p.clamp(1, m.max(1)) as u128;
+        let vp_bytes = vp_chunks.saturating_sub(1) * (n as u128) * (n as u128) * 4;
+        if hp_bytes <= vp_bytes {
+            RelieffScheme::Hp(p)
+        } else {
+            RelieffScheme::Vp(p)
+        }
+    }
+
+    /// Top-`num_select` features by weight under the given scheme.
+    /// Weight ties break to the lowest feature id; the result lists ids
+    /// ascending like every other selector.
+    pub fn select_discrete(
+        &self,
+        data: &DiscreteDataset,
+        scheme: RelieffScheme,
+    ) -> SelectionResult {
+        let w = self.weights(data, scheme);
+        let take = self.config.num_select.min(w.len());
+        let mut order: Vec<FeatureId> = (0..w.len()).collect();
+        order.sort_by(|&a, &b| w[b].partial_cmp(&w[a]).unwrap().then(a.cmp(&b)));
+        let mut selected: Vec<FeatureId> = order.into_iter().take(take).collect();
+        selected.sort_unstable();
+        let merit = if selected.is_empty() {
+            0.0
+        } else {
+            selected.iter().map(|&f| w[f]).sum::<f64>() / selected.len() as f64
+        };
+        SelectionResult {
+            selected,
+            merit,
+            iterations: data.num_rows(),
+            correlations_computed: 0,
+            pruned_candidates: 0,
+            sampled_cells: 0,
+            locally_predictive_added: Vec::new(),
+        }
+    }
+}
+
+/// Sequential ReliefF: discretize, then the reference `Seq` scan — the
+/// oracle every partitioned variant is asserted against.
+#[derive(Debug, Default)]
+pub struct SequentialRelieff {
+    /// Configuration.
+    pub config: RelieffConfig,
+}
+
+impl SequentialRelieff {
+    /// ReliefF with the given configuration.
+    pub fn new(config: RelieffConfig) -> Self {
+        Self { config }
+    }
+
+    /// Full pipeline: discretize then select.
+    pub fn select(&self, ds: &crate::data::columnar::Dataset) -> SelectionResult {
+        let dd = crate::discretize::discretize_dataset(ds).expect("discretization failed");
+        self.select_discrete(&dd)
+    }
+
+    /// Selection over an already-discretized dataset.
+    pub fn select_discrete(&self, dd: &DiscreteDataset) -> SelectionResult {
+        Relieff::new(self.config).select_discrete(dd, RelieffScheme::Seq)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth::{higgs_like, with_roles, FeatureRole, SynthConfig};
+    use crate::discretize::discretize_dataset;
+
+    fn discrete(seed: u64, rows: usize, features: usize) -> DiscreteDataset {
+        discretize_dataset(&higgs_like(&SynthConfig {
+            rows,
+            seed,
+            features: Some(features),
+        }))
+        .unwrap()
+    }
+
+    #[test]
+    fn partitioned_schemes_are_bit_identical_to_seq() {
+        let dd = discrete(51, 300, 10);
+        let r = Relieff::default();
+        let seq = r.weights(&dd, RelieffScheme::Seq);
+        for scheme in [
+            RelieffScheme::Hp(1),
+            RelieffScheme::Hp(4),
+            RelieffScheme::Hp(7),
+            RelieffScheme::Vp(1),
+            RelieffScheme::Vp(3),
+            RelieffScheme::Vp(10),
+            RelieffScheme::Auto,
+        ] {
+            let w = r.weights(&dd, scheme);
+            assert_eq!(seq, w, "{scheme:?} diverged from the sequential oracle");
+        }
+    }
+
+    #[test]
+    fn informative_features_outweigh_noise() {
+        let s = with_roles(
+            "higgs",
+            &SynthConfig {
+                rows: 800,
+                seed: 53,
+                features: Some(12),
+            },
+        );
+        let r = Relieff::new(RelieffConfig {
+            num_neighbors: 10,
+            num_select: 4,
+        });
+        let result = r.select_discrete(
+            &discretize_dataset(&s.dataset).unwrap(),
+            RelieffScheme::Seq,
+        );
+        assert_eq!(result.selected.len(), 4);
+        for &f in &result.selected {
+            assert_ne!(s.roles[f], FeatureRole::Noise, "selected noise feature {f}");
+        }
+    }
+
+    #[test]
+    fn plan_prices_hp_for_tall_and_vp_for_wide() {
+        let r = Relieff::default();
+        // Tall-narrow: n² distance partials dwarf the n×m delta rows.
+        assert_eq!(r.plan(100_000, 8, 4), RelieffScheme::Hp(4));
+        // Wide-short: delta rows dwarf the tiny distance matrix.
+        assert_eq!(r.plan(64, 50_000, 4), RelieffScheme::Vp(4));
+    }
+
+    #[test]
+    fn degenerate_inputs_select_nothing_or_everything() {
+        let dd = discrete(57, 150, 5);
+        let none = Relieff::new(RelieffConfig {
+            num_neighbors: 5,
+            num_select: 0,
+        })
+        .select_discrete(&dd, RelieffScheme::Seq);
+        assert!(none.selected.is_empty());
+        let all = Relieff::new(RelieffConfig {
+            num_neighbors: 5,
+            num_select: 99,
+        })
+        .select_discrete(&dd, RelieffScheme::Seq);
+        assert_eq!(all.selected, vec![0, 1, 2, 3, 4]);
+    }
+}

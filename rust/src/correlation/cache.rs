@@ -8,7 +8,7 @@
 //! The best-first driver asks a cache for a *batch* of pairs at each
 //! expansion; only the misses are forwarded (still batched) to the
 //! underlying correlator — which is what makes a single distributed job per
-//! search step possible. Two implementations of the [`SuCache`] funnel:
+//! search step possible. Two implementations of the [`MeasureCache`] funnel:
 //!
 //! * [`CorrelationCache`] — the single-search cache every standalone
 //!   `select` run owns. Hit/miss counters feed the `ablation_ondemand`
@@ -22,16 +22,20 @@
 //!   pairs in the shared map is reported separately by
 //!   [`SharedSuCache::len`].
 //!
-//! A third implementation backs the *incremental* service
-//! (DESIGN.md §12): [`VersionedSuCache`] entries carry the contingency
-//! table each SU value was computed from, tagged with the row count it
-//! covers. Appending instances to a dataset then invalidates **nothing**:
+//! A third implementation backs the *incremental multi-algorithm*
+//! service (DESIGN.md §12, §17): [`VersionedMeasureCache`] entries carry
+//! the contingency table each value was computed from, tagged with the
+//! row count it covers and keyed per finished
+//! [`Measure`](crate::correlation::Measure) — the table is stored once
+//! and finished into SU (CFS) or MI (mRMR) on demand, which is what
+//! makes cross-algorithm cache reuse free. Appending instances to a
+//! dataset then invalidates **nothing**:
 //! an entry is *upgraded* by merging only the delta rows' counts into its
 //! table ([`ContingencyTable::merge`] /
 //! [`ContingencyTable::merge_rows`](crate::correlation::ContingencyTable::merge_rows))
 //! and recomputing SU from the merged table — bit-identical to a
 //! from-scratch computation because u64 counts are additive across row
-//! ranges. Queries pin a row count ([`VersionedSuCache::handle`]), so a
+//! ranges. Queries pin a row count ([`VersionedMeasureCache::handle`]), so a
 //! search that started before an append keeps reading values for exactly
 //! the rows it was launched against.
 //!
@@ -49,6 +53,7 @@ use std::sync::atomic::{AtomicU64, Ordering as AtomicOrdering};
 use std::sync::{Arc, Mutex, RwLock};
 
 use crate::core::{pair_key, FeatureId};
+use crate::correlation::measure::Measure;
 use crate::correlation::sampled::SuInterval;
 use crate::correlation::ContingencyTable;
 
@@ -65,7 +70,15 @@ pub const ENTRY_OVERHEAD_BYTES: usize = 88;
 /// overhead (16).
 pub const SCALAR_ENTRY_BYTES: usize = 48;
 
-/// Capacity of the [`VersionedSuCache`] advisory sampled-bounds side-map
+/// Bytes charged per *additional* finished measure on a
+/// [`VersionedEntry`]: the [`Measure`] tag (8) and the scalar (8). The
+/// first measure is covered by [`ENTRY_OVERHEAD_BYTES`], and the shared
+/// contingency table is charged exactly once however many measures were
+/// finished from it — per-measure scalars must never double-count the
+/// table bytes (DESIGN.md §17).
+pub const MEASURE_SCALAR_BYTES: usize = 16;
+
+/// Capacity of the [`VersionedMeasureCache`] advisory sampled-bounds side-map
 /// (DESIGN.md §16). A publish that would exceed it clears the map —
 /// bounds are non-authoritative and cheap to re-sketch, so wholesale
 /// drop is simpler than eviction and can never affect correctness.
@@ -122,7 +135,7 @@ impl CacheStats {
 /// only in the `compute` callback they plug in and in which implementor
 /// backs the funnel: [`CorrelationCache`] (one search, owned) or
 /// [`SuCacheHandle`] (one query over a [`SharedSuCache`]).
-pub trait SuCache {
+pub trait MeasureCache {
     /// Serve `pairs`, calling `compute` at most once with the
     /// (deduplicated, insertion-ordered, canonically-keyed) list of
     /// misses. `compute` must return one value per missing pair, in
@@ -174,7 +187,7 @@ impl CorrelationCache {
 
     /// Serve `pairs`, calling `compute` once with the (deduplicated,
     /// insertion-ordered) list of misses. `compute` must return one value
-    /// per missing pair, in order. See [`SuCache::batch`] for the
+    /// per missing pair, in order. See [`MeasureCache::batch`] for the
     /// dyn-friendly form the search drivers use.
     pub fn get_or_compute_batch(
         &mut self,
@@ -230,7 +243,7 @@ impl CorrelationCache {
     }
 }
 
-impl SuCache for CorrelationCache {
+impl MeasureCache for CorrelationCache {
     fn batch(
         &mut self,
         pairs: &[(FeatureId, FeatureId)],
@@ -260,7 +273,7 @@ impl SuCache for CorrelationCache {
 /// bytes are accounted at [`SCALAR_ENTRY_BYTES`] per pair, and inserts
 /// that push past the budget drop least-recently-used pairs. Scalar
 /// entries are uniform in both size and recompute cost, so LRU *is* the
-/// cost-aware policy here (contrast [`VersionedSuCache`], whose entries
+/// cost-aware policy here (contrast [`VersionedMeasureCache`], whose entries
 /// differ in table size and recompute price). Eviction never changes a
 /// query's answers — a dropped pair is recomputed on next request.
 #[derive(Debug, Clone, Default)]
@@ -477,7 +490,7 @@ impl SuCacheHandle {
     }
 }
 
-impl SuCache for SuCacheHandle {
+impl MeasureCache for SuCacheHandle {
     fn batch(
         &mut self,
         pairs: &[(FeatureId, FeatureId)],
@@ -548,41 +561,85 @@ impl SuCache for SuCacheHandle {
     }
 }
 
-/// One versioned cache entry: the SU value of a pair together with the
-/// contingency table it was computed from and the number of dataset rows
-/// that table covers.
+/// One versioned cache entry: the finished measure values of a pair
+/// together with the contingency table they were computed from and the
+/// number of dataset rows that table covers.
+///
+/// The table is stored **once** per pair; each measure ([`Measure::Su`],
+/// [`Measure::Mi`]) adds only a 16-byte scalar slot. That is the
+/// cross-algorithm reuse the multi-algorithm service is built on: a CFS
+/// query warms the tables, and a later mRMR query on the same dataset
+/// finishes them into MI without recomputing a single count
+/// (DESIGN.md §17).
 ///
 /// `table` is `None` only when the value was produced by a correlation
 /// backend that cannot run contingency-table jobs (scalar-only test
-/// providers); such entries cannot be delta-upgraded and are recomputed
-/// from scratch at the next dataset version instead — slower, never
-/// wrong.
+/// providers); such entries cannot be delta-upgraded or cross-finished
+/// and are recomputed from scratch instead — slower, never wrong.
 #[derive(Debug, Clone)]
 pub struct VersionedEntry {
-    /// Number of leading dataset rows this entry's table (and SU value)
-    /// covers. An entry is valid for a query exactly when this equals
-    /// the query's pinned row count.
+    /// Number of leading dataset rows this entry's table (and measure
+    /// values) cover. An entry is valid for a query exactly when this
+    /// equals the query's pinned row count.
     pub rows: usize,
-    /// The merged contingency table behind `su` — the state an append
-    /// upgrades by merging only the delta rows' counts.
+    /// The merged contingency table behind the values — the state an
+    /// append upgrades by merging only the delta rows' counts.
     pub table: Option<ContingencyTable>,
-    /// SU of the pair over the first `rows` rows.
-    pub su: f64,
+    /// Finished `(measure, value)` scalars, at most one per measure.
+    /// Private so the no-duplicates and byte-accounting invariants hold.
+    values: Vec<(Measure, f64)>,
 }
 
 impl VersionedEntry {
+    /// Entry holding a single finished measure.
+    pub fn new(rows: usize, table: Option<ContingencyTable>, m: Measure, value: f64) -> Self {
+        Self {
+            rows,
+            table,
+            values: vec![(m, value)],
+        }
+    }
+
+    /// The finished value of `m`, if this entry holds one.
+    pub fn value(&self, m: Measure) -> Option<f64> {
+        self.values.iter().find(|&&(vm, _)| vm == m).map(|&(_, v)| v)
+    }
+
+    /// Add or overwrite the finished value of `m`.
+    pub fn set_value(&mut self, m: Measure, value: f64) {
+        match self.values.iter_mut().find(|(vm, _)| *vm == m) {
+            Some(slot) => slot.1 = value,
+            None => self.values.push((m, value)),
+        }
+    }
+
+    /// The measures this entry holds finished values for.
+    pub fn measures(&self) -> impl Iterator<Item = Measure> + '_ {
+        self.values.iter().map(|&(m, _)| m)
+    }
+
+    /// Convenience: the SU value, if finished.
+    pub fn su(&self) -> Option<f64> {
+        self.value(Measure::Su)
+    }
+
     /// Bytes this entry holds resident under the accounting model:
-    /// [`ENTRY_OVERHEAD_BYTES`] plus the contingency-table payload —
-    /// `bins_x × bins_y × 8` for the u64 count cells, i.e. the pair's
-    /// `arity_a × arity_b × 8` bytes. Table-less entries cost exactly
-    /// the overhead.
+    /// [`ENTRY_OVERHEAD_BYTES`] (which covers the first finished scalar)
+    /// plus the contingency-table payload — `bins_x × bins_y × 8` for
+    /// the u64 count cells — plus [`MEASURE_SCALAR_BYTES`] per
+    /// *additional* measure. The table is charged once, never once per
+    /// measure: an SU+MI entry costs its SU-only price plus one 16-byte
+    /// slot. Table-less single-measure entries cost exactly the
+    /// overhead.
     pub fn resident_bytes(&self) -> usize {
         let table = self.table.as_ref().map_or(0, |t| {
             (t.bins_x as usize)
                 .saturating_mul(t.bins_y as usize)
                 .saturating_mul(8)
         });
-        ENTRY_OVERHEAD_BYTES.saturating_add(table)
+        ENTRY_OVERHEAD_BYTES
+            .saturating_add(table)
+            .saturating_add(self.values.len().saturating_sub(1) * MEASURE_SCALAR_BYTES)
     }
 }
 
@@ -594,7 +651,7 @@ impl VersionedEntry {
 /// delta-sized scans instead of full recomputation. Tables are bounded
 /// by `MAX_BINS² × 8` bytes (≤ 8 KiB) each, so a warmed cache costs
 /// `O(distinct pairs × table size)`; deployments that need a hard bound
-/// set a resident-byte budget ([`VersionedSuCache::with_budget`]) and
+/// set a resident-byte budget ([`VersionedMeasureCache::with_budget`]) and
 /// trade recomputation for memory (the scalar-only [`SharedSuCache`]
 /// remains for fully frozen workloads).
 ///
@@ -605,16 +662,16 @@ impl VersionedEntry {
 /// which is what lets in-flight queries keep their pre-append view while
 /// new queries see the merged state (DESIGN.md §12).
 ///
-/// Publication is monotone: [`VersionedSuCache::publish`] only ever
+/// Publication is monotone: [`VersionedMeasureCache::publish`] only ever
 /// replaces an entry with one covering **more** rows, so a slow query
 /// pinned to an old version can never downgrade state that a newer query
 /// already upgraded.
 ///
-/// The cache can be bounded ([`VersionedSuCache::with_budget`]):
+/// The cache can be bounded ([`VersionedMeasureCache::with_budget`]):
 /// resident bytes follow [`VersionedEntry::resident_bytes`], and a
 /// publish that pushes past the budget evicts entries until the total
 /// fits. The victim choice is cost-aware once a recompute price is
-/// known ([`VersionedSuCache::set_recompute_rate`], fed from the
+/// known ([`VersionedMeasureCache::set_recompute_rate`], fed from the
 /// planner's calibrated secs-per-cell rates): the entry with the lowest
 /// recompute cost per byte freed (`rows × rate / bytes`) goes first, so
 /// big tables that are cheap to rebuild are sacrificed before small
@@ -624,7 +681,7 @@ impl VersionedEntry {
 /// handles memoize locally, so an evicted pair is at worst recomputed
 /// (SU is a pure function of the dataset) — never silently wrong.
 #[derive(Debug, Clone, Default)]
-pub struct VersionedSuCache {
+pub struct VersionedMeasureCache {
     inner: Arc<VersionedInner>,
 }
 
@@ -639,11 +696,11 @@ struct VersionedInner {
     rate: Mutex<Option<f64>>,
     /// Advisory side-map of sampled SU intervals (DESIGN.md §16), keyed
     /// by canonical pair and tagged with the row count they bound.
-    /// Strictly non-authoritative: never read by [`SuCache::batch`],
-    /// [`VersionedSuCache::lookup`] or [`SuCache::probe`], never
+    /// Strictly non-authoritative: never read by [`MeasureCache::batch`],
+    /// [`VersionedMeasureCache::lookup`] or [`MeasureCache::probe`], never
     /// counted by the byte-accounting layer (bounded by
     /// [`MAX_BOUND_ENTRIES`] instead), and dropped wholesale on
-    /// overflow or [`VersionedSuCache::clear`]. Losing a bound only
+    /// overflow or [`VersionedMeasureCache::clear`]. Losing a bound only
     /// costs a re-sketch; it can never change a selection.
     bounds: Mutex<HashMap<(FeatureId, FeatureId), (usize, SuInterval)>>,
 }
@@ -656,6 +713,7 @@ struct VersionedState {
     evicted_pairs: usize,
     evicted_bytes: usize,
     fresh_publishes: usize,
+    cross_finishes: usize,
 }
 
 /// A resident entry plus its accounting: the bytes it was charged at
@@ -668,7 +726,7 @@ struct StoredEntry {
     last_use: AtomicU64,
 }
 
-impl VersionedSuCache {
+impl VersionedMeasureCache {
     /// Empty, unbounded versioned cache.
     pub fn new() -> Self {
         Self::default()
@@ -712,13 +770,15 @@ impl VersionedSuCache {
         self.inner.clock.fetch_add(1, AtomicOrdering::Relaxed)
     }
 
-    /// A per-query funnel pinned at `rows` dataset rows: only entries
-    /// covering exactly that many rows count as hits. Statistics start
-    /// at zero per handle, as with [`SuCacheHandle`].
-    pub fn handle(&self, rows: usize) -> VersionedSuHandle {
-        VersionedSuHandle {
+    /// A per-query funnel pinned at `rows` dataset rows and a single
+    /// [`Measure`]: only entries covering exactly that many rows *and*
+    /// holding a finished value for that measure count as hits.
+    /// Statistics start at zero per handle, as with [`SuCacheHandle`].
+    pub fn handle(&self, rows: usize, measure: Measure) -> VersionedMeasureHandle {
+        VersionedMeasureHandle {
             shared: self.clone(),
             rows,
+            measure,
             local: HashMap::new(),
             stats: CacheStats::default(),
         }
@@ -753,15 +813,24 @@ impl VersionedSuCache {
 
     /// Publish computed or upgraded entries under canonical keys, keeping
     /// for each pair the entry covering the **most** rows (monotone — a
-    /// concurrent old-version query can never clobber newer state; equal
-    /// row counts are identical values by purity, so skipping is safe).
+    /// concurrent old-version query can never clobber newer state).
     ///
-    /// Byte accounting: an upgrade releases the replaced entry's bytes
-    /// and charges the new entry's; a vacant insert charges the new
-    /// entry's and counts as a *fresh publish* (the recompute-accounting
-    /// metric the eviction proptests balance against evictions). Under a
-    /// budget, eviction runs before the peak counter updates, so
-    /// [`VersionedSuCache::peak_resident_bytes`] never exceeds the
+    /// At **equal** row counts the scalar sets are merged: a measure the
+    /// stored entry lacks is added (one 16-byte slot), overlapping
+    /// measures are identical values by purity, and the shared table is
+    /// kept — adopted from the incoming entry only when the stored one
+    /// has none. A merge that adds a measure to an entry that already
+    /// held a different one counts as a *cross finish*: a scalar served
+    /// from another algorithm's table without fresh count computation
+    /// ([`VersionedMeasureCache::cross_measure_finishes`]).
+    ///
+    /// Byte accounting: an upgrade or merge releases the replaced
+    /// entry's bytes and charges the merged entry's; a vacant insert
+    /// charges the new entry's and counts as a *fresh publish* (the
+    /// recompute-accounting metric the eviction proptests balance
+    /// against evictions). Under a budget, eviction runs before the peak
+    /// counter updates, so
+    /// [`VersionedMeasureCache::peak_resident_bytes`] never exceeds the
     /// budget — the bound is an invariant, not an average.
     pub fn publish(&self, updates: Vec<((FeatureId, FeatureId), VersionedEntry)>) {
         if updates.is_empty() {
@@ -770,11 +839,11 @@ impl VersionedSuCache {
         let mut guard = self.inner.state.write().unwrap();
         let st = &mut *guard;
         for ((a, b), e) in updates {
-            let bytes = e.resident_bytes();
             let tick = self.inner.clock.fetch_add(1, AtomicOrdering::Relaxed);
             match st.map.entry(pair_key(a, b)) {
                 std::collections::hash_map::Entry::Occupied(mut o) => {
                     if o.get().entry.rows < e.rows {
+                        let bytes = e.resident_bytes();
                         let released = o.get().bytes;
                         let s = o.get_mut();
                         s.entry = e;
@@ -784,9 +853,35 @@ impl VersionedSuCache {
                             .resident_bytes
                             .saturating_sub(released)
                             .saturating_add(bytes);
+                    } else if o.get().entry.rows == e.rows {
+                        let released = o.get().bytes;
+                        let s = o.get_mut();
+                        let mut crossed = 0;
+                        for (m, v) in e.values {
+                            if s.entry.value(m).is_none() {
+                                // The stored entry held other measures
+                                // only: this scalar rides their table.
+                                if s.entry.measures().next().is_some() {
+                                    crossed += 1;
+                                }
+                                s.entry.set_value(m, v);
+                            }
+                        }
+                        if s.entry.table.is_none() {
+                            s.entry.table = e.table;
+                        }
+                        let bytes = s.entry.resident_bytes();
+                        s.bytes = bytes;
+                        s.last_use.store(tick, AtomicOrdering::Relaxed);
+                        st.cross_finishes += crossed;
+                        st.resident_bytes = st
+                            .resident_bytes
+                            .saturating_sub(released)
+                            .saturating_add(bytes);
                     }
                 }
                 std::collections::hash_map::Entry::Vacant(v) => {
+                    let bytes = e.resident_bytes();
                     v.insert(StoredEntry {
                         entry: e,
                         bytes,
@@ -917,17 +1012,23 @@ impl VersionedSuCache {
         self.inner.bounds.lock().unwrap().len()
     }
 
-    /// Every cached pair with the row count and SU value it currently
-    /// holds — the exactness proptest audits this against direct SU
-    /// computations over the matching row prefix.
-    pub fn snapshot(&self) -> Vec<((FeatureId, FeatureId), usize, f64)> {
+    /// Every cached `(pair, measure)` scalar with the row count it
+    /// currently covers, flattened — the exactness proptests audit this
+    /// against direct computations over the matching row prefix.
+    pub fn snapshot(&self) -> Vec<((FeatureId, FeatureId), usize, Measure, f64)> {
         self.inner
             .state
             .read()
             .unwrap()
             .map
             .iter()
-            .map(|(&k, s)| (k, s.entry.rows, s.entry.su))
+            .flat_map(|(&k, s)| {
+                s.entry
+                    .values
+                    .iter()
+                    .map(move |&(m, v)| (k, s.entry.rows, m, v))
+                    .collect::<Vec<_>>()
+            })
             .collect()
     }
 
@@ -948,7 +1049,7 @@ impl VersionedSuCache {
         self.inner.state.read().unwrap().resident_bytes
     }
 
-    /// High-water mark of [`VersionedSuCache::resident_bytes`], observed
+    /// High-water mark of [`VersionedMeasureCache::resident_bytes`], observed
     /// after each publish's eviction pass — never exceeds the budget.
     pub fn peak_resident_bytes(&self) -> usize {
         self.inner.state.read().unwrap().peak_bytes
@@ -971,6 +1072,15 @@ impl VersionedSuCache {
         self.inner.state.read().unwrap().fresh_publishes
     }
 
+    /// Scalars added to an entry that already held a *different*
+    /// measure's value at the same row count — finishes served from
+    /// another algorithm's cached table with zero fresh count
+    /// computation. This is the cross-algorithm reuse metric the
+    /// multi-algorithm service reports (DESIGN.md §17).
+    pub fn cross_measure_finishes(&self) -> usize {
+        self.inner.state.read().unwrap().cross_finishes
+    }
+
     /// Test hook: force the resident-byte counter to an arbitrary value
     /// to exercise saturating arithmetic.
     #[cfg(test)]
@@ -979,7 +1089,7 @@ impl VersionedSuCache {
     }
 }
 
-/// One query's view of a [`VersionedSuCache`], pinned at a row count:
+/// One query's view of a [`VersionedMeasureCache`], pinned at a row count:
 /// shares the entry map with every other handle, owns its own
 /// [`CacheStats`].
 ///
@@ -993,28 +1103,34 @@ impl VersionedSuCache {
 /// for, even though the shared map (upgraded past its pin by newer
 /// queries) can no longer serve it.
 #[derive(Debug)]
-pub struct VersionedSuHandle {
-    shared: VersionedSuCache,
+pub struct VersionedMeasureHandle {
+    shared: VersionedMeasureCache,
     rows: usize,
+    measure: Measure,
     /// Values computed through this handle, valid at its pinned row
     /// count regardless of what the shared map has been upgraded to.
     local: HashMap<(FeatureId, FeatureId), f64>,
     stats: CacheStats,
 }
 
-impl VersionedSuHandle {
+impl VersionedMeasureHandle {
     /// The row count this handle is pinned at.
     pub fn rows(&self) -> usize {
         self.rows
     }
 
+    /// The measure this handle is pinned at.
+    pub fn measure(&self) -> Measure {
+        self.measure
+    }
+
     /// The shared versioned cache this handle draws from.
-    pub fn shared(&self) -> &VersionedSuCache {
+    pub fn shared(&self) -> &VersionedMeasureCache {
         &self.shared
     }
 }
 
-impl SuCache for VersionedSuHandle {
+impl MeasureCache for VersionedMeasureHandle {
     fn batch(
         &mut self,
         pairs: &[(FeatureId, FeatureId)],
@@ -1024,8 +1140,9 @@ impl SuCache for VersionedSuHandle {
 
         // One pass under one read guard, as in SuCacheHandle — but a
         // shared-map hit requires the entry to cover exactly the pinned
-        // row count. Anything else (absent, stale, or upgraded past the
-        // pin) falls back to this handle's local memo, then to
+        // row count *and* hold a finished value for the pinned measure.
+        // Anything else (absent, stale, other-measure-only, or upgraded
+        // past the pin) falls back to this handle's local memo, then to
         // `compute`.
         let mut found: Vec<Option<f64>> = Vec::with_capacity(pairs.len());
         let mut missing: Vec<(FeatureId, FeatureId)> = Vec::new();
@@ -1035,17 +1152,25 @@ impl SuCache for VersionedSuHandle {
             let mut seen: HashSet<(FeatureId, FeatureId)> = HashSet::new();
             for &(a, b) in pairs {
                 let k = pair_key(a, b);
-                let v = match st.map.get(&k) {
-                    Some(s) if s.entry.rows == self.rows => {
+                let shared_hit = st.map.get(&k).and_then(|s| {
+                    if s.entry.rows != self.rows {
+                        return None;
+                    }
+                    s.entry.value(self.measure).map(|value| {
                         s.last_use.store(tick, AtomicOrdering::Relaxed);
+                        value
+                    })
+                });
+                let v = match shared_hit {
+                    Some(value) => {
                         // Memoize shared hits too: if an append
                         // supersedes this pin mid-search (or eviction
                         // drops the entry), every value this handle
                         // ever observed stays servable.
-                        self.local.entry(k).or_insert(s.entry.su);
-                        Some(s.entry.su)
+                        self.local.entry(k).or_insert(value);
+                        Some(value)
                     }
-                    _ => self.local.get(&k).copied(),
+                    None => self.local.get(&k).copied(),
                 };
                 if v.is_none() && seen.insert(k) {
                     missing.push(k);
@@ -1092,7 +1217,9 @@ impl SuCache for VersionedSuHandle {
             let st = self.shared.inner.state.read().unwrap();
             if let Some(s) = st.map.get(&k) {
                 if s.entry.rows == self.rows {
-                    return Some(s.entry.su);
+                    if let Some(v) = s.entry.value(self.measure) {
+                        return Some(v);
+                    }
                 }
             }
         }
@@ -1177,11 +1304,11 @@ mod tests {
     #[test]
     fn trait_batch_matches_inherent_behavior() {
         let mut c = CorrelationCache::new();
-        let v = SuCache::batch(&mut c, &[(0, 1), (2, 3)], &mut |miss| {
+        let v = MeasureCache::batch(&mut c, &[(0, 1), (2, 3)], &mut |miss| {
             miss.iter().map(|&(a, b)| (a * 10 + b) as f64).collect()
         });
         assert_eq!(v, vec![1.0, 23.0]);
-        assert_eq!(SuCache::stats(&c).computed, 2);
+        assert_eq!(MeasureCache::stats(&c).computed, 2);
     }
 
     #[test]
@@ -1254,27 +1381,23 @@ mod tests {
     }
 
     fn entry(rows: usize, su: f64) -> VersionedEntry {
-        VersionedEntry {
-            rows,
-            table: None,
-            su,
-        }
+        VersionedEntry::new(rows, None, Measure::Su, su)
     }
 
     #[test]
     fn versioned_hits_require_exact_row_pin() {
-        let c = VersionedSuCache::new();
+        let c = VersionedMeasureCache::new();
         c.publish(vec![((0, 1), entry(100, 0.5)), ((0, 2), entry(100, 0.7))]);
 
         // A handle pinned at the matching row count hits.
-        let mut pinned = c.handle(100);
+        let mut pinned = c.handle(100, Measure::Su);
         let v = pinned.batch(&[(1, 0), (0, 2)], &mut |_| panic!("all pinned hits"));
         assert_eq!(v, vec![0.5, 0.7]);
         assert_eq!(pinned.stats().hits, 2);
 
         // A handle pinned past an append misses the same entries and
         // forwards them (the resolve path upgrades and republishes).
-        let mut newer = c.handle(150);
+        let mut newer = c.handle(150, Measure::Su);
         let v = newer.batch(&[(0, 1)], &mut |miss| {
             assert_eq!(miss, &[(0, 1)]);
             vec![0.9]
@@ -1291,8 +1414,8 @@ mod tests {
     /// the handle's local memo has to.
     #[test]
     fn stale_pinned_handle_memoizes_its_own_computations() {
-        let c = VersionedSuCache::new();
-        let mut h = c.handle(100);
+        let c = VersionedMeasureCache::new();
+        let mut h = c.handle(100, Measure::Su);
         let v = h.batch(&[(0, 1)], &mut |miss| {
             assert_eq!(miss.len(), 1);
             vec![0.3]
@@ -1319,12 +1442,12 @@ mod tests {
 
     #[test]
     fn versioned_publish_is_monotone_in_rows() {
-        let c = VersionedSuCache::new();
+        let c = VersionedMeasureCache::new();
         c.publish(vec![((3, 5), entry(200, 0.4))]);
         // An old-version query's result cannot downgrade the entry...
         c.publish(vec![((5, 3), entry(120, 0.1))]);
         assert_eq!(c.get(3, 5).unwrap().rows, 200);
-        assert_eq!(c.get(3, 5).unwrap().su, 0.4);
+        assert_eq!(c.get(3, 5).unwrap().su(), Some(0.4));
         // ...but an upgrade past it lands.
         c.publish(vec![((3, 5), entry(260, 0.6))]);
         assert_eq!(c.get(5, 3).unwrap().rows, 260);
@@ -1333,7 +1456,7 @@ mod tests {
 
     #[test]
     fn versioned_lookup_and_snapshot_round_trip() {
-        let c = VersionedSuCache::new();
+        let c = VersionedMeasureCache::new();
         assert!(c.is_empty());
         let table = crate::correlation::ContingencyTable::from_columns(
             &[0u8, 1, 1],
@@ -1343,11 +1466,7 @@ mod tests {
         );
         c.publish(vec![(
             (2, 4),
-            VersionedEntry {
-                rows: 3,
-                table: Some(table.clone()),
-                su: 0.25,
-            },
+            VersionedEntry::new(3, Some(table.clone()), Measure::Su, 0.25),
         )]);
         let looked = c.lookup(&[(4, 2), (0, 1)]);
         assert_eq!(looked.len(), 2);
@@ -1355,7 +1474,7 @@ mod tests {
         assert_eq!(hit.rows, 3);
         assert_eq!(hit.table.as_ref().unwrap(), &table);
         assert!(looked[1].is_none());
-        assert_eq!(c.snapshot(), vec![((2, 4), 3, 0.25)]);
+        assert_eq!(c.snapshot(), vec![((2, 4), 3, Measure::Su, 0.25)]);
     }
 
     #[test]
@@ -1376,11 +1495,11 @@ mod tests {
 
         // Versioned handle: shared hit requires the exact row pin;
         // stale pins fall back to the local memo.
-        let vc = VersionedSuCache::new();
+        let vc = VersionedMeasureCache::new();
         vc.publish(vec![((0, 1), entry(100, 0.5))]);
-        let mut pinned = vc.handle(100);
+        let mut pinned = vc.handle(100, Measure::Su);
         assert_eq!(pinned.probe(1, 0), Some(0.5));
-        let mut stale = vc.handle(60);
+        let mut stale = vc.handle(60, Measure::Su);
         assert_eq!(stale.probe(0, 1), None, "row pin mismatch is a miss");
         let v = stale.batch(&[(0, 1)], &mut |_| vec![0.2]);
         assert_eq!(v, vec![0.2]);
@@ -1391,7 +1510,7 @@ mod tests {
 
     #[test]
     fn bounds_side_map_is_non_authoritative() {
-        let c = VersionedSuCache::new();
+        let c = VersionedMeasureCache::new();
         let iv = SuInterval { lo: 0.2, hi: 0.8 };
         c.publish_bounds(100, &[(0, 1)], &[iv]);
         assert_eq!(c.bounds_len(), 1);
@@ -1403,7 +1522,7 @@ mod tests {
         // Bounds never satisfy the exact paths: lookup misses, probe
         // misses, and a batch still computes.
         assert!(c.lookup(&[(0, 1)])[0].is_none());
-        let mut h = c.handle(100);
+        let mut h = c.handle(100, Measure::Su);
         assert_eq!(h.probe(0, 1), None);
         let v = h.batch(&[(0, 1)], &mut |miss| {
             assert_eq!(miss, &[(0, 1)]);
@@ -1428,7 +1547,7 @@ mod tests {
 
     #[test]
     fn bounds_side_map_clears_on_overflow() {
-        let c = VersionedSuCache::new();
+        let c = VersionedMeasureCache::new();
         let iv = SuInterval { lo: 0.0, hi: 1.0 };
         let pairs: Vec<(FeatureId, FeatureId)> =
             (0..MAX_BOUND_ENTRIES).map(|i| (i, i + 1)).collect();
@@ -1468,11 +1587,7 @@ mod tests {
     fn resident_bytes_exact_for_known_arities() {
         // A 3×4 table: 12 u64 cells = 96 bytes of payload.
         let t = ContingencyTable::from_columns(&[0u8, 1, 2], 3, &[3u8, 0, 1], 4);
-        let e = VersionedEntry {
-            rows: 3,
-            table: Some(t),
-            su: 0.5,
-        };
+        let e = VersionedEntry::new(3, Some(t), Measure::Su, 0.5);
         assert_eq!(e.resident_bytes(), ENTRY_OVERHEAD_BYTES + 3 * 4 * 8);
         // Table-less entries cost exactly the overhead.
         assert_eq!(entry(3, 0.5).resident_bytes(), ENTRY_OVERHEAD_BYTES);
@@ -1480,43 +1595,25 @@ mod tests {
 
     #[test]
     fn accounting_consistent_across_publish_upgrade_keep_and_clear() {
-        let c = VersionedSuCache::new();
+        let c = VersionedMeasureCache::new();
         let small = ContingencyTable::from_columns(&[0u8, 1], 2, &[1u8, 0], 2); // 32 B payload
         let big = ContingencyTable::from_columns(&[0u8, 1, 2, 3], 4, &[1u8, 0, 1, 0], 2); // 64 B
         c.publish(vec![(
             (0, 1),
-            VersionedEntry {
-                rows: 2,
-                table: Some(small.clone()),
-                su: 0.1,
-            },
+            VersionedEntry::new(2, Some(small.clone()), Measure::Su, 0.1),
         )]);
         assert_eq!(c.resident_bytes(), ENTRY_OVERHEAD_BYTES + 32);
         assert_eq!(c.fresh_publishes(), 1);
 
         // Upgrade path: the replaced entry's bytes are released, the new
         // entry's charged — no drift, no double count.
-        c.publish(vec![(
-            (1, 0),
-            VersionedEntry {
-                rows: 4,
-                table: Some(big),
-                su: 0.2,
-            },
-        )]);
+        c.publish(vec![((1, 0), VersionedEntry::new(4, Some(big), Measure::Su, 0.2))]);
         assert_eq!(c.resident_bytes(), ENTRY_OVERHEAD_BYTES + 64);
         assert_eq!(c.len(), 1);
         assert_eq!(c.fresh_publishes(), 1, "an upgrade is not a fresh publish");
 
         // Keep path (stale publish loses monotonicity): untouched.
-        c.publish(vec![(
-            (0, 1),
-            VersionedEntry {
-                rows: 3,
-                table: Some(small),
-                su: 0.3,
-            },
-        )]);
+        c.publish(vec![((0, 1), VersionedEntry::new(3, Some(small), Measure::Su, 0.3))]);
         assert_eq!(c.resident_bytes(), ENTRY_OVERHEAD_BYTES + 64);
 
         // Retire path: everything released and accounted as evicted.
@@ -1531,7 +1628,7 @@ mod tests {
     #[test]
     fn lru_eviction_before_calibration() {
         // Budget fits exactly two table-less entries.
-        let c = VersionedSuCache::with_budget(Some(2 * ENTRY_OVERHEAD_BYTES));
+        let c = VersionedMeasureCache::with_budget(Some(2 * ENTRY_OVERHEAD_BYTES));
         assert_eq!(c.budget(), Some(2 * ENTRY_OVERHEAD_BYTES));
         c.publish(vec![((0, 1), entry(10, 0.1))]);
         c.publish(vec![((0, 2), entry(10, 0.2))]);
@@ -1554,18 +1651,10 @@ mod tests {
         // eviction must pick `b` even though it is the most recently
         // used, which is exactly where it diverges from LRU.
         let big = ContingencyTable::from_columns(&[0u8, 1, 2, 3], 4, &[3u8, 2, 1, 0], 4);
-        let a = VersionedEntry {
-            rows: 10_000,
-            table: None,
-            su: 0.1,
-        };
-        let b = VersionedEntry {
-            rows: 100,
-            table: Some(big),
-            su: 0.2,
-        };
+        let a = VersionedEntry::new(10_000, None, Measure::Su, 0.1);
+        let b = VersionedEntry::new(100, Some(big), Measure::Su, 0.2);
         let total = a.resident_bytes() + b.resident_bytes();
-        let c = VersionedSuCache::with_budget(Some(total - 1));
+        let c = VersionedMeasureCache::with_budget(Some(total - 1));
         c.set_recompute_rate(2e-9);
         assert_eq!(c.recompute_rate(), Some(2e-9));
         c.publish(vec![((0, 1), a)]);
@@ -1582,7 +1671,7 @@ mod tests {
 
     #[test]
     fn zero_budget_cache_keeps_handles_exact() {
-        let c = VersionedSuCache::with_budget(Some(0));
+        let c = VersionedMeasureCache::with_budget(Some(0));
         c.publish(vec![((0, 1), entry(10, 0.5))]);
         assert_eq!(c.len(), 0, "nothing can stay resident");
         assert_eq!(c.resident_bytes(), 0);
@@ -1591,7 +1680,7 @@ mod tests {
         // Queries still work: misses are recomputed and memoized locally
         // by the handle, so even a cache that can hold nothing never
         // changes an answer.
-        let mut h = c.handle(10);
+        let mut h = c.handle(10, Measure::Su);
         let v = h.batch(&[(0, 1)], &mut |miss| {
             assert_eq!(miss.len(), 1);
             vec![0.5]
@@ -1603,7 +1692,7 @@ mod tests {
 
     #[test]
     fn resident_accounting_saturates_instead_of_overflowing() {
-        let c = VersionedSuCache::new();
+        let c = VersionedMeasureCache::new();
         c.force_resident_bytes(usize::MAX - 8);
         c.publish(vec![((0, 1), entry(5, 0.1))]); // would overflow a plain add
         assert_eq!(c.resident_bytes(), usize::MAX);
@@ -1611,7 +1700,7 @@ mod tests {
 
         // A bounded cache with a poisoned counter still terminates:
         // eviction stops once the map is empty.
-        let b = VersionedSuCache::with_budget(Some(64));
+        let b = VersionedMeasureCache::with_budget(Some(64));
         b.publish(vec![((0, 1), entry(5, 0.1))]);
         b.force_resident_bytes(usize::MAX);
         b.publish(vec![((0, 2), entry(5, 0.2))]);
@@ -1640,5 +1729,80 @@ mod tests {
         });
         assert_eq!(v, vec![0.2]);
         assert_eq!(h.stats().computed, 1);
+    }
+
+    /// Satellite regression for the measure-keyed byte ledger: finishing
+    /// a second measure from a cached table must cost one scalar slot,
+    /// never a second copy of the shared table bytes.
+    #[test]
+    fn second_measure_never_double_counts_table_bytes() {
+        let c = VersionedMeasureCache::new();
+        let t = ContingencyTable::from_columns(&[0u8, 1, 2], 3, &[1u8, 0, 1], 2); // 48 B
+        let su_only = VersionedEntry::new(3, Some(t.clone()), Measure::Su, 0.4);
+        let su_only_bytes = su_only.resident_bytes();
+        assert_eq!(su_only_bytes, ENTRY_OVERHEAD_BYTES + 48);
+        c.publish(vec![((0, 1), su_only)]);
+
+        // An equal-rows MI publish merges into the entry: +16 bytes, one
+        // cross finish, still one pair, no second table charge.
+        c.publish(vec![((1, 0), VersionedEntry::new(3, Some(t), Measure::Mi, 0.2))]);
+        assert_eq!(c.len(), 1);
+        assert_eq!(c.resident_bytes(), su_only_bytes + MEASURE_SCALAR_BYTES);
+        assert!(c.resident_bytes() < 2 * su_only_bytes, "table bytes double-counted");
+        assert_eq!(c.cross_measure_finishes(), 1);
+        assert_eq!(c.fresh_publishes(), 1, "a cross finish is not a fresh publish");
+
+        let e = c.get(0, 1).unwrap();
+        assert_eq!(e.value(Measure::Su), Some(0.4));
+        assert_eq!(e.value(Measure::Mi), Some(0.2));
+        // Re-publishing a measure the entry already holds changes nothing.
+        c.publish(vec![((0, 1), VersionedEntry::new(3, None, Measure::Mi, 0.2))]);
+        assert_eq!(c.cross_measure_finishes(), 1);
+        assert_eq!(c.resident_bytes(), su_only_bytes + MEASURE_SCALAR_BYTES);
+    }
+
+    #[test]
+    fn handles_are_measure_pinned() {
+        let c = VersionedMeasureCache::new();
+        c.publish(vec![((0, 1), entry(10, 0.5))]); // SU only
+        let mut su = c.handle(10, Measure::Su);
+        assert_eq!(su.batch(&[(0, 1)], &mut |_| panic!("hit")), vec![0.5]);
+        assert_eq!(su.probe(0, 1), Some(0.5));
+
+        // An MI handle at the same pin misses the SU-only entry and
+        // computes; its value lands in its local memo, not the SU slot.
+        let mut mi = c.handle(10, Measure::Mi);
+        assert_eq!(mi.measure(), Measure::Mi);
+        assert_eq!(mi.probe(0, 1), None, "other-measure value is not a hit");
+        let v = mi.batch(&[(1, 0)], &mut |miss| {
+            assert_eq!(miss, &[(0, 1)]);
+            vec![0.25]
+        });
+        assert_eq!(v, vec![0.25]);
+        assert_eq!(mi.stats().computed, 1);
+        // The shared entry is untouched (handles never publish).
+        assert_eq!(c.get(0, 1).unwrap().value(Measure::Mi), None);
+
+        // Once the MI finish is published at the same rows, a fresh MI
+        // handle hits and the SU handle still sees its own value.
+        c.publish(vec![((0, 1), VersionedEntry::new(10, None, Measure::Mi, 0.25))]);
+        let mut mi2 = c.handle(10, Measure::Mi);
+        assert_eq!(mi2.batch(&[(0, 1)], &mut |_| panic!("hit")), vec![0.25]);
+        assert_eq!(su.batch(&[(0, 1)], &mut |_| panic!("hit")), vec![0.5]);
+    }
+
+    #[test]
+    fn snapshot_flattens_per_measure() {
+        let c = VersionedMeasureCache::new();
+        let mut e = VersionedEntry::new(5, None, Measure::Su, 0.5);
+        e.set_value(Measure::Mi, 0.3);
+        assert_eq!(e.measures().collect::<Vec<_>>(), vec![Measure::Su, Measure::Mi]);
+        c.publish(vec![((0, 1), e)]);
+        let mut snap = c.snapshot();
+        snap.sort_by_key(|&(k, r, m, _)| (k, r, m));
+        assert_eq!(
+            snap,
+            vec![((0, 1), 5, Measure::Su, 0.5), ((0, 1), 5, Measure::Mi, 0.3)]
+        );
     }
 }

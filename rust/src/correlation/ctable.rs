@@ -81,7 +81,7 @@ impl ContingencyTable {
     /// rows and then delta-merged with `n..n2` is **bit-identical** to a
     /// table built from scratch over `0..n2` (asserted by
     /// `delta_merge_equals_from_scratch` below). This is what lets the
-    /// versioned SU cache (`cache::VersionedSuCache`) upgrade cached
+    /// versioned SU cache (`cache::VersionedMeasureCache`) upgrade cached
     /// tables after a dataset append by scanning only the delta rows,
     /// and what makes [`Self::marginals`] of an upgraded table equal the
     /// marginals of the from-scratch one (marginals are sums of counts,

@@ -1,0 +1,152 @@
+//! Correlation measures over the shared contingency-table substrate.
+//!
+//! A [`ContingencyTable`] is measure-agnostic: the same u64 counts finish
+//! into symmetrical uncertainty (CFS), mutual information (mRMR and the
+//! other greedy info-theoretic selectors of arXiv 1610.04154), or — for
+//! continuous data, off the table path entirely — Pearson correlation
+//! (RegCFS). [`Measure`] names the finish so the versioned cache can key
+//! scalar entries per measure while storing each pair's table exactly
+//! once (DESIGN.md §17).
+
+use crate::correlation::ctable::ContingencyTable;
+use crate::correlation::entropy::entropies;
+use crate::correlation::su::su_from_table;
+
+/// Which scalar a cached contingency table is finished into.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum Measure {
+    /// Symmetrical uncertainty (paper Eq. 2) — the CFS measure.
+    Su,
+    /// Mutual information `H(X) + H(Y) − H(X,Y)` — the mRMR measure.
+    Mi,
+    /// Absolute Pearson correlation — the RegCFS measure. Continuous
+    /// data never builds contingency tables, so this variant only tags
+    /// results; [`Measure::finish`] panics for it.
+    Pearson,
+}
+
+impl Measure {
+    /// Short lowercase label (`su` / `mi` / `pearson`), the spelling the
+    /// CLI, scripts, and job logs use.
+    pub fn label(self) -> &'static str {
+        match self {
+            Self::Su => "su",
+            Self::Mi => "mi",
+            Self::Pearson => "pearson",
+        }
+    }
+
+    /// Parse a [`Measure::label`] spelling.
+    pub fn parse(s: &str) -> Option<Self> {
+        match s {
+            "su" => Some(Self::Su),
+            "mi" => Some(Self::Mi),
+            "pearson" => Some(Self::Pearson),
+            _ => None,
+        }
+    }
+
+    /// Finish a contingency table into this measure's scalar.
+    ///
+    /// # Panics
+    ///
+    /// For [`Measure::Pearson`]: Pearson is not a contingency-table
+    /// measure — it rides the continuous `regcfs` path.
+    pub fn finish(self, t: &ContingencyTable) -> f64 {
+        match self {
+            Self::Su => su_from_table(t),
+            Self::Mi => mi_from_table(t),
+            Self::Pearson => {
+                panic!("Pearson is not a contingency-table measure (use the regcfs path)")
+            }
+        }
+    }
+}
+
+/// Mutual information `I(X;Y) = H(X) + H(Y) − H(X,Y)` (in nats) from a
+/// contingency table. An empty table yields 0; tiny negative values from
+/// float rounding are clamped to 0 (MI is mathematically ≥ 0).
+pub fn mi_from_table(t: &ContingencyTable) -> f64 {
+    let (hx, hy, hxy) = entropies(t);
+    (hx + hy - hxy).max(0.0)
+}
+
+/// MI of two aligned discretized columns.
+pub fn mutual_information(x: &[u8], bins_x: u16, y: &[u8], bins_y: u16) -> f64 {
+    mi_from_table(&ContingencyTable::from_columns(x, bins_x, y, bins_y))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::XorShift64Star;
+
+    #[test]
+    fn labels_round_trip() {
+        for m in [Measure::Su, Measure::Mi, Measure::Pearson] {
+            assert_eq!(Measure::parse(m.label()), Some(m));
+        }
+        assert_eq!(Measure::parse("spearman"), None);
+    }
+
+    #[test]
+    fn identical_columns_mi_is_entropy() {
+        let x = [0u8, 1, 2, 0, 1, 2, 1, 1];
+        let t = ContingencyTable::from_columns(&x, 3, &x, 3);
+        let (hx, _, _) = entropies(&t);
+        assert!((mi_from_table(&t) - hx).abs() < 1e-12);
+    }
+
+    #[test]
+    fn independent_uniform_mi_zero() {
+        let mut x = Vec::new();
+        let mut y = Vec::new();
+        for a in 0..4u8 {
+            for b in 0..4u8 {
+                x.push(a);
+                y.push(b);
+            }
+        }
+        assert!(mutual_information(&x, 4, &y, 4).abs() < 1e-12);
+    }
+
+    #[test]
+    fn empty_table_mi_zero() {
+        assert_eq!(mi_from_table(&ContingencyTable::new(3, 3)), 0.0);
+    }
+
+    #[test]
+    fn mi_is_symmetric() {
+        let mut rng = XorShift64Star::new(23);
+        for _ in 0..20 {
+            let x: Vec<u8> = (0..200).map(|_| rng.next_below(5) as u8).collect();
+            let y: Vec<u8> = (0..200).map(|_| rng.next_below(3) as u8).collect();
+            let a = mutual_information(&x, 5, &y, 3);
+            let b = mutual_information(&y, 3, &x, 5);
+            assert!((a - b).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn su_and_mi_finishes_are_consistent() {
+        // SU = 2·MI/(H(X)+H(Y)): the two finishes of one table agree.
+        let mut rng = XorShift64Star::new(41);
+        for _ in 0..20 {
+            let x: Vec<u8> = (0..300).map(|_| rng.next_below(4) as u8).collect();
+            let y: Vec<u8> = (0..300).map(|_| rng.next_below(6) as u8).collect();
+            let t = ContingencyTable::from_columns(&x, 4, &y, 6);
+            let (hx, hy, _) = entropies(&t);
+            let su = Measure::Su.finish(&t);
+            let mi = Measure::Mi.finish(&t);
+            if hx + hy > 0.0 {
+                assert!((su - 2.0 * mi / (hx + hy)).abs() < 1e-12);
+            }
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "regcfs")]
+    fn pearson_finish_panics() {
+        Measure::Pearson.finish(&ContingencyTable::new(2, 2));
+    }
+}

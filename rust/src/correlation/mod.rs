@@ -9,16 +9,18 @@
 pub mod cache;
 pub mod ctable;
 pub mod entropy;
+pub mod measure;
 pub mod pearson;
 pub mod sampled;
 pub mod su;
 
 pub use cache::{
-    CacheStats, CorrelationCache, SharedSuCache, SuCache, SuCacheHandle, VersionedEntry,
-    VersionedSuCache, VersionedSuHandle, ENTRY_OVERHEAD_BYTES, MAX_BOUND_ENTRIES,
-    SCALAR_ENTRY_BYTES,
+    CacheStats, CorrelationCache, MeasureCache, SharedSuCache, SuCacheHandle, VersionedEntry,
+    VersionedMeasureCache, VersionedMeasureHandle, ENTRY_OVERHEAD_BYTES, MAX_BOUND_ENTRIES,
+    MEASURE_SCALAR_BYTES, SCALAR_ENTRY_BYTES,
 };
 pub use ctable::ContingencyTable;
+pub use measure::{mi_from_table, mutual_information, Measure};
 pub use sampled::{
     bounds_for_pairs, default_windows, sample_ranges, windows_len, Marginals, SuBounds,
     SuInterval,

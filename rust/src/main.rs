@@ -78,11 +78,15 @@ queries, `append` directives that ingest new instances mid-workload
 `retire NAME` which unregisters a tenant and frees its cache. Datasets
 take `budget=BYTES|P%` (SU-cache byte budget; percent of the worst-case
 fully-warmed cache) and `weight=W` (deficit-round-robin share);
-`--cache-budget` / `--tenant-weight` set the defaults, e.g.:
+`--cache-budget` / `--tenant-weight` set the defaults. Queries take
+`algo=cfs|mrmr|relieff` (default cfs) — all three selectors share one
+measure-keyed correlation cache per dataset, so an mRMR query reuses
+the contingency tables a CFS query already paid for, e.g.:
 
   dataset logs family=kddcup99 rows=4000 features=20 seed=7 scheme=hp
   query logs repeat=3
   query logs max_fails=3 locally_predictive=false
+  query logs algo=mrmr
   append logs rows=800
   query logs warm=true
 ";

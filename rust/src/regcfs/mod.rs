@@ -108,6 +108,21 @@ impl RegWeka {
     }
 }
 
+impl crate::cfs::FsAlgorithm for RegWeka {
+    fn name(&self) -> &'static str {
+        "regcfs"
+    }
+
+    fn measure(&self) -> crate::correlation::Measure {
+        crate::correlation::Measure::Pearson
+    }
+
+    fn select(&self, ds: &Dataset) -> Result<SelectionResult> {
+        let data = RegDataset::from_dataset(ds)?;
+        Ok(RegWeka::select(self, &data))
+    }
+}
+
 /// Distributed Pearson correlator over row partitions.
 struct DistPearsonCorrelator {
     ctx: Arc<SparkletContext>,

@@ -15,10 +15,10 @@
 //! * Registering a dataset ([`DicfsService::register_discrete`]) builds
 //!   its partitioning layout once — for vp, the columnar shuffle and the
 //!   class broadcast — and attaches a shared, thread-safe
-//!   [`VersionedSuCache`](crate::correlation::VersionedSuCache); see
+//!   [`VersionedMeasureCache`](crate::correlation::VersionedMeasureCache); see
 //!   [`registry`].
 //! * Queries run the ordinary best-first search, each through its own
-//!   [`VersionedSuHandle`](crate::correlation::VersionedSuHandle)
+//!   [`VersionedMeasureHandle`](crate::correlation::VersionedMeasureHandle)
 //!   (per-query statistics, pinned to a dataset version) over the
 //!   dataset's shared cache. Only cache *misses* become distributed
 //!   work.
@@ -81,10 +81,10 @@ use std::sync::Arc;
 use std::time::Instant;
 
 use crate::cfs::best_first::{BestFirstSearch, CfsConfig, WarmStart};
-use crate::cfs::Correlator;
+use crate::cfs::{Correlator, MrmrConfig, MrmrSearch, Relieff, RelieffConfig, RelieffScheme};
 use crate::core::{FeatureId, SelectionResult};
 use crate::correlation::sampled::{SuBounds, SuInterval};
-use crate::correlation::{CacheStats, SuCache};
+use crate::correlation::{CacheStats, Measure, MeasureCache, VersionedMeasureHandle};
 use crate::data::columnar::{Dataset, DiscreteDataset};
 use crate::discretize::discretize_dataset;
 use crate::runtime::{NativeEngine, SuEngine};
@@ -148,7 +148,7 @@ pub struct ServiceConfig {
     /// unbounded). Applied by [`DicfsService::register_discrete`];
     /// [`DicfsService::try_register_discrete`] can override per tenant.
     /// Eviction never changes selections — see
-    /// [`VersionedSuCache`](crate::correlation::VersionedSuCache).
+    /// [`VersionedMeasureCache`](crate::correlation::VersionedMeasureCache).
     pub cache_budget_bytes: Option<usize>,
     /// Service-wide memory ceiling in bytes (`None` = unbounded).
     /// Registrations and appends whose projected demand (column
@@ -208,13 +208,63 @@ impl Default for RegisterOptions {
     }
 }
 
+/// Which selection algorithm a query runs — the service's `algo=` knob
+/// (DESIGN.md §17). All algorithms share the registered dataset, its
+/// layout, and (for the pairwise ones) its measure-keyed cache, so a
+/// warm CFS cache answers mRMR's MI terms by finishing the already-
+/// counted contingency tables.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub enum AlgoSpec {
+    /// Best-first CFS over SU — the paper's algorithm and the default.
+    #[default]
+    Cfs,
+    /// Greedy mRMR over MI terms served from the shared cache.
+    Mrmr(MrmrConfig),
+    /// ReliefF neighbor scans on the pinned version's data (row-wise;
+    /// no pair cache involved).
+    Relieff(RelieffConfig),
+}
+
+impl AlgoSpec {
+    /// Parse the CLI spelling (`cfs` / `mrmr` / `relieff`), with each
+    /// algorithm's default configuration.
+    pub fn parse(s: &str) -> Option<Self> {
+        match s {
+            "cfs" => Some(Self::Cfs),
+            "mrmr" => Some(Self::Mrmr(MrmrConfig::default())),
+            "relieff" => Some(Self::Relieff(RelieffConfig::default())),
+            _ => None,
+        }
+    }
+
+    /// Canonical CLI spelling.
+    pub fn label(&self) -> &'static str {
+        match self {
+            Self::Cfs => "cfs",
+            Self::Mrmr(_) => "mrmr",
+            Self::Relieff(_) => "relieff",
+        }
+    }
+
+    /// The correlation measure the algorithm's pairwise terms use.
+    pub fn measure(&self) -> Measure {
+        match self {
+            Self::Cfs | Self::Relieff(_) => Measure::Su,
+            Self::Mrmr(_) => Measure::Mi,
+        }
+    }
+}
+
 /// One feature-selection query against a registered dataset.
 #[derive(Debug, Clone, Copy)]
 pub struct QuerySpec {
     /// The registered dataset to search over.
     pub dataset: DatasetId,
     /// Search parameters (vary per tenant; defaults = the paper's).
+    /// Only the CFS algorithm reads these.
     pub cfs: CfsConfig,
+    /// Which algorithm to run (default: CFS).
+    pub algo: AlgoSpec,
 }
 
 /// What one query returns: the selection plus its cache profile.
@@ -228,6 +278,8 @@ pub struct QueryReport {
     pub dataset_name: String,
     /// Dataset version the query pinned at start (0 before any append).
     pub version: usize,
+    /// Which algorithm ran (the [`AlgoSpec::label`] spelling).
+    pub algo: &'static str,
     /// The selected features (identical to an isolated run).
     pub result: SelectionResult,
     /// This query's cache statistics: `hits` includes pairs warmed by
@@ -265,6 +317,10 @@ pub struct DatasetCacheReport {
     /// Pairs the budget has evicted so far (each reappears as a fresh
     /// computation if requested again — never a silent miss).
     pub evicted_pairs: usize,
+    /// Pairs answered for one measure by finishing a contingency table
+    /// another measure's query had already counted — the cross-algorithm
+    /// reuse the measure-keyed cache attributes (DESIGN.md §17).
+    pub cross_measure_finishes: usize,
 }
 
 impl DatasetCacheReport {
@@ -291,7 +347,7 @@ impl DatasetCacheReport {
 /// let data = Arc::new(discretize_dataset(&raw).unwrap());
 /// let id = service.register_discrete("tenant-a", data, ServeScheme::Horizontal, None);
 ///
-/// let spec = QuerySpec { dataset: id, cfs: Default::default() };
+/// let spec = QuerySpec { dataset: id, cfs: Default::default(), algo: Default::default() };
 /// let cold = service.query(&spec);
 /// let warm = service.query(&spec);
 /// assert_eq!(warm.result.selected, cold.result.selected);
@@ -472,7 +528,7 @@ impl DicfsService {
     /// // Register the first 400 rows, query once (fills the SU cache)...
     /// let id = service.register_discrete(
     ///     "tenant-a", Arc::new(full.slice_rows(0..400)), ServeScheme::Horizontal, None);
-    /// let spec = QuerySpec { dataset: id, cfs: Default::default() };
+    /// let spec = QuerySpec { dataset: id, cfs: Default::default(), algo: Default::default() };
     /// let before = service.query(&spec);
     ///
     /// // ...then append the remaining 100 rows: nothing is recomputed
@@ -557,7 +613,39 @@ impl DicfsService {
             .unwrap_or_else(|| panic!("unknown dataset id {}", spec.dataset));
         let ver = reg.current();
         let query = self.next_query.fetch_add(1, Ordering::SeqCst);
-        let mut handle = ver.cache_handle();
+
+        // ReliefF is row-wise, not pairwise: it runs on the pinned
+        // version's data directly (sharing the dataset, its layout and
+        // the version pin, but no pair cache) with the decomposition
+        // mapped from the registration scheme.
+        if let AlgoSpec::Relieff(cfg) = spec.algo {
+            let scheme = match reg.scheme {
+                ServeScheme::Sequential => RelieffScheme::Seq,
+                ServeScheme::Horizontal => RelieffScheme::Hp(reg.partitions().unwrap_or_else(
+                    || self.config.cluster.default_row_partitions(ver.rows()),
+                )),
+                ServeScheme::Vertical => RelieffScheme::Vp(
+                    reg.partitions().unwrap_or_else(|| ver.data.num_features()),
+                ),
+                ServeScheme::Auto => RelieffScheme::Auto,
+            };
+            let (result, wall_secs) =
+                timed(|| Relieff::new(cfg).select_discrete(&ver.data, scheme));
+            return QueryReport {
+                query,
+                dataset: reg.id,
+                dataset_name: reg.name.clone(),
+                version: ver.version,
+                algo: spec.algo.label(),
+                result,
+                cache: CacheStats::default(),
+                wall_secs,
+                warm: WarmStart::default(),
+            };
+        }
+
+        let measure = spec.algo.measure();
+        let mut handle = ver.cache_handle(measure);
         // Driver-local (seq) tenants compute misses inline on the query
         // thread — there is no distributed job to admission-control, so
         // they must not occupy scheduler slots or serialize behind the
@@ -567,18 +655,36 @@ impl DicfsService {
         let mut correlator: Box<dyn Correlator + '_> = match reg.scheme {
             ServeScheme::Sequential => Box::new(DirectCorrelator {
                 version: Arc::clone(&ver),
+                measure,
             }),
             ServeScheme::Horizontal | ServeScheme::Vertical | ServeScheme::Auto => {
                 Box::new(MissForwarder {
                     version: Arc::clone(&ver),
                     scheduler: &self.scheduler,
+                    measure,
                 })
             }
         };
         let m = ver.data.num_features();
-        let search = BestFirstSearch::new(spec.cfs);
-        let ((result, warm_out), wall_secs) =
-            timed(|| search.run_traced(m, correlator.as_mut(), &mut handle, warm));
+        let ((result, warm_out), wall_secs) = match spec.algo {
+            AlgoSpec::Cfs => {
+                let search = BestFirstSearch::new(spec.cfs);
+                timed(|| search.run_traced(m, correlator.as_mut(), &mut handle, warm))
+            }
+            AlgoSpec::Mrmr(cfg) => timed(|| {
+                // mRMR funnels every MI term through the same versioned
+                // handle best-first uses, so its misses coalesce in the
+                // scheduler and its hits include tables CFS queries
+                // already paid for.
+                let mut cached = CachedCorrelator {
+                    cache: &mut handle,
+                    inner: correlator.as_mut(),
+                };
+                let result = MrmrSearch::new(cfg).run(m, &mut cached);
+                (result, WarmStart::default())
+            }),
+            AlgoSpec::Relieff(_) => unreachable!("handled above"),
+        };
         // Attribute this query's pruning work to the lineage counters;
         // the next SU job report drains them (DESIGN.md §16).
         ver.prune
@@ -588,6 +694,7 @@ impl DicfsService {
             dataset: reg.id,
             dataset_name: reg.name.clone(),
             version: ver.version,
+            algo: spec.algo.label(),
             result,
             cache: handle.stats(),
             wall_secs,
@@ -639,6 +746,7 @@ impl DicfsService {
             peak_resident_bytes: reg.cache().peak_resident_bytes(),
             budget_bytes: reg.cache_budget(),
             evicted_pairs: reg.cache().evicted_pairs(),
+            cross_measure_finishes: reg.cache().cross_measure_finishes(),
         }
     }
 
@@ -658,20 +766,43 @@ impl DicfsService {
 }
 
 /// Query-side miss funnel for driver-local (seq) tenants: resolves the
-/// misses inline at the pinned version (hits, delta upgrades and fresh
-/// computations included). No scheduler involved — cache sharing alone
-/// carries the cross-query reuse.
+/// misses inline at the pinned version (hits, cross-measure finishes,
+/// delta upgrades and fresh computations included). No scheduler
+/// involved — cache sharing alone carries the cross-query reuse.
 struct DirectCorrelator {
     version: Arc<DatasetVersion>,
+    measure: Measure,
 }
 
 impl Correlator for DirectCorrelator {
     fn compute(&mut self, pairs: &[(FeatureId, FeatureId)]) -> Vec<f64> {
-        self.version.resolve(pairs).values
+        self.version.resolve(pairs, self.measure).values
     }
 
     fn compute_bounds(&mut self, pairs: &[(FeatureId, FeatureId)]) -> Option<SuBounds> {
+        // Sampled sketches bound SU only; other measures decline and
+        // their searches stay exact without pruning.
+        if self.measure != Measure::Su {
+            return None;
+        }
         bounds_at_version(&self.version, pairs)
+    }
+}
+
+/// Measure-pinned cache funnel for searches that are not best-first:
+/// serves each batch through the query's [`VersionedMeasureHandle`]
+/// (shared hits, local memo, per-query stats) and forwards only the
+/// misses to the underlying correlator — exactly the funnel
+/// [`BestFirstSearch`] applies internally.
+struct CachedCorrelator<'a> {
+    cache: &'a mut VersionedMeasureHandle,
+    inner: &'a mut dyn Correlator,
+}
+
+impl Correlator for CachedCorrelator<'_> {
+    fn compute(&mut self, pairs: &[(FeatureId, FeatureId)]) -> Vec<f64> {
+        let inner = &mut self.inner;
+        self.cache.batch(pairs, &mut |missing| inner.compute(missing))
     }
 }
 
@@ -723,6 +854,7 @@ fn bounds_at_version(
 struct MissForwarder<'a> {
     version: Arc<DatasetVersion>,
     scheduler: &'a MissScheduler,
+    measure: Measure,
 }
 
 impl Correlator for MissForwarder<'_> {
@@ -730,18 +862,24 @@ impl Correlator for MissForwarder<'_> {
         let (reply, rx) = channel();
         self.scheduler.submit(MissRequest {
             version: Arc::clone(&self.version),
+            measure: self.measure,
             pairs: pairs.to_vec(),
             reply,
             enqueued: Instant::now(),
         });
         // The sender side closing without an answer means the coalesced
-        // SU job for this batch panicked: this query fails, the service
+        // job for this batch panicked: this query fails, the service
         // (scheduler, other datasets, other queries) keeps running.
         rx.recv()
-            .expect("SU job failed before answering this query's miss batch")
+            .expect("correlation job failed before answering this query's miss batch")
     }
 
     fn compute_bounds(&mut self, pairs: &[(FeatureId, FeatureId)]) -> Option<SuBounds> {
+        // Sampled sketches bound SU only; other measures decline and
+        // their searches stay exact without pruning.
+        if self.measure != Measure::Su {
+            return None;
+        }
         bounds_at_version(&self.version, pairs)
     }
 }
@@ -777,6 +915,7 @@ mod tests {
         let report = service.query(&QuerySpec {
             dataset: id,
             cfs: CfsConfig::default(),
+            algo: AlgoSpec::Cfs,
         });
         let seq = SequentialCfs::default().select_discrete(&dd);
         assert_eq!(report.result.selected, seq.selected);
@@ -791,6 +930,7 @@ mod tests {
         let spec = QuerySpec {
             dataset: id,
             cfs: CfsConfig::default(),
+            algo: AlgoSpec::Cfs,
         };
         let cold = service.query(&spec);
         let warm = service.query(&spec);
@@ -815,10 +955,12 @@ mod tests {
         let ra = service.query(&QuerySpec {
             dataset: a,
             cfs: CfsConfig::default(),
+            algo: AlgoSpec::Cfs,
         });
         let rb = service.query(&QuerySpec {
             dataset: b,
             cfs: CfsConfig::default(),
+            algo: AlgoSpec::Cfs,
         });
         assert!(ra.cache.computed > 0 && rb.cache.computed > 0);
         let ca = service.cache_report(a).unwrap();
@@ -836,6 +978,7 @@ mod tests {
         let r = service.query(&QuerySpec {
             dataset: id,
             cfs: CfsConfig::default(),
+            algo: AlgoSpec::Cfs,
         });
         // Every computed pair went through exactly one logged job.
         let log = service.job_log();
@@ -853,7 +996,8 @@ mod tests {
         let specs = vec![
             QuerySpec {
                 dataset: id,
-                cfs: CfsConfig::default()
+                cfs: CfsConfig::default(),
+                algo: AlgoSpec::Cfs,
             };
             4
         ];
@@ -895,6 +1039,7 @@ mod tests {
         let spec = QuerySpec {
             dataset: id,
             cfs: CfsConfig::default(),
+            algo: AlgoSpec::Cfs,
         };
         let before = service.query(&spec);
         assert_eq!(before.version, 0);
@@ -938,6 +1083,7 @@ mod tests {
         let spec = QuerySpec {
             dataset: id,
             cfs: CfsConfig::default(),
+            algo: AlgoSpec::Cfs,
         };
         let _ = service.query(&spec);
         service
@@ -950,7 +1096,7 @@ mod tests {
         // The SU matrix audit: every cached entry equals the direct SU
         // over the row prefix it covers.
         use crate::correlation::symmetrical_uncertainty;
-        for ((a, b), rows, su) in service.dataset(id).unwrap().cache().snapshot() {
+        for ((a, b), rows, _m, su) in service.dataset(id).unwrap().cache().snapshot() {
             let prefix = full.slice_rows(0..rows);
             let (x, bx) = prefix.column(a);
             let (y, by) = prefix.column(b);
@@ -990,6 +1136,7 @@ mod tests {
         let spec = QuerySpec {
             dataset: id,
             cfs: CfsConfig::default(),
+            algo: AlgoSpec::Cfs,
         };
         let first = service.query(&spec);
         assert!(!first.warm.is_empty(), "query must return a restart seed");
@@ -1018,6 +1165,7 @@ mod tests {
         let report = service.query(&QuerySpec {
             dataset: id,
             cfs: CfsConfig::default(),
+            algo: AlgoSpec::Cfs,
         });
         let seq = SequentialCfs::default().select_discrete(&dd);
         assert_eq!(report.result.selected, seq.selected, "auto broke exactness");
@@ -1123,6 +1271,7 @@ mod tests {
         let spec = QuerySpec {
             dataset: id,
             cfs: CfsConfig::default(),
+            algo: AlgoSpec::Cfs,
         };
         let r = service.query(&spec);
         assert!(r.cache.computed > 0);
@@ -1145,6 +1294,7 @@ mod tests {
         let r2 = service.query(&QuerySpec {
             dataset: id2,
             cfs: CfsConfig::default(),
+            algo: AlgoSpec::Cfs,
         });
         assert_eq!(r2.result.selected, r.result.selected);
     }
@@ -1163,6 +1313,7 @@ mod tests {
         let spec = QuerySpec {
             dataset: id,
             cfs: CfsConfig::default(),
+            algo: AlgoSpec::Cfs,
         };
         let seq = SequentialCfs::default().select_discrete(&dd);
         for _ in 0..3 {
@@ -1200,6 +1351,7 @@ mod tests {
         let report = service.query(&QuerySpec {
             dataset: id,
             cfs: CfsConfig::default(),
+            algo: AlgoSpec::Cfs,
         });
         let seq = SequentialCfs::default().select_discrete(&dd);
         assert_eq!(report.result.selected, seq.selected, "pool broke exactness");

@@ -5,7 +5,7 @@
 //! discretization is computed (or adopted), the partitioning layout is
 //! built — for vp that includes the columnar-transformation shuffle and
 //! the one-time class broadcast — and an empty
-//! [`VersionedSuCache`] is attached. Every query against the dataset
+//! [`VersionedMeasureCache`] is attached. Every query against the dataset
 //! then reuses all three, which is what turns the paper's per-search
 //! on-demand optimization into a cross-query one.
 //!
@@ -40,8 +40,8 @@ use crate::correlation::sampled::{
     bounds_for_pairs, default_windows, sampled_table, windows_len, SuBounds,
 };
 use crate::correlation::{
-    ContingencyTable, Marginals, VersionedEntry, VersionedSuCache, VersionedSuHandle,
-    ENTRY_OVERHEAD_BYTES,
+    ContingencyTable, Marginals, Measure, VersionedEntry, VersionedMeasureCache,
+    VersionedMeasureHandle, ENTRY_OVERHEAD_BYTES,
 };
 use crate::data::columnar::DiscreteDataset;
 use crate::dicfs::planner::AutoCorrelator;
@@ -54,7 +54,7 @@ use crate::sparklet::SparkletContext;
 /// for the service's lifetime — retired ids are never reused).
 pub type DatasetId = usize;
 
-/// Worst-case resident bytes of a fully warmed [`VersionedSuCache`] over
+/// Worst-case resident bytes of a fully warmed [`VersionedMeasureCache`] over
 /// `data`: every pair of the `C(m+1, 2)` correlation matrix cached with
 /// its contingency table. Closed form over the arities — with
 /// `S1 = Σ arity` and `S2 = Σ arity²`, the feature–feature cells sum to
@@ -141,7 +141,7 @@ pub struct DatasetVersion {
     /// The correlation backend over this version's layout.
     pub(crate) provider: Box<dyn SharedCorrelator>,
     /// The lineage-wide SU cache (shared by every version).
-    pub(crate) cache: VersionedSuCache,
+    pub(crate) cache: VersionedMeasureCache,
     /// Engine used to finish SU from merged tables on the driver side.
     pub(crate) engine: Arc<dyn SuEngine>,
     /// Lineage-wide pruning counters (shared by every version).
@@ -152,7 +152,7 @@ pub struct DatasetVersion {
 /// [`SuJobReport`](crate::serve::SuJobReport)'s incremental fields.
 #[derive(Debug, Clone)]
 pub(crate) struct ResolveOutcome {
-    /// SU values, aligned with the input pairs.
+    /// Measure values, aligned with the input pairs.
     pub values: Vec<f64>,
     /// Pairs already valid at this version (no work).
     pub cached: usize,
@@ -160,6 +160,9 @@ pub(crate) struct ResolveOutcome {
     pub fresh: usize,
     /// Pairs upgraded by merging only delta-row counts.
     pub upgraded: usize,
+    /// Pairs finished driver-side from a table another measure already
+    /// cached at this version — zero count computation (DESIGN.md §17).
+    pub finished: usize,
     /// Σ rows scanned by fresh computations (`fresh × n`).
     pub full_cells: u64,
     /// Σ delta rows scanned by upgrades (strictly less than `n` each).
@@ -172,27 +175,45 @@ impl DatasetVersion {
         self.data.num_rows()
     }
 
-    /// A per-query cache funnel pinned at this version's row count.
-    pub fn cache_handle(&self) -> VersionedSuHandle {
-        self.cache.handle(self.rows())
+    /// A per-query cache funnel pinned at this version's row count and
+    /// the query's measure.
+    pub fn cache_handle(&self, measure: Measure) -> VersionedMeasureHandle {
+        self.cache.handle(self.rows(), measure)
     }
 
-    /// Resolve a batch of (deduplicated) pairs at this version: serve
-    /// already-valid entries, **upgrade** entries whose tables cover
-    /// fewer rows by merging only the delta rows' counts, and compute
-    /// the rest from scratch — publishing tables alongside SU so future
-    /// appends can upgrade them too.
+    /// Finish contingency tables into `measure` scalars. SU goes through
+    /// the engine path (batched, PJRT-dispatchable); other measures are
+    /// driver-side finishes — same `entropies` arithmetic, bit-identical
+    /// across engines.
+    fn finish_tables(&self, refs: &[&ContingencyTable], measure: Measure) -> Vec<f64> {
+        match measure {
+            Measure::Su => self.engine.su_from_tables(refs),
+            m => refs.iter().map(|t| m.finish(t)).collect(),
+        }
+    }
+
+    /// Resolve a batch of (deduplicated) pairs at this version under one
+    /// measure: serve already-valid entries, **finish** entries whose
+    /// table is current but was only ever finished into *other* measures
+    /// (zero count computation — the cross-algorithm reuse win), **upgrade**
+    /// entries whose tables cover fewer rows by merging only the delta
+    /// rows' counts, and compute the rest from scratch — publishing
+    /// tables alongside the scalar so future appends can upgrade them.
     ///
     /// Exactness: an upgraded table is the cached base table plus the
     /// delta rows' counts — bit-identical to a from-scratch table over
     /// this version's rows because u64 counts are additive across
-    /// disjoint row ranges — and SU is recomputed from the merged table
-    /// through the same engine path every from-scratch computation uses.
-    /// Publication is monotone (kept-most-rows), so resolving at an old
-    /// pinned version can never downgrade newer entries; such stale
-    /// resolves return correct values for their own version without
-    /// publishing.
-    pub(crate) fn resolve(&self, pairs: &[(FeatureId, FeatureId)]) -> ResolveOutcome {
+    /// disjoint row ranges — and the measure is recomputed from the
+    /// merged table through the same finish path every from-scratch
+    /// computation uses. Publication is monotone (kept-most-rows), so
+    /// resolving at an old pinned version can never downgrade newer
+    /// entries; such stale resolves return correct values for their own
+    /// version without publishing.
+    pub(crate) fn resolve(
+        &self,
+        pairs: &[(FeatureId, FeatureId)],
+        measure: Measure,
+    ) -> ResolveOutcome {
         let n = self.rows();
         let table_jobs = self.provider.supports_ctables();
 
@@ -200,6 +221,7 @@ impl DatasetVersion {
         // input pair's value will come from.
         enum Slot {
             Done(f64),
+            Finish(usize),
             Fresh(usize),
             Upgrade(usize),
         }
@@ -208,20 +230,30 @@ impl DatasetVersion {
         let entries = self.cache.lookup(&canonical);
         let mut slots: Vec<Slot> = Vec::with_capacity(pairs.len());
         let mut fresh: Vec<(FeatureId, FeatureId)> = Vec::new();
-        // (pair, base rows, base table — taken when merged) of each
-        // upgradable entry.
-        let mut upgrades: Vec<((FeatureId, FeatureId), usize, Option<ContingencyTable>)> =
-            Vec::new();
+        // Current-rows tables that another measure already paid for:
+        // finish them driver-side, no provider job at all.
+        let mut finishes: Vec<((FeatureId, FeatureId), ContingencyTable)> = Vec::new();
+        // (pair, base rows, base table — taken when merged, prior
+        // measures to re-finish) of each upgradable entry.
+        let mut upgrades: Vec<(
+            (FeatureId, FeatureId),
+            usize,
+            Option<ContingencyTable>,
+            Vec<Measure>,
+        )> = Vec::new();
         for (&p, e) in canonical.iter().zip(entries) {
             match e {
-                Some(e) if e.rows == n => slots.push(Slot::Done(e.su)),
-                Some(VersionedEntry {
-                    rows,
-                    table: Some(t),
-                    ..
-                }) if rows < n && table_jobs => {
+                Some(e) if e.rows == n && e.value(measure).is_some() => {
+                    slots.push(Slot::Done(e.value(measure).expect("checked in guard")));
+                }
+                Some(e) if e.rows == n && e.table.is_some() => {
+                    slots.push(Slot::Finish(finishes.len()));
+                    finishes.push((p, e.table.expect("checked in guard")));
+                }
+                Some(e) if e.rows < n && e.table.is_some() && table_jobs => {
+                    let prior: Vec<Measure> = e.measures().collect();
                     slots.push(Slot::Upgrade(upgrades.len()));
-                    upgrades.push((p, rows, Some(t)));
+                    upgrades.push((p, e.rows, e.table, prior));
                 }
                 _ => {
                     slots.push(Slot::Fresh(fresh.len()));
@@ -232,40 +264,47 @@ impl DatasetVersion {
         let cached = slots.iter().filter(|s| matches!(s, Slot::Done(_))).count();
 
         // Tables are *moved* into the publish list as they are produced
-        // (no second deep copy of any table); the scalar SU values are
+        // (no second deep copy of any table); the scalar values are
         // kept separately for the aligned reply.
         let mut updates: Vec<((FeatureId, FeatureId), VersionedEntry)> =
-            Vec::with_capacity(fresh.len() + upgrades.len());
+            Vec::with_capacity(fresh.len() + finishes.len() + upgrades.len());
+
+        // Cross-measure finishes: the table is already resident at this
+        // row count, so only the scalar is published (equal-rows publish
+        // merges it into the stored entry without re-charging the table).
+        let mut finish_vals: Vec<f64> = Vec::new();
+        if !finishes.is_empty() {
+            let refs: Vec<&ContingencyTable> = finishes.iter().map(|(_, t)| t).collect();
+            finish_vals = self.finish_tables(&refs, measure);
+            for (&(p, _), &v) in finishes.iter().zip(&finish_vals) {
+                updates.push((p, VersionedEntry::new(n, None, measure, v)));
+            }
+        }
 
         // Fresh pairs: one table job over all rows (tables are kept for
-        // future upgrades) — or a scalar batch on table-less backends.
-        let mut fresh_su: Vec<f64> = Vec::new();
+        // future upgrades) — or a scalar batch on table-less backends,
+        // which speak SU only (every table-less provider predates the
+        // measure substrate and computes symmetrical uncertainty).
+        let mut fresh_vals: Vec<f64> = Vec::new();
         if !fresh.is_empty() {
             if table_jobs {
                 let tables = self.provider.compute_ctables(&fresh, 0..n);
                 let refs: Vec<&ContingencyTable> = tables.iter().collect();
-                fresh_su = self.engine.su_from_tables(&refs);
-                for ((&p, table), &su) in fresh.iter().zip(tables).zip(&fresh_su) {
-                    updates.push((
-                        p,
-                        VersionedEntry {
-                            rows: n,
-                            table: Some(table),
-                            su,
-                        },
-                    ));
+                fresh_vals = self.finish_tables(&refs, measure);
+                for ((&p, table), &v) in fresh.iter().zip(tables).zip(&fresh_vals) {
+                    updates.push((p, VersionedEntry::new(n, Some(table), measure, v)));
                 }
             } else {
-                fresh_su = self.provider.compute_batch(&fresh);
-                for (&p, &su) in fresh.iter().zip(&fresh_su) {
-                    updates.push((
-                        p,
-                        VersionedEntry {
-                            rows: n,
-                            table: None,
-                            su,
-                        },
-                    ));
+                assert_eq!(
+                    measure,
+                    Measure::Su,
+                    "scalar-only correlation backends serve SU exclusively; \
+                     {} needs a contingency-table provider",
+                    measure.label()
+                );
+                fresh_vals = self.provider.compute_batch(&fresh);
+                for (&p, &v) in fresh.iter().zip(&fresh_vals) {
+                    updates.push((p, VersionedEntry::new(n, None, measure, v)));
                 }
             }
         }
@@ -274,9 +313,9 @@ impl DatasetVersion {
         // Upgrades: one delta table job per distinct base-row count
         // (entries may have been published at different versions), in
         // ascending order for determinism of the job sequence.
-        let mut upgraded_su: Vec<Option<f64>> = vec![None; upgrades.len()];
+        let mut upgraded_vals: Vec<Option<f64>> = vec![None; upgrades.len()];
         let mut delta_cells = 0u64;
-        let mut groups: Vec<usize> = upgrades.iter().map(|&(_, r, _)| r).collect();
+        let mut groups: Vec<usize> = upgrades.iter().map(|&(_, r, _, _)| r).collect();
         groups.sort_unstable();
         groups.dedup();
         for base in groups {
@@ -285,9 +324,9 @@ impl DatasetVersion {
                 .collect();
             let gpairs: Vec<(FeatureId, FeatureId)> = idxs.iter().map(|&i| upgrades[i].0).collect();
             let deltas = self.provider.compute_ctables(&gpairs, base..n);
-            // Merge the whole group first, then finish SU in one engine
-            // call (the engine API is batched; per-pair calls would cost
-            // a dispatch round-trip each under PJRT).
+            // Merge the whole group first, then finish the measure in
+            // one batched call (per-pair calls would cost a dispatch
+            // round-trip each under PJRT).
             let mut merged: Vec<ContingencyTable> = Vec::with_capacity(idxs.len());
             for (&i, delta) in idxs.iter().zip(deltas) {
                 let mut table = upgrades[i].2.take().expect("upgrade table taken once");
@@ -298,17 +337,20 @@ impl DatasetVersion {
                 merged.push(table);
             }
             let refs: Vec<&ContingencyTable> = merged.iter().collect();
-            let sus = self.engine.su_from_tables(&refs);
-            for ((&i, table), &su) in idxs.iter().zip(merged).zip(&sus) {
-                upgraded_su[i] = Some(su);
-                updates.push((
-                    upgrades[i].0,
-                    VersionedEntry {
-                        rows: n,
-                        table: Some(table),
-                        su,
-                    },
-                ));
+            let vals = self.finish_tables(&refs, measure);
+            for ((&i, table), &v) in idxs.iter().zip(merged).zip(&vals) {
+                upgraded_vals[i] = Some(v);
+                // Re-finish every measure the superseded entry held so a
+                // row upgrade never silently discards another algorithm's
+                // cached scalars (its old-row values are invalid anyway).
+                let mut entry = VersionedEntry::new(n, None, measure, v);
+                for &m in &upgrades[i].3 {
+                    if m != measure {
+                        entry.set_value(m, m.finish(&table));
+                    }
+                }
+                entry.table = Some(table);
+                updates.push((upgrades[i].0, entry));
             }
         }
 
@@ -318,8 +360,9 @@ impl DatasetVersion {
             .iter()
             .map(|s| match s {
                 Slot::Done(v) => *v,
-                Slot::Fresh(i) => fresh_su[*i],
-                Slot::Upgrade(i) => upgraded_su[*i].expect("every upgrade group resolved"),
+                Slot::Finish(i) => finish_vals[*i],
+                Slot::Fresh(i) => fresh_vals[*i],
+                Slot::Upgrade(i) => upgraded_vals[*i].expect("every upgrade group resolved"),
             })
             .collect();
         ResolveOutcome {
@@ -327,6 +370,7 @@ impl DatasetVersion {
             cached,
             fresh: fresh.len(),
             upgraded: upgrades.len(),
+            finished: finishes.len(),
             full_cells,
             delta_cells,
         }
@@ -407,7 +451,7 @@ pub struct RegisteredDataset {
     /// Partition-count override, reapplied to every version's layout.
     partitions: Option<usize>,
     /// The lineage-wide SU cache (also held by every version).
-    cache: VersionedSuCache,
+    cache: VersionedMeasureCache,
     /// The lineage-wide pruning counters (also held by every version).
     prune: Arc<PruneCounters>,
     /// The current version. Only the latest is retained — in-flight
@@ -438,7 +482,7 @@ impl RegisteredDataset {
         ctx: &Arc<SparkletContext>,
         engines: &[Arc<dyn SuEngine>],
     ) -> Self {
-        let cache = VersionedSuCache::with_budget(cache_budget);
+        let cache = VersionedMeasureCache::with_budget(cache_budget);
         let prune = Arc::new(PruneCounters::default());
         let provider = build_provider(scheme, &data, partitions, ctx, engines, None);
         let v0 = Arc::new(DatasetVersion {
@@ -475,7 +519,7 @@ impl RegisteredDataset {
         weight: f64,
         provider: Box<dyn SharedCorrelator>,
     ) -> Self {
-        let cache = VersionedSuCache::new();
+        let cache = VersionedMeasureCache::new();
         let prune = Arc::new(PruneCounters::default());
         let v0 = Arc::new(DatasetVersion {
             dataset: id,
@@ -519,7 +563,7 @@ impl RegisteredDataset {
     }
 
     /// The lineage-wide SU cache of this dataset.
-    pub fn cache(&self) -> &VersionedSuCache {
+    pub fn cache(&self) -> &VersionedMeasureCache {
         &self.cache
     }
 
@@ -538,6 +582,11 @@ impl RegisteredDataset {
     /// This dataset's deficit-round-robin fairness weight.
     pub fn weight(&self) -> f64 {
         self.weight
+    }
+
+    /// The registration's partition-count override, if any.
+    pub fn partitions(&self) -> Option<usize> {
+        self.partitions
     }
 
     /// Worst-case resident bytes of this dataset's fully warmed cache

@@ -34,7 +34,7 @@
 //!   valid cached entries are served, entries from earlier versions are
 //!   **upgraded** by merging only the delta rows' counts, the rest are
 //!   computed fresh (tables cached in the lineage's
-//!   [`VersionedSuCache`](crate::correlation::VersionedSuCache) for
+//!   [`VersionedMeasureCache`](crate::correlation::VersionedMeasureCache) for
 //!   future upgrades) — and it refreshes the cache's eviction pricing
 //!   from the planner's calibrated rates when the dataset has one.
 //!
@@ -52,6 +52,7 @@ use std::thread::JoinHandle;
 use std::time::Instant;
 
 use crate::core::{pair_key, FeatureId};
+use crate::correlation::Measure;
 use crate::dicfs::plan::PlanDecision;
 use crate::serve::registry::{DatasetId, DatasetVersion};
 
@@ -60,6 +61,10 @@ pub(crate) struct MissRequest {
     /// The dataset *version* the query is pinned to (carries the
     /// version's provider, the lineage cache, and the resolve path).
     pub version: Arc<DatasetVersion>,
+    /// The measure the querying algorithm needs (SU for CFS, MI for
+    /// mRMR). Coalescing is keyed per (version, measure) so one job's
+    /// resolve path finishes exactly one scalar kind.
+    pub measure: Measure,
     /// Requested pairs, in the query's order (the reply preserves it).
     pub pairs: Vec<(FeatureId, FeatureId)>,
     /// Where the values go once the job completes.
@@ -84,6 +89,13 @@ pub struct SuJobReport {
     /// Distinct uncached pairs the job computed — fresh computations
     /// plus delta upgrades.
     pub computed_pairs: usize,
+    /// Pairs answered by finishing another measure's cached contingency
+    /// table driver-side — zero count computation; the cross-algorithm
+    /// reuse the measure substrate exists for (DESIGN.md §17).
+    pub finished_pairs: usize,
+    /// The measure this job's resolve finished (`"su"` / `"mi"`), for
+    /// per-algorithm job-log accounting.
+    pub measure: &'static str,
     /// Dataset version the job resolved against.
     pub version: usize,
     /// Of `computed_pairs`, how many were **upgraded** from an earlier
@@ -287,13 +299,14 @@ struct TenantLane {
 }
 
 /// DRR cost of a lane's head batch: the distinct canonical pairs across
-/// every queued request pinned to the head request's version (exactly
-/// the set a dispatched job would resolve). At least 1 so a dispatch
-/// always consumes credit.
+/// every queued request pinned to the head request's (version, measure)
+/// (exactly the set a dispatched job would resolve). At least 1 so a
+/// dispatch always consumes credit.
 fn head_batch_cost(queue: &VecDeque<MissRequest>) -> f64 {
-    let ver = queue.front().expect("cost of an empty lane").version.version;
+    let head = queue.front().expect("cost of an empty lane");
+    let (ver, measure) = (head.version.version, head.measure);
     let mut seen: HashSet<(FeatureId, FeatureId)> = HashSet::new();
-    for r in queue.iter().filter(|r| r.version.version == ver) {
+    for r in queue.iter().filter(|r| r.version.version == ver && r.measure == measure) {
         for &(a, b) in &r.pairs {
             seen.insert(pair_key(a, b));
         }
@@ -381,14 +394,16 @@ fn scheduler_loop(
                 }
                 lane.deficit -= cost;
                 // Coalesce only requests pinned to the head request's
-                // version: a request that raced an append must resolve
-                // against its own pinned layout. Later-version requests
+                // (version, measure): a request that raced an append must
+                // resolve against its own pinned layout, and a job's
+                // resolve finishes exactly one measure. Other requests
                 // stay queued for the next job.
-                let ver_no = lane.queue.front().expect("nonempty").version.version;
+                let head = lane.queue.front().expect("nonempty");
+                let (ver_no, head_measure) = (head.version.version, head.measure);
                 let mut batch = Vec::new();
                 let mut rest = VecDeque::with_capacity(lane.queue.len());
                 for r in lane.queue.drain(..) {
-                    if r.version.version == ver_no {
+                    if r.version.version == ver_no && r.measure == head_measure {
                         batch.push(r);
                     } else {
                         rest.push_back(r);
@@ -482,6 +497,7 @@ pub(crate) fn run_su_job(
     log: &Mutex<Vec<SuJobReport>>,
 ) -> SuJobReport {
     let ds = &batch[0].version;
+    let measure = batch[0].measure;
     let requested_pairs: usize = batch.iter().map(|r| r.pairs.len()).sum();
     let queue_secs = batch
         .iter()
@@ -492,8 +508,10 @@ pub(crate) fn run_su_job(
     let mut seen: HashSet<(FeatureId, FeatureId)> = HashSet::new();
     for r in batch {
         debug_assert!(
-            r.version.dataset == ds.dataset && r.version.version == ds.version,
-            "batch spans dataset versions"
+            r.version.dataset == ds.dataset
+                && r.version.version == ds.version
+                && r.measure == measure,
+            "batch spans dataset versions or measures"
         );
         for &(a, b) in &r.pairs {
             let k = pair_key(a, b);
@@ -514,7 +532,7 @@ pub(crate) fn run_su_job(
         let _guard = crate::sparklet::observe_stages(
             std::sync::Arc::clone(&recorder) as std::sync::Arc<dyn crate::sparklet::PlanObserver>,
         );
-        ds.resolve(&candidates)
+        ds.resolve(&candidates, measure)
     };
     let compute_secs = t0.elapsed().as_secs_f64();
     let job_stages = recorder.metrics();
@@ -545,6 +563,8 @@ pub(crate) fn run_su_job(
         coalesced_requests: batch.len(),
         requested_pairs,
         computed_pairs: outcome.fresh + outcome.upgraded,
+        finished_pairs: outcome.finished,
+        measure: measure.label(),
         version: ds.version,
         upgraded_pairs: outcome.upgraded,
         full_cells: outcome.full_cells,
@@ -645,6 +665,7 @@ mod tests {
         (
             MissRequest {
                 version: ds.current(),
+                measure: Measure::Su,
                 pairs,
                 reply: tx,
                 enqueued: Instant::now(),

@@ -22,10 +22,12 @@
 //! `budget=` (SU-cache budget: absolute bytes or `25%` of the dataset's
 //! worst-case fully-warmed cache) and `weight=` (deficit-round-robin
 //! fairness weight, default 1.0). `query` lines reference a dataset by
-//! name and accept `max_fails=`, `queue_capacity=`,
+//! name and accept `algo=cfs|mrmr|relieff` (which selector runs,
+//! default `cfs`; all three share the dataset's correlation cache —
+//! DESIGN.md §17), `max_fails=`, `queue_capacity=`,
 //! `locally_predictive=true|false`, `repeat=`, `warm=true|false`
 //! (warm-restart the search from the previous query's winner on the
-//! same dataset). `retire NAME` drops a tenant mid-workload: queued
+//! same dataset; CFS only). `retire NAME` drops a tenant mid-workload: queued
 //! queries flush first, then the dataset's registry slot and SU cache
 //! are freed (its name may not be referenced afterwards). Blank lines
 //! and `#` comments are ignored.
@@ -53,14 +55,14 @@ use std::collections::HashMap;
 use std::sync::Arc;
 
 use crate::cfs::best_first::{CfsConfig, WarmStart};
-use crate::cfs::SequentialCfs;
+use crate::cfs::{SequentialCfs, SequentialMrmr, SequentialRelieff};
 use crate::core::{Error, Result};
 use crate::data::synth::{by_name, SynthConfig, FAMILIES};
 use crate::harness::report::fmt_secs;
 use crate::runtime::SuEngine;
 use crate::serve::{
-    CacheBudget, DatasetCacheReport, DicfsService, QueryReport, QuerySpec, RegisterOptions,
-    ServeScheme, ServiceConfig, SuJobReport, TenantStats,
+    AlgoSpec, CacheBudget, DatasetCacheReport, DicfsService, QueryReport, QuerySpec,
+    RegisterOptions, ServeScheme, ServiceConfig, SuJobReport, TenantStats,
 };
 use crate::sparklet::ClusterConfig;
 use crate::util::chart::table;
@@ -137,7 +139,10 @@ pub struct DatasetDecl {
 pub struct QueryDecl {
     /// Name of the dataset the query targets.
     pub dataset: String,
-    /// Search configuration.
+    /// Which selector runs (`algo=`, default `cfs`).
+    pub algo: AlgoSpec,
+    /// Search configuration (best-first CFS knobs; ignored by mRMR and
+    /// ReliefF, which run with their default configurations).
     pub cfs: CfsConfig,
     /// How many identical queries this line contributes (0 disables the
     /// line).
@@ -313,6 +318,7 @@ pub fn parse(text: &str) -> Result<WorkloadScript> {
                 let kv = kv_pairs(
                     &tokens[2..],
                     &[
+                        "algo",
                         "max_fails",
                         "queue_capacity",
                         "locally_predictive",
@@ -322,6 +328,14 @@ pub fn parse(text: &str) -> Result<WorkloadScript> {
                     ],
                     line_no,
                 )?;
+                let algo = match kv.get("algo") {
+                    None => AlgoSpec::Cfs,
+                    Some(s) => AlgoSpec::parse(s).ok_or_else(|| {
+                        Error::InvalidConfig(format!(
+                            "line {line_no}: unknown algo {s:?} (cfs|mrmr|relieff)"
+                        ))
+                    })?,
+                };
                 let mut cfs = CfsConfig::default();
                 if let Some(v) = kv.get("prune") {
                     cfs.prune = crate::cfs::best_first::PruneMode::parse(v).ok_or_else(|| {
@@ -356,6 +370,7 @@ pub fn parse(text: &str) -> Result<WorkloadScript> {
                 };
                 script.ops.push(WorkloadOp::Query(QueryDecl {
                     dataset,
+                    algo,
                     cfs,
                     repeat: parse_num(&kv, "repeat", line_no)?.unwrap_or(1),
                     warm,
@@ -636,6 +651,7 @@ pub fn replay(
                         spec: QuerySpec {
                             dataset: stream.id,
                             cfs: q.cfs,
+                            algo: q.algo,
                         },
                         rows: stream.cursor,
                         warm: q.warm,
@@ -681,8 +697,8 @@ pub fn replay(
     flushed.append(&mut planned);
 
     let equivalence = opts.verify.then(|| {
-        let mut baselines: HashMap<(usize, usize, usize, usize, bool), Vec<usize>> =
-            HashMap::new();
+        type BaselineKey = (usize, usize, &'static str, usize, usize, bool);
+        let mut baselines: HashMap<BaselineKey, Vec<usize>> = HashMap::new();
         let mut ok = true;
         // Baseline each distinct (dataset, rows, config) once; reports
         // are in planned order wave by wave, so the two lists line up.
@@ -693,6 +709,7 @@ pub fn replay(
             let key = (
                 p.spec.dataset,
                 p.rows,
+                p.spec.algo.label(),
                 p.spec.cfs.max_fails,
                 p.spec.cfs.queue_capacity,
                 p.spec.cfs.locally_predictive,
@@ -702,9 +719,18 @@ pub fn replay(
                     .values()
                     .find(|st| st.id == p.spec.dataset)
                     .expect("registered");
-                SequentialCfs::new(p.spec.cfs)
-                    .select_discrete(&stream.full.slice_rows(0..p.rows))
-                    .selected
+                let data = stream.full.slice_rows(0..p.rows);
+                match p.spec.algo {
+                    AlgoSpec::Cfs => {
+                        SequentialCfs::new(p.spec.cfs).select_discrete(&data).selected
+                    }
+                    AlgoSpec::Mrmr(cfg) => {
+                        SequentialMrmr::new(cfg).select_discrete(&data).selected
+                    }
+                    AlgoSpec::Relieff(cfg) => {
+                        SequentialRelieff::new(cfg).select_discrete(&data).selected
+                    }
+                }
             });
             if &r.result.selected != baseline {
                 eprintln!(
@@ -752,6 +778,7 @@ fn print_summary(s: &ReplaySummary) {
             vec![
                 r.query.to_string(),
                 r.dataset_name.clone(),
+                r.algo.to_string(),
                 format!("v{}", r.version),
                 r.result.selected.len().to_string(),
                 r.cache.requested.to_string(),
@@ -765,7 +792,10 @@ fn print_summary(s: &ReplaySummary) {
     println!(
         "{}",
         table(
-            &["query", "dataset", "ver", "selected", "requested", "hits", "computed", "hit rate", "wall s"],
+            &[
+                "query", "dataset", "algo", "ver", "selected", "requested", "hits", "computed",
+                "hit rate", "wall s",
+            ],
             &qrows
         )
     );
@@ -869,6 +899,7 @@ query a repeat=2
 query a max_fails=3 locally_predictive=false
 query b queue_capacity=3
 query c
+query b algo=mrmr
 
 # ingest new instances mid-workload, then requery (cold + warm-restart)
 append a rows=150
@@ -899,15 +930,17 @@ query a warm=true
             "the adaptive planner is the default scheme"
         );
         let qs = queries(&s);
-        assert_eq!(qs.len(), 6);
+        assert_eq!(qs.len(), 7);
         assert_eq!(qs[0].repeat, 2);
+        assert_eq!(qs[0].algo, AlgoSpec::Cfs, "cfs is the default algo");
         assert_eq!(qs[1].cfs.max_fails, 3);
         assert!(!qs[1].cfs.locally_predictive);
         assert_eq!(qs[2].cfs.queue_capacity, 3);
-        assert!(!qs[4].warm && qs[5].warm);
+        assert_eq!(qs[4].algo.label(), "mrmr");
+        assert!(!qs[5].warm && qs[6].warm);
         // The append sits between the query groups, in declaration
         // order, and the stream total accounts for it.
-        assert!(matches!(&s.ops[4], WorkloadOp::Append(a) if a.dataset == "a" && a.rows == 150));
+        assert!(matches!(&s.ops[5], WorkloadOp::Append(a) if a.dataset == "a" && a.rows == 150));
         assert_eq!(s.total_rows(&s.datasets[0]), 650);
         assert_eq!(s.total_rows(&s.datasets[1]), 400);
     }
@@ -930,6 +963,11 @@ append b rows=5
 query a warm=maybe
 ").unwrap_err();
         assert!(err.to_string().contains("warm"), "{err}");
+        let err = parse("dataset a family=higgs
+query a algo=pca
+").unwrap_err();
+        assert!(err.to_string().contains("unknown algo"), "{err}");
+        assert!(err.to_string().contains("line 2"), "{err}");
     }
 
     #[test]
@@ -992,8 +1030,11 @@ query a warm=maybe
             },
             vec![Arc::new(NativeEngine)],
         );
-        assert_eq!(summary.reports.len(), 7); // 2 + 1 + 1 + 1, then 2 post-append
+        assert_eq!(summary.reports.len(), 8); // 2 + 1 + 1 + 1 + 1, then 2 post-append
         assert_eq!(summary.equivalence, Some(true));
+        // The mRMR query ran under its own label, against the same
+        // cached substrate as dataset b's CFS query.
+        assert!(summary.reports.iter().any(|r| r.algo == "mrmr"));
         // Post-append queries run at version 1 of dataset a; the
         // upgrade path reused the pre-append tables (some pair was
         // upgraded rather than recomputed).

@@ -456,6 +456,7 @@ fn prop_incremental_append_bit_identical() {
             let spec = QuerySpec {
                 dataset: id,
                 cfs: CfsConfig::default(),
+                algo: Default::default(),
             };
             let _ = service.query(&spec);
 
@@ -480,7 +481,7 @@ fn prop_incremental_append_bit_identical() {
             // The cached SU matrix is exact at whatever prefix each
             // entry covers (entries lag only when no query touched them
             // after the last append).
-            for ((a, b), rows, su) in service.dataset(id).unwrap().cache().snapshot() {
+            for ((a, b), rows, _m, su) in service.dataset(id).unwrap().cache().snapshot() {
                 let prefix = full.slice_rows(0..rows);
                 let (x, bx) = prefix.column(a);
                 let (y, by) = prefix.column(b);
@@ -728,7 +729,13 @@ fn prop_eviction_bit_identical() {
                     .unwrap();
                 let reports: Vec<_> = cfs_mix
                     .iter()
-                    .map(|&cfs| svc.query(&QuerySpec { dataset: id, cfs }))
+                    .map(|&cfs| {
+                        svc.query(&QuerySpec {
+                            dataset: id,
+                            cfs,
+                            algo: Default::default(),
+                        })
+                    })
                     .collect();
                 (svc, id, reports)
             };
@@ -796,6 +803,147 @@ fn prop_eviction_bit_identical() {
                         "{scheme:?} budget={budget}: tiny budget never evicted"
                     );
                 }
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_multialgo_substrate() {
+    // The measure-keyed substrate (DESIGN.md §17): every selector of the
+    // family is served from ONE contingency-table cache per dataset.
+    // Axes: serve scheme (seq/hp/vp/auto) × engine pool (native /
+    // native+tiled) × synthetic shape. Invariants:
+    // (a) CFS / mRMR / ReliefF selections through the service are
+    //     bit-identical to their sequential reference drivers;
+    // (b) the mRMR query *finished* MI off tables the CFS query already
+    //     cached (cross-measure reuse actually happened);
+    // (c) every cached (measure, value) — SU and MI alike, whichever
+    //     engine built the table — is bit-identical to a direct driver
+    //     computation on the raw columns.
+    use dicfs::cfs::best_first::CfsConfig;
+    use dicfs::cfs::{MrmrConfig, RelieffConfig, SequentialMrmr, SequentialRelieff};
+    use dicfs::correlation::{mutual_information, Measure};
+    use dicfs::discretize::discretize_dataset;
+    use dicfs::runtime::{NativeEngine, SuEngine, TiledEngine};
+    use dicfs::serve::{AlgoSpec, DicfsService, QuerySpec, ServeScheme, ServiceConfig};
+    use dicfs::sparklet::ClusterConfig;
+
+    let mut rng = XorShift64Star::new(0xA160_5EED);
+    let schemes = [
+        ServeScheme::Sequential,
+        ServeScheme::Horizontal,
+        ServeScheme::Vertical,
+        ServeScheme::Auto,
+    ];
+    let pools: [fn() -> Vec<Arc<dyn SuEngine>>; 2] = [
+        || vec![Arc::new(NativeEngine)],
+        || vec![Arc::new(NativeEngine), Arc::new(TiledEngine::new())],
+    ];
+    let families = ["higgs", "kddcup99", "epsilon"];
+
+    for &scheme in &schemes {
+        for (pi, pool) in pools.iter().enumerate() {
+            for family in families {
+                let rows = 200 + rng.next_below(120) as usize;
+                let raw = dicfs::data::synth::by_name(
+                    family,
+                    &dicfs::data::synth::SynthConfig {
+                        rows,
+                        seed: rng.next_u64(),
+                        features: Some(6),
+                    },
+                );
+                let dd = Arc::new(discretize_dataset(&raw).unwrap());
+
+                // Sequential reference drivers on the same discrete data.
+                let cfs_oracle = SequentialCfs::default().select_discrete(&dd);
+                let mrmr_oracle = SequentialMrmr::new(MrmrConfig::default()).select_discrete(&dd);
+                let relieff_oracle =
+                    SequentialRelieff::new(RelieffConfig::default()).select_discrete(&dd);
+
+                let svc = DicfsService::with_engine_pool(
+                    ServiceConfig {
+                        cluster: ClusterConfig::with_nodes(3),
+                        max_inflight_jobs: 2,
+                        ..ServiceConfig::default()
+                    },
+                    pool(),
+                );
+                let id = svc.register_discrete(family, Arc::clone(&dd), scheme, None);
+
+                // CFS warms the table cache under SU…
+                let cfs = svc.query(&QuerySpec {
+                    dataset: id,
+                    cfs: CfsConfig::default(),
+                    algo: AlgoSpec::Cfs,
+                });
+                assert_eq!(
+                    cfs.result.selected, cfs_oracle.selected,
+                    "{family} {scheme:?} pool{pi}: CFS diverged from the sequential driver"
+                );
+
+                // …then mRMR finishes MI off the very same tables.
+                let mrmr = svc.query(&QuerySpec {
+                    dataset: id,
+                    cfs: CfsConfig::default(),
+                    algo: AlgoSpec::Mrmr(MrmrConfig::default()),
+                });
+                assert_eq!(
+                    mrmr.result.selected, mrmr_oracle.selected,
+                    "{family} {scheme:?} pool{pi}: mRMR diverged from the sequential driver"
+                );
+                assert_eq!(
+                    mrmr.result.merit.to_bits(),
+                    mrmr_oracle.merit.to_bits(),
+                    "{family} {scheme:?} pool{pi}: mRMR merit not bit-identical"
+                );
+
+                let relieff = svc.query(&QuerySpec {
+                    dataset: id,
+                    cfs: CfsConfig::default(),
+                    algo: AlgoSpec::Relieff(RelieffConfig::default()),
+                });
+                assert_eq!(
+                    relieff.result.selected, relieff_oracle.selected,
+                    "{family} {scheme:?} pool{pi}: ReliefF diverged across decompositions"
+                );
+
+                let report = svc.cache_report(id).unwrap();
+                assert!(
+                    report.cross_measure_finishes > 0,
+                    "{family} {scheme:?} pool{pi}: mRMR never reused a CFS table"
+                );
+
+                let (mut saw_su, mut saw_mi) = (false, false);
+                for ((a, b), nrows, m, v) in svc.dataset(id).unwrap().cache().snapshot() {
+                    assert_eq!(nrows, dd.num_rows());
+                    let (x, bx) = dd.column(a);
+                    let (y, by) = dd.column(b);
+                    let direct = match m {
+                        Measure::Su => {
+                            saw_su = true;
+                            symmetrical_uncertainty(x, bx, y, by)
+                        }
+                        Measure::Mi => {
+                            saw_mi = true;
+                            mutual_information(x, bx, y, by)
+                        }
+                        Measure::Pearson => {
+                            unreachable!("no Pearson entries in a discrete cache")
+                        }
+                    };
+                    assert_eq!(
+                        v.to_bits(),
+                        direct.to_bits(),
+                        "{family} {scheme:?} pool{pi}: cached {m:?} for {:?} drifted",
+                        (a, b)
+                    );
+                }
+                assert!(
+                    saw_su && saw_mi,
+                    "{family} {scheme:?} pool{pi}: cache missing a measure"
+                );
             }
         }
     }

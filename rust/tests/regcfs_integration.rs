@@ -1,0 +1,135 @@
+//! Regression-CFS integration: Pearson selections pinned across
+//! schemes, and RegCFS's membership in the [`FsAlgorithm`] family
+//! (DESIGN.md §17).
+//!
+//! The "pin" is the sequential RegWEKA driver: on a fixed continuous
+//! synthetic family every distributed configuration (node counts,
+//! partition counts) must select exactly its feature set — the same
+//! equivalence contract the discrete selectors carry.
+
+use std::sync::Arc;
+
+use dicfs::cfs::FsAlgorithm;
+use dicfs::core::Error;
+use dicfs::correlation::Measure;
+use dicfs::data::synth::{epsilon_like, higgs_like, kddcup99_like, SynthConfig};
+use dicfs::regcfs::{RegCfs, RegDataset, RegWeka};
+
+fn fixed_family(rows: usize, seed: u64, features: usize) -> Arc<RegDataset> {
+    let ds = higgs_like(&SynthConfig {
+        rows,
+        seed,
+        features: Some(features),
+    });
+    Arc::new(RegDataset::from_dataset(&ds).expect("higgs_like is all-numeric"))
+}
+
+#[test]
+fn pearson_selections_pinned_across_schemes_and_partitions() {
+    let data = fixed_family(1_200, 42, 16);
+    let pin = RegWeka::default().select(&data);
+    assert!(!pin.selected.is_empty(), "pin selected nothing");
+    assert!(pin.merit > 0.0);
+
+    for nodes in [2, 6] {
+        for partitions in [None, Some(1), Some(13)] {
+            let mut dist = RegCfs::with_nodes(nodes);
+            dist.num_partitions = partitions;
+            let run = dist.select(&data);
+            assert_eq!(
+                run.result.selected, pin.selected,
+                "nodes={nodes} partitions={partitions:?}: selections diverged from RegWEKA"
+            );
+            assert!(
+                (run.result.merit - pin.merit).abs() < 1e-9,
+                "nodes={nodes} partitions={partitions:?}: merit drifted"
+            );
+        }
+    }
+}
+
+#[test]
+fn pearson_selections_pinned_on_wide_family() {
+    // Second shape: epsilon-like (wider, fewer rows) — the same pin
+    // must hold where the pair matrix dominates.
+    let ds = epsilon_like(&SynthConfig {
+        rows: 500,
+        seed: 9,
+        features: Some(24),
+    });
+    let data = Arc::new(RegDataset::from_dataset(&ds).unwrap());
+    let pin = RegWeka::default().select(&data);
+    let run = RegCfs::with_nodes(4).select(&data);
+    assert_eq!(run.result.selected, pin.selected);
+    assert!((run.result.merit - pin.merit).abs() < 1e-9);
+}
+
+#[test]
+fn sequential_driver_is_deterministic() {
+    let data = fixed_family(800, 7, 12);
+    let a = RegWeka::default().select(&data);
+    let b = RegWeka::default().select(&data);
+    assert_eq!(a.selected, b.selected);
+    assert_eq!(a.merit.to_bits(), b.merit.to_bits());
+}
+
+#[test]
+fn regcfs_conforms_to_the_fs_algorithm_trait() {
+    let alg = RegWeka::default();
+    assert_eq!(alg.name(), "regcfs");
+    assert_eq!(alg.measure(), Measure::Pearson);
+
+    // The trait entry point (raw Dataset) selects exactly what the
+    // inherent RegDataset path selects.
+    let raw = higgs_like(&SynthConfig {
+        rows: 900,
+        seed: 11,
+        features: Some(10),
+    });
+    let via_trait = FsAlgorithm::select(&alg, &raw).unwrap();
+    let data = RegDataset::from_dataset(&raw).unwrap();
+    let direct = RegWeka::select(&alg, &data);
+    assert_eq!(via_trait.selected, direct.selected);
+    assert_eq!(via_trait.merit.to_bits(), direct.merit.to_bits());
+
+    // Categorical input is a typed error through the trait, not a panic.
+    let categorical = kddcup99_like(&SynthConfig {
+        rows: 120,
+        seed: 2,
+        features: Some(8),
+    });
+    match FsAlgorithm::select(&alg, &categorical) {
+        Err(Error::InvalidData(msg)) => assert!(msg.contains("categorical"), "{msg}"),
+        other => panic!("expected InvalidData, got {other:?}"),
+    }
+}
+
+#[test]
+fn family_names_and_measures_are_distinct() {
+    // The whole family behind one dispatch site: distinct spellings,
+    // the right measure per algorithm, and every member selects on a
+    // numeric dataset through the same trait call.
+    use dicfs::cfs::{SequentialCfs, SequentialMrmr, SequentialRelieff};
+    let algos: Vec<Box<dyn FsAlgorithm>> = vec![
+        Box::new(SequentialCfs::default()),
+        Box::new(SequentialMrmr::default()),
+        Box::new(SequentialRelieff::default()),
+        Box::new(RegWeka::default()),
+    ];
+    let names: Vec<&str> = algos.iter().map(|a| a.name()).collect();
+    assert_eq!(names, ["cfs", "mrmr", "relieff", "regcfs"]);
+    assert_eq!(algos[0].measure(), Measure::Su);
+    assert_eq!(algos[1].measure(), Measure::Mi);
+    assert_eq!(algos[2].measure(), Measure::Su);
+    assert_eq!(algos[3].measure(), Measure::Pearson);
+
+    let raw = higgs_like(&SynthConfig {
+        rows: 400,
+        seed: 5,
+        features: Some(8),
+    });
+    for a in &algos {
+        let r = a.select(&raw).unwrap_or_else(|e| panic!("{} failed: {e}", a.name()));
+        assert!(!r.selected.is_empty(), "{} selected nothing", a.name());
+    }
+}

@@ -10,7 +10,7 @@ use dicfs::cfs::SequentialCfs;
 use dicfs::data::columnar::DiscreteDataset;
 use dicfs::data::synth::{by_name, SynthConfig};
 use dicfs::discretize::discretize_dataset;
-use dicfs::serve::{DicfsService, QuerySpec, ServeScheme, ServiceConfig};
+use dicfs::serve::{AlgoSpec, DicfsService, QuerySpec, ServeScheme, ServiceConfig};
 use dicfs::sparklet::ClusterConfig;
 
 fn discrete(family: &str, rows: usize, features: usize, seed: u64) -> Arc<DiscreteDataset> {
@@ -51,7 +51,11 @@ fn concurrent_queries_match_isolated_runs() {
         ];
         let specs: Vec<QuerySpec> = configs
             .iter()
-            .map(|&cfs| QuerySpec { dataset: id, cfs })
+            .map(|&cfs| QuerySpec {
+                dataset: id,
+                cfs,
+                algo: AlgoSpec::Cfs,
+            })
             .collect();
         let reports = svc.run_concurrent(&specs);
 
@@ -94,6 +98,7 @@ fn second_query_sees_cross_query_hits() {
     let spec = QuerySpec {
         dataset: id,
         cfs: CfsConfig::default(),
+        algo: AlgoSpec::Cfs,
     };
     let first = svc.query(&spec);
     assert!(first.cache.computed > 0);
@@ -125,6 +130,7 @@ fn different_config_still_shares() {
     let _ = svc.query(&QuerySpec {
         dataset: id,
         cfs: CfsConfig::default(),
+        algo: AlgoSpec::Cfs,
     });
     let other = svc.query(&QuerySpec {
         dataset: id,
@@ -132,12 +138,15 @@ fn different_config_still_shares() {
             max_fails: 3,
             queue_capacity: 3,
             locally_predictive: false,
+            ..CfsConfig::default()
         },
+        algo: AlgoSpec::Cfs,
     });
     let iso = SequentialCfs::new(CfsConfig {
         max_fails: 3,
         queue_capacity: 3,
         locally_predictive: false,
+        ..CfsConfig::default()
     })
     .select_discrete(&dd);
     assert_eq!(other.result.selected, iso.selected);
@@ -158,6 +167,7 @@ fn append_between_concurrent_bursts_is_exact_and_upgrades() {
         let spec = QuerySpec {
             dataset: id,
             cfs: CfsConfig::default(),
+            algo: AlgoSpec::Cfs,
         };
 
         let burst1 = svc.run_concurrent(&vec![spec; 3]);
@@ -211,10 +221,12 @@ fn multi_tenant_replay_is_exact_and_accounted() {
         specs.push(QuerySpec {
             dataset: a,
             cfs: CfsConfig::default(),
+            algo: AlgoSpec::Cfs,
         });
         specs.push(QuerySpec {
             dataset: b,
             cfs: CfsConfig::default(),
+            algo: AlgoSpec::Cfs,
         });
     }
     let reports = svc.run_concurrent(&specs);
@@ -243,5 +255,93 @@ fn multi_tenant_replay_is_exact_and_accounted() {
     assert_eq!(
         job_pairs,
         iso_a.correlations_computed + iso_b.correlations_computed
+    );
+}
+
+/// Mixed-algorithm tenancy (DESIGN.md §17): CFS and mRMR interleave on
+/// the same registered datasets under the DRR scheduler. Selections stay
+/// exact per algorithm, MI terms are *finished* off contingency tables
+/// SU jobs already computed (cross-measure reuse > 0), and per-measure
+/// job-log accounting sums to the service totals.
+#[test]
+fn mixed_algorithms_share_the_substrate_under_drr() {
+    use dicfs::cfs::{MrmrConfig, SequentialMrmr};
+
+    let svc = service(3, 2);
+    let dd_a = discrete("higgs", 700, 9, 21);
+    let dd_b = discrete("kddcup99", 600, 8, 22);
+    let a = svc.register_discrete("a", Arc::clone(&dd_a), ServeScheme::Horizontal, None);
+    let b = svc.register_discrete("b", Arc::clone(&dd_b), ServeScheme::Auto, None);
+
+    let mut specs = Vec::new();
+    for _ in 0..2 {
+        for &id in &[a, b] {
+            specs.push(QuerySpec {
+                dataset: id,
+                cfs: CfsConfig::default(),
+                algo: AlgoSpec::Cfs,
+            });
+            specs.push(QuerySpec {
+                dataset: id,
+                cfs: CfsConfig::default(),
+                algo: AlgoSpec::Mrmr(MrmrConfig::default()),
+            });
+        }
+    }
+    let reports = svc.run_concurrent(&specs);
+
+    let cfs_a = SequentialCfs::default().select_discrete(&dd_a);
+    let cfs_b = SequentialCfs::default().select_discrete(&dd_b);
+    let mrmr_a = SequentialMrmr::default().select_discrete(&dd_a);
+    let mrmr_b = SequentialMrmr::default().select_discrete(&dd_b);
+    for r in &reports {
+        let want = match (r.dataset == a, r.algo) {
+            (true, "cfs") => &cfs_a,
+            (false, "cfs") => &cfs_b,
+            (true, "mrmr") => &mrmr_a,
+            (false, "mrmr") => &mrmr_b,
+            other => panic!("unexpected report key {other:?}"),
+        };
+        assert_eq!(
+            r.result.selected, want.selected,
+            "query {} ({}) diverged under mixed-algorithm sharing",
+            r.query, r.algo
+        );
+    }
+
+    // Cross-algorithm reuse actually happened on both tenants: some
+    // pair's second measure was finished from the cached table instead
+    // of recomputed from the columns.
+    let mut finishes = 0usize;
+    for id in [a, b] {
+        let rep = svc.cache_report(id).unwrap();
+        assert!(
+            rep.cross_measure_finishes > 0,
+            "tenant {id}: no cross-measure reuse"
+        );
+        finishes += rep.cross_measure_finishes;
+    }
+
+    // Per-measure job accounting: every job is labeled su or mi, the
+    // per-measure computed sums partition the total, and the jobs'
+    // driver-side finish counter covers the cache-level reuse count.
+    let jobs = svc.job_log();
+    assert!(jobs.iter().all(|j| j.measure == "su" || j.measure == "mi"));
+    let total: usize = jobs.iter().map(|j| j.computed_pairs).sum();
+    let per_measure: usize = ["su", "mi"]
+        .iter()
+        .map(|m| {
+            jobs.iter()
+                .filter(|j| &j.measure == m)
+                .map(|j| j.computed_pairs)
+                .sum::<usize>()
+        })
+        .sum();
+    assert_eq!(per_measure, total, "per-measure sums do not partition the job log");
+    let finished_total: usize = jobs.iter().map(|j| j.finished_pairs).sum();
+    assert!(finished_total > 0, "no scheduled job finished a cached table");
+    assert!(
+        finished_total >= finishes,
+        "job-level finishes {finished_total} < cache-level {finishes}"
     );
 }

@@ -26,8 +26,8 @@ use dicfs::data::columnar::DiscreteDataset;
 use dicfs::data::synth::{by_name, SynthConfig};
 use dicfs::discretize::discretize_dataset;
 use dicfs::serve::{
-    worst_case_cache_bytes, CacheBudget, DicfsService, QuerySpec, RegisterOptions, ServeScheme,
-    ServiceConfig,
+    worst_case_cache_bytes, AlgoSpec, CacheBudget, DicfsService, QuerySpec, RegisterOptions,
+    ServeScheme, ServiceConfig,
 };
 use dicfs::sparklet::ClusterConfig;
 
@@ -60,6 +60,7 @@ fn config_mix() -> Vec<CfsConfig> {
             max_fails: 2,
             queue_capacity: 3,
             locally_predictive: false,
+            ..CfsConfig::default()
         },
     ]
 }
@@ -186,7 +187,12 @@ fn hot_tenant_flood_stays_exact_fair_and_bounded() {
                     let mut reports = Vec::new();
                     for _ in 0..rounds {
                         for (ci, &cfs) in configs.iter().enumerate() {
-                            reports.push((ci, svc.query(&QuerySpec { dataset: id, cfs })));
+                            let spec = QuerySpec {
+                                dataset: id,
+                                cfs,
+                                algo: AlgoSpec::Cfs,
+                            };
+                            reports.push((ci, svc.query(&spec)));
                         }
                     }
                     reports
@@ -350,6 +356,7 @@ fn ceiling_rejects_then_retire_admits_under_flood() {
                     svc.query(&QuerySpec {
                         dataset: a,
                         cfs: CfsConfig::default(),
+                        algo: AlgoSpec::Cfs,
                     })
                 })
                 .collect::<Vec<_>>()
@@ -359,6 +366,7 @@ fn ceiling_rejects_then_retire_admits_under_flood() {
         let rb = svc.query(&QuerySpec {
             dataset: b,
             cfs: CfsConfig::default(),
+            algo: AlgoSpec::Cfs,
         });
         assert_eq!(rb.result.selected, iso_b.selected);
 
@@ -379,6 +387,7 @@ fn ceiling_rejects_then_retire_admits_under_flood() {
         let rc = svc.query(&QuerySpec {
             dataset: c,
             cfs: CfsConfig::default(),
+            algo: AlgoSpec::Cfs,
         });
         let iso_c = SequentialCfs::default().select_discrete(&dd_c);
         assert_eq!(rc.result.selected, iso_c.selected);
